@@ -1,0 +1,150 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! Exercises every layer in one run —
+//!   1. workload generation (power-law bipartite graph),
+//!   2. runtime ranking selection (f metric),
+//!   3. exact counting (total / per-vertex / per-edge) on the parallel
+//!      CPU framework,
+//!   4. the PJRT dense-core path (Layer-1 Pallas kernel, AOT-lowered by
+//!      Layer 2, loaded by the Rust runtime) — cross-checked against
+//!      the CPU numbers,
+//!   5. approximate counting via sparsification,
+//!   6. tip + wing decomposition,
+//!   7. sequential baselines for the headline speedup metric.
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+
+use std::time::Instant;
+
+use parbutterfly::baseline::{seq_count, seq_peel};
+use parbutterfly::coordinator::{count_report, CountConfig, CountMode};
+use parbutterfly::count::{dense, sparsify, CountOpts};
+use parbutterfly::graph::gen;
+use parbutterfly::peel::{peel_edges, peel_vertices, PeelEOpts, PeelVOpts};
+use parbutterfly::rank::{choose_ranking, Ranking};
+use parbutterfly::runtime::Engine;
+
+fn main() {
+    println!("== ParButterfly end-to-end pipeline ==\n");
+
+    // 1. Workload: discogs-like power-law bipartite graph.
+    let t0 = Instant::now();
+    let g = gen::chung_lu(8_000, 12_000, 200_000, 2.1, 2026);
+    println!(
+        "[1] workload: Chung-Lu beta=2.1, {} x {} vertices, {} edges ({:.0} ms)",
+        g.nu(),
+        g.nv(),
+        g.m(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // 2. Ranking selection.
+    let ranking = choose_ranking(&g);
+    let f = parbutterfly::rank::f_metric(&g, Ranking::ApproxDegree);
+    println!("[2] ranking: f(adegree) = {f:.3} -> {}", ranking.name());
+
+    // 3. Exact counting, all three statistics.
+    let cfg = CountConfig {
+        opts: CountOpts { ranking, ..Default::default() },
+        auto_rank: false,
+    };
+    let r = count_report(&g, CountMode::Full, &cfg);
+    let vc = r.per_vertex.as_ref().unwrap();
+    let be = r.per_edge.as_ref().unwrap();
+    println!(
+        "[3] exact counts: {} butterflies ({} wedges, {:.0} ms)",
+        r.total, r.wedges, r.millis
+    );
+    assert_eq!(vc.bu.iter().sum::<u64>(), 2 * r.total);
+    assert_eq!(be.iter().sum::<u64>(), 4 * r.total);
+
+    // 4. Dense-core path through the PJRT artifacts.
+    match Engine::load_default() {
+        Ok(engine) => {
+            let t = Instant::now();
+            let hybrid =
+                dense::count_total_hybrid(&g, &engine, 256, 256, &cfg.opts).unwrap();
+            println!(
+                "[4] dense-core hybrid (256x256 top-degree core on the MXU-shaped \
+                 artifact): {} butterflies ({:.0} ms)",
+                hybrid,
+                t.elapsed().as_secs_f64() * 1e3
+            );
+            assert_eq!(hybrid, r.total, "dense path must agree exactly");
+
+            // Pure dense on the densified core itself.
+            let spec = engine.pick("count_total", 512, 512).unwrap();
+            println!(
+                "    artifacts loaded: {} entries (largest {}x{})",
+                engine.specs().len(),
+                spec.u,
+                spec.v
+            );
+        }
+        Err(e) => println!("[4] dense-core SKIPPED (run `make artifacts`): {e}"),
+    }
+
+    // 5. Approximate counting.
+    for p in [0.25, 0.5] {
+        let t = Instant::now();
+        let est = sparsify::approx_total_edge(&g, p, 7, &cfg.opts);
+        println!(
+            "[5] edge sparsification p={p}: estimate {est:.0} (err {:+.2}%, {:.0} ms)",
+            100.0 * (est - r.total as f64) / r.total as f64,
+            t.elapsed().as_secs_f64() * 1e3
+        );
+    }
+
+    // 6. Decompositions.
+    let t = Instant::now();
+    let tips = peel_vertices(&g, &vc.bu, &vc.bv, &PeelVOpts::default());
+    println!(
+        "[6] tip decomposition ({} side): {} rounds, max tip {} ({:.0} ms)",
+        if tips.peeled_u { "U" } else { "V" },
+        tips.rounds,
+        tips.tips.iter().max().unwrap(),
+        t.elapsed().as_secs_f64() * 1e3
+    );
+    let t = Instant::now();
+    let wings = peel_edges(&g, be, &PeelEOpts::default());
+    println!(
+        "    wing decomposition: {} rounds, max wing {} ({:.0} ms)",
+        wings.rounds,
+        wings.wings.iter().max().unwrap(),
+        t.elapsed().as_secs_f64() * 1e3
+    );
+
+    // 7. Headline metric vs sequential baselines.
+    let t = Instant::now();
+    let sm = seq_count::sanei_mehri_total(&g);
+    let sm_ms = t.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(sm, r.total);
+    let t = Instant::now();
+    let (bu_w, wt) = seq_count::wang_vanilla(&g);
+    let wang_ms = t.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(wt, r.total);
+    assert_eq!(&bu_w, &vc.bu);
+    println!(
+        "[7] baselines: Sanei-Mehri {sm_ms:.0} ms, Wang-2014 {wang_ms:.0} ms vs \
+         framework {:.0} ms -> {:.1}x / {:.1}x",
+        r.millis,
+        sm_ms / r.millis,
+        wang_ms / r.millis
+    );
+    // Sequential peeling baseline (tips side must match Auto's pick).
+    let peel_u = g.wedges_centered_v() <= g.wedges_centered_u();
+    if peel_u {
+        let t = Instant::now();
+        let (sp_tips, empties) = seq_peel::sp_tip_numbers_u(&g, &vc.bu);
+        let sp_ms = t.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(sp_tips, tips.tips);
+        println!(
+            "    Sariyuce-Pinar peeling: {sp_ms:.0} ms ({empties} empty buckets scanned)"
+        );
+    }
+    println!("\nE2E OK — all layers agree.");
+}

@@ -1,0 +1,88 @@
+"""AOT pipeline: lower the Layer-2 model to HLO text artifacts.
+
+``python -m compile.aot --out-dir ../artifacts`` lowers each entry point
+in ``model.py`` for a fixed menu of padded shapes and writes:
+
+* ``artifacts/<name>_<U>x<V>.hlo.txt``  — HLO **text** modules.
+* ``artifacts/manifest.txt``            — one line per artifact:
+  ``<entry> <U> <V> <n_outputs> <filename>`` parsed by the Rust runtime.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax>=0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  Lowering goes stablehlo -> XlaComputation with
+``return_tuple=True``; the Rust side unwraps with ``to_tuple()``.
+
+This module runs exactly once, at build time (``make artifacts``);
+nothing here is on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# (entry point, shapes) menu.  Tiles are 128 (MXU-aligned); shapes are
+# capped at 512 to keep per-tile f32 partials exact (see kernels docs).
+SHAPES = [(128, 128), (256, 256), (256, 512), (512, 512)]
+ENTRIES = {
+    "count_dense": (model.count_dense, 4),
+    "count_total": (model.count_total, 1),
+    "wedge_stats": (model.wedge_stats, 2),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, u: int, v: int) -> str:
+    spec = jax.ShapeDtypeStruct((u, v), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--entries",
+        default=",".join(ENTRIES),
+        help="comma-separated subset of entry points to lower",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name in args.entries.split(","):
+        fn, n_out = ENTRIES[name]
+        for (u, v) in SHAPES:
+            text = lower_entry(fn, u, v)
+            fname = f"{name}_{u}x{v}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest_lines.append(f"{name} {u} {v} {n_out} {fname}")
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(manifest_lines)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Layer-1 Pallas kernels for dense-tile butterfly counting.
+
+The paper's hot loop — aggregating wedges between pairs of same-side
+vertices — is, restricted to a dense vertex block with 0/1 adjacency
+matrix ``A`` (U x V), exactly the rank-V update ``W = A @ A^T``:
+``W[u, u']`` is the number of wedges with endpoints ``(u, u')``.  The
+butterfly statistics follow from W by purely local arithmetic:
+
+* per-vertex (endpoint side):  ``b_u = sum_{u' != u} C(W[u,u'], 2)``
+* total:                       ``sum_u b_u / 2``  (each butterfly has two
+  endpoints on each side)
+* per-edge: ``b_e[u,v] = A[u,v] * ((W0 @ A)[u,v] - (deg(v) - 1))`` where
+  ``W0`` is W with its diagonal zeroed (Lemma 4.2, Eq. (2)).
+
+These kernels tile the computation for the MXU: ``TU x V`` row-blocks of
+A stream through VMEM, the ``TU x TU`` wedge tile is produced by a
+systolic matmul and consumed in-register by the binomial epilogue, so W
+is never materialized in HBM.  This is the TPU re-thinking of the
+paper's cache-resident "simple batching" aggregation (see
+DESIGN.md §Hardware-Adaptation).
+
+Numerics: counts are integers carried in f32.  A single wedge tile
+contributes a per-row partial of at most ``TU * C(V, 2)``; with
+``TU = 128`` and ``V <= 512`` this stays within f32's exact-integer
+window (2^24), so per-(i, j)-tile partials are exact and the Layer-2
+model performs the cross-tile reduction in f64.  Artifacts are therefore
+capped at 512x512 tiles; the Rust coordinator decomposes larger dense
+cores into tiles and sums in u64/f64.
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers to plain HLO that
+the Rust runtime can run (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile height.  128 matches the MXU systolic array
+# dimension; tests shrink it to exercise multi-tile paths on small inputs.
+DEFAULT_TILE = 128
+
+
+def _bfly_rowsum_kernel(ai_ref, aj_ref, out_ref, *, tile: int):
+    """One (i, j) wedge tile: rows ``i`` x rows ``j`` of A.
+
+    Writes the per-row partial butterfly sums ``sum_{u' in tile j}
+    C(W[u, u'], 2)`` (global diagonal masked) for the ``tile`` rows of
+    tile ``i`` into the (1, tile) output block at grid position (j, i).
+    Each grid step owns a distinct output block, so partials stay exact
+    in f32 and the cross-tile reduction happens in f64 in Layer 2.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    # MXU op: (tile, V) x (V, tile) -> (tile, tile) wedge-count tile.
+    w = jnp.dot(ai_ref[...], aj_ref[...].T, preferred_element_type=jnp.float32)
+    # Mask the global diagonal (wedges need two *distinct* endpoints):
+    # W[u, u] = deg(u) counts degenerate self-wedges.
+    row = jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 0) + i * tile
+    col = jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 1) + j * tile
+    w = jnp.where(row == col, 0.0, w)
+    # Binomial epilogue, fused so W never leaves VMEM: C(w, 2).
+    b = w * (w - 1.0) * 0.5
+    out_ref[...] = jnp.sum(b, axis=1).reshape(1, tile)
+
+
+def bfly_rowsum_tiles(a: jax.Array, tile: int = DEFAULT_TILE) -> jax.Array:
+    """Per-(row-tile) butterfly partial sums for the row side of ``a``.
+
+    Args:
+      a: (U, V) 0/1 adjacency block, f32, with U and V multiples of
+        ``tile`` (Layer 2 pads).
+    Returns:
+      (U // tile, U) f32 array P where ``P[j, u]`` is u's butterfly
+      contribution from wedges whose second endpoint lies in row-tile j.
+      ``b_u = sum_j P[j, u]`` (reduce in f64 — see module docstring).
+    """
+    u, _ = a.shape
+    if u % tile != 0:
+        raise ValueError(f"U={u} not a multiple of tile={tile}")
+    nt = u // tile
+    kernel = functools.partial(_bfly_rowsum_kernel, tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(nt, nt),
+        in_specs=[
+            pl.BlockSpec((tile, a.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, a.shape[1]), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((nt, u), jnp.float32),
+        interpret=True,
+    )(a, a)
+
+
+def _bfly_edge_kernel(ai_ref, aj_ref, degv_ref, out_ref, *, tile: int):
+    """Accumulate the per-edge butterfly tile for row-tile ``i``.
+
+    Grid is (I, J) with J the reduction dimension: each step adds tile
+    j's contribution ``W0[i, j] @ A[j]`` to the (tile, V) output block
+    for row-tile i.  On the last j step the epilogue applies
+    ``A * (acc - (deg(v) - 1))`` (Eq. (2) of the paper).
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+    ai = ai_ref[...]
+    aj = aj_ref[...]
+    w = jnp.dot(ai, aj.T, preferred_element_type=jnp.float32)
+    row = jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 0) + i * tile
+    col = jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 1) + j * tile
+    w = jnp.where(row == col, 0.0, w)
+    # Contribution of row-tile j to (W0 @ A)[rows of tile i].
+    part = jnp.dot(w, aj, preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] += part
+
+    @pl.when(j == nj - 1)
+    def _epilogue():
+        acc = out_ref[...]
+        degv = degv_ref[...]  # (1, V) column degrees of the full block
+        out_ref[...] = ai * (acc - (degv - 1.0))
+
+
+def bfly_edge_counts(a: jax.Array, tile: int = DEFAULT_TILE) -> jax.Array:
+    """Per-edge butterfly counts for a dense 0/1 block.
+
+    Returns a (U, V) f32 array E with ``E[u, v]`` = number of butterflies
+    containing edge (u, v) (0 where there is no edge).  Max accumulator
+    value is ``U * V <= 512^2 < 2^24``, so in-kernel f32 accumulation is
+    exact for supported tile sizes.
+    """
+    u, v = a.shape
+    if u % tile != 0:
+        raise ValueError(f"U={u} not a multiple of tile={tile}")
+    nt = u // tile
+    degv = jnp.sum(a, axis=0, dtype=jnp.float32).reshape(1, v)
+    kernel = functools.partial(_bfly_edge_kernel, tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(nt, nt),
+        in_specs=[
+            pl.BlockSpec((tile, v), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, v), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, v), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, v), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((u, v), jnp.float32),
+        interpret=True,
+    )(a, a, degv)
+
+
+def _wedge_tile_kernel(ai_ref, aj_ref, out_ref, *, tile: int):
+    """Raw wedge-count tile W[i-tile, j-tile] (diagonal kept).
+
+    Exposed for the wedge-statistics artifact used by the Rust
+    coordinator's ordering auto-tuner (the f-metric needs wedge counts,
+    not butterfly counts).
+    """
+    w = jnp.dot(ai_ref[...], aj_ref[...].T, preferred_element_type=jnp.float32)
+    out_ref[...] = w
+
+
+def wedge_matrix(a: jax.Array, tile: int = DEFAULT_TILE) -> jax.Array:
+    """Full wedge-count matrix ``W = A @ A^T`` via the tiled kernel."""
+    u, v = a.shape
+    if u % tile != 0:
+        raise ValueError(f"U={u} not a multiple of tile={tile}")
+    nt = u // tile
+    kernel = functools.partial(_wedge_tile_kernel, tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(nt, nt),
+        in_specs=[
+            pl.BlockSpec((tile, v), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, v), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((u, u), jnp.float32),
+        interpret=True,
+    )(a, a)

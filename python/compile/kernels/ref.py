@@ -1,0 +1,93 @@
+"""Pure-jnp / numpy oracles for the dense butterfly kernels.
+
+Two tiers:
+
+* ``*_ref``  — straightforward jnp linear-algebra formulations of
+  Lemma 4.2.  Same math as the Pallas kernels but with none of the
+  tiling; the kernels must match these bit-exactly (integer counts).
+* ``brute_force_*`` — O(U^2 V^2) explicit enumeration in numpy for tiny
+  inputs; anchors the linear-algebra formulation itself.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def per_vertex_ref(a):
+    """(b_u, b_v): per-vertex butterfly counts for both sides, f64."""
+    a = jnp.asarray(a, jnp.float64)
+    w_u = a @ a.T
+    w_u = w_u - jnp.diag(jnp.diag(w_u))
+    b_u = jnp.sum(w_u * (w_u - 1.0) / 2.0, axis=1)
+    w_v = a.T @ a
+    w_v = w_v - jnp.diag(jnp.diag(w_v))
+    b_v = jnp.sum(w_v * (w_v - 1.0) / 2.0, axis=1)
+    return b_u, b_v
+
+
+def total_ref(a):
+    """Global butterfly count, f64 scalar."""
+    b_u, _ = per_vertex_ref(a)
+    return jnp.sum(b_u) / 2.0
+
+
+def per_edge_ref(a):
+    """(U, V) per-edge butterfly counts, f64.
+
+    b_e[u,v] = A[u,v] * ((W0 @ A)[u,v] - (deg(v) - 1))  (Lemma 4.2 Eq. 2).
+    """
+    a = jnp.asarray(a, jnp.float64)
+    w0 = a @ a.T
+    w0 = w0 - jnp.diag(jnp.diag(w0))
+    degv = jnp.sum(a, axis=0)
+    return a * (w0 @ a - (degv[None, :] - 1.0))
+
+
+def wedge_matrix_ref(a):
+    """W = A @ A^T (diagonal kept), f64."""
+    a = jnp.asarray(a, jnp.float64)
+    return a @ a.T
+
+
+def brute_force_total(a) -> int:
+    """Count butterflies by enumerating endpoint pairs explicitly."""
+    a = np.asarray(a)
+    u_n, _ = a.shape
+    count = 0
+    for u1, u2 in itertools.combinations(range(u_n), 2):
+        common = int(np.sum(a[u1] * a[u2]))
+        count += common * (common - 1) // 2
+    return count
+
+
+def brute_force_per_vertex(a):
+    """(b_u, b_v) by explicit O(U^2 V^2) enumeration."""
+    a = np.asarray(a)
+    u_n, v_n = a.shape
+    b_u = np.zeros(u_n, dtype=np.int64)
+    b_v = np.zeros(v_n, dtype=np.int64)
+    for u1, u2 in itertools.combinations(range(u_n), 2):
+        for v1, v2 in itertools.combinations(range(v_n), 2):
+            if a[u1, v1] and a[u1, v2] and a[u2, v1] and a[u2, v2]:
+                b_u[u1] += 1
+                b_u[u2] += 1
+                b_v[v1] += 1
+                b_v[v2] += 1
+    return b_u, b_v
+
+
+def brute_force_per_edge(a):
+    """(U, V) per-edge counts by explicit O(U^2 V^2) enumeration."""
+    a = np.asarray(a)
+    u_n, v_n = a.shape
+    b_e = np.zeros((u_n, v_n), dtype=np.int64)
+    for u1, u2 in itertools.combinations(range(u_n), 2):
+        for v1, v2 in itertools.combinations(range(v_n), 2):
+            if a[u1, v1] and a[u1, v2] and a[u2, v1] and a[u2, v2]:
+                for (uu, vv) in ((u1, v1), (u1, v2), (u2, v1), (u2, v2)):
+                    b_e[uu, vv] += 1
+    return b_e

@@ -1,0 +1,77 @@
+"""Layer-2 JAX compute graph for dense-tile butterfly counting.
+
+Composes the Layer-1 Pallas kernels (``kernels.butterfly``) into the
+entry points that get AOT-lowered to HLO text and executed by the Rust
+coordinator's ``DenseCoreEngine``:
+
+* ``count_dense(A)`` -> ``(total, b_u, b_v, b_e)``
+  full dense-block butterfly statistics.
+* ``wedge_stats(A)`` -> ``(wedges_u, wedges_v)``
+  side-wedge totals for the ordering auto-tuner (f-metric, §6.2.2).
+
+Numerics contract (see kernels/butterfly.py): Pallas tiles produce
+*exact* f32 integer partials for blocks up to 512x512; the cross-tile
+reduction here runs in f64 (``jax_enable_x64`` is switched on by
+``aot.py`` and the tests).  Outputs: total f64 scalar, b_u/b_v f64
+vectors, b_e f32 matrix (per-edge counts are bounded by U*V < 2^24).
+
+Python (this module included) runs only at build time; the lowered HLO
+is the runtime interface.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import butterfly
+
+
+def count_dense(a, tile: int = butterfly.DEFAULT_TILE):
+    """Dense-block butterfly statistics.
+
+    Args:
+      a: (U, V) f32 0/1 adjacency block; U, V multiples of ``tile``.
+    Returns:
+      total: f64 scalar — global butterfly count of the block.
+      b_u:   (U,) f64 — per-vertex counts, U side.
+      b_v:   (V,) f64 — per-vertex counts, V side.
+      b_e:   (U, V) f32 — per-edge counts (0 off-edges).
+    """
+    a = a.astype(jnp.float32)
+    # U side: exact f32 per-tile partials, f64 cross-tile reduction.
+    parts_u = butterfly.bfly_rowsum_tiles(a, tile=tile)
+    b_u = jnp.sum(parts_u.astype(jnp.float64), axis=0)
+    # V side: same kernel on the transpose.
+    at = jnp.transpose(a)
+    parts_v = butterfly.bfly_rowsum_tiles(at, tile=tile)
+    b_v = jnp.sum(parts_v.astype(jnp.float64), axis=0)
+    # Every butterfly has exactly two U-side endpoints.
+    total = jnp.sum(b_u) / 2.0
+    b_e = butterfly.bfly_edge_counts(a, tile=tile)
+    return total, b_u, b_v, b_e
+
+
+def count_total(a, tile: int = butterfly.DEFAULT_TILE):
+    """Global count only — lighter artifact for the hybrid scheduler."""
+    a = a.astype(jnp.float32)
+    parts_u = butterfly.bfly_rowsum_tiles(a, tile=tile)
+    b_u = jnp.sum(parts_u.astype(jnp.float64), axis=0)
+    return (jnp.sum(b_u) / 2.0,)
+
+
+def wedge_stats(a, tile: int = butterfly.DEFAULT_TILE):
+    """Side-wedge totals (sum_x C(deg(x), 2) per side) for ranking.
+
+    Cheap, but routed through the Pallas wedge kernel so the artifact
+    exercises the same HBM->VMEM schedule; the Rust side uses these for
+    the side-ordering decision on densified cores.
+    """
+    a = a.astype(jnp.float32)
+    w_u = butterfly.wedge_matrix(a, tile=tile)
+    # Diagonal of W is deg(u); wedges with endpoints on the U side:
+    # sum_v C(deg(v), 2) — note endpoints on U means centers on V.
+    deg_u = jnp.diagonal(w_u).astype(jnp.float64)
+    deg_v = jnp.sum(a, axis=0, dtype=jnp.float64)
+    wedges_endp_u = jnp.sum(deg_v * (deg_v - 1.0) / 2.0)
+    wedges_endp_v = jnp.sum(deg_u * (deg_u - 1.0) / 2.0)
+    return wedges_endp_u, wedges_endp_v

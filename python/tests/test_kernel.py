@@ -1,0 +1,185 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+The counts are integers, so every comparison is *exact*
+(``assert_allclose(..., rtol=0, atol=0)``) — any tiling or masking bug
+shows up as an off-by-integer, not a tolerance wobble.
+
+Hypothesis sweeps shapes, tile sizes, and edge densities; fixed tests
+pin the analytically known cases (complete bipartite graph, empty
+graph, single butterfly).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import butterfly, ref
+
+
+def random_block(rng: np.random.Generator, u: int, v: int, density: float):
+    return (rng.random((u, v)) < density).astype(np.float32)
+
+
+def exact(actual, expected):
+    np.testing.assert_allclose(
+        np.asarray(actual, dtype=np.float64),
+        np.asarray(expected, dtype=np.float64),
+        rtol=0,
+        atol=0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# bfly_rowsum_tiles (per-vertex kernel)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ut=st.integers(1, 4),
+    vt=st.integers(1, 4),
+    tile=st.sampled_from([4, 8, 16]),
+    density=st.sampled_from([0.0, 0.1, 0.4, 0.8, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rowsum_matches_ref(ut, vt, tile, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_block(rng, ut * tile, vt * tile, density)
+    parts = butterfly.bfly_rowsum_tiles(jnp.asarray(a), tile=tile)
+    b_u = np.sum(np.asarray(parts, dtype=np.float64), axis=0)
+    expected, _ = ref.per_vertex_ref(a)
+    exact(b_u, expected)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ut=st.integers(1, 3),
+    vt=st.integers(1, 3),
+    tile=st.sampled_from([4, 8]),
+    density=st.sampled_from([0.2, 0.6]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rowsum_transpose_gives_v_side(ut, vt, tile, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_block(rng, ut * tile, vt * tile, density)
+    parts = butterfly.bfly_rowsum_tiles(jnp.asarray(a.T), tile=tile)
+    b_v = np.sum(np.asarray(parts, dtype=np.float64), axis=0)
+    _, expected = ref.per_vertex_ref(a)
+    exact(b_v, expected)
+
+
+def test_rowsum_rejects_unaligned():
+    a = jnp.zeros((10, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        butterfly.bfly_rowsum_tiles(a, tile=4)
+
+
+def test_complete_bipartite_counts():
+    # K_{6,5}: total butterflies = C(6,2) * C(5,2) = 150;
+    # every U vertex is in C(5,2)*(6-1) = 50 butterflies.
+    a = np.ones((6, 5), np.float32)
+    ap = np.zeros((8, 8), np.float32)
+    ap[:6, :5] = a
+    parts = butterfly.bfly_rowsum_tiles(jnp.asarray(ap), tile=4)
+    b_u = np.sum(np.asarray(parts, np.float64), axis=0)
+    assert b_u[:6].tolist() == [50.0] * 6
+    assert b_u[6:].tolist() == [0.0, 0.0]
+    assert float(np.sum(b_u)) / 2 == 150.0
+
+
+def test_single_butterfly():
+    a = np.zeros((4, 4), np.float32)
+    a[0, 0] = a[0, 1] = a[1, 0] = a[1, 1] = 1.0
+    parts = butterfly.bfly_rowsum_tiles(jnp.asarray(a), tile=2)
+    b_u = np.sum(np.asarray(parts, np.float64), axis=0)
+    exact(b_u, [1.0, 1.0, 0.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# bfly_edge_counts (per-edge kernel)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ut=st.integers(1, 4),
+    vt=st.integers(1, 4),
+    tile=st.sampled_from([4, 8, 16]),
+    density=st.sampled_from([0.0, 0.1, 0.4, 0.8, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_edge_matches_ref(ut, vt, tile, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_block(rng, ut * tile, vt * tile, density)
+    b_e = butterfly.bfly_edge_counts(jnp.asarray(a), tile=tile)
+    exact(b_e, ref.per_edge_ref(a))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    u=st.integers(2, 7),
+    v=st.integers(2, 7),
+    density=st.sampled_from([0.3, 0.7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_edge_ref_matches_brute_force(u, v, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_block(rng, u, v, density)
+    exact(ref.per_edge_ref(a), ref.brute_force_per_edge(a))
+
+
+def test_edge_zero_off_edges():
+    rng = np.random.default_rng(7)
+    a = random_block(rng, 8, 8, 0.5)
+    b_e = np.asarray(butterfly.bfly_edge_counts(jnp.asarray(a), tile=4))
+    assert np.all(b_e[a == 0] == 0)
+
+
+# ---------------------------------------------------------------------------
+# wedge_matrix kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ut=st.integers(1, 4),
+    vt=st.integers(1, 4),
+    tile=st.sampled_from([4, 8]),
+    density=st.sampled_from([0.2, 0.5, 0.9]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_wedge_matrix_matches_ref(ut, vt, tile, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_block(rng, ut * tile, vt * tile, density)
+    w = butterfly.wedge_matrix(jnp.asarray(a), tile=tile)
+    exact(w, ref.wedge_matrix_ref(a))
+
+
+# ---------------------------------------------------------------------------
+# oracle self-consistency vs explicit enumeration
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    u=st.integers(1, 7),
+    v=st.integers(1, 7),
+    density=st.sampled_from([0.2, 0.5, 0.9]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ref_matches_brute_force(u, v, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_block(rng, u, v, density)
+    b_u, b_v = ref.per_vertex_ref(a)
+    bf_u, bf_v = ref.brute_force_per_vertex(a)
+    exact(b_u, bf_u)
+    exact(b_v, bf_v)
+    exact(ref.total_ref(a), ref.brute_force_total(a))
+
+
+def test_f32_exactness_at_cap():
+    # Worst-case tile: all-ones 128x512 block — per-row partial hits
+    # 127 * C(512, 2)?  No: per (i,j) tile partial is <= tile * C(V,2)
+    # = 128 * 130816 = 16,744,448 < 2^24.  Verify the dense extreme.
+    a = np.ones((128, 512), np.float32)
+    parts = butterfly.bfly_rowsum_tiles(jnp.asarray(a), tile=128)
+    b_u = np.sum(np.asarray(parts, np.float64), axis=0)
+    expected = 127 * (512 * 511 // 2)
+    assert b_u[0] == float(expected)

@@ -1,0 +1,118 @@
+"""Layer-2 correctness: model entry points + AOT lowering contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def random_block(rng, u, v, density):
+    return (rng.random((u, v)) < density).astype(np.float32)
+
+
+def exact(actual, expected):
+    np.testing.assert_allclose(
+        np.asarray(actual, np.float64), np.asarray(expected, np.float64),
+        rtol=0, atol=0,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ut=st.integers(1, 3),
+    vt=st.integers(1, 3),
+    tile=st.sampled_from([8, 16]),
+    density=st.sampled_from([0.1, 0.5, 0.9]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_count_dense_matches_ref(ut, vt, tile, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_block(rng, ut * tile, vt * tile, density)
+    total, b_u, b_v, b_e = model.count_dense(jnp.asarray(a), tile=tile)
+    exact(total, ref.total_ref(a))
+    ref_u, ref_v = ref.per_vertex_ref(a)
+    exact(b_u, ref_u)
+    exact(b_v, ref_v)
+    exact(b_e, ref.per_edge_ref(a))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_count_internal_consistency(seed):
+    # total == sum(b_u)/2 == sum(b_v)/2 == sum(b_e)/4.
+    rng = np.random.default_rng(seed)
+    a = random_block(rng, 16, 16, 0.4)
+    total, b_u, b_v, b_e = model.count_dense(jnp.asarray(a), tile=8)
+    t = float(total)
+    assert t == float(jnp.sum(b_u)) / 2
+    assert t == float(jnp.sum(b_v)) / 2
+    assert t == float(jnp.sum(b_e.astype(jnp.float64))) / 4
+
+
+def test_count_total_entry():
+    rng = np.random.default_rng(3)
+    a = random_block(rng, 16, 16, 0.5)
+    (total,) = model.count_total(jnp.asarray(a), tile=8)
+    exact(total, ref.total_ref(a))
+
+
+def test_wedge_stats_entry():
+    rng = np.random.default_rng(4)
+    a = random_block(rng, 16, 16, 0.5)
+    wu, wv = model.wedge_stats(jnp.asarray(a), tile=8)
+    deg_u = a.sum(axis=1)
+    deg_v = a.sum(axis=0)
+    exact(wu, np.sum(deg_v * (deg_v - 1) / 2))
+    exact(wv, np.sum(deg_u * (deg_u - 1) / 2))
+
+
+def test_padding_is_neutral():
+    # Zero-padding a block must not change any count on real vertices.
+    rng = np.random.default_rng(5)
+    a = random_block(rng, 8, 8, 0.6)
+    ap = np.zeros((16, 16), np.float32)
+    ap[:8, :8] = a
+    t1, bu1, bv1, be1 = model.count_dense(jnp.asarray(ap), tile=8)
+    exact(t1, ref.total_ref(a))
+    ref_u, ref_v = ref.per_vertex_ref(a)
+    exact(np.asarray(bu1)[:8], ref_u)
+    exact(np.asarray(bv1)[:8], ref_v)
+    assert np.all(np.asarray(bu1)[8:] == 0)
+    exact(np.asarray(be1)[:8, :8], ref.per_edge_ref(a))
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering contract (what the Rust runtime depends on)
+# ---------------------------------------------------------------------------
+
+def test_lowering_emits_valid_hlo_text():
+    text = aot.lower_entry(model.count_total, 128, 128)
+    assert "HloModule" in text
+    assert "f32[128,128]" in text  # the input parameter shape
+    # return_tuple=True: root is a tuple instruction.
+    assert "tuple(" in text or "ROOT" in text
+
+
+def test_lowering_count_dense_output_shapes():
+    text = aot.lower_entry(model.count_dense, 128, 128)
+    assert "HloModule" in text
+    assert "f64[128]" in text       # b_u / b_v
+    assert "f32[128,128]" in text   # input and b_e
+
+
+def test_lowered_executes_same_numbers():
+    # Compile the lowered stablehlo back through jax and compare against
+    # eager execution — guards against lowering-only bugs.
+    spec = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    fn = lambda a: model.count_dense(a, tile=8)  # noqa: E731
+    lowered = jax.jit(fn).lower(spec)
+    compiled = lowered.compile()
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(random_block(rng, 16, 16, 0.5))
+    got = compiled(a)
+    want = fn(a)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=0, atol=0)

@@ -1,0 +1,6 @@
+//! Dense-core accelerator: PJRT artifact vs CPU framework (ours; the
+//! Layer-1/2 integration bench).
+use parbutterfly::bench_support::figures;
+fn main() {
+    figures::dense_core_bench("dense");
+}

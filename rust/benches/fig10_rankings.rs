@@ -1,0 +1,6 @@
+//! Figure 10 + Table 3: ranking comparison and the f metric.
+use parbutterfly::bench_support::figures;
+fn main() {
+    figures::rankings_figure("fig10", false);
+    figures::wedge_ablation("table3-wedges");
+}

@@ -1,0 +1,6 @@
+//! Figure 11: approximate counting via sparsification over p.
+use parbutterfly::bench_support::figures;
+fn main() {
+    let cache_opt = std::env::args().any(|a| a == "--cache-opt");
+    figures::approx_figure(if cache_opt { "fig20" } else { "fig11" }, cache_opt);
+}

@@ -1,0 +1,5 @@
+//! Figures 12/13: tip & wing decomposition across aggregations.
+use parbutterfly::bench_support::figures;
+fn main() {
+    figures::peel_figure("fig12");
+}

@@ -1,0 +1,5 @@
+//! Figure 5: per-vertex counting across aggregation methods.
+use parbutterfly::bench_support::figures::{agg_figure, Stat};
+fn main() {
+    agg_figure("fig5", Stat::PerVertex, false);
+}

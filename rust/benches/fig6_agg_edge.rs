@@ -1,0 +1,5 @@
+//! Figure 6: per-edge counting across aggregation methods.
+use parbutterfly::bench_support::figures::{agg_figure, Stat};
+fn main() {
+    agg_figure("fig6", Stat::PerEdge, false);
+}

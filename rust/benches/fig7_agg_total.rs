@@ -1,0 +1,5 @@
+//! Figure 7: total counting across aggregation methods.
+use parbutterfly::bench_support::figures::{agg_figure, Stat};
+fn main() {
+    agg_figure("fig7", Stat::Total, false);
+}

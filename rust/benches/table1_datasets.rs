@@ -1,0 +1,6 @@
+//! Table 1: workload statistics (sizes, butterfly counts, peeling
+//! complexities).  `cargo bench --bench table1_datasets`.
+use parbutterfly::bench_support::figures;
+fn main() {
+    figures::datasets_table("table1");
+}

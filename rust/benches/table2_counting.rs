@@ -1,0 +1,6 @@
+//! Table 2: best parallel counting vs sequential baselines
+//! (Sanei-Mehri, Chiba–Nishizeki, Wang 2014, PGD-like).
+use parbutterfly::bench_support::figures;
+fn main() {
+    figures::counting_table("table2", false);
+}

@@ -1,0 +1,6 @@
+//! Table 4: peeling vs the Sariyüce–Pinar dense-bucket baseline,
+//! plus Fibonacci-heap and wedge-storing ablations.
+use parbutterfly::bench_support::figures;
+fn main() {
+    figures::peeling_table("table4");
+}

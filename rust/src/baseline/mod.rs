@@ -1,0 +1,12 @@
+//! Sequential comparators from prior work (the baselines of Tables 2,
+//! 4 and the Table 2 "previous work" columns).
+//!
+//! * [`seq_count`] — Sanei-Mehri et al. side-order counting, the
+//!   Wang et al. 2014 vanilla `O(Σ deg²)` algorithm, and a PGD-like
+//!   unordered per-edge 4-cycle counter.
+//! * [`seq_peel`] — Sariyüce–Pinar-style peeling with a *dense bucket
+//!   array* that scans empty buckets sequentially — the behaviour that
+//!   the paper's skip-ahead bucketing beats by up to 30696x (Table 4).
+
+pub mod seq_count;
+pub mod seq_peel;

@@ -1,0 +1,454 @@
+//! Parameterized regenerators for every table and figure of §6.
+//!
+//! Each `cargo bench` target is a thin `harness = false` binary
+//! delegating here (the mapping lives in DESIGN.md §3).  All output
+//! uses [`super::harness`]'s human + `BENCHROW` machine formats.
+//!
+//! Configuration axes follow the paper's notation: aggregation rows
+//! are `Sort/ASort/Hash/AHash/Hist/AHist/BatchS/BatchWA`, where the
+//! `A` prefix means atomic-add butterfly aggregation and its absence
+//! means re-aggregation (§6.1); batching is always atomic (footnote 4).
+
+use crate::baseline::{seq_count, seq_peel};
+use crate::count::{
+    count_per_edge, count_per_vertex, count_total, sparsify, BflyAgg, CountOpts, WedgeAgg,
+};
+use crate::graph::BipartiteGraph;
+use crate::peel::{
+    peel_edges, peel_vertices, BucketKind, PeelEOpts, PeelSide, PeelVOpts, WedgeStore,
+};
+use crate::prims::pool::with_threads;
+use crate::rank::{choose_ranking, f_metric, preprocess, Ranking};
+
+use super::harness::{banner, bench, bench_n, report, report_normalized};
+use super::workloads::{self, COUNTING_SUITE, PEELING_SUITE};
+
+/// Counting target: which statistic a figure measures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stat {
+    Total,
+    PerVertex,
+    PerEdge,
+}
+
+impl Stat {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stat::Total => "total",
+            Stat::PerVertex => "per-vertex",
+            Stat::PerEdge => "per-edge",
+        }
+    }
+}
+
+fn run_count(g: &BipartiteGraph, stat: Stat, opts: &CountOpts) -> u64 {
+    match stat {
+        Stat::Total => count_total(g, opts),
+        Stat::PerVertex => count_per_vertex(g, opts).bu.iter().sum::<u64>() / 2,
+        Stat::PerEdge => count_per_edge(g, opts).iter().sum::<u64>() / 4,
+    }
+}
+
+/// The paper's aggregation rows: (label, agg, butterfly agg).
+pub fn agg_rows() -> Vec<(&'static str, WedgeAgg, BflyAgg)> {
+    vec![
+        ("Sort", WedgeAgg::Sort, BflyAgg::Reagg),
+        ("ASort", WedgeAgg::Sort, BflyAgg::Atomic),
+        ("Hash", WedgeAgg::Hash, BflyAgg::Reagg),
+        ("AHash", WedgeAgg::Hash, BflyAgg::Atomic),
+        ("Hist", WedgeAgg::Hist, BflyAgg::Reagg),
+        ("AHist", WedgeAgg::Hist, BflyAgg::Atomic),
+        ("BatchS", WedgeAgg::BatchS, BflyAgg::Atomic),
+        ("BatchWA", WedgeAgg::BatchWA, BflyAgg::Atomic),
+    ]
+}
+
+/// Figures 5/6/7 (and 14/15/16 with `cache_opt`): counting runtime per
+/// aggregation method, normalized to the fastest, best ranking per
+/// dataset (approximated by the runtime `f`-metric rule).
+pub fn agg_figure(bench_name: &str, stat: Stat, cache_opt: bool) {
+    agg_figure_on(bench_name, stat, cache_opt, &COUNTING_SUITE);
+}
+
+/// [`agg_figure`] on an explicit workload list (the cache-opt suite
+/// runs a reduced set to bound total bench time).
+pub fn agg_figure_on(bench_name: &str, stat: Stat, cache_opt: bool, suite: &[&str]) {
+    banner(
+        bench_name,
+        &format!(
+            "counting {} across wedge/butterfly aggregations (cache_opt={cache_opt}); \
+             paper: Figs 5-7 (14-16 with cache opt)",
+            stat.name()
+        ),
+    );
+    for &wl_id in suite {
+        let wl = workloads::build(wl_id);
+        let ranking = choose_ranking(&wl.graph);
+        println!("[{}] {} — ranking {}", wl.id, wl.describe, ranking.name());
+        let mut rows = Vec::new();
+        let mut expected = None;
+        for (label, agg, bfly) in agg_rows() {
+            let opts = CountOpts { ranking, agg, bfly, cache_opt, ..Default::default() };
+            let mut result = 0u64;
+            let m = bench(|| {
+                result = run_count(&wl.graph, stat, &opts);
+                result
+            });
+            // Cross-check: every configuration must agree.
+            match expected {
+                None => expected = Some(result),
+                Some(e) => assert_eq!(e, result, "{label} disagrees on {wl_id}"),
+            }
+            rows.push((label.to_string(), m));
+        }
+        report_normalized(bench_name, wl.id, &rows);
+    }
+}
+
+/// Table 2 (Table 5 with `cache_opt`): best parallel vs single-thread
+/// vs the sequential baselines, for all three statistics.
+pub fn counting_table(bench_name: &str, cache_opt: bool) {
+    counting_table_on(bench_name, cache_opt, &COUNTING_SUITE);
+}
+
+/// [`counting_table`] on an explicit workload list.
+pub fn counting_table_on(bench_name: &str, cache_opt: bool, suite: &[&str]) {
+    banner(
+        bench_name,
+        "best-config counting vs sequential baselines; paper: Table 2 (5 with cache opt)",
+    );
+    for &wl_id in suite {
+        let wl = workloads::build(wl_id);
+        let g = &wl.graph;
+        let ranking = choose_ranking(g);
+        let opts = CountOpts { ranking, cache_opt, ..Default::default() }; // BatchS default
+        println!("[{}] {}", wl.id, wl.describe);
+
+        // --- total ---
+        let expect = count_total(g, &opts);
+        let m = bench(|| count_total(g, &opts));
+        report(bench_name, wl.id, "total/PB-par", &m);
+        let m = bench(|| with_threads(1, || count_total(g, &opts)));
+        report(bench_name, wl.id, "total/PB-T1", &m);
+        let m = bench_n(0, 1, || seq_count::sanei_mehri_total(g));
+        report(bench_name, wl.id, "total/SaneiMehri-T1", &m);
+        let m = bench_n(0, 1, || seq_count::chiba_nishizeki_total(g));
+        report(bench_name, wl.id, "total/ChibaNishizeki-T1", &m);
+        // PGD gets a time budget, like the paper's "> 5.5 hrs" rows.
+        let budget = std::time::Duration::from_secs(60);
+        let mut pgd = None;
+        let m = bench_n(0, 1, || {
+            pgd = seq_count::pgd_like_total_deadline(g, budget);
+            pgd
+        });
+        match pgd {
+            Some(t) => {
+                assert_eq!(t, expect);
+                report(bench_name, wl.id, "total/PGD-like", &m);
+            }
+            None => {
+                println!("  {:<24} > {:?} (budget exhausted)", "total/PGD-like", budget);
+                println!("BENCHROW {bench_name} {} total/PGD-like-timeout {}", wl.id, 60_000);
+            }
+        }
+        assert_eq!(seq_count::sanei_mehri_total(g), expect);
+
+        // --- per-vertex ---
+        let m = bench(|| count_per_vertex(g, &opts));
+        report(bench_name, wl.id, "vertex/PB-par", &m);
+        let m = bench(|| with_threads(1, || count_per_vertex(g, &opts)));
+        report(bench_name, wl.id, "vertex/PB-T1", &m);
+        let m = bench_n(0, 1, || seq_count::wang_vanilla(g));
+        report(bench_name, wl.id, "vertex/Wang2014-T1", &m);
+
+        // --- per-edge ---
+        let m = bench(|| count_per_edge(g, &opts));
+        report(bench_name, wl.id, "edge/PB-par", &m);
+        let m = bench(|| with_threads(1, || count_per_edge(g, &opts)));
+        report(bench_name, wl.id, "edge/PB-T1", &m);
+    }
+}
+
+/// Figures 8/9 (17/18 with `cache_opt`): thread-count sweep.
+pub fn scaling_figure(bench_name: &str, cache_opt: bool) {
+    banner(
+        bench_name,
+        "thread sweep on clL; paper: Figs 8/9 (17/18 with cache opt).  NOTE: the bench \
+         substrate has ONE physical core — the sweep exercises the fork-join machinery \
+         and records overhead, it cannot show real speedup (DESIGN.md §2).",
+    );
+    let wl = workloads::build("clL");
+    let ranking = choose_ranking(&wl.graph);
+    for (stat, label) in [(Stat::PerVertex, "per-vertex"), (Stat::PerEdge, "per-edge")] {
+        for (agg_label, agg, bfly) in agg_rows() {
+            // The paper sweeps every aggregation; keep the figure's
+            // shape but one row per aggregation family.
+            if !matches!(agg_label, "AHash" | "BatchS" | "BatchWA") {
+                continue;
+            }
+            for t in [1usize, 2, 4] {
+                let opts = CountOpts { ranking, agg, bfly, cache_opt, ..Default::default() };
+                let m = bench_n(0, 2, || with_threads(t, || run_count(&wl.graph, stat, &opts)));
+                report(bench_name, wl.id, &format!("{label}/{agg_label}/t{t}"), &m);
+            }
+        }
+    }
+}
+
+/// Figure 10 (19 with `cache_opt`) + Table 3: rankings and the
+/// `f` metric.
+pub fn rankings_figure(bench_name: &str, cache_opt: bool) {
+    rankings_figure_on(bench_name, cache_opt, &COUNTING_SUITE);
+}
+
+/// [`rankings_figure`] on an explicit workload list.
+pub fn rankings_figure_on(bench_name: &str, cache_opt: bool, suite: &[&str]) {
+    banner(
+        bench_name,
+        "per-vertex counting across rankings (BatchS), ranking time included; \
+         paper: Fig 10 (19 with cache opt) + Table 3 f-metric",
+    );
+    for &wl_id in suite {
+        let wl = workloads::build(wl_id);
+        println!("[{}] {}", wl.id, wl.describe);
+        // Table 3: f metric per ranking.
+        for r in Ranking::ALL {
+            let f = f_metric(&wl.graph, r);
+            println!("  f({:<7}) = {:+.4}", r.name(), f);
+            println!("BENCHROW {bench_name}-f {} {} {:.6}", wl.id, r.name(), f);
+        }
+        // Fig 10: runtime per ranking (rank+count together).
+        let mut rows = Vec::new();
+        for r in Ranking::ALL {
+            let opts = CountOpts { ranking: r, cache_opt, ..Default::default() };
+            let m = bench(|| count_per_vertex(&wl.graph, &opts));
+            rows.push((r.name().to_string(), m));
+        }
+        report_normalized(bench_name, wl.id, &rows);
+    }
+}
+
+/// Figure 11 (20 with `cache_opt`): sparsification sweep, 1-thread vs
+/// parallel, plus estimate quality.
+pub fn approx_figure(bench_name: &str, cache_opt: bool) {
+    banner(
+        bench_name,
+        "edge & colorful sparsification over p on clL; paper: Fig 11 (20 with cache opt)",
+    );
+    let wl = workloads::build("clL");
+    let g = &wl.graph;
+    let opts = CountOpts { cache_opt, ..Default::default() };
+    let exact = count_total(g, &opts) as f64;
+    println!("exact = {exact}");
+    for &p in &[0.1f64, 0.25, 0.5, 0.75] {
+        let mut est = 0.0;
+        let m = bench(|| {
+            est = sparsify::approx_total_edge(g, p, 7, &opts);
+            est
+        });
+        report(bench_name, wl.id, &format!("edge/p{p}"), &m);
+        println!("    estimate {est:.0} (err {:+.1}%)", 100.0 * (est - exact) / exact);
+        let m1 = bench(|| with_threads(1, || sparsify::approx_total_edge(g, p, 7, &opts)));
+        report(bench_name, wl.id, &format!("edge/p{p}/t1"), &m1);
+
+        let c = (1.0 / p).round() as u64;
+        let m = bench(|| {
+            est = sparsify::approx_total_colorful(g, c, 7, &opts);
+            est
+        });
+        report(bench_name, wl.id, &format!("colorful/p{p}"), &m);
+        println!("    estimate {est:.0} (err {:+.1}%)", 100.0 * (est - exact) / exact);
+    }
+}
+
+/// Figures 12/13: peeling runtime per aggregation method.
+pub fn peel_figure(bench_name: &str) {
+    banner(
+        bench_name,
+        "tip & wing decomposition across aggregations (Julienne buckets); paper: Figs 12/13",
+    );
+    for wl_id in PEELING_SUITE {
+        let wl = workloads::build(wl_id);
+        let g = &wl.graph;
+        let vc = count_per_vertex(g, &CountOpts::default());
+        let be = count_per_edge(g, &CountOpts::default());
+        println!("[{}] {}", wl.id, wl.describe);
+        let mut vrows = Vec::new();
+        let mut erows = Vec::new();
+        for agg in WedgeAgg::ALL {
+            let vopts =
+                PeelVOpts { agg, buckets: BucketKind::Julienne, side: PeelSide::Auto };
+            let m = bench_n(0, 2, || peel_vertices(g, &vc.bu, &vc.bv, &vopts));
+            vrows.push((format!("V/{}", agg.name()), m));
+            let eopts = PeelEOpts { agg, buckets: BucketKind::Julienne };
+            let m = bench_n(0, 2, || peel_edges(g, &be, &eopts));
+            erows.push((format!("E/{}", agg.name()), m));
+        }
+        report_normalized(bench_name, wl.id, &vrows);
+        report_normalized(bench_name, wl.id, &erows);
+    }
+}
+
+/// Table 4: peeling — parallel vs single-thread vs Sariyüce–Pinar
+/// dense-array baseline (with its empty-bucket scan count), plus the
+/// WPEEL and Fibonacci-heap variants as ablations.
+pub fn peeling_table(bench_name: &str) {
+    banner(
+        bench_name,
+        "peeling vs the dense-bucket sequential baseline; paper: Table 4",
+    );
+    for wl_id in PEELING_SUITE {
+        let wl = workloads::build(wl_id);
+        let g = &wl.graph;
+        let vc = count_per_vertex(g, &CountOpts::default());
+        let be = count_per_edge(g, &CountOpts::default());
+        println!("[{}] {}", wl.id, wl.describe);
+
+        let vopts = PeelVOpts::default();
+        let mut rounds_v = 0usize;
+        let m = bench_n(0, 2, || {
+            let r = peel_vertices(g, &vc.bu, &vc.bv, &vopts);
+            rounds_v = r.rounds;
+            r
+        });
+        report(bench_name, wl.id, "tip/PB-par", &m);
+        let m = bench_n(0, 2, || with_threads(1, || peel_vertices(g, &vc.bu, &vc.bv, &vopts)));
+        report(bench_name, wl.id, "tip/PB-T1", &m);
+        let fib = PeelVOpts { buckets: BucketKind::FibHeap, ..Default::default() };
+        let m = bench_n(0, 2, || peel_vertices(g, &vc.bu, &vc.bv, &fib));
+        report(bench_name, wl.id, "tip/PB-fibheap", &m);
+        let store = WedgeStore::build(g, Ranking::Degree);
+        let m = bench_n(0, 2, || {
+            crate::peel::wpeel_vertices(g, &store, &vc.bu, &vc.bv, PeelSide::Auto, BucketKind::Julienne)
+        });
+        report(bench_name, wl.id, "tip/PB-wstore", &m);
+        // Sequential baseline peels the same side as Auto.
+        let peel_u = g.wedges_centered_v() <= g.wedges_centered_u();
+        let counts: &[u64] = if peel_u { &vc.bu } else { &vc.bv };
+        let mut empties = 0u64;
+        let m = bench_n(0, 1, || {
+            let (tips, e) = if peel_u {
+                seq_peel::sp_tip_numbers_u(g, counts)
+            } else {
+                // mirror: the baseline is side-symmetric via transpose
+                seq_peel::sp_tip_numbers_u(&mirror(g), counts)
+            };
+            empties = e;
+            tips
+        });
+        report(bench_name, wl.id, "tip/SariyucePinar-T1", &m);
+        println!("    rho_v = {rounds_v}, baseline scanned {empties} empty buckets");
+
+        let eopts = PeelEOpts::default();
+        let mut rounds_e = 0usize;
+        let m = bench_n(0, 2, || {
+            let r = peel_edges(g, &be, &eopts);
+            rounds_e = r.rounds;
+            r
+        });
+        report(bench_name, wl.id, "wing/PB-par", &m);
+        let m = bench_n(0, 2, || with_threads(1, || peel_edges(g, &be, &eopts)));
+        report(bench_name, wl.id, "wing/PB-T1", &m);
+        let m = bench_n(0, 1, || seq_peel::sp_wing_numbers(g, &be));
+        report(bench_name, wl.id, "wing/SariyucePinar-T1", &m);
+        println!("    rho_e = {rounds_e}");
+    }
+}
+
+fn mirror(g: &BipartiteGraph) -> BipartiteGraph {
+    let edges: Vec<(u32, u32)> = g.edges().into_iter().map(|(u, v)| (v, u)).collect();
+    BipartiteGraph::from_edges(g.nv(), g.nu(), &edges)
+}
+
+/// Table 1: the dataset statistics table.
+pub fn datasets_table(bench_name: &str) {
+    banner(bench_name, "workload statistics; paper: Table 1");
+    println!(
+        "{:<8} {:>8} {:>8} {:>9} {:>14} {:>7} {:>7}",
+        "dataset", "|U|", "|V|", "|E|", "#butterflies", "rho_v", "rho_e"
+    );
+    for wl_id in workloads::ALL {
+        let wl = workloads::build(wl_id);
+        let g = &wl.graph;
+        let total = count_total(g, &CountOpts::default());
+        // Peeling complexities only where the suite peels (mirrors the
+        // paper's dashes for graphs whose baseline never finished).
+        let (rv, re) = if PEELING_SUITE.contains(&wl_id) || wl_id == "women" {
+            let vc = count_per_vertex(g, &CountOpts::default());
+            let be = count_per_edge(g, &CountOpts::default());
+            let rv = peel_vertices(g, &vc.bu, &vc.bv, &PeelVOpts::default()).rounds;
+            let re = peel_edges(g, &be, &PeelEOpts::default()).rounds;
+            (rv.to_string(), re.to_string())
+        } else {
+            ("-".to_string(), "-".to_string())
+        };
+        println!(
+            "{:<8} {:>8} {:>8} {:>9} {:>14} {:>7} {:>7}",
+            wl.id,
+            g.nu(),
+            g.nv(),
+            g.m(),
+            total,
+            rv,
+            re
+        );
+        println!("BENCHROW {bench_name} {} stats {}", wl.id, total);
+    }
+}
+
+/// Dense-core accelerator bench (ours): PJRT artifact vs CPU framework
+/// on dense-block workloads, plus the hybrid split.
+pub fn dense_core_bench(bench_name: &str) {
+    banner(
+        bench_name,
+        "Layer-1/2 dense artifact vs CPU sparse path (requires `make artifacts`)",
+    );
+    let engine = match crate::runtime::Engine::load_default() {
+        Ok(e) => e,
+        Err(e) => {
+            println!("SKIPPED: {e:#}");
+            return;
+        }
+    };
+    use crate::graph::gen;
+    for (label, g) in [
+        ("er-256", gen::erdos_renyi(256, 256, 8_000, 21)),
+        ("dense-256", gen::planted_blocks(256, 256, 4, 64, 64, 0.9, 500, 22)),
+        ("er-512", gen::erdos_renyi(512, 512, 30_000, 23)),
+        ("k-128x128", gen::complete_bipartite(128, 128)),
+    ] {
+        let expect = count_total(&g, &CountOpts::default());
+        let m = bench(|| crate::count::dense::count_total_dense(&g, &engine).unwrap());
+        report(bench_name, label, "dense-artifact", &m);
+        let m = bench(|| count_total(&g, &CountOpts::default()));
+        report(bench_name, label, "cpu-framework", &m);
+        let got = crate::count::dense::count_total_dense(&g, &engine).unwrap();
+        assert_eq!(got, expect, "{label}");
+    }
+    // Hybrid on a larger skewed graph.
+    let g = gen::chung_lu(2_000, 3_000, 60_000, 2.05, 25);
+    let expect = count_total(&g, &CountOpts::default());
+    let m = bench(|| {
+        crate::count::dense::count_total_hybrid(&g, &engine, 256, 256, &CountOpts::default())
+            .unwrap()
+    });
+    report(bench_name, "cl-2kx3k", "hybrid-256core", &m);
+    let m = bench(|| count_total(&g, &CountOpts::default()));
+    report(bench_name, "cl-2kx3k", "cpu-framework", &m);
+    let got = crate::count::dense::count_total_hybrid(&g, &engine, 256, 256, &CountOpts::default())
+        .unwrap();
+    assert_eq!(got, expect);
+}
+
+/// Extra ablation: wedge counts per ranking (drives the Fig 10 story
+/// without timing noise) — used by fig10 and EXPERIMENTS.md.
+pub fn wedge_ablation(bench_name: &str) {
+    banner(bench_name, "wedges processed per ranking (exact counts)");
+    for wl_id in COUNTING_SUITE {
+        let wl = workloads::build(wl_id);
+        for r in Ranking::ALL {
+            let w = preprocess(&wl.graph, r).wedges_processed();
+            println!("BENCHROW {bench_name} {} {} {}", wl.id, r.name(), w);
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Micro-bench harness (offline stand-in for criterion).
+//!
+//! Benches are `harness = false` binaries; each calls [`bench`] /
+//! [`bench_n`] and prints two row formats:
+//!
+//! * human rows — the same row/series structure as the paper's table
+//!   or figure;
+//! * machine rows — `BENCHROW <bench> <workload> <config> <median_ms>`
+//!   lines that EXPERIMENTS.md records.
+//!
+//! Timing: `warmup` un-timed runs, then `runs` timed runs; the median
+//! is reported (min/max retained for dispersion).
+
+use std::time::Instant;
+
+/// One measured result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub median_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    pub runs: usize,
+}
+
+/// Time `f` with `warmup` + `runs` invocations; returns the stats.
+pub fn bench_n<R>(warmup: usize, runs: usize, mut f: impl FnMut() -> R) -> Measurement {
+    assert!(runs >= 1);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Measurement {
+        median_ms: samples[samples.len() / 2],
+        min_ms: samples[0],
+        max_ms: *samples.last().unwrap(),
+        runs,
+    }
+}
+
+/// Default: 1 warmup + 3 timed runs (bench workloads are seconds-scale
+/// on this substrate; medians stabilize quickly).
+pub fn bench<R>(f: impl FnMut() -> R) -> Measurement {
+    bench_n(1, 3, f)
+}
+
+/// Print both row formats.
+pub fn report(bench_name: &str, workload: &str, config: &str, m: &Measurement) {
+    println!(
+        "  {config:<24} median {:>10.2} ms   (min {:.2}, max {:.2}, n={})",
+        m.median_ms, m.min_ms, m.max_ms, m.runs
+    );
+    println!("BENCHROW {bench_name} {workload} {config} {:.3}", m.median_ms);
+}
+
+/// Print a figure-style normalized bar: `value / best` per config.
+pub fn report_normalized(bench_name: &str, workload: &str, rows: &[(String, Measurement)]) {
+    let best = rows
+        .iter()
+        .map(|(_, m)| m.median_ms)
+        .fold(f64::INFINITY, f64::min);
+    println!("  [{workload}] fastest = {best:.2} ms; normalized:");
+    for (config, m) in rows {
+        let bar_len = ((m.median_ms / best).min(20.0) * 3.0) as usize;
+        println!(
+            "  {config:<24} {:>6.2}x {}",
+            m.median_ms / best,
+            "#".repeat(bar_len.max(1))
+        );
+        println!("BENCHROW {bench_name} {workload} {config} {:.3}", m.median_ms);
+    }
+}
+
+/// Section banner for a bench binary.
+pub fn banner(title: &str, detail: &str) {
+    println!("\n=== {title} ===");
+    if !detail.is_empty() {
+        println!("{detail}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let m = bench_n(0, 5, || {
+            let mut s = 0u64;
+            for i in 0..10_000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(m.min_ms <= m.median_ms && m.median_ms <= m.max_ms);
+        assert_eq!(m.runs, 5);
+    }
+}

@@ -1,0 +1,8 @@
+//! Benchmark substrate: the workload suite (the stand-ins for the
+//! paper's KONECT datasets) and a small timing harness (criterion is
+//! unavailable offline; `cargo bench` drives `harness = false` targets
+//! built on [`harness::bench`]).
+
+pub mod figures;
+pub mod harness;
+pub mod workloads;

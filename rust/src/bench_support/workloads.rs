@@ -1,0 +1,96 @@
+//! The benchmark workload suite (Table 1 stand-ins).
+//!
+//! Each workload is a deterministic synthetic graph chosen to
+//! reproduce the *structural regime* of one of the paper's KONECT
+//! datasets (see DESIGN.md §2 for the mapping rationale):
+//!
+//! | id       | family            | regime it stands in for              |
+//! |----------|-------------------|--------------------------------------|
+//! | `small`  | ER                | dblp/github-scale sanity workload    |
+//! | `er`     | ER near-regular   | itwiki/livejournal (f ~ 0, side wins)|
+//! | `cl`     | Chung-Lu 2.1      | discogs (f >> 0.1, degree wins)      |
+//! | `clL`    | Chung-Lu 2.1, big | enwiki/delicious-scale skew          |
+//! | `dense`  | planted blocks    | discogs_style (few distinct counts)  |
+//! | `women`  | Davis (real data) | real-data smoke row                  |
+//!
+//! Sizes are scaled so the *sequential baselines* still finish within
+//! a bench run on the single-core substrate.
+
+use crate::graph::{gen, BipartiteGraph};
+
+/// A named benchmark workload.
+pub struct Workload {
+    pub id: &'static str,
+    pub describe: &'static str,
+    pub graph: BipartiteGraph,
+}
+
+/// Build one workload by id.
+pub fn build(id: &str) -> Workload {
+    match id {
+        "small" => Workload {
+            id: "small",
+            describe: "ER 500x700 m~8k",
+            graph: gen::erdos_renyi(500, 700, 8_000, 101),
+        },
+        "er" => Workload {
+            id: "er",
+            describe: "ER near-regular 3000x3000 m~60k",
+            graph: gen::erdos_renyi(3_000, 3_000, 60_000, 103),
+        },
+        "cl" => Workload {
+            id: "cl",
+            describe: "Chung-Lu beta=2.1 5000x8000 m~120k",
+            graph: gen::chung_lu(5_000, 8_000, 120_000, 2.1, 105),
+        },
+        "clL" => Workload {
+            id: "clL",
+            describe: "Chung-Lu beta=2.1 20000x30000 m~600k",
+            graph: gen::chung_lu(20_000, 30_000, 600_000, 2.1, 107),
+        },
+        "dense" => Workload {
+            id: "dense",
+            describe: "8 planted 60x60 blocks p=0.85 + noise",
+            graph: gen::planted_blocks(1_000, 1_000, 8, 60, 60, 0.85, 2_000, 109),
+        },
+        "women" => Workload {
+            id: "women",
+            describe: "Davis Southern Women (real, 18x14)",
+            graph: gen::davis_southern_women(),
+        },
+        other => panic!("unknown workload {other}"),
+    }
+}
+
+/// The counting suite (Figures 5–7, Table 2).
+pub const COUNTING_SUITE: [&str; 4] = ["er", "cl", "clL", "dense"];
+
+/// The peeling suite (Figures 12–13, Table 4) — smaller, peeling
+/// rounds multiply the work.
+pub const PEELING_SUITE: [&str; 3] = ["small", "cl", "dense"];
+
+/// Everything (Table 1).
+pub const ALL: [&str; 6] = ["small", "er", "cl", "clL", "dense", "women"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workloads_build_and_are_deterministic() {
+        for id in ALL {
+            let a = build(id);
+            let b = build(id);
+            assert_eq!(a.graph.m(), b.graph.m(), "{id}");
+            assert!(a.graph.m() > 0, "{id} empty");
+        }
+    }
+
+    #[test]
+    fn cl_is_skewed_er_is_not() {
+        let cl = build("cl").graph;
+        let er = build("er").graph;
+        let skew = |g: &BipartiteGraph| g.max_degree() as f64 / (g.m() as f64 / g.n() as f64);
+        assert!(skew(&cl) > 4.0 * skew(&er));
+    }
+}

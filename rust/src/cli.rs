@@ -1,0 +1,304 @@
+//! Hand-rolled CLI (no `clap` offline).
+//!
+//! ```text
+//! parbutterfly gen    --kind er|cl|blocks|davis --nu N --nv N --m M [--seed S] --out FILE
+//! parbutterfly info   --graph FILE
+//! parbutterfly count  --graph FILE [--mode total|vertex|edge] [--rank R] [--agg A]
+//!                     [--cache-opt] [--auto-rank] [--threads T]
+//! parbutterfly peel   --graph FILE [--mode vertex|edge] [--agg A]
+//!                     [--buckets julienne|fibheap] [--threads T]
+//! parbutterfly approx --graph FILE --method edge|colorful --p P [--seed S]
+//! parbutterfly dense  --graph FILE            # PJRT dense-core path
+//! parbutterfly artifacts                      # list loaded artifacts
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::coordinator::{
+    count_report, tip_report, wing_report, Coordinator, CountConfig, CountMode, PeelConfig,
+};
+use crate::count::{sparsify, BflyAgg, CountOpts, WedgeAgg};
+use crate::graph::{gen, io, BipartiteGraph};
+use crate::peel::{BucketKind, PeelSide};
+use crate::rank::Ranking;
+
+struct Args {
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut bools = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    bools.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags, bools }
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, k: &str, default: usize) -> usize {
+        self.get(k).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_u64(&self, k: &str, default: u64) -> u64 {
+        self.get(k).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.bools.iter().any(|b| b == k)
+    }
+}
+
+fn load(args: &Args) -> anyhow::Result<BipartiteGraph> {
+    let path = args
+        .get("graph")
+        .ok_or_else(|| anyhow::anyhow!("--graph FILE required"))?;
+    io::load_edge_list(Path::new(path))
+}
+
+fn count_opts(args: &Args) -> CountOpts {
+    CountOpts {
+        ranking: args.get("rank").and_then(Ranking::parse).unwrap_or(Ranking::Degree),
+        agg: args.get("agg").and_then(WedgeAgg::parse).unwrap_or(WedgeAgg::BatchS),
+        bfly: if args.has("reagg") { BflyAgg::Reagg } else { BflyAgg::Atomic },
+        cache_opt: args.has("cache-opt"),
+        max_wedges: args.get_usize("max-wedges", 1 << 26),
+    }
+}
+
+fn with_threads_arg<R>(args: &Args, f: impl FnOnce() -> R) -> R {
+    match args.get("threads").and_then(|s| s.parse::<usize>().ok()) {
+        Some(t) => crate::prims::pool::with_threads(t, f),
+        None => f(),
+    }
+}
+
+/// Entry point used by `main.rs`.  Returns the process exit code.
+pub fn run() -> i32 {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run_inner(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    }
+}
+
+fn run_inner(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    match cmd {
+        "gen" => cmd_gen(&args),
+        "info" => cmd_info(&args),
+        "count" => cmd_count(&args),
+        "peel" => cmd_peel(&args),
+        "approx" => cmd_approx(&args),
+        "dense" => cmd_dense(&args),
+        "artifacts" => cmd_artifacts(),
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "parbutterfly — parallel butterfly computations (Shi & Shun 2019)
+commands: gen, info, count, peel, approx, dense, artifacts
+run `parbutterfly <cmd> --help-flags` or see rust/src/cli.rs for flags";
+
+fn cmd_gen(args: &Args) -> anyhow::Result<()> {
+    let kind = args.get("kind").unwrap_or("er");
+    let nu = args.get_usize("nu", 1000);
+    let nv = args.get_usize("nv", 1000);
+    let m = args.get_usize("m", 10_000);
+    let seed = args.get_u64("seed", 42);
+    let g = match kind {
+        "er" => gen::erdos_renyi(nu, nv, m, seed),
+        "cl" => gen::chung_lu(
+            nu,
+            nv,
+            m,
+            args.get("beta").and_then(|s| s.parse().ok()).unwrap_or(2.1),
+            seed,
+        ),
+        "blocks" => {
+            let k = args.get_usize("k", 4);
+            gen::planted_blocks(nu, nv, k, nu / (2 * k), nv / (2 * k), 0.9, m / 4, seed)
+        }
+        "davis" => gen::davis_southern_women(),
+        other => anyhow::bail!("unknown kind {other}"),
+    };
+    let out = args.get("out").ok_or_else(|| anyhow::anyhow!("--out FILE required"))?;
+    io::save_edge_list(&g, Path::new(out))?;
+    println!("wrote {} ({} x {}, {} edges)", out, g.nu(), g.nv(), g.m());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let g = load(args)?;
+    let cfg = CountConfig::default();
+    let r = count_report(&g, CountMode::Total, &cfg);
+    println!("|U| = {}", g.nu());
+    println!("|V| = {}", g.nv());
+    println!("|E| = {}", g.m());
+    println!("max degree     = {}", g.max_degree());
+    println!("wedges (ctr U) = {}", g.wedges_centered_u());
+    println!("wedges (ctr V) = {}", g.wedges_centered_v());
+    println!("# butterflies  = {}", r.total);
+    for rk in Ranking::ALL {
+        println!("f({:<7}) = {:+.4}", rk.name(), crate::rank::f_metric(&g, rk));
+    }
+    Ok(())
+}
+
+fn cmd_count(args: &Args) -> anyhow::Result<()> {
+    let g = load(args)?;
+    let cfg = CountConfig { opts: count_opts(args), auto_rank: args.has("auto-rank") };
+    let mode = match args.get("mode").unwrap_or("total") {
+        "vertex" => CountMode::PerVertex,
+        "edge" => CountMode::PerEdge,
+        "full" => CountMode::Full,
+        _ => CountMode::Total,
+    };
+    let r = with_threads_arg(args, || count_report(&g, mode, &cfg));
+    println!(
+        "total = {} (ranking {}, {} wedges, {:.2} ms, backend {})",
+        r.total,
+        r.ranking.name(),
+        r.wedges,
+        r.millis,
+        r.backend
+    );
+    if let Some(vc) = &r.per_vertex {
+        let mx_u = vc.bu.iter().max().unwrap_or(&0);
+        let mx_v = vc.bv.iter().max().unwrap_or(&0);
+        println!("max per-vertex: U {} V {}", mx_u, mx_v);
+    }
+    if let Some(be) = &r.per_edge {
+        println!("max per-edge: {}", be.iter().max().unwrap_or(&0));
+    }
+    Ok(())
+}
+
+fn cmd_peel(args: &Args) -> anyhow::Result<()> {
+    let g = load(args)?;
+    let agg = args.get("agg").and_then(WedgeAgg::parse).unwrap_or(WedgeAgg::Hist);
+    let buckets = match args.get("buckets").unwrap_or("julienne") {
+        "fibheap" => BucketKind::FibHeap,
+        _ => BucketKind::Julienne,
+    };
+    let cfg = PeelConfig {
+        count: CountConfig { opts: count_opts(args), auto_rank: false },
+        vopts: crate::peel::PeelVOpts { agg, buckets, side: PeelSide::Auto },
+        eopts: crate::peel::PeelEOpts { agg, buckets },
+    };
+    match args.get("mode").unwrap_or("vertex") {
+        "edge" => {
+            let (w, ms) = with_threads_arg(args, || wing_report(&g, &cfg));
+            let max = w.wings.iter().max().copied().unwrap_or(0);
+            println!("wing decomposition: {} rounds, max wing {}, {:.2} ms", w.rounds, max, ms);
+        }
+        _ => {
+            let (t, ms) = with_threads_arg(args, || tip_report(&g, &cfg));
+            let max = t.tips.iter().max().copied().unwrap_or(0);
+            println!(
+                "tip decomposition ({} side): {} rounds, max tip {}, {:.2} ms",
+                if t.peeled_u { "U" } else { "V" },
+                t.rounds,
+                max,
+                ms
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_approx(args: &Args) -> anyhow::Result<()> {
+    let g = load(args)?;
+    let p: f64 = args.get("p").and_then(|s| s.parse().ok()).unwrap_or(0.5);
+    let seed = args.get_u64("seed", 1);
+    let opts = count_opts(args);
+    let est = match args.get("method").unwrap_or("edge") {
+        "colorful" => {
+            let c = (1.0 / p).round().max(1.0) as u64;
+            sparsify::approx_total_colorful(&g, c, seed, &opts)
+        }
+        _ => sparsify::approx_total_edge(&g, p, seed, &opts),
+    };
+    println!("estimated butterflies = {est:.1}");
+    Ok(())
+}
+
+fn cmd_dense(args: &Args) -> anyhow::Result<()> {
+    let g = load(args)?;
+    let coord = Coordinator::with_default_engine();
+    anyhow::ensure!(coord.has_engine(), "no artifacts available (run `make artifacts`)");
+    let r = coord.count_total_routed(&g, &CountConfig::default());
+    println!("total = {} via {} backend ({:.2} ms)", r.total, r.backend, r.millis);
+    Ok(())
+}
+
+fn cmd_artifacts() -> anyhow::Result<()> {
+    let engine = crate::runtime::Engine::load_default()?;
+    for s in engine.specs() {
+        println!("{:<14} {:>4} x {:<4} {} outputs  {}", s.entry, s.u, s.v, s.n_out, s.path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parsing() {
+        let argv: Vec<String> = ["--nu", "5", "--cache-opt", "--out", "x.txt"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.get_usize("nu", 0), 5);
+        assert!(a.has("cache-opt"));
+        assert_eq!(a.get("out"), Some("x.txt"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn gen_info_count_roundtrip() {
+        let dir = std::env::temp_dir().join("pb_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.txt");
+        let argv: Vec<String> = [
+            "gen", "--kind", "davis", "--out", path.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        run_inner(&argv).unwrap();
+        let argv: Vec<String> =
+            ["count", "--graph", path.to_str().unwrap()].iter().map(|s| s.to_string()).collect();
+        run_inner(&argv).unwrap();
+        let argv: Vec<String> =
+            ["peel", "--graph", path.to_str().unwrap()].iter().map(|s| s.to_string()).collect();
+        run_inner(&argv).unwrap();
+    }
+}

@@ -1,0 +1,235 @@
+//! Coordinator: the framework facade gluing ranking selection,
+//! counting, peeling, approximation, and the PJRT dense-core engine
+//! behind one configuration surface.  This is the layer the CLI,
+//! examples, and benches drive.
+
+use std::time::Instant;
+
+use crate::count::{
+    self, count_per_edge, count_per_vertex, CountOpts, VertexCounts,
+};
+use crate::graph::BipartiteGraph;
+use crate::peel::{self, PeelEOpts, PeelVOpts, TipResult, WingResult};
+use crate::rank::{choose_ranking, Ranking};
+use crate::runtime::Engine;
+
+/// What to compute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CountMode {
+    Total,
+    PerVertex,
+    PerEdge,
+    Full,
+}
+
+/// Counting configuration.
+#[derive(Clone, Debug, Default)]
+pub struct CountConfig {
+    pub opts: CountOpts,
+    /// Override `opts.ranking` with the runtime `f`-metric rule
+    /// (§6.2.2): side ordering unless a degree-style ordering saves
+    /// >= 10% of wedges.
+    pub auto_rank: bool,
+}
+
+/// Peeling configuration.
+#[derive(Clone, Debug, Default)]
+pub struct PeelConfig {
+    pub count: CountConfig,
+    pub vopts: PeelVOpts,
+    pub eopts: PeelEOpts,
+}
+
+/// Output of a coordinated counting run.
+#[derive(Clone, Debug)]
+pub struct CountReport {
+    pub total: u64,
+    pub per_vertex: Option<VertexCounts>,
+    pub per_edge: Option<Vec<u64>>,
+    /// Ranking actually used (after auto selection).
+    pub ranking: Ranking,
+    /// Wedges processed under that ranking.
+    pub wedges: u64,
+    /// Wall-clock milliseconds for the counting phase.
+    pub millis: f64,
+    /// "cpu" or "dense" (PJRT artifact path).
+    pub backend: &'static str,
+}
+
+fn resolve_ranking(g: &BipartiteGraph, cfg: &CountConfig) -> Ranking {
+    if cfg.auto_rank {
+        choose_ranking(g)
+    } else {
+        cfg.opts.ranking
+    }
+}
+
+/// Count butterflies under `cfg` (CPU framework path).
+pub fn count_report(g: &BipartiteGraph, mode: CountMode, cfg: &CountConfig) -> CountReport {
+    let ranking = resolve_ranking(g, cfg);
+    let opts = CountOpts { ranking, ..cfg.opts.clone() };
+    let rg = crate::rank::preprocess(g, ranking);
+    let wedges = rg.wedges_processed();
+    let start = Instant::now();
+    let (total, per_vertex, per_edge) = match mode {
+        CountMode::Total => (count::count_total_ranked(&rg, &opts), None, None),
+        CountMode::PerVertex => {
+            let vc = count_per_vertex(g, &opts);
+            let t = vc.bu.iter().sum::<u64>() / 2;
+            (t, Some(vc), None)
+        }
+        CountMode::PerEdge => {
+            let be = count_per_edge(g, &opts);
+            let t = be.iter().sum::<u64>() / 4;
+            (t, None, Some(be))
+        }
+        CountMode::Full => {
+            let vc = count_per_vertex(g, &opts);
+            let be = count_per_edge(g, &opts);
+            let t = vc.bu.iter().sum::<u64>() / 2;
+            (t, Some(vc), Some(be))
+        }
+    };
+    CountReport {
+        total,
+        per_vertex,
+        per_edge,
+        ranking,
+        wedges,
+        millis: start.elapsed().as_secs_f64() * 1e3,
+        backend: "cpu",
+    }
+}
+
+/// Shorthand: total count with the default pipeline.
+pub fn count_butterflies(g: &BipartiteGraph, cfg: &CountConfig) -> CountReport {
+    count_report(g, CountMode::Total, cfg)
+}
+
+/// Tip decomposition under `cfg`.
+pub fn tip_report(g: &BipartiteGraph, cfg: &PeelConfig) -> (TipResult, f64) {
+    let counts = count_report(g, CountMode::PerVertex, &cfg.count);
+    let vc = counts.per_vertex.unwrap();
+    let start = Instant::now();
+    let r = peel::peel_vertices(g, &vc.bu, &vc.bv, &cfg.vopts);
+    (r, start.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Wing decomposition under `cfg`.
+pub fn wing_report(g: &BipartiteGraph, cfg: &PeelConfig) -> (WingResult, f64) {
+    let counts = count_report(g, CountMode::PerEdge, &cfg.count);
+    let be = counts.per_edge.unwrap();
+    let start = Instant::now();
+    let r = peel::peel_edges(g, &be, &cfg.eopts);
+    (r, start.elapsed().as_secs_f64() * 1e3)
+}
+
+/// A coordinator that may hold a PJRT engine for the dense path.
+pub struct Coordinator {
+    engine: Option<Engine>,
+    /// Largest `max(nu, nv)` routed to the dense backend.
+    pub dense_limit: usize,
+}
+
+impl Coordinator {
+    /// CPU-only coordinator.
+    pub fn cpu_only() -> Self {
+        Self { engine: None, dense_limit: 0 }
+    }
+
+    /// Try to attach the PJRT engine from the default artifact dir;
+    /// falls back to CPU-only when artifacts are missing.
+    pub fn with_default_engine() -> Self {
+        match Engine::load_default() {
+            Ok(engine) => {
+                let dense_limit =
+                    engine.specs().iter().map(|s| s.u.max(s.v)).max().unwrap_or(0);
+                Self { engine: Some(engine), dense_limit }
+            }
+            Err(_) => Self::cpu_only(),
+        }
+    }
+
+    pub fn has_engine(&self) -> bool {
+        self.engine.is_some()
+    }
+
+    pub fn engine(&self) -> Option<&Engine> {
+        self.engine.as_ref()
+    }
+
+    /// Route a total count: dense artifact when the graph fits and the
+    /// engine is up, CPU framework otherwise.
+    pub fn count_total_routed(&self, g: &BipartiteGraph, cfg: &CountConfig) -> CountReport {
+        if let Some(engine) = &self.engine {
+            if g.nu().max(g.nv()) <= self.dense_limit {
+                if let Some(spec) = engine.pick("count_total", g.nu(), g.nv()) {
+                    let (pu, pv) = (spec.u, spec.v);
+                    let start = Instant::now();
+                    let a = g.to_dense_f32(pu, pv);
+                    if let Ok(t) = engine.count_total(pu, pv, &a) {
+                        return CountReport {
+                            total: t.round() as u64,
+                            per_vertex: None,
+                            per_edge: None,
+                            ranking: cfg.opts.ranking,
+                            wedges: 0,
+                            millis: start.elapsed().as_secs_f64() * 1e3,
+                            backend: "dense",
+                        };
+                    }
+                }
+            }
+        }
+        count_report(g, CountMode::Total, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::testutil::brute;
+
+    #[test]
+    fn report_modes_are_consistent() {
+        let g = gen::erdos_renyi(25, 30, 220, 4);
+        let expect = brute::total(&g);
+        let cfg = CountConfig::default();
+        for mode in [CountMode::Total, CountMode::PerVertex, CountMode::PerEdge, CountMode::Full] {
+            let r = count_report(&g, mode, &cfg);
+            assert_eq!(r.total, expect, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn auto_rank_resolves() {
+        let g = gen::chung_lu(200, 300, 3000, 2.05, 7);
+        let cfg = CountConfig { auto_rank: true, ..Default::default() };
+        let r = count_butterflies(&g, &cfg);
+        assert_eq!(r.total, brute::total(&g));
+        assert_eq!(r.ranking, crate::rank::choose_ranking(&g));
+    }
+
+    #[test]
+    fn cpu_only_coordinator_routes_to_cpu() {
+        let g = gen::erdos_renyi(15, 15, 80, 2);
+        let c = Coordinator::cpu_only();
+        let r = c.count_total_routed(&g, &CountConfig::default());
+        assert_eq!(r.backend, "cpu");
+        assert_eq!(r.total, brute::total(&g));
+    }
+
+    #[test]
+    fn peel_reports_run() {
+        let g = gen::erdos_renyi(12, 13, 70, 3);
+        let cfg = PeelConfig {
+            vopts: PeelVOpts { side: peel::PeelSide::U, ..Default::default() },
+            ..Default::default()
+        };
+        let (t, _) = tip_report(&g, &cfg);
+        assert_eq!(t.tips, brute::tip_numbers_u(&g));
+        let (w, _) = wing_report(&g, &cfg);
+        assert_eq!(w.wings, brute::wing_numbers(&g));
+    }
+}

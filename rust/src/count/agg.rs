@@ -1,0 +1,352 @@
+//! Fully-parallel wedge aggregations: **Sort**, **Hash**, **Hist**
+//! (§3.1.2), with atomic-add or re-aggregation butterfly combining
+//! (§3.1.3), processed in memory-bounded chunks (§3.1.4).
+//!
+//! All three share the same skeleton per chunk of sources:
+//!   1. obtain `(key, multiplicity d)` for every endpoint pair
+//!      (Sort: sort materialized records + segment; Hash: additive
+//!      phase-concurrent table; Hist: parallel histogram);
+//!   2. endpoints of a key with `d` wedges gain `C(d, 2)` butterflies
+//!      each (Lemma 4.2 Eq. 1);
+//!   3. the center of every wedge gains `d - 1` (per-vertex mode), or
+//!      both legs of every wedge gain `d - 1` (per-edge mode,
+//!      Lemma 4.2 Eq. 2).
+//!
+//! Chunks split at source-vertex boundaries so a key's wedges never
+//! straddle chunks (see `wedges.rs`), making the nonlinear `C(d, 2)`
+//! safe under chunking.
+
+use std::sync::atomic::AtomicU64;
+
+use super::wedges::{self, key_endpoints, Wedge};
+use super::{atomic_add, choose2, BflyAgg, CountOpts, WedgeAgg};
+use crate::graph::RankedGraph;
+use crate::prims::hashtable::CountTable;
+use crate::prims::histogram::histogram;
+use crate::prims::pool::{parallel_for_chunks, parallel_for_dynamic};
+use crate::prims::sort::par_sort_by_key;
+
+/// Iterate `(start, end)` of every equal-key segment of a sorted slice.
+fn for_each_segment<T: Sync>(
+    items: &[T],
+    key: impl Fn(&T) -> u64 + Sync,
+    f: impl Fn(usize, usize) + Sync,
+) {
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    parallel_for_chunks(n, |r| {
+        let mut i = r.start;
+        // Skip a segment that started in the previous block.
+        if i > 0 {
+            while i < r.end && key(&items[i]) == key(&items[i - 1]) {
+                i += 1;
+            }
+        }
+        while i < r.end {
+            let k = key(&items[i]);
+            let mut j = i + 1;
+            while j < n && key(&items[j]) == k {
+                j += 1;
+            }
+            f(i, j);
+            i = j;
+        }
+    });
+}
+
+/// Apply accumulated `(index, delta)` updates through the re-aggregation
+/// path: sort by index, segment-sum, single-writer add.  This is the
+/// §3.1.3 "reuse the aggregation method" option; all three methods
+/// reduce to a keyed combine, realized here with the parallel sort.
+fn reagg_apply(mut deltas: Vec<(u32, u64)>, out: &[AtomicU64]) {
+    par_sort_by_key(&mut deltas, |d| d.0);
+    for_each_segment(&deltas, |d| d.0 as u64, |s, e| {
+        let sum: u64 = deltas[s..e].iter().map(|d| d.1).sum();
+        // Single writer per index — a plain store would race across
+        // chunks, so keep the atomic add (uncontended here).
+        atomic_add(&out[deltas[s].0 as usize], sum);
+    });
+}
+
+/// Thread-safe delta collector for the re-aggregation path.
+struct DeltaSink {
+    inner: std::sync::Mutex<Vec<(u32, u64)>>,
+}
+
+impl DeltaSink {
+    fn new() -> Self {
+        Self { inner: std::sync::Mutex::new(Vec::new()) }
+    }
+    fn push_batch(&self, batch: Vec<(u32, u64)>) {
+        if !batch.is_empty() {
+            self.inner.lock().unwrap().extend(batch);
+        }
+    }
+    fn into_vec(self) -> Vec<(u32, u64)> {
+        self.inner.into_inner().unwrap()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// total
+// ---------------------------------------------------------------------------
+
+/// Global count via Sort/Hash/Hist.
+pub fn total_agg(rg: &RankedGraph, opts: &CountOpts) -> u64 {
+    let counts = wedges::source_wedge_counts(rg, opts.cache_opt);
+    let mut total = 0u64;
+    for chunk in wedges::chunk_sources(&counts, opts.max_wedges) {
+        total += match opts.agg {
+            WedgeAgg::Sort => {
+                let mut recs = wedges::materialize(rg, opts.cache_opt, chunk, &counts);
+                par_sort_by_key(&mut recs, |w| w.key());
+                let acc = AtomicU64::new(0);
+                for_each_segment(&recs, |w| w.key(), |s, e| {
+                    atomic_add(&acc, choose2((e - s) as u64));
+                });
+                acc.into_inner()
+            }
+            WedgeAgg::Hash => {
+                let nw: usize = counts[chunk.clone()].iter().sum();
+                let table = CountTable::with_capacity(nw.max(1));
+                wedges::for_each_wedge(rg, opts.cache_opt, chunk, |w| {
+                    table.insert_add(w.key(), 1)
+                });
+                let acc = AtomicU64::new(0);
+                table.for_each(|_, d| atomic_add(&acc, choose2(d)));
+                acc.into_inner()
+            }
+            WedgeAgg::Hist => {
+                let recs = wedges::materialize(rg, opts.cache_opt, chunk, &counts);
+                let keys: Vec<u64> = recs.iter().map(|w| w.key()).collect();
+                histogram(&keys).into_iter().map(|(_, d)| choose2(d)).sum()
+            }
+            _ => unreachable!("batch handled elsewhere"),
+        };
+    }
+    total
+}
+
+// ---------------------------------------------------------------------------
+// per vertex
+// ---------------------------------------------------------------------------
+
+/// COUNT-V via Sort/Hash/Hist into a rank-indexed atomic array.
+pub fn per_vertex_agg(rg: &RankedGraph, opts: &CountOpts, out: &[AtomicU64]) {
+    let counts = wedges::source_wedge_counts(rg, opts.cache_opt);
+    for chunk in wedges::chunk_sources(&counts, opts.max_wedges) {
+        match opts.agg {
+            WedgeAgg::Sort => per_vertex_sort(rg, opts, out, chunk, &counts),
+            WedgeAgg::Hash | WedgeAgg::Hist => per_vertex_table(rg, opts, out, chunk, &counts),
+            _ => unreachable!(),
+        }
+    }
+}
+
+fn per_vertex_sort(
+    rg: &RankedGraph,
+    opts: &CountOpts,
+    out: &[AtomicU64],
+    chunk: std::ops::Range<usize>,
+    counts: &[usize],
+) {
+    let mut recs = wedges::materialize(rg, opts.cache_opt, chunk, counts);
+    par_sort_by_key(&mut recs, |w| w.key());
+    match opts.bfly {
+        BflyAgg::Atomic => {
+            for_each_segment(&recs, |w| w.key(), |s, e| {
+                let d = (e - s) as u64;
+                let (x1, x2) = key_endpoints(recs[s].key());
+                atomic_add(&out[x1 as usize], choose2(d));
+                atomic_add(&out[x2 as usize], choose2(d));
+                for w in &recs[s..e] {
+                    atomic_add(&out[w.center as usize], d - 1);
+                }
+            });
+        }
+        BflyAgg::Reagg => {
+            let sink = DeltaSink::new();
+            for_each_segment(&recs, |w| w.key(), |s, e| {
+                let d = (e - s) as u64;
+                let (x1, x2) = key_endpoints(recs[s].key());
+                let mut local = Vec::with_capacity(e - s + 2);
+                local.push((x1, choose2(d)));
+                local.push((x2, choose2(d)));
+                if d > 1 {
+                    for w in &recs[s..e] {
+                        local.push((w.center, d - 1));
+                    }
+                }
+                sink.push_batch(local);
+            });
+            reagg_apply(sink.into_vec(), out);
+        }
+    }
+}
+
+/// Hash & Hist share the two-pass structure: build a key->d lookup,
+/// credit endpoints from the aggregate, credit centers in a second
+/// wedge sweep (GET-WEDGES-FUNC(f) on line 8 of Algorithm 3).
+fn per_vertex_table(
+    rg: &RankedGraph,
+    opts: &CountOpts,
+    out: &[AtomicU64],
+    chunk: std::ops::Range<usize>,
+    counts: &[usize],
+) {
+    let nw: usize = counts[chunk.clone()].iter().sum();
+    let table = CountTable::with_capacity(nw.max(1));
+    if opts.agg == WedgeAgg::Hash {
+        wedges::for_each_wedge(rg, opts.cache_opt, chunk.clone(), |w| {
+            table.insert_add(w.key(), 1)
+        });
+    } else {
+        // Hist: parallel histogram first, then load the lookup table.
+        let recs = wedges::materialize(rg, opts.cache_opt, chunk.clone(), counts);
+        let keys: Vec<u64> = recs.iter().map(|w| w.key()).collect();
+        let h = histogram(&keys);
+        parallel_for_dynamic(h.len(), 256, |r| {
+            for &(k, d) in &h[r] {
+                table.insert_add(k, d);
+            }
+        });
+    }
+    match opts.bfly {
+        BflyAgg::Atomic => {
+            table.for_each(|k, d| {
+                let (x1, x2) = key_endpoints(k);
+                atomic_add(&out[x1 as usize], choose2(d));
+                atomic_add(&out[x2 as usize], choose2(d));
+            });
+            wedges::for_each_wedge(rg, opts.cache_opt, chunk, |w| {
+                let d = table.get(w.key());
+                atomic_add(&out[w.center as usize], d - 1);
+            });
+        }
+        BflyAgg::Reagg => {
+            // Re-aggregate through a vertex-keyed additive table.
+            let vt = CountTable::with_capacity(rg.n());
+            table.for_each(|k, d| {
+                if d > 1 {
+                    let (x1, x2) = key_endpoints(k);
+                    vt.insert_add(x1 as u64, choose2(d));
+                    vt.insert_add(x2 as u64, choose2(d));
+                }
+            });
+            wedges::for_each_wedge(rg, opts.cache_opt, chunk, |w| {
+                let d = table.get(w.key());
+                if d > 1 {
+                    vt.insert_add(w.center as u64, d - 1);
+                }
+            });
+            vt.for_each(|v, delta| atomic_add(&out[v as usize], delta));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per edge
+// ---------------------------------------------------------------------------
+
+/// COUNT-E via Sort/Hash/Hist into an edge-id-indexed atomic array.
+pub fn per_edge_agg(rg: &RankedGraph, opts: &CountOpts, out: &[AtomicU64]) {
+    let counts = wedges::source_wedge_counts(rg, opts.cache_opt);
+    for chunk in wedges::chunk_sources(&counts, opts.max_wedges) {
+        match opts.agg {
+            WedgeAgg::Sort => per_edge_sort(rg, opts, out, chunk, &counts),
+            WedgeAgg::Hash | WedgeAgg::Hist => per_edge_table(rg, opts, out, chunk, &counts),
+            _ => unreachable!(),
+        }
+    }
+}
+
+fn per_edge_sort(
+    rg: &RankedGraph,
+    opts: &CountOpts,
+    out: &[AtomicU64],
+    chunk: std::ops::Range<usize>,
+    counts: &[usize],
+) {
+    let mut recs = wedges::materialize(rg, opts.cache_opt, chunk, counts);
+    par_sort_by_key(&mut recs, |w| w.key());
+    match opts.bfly {
+        BflyAgg::Atomic => {
+            for_each_segment(&recs, |w| w.key(), |s, e| {
+                let d = (e - s) as u64;
+                if d > 1 {
+                    for w in &recs[s..e] {
+                        atomic_add(&out[w.e_lo as usize], d - 1);
+                        atomic_add(&out[w.e_hi as usize], d - 1);
+                    }
+                }
+            });
+        }
+        BflyAgg::Reagg => {
+            let sink = DeltaSink::new();
+            for_each_segment(&recs, |w| w.key(), |s, e| {
+                let d = (e - s) as u64;
+                if d > 1 {
+                    let mut local = Vec::with_capacity(2 * (e - s));
+                    for w in &recs[s..e] {
+                        local.push((w.e_lo, d - 1));
+                        local.push((w.e_hi, d - 1));
+                    }
+                    sink.push_batch(local);
+                }
+            });
+            reagg_apply(sink.into_vec(), out);
+        }
+    }
+}
+
+fn per_edge_table(
+    rg: &RankedGraph,
+    opts: &CountOpts,
+    out: &[AtomicU64],
+    chunk: std::ops::Range<usize>,
+    counts: &[usize],
+) {
+    let nw: usize = counts[chunk.clone()].iter().sum();
+    let table = CountTable::with_capacity(nw.max(1));
+    if opts.agg == WedgeAgg::Hash {
+        wedges::for_each_wedge(rg, opts.cache_opt, chunk.clone(), |w| {
+            table.insert_add(w.key(), 1)
+        });
+    } else {
+        let recs = wedges::materialize(rg, opts.cache_opt, chunk.clone(), counts);
+        let keys: Vec<u64> = recs.iter().map(|w| w.key()).collect();
+        let h = histogram(&keys);
+        parallel_for_dynamic(h.len(), 256, |r| {
+            for &(k, d) in &h[r] {
+                table.insert_add(k, d);
+            }
+        });
+    }
+    let credit = |w: &Wedge, sink: Option<&CountTable>| {
+        let d = table.get(w.key());
+        if d > 1 {
+            match sink {
+                None => {
+                    atomic_add(&out[w.e_lo as usize], d - 1);
+                    atomic_add(&out[w.e_hi as usize], d - 1);
+                }
+                Some(et) => {
+                    et.insert_add(w.e_lo as u64, d - 1);
+                    et.insert_add(w.e_hi as u64, d - 1);
+                }
+            }
+        }
+    };
+    match opts.bfly {
+        BflyAgg::Atomic => {
+            wedges::for_each_wedge(rg, opts.cache_opt, chunk, |w| credit(&w, None));
+        }
+        BflyAgg::Reagg => {
+            let et = CountTable::with_capacity(2 * rg.m());
+            wedges::for_each_wedge(rg, opts.cache_opt, chunk, |w| credit(&w, Some(&et)));
+            et.for_each(|e, delta| atomic_add(&out[e as usize], delta));
+        }
+    }
+}

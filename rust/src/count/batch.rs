@@ -1,0 +1,178 @@
+//! Batching wedge aggregation (§3.1.2, partially parallel).
+//!
+//! Sources are processed in parallel; each worker owns a dense
+//! `n`-slot count array and aggregates the wedges of one source at a
+//! time *serially* — "an array large enough to contain all possible
+//! second endpoints".  Butterfly counts go straight into the output via
+//! atomic adds (batching supports only atomic butterfly aggregation —
+//! footnote 4).
+//!
+//! * **BatchS** (simple): static contiguous split of the sources over
+//!   workers — best locality, but skewed wedge counts imbalance work.
+//! * **BatchWA** (wedge-aware): workers claim small source ranges from
+//!   an atomic counter, dynamically balancing by actual wedge work.
+//!
+//! Note a key's wedges all live within one source, so the per-source
+//! serial aggregation sees every wedge of each key — `C(d, 2)` is
+//! computed on complete multiplicities.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use super::wedges::{wedges_of_source, Wedge};
+use super::{atomic_add, choose2};
+use crate::graph::RankedGraph;
+use crate::prims::pool::num_threads;
+
+/// Per-worker scratch: dense second-endpoint counts, touched list, and
+/// the materialized wedges of the current source.
+struct Scratch {
+    cnt: Vec<u32>,
+    touched: Vec<u32>,
+    wbuf: Vec<Wedge>,
+}
+
+impl Scratch {
+    fn new(n: usize) -> Self {
+        Self { cnt: vec![0u32; n], touched: Vec::new(), wbuf: Vec::new() }
+    }
+}
+
+/// Dynamic-claim grain for BatchWA (sources per claim).
+const WA_GRAIN: usize = 8;
+
+/// Run `handle(src, scratch)` for every source, with per-worker scratch
+/// reuse.  `dynamic` picks BatchWA scheduling, otherwise BatchS.
+/// `need_wedges` controls whether the per-source wedges are buffered
+/// (§Perf: total counting only needs the per-endpoint multiplicities,
+/// so skipping the 16-byte-per-wedge buffer removes most of its memory
+/// traffic).
+fn run_batch(
+    rg: &RankedGraph,
+    cache_opt: bool,
+    dynamic: bool,
+    need_wedges: bool,
+    handle: impl Fn(usize, &mut Scratch) + Sync,
+) {
+    let n = rg.n();
+    let t = num_threads();
+    // Fill the per-source scratch: count wedges by second endpoint.
+    let fill = |src: usize, s: &mut Scratch| {
+        s.wbuf.clear();
+        s.touched.clear();
+        if need_wedges {
+            wedges_of_source(rg, cache_opt, src, |w| {
+                let other = if cache_opt { w.lo } else { w.hi };
+                if s.cnt[other as usize] == 0 {
+                    s.touched.push(other);
+                }
+                s.cnt[other as usize] += 1;
+                s.wbuf.push(w);
+            });
+        } else {
+            wedges_of_source(rg, cache_opt, src, |w| {
+                let other = if cache_opt { w.lo } else { w.hi };
+                if s.cnt[other as usize] == 0 {
+                    s.touched.push(other);
+                }
+                s.cnt[other as usize] += 1;
+            });
+        }
+    };
+    let reset = |s: &mut Scratch| {
+        for &o in &s.touched {
+            s.cnt[o as usize] = 0;
+        }
+    };
+    if t <= 1 {
+        let mut s = Scratch::new(n);
+        for src in 0..n {
+            fill(src, &mut s);
+            handle(src, &mut s);
+            reset(&mut s);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let nworkers = t.min(n.max(1));
+    let chunk = n.div_ceil(nworkers);
+    std::thread::scope(|sc| {
+        for wid in 0..nworkers {
+            let (fill, handle, reset, next) = (&fill, &handle, &reset, &next);
+            sc.spawn(move || {
+                let mut s = Scratch::new(n);
+                if dynamic {
+                    loop {
+                        let lo = next.fetch_add(WA_GRAIN, Ordering::Relaxed);
+                        if lo >= n {
+                            break;
+                        }
+                        for src in lo..(lo + WA_GRAIN).min(n) {
+                            fill(src, &mut s);
+                            handle(src, &mut s);
+                            reset(&mut s);
+                        }
+                    }
+                } else {
+                    let lo = wid * chunk;
+                    let hi = ((wid + 1) * chunk).min(n);
+                    for src in lo..hi {
+                        fill(src, &mut s);
+                        handle(src, &mut s);
+                        reset(&mut s);
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Global count via batching.
+pub fn total_batch(rg: &RankedGraph, cache_opt: bool, dynamic: bool) -> u64 {
+    let acc = AtomicU64::new(0);
+    run_batch(rg, cache_opt, dynamic, false, |_src, s| {
+        let mut local = 0u64;
+        for &o in &s.touched {
+            local += choose2(s.cnt[o as usize] as u64);
+        }
+        atomic_add(&acc, local);
+    });
+    acc.into_inner()
+}
+
+/// COUNT-V via batching (rank-indexed output).
+pub fn per_vertex_batch(rg: &RankedGraph, cache_opt: bool, dynamic: bool, out: &[AtomicU64]) {
+    run_batch(rg, cache_opt, dynamic, true, |src, s| {
+        // Endpoints: the source and each distinct second endpoint gain
+        // C(d, 2); the source's own contribution accumulates locally.
+        let mut src_total = 0u64;
+        for &o in &s.touched {
+            let d = s.cnt[o as usize] as u64;
+            let b = choose2(d);
+            if b > 0 {
+                src_total += b;
+                atomic_add(&out[o as usize], b);
+            }
+        }
+        atomic_add(&out[src], src_total);
+        // Centers: d - 1 per wedge.
+        for w in &s.wbuf {
+            let other = if cache_opt { w.lo } else { w.hi };
+            let d = s.cnt[other as usize] as u64;
+            atomic_add(&out[w.center as usize], d - 1);
+        }
+    });
+}
+
+/// COUNT-E via batching (edge-id-indexed output).
+pub fn per_edge_batch(rg: &RankedGraph, cache_opt: bool, dynamic: bool, out: &[AtomicU64]) {
+    run_batch(rg, cache_opt, dynamic, true, |_src, s| {
+        for w in &s.wbuf {
+            let other = if cache_opt { w.lo } else { w.hi };
+            let d = s.cnt[other as usize] as u64;
+            if d > 1 {
+                atomic_add(&out[w.e_lo as usize], d - 1);
+                atomic_add(&out[w.e_hi as usize], d - 1);
+            }
+        }
+    });
+}

@@ -1,0 +1,154 @@
+//! Dense-core accelerator: butterfly counting for dense blocks through
+//! the AOT-compiled Layer-1/2 artifacts (see DESIGN.md
+//! §Hardware-Adaptation).
+//!
+//! Use cases:
+//! * counting whole small-but-dense graphs (fits a `<=512x512` tile);
+//! * the **hybrid** path: extract the dense core (the top-degree
+//!   vertices that degree ordering fronts), count core-internal
+//!   butterflies on the MXU-shaped artifact, and count the remaining
+//!   wedge work on the sparse CPU path.
+//!
+//! For the hybrid split, butterflies are partitioned by *how many of
+//! their two U-side (and two V-side) vertices are in the core*;
+//! counting the core-induced subgraph densely and the complement of the
+//! core-internal butterflies sparsely requires inclusion–exclusion:
+//!   total(G) = total_sparse(G \ core-internal-edges ∪ ...)
+//! which does not decompose cleanly edge-wise.  We therefore use the
+//! paper-faithful decomposition instead: count on the full graph with
+//! the sparse path but *skip pairs entirely inside the core*, and add
+//! the dense core count.  A pair (x1, x2) is "inside the core" iff both
+//! endpoints and all centers... — centers matter too, so the clean cut
+//! is on **edges**: the dense engine counts the subgraph induced by the
+//! core's edges, the sparse engine counts butterflies that use at least
+//! one non-core vertex, on the graph with core-only butterflies
+//! excluded by removing no edges but filtering counted pairs.  That
+//! filtering is exact for butterflies (4 vertices: all-in-core or not),
+//! implemented in [`count_total_hybrid`].
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::Result;
+
+use crate::graph::BipartiteGraph;
+use crate::runtime::Engine;
+
+use super::{choose2, wedges, CountOpts};
+use crate::rank::preprocess;
+
+/// Counts from the dense path, mapped back to graph ids.
+pub struct DenseCounts {
+    pub total: u64,
+    pub bu: Vec<u64>,
+    pub bv: Vec<u64>,
+    /// Per-edge counts aligned with the graph's edge ids.
+    pub be: Vec<u64>,
+}
+
+/// Count a whole graph on the dense artifact (must fit an available
+/// artifact shape after padding).
+pub fn count_dense(g: &BipartiteGraph, engine: &Engine) -> Result<DenseCounts> {
+    let spec = engine
+        .pick("count_dense", g.nu(), g.nv())
+        .ok_or_else(|| anyhow::anyhow!("no dense artifact fits {}x{}", g.nu(), g.nv()))?;
+    let (pu, pv) = (spec.u, spec.v);
+    let a = g.to_dense_f32(pu, pv);
+    let out = engine.count_dense(pu, pv, &a)?;
+    let total = out.total.round() as u64;
+    let bu: Vec<u64> = out.bu[..g.nu()].iter().map(|&x| x.round() as u64).collect();
+    let bv: Vec<u64> = out.bv[..g.nv()].iter().map(|&x| x.round() as u64).collect();
+    let mut be = vec![0u64; g.m()];
+    for u in 0..g.nu() {
+        for (i, &v) in g.nbrs_u(u).iter().enumerate() {
+            let eid = g.eid_u(u, i) as usize;
+            be[eid] = out.be[u * pv + v as usize].round() as u64;
+        }
+    }
+    Ok(DenseCounts { total, bu, bv, be })
+}
+
+/// Total count on the dense artifact only.
+pub fn count_total_dense(g: &BipartiteGraph, engine: &Engine) -> Result<u64> {
+    let spec = engine
+        .pick("count_total", g.nu(), g.nv())
+        .ok_or_else(|| anyhow::anyhow!("no dense artifact fits {}x{}", g.nu(), g.nv()))?;
+    let a = g.to_dense_f32(spec.u, spec.v);
+    Ok(engine.count_total(spec.u, spec.v, &a)?.round() as u64)
+}
+
+/// Hybrid dense/sparse total count.
+///
+/// The core is the top `core_u x core_v` vertices by degree.  The dense
+/// engine counts butterflies entirely inside the core; the sparse path
+/// counts every remaining butterfly by enumerating all wedges but
+/// splitting each endpoint-pair's multiplicity `d` into core-internal
+/// centers `dc` vs rest: pairs fully in the core contribute
+/// `C(d,2) - C(dc,2)` (their all-core butterflies are the dense
+/// engine's), every other pair contributes `C(d,2)`.
+pub fn count_total_hybrid(
+    g: &BipartiteGraph,
+    engine: &Engine,
+    core_u: usize,
+    core_v: usize,
+    opts: &CountOpts,
+) -> Result<u64> {
+    let core_u = core_u.min(g.nu());
+    let core_v = core_v.min(g.nv());
+    // Core membership: top-degree vertices per side.
+    let top = |n: usize, k: usize, deg: &dyn Fn(usize) -> usize| -> Vec<bool> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by_key(|&i| std::cmp::Reverse(deg(i)));
+        let mut keep = vec![false; n];
+        for &i in idx.iter().take(k) {
+            keep[i] = true;
+        }
+        keep
+    };
+    let in_core_u = top(g.nu(), core_u, &|u| g.deg_u(u));
+    let in_core_v = top(g.nv(), core_v, &|v| g.deg_v(v));
+
+    // Dense side: the induced core subgraph.
+    let core = g.induced(&in_core_u, &in_core_v);
+    let dense_total = count_total_dense(&core, engine)?;
+
+    // Sparse side: full wedge enumeration with all-core butterflies
+    // excluded pair-by-pair.
+    let rg = preprocess(g, opts.ranking);
+    let nu = g.nu();
+    let in_core = |rank: u32| -> bool {
+        let gid = rg.orig(rank as usize) as usize;
+        if gid < nu {
+            in_core_u[gid]
+        } else {
+            in_core_v[gid - nu]
+        }
+    };
+    // Aggregate per pair: total multiplicity d and core-center
+    // multiplicity dc; contribution = C(d,2) minus (C(dc,2) if the pair
+    // itself is all-core).
+    let table = crate::prims::hashtable::CountTable::with_capacity(
+        rg.wedges_processed().max(4) as usize,
+    );
+    wedges::for_each_wedge(&rg, opts.cache_opt, 0..rg.n(), |w| {
+        // Pack (d, dc) in one counter: low 32 bits d, high 32 bits dc.
+        let core_center = in_core(w.center) && in_core(w.lo) && in_core(w.hi);
+        table.insert_add(w.key(), if core_center { (1 << 32) | 1 } else { 1 });
+    });
+    let acc = AtomicU64::new(0);
+    table.for_each(|_k, packed| {
+        let d = packed & 0xffff_ffff;
+        let dc = packed >> 32;
+        let contrib = choose2(d) - choose2(dc);
+        if contrib > 0 {
+            acc.fetch_add(contrib, Ordering::Relaxed);
+        }
+    });
+    Ok(dense_total + acc.into_inner())
+}
+
+/// Convenience: does an artifact directory exist with a manifest?
+pub fn artifacts_available() -> bool {
+    let dir = std::env::var("PARBUTTERFLY_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    Path::new(&dir).join("manifest.txt").exists()
+}

@@ -1,0 +1,270 @@
+//! Butterfly counting (§3.1, §4.2): global, per-vertex, and per-edge,
+//! parameterized over wedge-aggregation strategy, butterfly-aggregation
+//! mode, ranking, the cache optimization, and a wedge-memory budget.
+//!
+//! * [`wedges`] — GET-WEDGES (Algorithm 2) + cache-optimized variant.
+//! * [`agg`] — the fully-parallel aggregations: Sort, Hash, Hist.
+//! * [`batch`] — the partially-parallel batching aggregations: BatchS
+//!   (simple, static chunking) and BatchWA (wedge-aware, dynamic).
+//! * [`sparsify`] — approximate counting via edge / colorful
+//!   sparsification (§4.4).
+//! * [`dense`] — the PJRT dense-core accelerator (Layer 1/2 artifacts).
+
+pub mod agg;
+pub mod batch;
+pub mod dense;
+pub mod sparsify;
+pub mod wedges;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::graph::{BipartiteGraph, RankedGraph};
+use crate::rank::{preprocess, Ranking};
+
+/// Wedge-aggregation strategy (§3.1.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WedgeAgg {
+    Sort,
+    Hash,
+    Hist,
+    BatchS,
+    BatchWA,
+}
+
+impl WedgeAgg {
+    pub const ALL: [WedgeAgg; 5] =
+        [WedgeAgg::Sort, WedgeAgg::Hash, WedgeAgg::Hist, WedgeAgg::BatchS, WedgeAgg::BatchWA];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WedgeAgg::Sort => "sort",
+            WedgeAgg::Hash => "hash",
+            WedgeAgg::Hist => "hist",
+            WedgeAgg::BatchS => "batchs",
+            WedgeAgg::BatchWA => "batchwa",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WedgeAgg> {
+        WedgeAgg::ALL.into_iter().find(|a| a.name() == s)
+    }
+}
+
+/// Butterfly-aggregation mode (§3.1.3): atomic adds into the output
+/// array, or re-aggregation through the wedge-aggregation machinery.
+/// Batching supports only atomic adds (footnote 4 of the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BflyAgg {
+    Atomic,
+    Reagg,
+}
+
+/// Options for a counting run.
+#[derive(Clone, Debug)]
+pub struct CountOpts {
+    pub ranking: Ranking,
+    pub agg: WedgeAgg,
+    pub bfly: BflyAgg,
+    /// Enumerate wedges from the higher-ranked endpoint (Wang et al.).
+    pub cache_opt: bool,
+    /// Memory budget: maximum wedges materialized/aggregated at once
+    /// (§3.1.4).  Chunks split at source-vertex boundaries, which keeps
+    /// every wedge key inside one chunk.
+    pub max_wedges: usize,
+}
+
+impl Default for CountOpts {
+    fn default() -> Self {
+        Self {
+            ranking: Ranking::Degree,
+            agg: WedgeAgg::BatchS,
+            bfly: BflyAgg::Atomic,
+            cache_opt: false,
+            max_wedges: 1 << 26,
+        }
+    }
+}
+
+/// Per-vertex butterfly counts in original id space.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VertexCounts {
+    pub bu: Vec<u64>,
+    pub bv: Vec<u64>,
+}
+
+/// `C(d, 2)` as u64.
+#[inline]
+pub(crate) fn choose2(d: u64) -> u64 {
+    d * d.saturating_sub(1) / 2
+}
+
+/// Global butterfly count (COUNT framework, total mode).
+pub fn count_total(g: &BipartiteGraph, opts: &CountOpts) -> u64 {
+    let rg = preprocess(g, opts.ranking);
+    count_total_ranked(&rg, opts)
+}
+
+/// Total count on an already-preprocessed graph.
+pub fn count_total_ranked(rg: &RankedGraph, opts: &CountOpts) -> u64 {
+    match opts.agg {
+        WedgeAgg::BatchS => batch::total_batch(rg, opts.cache_opt, false),
+        WedgeAgg::BatchWA => batch::total_batch(rg, opts.cache_opt, true),
+        _ => agg::total_agg(rg, opts),
+    }
+}
+
+/// Per-vertex butterfly counts (COUNT-V, Algorithm 3).
+pub fn count_per_vertex(g: &BipartiteGraph, opts: &CountOpts) -> VertexCounts {
+    let rg = preprocess(g, opts.ranking);
+    let counts = count_per_vertex_ranked(&rg, opts);
+    // Scatter rank-space counts back to original side-local ids.
+    let nu = g.nu();
+    let mut bu = vec![0u64; nu];
+    let mut bv = vec![0u64; g.nv()];
+    for x in 0..rg.n() {
+        let gid = rg.orig(x) as usize;
+        if gid < nu {
+            bu[gid] = counts[x];
+        } else {
+            bv[gid - nu] = counts[x];
+        }
+    }
+    VertexCounts { bu, bv }
+}
+
+/// Per-vertex counts in *rank space* on a preprocessed graph.
+pub fn count_per_vertex_ranked(rg: &RankedGraph, opts: &CountOpts) -> Vec<u64> {
+    let counts: Vec<AtomicU64> = (0..rg.n()).map(|_| AtomicU64::new(0)).collect();
+    match opts.agg {
+        WedgeAgg::BatchS => batch::per_vertex_batch(rg, opts.cache_opt, false, &counts),
+        WedgeAgg::BatchWA => batch::per_vertex_batch(rg, opts.cache_opt, true, &counts),
+        _ => agg::per_vertex_agg(rg, opts, &counts),
+    }
+    counts.into_iter().map(|c| c.into_inner()).collect()
+}
+
+/// Per-edge butterfly counts indexed by edge id (COUNT-E, Algorithm 4).
+pub fn count_per_edge(g: &BipartiteGraph, opts: &CountOpts) -> Vec<u64> {
+    let rg = preprocess(g, opts.ranking);
+    count_per_edge_ranked(&rg, g.m(), opts)
+}
+
+/// Per-edge counts on a preprocessed graph (`m` = edge count).
+pub fn count_per_edge_ranked(rg: &RankedGraph, m: usize, opts: &CountOpts) -> Vec<u64> {
+    let counts: Vec<AtomicU64> = (0..m).map(|_| AtomicU64::new(0)).collect();
+    match opts.agg {
+        WedgeAgg::BatchS => batch::per_edge_batch(rg, opts.cache_opt, false, &counts),
+        WedgeAgg::BatchWA => batch::per_edge_batch(rg, opts.cache_opt, true, &counts),
+        _ => agg::per_edge_agg(rg, opts, &counts),
+    }
+    counts.into_iter().map(|c| c.into_inner()).collect()
+}
+
+/// Shared atomic-add helper.
+#[inline]
+pub(crate) fn atomic_add(a: &AtomicU64, v: u64) {
+    if v != 0 {
+        a.fetch_add(v, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::testutil::brute;
+
+    fn all_opt_combos() -> Vec<CountOpts> {
+        let mut v = Vec::new();
+        for ranking in Ranking::ALL {
+            for agg in WedgeAgg::ALL {
+                for cache_opt in [false, true] {
+                    for bfly in [BflyAgg::Atomic, BflyAgg::Reagg] {
+                        v.push(CountOpts { ranking, agg, bfly, cache_opt, max_wedges: 1 << 26 });
+                    }
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn fig1_has_three_butterflies() {
+        let g = BipartiteGraph::from_edges(
+            3,
+            3,
+            &[(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2), (2, 2)],
+        );
+        for opts in all_opt_combos() {
+            assert_eq!(count_total(&g, &opts), 3, "{opts:?}");
+        }
+    }
+
+    #[test]
+    fn complete_bipartite_closed_form() {
+        let g = gen::complete_bipartite(5, 7);
+        let expect = choose2(5) * choose2(7); // C(5,2)*C(7,2) = 210
+        for opts in all_opt_combos() {
+            assert_eq!(count_total(&g, &opts), expect, "{opts:?}");
+        }
+    }
+
+    #[test]
+    fn every_combo_matches_brute_force_total() {
+        for seed in [3, 4] {
+            let g = gen::erdos_renyi(25, 30, 220, seed);
+            let expect = brute::total(&g);
+            for opts in all_opt_combos() {
+                assert_eq!(count_total(&g, &opts), expect, "seed={seed} {opts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_combo_matches_brute_force_per_vertex() {
+        let g = gen::erdos_renyi(20, 22, 160, 9);
+        let (eu, ev) = brute::per_vertex(&g);
+        for opts in all_opt_combos() {
+            let vc = count_per_vertex(&g, &opts);
+            assert_eq!(vc.bu, eu, "{opts:?}");
+            assert_eq!(vc.bv, ev, "{opts:?}");
+        }
+    }
+
+    #[test]
+    fn every_combo_matches_brute_force_per_edge() {
+        let g = gen::erdos_renyi(18, 20, 140, 5);
+        let expect = brute::per_edge(&g);
+        for opts in all_opt_combos() {
+            assert_eq!(count_per_edge(&g, &opts), expect, "{opts:?}");
+        }
+    }
+
+    #[test]
+    fn chunked_wedge_processing_is_exact() {
+        let g = gen::chung_lu(80, 120, 1500, 2.2, 6);
+        let baseline = count_total(&g, &CountOpts::default());
+        for agg in [WedgeAgg::Sort, WedgeAgg::Hash, WedgeAgg::Hist] {
+            for max_wedges in [16, 257, 4096] {
+                let opts = CountOpts { agg, max_wedges, ..CountOpts::default() };
+                assert_eq!(count_total(&g, &opts), baseline, "agg={agg:?} cap={max_wedges}");
+                let vc = count_per_vertex(&g, &opts);
+                let full =
+                    count_per_vertex(&g, &CountOpts { agg, ..CountOpts::default() });
+                assert_eq!(vc, full);
+            }
+        }
+    }
+
+    #[test]
+    fn davis_counts_are_consistent() {
+        let g = gen::davis_southern_women();
+        let total = count_total(&g, &CountOpts::default());
+        assert_eq!(total, brute::total(&g));
+        let vc = count_per_vertex(&g, &CountOpts::default());
+        assert_eq!(vc.bu.iter().sum::<u64>(), 2 * total);
+        assert_eq!(vc.bv.iter().sum::<u64>(), 2 * total);
+        let pe = count_per_edge(&g, &CountOpts::default());
+        assert_eq!(pe.iter().sum::<u64>(), 4 * total);
+    }
+}

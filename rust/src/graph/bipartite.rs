@@ -1,0 +1,327 @@
+//! CSR bipartite graph.
+//!
+//! Vertices are `0..nu` on the U side and `0..nv` on the V side (ids are
+//! side-local).  Both adjacency directions are stored; each undirected
+//! edge has a single **edge id** — its position in the U-side CSR — and
+//! the V-side CSR carries a parallel `edge id` array so per-edge
+//! algorithms can reach the canonical id from either direction.
+//! Construction removes duplicate edges (the paper's KONECT
+//! preprocessing removes self-loops and multi-edges; bipartite graphs
+//! have no self-loops by construction).
+
+use crate::prims::sort::par_sort;
+
+/// A simple undirected bipartite graph in CSR form.
+#[derive(Clone, Debug)]
+pub struct BipartiteGraph {
+    nu: usize,
+    nv: usize,
+    off_u: Vec<usize>,
+    adj_u: Vec<u32>, // neighbor v ids, sorted increasing; index = edge id
+    off_v: Vec<usize>,
+    adj_v: Vec<u32>, // neighbor u ids, sorted increasing
+    eid_v: Vec<u32>, // edge id of each V-side slot
+}
+
+impl BipartiteGraph {
+    /// Build from an edge list; duplicates are removed, ids validated.
+    pub fn from_edges(nu: usize, nv: usize, edges: &[(u32, u32)]) -> Self {
+        assert!(nu < u32::MAX as usize && nv < u32::MAX as usize);
+        let mut packed: Vec<u64> = edges
+            .iter()
+            .map(|&(u, v)| {
+                assert!((u as usize) < nu, "u id {u} out of range {nu}");
+                assert!((v as usize) < nv, "v id {v} out of range {nv}");
+                ((u as u64) << 32) | v as u64
+            })
+            .collect();
+        par_sort(&mut packed);
+        packed.dedup();
+
+        let m = packed.len();
+        // U-side CSR (packed is sorted by (u, v) already).
+        let mut off_u = vec![0usize; nu + 1];
+        for &e in &packed {
+            off_u[(e >> 32) as usize + 1] += 1;
+        }
+        for i in 0..nu {
+            off_u[i + 1] += off_u[i];
+        }
+        let adj_u: Vec<u32> = packed.iter().map(|&e| e as u32).collect();
+
+        // V-side CSR with edge ids.
+        let mut off_v = vec![0usize; nv + 1];
+        for &e in &packed {
+            off_v[(e & 0xffff_ffff) as usize + 1] += 1;
+        }
+        for i in 0..nv {
+            off_v[i + 1] += off_v[i];
+        }
+        let mut adj_v = vec![0u32; m];
+        let mut eid_v = vec![0u32; m];
+        let mut cursor = off_v.clone();
+        for (eid, &e) in packed.iter().enumerate() {
+            let u = (e >> 32) as u32;
+            let v = (e & 0xffff_ffff) as usize;
+            adj_v[cursor[v]] = u;
+            eid_v[cursor[v]] = eid as u32;
+            cursor[v] += 1;
+        }
+        Self { nu, nv, off_u, adj_u, off_v, adj_v, eid_v }
+    }
+
+    /// Number of U-side vertices.
+    #[inline]
+    pub fn nu(&self) -> usize {
+        self.nu
+    }
+
+    /// Number of V-side vertices.
+    #[inline]
+    pub fn nv(&self) -> usize {
+        self.nv
+    }
+
+    /// Total vertex count `n = |U| + |V|`.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.nu + self.nv
+    }
+
+    /// Number of (deduplicated) edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.adj_u.len()
+    }
+
+    /// Neighbors of U-side vertex `u` (sorted v ids).
+    #[inline]
+    pub fn nbrs_u(&self, u: usize) -> &[u32] {
+        &self.adj_u[self.off_u[u]..self.off_u[u + 1]]
+    }
+
+    /// Neighbors of V-side vertex `v` (sorted u ids).
+    #[inline]
+    pub fn nbrs_v(&self, v: usize) -> &[u32] {
+        &self.adj_v[self.off_v[v]..self.off_v[v + 1]]
+    }
+
+    /// Edge ids parallel to [`Self::nbrs_v`].
+    #[inline]
+    pub fn eids_v(&self, v: usize) -> &[u32] {
+        &self.eid_v[self.off_v[v]..self.off_v[v + 1]]
+    }
+
+    /// Edge id of the `i`-th neighbor slot of U-side vertex `u`.
+    #[inline]
+    pub fn eid_u(&self, u: usize, i: usize) -> u32 {
+        (self.off_u[u] + i) as u32
+    }
+
+    #[inline]
+    pub fn deg_u(&self, u: usize) -> usize {
+        self.off_u[u + 1] - self.off_u[u]
+    }
+
+    #[inline]
+    pub fn deg_v(&self, v: usize) -> usize {
+        self.off_v[v + 1] - self.off_v[v]
+    }
+
+    /// The endpoints `(u, v)` of edge `eid`.
+    pub fn edge(&self, eid: u32) -> (u32, u32) {
+        let v = self.adj_u[eid as usize];
+        // Binary search the owning u via the offset array.
+        let u = self.off_u.partition_point(|&o| o <= eid as usize) - 1;
+        (u as u32, v)
+    }
+
+    /// Edge id of `(u, v)` if present (binary search in `nbrs_u(u)`).
+    pub fn edge_id(&self, u: usize, v: u32) -> Option<u32> {
+        let nbrs = self.nbrs_u(u);
+        nbrs.binary_search(&v).ok().map(|i| (self.off_u[u] + i) as u32)
+    }
+
+    /// All edges as `(u, v)` pairs, indexed by edge id.
+    pub fn edges(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.m());
+        for u in 0..self.nu {
+            for &v in self.nbrs_u(u) {
+                out.push((u as u32, v));
+            }
+        }
+        out
+    }
+
+    /// Σ_{u ∈ U} C(deg(u), 2) — wedges whose *center* is on the U side.
+    pub fn wedges_centered_u(&self) -> u64 {
+        (0..self.nu)
+            .map(|u| {
+                let d = self.deg_u(u) as u64;
+                d * d.saturating_sub(1) / 2
+            })
+            .sum()
+    }
+
+    /// Σ_{v ∈ V} C(deg(v), 2) — wedges whose *center* is on the V side.
+    pub fn wedges_centered_v(&self) -> u64 {
+        (0..self.nv)
+            .map(|v| {
+                let d = self.deg_v(v) as u64;
+                d * d.saturating_sub(1) / 2
+            })
+            .sum()
+    }
+
+    /// Maximum degree over both sides.
+    pub fn max_degree(&self) -> usize {
+        let du = (0..self.nu).map(|u| self.deg_u(u)).max().unwrap_or(0);
+        let dv = (0..self.nv).map(|v| self.deg_v(v)).max().unwrap_or(0);
+        du.max(dv)
+    }
+
+    /// Dense 0/1 adjacency (row-major U x V, f32) — feeds the PJRT
+    /// dense-core artifacts.  Caller guarantees `nu * nv` is sane.
+    pub fn to_dense_f32(&self, pad_u: usize, pad_v: usize) -> Vec<f32> {
+        assert!(pad_u >= self.nu && pad_v >= self.nv);
+        let mut a = vec![0f32; pad_u * pad_v];
+        for u in 0..self.nu {
+            for &v in self.nbrs_u(u) {
+                a[u * pad_v + v as usize] = 1.0;
+            }
+        }
+        a
+    }
+
+    /// Induced subgraph on vertex subsets (ids are compacted in order).
+    pub fn induced(&self, keep_u: &[bool], keep_v: &[bool]) -> BipartiteGraph {
+        assert_eq!(keep_u.len(), self.nu);
+        assert_eq!(keep_v.len(), self.nv);
+        let mut map_u = vec![u32::MAX; self.nu];
+        let mut map_v = vec![u32::MAX; self.nv];
+        let mut nu2 = 0u32;
+        for u in 0..self.nu {
+            if keep_u[u] {
+                map_u[u] = nu2;
+                nu2 += 1;
+            }
+        }
+        let mut nv2 = 0u32;
+        for v in 0..self.nv {
+            if keep_v[v] {
+                map_v[v] = nv2;
+                nv2 += 1;
+            }
+        }
+        let mut edges = Vec::new();
+        for u in 0..self.nu {
+            if !keep_u[u] {
+                continue;
+            }
+            for &v in self.nbrs_u(u) {
+                if keep_v[v as usize] {
+                    edges.push((map_u[u], map_v[v as usize]));
+                }
+            }
+        }
+        BipartiteGraph::from_edges(nu2 as usize, nv2 as usize, &edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn butterfly_graph() -> BipartiteGraph {
+        // Figure 1 of the paper: u1,u2,u3 x v1,v2,v3 with 3 butterflies.
+        // Edges: u1-v1 u1-v2 u1-v3 u2-v1 u2-v2 u2-v3 u3-v3.
+        BipartiteGraph::from_edges(
+            3,
+            3,
+            &[(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2), (2, 2)],
+        )
+    }
+
+    #[test]
+    fn csr_shapes() {
+        let g = butterfly_graph();
+        assert_eq!(g.nu(), 3);
+        assert_eq!(g.nv(), 3);
+        assert_eq!(g.n(), 6);
+        assert_eq!(g.m(), 7);
+        assert_eq!(g.nbrs_u(0), &[0, 1, 2]);
+        assert_eq!(g.nbrs_u(2), &[2]);
+        assert_eq!(g.nbrs_v(2), &[0, 1, 2]);
+        assert_eq!(g.deg_u(1), 3);
+        assert_eq!(g.deg_v(0), 2);
+    }
+
+    #[test]
+    fn dedup_and_ordering() {
+        let g = BipartiteGraph::from_edges(2, 2, &[(1, 1), (0, 0), (1, 1), (0, 0), (0, 1)]);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.nbrs_u(0), &[0, 1]);
+        assert_eq!(g.nbrs_u(1), &[1]);
+    }
+
+    #[test]
+    fn edge_ids_consistent_across_sides() {
+        let g = butterfly_graph();
+        for v in 0..g.nv() {
+            let nbrs = g.nbrs_v(v);
+            let eids = g.eids_v(v);
+            for (i, &u) in nbrs.iter().enumerate() {
+                let eid = eids[i];
+                assert_eq!(g.edge(eid), (u, v as u32));
+                assert_eq!(g.edge_id(u as usize, v as u32), Some(eid));
+            }
+        }
+    }
+
+    #[test]
+    fn edge_lookup_absent() {
+        let g = butterfly_graph();
+        assert_eq!(g.edge_id(2, 0), None);
+    }
+
+    #[test]
+    fn wedge_counts() {
+        let g = butterfly_graph();
+        // U degrees 3,3,1 -> C(3,2)*2 = 6 wedges centered U.
+        assert_eq!(g.wedges_centered_u(), 6);
+        // V degrees 2,2,3 -> 1+1+3 = 5 wedges centered V.
+        assert_eq!(g.wedges_centered_v(), 5);
+        assert_eq!(g.max_degree(), 3);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let g = butterfly_graph();
+        let a = g.to_dense_f32(4, 4);
+        assert_eq!(a.len(), 16);
+        assert_eq!(a[0], 1.0); // u0-v0
+        assert_eq!(a[2 * 4 + 2], 1.0); // u2-v2
+        assert_eq!(a[2 * 4 + 0], 0.0); // u2-v0 absent
+        assert_eq!(a[3 * 4 + 3], 0.0); // padding
+    }
+
+    #[test]
+    fn induced_subgraph() {
+        let g = butterfly_graph();
+        // Drop u3 and v3: K_{2,2} remains.
+        let sub = g.induced(&[true, true, false], &[true, true, false]);
+        assert_eq!(sub.nu(), 2);
+        assert_eq!(sub.nv(), 2);
+        assert_eq!(sub.m(), 4);
+    }
+
+    #[test]
+    fn edges_indexed_by_id() {
+        let g = butterfly_graph();
+        let es = g.edges();
+        assert_eq!(es.len(), g.m());
+        for (eid, &(u, v)) in es.iter().enumerate() {
+            assert_eq!(g.edge(eid as u32), (u, v));
+        }
+    }
+}

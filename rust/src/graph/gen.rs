@@ -1,0 +1,200 @@
+//! Synthetic bipartite workload generators + the embedded Davis graph.
+//!
+//! The paper evaluates on KONECT graphs (unavailable offline); these
+//! generators reproduce the *structural properties* that drive the
+//! paper's results (DESIGN.md §2):
+//!
+//! * [`erdos_renyi`] — near-regular degrees: the side-ordering `f`
+//!   metric is small, so side ordering wins (itwiki/livejournal-like).
+//! * [`chung_lu`] — power-law degrees: heavy skew makes degree-style
+//!   orderings process far fewer wedges (discogs/web-like).
+//! * [`planted_blocks`] — dense (2,2)-rich communities over sparse
+//!   noise: non-trivial tip/wing decompositions and few distinct
+//!   butterfly counts (discogs_style-like, the Table 4 extreme).
+//! * [`complete_bipartite`] — closed-form counts for tests.
+//! * [`davis_southern_women`] — the classic 18x14 real dataset
+//!   (Davis–Gardner–Gardner 1941), embedded for real-data smoke tests.
+
+use super::bipartite::BipartiteGraph;
+use crate::prims::rng::Pcg32;
+
+/// G(nu, nv, m) — sample `m` edges uniformly (dedup; the realized edge
+/// count can be slightly below `m`).
+pub fn erdos_renyi(nu: usize, nv: usize, m: usize, seed: u64) -> BipartiteGraph {
+    let mut r = Pcg32::new(seed);
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let u = r.next_below(nu as u64) as u32;
+        let v = r.next_below(nv as u64) as u32;
+        edges.push((u, v));
+    }
+    BipartiteGraph::from_edges(nu, nv, &edges)
+}
+
+/// Chung-Lu bipartite power-law: vertex weights `w_i ∝ (i+1)^(-1/(β-1))`
+/// on both sides; `m` edges sampled with probability proportional to
+/// `w_u * w_v` (dedup).  `beta` ≈ 2.1–2.5 matches web-scale bipartite
+/// degree distributions.
+pub fn chung_lu(nu: usize, nv: usize, m: usize, beta: f64, seed: u64) -> BipartiteGraph {
+    assert!(beta > 1.0);
+    let mut r = Pcg32::new(seed);
+    let exp = -1.0 / (beta - 1.0);
+    let cdf = |n: usize| -> Vec<f64> {
+        let mut acc = 0.0;
+        let mut c = Vec::with_capacity(n);
+        for i in 0..n {
+            acc += ((i + 1) as f64).powf(exp);
+            c.push(acc);
+        }
+        c
+    };
+    let cu = cdf(nu);
+    let cv = cdf(nv);
+    let su = *cu.last().unwrap();
+    let sv = *cv.last().unwrap();
+    let sample = |c: &[f64], total: f64, r: &mut Pcg32| -> u32 {
+        let x = r.next_f64() * total;
+        c.partition_point(|&p| p < x).min(c.len() - 1) as u32
+    };
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        edges.push((sample(&cu, su, &mut r), sample(&cv, sv, &mut r)));
+    }
+    BipartiteGraph::from_edges(nu, nv, &edges)
+}
+
+/// `k` planted dense blocks of size `bu x bv` (each edge kept with
+/// probability `p_in`) over `noise_m` uniform background edges.
+pub fn planted_blocks(
+    nu: usize,
+    nv: usize,
+    k: usize,
+    bu: usize,
+    bv: usize,
+    p_in: f64,
+    noise_m: usize,
+    seed: u64,
+) -> BipartiteGraph {
+    assert!(k * bu <= nu && k * bv <= nv, "blocks must fit");
+    let mut r = Pcg32::new(seed);
+    let mut edges = Vec::new();
+    for b in 0..k {
+        let u0 = b * bu;
+        let v0 = b * bv;
+        for du in 0..bu {
+            for dv in 0..bv {
+                if r.next_bool(p_in) {
+                    edges.push(((u0 + du) as u32, (v0 + dv) as u32));
+                }
+            }
+        }
+    }
+    for _ in 0..noise_m {
+        edges.push((r.next_below(nu as u64) as u32, r.next_below(nv as u64) as u32));
+    }
+    BipartiteGraph::from_edges(nu, nv, &edges)
+}
+
+/// K_{a,b}: total butterflies = C(a,2) * C(b,2).
+pub fn complete_bipartite(a: usize, b: usize) -> BipartiteGraph {
+    let mut edges = Vec::with_capacity(a * b);
+    for u in 0..a {
+        for v in 0..b {
+            edges.push((u as u32, v as u32));
+        }
+    }
+    BipartiteGraph::from_edges(a, b, &edges)
+}
+
+/// Davis Southern Women (1941): 18 women x 14 social events, 89
+/// attendance edges.  The canonical small real bipartite dataset.
+pub fn davis_southern_women() -> BipartiteGraph {
+    // events attended per woman, 1-indexed as in the original table.
+    const ATTENDANCE: [&[u32]; 18] = [
+        &[1, 2, 3, 4, 5, 6, 8, 9],       // Evelyn
+        &[1, 2, 3, 5, 6, 7, 8],          // Laura
+        &[2, 3, 4, 5, 6, 7, 8, 9],       // Theresa
+        &[1, 3, 4, 5, 6, 7, 8],          // Brenda
+        &[3, 4, 5, 7],                   // Charlotte
+        &[3, 5, 6, 8],                   // Frances
+        &[5, 6, 7, 8],                   // Eleanor
+        &[6, 8, 9],                      // Pearl
+        &[5, 7, 8, 9],                   // Ruth
+        &[7, 8, 9, 12],                  // Verne
+        &[8, 9, 10, 12],                 // Myra
+        &[8, 9, 10, 12, 13, 14],         // Katherine
+        &[7, 8, 9, 10, 12, 13, 14],      // Sylvia
+        &[6, 7, 9, 10, 11, 12, 13, 14],  // Nora
+        &[7, 8, 10, 11, 12],             // Helen
+        &[8, 9],                         // Dorothy
+        &[9, 11],                        // Olivia
+        &[9, 11],                        // Flora
+    ];
+    let mut edges = Vec::with_capacity(89);
+    for (w, events) in ATTENDANCE.iter().enumerate() {
+        for &e in *events {
+            edges.push((w as u32, e - 1));
+        }
+    }
+    BipartiteGraph::from_edges(18, 14, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn er_respects_bounds_and_determinism() {
+        let g1 = erdos_renyi(100, 200, 1000, 7);
+        let g2 = erdos_renyi(100, 200, 1000, 7);
+        assert_eq!(g1.m(), g2.m());
+        assert!(g1.m() <= 1000 && g1.m() > 900); // few collisions
+        assert_eq!(g1.nu(), 100);
+        assert_eq!(g1.nv(), 200);
+        let g3 = erdos_renyi(100, 200, 1000, 8);
+        assert_ne!(g1.edges(), g3.edges());
+    }
+
+    #[test]
+    fn chung_lu_is_skewed() {
+        let g = chung_lu(2000, 3000, 20_000, 2.1, 42);
+        assert!(g.m() > 10_000);
+        // Power law: max degree far above mean degree.
+        let mean = g.m() as f64 / g.nu() as f64;
+        assert!(
+            g.max_degree() as f64 > 8.0 * mean,
+            "max {} mean {mean}",
+            g.max_degree()
+        );
+        // Highest-weight vertex is vertex 0 by construction.
+        assert!(g.deg_u(0) >= g.deg_u(1999));
+    }
+
+    #[test]
+    fn planted_blocks_are_dense() {
+        let g = planted_blocks(100, 100, 4, 10, 10, 1.0, 0, 3);
+        assert_eq!(g.m(), 400); // 4 complete 10x10 blocks
+        assert_eq!(g.deg_u(0), 10);
+        assert_eq!(g.deg_u(99), 0); // outside blocks, no noise
+    }
+
+    #[test]
+    fn complete_bipartite_shape() {
+        let g = complete_bipartite(4, 6);
+        assert_eq!(g.m(), 24);
+        assert_eq!(g.deg_u(0), 6);
+        assert_eq!(g.deg_v(5), 4);
+    }
+
+    #[test]
+    fn davis_matches_published_stats() {
+        let g = davis_southern_women();
+        assert_eq!(g.nu(), 18);
+        assert_eq!(g.nv(), 14);
+        assert_eq!(g.m(), 89);
+        // Event 8 is the best attended (14 women) in the original data.
+        assert_eq!(g.deg_v(7), 14);
+        // Evelyn attended 8 events.
+        assert_eq!(g.deg_u(0), 8);
+    }
+}

@@ -1,0 +1,127 @@
+//! Edge-list IO.
+//!
+//! Two formats:
+//! * plain edge list — `u v` per line, 0-indexed, `#`/`%` comments;
+//!   header line `# bip <nu> <nv>` optional (inferred from max ids
+//!   otherwise).
+//! * KONECT out.* files — `% bip` header, whitespace-separated
+//!   1-indexed pairs (extra columns such as weights/timestamps are
+//!   ignored), matching how the paper loads its datasets.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use super::bipartite::BipartiteGraph;
+
+/// Load either supported format (sniffed from the header / indexing).
+pub fn load_edge_list(path: &Path) -> anyhow::Result<BipartiteGraph> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+    let reader = std::io::BufReader::new(f);
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut header: Option<(usize, usize)> = None;
+    let mut konect = false;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if t.starts_with('%') {
+            // KONECT-style header.
+            if lineno == 0 {
+                konect = true;
+            }
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix("# bip") {
+            let mut it = rest.split_whitespace();
+            let nu: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad bip header"))?.parse()?;
+            let nv: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad bip header"))?.parse()?;
+            header = Some((nu, nv));
+            continue;
+        }
+        if t.starts_with('#') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let u: u32 = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing u", lineno + 1))?
+            .parse()?;
+        let v: u32 = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing v", lineno + 1))?
+            .parse()?;
+        if konect {
+            anyhow::ensure!(u >= 1 && v >= 1, "line {}: KONECT ids are 1-indexed", lineno + 1);
+            edges.push((u - 1, v - 1));
+        } else {
+            edges.push((u, v));
+        }
+    }
+    let (nu, nv) = header.unwrap_or_else(|| {
+        let nu = edges.iter().map(|e| e.0 as usize + 1).max().unwrap_or(0);
+        let nv = edges.iter().map(|e| e.1 as usize + 1).max().unwrap_or(0);
+        (nu, nv)
+    });
+    Ok(BipartiteGraph::from_edges(nu, nv, &edges))
+}
+
+/// Write the plain edge-list format (with `# bip` header).
+pub fn save_edge_list(g: &BipartiteGraph, path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# bip {} {}", g.nu(), g.nv())?;
+    for (u, v) in g.edges() {
+        writeln!(w, "{u} {v}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn roundtrip_plain() {
+        let g = gen::erdos_renyi(30, 40, 200, 5);
+        let dir = std::env::temp_dir().join("pb_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.txt");
+        save_edge_list(&g, &path).unwrap();
+        let g2 = load_edge_list(&path).unwrap();
+        assert_eq!(g2.nu(), g.nu());
+        assert_eq!(g2.nv(), g.nv());
+        assert_eq!(g2.edges(), g.edges());
+    }
+
+    #[test]
+    fn konect_one_indexed_with_extra_columns() {
+        let dir = std::env::temp_dir().join("pb_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.test");
+        std::fs::write(&path, "% bip unweighted\n1 1 1 1280000\n2 1 1 1280001\n2 2\n").unwrap();
+        let g = load_edge_list(&path).unwrap();
+        assert_eq!(g.nu(), 2);
+        assert_eq!(g.nv(), 2);
+        assert_eq!(g.edges(), vec![(0, 0), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let dir = std::env::temp_dir().join("pb_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.txt");
+        std::fs::write(&path, "# bip 3 3\n# a comment\n\n0 1\n2 2\n").unwrap();
+        let g = load_edge_list(&path).unwrap();
+        assert_eq!(g.nu(), 3);
+        assert_eq!(g.m(), 2);
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load_edge_list(Path::new("/nonexistent/nope.txt")).is_err());
+    }
+}

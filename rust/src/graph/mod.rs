@@ -1,0 +1,18 @@
+//! Bipartite-graph substrate.
+//!
+//! * [`bipartite`] — the CSR bipartite graph (both-side adjacency, edge
+//!   ids shared between sides).
+//! * [`ranked`] — Algorithm 1 preprocessing: rename vertices by rank,
+//!   sort adjacency by decreasing rank, store up-degrees and edge ids.
+//! * [`io`] — edge-list / KONECT-style loaders and writers.
+//! * [`gen`] — synthetic workload generators (Erdős–Rényi, Chung-Lu
+//!   power-law, planted dense blocks) plus the embedded Davis Southern
+//!   Women graph (the small *real* dataset used by examples/tests).
+
+pub mod bipartite;
+pub mod gen;
+pub mod io;
+pub mod ranked;
+
+pub use bipartite::BipartiteGraph;
+pub use ranked::RankedGraph;

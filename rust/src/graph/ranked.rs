@@ -1,0 +1,286 @@
+//! Algorithm 1 (PREPROCESS): rank-renamed general graph.
+//!
+//! Takes a bipartite graph and a rank permutation over all `n = |U|+|V|`
+//! vertices, renames every vertex to its rank (discarding bipartite
+//! information, as the paper does), sorts each adjacency list by
+//! **decreasing rank**, and records for every vertex its *up-degree*
+//! `deg_x(x)` — the number of neighbors with higher rank, which is a
+//! prefix of the sorted list.  Edge ids from the bipartite CSR ride
+//! along so per-edge algorithms can attribute counts.
+//!
+//! Global vertex ids: U-side vertex `u` is `u`; V-side vertex `v` is
+//! `nu + v`.
+
+use super::bipartite::BipartiteGraph;
+use crate::prims::pool::{parallel_for_chunks, SyncPtr};
+
+/// Rank-renamed graph (output of PREPROCESS).
+#[derive(Clone, Debug)]
+pub struct RankedGraph {
+    n: usize,
+    off: Vec<usize>,
+    adj: Vec<u32>,     // neighbor *ranks*, sorted decreasing
+    eid: Vec<u32>,     // original edge id, parallel to `adj`
+    up_deg: Vec<u32>,  // prefix length with rank > own
+    orig: Vec<u32>,    // rank -> global original id
+    rank_of: Vec<u32>, // global original id -> rank
+    nu: usize,
+}
+
+impl RankedGraph {
+    /// Build from `g` and `rank_of[global id] -> rank` (a permutation of
+    /// `0..n`; lower rank = processed earlier = "higher priority").
+    pub fn new(g: &BipartiteGraph, rank_of: Vec<u32>) -> Self {
+        let n = g.n();
+        let nu = g.nu();
+        assert_eq!(rank_of.len(), n);
+        let mut orig = vec![u32::MAX; n];
+        for (gid, &r) in rank_of.iter().enumerate() {
+            assert!((r as usize) < n, "rank out of range");
+            assert_eq!(orig[r as usize], u32::MAX, "rank {r} assigned twice");
+            orig[r as usize] = gid as u32;
+        }
+
+        // Degrees in rank space.
+        let mut off = vec![0usize; n + 1];
+        for x in 0..n {
+            let gid = orig[x] as usize;
+            let d = if gid < nu { g.deg_u(gid) } else { g.deg_v(gid - nu) };
+            off[x + 1] = d;
+        }
+        for x in 0..n {
+            off[x + 1] += off[x];
+        }
+        let m2 = off[n];
+        let mut adj = vec![0u32; m2];
+        let mut eid = vec![0u32; m2];
+        let mut up_deg = vec![0u32; n];
+        {
+            let ap = SyncPtr(adj.as_mut_ptr());
+            let ep = SyncPtr(eid.as_mut_ptr());
+            let up = SyncPtr(up_deg.as_mut_ptr());
+            let off = &off;
+            let orig = &orig;
+            let rank_of = &rank_of;
+            parallel_for_chunks(n, |range| {
+                let mut buf: Vec<(u32, u32)> = Vec::new();
+                for x in range {
+                    let gid = orig[x] as usize;
+                    buf.clear();
+                    if gid < nu {
+                        let nbrs = g.nbrs_u(gid);
+                        for (i, &v) in nbrs.iter().enumerate() {
+                            buf.push((rank_of[nu + v as usize], g.eid_u(gid, i)));
+                        }
+                    } else {
+                        let v = gid - nu;
+                        let nbrs = g.nbrs_v(v);
+                        let eids = g.eids_v(v);
+                        for (i, &u) in nbrs.iter().enumerate() {
+                            buf.push((rank_of[u as usize], eids[i]));
+                        }
+                    }
+                    // Decreasing rank.
+                    buf.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+                    let base = off[x];
+                    let mut upd = 0u32;
+                    for (i, &(r, e)) in buf.iter().enumerate() {
+                        unsafe {
+                            *ap.get().add(base + i) = r;
+                            *ep.get().add(base + i) = e;
+                        }
+                        if (r as usize) > x {
+                            upd += 1;
+                        }
+                    }
+                    unsafe { *up.get().add(x) = upd };
+                }
+            });
+        }
+        Self { n, off, adj, eid, up_deg, orig, rank_of, nu }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn nu(&self) -> usize {
+        self.nu
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.adj.len() / 2
+    }
+
+    /// All neighbors of rank-vertex `x`, sorted by decreasing rank.
+    #[inline]
+    pub fn nbrs(&self, x: usize) -> &[u32] {
+        &self.adj[self.off[x]..self.off[x + 1]]
+    }
+
+    /// Edge ids parallel to [`Self::nbrs`].
+    #[inline]
+    pub fn eids(&self, x: usize) -> &[u32] {
+        &self.eid[self.off[x]..self.off[x + 1]]
+    }
+
+    #[inline]
+    pub fn deg(&self, x: usize) -> usize {
+        self.off[x + 1] - self.off[x]
+    }
+
+    /// `deg_x(x)`: number of neighbors with rank greater than `x`.
+    #[inline]
+    pub fn up_deg(&self, x: usize) -> usize {
+        self.up_deg[x] as usize
+    }
+
+    /// Number of neighbors of `y` with rank strictly greater than `r`
+    /// (a prefix of `nbrs(y)`, found by binary search — the exponential
+    /// search of §4.2.1 with the same O(log deg) bound).
+    #[inline]
+    pub fn up_deg_above(&self, y: usize, r: u32) -> usize {
+        self.nbrs(y).partition_point(|&z| z > r)
+    }
+
+    /// rank -> original global id (U: `0..nu`; V: `nu..n`).
+    #[inline]
+    pub fn orig(&self, x: usize) -> u32 {
+        self.orig[x]
+    }
+
+    /// original global id -> rank.
+    #[inline]
+    pub fn rank_of(&self, gid: usize) -> u32 {
+        self.rank_of[gid]
+    }
+
+    /// Is rank-vertex `x` on the U side of the original graph?
+    #[inline]
+    pub fn is_u_side(&self, x: usize) -> bool {
+        (self.orig[x] as usize) < self.nu
+    }
+
+    /// Total number of wedges GET-WEDGES will process under this
+    /// ranking: `sum_x sum_{y in N_x(x)} deg_x(y)`.  This is the `w_r`
+    /// of the Table 3 `f` metric.
+    pub fn wedges_processed(&self) -> u64 {
+        crate::prims::pool::parallel_reduce(
+            self.n,
+            0u64,
+            |x| {
+                let mut s = 0u64;
+                let r = x as u32;
+                for &y in &self.nbrs(x)[..self.up_deg(x)] {
+                    s += self.up_deg_above(y as usize, r) as u64;
+                }
+                s
+            },
+            |a, b| a + b,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig1() -> BipartiteGraph {
+        BipartiteGraph::from_edges(
+            3,
+            3,
+            &[(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2), (2, 2)],
+        )
+    }
+
+    fn identity_rank(n: usize) -> Vec<u32> {
+        (0..n as u32).collect()
+    }
+
+    #[test]
+    fn adjacency_sorted_decreasing_with_updeg() {
+        let g = fig1();
+        let rg = RankedGraph::new(&g, identity_rank(6));
+        for x in 0..rg.n() {
+            let nbrs = rg.nbrs(x);
+            for w in nbrs.windows(2) {
+                assert!(w[0] > w[1], "not strictly decreasing at {x}");
+            }
+            let expect = nbrs.iter().filter(|&&y| (y as usize) > x).count();
+            assert_eq!(rg.up_deg(x), expect);
+        }
+    }
+
+    #[test]
+    fn rank_roundtrip_and_sides() {
+        let g = fig1();
+        // Reverse permutation: gid i -> rank n-1-i.
+        let n = g.n();
+        let rank: Vec<u32> = (0..n).map(|i| (n - 1 - i) as u32).collect();
+        let rg = RankedGraph::new(&g, rank);
+        for x in 0..n {
+            assert_eq!(rg.rank_of(rg.orig(x) as usize), x as u32);
+        }
+        // U side = gids 0..3 = ranks 5,4,3.
+        assert!(rg.is_u_side(5) && rg.is_u_side(4) && rg.is_u_side(3));
+        assert!(!rg.is_u_side(0) && !rg.is_u_side(1) && !rg.is_u_side(2));
+    }
+
+    #[test]
+    fn edge_ids_preserved() {
+        let g = fig1();
+        let rg = RankedGraph::new(&g, identity_rank(6));
+        // Every edge id must appear exactly twice (once per direction).
+        let mut seen = vec![0u32; g.m()];
+        for x in 0..rg.n() {
+            for &e in rg.eids(x) {
+                seen[e as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 2));
+    }
+
+    #[test]
+    fn up_deg_above_is_prefix_len() {
+        let g = fig1();
+        let rg = RankedGraph::new(&g, identity_rank(6));
+        for x in 0..rg.n() {
+            for r in 0..6u32 {
+                let expect = rg.nbrs(x).iter().filter(|&&z| z > r).count();
+                assert_eq!(rg.up_deg_above(x, r), expect);
+            }
+        }
+    }
+
+    #[test]
+    fn wedges_processed_counts_rank_filtered_wedges() {
+        let g = fig1();
+        let rg = RankedGraph::new(&g, identity_rank(6));
+        // Brute force: wedges (x, y, z), y center, rank(y) > rank(x),
+        // rank(z) > rank(x), z != x.
+        let mut expect = 0u64;
+        for x in 0..rg.n() {
+            for &y in rg.nbrs(x) {
+                if (y as usize) <= x {
+                    continue;
+                }
+                for &z in rg.nbrs(y as usize) {
+                    if (z as usize) > x {
+                        expect += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(rg.wedges_processed(), expect);
+    }
+
+    #[test]
+    #[should_panic(expected = "assigned twice")]
+    fn duplicate_rank_panics() {
+        let g = fig1();
+        RankedGraph::new(&g, vec![0, 0, 1, 2, 3, 4]);
+    }
+}

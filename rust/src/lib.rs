@@ -1,0 +1,45 @@
+//! # ParButterfly — parallel butterfly computations on bipartite graphs
+//!
+//! Rust implementation of the ParButterfly framework from *"Parallel
+//! Algorithms for Butterfly Computations"* (Shi & Shun, 2019): global /
+//! per-vertex / per-edge butterfly counting, tip decomposition (vertex
+//! peeling) and wing decomposition (edge peeling), parameterized over
+//! vertex **rankings** (side, degree, approximate degree, complement
+//! degeneracy, approximate complement degeneracy) and **wedge
+//! aggregation** strategies (sort, hash, histogram, simple batching,
+//! wedge-aware batching), plus approximate counting via edge / colorful
+//! sparsification and the Wang et al. cache optimization.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack: a JAX +
+//! Pallas build-time pipeline (`python/compile/`) AOT-lowers a dense-tile
+//! butterfly-counting model to HLO text, which [`runtime`] loads through
+//! the PJRT C API and [`count::dense`] uses as a dense-core accelerator.
+//! Python never runs at request time.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use parbutterfly::graph::gen;
+//! use parbutterfly::coordinator::{count_butterflies, CountConfig};
+//!
+//! let g = gen::chung_lu(5_000, 8_000, 120_000, 2.1, 42);
+//! let res = count_butterflies(&g, &CountConfig::default());
+//! println!("{} butterflies", res.total);
+//! ```
+//!
+//! See `examples/` for end-to-end drivers and `rust/benches/` for the
+//! harness regenerating every table and figure of the paper.
+
+pub mod baseline;
+pub mod bench_support;
+pub mod cli;
+pub mod coordinator;
+pub mod count;
+pub mod graph;
+pub mod peel;
+pub mod prims;
+pub mod rank;
+pub mod runtime;
+pub mod testutil;
+
+pub use coordinator::{CountConfig, PeelConfig};

@@ -1,0 +1,4 @@
+//! `parbutterfly` CLI — see `cli.rs` for commands.
+fn main() {
+    std::process::exit(parbutterfly::cli::run());
+}

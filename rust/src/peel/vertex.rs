@@ -1,0 +1,395 @@
+//! PEEL-V — parallel tip decomposition (Algorithm 5).
+//!
+//! Peels one bipartition (the cheaper one, or the caller's choice);
+//! each round extracts every vertex with the minimum butterfly count,
+//! recomputes the butterflies destroyed by the batch through the same
+//! wedge-aggregation machinery as counting (UPDATE-V = GET-V-WEDGES +
+//! COUNT-V-WEDGES), and re-buckets the survivors.  Tip numbers are the
+//! running maximum of the extracted counts.
+//!
+//! Liveness rules (the §4.3.1 double-counting discussion):
+//! * wedges are only charged to second endpoints that are still live —
+//!   previously peeled vertices and same-round batch members are
+//!   skipped entirely (butterflies between two batch members die with
+//!   them and charge no one; V-side counts are untracked);
+//! * centers are on the un-peeled side and stay valid throughout.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::count::wedges::key_endpoints;
+use crate::count::{choose2, WedgeAgg};
+use crate::graph::BipartiteGraph;
+use crate::prims::hashtable::CountTable;
+use crate::prims::histogram::histogram;
+use crate::prims::pool::{num_threads, parallel_for_chunks, parallel_for_dynamic};
+use crate::prims::semisort::aggregate_counts;
+
+use super::bucket::{make_buckets, BucketKind};
+use super::delta::DenseDelta;
+
+/// Which bipartition to peel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeelSide {
+    U,
+    V,
+    /// Pick the side whose peeling processes fewer wedges (§4.3.1).
+    Auto,
+}
+
+/// Result of a tip decomposition.
+#[derive(Clone, Debug)]
+pub struct TipResult {
+    /// True if the U side was peeled.
+    pub peeled_u: bool,
+    /// Tip number per vertex of the peeled side.
+    pub tips: Vec<u64>,
+    /// Number of peeling rounds (rho_v).
+    pub rounds: usize,
+}
+
+/// Options for vertex peeling.
+#[derive(Clone, Debug)]
+pub struct PeelVOpts {
+    pub agg: WedgeAgg,
+    pub buckets: BucketKind,
+    pub side: PeelSide,
+}
+
+impl Default for PeelVOpts {
+    fn default() -> Self {
+        // §Perf: batch aggregation wins on this substrate (Fig 12 rows:
+        // BatchS 431 ms vs Hist 678 ms on `cl`); the paper found
+        // histogramming best on 48 cores — the option is one field away.
+        Self { agg: WedgeAgg::BatchS, buckets: BucketKind::Julienne, side: PeelSide::Auto }
+    }
+}
+
+/// Presents the peeled side uniformly regardless of orientation.
+struct SideView<'a> {
+    g: &'a BipartiteGraph,
+    peel_u: bool,
+}
+
+impl<'a> SideView<'a> {
+    fn n_peel(&self) -> usize {
+        if self.peel_u {
+            self.g.nu()
+        } else {
+            self.g.nv()
+        }
+    }
+    fn nbrs_peel(&self, x: usize) -> &[u32] {
+        if self.peel_u {
+            self.g.nbrs_u(x)
+        } else {
+            self.g.nbrs_v(x)
+        }
+    }
+    fn nbrs_other(&self, y: usize) -> &[u32] {
+        if self.peel_u {
+            self.g.nbrs_v(y)
+        } else {
+            self.g.nbrs_u(y)
+        }
+    }
+}
+
+/// Tip decomposition given per-vertex butterfly counts for both sides
+/// (from the counting framework — step 1 of Figure 4).
+pub fn peel_vertices(g: &BipartiteGraph, bu: &[u64], bv: &[u64], opts: &PeelVOpts) -> TipResult {
+    let peel_u = match opts.side {
+        PeelSide::U => true,
+        PeelSide::V => false,
+        // Peeling side X retrieves wedges with endpoints in X, whose
+        // centers are on the other side: pick the cheaper direction.
+        PeelSide::Auto => g.wedges_centered_v() <= g.wedges_centered_u(),
+    };
+    let view = SideView { g, peel_u };
+    let counts: &[u64] = if peel_u { bu } else { bv };
+    let n = view.n_peel();
+    assert_eq!(counts.len(), n, "counts must cover the peeled side");
+    let mut buckets = make_buckets(opts.buckets, counts);
+    let mut peeled = vec![false; n];
+    let mut tips = vec![0u64; n];
+    let mut k = 0u64;
+    let mut rounds = 0usize;
+    // §Perf: allocate the delta accumulator and the batch-aggregation
+    // scratch once per decomposition (per-round Mutex<HashMap> merging
+    // used to dominate at high rho_v — see EXPERIMENTS.md §Perf).
+    let mut delta = DenseDelta::new(n);
+    let mut scratch = BatchScratch { cnt: vec![0u32; n], touched: Vec::new() };
+
+    while let Some((c, batch)) = buckets.pop_min() {
+        rounds += 1;
+        k = k.max(c);
+        for &x in &batch {
+            tips[x as usize] = k;
+            peeled[x as usize] = true;
+        }
+        update_v(&view, &batch, &peeled, opts.agg, &mut delta, &mut scratch);
+        delta.drain(|x2, removed| {
+            if peeled[x2 as usize] {
+                return;
+            }
+            let cur = buckets.current(x2);
+            let nc = cur.saturating_sub(removed).max(k);
+            buckets.update(x2, nc);
+        });
+    }
+    TipResult { peeled_u: peel_u, tips, rounds }
+}
+
+/// Persistent scratch for the batch aggregation path.
+struct BatchScratch {
+    cnt: Vec<u32>,
+    touched: Vec<u32>,
+}
+
+/// UPDATE-V: butterflies destroyed per live second endpoint,
+/// accumulated into `out`.
+fn update_v(
+    view: &SideView<'_>,
+    batch: &[u32],
+    peeled: &[bool],
+    agg: WedgeAgg,
+    out: &mut DenseDelta,
+    scratch: &mut BatchScratch,
+) {
+    match agg {
+        WedgeAgg::Hash => update_v_hash(view, batch, peeled, out),
+        WedgeAgg::Sort | WedgeAgg::Hist => update_v_sorted(view, batch, peeled, agg, out),
+        WedgeAgg::BatchS | WedgeAgg::BatchWA => {
+            update_v_batch(view, batch, peeled, agg == WedgeAgg::BatchWA, out, scratch)
+        }
+    }
+}
+
+/// Merge per-pair multiplicities into per-x2 removals.
+fn fold_pairs(pairs: impl IntoIterator<Item = (u64, u64)>, out: &mut DenseDelta) {
+    for (key, d) in pairs {
+        let b = choose2(d);
+        if b > 0 {
+            let (_x1, x2) = key_endpoints(key);
+            out.add(x2, b);
+        }
+    }
+}
+
+/// Enumerate wedge keys `(x1 peeled, x2 live)` into `sink`.
+fn enumerate_keys(
+    view: &SideView<'_>,
+    batch: &[u32],
+    peeled: &[bool],
+    sink: &(impl Fn(u64) + Sync),
+) {
+    parallel_for_dynamic(batch.len(), 2, |r| {
+        for bi in r {
+            let x1 = batch[bi];
+            for &y in view.nbrs_peel(x1 as usize) {
+                for &x2 in view.nbrs_other(y as usize) {
+                    if x2 != x1 && !peeled[x2 as usize] {
+                        sink(((x1 as u64) << 32) | x2 as u64);
+                    }
+                }
+            }
+        }
+    });
+}
+
+fn update_v_hash(view: &SideView<'_>, batch: &[u32], peeled: &[bool], out: &mut DenseDelta) {
+    let cap = estimate_wedges(view, batch).max(4);
+    let table = CountTable::with_capacity(cap);
+    enumerate_keys(view, batch, peeled, &|key| table.insert_add(key, 1));
+    fold_pairs(table.to_vec(), out);
+}
+
+fn update_v_sorted(
+    view: &SideView<'_>,
+    batch: &[u32],
+    peeled: &[bool],
+    agg: WedgeAgg,
+    out: &mut DenseDelta,
+) {
+    let keys = Mutex::new(Vec::<u64>::new());
+    // Buffer per worker chunk to cut lock traffic.
+    parallel_for_dynamic(batch.len(), 2, |r| {
+        let mut local = Vec::new();
+        for bi in r {
+            let x1 = batch[bi];
+            for &y in view.nbrs_peel(x1 as usize) {
+                for &x2 in view.nbrs_other(y as usize) {
+                    if x2 != x1 && !peeled[x2 as usize] {
+                        local.push(((x1 as u64) << 32) | x2 as u64);
+                    }
+                }
+            }
+        }
+        if !local.is_empty() {
+            keys.lock().unwrap().extend(local);
+        }
+    });
+    let keys = keys.into_inner().unwrap();
+    match agg {
+        WedgeAgg::Sort => fold_pairs(aggregate_counts(keys, false), out),
+        _ => fold_pairs(histogram(&keys), out),
+    }
+}
+
+/// Batch aggregation: workers own a dense count array indexed by the
+/// second endpoint and aggregate each peeled vertex's wedges serially.
+/// Sequential fast path reuses the decomposition-lifetime scratch
+/// (zero allocation per round).
+fn update_v_batch(
+    view: &SideView<'_>,
+    batch: &[u32],
+    peeled: &[bool],
+    dynamic: bool,
+    out: &mut DenseDelta,
+    scratch: &mut BatchScratch,
+) {
+    let n = view.n_peel();
+    if num_threads() <= 1 {
+        let cnt = &mut scratch.cnt;
+        let touched = &mut scratch.touched;
+        for &x1 in batch {
+            for &y in view.nbrs_peel(x1 as usize) {
+                for &x2 in view.nbrs_other(y as usize) {
+                    if x2 != x1 && !peeled[x2 as usize] {
+                        if cnt[x2 as usize] == 0 {
+                            touched.push(x2);
+                        }
+                        cnt[x2 as usize] += 1;
+                    }
+                }
+            }
+            for &x2 in touched.iter() {
+                out.add(x2, choose2(cnt[x2 as usize] as u64));
+                cnt[x2 as usize] = 0;
+            }
+            touched.clear();
+        }
+        return;
+    }
+    let merged = Mutex::new(HashMap::<u32, u64>::new());
+    let process = |range: std::ops::Range<usize>| {
+        let mut cnt = vec![0u32; n];
+        let mut touched: Vec<u32> = Vec::new();
+        let mut local: HashMap<u32, u64> = HashMap::new();
+        for bi in range {
+            let x1 = batch[bi];
+            for &y in view.nbrs_peel(x1 as usize) {
+                for &x2 in view.nbrs_other(y as usize) {
+                    if x2 != x1 && !peeled[x2 as usize] {
+                        if cnt[x2 as usize] == 0 {
+                            touched.push(x2);
+                        }
+                        cnt[x2 as usize] += 1;
+                    }
+                }
+            }
+            for &x2 in &touched {
+                let b = choose2(cnt[x2 as usize] as u64);
+                if b > 0 {
+                    *local.entry(x2).or_insert(0) += b;
+                }
+                cnt[x2 as usize] = 0;
+            }
+            touched.clear();
+        }
+        let mut g = merged.lock().unwrap();
+        for (x2, b) in local {
+            *g.entry(x2).or_insert(0) += b;
+        }
+    };
+    if dynamic {
+        parallel_for_dynamic(batch.len(), 1, process);
+    } else {
+        parallel_for_chunks(batch.len(), process);
+    }
+    for (x2, b) in merged.into_inner().unwrap() {
+        out.add(x2, b);
+    }
+}
+
+fn estimate_wedges(view: &SideView<'_>, batch: &[u32]) -> usize {
+    batch
+        .iter()
+        .map(|&x1| {
+            view.nbrs_peel(x1 as usize)
+                .iter()
+                .map(|&y| view.nbrs_other(y as usize).len())
+                .sum::<usize>()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::count::{count_per_vertex, CountOpts};
+    use crate::graph::gen;
+    use crate::testutil::brute;
+
+    fn tips_via(g: &BipartiteGraph, opts: &PeelVOpts) -> TipResult {
+        let vc = count_per_vertex(g, &CountOpts::default());
+        peel_vertices(g, &vc.bu, &vc.bv, opts)
+    }
+
+    #[test]
+    fn complete_bipartite_all_equal() {
+        let g = gen::complete_bipartite(4, 5);
+        let r = tips_via(
+            &g,
+            &PeelVOpts { side: PeelSide::U, ..Default::default() },
+        );
+        assert!(r.peeled_u);
+        assert_eq!(r.tips, brute::tip_numbers_u(&g));
+        assert_eq!(r.rounds, 1);
+    }
+
+    #[test]
+    fn matches_brute_force_over_all_configs() {
+        for seed in [1, 5, 9] {
+            let g = gen::erdos_renyi(12, 14, 80, seed);
+            let expect = brute::tip_numbers_u(&g);
+            for agg in WedgeAgg::ALL {
+                for buckets in BucketKind::ALL {
+                    let r = tips_via(&g, &PeelVOpts { agg, buckets, side: PeelSide::U });
+                    assert_eq!(r.tips, expect, "seed={seed} agg={agg:?} {buckets:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn v_side_peeling_matches_mirrored_graph() {
+        let g = gen::erdos_renyi(10, 13, 60, 2);
+        // Peel V of g == peel U of the transposed graph.
+        let edges_t: Vec<(u32, u32)> = g.edges().into_iter().map(|(u, v)| (v, u)).collect();
+        let gt = BipartiteGraph::from_edges(g.nv(), g.nu(), &edges_t);
+        let rv = tips_via(&g, &PeelVOpts { side: PeelSide::V, ..Default::default() });
+        let ru = tips_via(&gt, &PeelVOpts { side: PeelSide::U, ..Default::default() });
+        assert!(!rv.peeled_u);
+        assert_eq!(rv.tips, ru.tips);
+    }
+
+    #[test]
+    fn auto_picks_cheaper_side() {
+        // K_{3,30}: wedges centered V (C(3,2)*30=90) << centered U
+        // (3*C(30,2)=1305): endpoints on U are cheap -> peel U.
+        let g = gen::complete_bipartite(3, 30);
+        let r = tips_via(&g, &PeelVOpts::default());
+        assert!(r.peeled_u);
+    }
+
+    #[test]
+    fn planted_blocks_have_block_tips() {
+        // Two disjoint K_{5,5} blocks: every U vertex has tip number
+        // C(4,1)*C(5,2)... = butterflies per vertex = 4*10 = 40.
+        let g = gen::planted_blocks(10, 10, 2, 5, 5, 1.0, 0, 1);
+        let r = tips_via(&g, &PeelVOpts { side: PeelSide::U, ..Default::default() });
+        assert_eq!(r.tips, vec![40u64; 10]);
+        assert_eq!(r.tips, brute::tip_numbers_u(&g));
+    }
+}

@@ -1,0 +1,372 @@
+//! WPEEL-V / WPEEL-E — peeling with stored wedges (Algorithms 7–8).
+//!
+//! The rank-filtered wedge set of GET-WEDGES is materialized once into
+//! an index, after which each peeling round touches only the
+//! butterflies actually destroyed — `O(rho log + b)` total work at
+//! `O(alpha m)` space (Theorems 4.8/4.9) instead of re-enumerating
+//! two-hop neighbourhoods.
+//!
+//! Index layout (global vertex ids):
+//! * `pairs`: endpoint-pair key -> the wedges of that pair, each as
+//!   `(center, leg_lo, leg_hi)` (edge ids);
+//! * `by_endpoint[x]`: pair keys with `x` as an endpoint;
+//! * `by_center[x]`: positions of the wedges centered at `x`.
+//!
+//! A butterfly's *retrieved representation* is unique (its lowest-rank
+//! vertex is an endpoint of both its retrieved wedges), so the two
+//! update cases of Algorithm 7 — peeled vertex as endpoint vs as
+//! center — partition the destroyed butterflies exactly.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::count::{choose2, wedges};
+use crate::graph::BipartiteGraph;
+use crate::prims::pool::parallel_for_dynamic;
+use crate::rank::{preprocess, Ranking};
+
+use super::bucket::{make_buckets, BucketKind};
+use super::edge::WingResult;
+use super::vertex::{PeelSide, TipResult};
+
+/// One stored wedge: center + the two leg edge ids.
+#[derive(Clone, Copy, Debug)]
+struct StoredWedge {
+    center: u32,
+    e_lo: u32,
+    e_hi: u32,
+}
+
+/// The materialized wedge index.
+pub struct WedgeStore {
+    /// pair key (packed global endpoint ids, lo-rank first) -> wedges.
+    pairs: HashMap<u64, Vec<StoredWedge>>,
+    /// per global vertex: pair keys where it is an endpoint.
+    by_endpoint: Vec<Vec<u64>>,
+    /// per global vertex: pair keys where it is a wedge center.
+    by_center: Vec<Vec<u64>>,
+    /// per edge id: (other leg edge id, pair key) for each wedge the
+    /// edge participates in (WPEEL-E's `W`).
+    by_edge: Vec<Vec<(u32, u64)>>,
+    nu: usize,
+}
+
+impl WedgeStore {
+    /// Materialize the retrieved wedges of `g` under `ranking`.
+    pub fn build(g: &BipartiteGraph, ranking: Ranking) -> Self {
+        let rg = preprocess(g, ranking);
+        let n = g.n();
+        let mut store = WedgeStore {
+            pairs: HashMap::new(),
+            by_endpoint: vec![Vec::new(); n],
+            by_center: vec![Vec::new(); n],
+            by_edge: vec![Vec::new(); g.m()],
+            nu: g.nu(),
+        };
+        // Sequential build (one pass over the O(alpha m) wedges); the
+        // peeling rounds dominate, and HashMap insertion rules out the
+        // trivially-parallel fill.
+        for src in 0..rg.n() {
+            wedges::wedges_of_source(&rg, false, src, |w| {
+                let a = rg.orig(w.lo as usize);
+                let b = rg.orig(w.hi as usize);
+                let c = rg.orig(w.center as usize);
+                let key = ((a as u64) << 32) | b as u64;
+                let entry = store.pairs.entry(key).or_default();
+                if entry.is_empty() {
+                    store.by_endpoint[a as usize].push(key);
+                    store.by_endpoint[b as usize].push(key);
+                }
+                entry.push(StoredWedge { center: c, e_lo: w.e_lo, e_hi: w.e_hi });
+                store.by_center[c as usize].push(key);
+                store.by_edge[w.e_lo as usize].push((w.e_hi, key));
+                store.by_edge[w.e_hi as usize].push((w.e_lo, key));
+            });
+        }
+        store
+    }
+
+    fn other_endpoint(key: u64, x: u32) -> u32 {
+        let a = (key >> 32) as u32;
+        let b = key as u32;
+        if a == x {
+            b
+        } else {
+            a
+        }
+    }
+
+    /// Total stored wedges (diagnostics).
+    pub fn len(&self) -> usize {
+        self.pairs.values().map(|v| v.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+}
+
+/// WPEEL-V (Algorithm 7): tip decomposition over the stored wedges.
+pub fn wpeel_vertices(
+    g: &BipartiteGraph,
+    store: &WedgeStore,
+    bu: &[u64],
+    bv: &[u64],
+    side: PeelSide,
+    buckets_kind: BucketKind,
+) -> TipResult {
+    let peel_u = match side {
+        PeelSide::U => true,
+        PeelSide::V => false,
+        PeelSide::Auto => g.wedges_centered_v() <= g.wedges_centered_u(),
+    };
+    let counts: &[u64] = if peel_u { bu } else { bv };
+    let n = counts.len();
+    let gid_of = |x: u32| -> usize {
+        if peel_u {
+            x as usize
+        } else {
+            store.nu + x as usize
+        }
+    };
+    let local_of = |gid: u32| -> u32 {
+        if peel_u {
+            gid
+        } else {
+            gid - store.nu as u32
+        }
+    };
+    let on_peel_side =
+        |gid: u32| -> bool { ((gid as usize) < store.nu) == peel_u };
+
+    let mut buckets = make_buckets(buckets_kind, counts);
+    let mut peeled = vec![false; n];
+    let mut tips = vec![0u64; n];
+    let mut k = 0u64;
+    let mut rounds = 0usize;
+
+    while let Some((c, batch)) = buckets.pop_min() {
+        rounds += 1;
+        k = k.max(c);
+        for &x in &batch {
+            tips[x as usize] = k;
+            peeled[x as usize] = true;
+        }
+        // WUPDATE-V over the stored index.
+        let deltas = Mutex::new(HashMap::<u32, u64>::new());
+        parallel_for_dynamic(batch.len(), 2, |r| {
+            let mut local = HashMap::<u32, u64>::new();
+            for bi in r {
+                let x = batch[bi];
+                let xg = gid_of(x) as u32;
+                // Case 1: x is an endpoint — the pair's whole butterfly
+                // block leaves the live second endpoint.
+                for &key in &store.by_endpoint[xg as usize] {
+                    let yg = WedgeStore::other_endpoint(key, xg);
+                    debug_assert!(on_peel_side(yg) == on_peel_side(xg));
+                    if !on_peel_side(yg) {
+                        continue;
+                    }
+                    let y = local_of(yg);
+                    if peeled[y as usize] {
+                        continue;
+                    }
+                    let d = store.pairs[&key].len() as u64;
+                    let b = choose2(d);
+                    if b > 0 {
+                        *local.entry(y).or_insert(0) += b;
+                    }
+                }
+                // Case 2: x is a center — each co-center of the pair
+                // loses one butterfly.
+                for &key in &store.by_center[xg as usize] {
+                    for w in &store.pairs[&key] {
+                        let zg = w.center;
+                        if zg == xg || !on_peel_side(zg) {
+                            continue;
+                        }
+                        let z = local_of(zg);
+                        if !peeled[z as usize] {
+                            *local.entry(z).or_insert(0) += 1;
+                        }
+                    }
+                }
+            }
+            if !local.is_empty() {
+                let mut g = deltas.lock().unwrap();
+                for (z, b) in local {
+                    *g.entry(z).or_insert(0) += b;
+                }
+            }
+        });
+        for (x2, removed) in deltas.into_inner().unwrap() {
+            if peeled[x2 as usize] {
+                continue;
+            }
+            let cur = buckets.current(x2);
+            buckets.update(x2, cur.saturating_sub(removed).max(k));
+        }
+    }
+    TipResult { peeled_u: peel_u, tips, rounds }
+}
+
+const ALIVE: u32 = u32::MAX;
+
+#[inline]
+fn alive_for(round_of: &[u32], round: u32, x: u32, e: u32) -> bool {
+    let r = round_of[x as usize];
+    r == ALIVE || (r == round && x > e)
+}
+
+/// WPEEL-E (Algorithm 8): wing decomposition over the stored wedges.
+pub fn wpeel_edges(
+    g: &BipartiteGraph,
+    store: &WedgeStore,
+    be: &[u64],
+    buckets_kind: BucketKind,
+) -> WingResult {
+    let m = g.m();
+    assert_eq!(be.len(), m);
+    let mut buckets = make_buckets(buckets_kind, be);
+    let mut round_of = vec![ALIVE; m];
+    let mut wings = vec![0u64; m];
+    let mut k = 0u64;
+    let mut round = 0u32;
+
+    while let Some((c, batch)) = buckets.pop_min() {
+        k = k.max(c);
+        for &e in &batch {
+            wings[e as usize] = k;
+            round_of[e as usize] = round;
+        }
+        // WUPDATE-E: walk each peeled edge's stored wedges; every live
+        // co-center closes a destroyed butterfly.
+        let deltas = Mutex::new(HashMap::<u32, u64>::new());
+        parallel_for_dynamic(batch.len(), 2, |r| {
+            let mut local = HashMap::<u32, u64>::new();
+            let mut dec = |e: u32| *local.entry(e).or_insert(0) += 1;
+            for bi in r {
+                let e = batch[bi];
+                for &(e3, key) in &store.by_edge[e as usize] {
+                    if !alive_for(&round_of, round, e3, e) {
+                        continue;
+                    }
+                    for w in &store.pairs[&key] {
+                        // Skip the wedge (e, e3) itself.
+                        if w.e_lo == e || w.e_hi == e {
+                            continue;
+                        }
+                        if alive_for(&round_of, round, w.e_lo, e)
+                            && alive_for(&round_of, round, w.e_hi, e)
+                        {
+                            dec(e3);
+                            dec(w.e_lo);
+                            dec(w.e_hi);
+                        }
+                    }
+                }
+            }
+            if !local.is_empty() {
+                let mut g = deltas.lock().unwrap();
+                for (e, d) in local {
+                    *g.entry(e).or_insert(0) += d;
+                }
+            }
+        });
+        for (e, removed) in deltas.into_inner().unwrap() {
+            if round_of[e as usize] != ALIVE {
+                continue;
+            }
+            let cur = buckets.current(e);
+            buckets.update(e, cur.saturating_sub(removed).max(k));
+        }
+        round += 1;
+    }
+    WingResult { wings, rounds: round as usize }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::count::{count_per_edge, count_per_vertex, CountOpts};
+    use crate::graph::gen;
+    use crate::testutil::brute;
+
+    #[test]
+    fn store_holds_all_retrieved_wedges() {
+        let g = gen::erdos_renyi(15, 18, 100, 3);
+        for ranking in [Ranking::Side, Ranking::Degree] {
+            let store = WedgeStore::build(&g, ranking);
+            let rg = preprocess(&g, ranking);
+            assert_eq!(store.len() as u64, rg.wedges_processed(), "{ranking:?}");
+        }
+    }
+
+    #[test]
+    fn wpeel_v_matches_brute_force() {
+        for seed in [1, 4, 8] {
+            let g = gen::erdos_renyi(12, 13, 70, seed);
+            let expect = brute::tip_numbers_u(&g);
+            let vc = count_per_vertex(&g, &CountOpts::default());
+            for ranking in [Ranking::Side, Ranking::Degree] {
+                let store = WedgeStore::build(&g, ranking);
+                for bk in BucketKind::ALL {
+                    let r = wpeel_vertices(&g, &store, &vc.bu, &vc.bv, PeelSide::U, bk);
+                    assert_eq!(r.tips, expect, "seed={seed} {ranking:?} {bk:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wpeel_v_v_side() {
+        let g = gen::erdos_renyi(10, 11, 60, 6);
+        let vc = count_per_vertex(&g, &CountOpts::default());
+        // Mirror graph for the brute-force expectation.
+        let edges_t: Vec<(u32, u32)> = g.edges().into_iter().map(|(u, v)| (v, u)).collect();
+        let gt = BipartiteGraph::from_edges(g.nv(), g.nu(), &edges_t);
+        let expect = brute::tip_numbers_u(&gt);
+        let store = WedgeStore::build(&g, Ranking::Degree);
+        let r =
+            wpeel_vertices(&g, &store, &vc.bu, &vc.bv, PeelSide::V, BucketKind::Julienne);
+        assert_eq!(r.tips, expect);
+    }
+
+    #[test]
+    fn wpeel_e_matches_brute_force() {
+        for seed in [2, 5] {
+            let g = gen::erdos_renyi(8, 9, 40, seed);
+            let expect = brute::wing_numbers(&g);
+            let be = count_per_edge(&g, &CountOpts::default());
+            for ranking in [Ranking::Side, Ranking::Degree] {
+                let store = WedgeStore::build(&g, ranking);
+                for bk in BucketKind::ALL {
+                    let r = wpeel_edges(&g, &store, &be, bk);
+                    assert_eq!(r.wings, expect, "seed={seed} {ranking:?} {bk:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wpeel_agrees_with_peel() {
+        let g = gen::planted_blocks(10, 10, 2, 5, 5, 0.9, 10, 7);
+        let vc = count_per_vertex(&g, &CountOpts::default());
+        let be = count_per_edge(&g, &CountOpts::default());
+        let store = WedgeStore::build(&g, Ranking::Degree);
+        let wv = wpeel_vertices(&g, &store, &vc.bu, &vc.bv, PeelSide::U, BucketKind::FibHeap);
+        let pv = super::super::vertex::peel_vertices(
+            &g,
+            &vc.bu,
+            &vc.bv,
+            &super::super::vertex::PeelVOpts {
+                side: PeelSide::U,
+                ..Default::default()
+            },
+        );
+        assert_eq!(wv.tips, pv.tips);
+        let we = wpeel_edges(&g, &store, &be, BucketKind::FibHeap);
+        let pe = super::super::edge::peel_edges(&g, &be, &Default::default());
+        assert_eq!(we.wings, pe.wings);
+    }
+}

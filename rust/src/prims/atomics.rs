@@ -1,0 +1,78 @@
+//! Atomic helpers: CAS-loop min/max and cache-line-padded counters.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// `a = min(a, v)` atomically; returns true if `a` changed.
+#[inline]
+pub fn fetch_min_u64(a: &AtomicU64, v: u64) -> bool {
+    let mut cur = a.load(Ordering::Relaxed);
+    while v < cur {
+        match a.compare_exchange_weak(cur, v, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(c) => cur = c,
+        }
+    }
+    false
+}
+
+/// `a = max(a, v)` atomically; returns true if `a` changed.
+#[inline]
+pub fn fetch_max_u64(a: &AtomicU64, v: u64) -> bool {
+    let mut cur = a.load(Ordering::Relaxed);
+    while v > cur {
+        match a.compare_exchange_weak(cur, v, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(c) => cur = c,
+        }
+    }
+    false
+}
+
+/// A cache-line-padded atomic counter (avoids false sharing when one
+/// counter per worker lives in a contiguous Vec).
+#[repr(align(64))]
+#[derive(Default)]
+pub struct PaddedCounter(pub AtomicUsize);
+
+impl PaddedCounter {
+    #[inline]
+    pub fn add(&self, v: usize) -> usize {
+        self.0.fetch_add(v, Ordering::Relaxed)
+    }
+    #[inline]
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prims::pool::{parallel_for, with_threads};
+
+    #[test]
+    fn min_max_converge_under_contention() {
+        with_threads(4, || {
+            let mn = AtomicU64::new(u64::MAX);
+            let mx = AtomicU64::new(0);
+            parallel_for(10_000, |i| {
+                let v = ((i as u64).wrapping_mul(2654435761)) % 100_000;
+                fetch_min_u64(&mn, v);
+                fetch_max_u64(&mx, v);
+            });
+            let vals: Vec<u64> =
+                (0..10_000).map(|i| ((i as u64).wrapping_mul(2654435761)) % 100_000).collect();
+            assert_eq!(mn.load(Ordering::Relaxed), *vals.iter().min().unwrap());
+            assert_eq!(mx.load(Ordering::Relaxed), *vals.iter().max().unwrap());
+        });
+    }
+
+    #[test]
+    fn padded_counter_is_cacheline_sized() {
+        assert_eq!(std::mem::align_of::<PaddedCounter>(), 64);
+        let c = PaddedCounter::default();
+        c.add(3);
+        c.add(4);
+        assert_eq!(c.get(), 7);
+    }
+}

@@ -1,0 +1,232 @@
+//! Phase-concurrent additive hash table (Shun–Blelloch style).
+//!
+//! Open addressing over power-of-two capacity with linear probing.
+//! Keys are `u64` (callers pack `(u32, u32)` endpoint pairs), values are
+//! `u64` counts combined by atomic add.  "Phase-concurrent": concurrent
+//! `insert_add`s are fine; iteration happens in a separate phase.
+//!
+//! The paper uses this table (with an atomic-add combiner) as the `Hash`
+//! wedge-aggregation strategy and for butterfly-count aggregation; space
+//! is proportional to the number of *distinct* keys, giving the
+//! `O(min(n^2, alpha*m))` bound of Lemma 4.3.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::pool::{num_threads, parallel_for_chunks};
+use super::rng::hash64;
+
+const EMPTY: u64 = u64::MAX;
+
+/// Concurrent `u64 -> u64` additive map.
+pub struct CountTable {
+    keys: Vec<AtomicU64>,
+    vals: Vec<AtomicU64>,
+    mask: usize,
+}
+
+impl CountTable {
+    /// Table sized for `n` distinct keys (load factor <= 0.5).
+    ///
+    /// Keys must never equal `u64::MAX` (reserved sentinel); packed
+    /// vertex/edge pairs never do.
+    pub fn with_capacity(n: usize) -> Self {
+        let cap = (2 * n.max(4)).next_power_of_two();
+        Self {
+            keys: (0..cap).map(|_| AtomicU64::new(EMPTY)).collect(),
+            vals: (0..cap).map(|_| AtomicU64::new(0)).collect(),
+            mask: cap - 1,
+        }
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Add `delta` to the count for `key` (insert if absent).
+    ///
+    /// Panics if the table is full — capacity is the caller's contract
+    /// (wedge aggregation sizes tables by the wedge-batch bound).
+    #[inline]
+    pub fn insert_add(&self, key: u64, delta: u64) {
+        debug_assert_ne!(key, EMPTY);
+        let mut i = (hash64(key) as usize) & self.mask;
+        for _probe in 0..=self.mask {
+            let k = self.keys[i].load(Ordering::Acquire);
+            if k == key {
+                self.vals[i].fetch_add(delta, Ordering::Relaxed);
+                return;
+            }
+            if k == EMPTY {
+                match self.keys[i].compare_exchange(
+                    EMPTY,
+                    key,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => {
+                        self.vals[i].fetch_add(delta, Ordering::Relaxed);
+                        return;
+                    }
+                    Err(found) if found == key => {
+                        self.vals[i].fetch_add(delta, Ordering::Relaxed);
+                        return;
+                    }
+                    Err(_) => { /* someone else claimed it; keep probing */ }
+                }
+            }
+            i = (i + 1) & self.mask;
+        }
+        panic!("CountTable full (capacity {})", self.capacity());
+    }
+
+    /// Read the count for `key` (0 if absent).  Safe concurrently with
+    /// inserts of *other* keys; exact after the insert phase.
+    #[inline]
+    pub fn get(&self, key: u64) -> u64 {
+        let mut i = (hash64(key) as usize) & self.mask;
+        for _probe in 0..=self.mask {
+            let k = self.keys[i].load(Ordering::Acquire);
+            if k == key {
+                return self.vals[i].load(Ordering::Relaxed);
+            }
+            if k == EMPTY {
+                return 0;
+            }
+            i = (i + 1) & self.mask;
+        }
+        0
+    }
+
+    /// Parallel iteration phase: `f(key, count)` for every occupied slot.
+    pub fn for_each(&self, f: impl Fn(u64, u64) + Sync) {
+        parallel_for_chunks(self.keys.len(), |r| {
+            for i in r {
+                let k = self.keys[i].load(Ordering::Acquire);
+                if k != EMPTY {
+                    f(k, self.vals[i].load(Ordering::Relaxed));
+                }
+            }
+        });
+    }
+
+    /// Drain to a vector of `(key, count)` pairs (unordered).
+    pub fn to_vec(&self) -> Vec<(u64, u64)> {
+        let t = num_threads();
+        if t <= 1 {
+            let mut out = Vec::new();
+            for i in 0..self.keys.len() {
+                let k = self.keys[i].load(Ordering::Acquire);
+                if k != EMPTY {
+                    out.push((k, self.vals[i].load(Ordering::Relaxed)));
+                }
+            }
+            return out;
+        }
+        let out = std::sync::Mutex::new(Vec::new());
+        parallel_for_chunks(self.keys.len(), |r| {
+            let mut local = Vec::new();
+            for i in r {
+                let k = self.keys[i].load(Ordering::Acquire);
+                if k != EMPTY {
+                    local.push((k, self.vals[i].load(Ordering::Relaxed)));
+                }
+            }
+            out.lock().unwrap().extend(local);
+        });
+        out.into_inner().unwrap()
+    }
+
+    /// Number of occupied slots (iteration-phase exact).
+    pub fn len(&self) -> usize {
+        (0..self.keys.len())
+            .filter(|&i| self.keys[i].load(Ordering::Acquire) != EMPTY)
+            .count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Pack two `u32` ids into a `u64` key (order-sensitive).
+#[inline]
+pub fn pack(a: u32, b: u32) -> u64 {
+    ((a as u64) << 32) | b as u64
+}
+
+/// Unpack a `u64` key into two `u32` ids.
+#[inline]
+pub fn unpack(k: u64) -> (u32, u32) {
+    ((k >> 32) as u32, k as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prims::pool::{parallel_for, with_threads};
+    use std::collections::HashMap;
+
+    #[test]
+    fn concurrent_adds_are_exact() {
+        for t in [1, 2, 4, 8] {
+            with_threads(t, || {
+                let table = CountTable::with_capacity(1000);
+                // 100k inserts over 1000 distinct keys.
+                parallel_for(100_000, |i| {
+                    table.insert_add((i % 1000) as u64, 1);
+                });
+                for k in 0..1000u64 {
+                    assert_eq!(table.get(k), 100, "key {k} threads {t}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn matches_hashmap_model() {
+        let mut r = crate::prims::rng::Pcg32::new(11);
+        let mut model: HashMap<u64, u64> = HashMap::new();
+        let table = CountTable::with_capacity(5000);
+        for _ in 0..20_000 {
+            let k = r.next_below(5000);
+            let d = r.next_below(7) + 1;
+            *model.entry(k).or_insert(0) += d;
+            table.insert_add(k, d);
+        }
+        assert_eq!(table.len(), model.len());
+        for (k, v) in &model {
+            assert_eq!(table.get(*k), *v);
+        }
+        let mut drained = table.to_vec();
+        drained.sort_unstable();
+        let mut expect: Vec<(u64, u64)> = model.into_iter().collect();
+        expect.sort_unstable();
+        assert_eq!(drained, expect);
+    }
+
+    #[test]
+    fn get_absent_is_zero() {
+        let table = CountTable::with_capacity(16);
+        table.insert_add(3, 5);
+        assert_eq!(table.get(4), 0);
+        assert_eq!(table.get(3), 5);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for (a, b) in [(0, 0), (1, 2), (u32::MAX, 0), (12345, u32::MAX - 1)] {
+            assert_eq!(unpack(pack(a, b)), (a, b));
+        }
+        assert_ne!(pack(1, 2), pack(2, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "CountTable full")]
+    fn overflow_panics() {
+        let table = CountTable::with_capacity(2); // cap 8
+        for k in 0..9 {
+            table.insert_add(k, 1);
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Parallel histogram (Dhulipala–Blelloch–Shun style).
+//!
+//! Counts occurrences of `u64` keys by hash-partitioning keys into
+//! `O(#workers)` buckets (pass 1: per-worker bucket counts + scatter),
+//! then counting within each bucket in parallel with a local open-address
+//! table.  Matches the semisort work/span bound but trades the full sort
+//! for two scatter passes — the paper's `Hist` aggregation option.
+
+use std::collections::HashMap;
+
+use super::pool::{num_threads, parallel_for_chunks, SyncPtr};
+use super::rng::hash64;
+use super::scan::prefix_sum;
+
+/// Count key multiplicities; returns `(key, count)` pairs (unordered
+/// across buckets, grouped within).
+pub fn histogram(keys: &[u64]) -> Vec<(u64, u64)> {
+    let n = keys.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let t = num_threads();
+    if t <= 1 || n < 8192 {
+        let mut m: HashMap<u64, u64> = HashMap::with_capacity(n.min(1 << 16));
+        for &k in keys {
+            *m.entry(k).or_insert(0) += 1;
+        }
+        return m.into_iter().collect();
+    }
+    let nbuckets = (4 * t).next_power_of_two();
+    let bmask = (nbuckets - 1) as u64;
+    let nblocks = t;
+    let block = n.div_ceil(nblocks);
+    // Pass 1: per-(block, bucket) counts.
+    let mut counts = vec![0usize; nblocks * nbuckets];
+    {
+        let cp = SyncPtr(counts.as_mut_ptr());
+        parallel_for_chunks(nblocks, |r| {
+            for b in r {
+                let lo = b * block;
+                let hi = ((b + 1) * block).min(n);
+                let base = b * nbuckets;
+                for i in lo..hi {
+                    let bk = (hash64(keys[i]) & bmask) as usize;
+                    unsafe { *cp.get().add(base + bk) += 1 };
+                }
+            }
+        });
+    }
+    // Column-major offsets so each bucket's slots are contiguous.
+    let mut col = vec![0usize; nblocks * nbuckets];
+    for bk in 0..nbuckets {
+        for b in 0..nblocks {
+            col[bk * nblocks + b] = counts[b * nbuckets + bk];
+        }
+    }
+    let (offsets, _) = prefix_sum(&col);
+    // Pass 2: scatter keys into bucket-contiguous scratch.
+    let mut scratch = vec![0u64; n];
+    {
+        let sp = SyncPtr(scratch.as_mut_ptr());
+        let offsets = &offsets;
+        parallel_for_chunks(nblocks, |r| {
+            for b in r {
+                let lo = b * block;
+                let hi = ((b + 1) * block).min(n);
+                let mut cursor: Vec<usize> =
+                    (0..nbuckets).map(|bk| offsets[bk * nblocks + b]).collect();
+                for i in lo..hi {
+                    let bk = (hash64(keys[i]) & bmask) as usize;
+                    unsafe { *sp.get().add(cursor[bk]) = keys[i] };
+                    cursor[bk] += 1;
+                }
+            }
+        });
+    }
+    // Pass 3: count within each bucket in parallel.
+    let bucket_start: Vec<usize> = (0..nbuckets).map(|bk| offsets[bk * nblocks]).collect();
+    let out = std::sync::Mutex::new(Vec::with_capacity(n / 4));
+    parallel_for_chunks(nbuckets, |r| {
+        let mut local: Vec<(u64, u64)> = Vec::new();
+        for bk in r {
+            let lo = bucket_start[bk];
+            let hi = if bk + 1 < nbuckets { bucket_start[bk + 1] } else { n };
+            if lo >= hi {
+                continue;
+            }
+            let mut m: HashMap<u64, u64> = HashMap::with_capacity((hi - lo).min(1 << 14));
+            for &k in &scratch[lo..hi] {
+                *m.entry(k).or_insert(0) += 1;
+            }
+            local.extend(m);
+        }
+        out.lock().unwrap().extend(local);
+    });
+    out.into_inner().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prims::pool::with_threads;
+    use crate::prims::rng::Pcg32;
+
+    fn model(keys: &[u64]) -> Vec<(u64, u64)> {
+        let mut m: HashMap<u64, u64> = HashMap::new();
+        for &k in keys {
+            *m.entry(k).or_insert(0) += 1;
+        }
+        let mut v: Vec<(u64, u64)> = m.into_iter().collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn histogram_matches_model() {
+        let mut r = Pcg32::new(21);
+        for &n in &[0usize, 1, 100, 9000, 40_000] {
+            let keys: Vec<u64> = (0..n).map(|_| r.next_below(777)).collect();
+            for t in [1, 2, 4] {
+                with_threads(t, || {
+                    let mut h = histogram(&keys);
+                    h.sort_unstable();
+                    assert_eq!(h, model(&keys), "n={n} t={t}");
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_keys() {
+        with_threads(4, || {
+            let mut keys = vec![42u64; 50_000];
+            keys.extend(0..100u64);
+            let mut h = histogram(&keys);
+            h.sort_unstable();
+            // keys 0..100 already include 42, so 100 distinct keys total.
+            assert_eq!(h.len(), 100);
+            assert!(h.contains(&(42, 50_001)));
+        });
+    }
+}

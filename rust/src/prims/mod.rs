@@ -1,0 +1,36 @@
+//! Parallel-primitive substrate.
+//!
+//! The paper builds on Cilk Plus and the Problem Based Benchmark Suite
+//! (PBBS).  Neither exists in this environment, so this module is a
+//! from-scratch equivalent on `std::thread::scope`:
+//!
+//! * [`pool`] — fork-join `parallel_for` (static chunking) and a
+//!   self-scheduling dynamic variant (the paper's "wedge-aware" batching
+//!   needs load balancing by wedge count, not vertex count).
+//! * [`scan`] — parallel prefix sum and `filter`/`pack`.
+//! * [`sort`] — parallel merge sort over `u64`-keyed records plus an
+//!   LSD radix sort (the paper uses PBBS sample sort; merge sort has the
+//!   same work bound and much simpler code).
+//! * [`semisort`] — group-equal-keys via sorting (Gu et al. semantics:
+//!   equal keys contiguous, no total-order guarantee needed).
+//! * [`hashtable`] — phase-concurrent additive hash table with linear
+//!   probing and atomic-add value combining (Shun–Blelloch style).
+//! * [`histogram`] — parallel counting of `u64` keys by hash
+//!   partitioning + local counting (Dhulipala et al. style).
+//! * [`atomics`] — CAS min/max helpers.
+//! * [`rng`] — splittable PCG32 used by generators, sparsification, and
+//!   the property-test harness.
+
+pub mod atomics;
+pub mod hashtable;
+pub mod histogram;
+pub mod pool;
+pub mod rng;
+pub mod scan;
+pub mod semisort;
+pub mod sort;
+
+pub use hashtable::CountTable;
+pub use pool::{num_threads, parallel_for, parallel_for_chunks, parallel_for_dynamic, with_threads};
+pub use scan::{filter, pack_indices, prefix_sum};
+pub use sort::{par_sort, par_sort_by_key};

@@ -1,0 +1,279 @@
+//! Fork-join parallelism on `std::thread::scope`.
+//!
+//! Thread count resolution order: the innermost [`with_threads`] scope,
+//! then the `PARBUTTERFLY_THREADS` environment variable, then
+//! `std::thread::available_parallelism()`.  With one thread every
+//! combinator degenerates to an inline sequential loop (no spawn cost),
+//! which is also the fast path on the single-core benchmark substrate —
+//! thread sweeps in the benches exercise the real fork-join machinery.
+//!
+//! Two scheduling modes mirror the paper's batching options:
+//! * static chunking ([`parallel_for_chunks`]) — one contiguous range per
+//!   worker, the "simple batching" layout (preserves vertex locality);
+//! * dynamic self-scheduling ([`parallel_for_dynamic`]) — workers claim
+//!   fixed-size grains from an atomic counter, the "wedge-aware" layout
+//!   (balances skewed per-item work).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+thread_local! {
+    static OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+fn env_default() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("PARBUTTERFLY_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&t| t > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Number of worker threads parallel combinators will use.
+pub fn num_threads() -> usize {
+    OVERRIDE.with(|o| o.get()).unwrap_or_else(env_default)
+}
+
+/// Run `f` with the thread count pinned to `t` (scoped, re-entrant).
+///
+/// Benches use this for the thread-sweep figures (Figs. 8/9/17/18).
+pub fn with_threads<R>(t: usize, f: impl FnOnce() -> R) -> R {
+    assert!(t > 0, "thread count must be positive");
+    let prev = OVERRIDE.with(|o| o.replace(Some(t)));
+    let out = f();
+    OVERRIDE.with(|o| o.set(prev));
+    out
+}
+
+/// Minimum items per spawned chunk; below this we run inline.
+const MIN_GRAIN: usize = 1024;
+
+/// Parallel loop over `0..n`, static chunking, one chunk per worker.
+pub fn parallel_for_chunks<F>(n: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let t = num_threads();
+    if t <= 1 || n < MIN_GRAIN.min(2 * t) {
+        if n > 0 {
+            f(0..n);
+        }
+        return;
+    }
+    let nchunks = t.min(n);
+    let chunk = n.div_ceil(nchunks);
+    // Propagate the thread-count override into the spawned workers so
+    // nested parallel_for calls see a consistent budget (they run inline:
+    // we already used the budget at this level).
+    std::thread::scope(|s| {
+        for c in 0..nchunks {
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || {
+                OVERRIDE.with(|o| o.set(Some(1)));
+                f(lo..hi)
+            });
+        }
+    });
+}
+
+/// Parallel loop over `0..n`, one index at a time (static chunking).
+pub fn parallel_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    parallel_for_chunks(n, |r| {
+        for i in r {
+            f(i)
+        }
+    });
+}
+
+/// Self-scheduling parallel loop: workers claim `grain`-sized ranges
+/// from a shared atomic counter.  Use when per-index work is skewed
+/// (wedge-aware batching, peeling frontiers).
+pub fn parallel_for_dynamic<F>(n: usize, grain: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let grain = grain.max(1);
+    let t = num_threads();
+    if t <= 1 || n <= grain {
+        if n > 0 {
+            f(0..n);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..t.min(n.div_ceil(grain)) {
+            let f = &f;
+            let next = &next;
+            s.spawn(move || {
+                OVERRIDE.with(|o| o.set(Some(1)));
+                loop {
+                    let lo = next.fetch_add(grain, Ordering::Relaxed);
+                    if lo >= n {
+                        break;
+                    }
+                    f(lo..(lo + grain).min(n));
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map producing a `Vec<T>`.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots = SyncPtr(out.as_mut_ptr());
+        parallel_for_chunks(n, |r| {
+            for i in r {
+                // SAFETY: each index written by exactly one worker.
+                unsafe { *slots.get().add(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+/// Parallel reduce: `reduce(map(0), map(1), ...)` with identity `id`.
+pub fn parallel_reduce<T, M, R>(n: usize, id: T, map: M, reduce: R) -> T
+where
+    T: Send + Clone,
+    M: Fn(usize) -> T + Sync,
+    R: Fn(T, T) -> T + Sync + Send,
+{
+    let t = num_threads();
+    if t <= 1 || n < MIN_GRAIN.min(2 * t) {
+        let mut acc = id;
+        for i in 0..n {
+            acc = reduce(acc, map(i));
+        }
+        return acc;
+    }
+    let nchunks = t.min(n);
+    let chunk = n.div_ceil(nchunks);
+    let partials = std::sync::Mutex::new(Vec::with_capacity(nchunks));
+    std::thread::scope(|s| {
+        for c in 0..nchunks {
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let (map, reduce, partials, id) = (&map, &reduce, &partials, id.clone());
+            s.spawn(move || {
+                OVERRIDE.with(|o| o.set(Some(1)));
+                let mut acc = id;
+                for i in lo..hi {
+                    acc = reduce(acc, map(i));
+                }
+                partials.lock().unwrap().push(acc);
+            });
+        }
+    });
+    let mut acc = id;
+    for p in partials.into_inner().unwrap() {
+        acc = reduce(acc, p);
+    }
+    acc
+}
+
+/// Shareable raw pointer for disjoint-index parallel writes.
+///
+/// Accessed through [`SyncPtr::get`] (not the field) so that edition-2021
+/// closures capture the `Sync` wrapper, not the raw pointer inside.
+pub(crate) struct SyncPtr<T>(pub *mut T);
+unsafe impl<T> Sync for SyncPtr<T> {}
+unsafe impl<T> Send for SyncPtr<T> {}
+
+impl<T> SyncPtr<T> {
+    #[inline(always)]
+    pub(crate) fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        for t in [1, 2, 4, 7] {
+            with_threads(t, || {
+                let n = 10_000;
+                let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                parallel_for(n, |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+            });
+        }
+    }
+
+    #[test]
+    fn dynamic_visits_every_index_once() {
+        for t in [1, 3, 8] {
+            with_threads(t, || {
+                let n = 5_000;
+                let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                parallel_for_dynamic(n, 64, |r| {
+                    for i in r {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+            });
+        }
+    }
+
+    #[test]
+    fn map_and_reduce_agree_with_sequential() {
+        for t in [1, 2, 5] {
+            with_threads(t, || {
+                let v = parallel_map(1000, |i| (i * i) as u64);
+                assert_eq!(v.len(), 1000);
+                assert_eq!(v[999], 999 * 999);
+                let s = parallel_reduce(1000, 0u64, |i| i as u64, |a, b| a + b);
+                assert_eq!(s, 999 * 1000 / 2);
+            });
+        }
+    }
+
+    #[test]
+    fn with_threads_scopes_and_restores() {
+        let outer = num_threads();
+        with_threads(3, || {
+            assert_eq!(num_threads(), 3);
+            with_threads(2, || assert_eq!(num_threads(), 2));
+            assert_eq!(num_threads(), 3);
+        });
+        assert_eq!(num_threads(), outer);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        parallel_for(0, |_| panic!("must not be called"));
+        parallel_for_dynamic(0, 16, |_| panic!("must not be called"));
+        let v = parallel_map(1, |i| i);
+        assert_eq!(v, vec![0]);
+    }
+}

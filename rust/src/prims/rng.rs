@@ -1,0 +1,138 @@
+//! Small deterministic PRNG (PCG32) — graph generators, sparsification,
+//! ranking tie-breaks, and the property-test harness all need seeded,
+//! splittable randomness; no `rand` crate is available offline.
+
+/// PCG-XSH-RR 64/32 (O'Neill 2014).
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut s = Self { state: 0, inc: (stream << 1) | 1 };
+        s.next_u32();
+        s.state = s.state.wrapping_add(seed);
+        s.next_u32();
+        s
+    }
+
+    /// Derive an independent generator (new stream) — used to hand each
+    /// parallel worker its own deterministic sequence.
+    pub fn split(&mut self, salt: u64) -> Pcg32 {
+        Pcg32::with_stream(self.next_u64() ^ salt, salt.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` (Lemire rejection-free approximation is
+    /// fine for our purposes; we use the widening-multiply method).
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn next_bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+}
+
+/// 64-bit finalizer (splitmix64) — used as the hash for hash tables,
+/// histograms, and colorful sparsification.
+#[inline]
+pub fn hash64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg32::new(123);
+        let mut b = Pcg32::new(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn next_below_in_range_and_covers() {
+        let mut r = Pcg32::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.next_below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval_roughly_uniform() {
+        let mut r = Pcg32::new(99);
+        let n = 10_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut base = Pcg32::new(5);
+        let mut s1 = base.split(1);
+        let mut s2 = base.split(2);
+        let same = (0..64).filter(|_| s1.next_u32() == s2.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn hash64_mixes() {
+        assert_ne!(hash64(0), 0);
+        assert_ne!(hash64(1), hash64(2));
+        // Avalanche sanity: flipping one input bit flips ~half the output.
+        let a = hash64(0x1234_5678);
+        let b = hash64(0x1234_5679);
+        let flips = (a ^ b).count_ones();
+        assert!((16..=48).contains(&flips), "flips={flips}");
+    }
+}

@@ -1,0 +1,215 @@
+//! Parallel prefix sum, filter, and pack.
+//!
+//! Classic two-pass blocked scan: per-block sums, sequential scan of the
+//! (tiny) block-sum array, then a parallel down-sweep.  `O(n)` work,
+//! `O(log n)` span with the usual block-count caveat.
+
+use super::pool::{num_threads, parallel_for_chunks, SyncPtr};
+
+/// Exclusive prefix sum of `a`; returns `(sums, total)` where
+/// `sums[i] = a[0] + ... + a[i-1]`.
+pub fn prefix_sum(a: &[usize]) -> (Vec<usize>, usize) {
+    let n = a.len();
+    if n == 0 {
+        return (Vec::new(), 0);
+    }
+    let t = num_threads();
+    if t <= 1 || n < 4096 {
+        let mut out = Vec::with_capacity(n);
+        let mut acc = 0usize;
+        for &x in a {
+            out.push(acc);
+            acc += x;
+        }
+        return (out, acc);
+    }
+    let nblocks = t.min(n);
+    let block = n.div_ceil(nblocks);
+    // Pass 1: per-block sums.
+    let mut block_sums = vec![0usize; nblocks];
+    {
+        let bs = SyncPtr(block_sums.as_mut_ptr());
+        parallel_for_chunks(nblocks, |r| {
+            for b in r {
+                let lo = b * block;
+                let hi = ((b + 1) * block).min(n);
+                let mut s = 0usize;
+                for i in lo..hi {
+                    s += a[i];
+                }
+                unsafe { *bs.get().add(b) = s };
+            }
+        });
+    }
+    // Scan block sums sequentially (nblocks == #threads, tiny).
+    let mut acc = 0usize;
+    let mut block_offsets = vec![0usize; nblocks];
+    for b in 0..nblocks {
+        block_offsets[b] = acc;
+        acc += block_sums[b];
+    }
+    let total = acc;
+    // Pass 2: down-sweep.
+    let mut out = vec![0usize; n];
+    {
+        let op = SyncPtr(out.as_mut_ptr());
+        let offs = &block_offsets;
+        parallel_for_chunks(nblocks, |r| {
+            for b in r {
+                let lo = b * block;
+                let hi = ((b + 1) * block).min(n);
+                let mut s = offs[b];
+                for i in lo..hi {
+                    unsafe { *op.get().add(i) = s };
+                    s += a[i];
+                }
+            }
+        });
+    }
+    (out, total)
+}
+
+/// Parallel filter: elements of `a` satisfying `pred`, order preserved.
+pub fn filter<T: Clone + Send + Sync>(a: &[T], pred: impl Fn(&T) -> bool + Sync) -> Vec<T> {
+    let n = a.len();
+    let t = num_threads();
+    if t <= 1 || n < 4096 {
+        return a.iter().filter(|x| pred(x)).cloned().collect();
+    }
+    let nblocks = t.min(n);
+    let block = n.div_ceil(nblocks);
+    let mut counts = vec![0usize; nblocks];
+    {
+        let cp = SyncPtr(counts.as_mut_ptr());
+        let pred = &pred;
+        parallel_for_chunks(nblocks, |r| {
+            for b in r {
+                let lo = b * block;
+                let hi = ((b + 1) * block).min(n);
+                let c = a[lo..hi].iter().filter(|x| pred(x)).count();
+                unsafe { *cp.get().add(b) = c };
+            }
+        });
+    }
+    let (offsets, total) = prefix_sum(&counts);
+    let mut out: Vec<T> = Vec::with_capacity(total);
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        out.set_len(total)
+    };
+    {
+        let op = SyncPtr(out.as_mut_ptr());
+        let pred = &pred;
+        let offsets = &offsets;
+        parallel_for_chunks(nblocks, |r| {
+            for b in r {
+                let lo = b * block;
+                let hi = ((b + 1) * block).min(n);
+                let mut w = offsets[b];
+                for x in &a[lo..hi] {
+                    if pred(x) {
+                        unsafe { std::ptr::write(op.get().add(w), x.clone()) };
+                        w += 1;
+                    }
+                }
+            }
+        });
+    }
+    out
+}
+
+/// Indices `i` in `0..n` with `pred(i)`, in increasing order.
+pub fn pack_indices(n: usize, pred: impl Fn(usize) -> bool + Sync) -> Vec<usize> {
+    let t = num_threads();
+    if t <= 1 || n < 4096 {
+        return (0..n).filter(|&i| pred(i)).collect();
+    }
+    let nblocks = t.min(n);
+    let block = n.div_ceil(nblocks);
+    let mut counts = vec![0usize; nblocks];
+    {
+        let cp = SyncPtr(counts.as_mut_ptr());
+        let pred = &pred;
+        parallel_for_chunks(nblocks, |r| {
+            for b in r {
+                let lo = b * block;
+                let hi = ((b + 1) * block).min(n);
+                let c = (lo..hi).filter(|&i| pred(i)).count();
+                unsafe { *cp.get().add(b) = c };
+            }
+        });
+    }
+    let (offsets, total) = prefix_sum(&counts);
+    let mut out = vec![0usize; total];
+    {
+        let op = SyncPtr(out.as_mut_ptr());
+        let pred = &pred;
+        let offsets = &offsets;
+        parallel_for_chunks(nblocks, |r| {
+            for b in r {
+                let lo = b * block;
+                let hi = ((b + 1) * block).min(n);
+                let mut w = offsets[b];
+                for i in lo..hi {
+                    if pred(i) {
+                        unsafe { *op.get().add(w) = i };
+                        w += 1;
+                    }
+                }
+            }
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prims::pool::with_threads;
+
+    #[test]
+    fn prefix_sum_matches_sequential() {
+        for t in [1, 2, 4] {
+            with_threads(t, || {
+                let a: Vec<usize> = (0..10_000).map(|i| (i * 7 + 3) % 11).collect();
+                let (sums, total) = prefix_sum(&a);
+                let mut acc = 0;
+                for i in 0..a.len() {
+                    assert_eq!(sums[i], acc, "index {i}");
+                    acc += a[i];
+                }
+                assert_eq!(total, acc);
+            });
+        }
+    }
+
+    #[test]
+    fn prefix_sum_empty() {
+        let (s, t) = prefix_sum(&[]);
+        assert!(s.is_empty());
+        assert_eq!(t, 0);
+    }
+
+    #[test]
+    fn filter_preserves_order() {
+        for t in [1, 3] {
+            with_threads(t, || {
+                let a: Vec<u32> = (0..20_000).collect();
+                let f = filter(&a, |x| x % 3 == 0);
+                let expect: Vec<u32> = (0..20_000).filter(|x| x % 3 == 0).collect();
+                assert_eq!(f, expect);
+            });
+        }
+    }
+
+    #[test]
+    fn pack_indices_matches_filter() {
+        for t in [1, 4] {
+            with_threads(t, || {
+                let idx = pack_indices(9_999, |i| i % 7 == 2);
+                let expect: Vec<usize> = (0..9_999).filter(|i| i % 7 == 2).collect();
+                assert_eq!(idx, expect);
+            });
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Semisort-based key aggregation (Gu–Shun–Sun–Blelloch semantics).
+//!
+//! [`aggregate_counts`] groups a sequence of `u64` keys and returns
+//! `(key, multiplicity)` pairs.  We realize the semisort by sorting —
+//! the paper's implementation also switched from true semisort to PBBS
+//! sample sort for cache efficiency (§3.1.2) — then computing segment
+//! boundaries with a parallel pack.
+
+use super::pool::{num_threads, parallel_for_chunks, SyncPtr};
+use super::scan::prefix_sum;
+use super::sort::{par_sort, radix_sort_u64};
+
+/// Group equal keys; returns `(key, count)` pairs sorted by key.
+pub fn aggregate_counts(mut keys: Vec<u64>, use_radix: bool) -> Vec<(u64, u64)> {
+    if keys.is_empty() {
+        return Vec::new();
+    }
+    if use_radix {
+        radix_sort_u64(&mut keys);
+    } else {
+        par_sort(&mut keys);
+    }
+    counts_of_sorted(&keys)
+}
+
+/// Segment a *sorted* key sequence into `(key, count)` pairs.
+pub fn counts_of_sorted(keys: &[u64]) -> Vec<(u64, u64)> {
+    let n = keys.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let t = num_threads();
+    if t <= 1 || n < 8192 {
+        let mut out: Vec<(u64, u64)> = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let mut j = i + 1;
+            while j < n && keys[j] == keys[i] {
+                j += 1;
+            }
+            out.push((keys[i], (j - i) as u64));
+            i = j;
+        }
+        return out;
+    }
+    // Parallel: find segment heads, prefix-sum them into output slots.
+    let nblocks = t.min(n);
+    let block = n.div_ceil(nblocks);
+    let mut head_counts = vec![0usize; nblocks];
+    {
+        let hp = SyncPtr(head_counts.as_mut_ptr());
+        parallel_for_chunks(nblocks, |r| {
+            for b in r {
+                let lo = b * block;
+                let hi = ((b + 1) * block).min(n);
+                let mut c = 0usize;
+                for i in lo..hi {
+                    if i == 0 || keys[i] != keys[i - 1] {
+                        c += 1;
+                    }
+                }
+                unsafe { *hp.get().add(b) = c };
+            }
+        });
+    }
+    let (offsets, nseg) = prefix_sum(&head_counts);
+    let mut heads = vec![0usize; nseg];
+    {
+        let hp = SyncPtr(heads.as_mut_ptr());
+        let offsets = &offsets;
+        parallel_for_chunks(nblocks, |r| {
+            for b in r {
+                let lo = b * block;
+                let hi = ((b + 1) * block).min(n);
+                let mut w = offsets[b];
+                for i in lo..hi {
+                    if i == 0 || keys[i] != keys[i - 1] {
+                        unsafe { *hp.get().add(w) = i };
+                        w += 1;
+                    }
+                }
+            }
+        });
+    }
+    let mut out = vec![(0u64, 0u64); nseg];
+    {
+        let op = SyncPtr(out.as_mut_ptr());
+        let heads = &heads;
+        parallel_for_chunks(nseg, |r| {
+            for s in r {
+                let start = heads[s];
+                let end = if s + 1 < nseg { heads[s + 1] } else { n };
+                unsafe { *op.get().add(s) = (keys[start], (end - start) as u64) };
+            }
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prims::pool::with_threads;
+    use crate::prims::rng::Pcg32;
+    use std::collections::HashMap;
+
+    fn model(keys: &[u64]) -> Vec<(u64, u64)> {
+        let mut m: HashMap<u64, u64> = HashMap::new();
+        for &k in keys {
+            *m.entry(k).or_insert(0) += 1;
+        }
+        let mut v: Vec<(u64, u64)> = m.into_iter().collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn aggregate_matches_model() {
+        let mut r = Pcg32::new(3);
+        for &n in &[0usize, 1, 17, 5000, 30_000] {
+            let keys: Vec<u64> = (0..n).map(|_| r.next_below(500)).collect();
+            for t in [1, 4] {
+                with_threads(t, || {
+                    for radix in [false, true] {
+                        assert_eq!(
+                            aggregate_counts(keys.clone(), radix),
+                            model(&keys),
+                            "n={n} t={t} radix={radix}"
+                        );
+                    }
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn all_equal_and_all_distinct() {
+        with_threads(2, || {
+            assert_eq!(aggregate_counts(vec![7; 10_000], true), vec![(7, 10_000)]);
+            let keys: Vec<u64> = (0..10_000).collect();
+            let out = aggregate_counts(keys, false);
+            assert_eq!(out.len(), 10_000);
+            assert!(out.iter().all(|&(_, c)| c == 1));
+        });
+    }
+}

@@ -1,0 +1,201 @@
+//! Parallel sorting.
+//!
+//! * [`par_sort`] / [`par_sort_by_key`] — parallel merge sort: split into
+//!   per-worker runs, sort each with the std unstable sort, then merge
+//!   runs pairwise in parallel rounds.  `O(n log n)` work, `O(log^2 n)`-ish
+//!   span; the paper uses PBBS sample sort for the same role (wedge
+//!   aggregation by sorting).
+//! * [`radix_sort_u64`] — LSD radix sort (8-bit digits) for dense `u64`
+//!   keys; used by semisort when the key universe is known to be packed.
+
+use super::pool::{num_threads, parallel_for_chunks, with_threads, SyncPtr};
+
+/// Sort a vector in parallel (unstable within equal keys).
+pub fn par_sort<T: Ord + Clone + Send + Sync>(v: &mut Vec<T>) {
+    par_sort_by_key(v, |x| x.clone());
+}
+
+/// Sort by an extracted key in parallel (unstable within equal keys).
+pub fn par_sort_by_key<T, K, F>(v: &mut Vec<T>, key: F)
+where
+    T: Clone + Send + Sync,
+    K: Ord,
+    F: Fn(&T) -> K + Sync,
+{
+    let n = v.len();
+    let t = num_threads();
+    if t <= 1 || n < 8192 {
+        v.sort_unstable_by(|a, b| key(a).cmp(&key(b)));
+        return;
+    }
+    let nruns = t.next_power_of_two().min(n);
+    let run = n.div_ceil(nruns);
+    // Sort runs in parallel.
+    {
+        let base = SyncPtr(v.as_mut_ptr());
+        let key = &key;
+        parallel_for_chunks(nruns, |r| {
+            for b in r {
+                let lo = b * run;
+                let hi = ((b + 1) * run).min(n);
+                if lo < hi {
+                    // SAFETY: runs are disjoint slices of v.
+                    let s = unsafe { std::slice::from_raw_parts_mut(base.get().add(lo), hi - lo) };
+                    s.sort_unstable_by(|a, b| key(a).cmp(&key(b)));
+                }
+            }
+        });
+    }
+    // Merge runs pairwise, ping-ponging between v and a scratch buffer.
+    let mut src: Vec<T> = v.clone();
+    let mut dst: Vec<T> = v.clone();
+    let mut width = run;
+    let mut rounds = 0usize;
+    while width < n {
+        let npairs = n.div_ceil(2 * width);
+        {
+            let dp = SyncPtr(dst.as_mut_ptr());
+            let src = &src;
+            let key = &key;
+            parallel_for_chunks(npairs, |r| {
+                for p in r {
+                    let lo = p * 2 * width;
+                    let mid = (lo + width).min(n);
+                    let hi = (lo + 2 * width).min(n);
+                    merge_into(&src[lo..mid], &src[mid..hi], key, unsafe {
+                        std::slice::from_raw_parts_mut(dp.get().add(lo), hi - lo)
+                    });
+                }
+            });
+        }
+        std::mem::swap(&mut src, &mut dst);
+        width *= 2;
+        rounds += 1;
+    }
+    if rounds > 0 {
+        *v = src;
+    }
+}
+
+fn merge_into<T: Clone, K: Ord>(a: &[T], b: &[T], key: &(impl Fn(&T) -> K + ?Sized), out: &mut [T]) {
+    let (mut i, mut j, mut w) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        if key(&a[i]) <= key(&b[j]) {
+            out[w] = a[i].clone();
+            i += 1;
+        } else {
+            out[w] = b[j].clone();
+            j += 1;
+        }
+        w += 1;
+    }
+    while i < a.len() {
+        out[w] = a[i].clone();
+        i += 1;
+        w += 1;
+    }
+    while j < b.len() {
+        out[w] = b[j].clone();
+        j += 1;
+        w += 1;
+    }
+}
+
+/// LSD radix sort of `u64` keys, 8 bits per pass, skipping dead digits.
+///
+/// Sequential per pass but cache-friendly; used for packed wedge keys
+/// whose high bits are zero (then only a few passes run).
+pub fn radix_sort_u64(v: &mut Vec<u64>) {
+    let n = v.len();
+    if n < 2 {
+        return;
+    }
+    let max = with_threads(num_threads(), || v.iter().copied().max().unwrap_or(0));
+    let buf = vec![0u64; n];
+    let mut shift = 0u32;
+    let mut src_is_v = true;
+    while shift < 64 && (max >> shift) != 0 {
+        let mut counts = [0usize; 256];
+        {
+            let src: &[u64] = if src_is_v { v } else { &buf };
+            for &x in src {
+                counts[((x >> shift) & 0xff) as usize] += 1;
+            }
+            let mut acc = 0usize;
+            let mut offsets = [0usize; 256];
+            for d in 0..256 {
+                offsets[d] = acc;
+                acc += counts[d];
+            }
+            let dst_ptr = if src_is_v { buf.as_ptr() as *mut u64 } else { v.as_ptr() as *mut u64 };
+            for &x in src {
+                let d = ((x >> shift) & 0xff) as usize;
+                unsafe { *dst_ptr.add(offsets[d]) = x };
+                offsets[d] += 1;
+            }
+        }
+        src_is_v = !src_is_v;
+        shift += 8;
+    }
+    if !src_is_v {
+        v.copy_from_slice(&buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prims::pool::with_threads;
+    use crate::prims::rng::Pcg32;
+
+    fn random_vec(n: usize, seed: u64) -> Vec<u64> {
+        let mut r = Pcg32::new(seed);
+        (0..n).map(|_| r.next_u64() % 1_000_000).collect()
+    }
+
+    #[test]
+    fn par_sort_matches_std() {
+        for t in [1, 2, 4] {
+            with_threads(t, || {
+                for n in [0, 1, 5, 100, 8192, 50_000] {
+                    let mut v = random_vec(n, 42 + n as u64);
+                    let mut expect = v.clone();
+                    expect.sort_unstable();
+                    par_sort(&mut v);
+                    assert_eq!(v, expect, "n={n} t={t}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn par_sort_by_key_reverse() {
+        with_threads(4, || {
+            let mut v: Vec<u64> = random_vec(20_000, 7);
+            par_sort_by_key(&mut v, |x| u64::MAX - *x);
+            for w in v.windows(2) {
+                assert!(w[0] >= w[1]);
+            }
+        });
+    }
+
+    #[test]
+    fn radix_matches_std() {
+        for n in [0, 1, 3, 1000, 30_000] {
+            let mut v = random_vec(n, 9 + n as u64);
+            let mut expect = v.clone();
+            expect.sort_unstable();
+            radix_sort_u64(&mut v);
+            assert_eq!(v, expect);
+        }
+    }
+
+    #[test]
+    fn radix_high_bits() {
+        let mut v = vec![u64::MAX, 0, 1 << 63, 42, u64::MAX - 1];
+        let mut expect = v.clone();
+        expect.sort_unstable();
+        radix_sort_u64(&mut v);
+        assert_eq!(v, expect);
+    }
+}

@@ -1,0 +1,346 @@
+//! Vertex rankings (§3.1.1, §4.5, §4.6).
+//!
+//! A ranking maps every vertex (global id: U-side `0..nu`, V-side
+//! `nu..n`) to a rank in `0..n`; GET-WEDGES only retrieves wedges whose
+//! center and second endpoint out-rank the first endpoint, so the
+//! ranking controls how many wedges are processed.
+//!
+//! * [`Ranking::Side`] — one bipartition ordered first (Sanei-Mehri et
+//!   al.); the side is chosen so that wedge *centers* fall on the side
+//!   with fewer `C(deg, 2)` wedges.
+//! * [`Ranking::Degree`] — decreasing degree (Chiba–Nishizeki); gives
+//!   the `O(alpha m)` work bound.
+//! * [`Ranking::ApproxDegree`] — decreasing `floor(log2 deg)`, ties by
+//!   vertex id to preserve input locality (Theorem 4.11: same bound).
+//! * [`Ranking::CoDegeneracy`] — repeatedly remove *max*-degree
+//!   vertices (complement of the k-core peeling order; Theorem 4.12).
+//! * [`Ranking::ApproxCoDegeneracy`] — same with log-degree buckets
+//!   (fewer rounds; Theorem 4.13).
+//!
+//! [`f_metric`] computes the Table 3 quantity `f = (w_s - w_r) / w_s`;
+//! [`choose_ranking`] applies the paper's rule of thumb (side ordering
+//! unless some ranking saves >= 10% of wedges).
+
+use crate::graph::{BipartiteGraph, RankedGraph};
+use crate::prims::sort::par_sort;
+
+/// The five vertex orderings of the ParButterfly framework.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Ranking {
+    Side,
+    Degree,
+    ApproxDegree,
+    CoDegeneracy,
+    ApproxCoDegeneracy,
+}
+
+impl Ranking {
+    pub const ALL: [Ranking; 5] = [
+        Ranking::Side,
+        Ranking::Degree,
+        Ranking::ApproxDegree,
+        Ranking::CoDegeneracy,
+        Ranking::ApproxCoDegeneracy,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Ranking::Side => "side",
+            Ranking::Degree => "degree",
+            Ranking::ApproxDegree => "adegree",
+            Ranking::CoDegeneracy => "codeg",
+            Ranking::ApproxCoDegeneracy => "acodeg",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Ranking> {
+        Ranking::ALL.into_iter().find(|r| r.name() == s)
+    }
+}
+
+fn degree_of(g: &BipartiteGraph, gid: usize) -> usize {
+    if gid < g.nu() {
+        g.deg_u(gid)
+    } else {
+        g.deg_v(gid - g.nu())
+    }
+}
+
+/// Compute `rank_of[global id] -> rank` for the chosen ordering.
+pub fn rank_vertices(g: &BipartiteGraph, ranking: Ranking) -> Vec<u32> {
+    let n = g.n();
+    match ranking {
+        Ranking::Side => {
+            // Endpoints on the first side, centers on the second; put
+            // the side whose *opposite* has fewer wedges first.
+            let u_first = g.wedges_centered_v() <= g.wedges_centered_u();
+            let mut rank = vec![0u32; n];
+            if u_first {
+                for gid in 0..n {
+                    rank[gid] = gid as u32; // U already 0..nu
+                }
+            } else {
+                let (nu, nv) = (g.nu(), g.nv());
+                for v in 0..nv {
+                    rank[nu + v] = v as u32;
+                }
+                for u in 0..nu {
+                    rank[u] = (nv + u) as u32;
+                }
+            }
+            rank
+        }
+        Ranking::Degree => by_key_desc(g, |g, gid| degree_of(g, gid) as u64),
+        Ranking::ApproxDegree => {
+            by_key_desc(g, |g, gid| 64 - (degree_of(g, gid) as u64 + 1).leading_zeros() as u64)
+        }
+        Ranking::CoDegeneracy => co_degeneracy(g, false),
+        Ranking::ApproxCoDegeneracy => co_degeneracy(g, true),
+    }
+}
+
+/// Rank by decreasing key, ties broken by increasing vertex id (keeps
+/// input locality, which is why approximate degree order wins in
+/// practice on well-laid-out graphs).
+fn by_key_desc(g: &BipartiteGraph, key: impl Fn(&BipartiteGraph, usize) -> u64) -> Vec<u32> {
+    let n = g.n();
+    // Pack (key, id) so one u64 sort orders by key desc then id asc.
+    // key <= n < 2^32 always (degree bound), id < 2^32.
+    let mut packed: Vec<u64> = (0..n)
+        .map(|gid| ((u32::MAX as u64 - key(g, gid)) << 32) | gid as u64)
+        .collect();
+    par_sort(&mut packed);
+    let mut rank = vec![0u32; n];
+    for (r, &p) in packed.iter().enumerate() {
+        rank[(p & 0xffff_ffff) as usize] = r as u32;
+    }
+    rank
+}
+
+/// Complement (co-)degeneracy: repeatedly peel all vertices of maximum
+/// (log-)degree from the remaining graph; rank in removal order.
+///
+/// Bucketing by current degree with lazy entries, mirroring the
+/// Julienne-based implementation in the paper (but walking buckets from
+/// the top).  Returns `rank_of`.
+fn co_degeneracy(g: &BipartiteGraph, approx: bool) -> Vec<u32> {
+    let n = g.n();
+    let nu = g.nu();
+    let bucket_of = |d: usize| -> usize {
+        if approx {
+            if d == 0 {
+                0
+            } else {
+                usize::BITS as usize - (d.leading_zeros() as usize)
+            }
+        } else {
+            d
+        }
+    };
+    let maxd = g.max_degree();
+    let nb = bucket_of(maxd) + 1;
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); nb];
+    let mut cur_deg = vec![0usize; n];
+    for gid in 0..n {
+        let d = degree_of(g, gid);
+        cur_deg[gid] = d;
+        buckets[bucket_of(d)].push(gid as u32);
+    }
+    let mut removed = vec![false; n];
+    let mut rank = vec![0u32; n];
+    let mut next_rank = 0u32;
+    let mut top = nb as isize - 1;
+    while top >= 0 {
+        // Collect the valid members of the top bucket (lazy deletion:
+        // entries whose degree has since dropped are skipped; they are
+        // re-inserted at their lower bucket on every decrement).
+        let members: Vec<u32> = std::mem::take(&mut buckets[top as usize]);
+        // Filter-and-mark in one pass: lazy bucket entries can contain
+        // duplicates (a vertex is re-pushed on every decrement), so a
+        // vertex is claimed (marked removed) the first time it is seen.
+        let mut valid: Vec<u32> = Vec::new();
+        for x in members {
+            let gid = x as usize;
+            if !removed[gid] && bucket_of(cur_deg[gid]) == top as usize {
+                removed[gid] = true;
+                rank[gid] = next_rank;
+                next_rank += 1;
+                valid.push(x);
+            }
+        }
+        if valid.is_empty() {
+            top -= 1;
+            continue;
+        }
+        for &x in &valid {
+            let gid = x as usize;
+            let nbrs: &[u32] = if gid < nu { g.nbrs_u(gid) } else { g.nbrs_v(gid - nu) };
+            for &w in nbrs {
+                let wg = if gid < nu { nu + w as usize } else { w as usize };
+                if !removed[wg] && cur_deg[wg] > 0 {
+                    cur_deg[wg] -= 1;
+                    let b = bucket_of(cur_deg[wg]);
+                    if b != top as usize || approx {
+                        buckets[b].push(wg as u32);
+                    } else {
+                        // Degree dropped within the same exact bucket
+                        // impossible (buckets are exact degrees).
+                        buckets[b].push(wg as u32);
+                    }
+                }
+            }
+        }
+    }
+    debug_assert_eq!(next_rank as usize, n);
+    rank
+}
+
+/// Preprocess (Algorithm 1) under the chosen ordering.
+pub fn preprocess(g: &BipartiteGraph, ranking: Ranking) -> RankedGraph {
+    RankedGraph::new(g, rank_vertices(g, ranking))
+}
+
+/// The Table 3 metric `f = (w_s - w_r) / w_s` where `w_s` / `w_r` are
+/// the wedges processed under side ordering / under `ranking`.
+pub fn f_metric(g: &BipartiteGraph, ranking: Ranking) -> f64 {
+    let ws = preprocess(g, Ranking::Side).wedges_processed();
+    let wr = preprocess(g, ranking).wedges_processed();
+    if ws == 0 {
+        return 0.0;
+    }
+    (ws as f64 - wr as f64) / ws as f64
+}
+
+/// Runtime ordering selection (§6.2.2): side ordering unless another
+/// ranking saves at least 10% of the wedges (f >= 0.1); approximate
+/// degree is the cheap representative of the degree-style orderings.
+pub fn choose_ranking(g: &BipartiteGraph) -> Ranking {
+    if f_metric(g, Ranking::ApproxDegree) >= 0.1 {
+        Ranking::ApproxDegree
+    } else {
+        Ranking::Side
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn is_permutation(rank: &[u32]) -> bool {
+        let mut seen = vec![false; rank.len()];
+        for &r in rank {
+            if seen[r as usize] {
+                return false;
+            }
+            seen[r as usize] = true;
+        }
+        true
+    }
+
+    #[test]
+    fn all_rankings_are_permutations() {
+        let g = gen::chung_lu(200, 300, 2000, 2.2, 9);
+        for r in Ranking::ALL {
+            let rank = rank_vertices(&g, r);
+            assert_eq!(rank.len(), g.n());
+            assert!(is_permutation(&rank), "{:?}", r);
+        }
+    }
+
+    #[test]
+    fn side_order_puts_cheaper_centers_second() {
+        // U degrees are huge -> wedges centered on U huge -> V should
+        // be the center side is wrong; we want centers on the side
+        // with FEWER wedges, i.e. V side first iff centers (U) cheap.
+        let g = gen::complete_bipartite(3, 30); // wedges_u = 3*C(30..)? no:
+        // deg_u = 30 each -> wedges centered U = 3*C(30,2)=1305;
+        // deg_v = 3 each -> wedges centered V = 30*C(3,2)=90.
+        let rank = rank_vertices(&g, Ranking::Side);
+        // centers should be V (90 < 1305): endpoints = U side first.
+        for u in 0..3 {
+            assert!(rank[u] < 3, "U must be ranked first");
+        }
+    }
+
+    #[test]
+    fn degree_order_is_decreasing() {
+        let g = gen::chung_lu(100, 150, 1500, 2.1, 4);
+        let rank = rank_vertices(&g, Ranking::Degree);
+        let mut by_rank = vec![0usize; g.n()];
+        for gid in 0..g.n() {
+            by_rank[rank[gid] as usize] = gid;
+        }
+        let deg = |gid: usize| {
+            if gid < g.nu() {
+                g.deg_u(gid)
+            } else {
+                g.deg_v(gid - g.nu())
+            }
+        };
+        for w in by_rank.windows(2) {
+            assert!(deg(w[0]) >= deg(w[1]));
+        }
+    }
+
+    #[test]
+    fn approx_degree_groups_by_log() {
+        let g = gen::chung_lu(100, 150, 1500, 2.1, 4);
+        let rank = rank_vertices(&g, Ranking::ApproxDegree);
+        let mut by_rank = vec![0usize; g.n()];
+        for gid in 0..g.n() {
+            by_rank[rank[gid] as usize] = gid;
+        }
+        let logdeg = |gid: usize| {
+            let d = if gid < g.nu() { g.deg_u(gid) } else { g.deg_v(gid - g.nu()) };
+            64 - (d as u64 + 1).leading_zeros()
+        };
+        for w in by_rank.windows(2) {
+            assert!(logdeg(w[0]) >= logdeg(w[1]));
+        }
+    }
+
+    #[test]
+    fn codegeneracy_first_round_is_max_degree() {
+        let g = gen::complete_bipartite(4, 9);
+        // U vertices have degree 9 (max) -> must get the first 4 ranks.
+        let rank = rank_vertices(&g, Ranking::CoDegeneracy);
+        for u in 0..4 {
+            assert!(rank[u] < 4, "max-degree U vertex must be peeled first");
+        }
+    }
+
+    #[test]
+    fn work_efficient_orderings_process_at_most_side_wedges_on_skewed() {
+        // On power-law graphs degree-style orderings must save wedges.
+        let g = gen::chung_lu(500, 800, 8000, 2.1, 11);
+        let ws = preprocess(&g, Ranking::Side).wedges_processed();
+        for r in [Ranking::Degree, Ranking::CoDegeneracy, Ranking::ApproxCoDegeneracy] {
+            let wr = preprocess(&g, r).wedges_processed();
+            assert!(
+                wr <= ws,
+                "{:?}: {} > side {}",
+                r,
+                wr,
+                ws
+            );
+        }
+    }
+
+    #[test]
+    fn f_metric_signs() {
+        let g = gen::chung_lu(500, 800, 8000, 2.1, 11);
+        assert_eq!(f_metric(&g, Ranking::Side), 0.0);
+        assert!(f_metric(&g, Ranking::Degree) > 0.0);
+    }
+
+    #[test]
+    fn choose_ranking_prefers_side_on_regular() {
+        // Near-regular bipartite graph: degree ordering saves nothing.
+        let g = gen::erdos_renyi(300, 300, 3000, 5);
+        assert_eq!(choose_ranking(&g), Ranking::Side);
+        // Heavily skewed: degree-style ordering should be chosen.
+        let g2 = gen::chung_lu(500, 800, 8000, 2.05, 3);
+        assert_eq!(choose_ranking(&g2), Ranking::ApproxDegree);
+    }
+}

@@ -1,0 +1,194 @@
+//! PJRT runtime: load and execute the AOT artifacts from Layer 1/2.
+//!
+//! `make artifacts` (Python, build time only) writes
+//! `artifacts/<entry>_<U>x<V>.hlo.txt` plus `manifest.txt`; this module
+//! compiles them once on the PJRT CPU client and serves executions from
+//! the Rust hot path.  HLO **text** is the interchange format (jax>=0.5
+//! serialized protos are rejected by xla_extension 0.5.1 — see
+//! `python/compile/aot.py`).
+//!
+//! Compilation is lazy (first use per artifact) and cached.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// One artifact as described by `manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub entry: String,
+    pub u: usize,
+    pub v: usize,
+    pub n_out: usize,
+    pub path: PathBuf,
+}
+
+/// Outputs of one dense-model execution.
+pub struct DenseOutputs {
+    /// Global butterfly count (f64 scalar output).
+    pub total: f64,
+    /// Per-vertex counts, U side (f64, length = padded U).
+    pub bu: Vec<f64>,
+    /// Per-vertex counts, V side (f64, length = padded V).
+    pub bv: Vec<f64>,
+    /// Per-edge counts (f32, row-major padded U x V).
+    pub be: Vec<f32>,
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    n_out: usize,
+}
+
+/// PJRT engine over a directory of artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    specs: Vec<ArtifactSpec>,
+    cache: Mutex<HashMap<(String, usize, usize), usize>>, // -> compiled idx
+    compiled: Mutex<Vec<Option<Compiled>>>,
+}
+
+// The PJRT client and executables are used behind &self from multiple
+// coordinator threads; the underlying C API objects are thread-safe for
+// execution, and compilation is serialized through the mutex above.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load `manifest.txt` from `dir` and start a PJRT CPU client.
+    pub fn load_dir(dir: &Path) -> Result<Engine> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut specs = Vec::new();
+        for line in text.lines() {
+            let t = line.trim();
+            if t.is_empty() {
+                continue;
+            }
+            let mut it = t.split_whitespace();
+            let entry = it.next().ok_or_else(|| anyhow!("bad manifest line: {t}"))?.to_string();
+            let u: usize = it.next().ok_or_else(|| anyhow!("bad manifest line: {t}"))?.parse()?;
+            let v: usize = it.next().ok_or_else(|| anyhow!("bad manifest line: {t}"))?.parse()?;
+            let n_out: usize =
+                it.next().ok_or_else(|| anyhow!("bad manifest line: {t}"))?.parse()?;
+            let fname = it.next().ok_or_else(|| anyhow!("bad manifest line: {t}"))?;
+            specs.push(ArtifactSpec { entry, u, v, n_out, path: dir.join(fname) });
+        }
+        anyhow::ensure!(!specs.is_empty(), "empty manifest {}", manifest.display());
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let n = specs.len();
+        Ok(Engine {
+            client,
+            specs,
+            cache: Mutex::new(HashMap::new()),
+            compiled: Mutex::new((0..n).map(|_| None).collect()),
+        })
+    }
+
+    /// Default artifact location: `$PARBUTTERFLY_ARTIFACTS` or
+    /// `./artifacts`.
+    pub fn load_default() -> Result<Engine> {
+        let dir = std::env::var("PARBUTTERFLY_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load_dir(Path::new(&dir))
+    }
+
+    /// All artifact specs (for diagnostics / CLI `info`).
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Smallest artifact of `entry` that fits a `u x v` block.
+    pub fn pick(&self, entry: &str, u: usize, v: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| s.entry == entry && s.u >= u && s.v >= v)
+            .min_by_key(|s| s.u * s.v)
+    }
+
+    fn compile_idx(&self, idx: usize) -> Result<()> {
+        let mut compiled = self.compiled.lock().unwrap();
+        if compiled[idx].is_some() {
+            return Ok(());
+        }
+        let spec = &self.specs[idx];
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", spec.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", spec.path.display()))?;
+        compiled[idx] = Some(Compiled { exe, n_out: spec.n_out });
+        Ok(())
+    }
+
+    /// Execute `entry` at exactly `u x v` with a row-major f32 input.
+    /// Returns the raw tuple elements as literals.
+    pub fn run_raw(&self, entry: &str, u: usize, v: usize, a: &[f32]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(a.len() == u * v, "input is {} values, expected {}", a.len(), u * v);
+        let idx = {
+            let mut cache = self.cache.lock().unwrap();
+            match cache.get(&(entry.to_string(), u, v)) {
+                Some(&i) => i,
+                None => {
+                    let i = self
+                        .specs
+                        .iter()
+                        .position(|s| s.entry == entry && s.u == u && s.v == v)
+                        .ok_or_else(|| anyhow!("no artifact {entry} {u}x{v}"))?;
+                    cache.insert((entry.to_string(), u, v), i);
+                    i
+                }
+            }
+        };
+        self.compile_idx(idx)?;
+        let compiled = self.compiled.lock().unwrap();
+        let c = compiled[idx].as_ref().unwrap();
+        let input = xla::Literal::vec1(a)
+            .reshape(&[u as i64, v as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = c
+            .exe
+            .execute::<xla::Literal>(&[input])
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let tuple = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == c.n_out,
+            "artifact {entry} returned {} outputs, manifest says {}",
+            parts.len(),
+            c.n_out
+        );
+        Ok(parts)
+    }
+
+    /// Execute the `count_dense` artifact (padded to an available
+    /// shape by the caller) and decode its four outputs.
+    pub fn count_dense(&self, u: usize, v: usize, a: &[f32]) -> Result<DenseOutputs> {
+        let parts = self.run_raw("count_dense", u, v, a)?;
+        anyhow::ensure!(parts.len() == 4, "count_dense must have 4 outputs");
+        let total: f64 = parts[0].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let bu = parts[1].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+        let bv = parts[2].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+        let be = parts[3].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(DenseOutputs { total, bu, bv, be })
+    }
+
+    /// Execute the `count_total` artifact.
+    pub fn count_total(&self, u: usize, v: usize, a: &[f32]) -> Result<f64> {
+        let parts = self.run_raw("count_total", u, v, a)?;
+        Ok(parts[0].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?[0])
+    }
+
+    /// Execute the `wedge_stats` artifact: (wedges with endpoints on U,
+    /// wedges with endpoints on V).
+    pub fn wedge_stats(&self, u: usize, v: usize, a: &[f32]) -> Result<(f64, f64)> {
+        let parts = self.run_raw("wedge_stats", u, v, a)?;
+        let wu = parts[0].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let wv = parts[1].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?[0];
+        Ok((wu, wv))
+    }
+}

@@ -1,0 +1,222 @@
+//! Brute-force butterfly oracles — the ground truth every framework
+//! configuration is checked against.  All are O(n^2 m)-ish or worse;
+//! use on small graphs only.
+
+use crate::graph::BipartiteGraph;
+
+/// Wedge multiplicity of the U-side pair `(u1, u2)`: `|N(u1) ∩ N(u2)|`
+/// (sorted-merge intersection).
+fn common_nbrs(a: &[u32], b: &[u32]) -> u64 {
+    let (mut i, mut j, mut c) = (0, 0, 0u64);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                c += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    c
+}
+
+/// Total butterflies: `sum_{u1 < u2} C(|N(u1) ∩ N(u2)|, 2)`.
+pub fn total(g: &BipartiteGraph) -> u64 {
+    let mut b = 0u64;
+    for u1 in 0..g.nu() {
+        for u2 in (u1 + 1)..g.nu() {
+            let c = common_nbrs(g.nbrs_u(u1), g.nbrs_u(u2));
+            b += c * c.saturating_sub(1) / 2;
+        }
+    }
+    b
+}
+
+/// Per-vertex butterfly counts `(b_u, b_v)`.
+pub fn per_vertex(g: &BipartiteGraph) -> (Vec<u64>, Vec<u64>) {
+    let mut bu = vec![0u64; g.nu()];
+    let mut bv = vec![0u64; g.nv()];
+    for u1 in 0..g.nu() {
+        for u2 in (u1 + 1)..g.nu() {
+            let c = common_nbrs(g.nbrs_u(u1), g.nbrs_u(u2));
+            let b = c * c.saturating_sub(1) / 2;
+            bu[u1] += b;
+            bu[u2] += b;
+        }
+    }
+    for v1 in 0..g.nv() {
+        for v2 in (v1 + 1)..g.nv() {
+            let c = common_nbrs(g.nbrs_v(v1), g.nbrs_v(v2));
+            let b = c * c.saturating_sub(1) / 2;
+            bv[v1] += b;
+            bv[v2] += b;
+        }
+    }
+    (bu, bv)
+}
+
+/// Per-edge butterfly counts, indexed by edge id.
+pub fn per_edge(g: &BipartiteGraph) -> Vec<u64> {
+    let mut be = vec![0u64; g.m()];
+    for u1 in 0..g.nu() {
+        for (i, &v1) in g.nbrs_u(u1).iter().enumerate() {
+            let eid = g.eid_u(u1, i) as usize;
+            // Butterflies on (u1, v1): u2 in N(v1)\{u1}, common
+            // neighbors of u1, u2 other than v1.
+            let mut b = 0u64;
+            for &u2 in g.nbrs_v(v1 as usize) {
+                if u2 as usize == u1 {
+                    continue;
+                }
+                let c = common_nbrs(g.nbrs_u(u1), g.nbrs_u(u2 as usize));
+                b += c.saturating_sub(1); // v1 itself is always common
+            }
+            be[eid] = b;
+        }
+    }
+    be
+}
+
+/// Tip numbers of U-side vertices by literal sequential peeling with
+/// full recount each step (the definition, not an algorithm).
+pub fn tip_numbers_u(g: &BipartiteGraph) -> Vec<u64> {
+    let nu = g.nu();
+    let mut alive = vec![true; nu];
+    let mut tip = vec![0u64; nu];
+    let mut k = 0u64;
+    let mut remaining = nu;
+    while remaining > 0 {
+        // Butterfly counts among alive U vertices.
+        let mut counts = vec![0u64; nu];
+        for u1 in 0..nu {
+            if !alive[u1] {
+                continue;
+            }
+            for u2 in (u1 + 1)..nu {
+                if !alive[u2] {
+                    continue;
+                }
+                let c = common_nbrs(g.nbrs_u(u1), g.nbrs_u(u2));
+                let b = c * c.saturating_sub(1) / 2;
+                counts[u1] += b;
+                counts[u2] += b;
+            }
+        }
+        let min = (0..nu).filter(|&u| alive[u]).map(|u| counts[u]).min().unwrap();
+        k = k.max(min);
+        for u in 0..nu {
+            if alive[u] && counts[u] == min {
+                tip[u] = k;
+                alive[u] = false;
+                remaining -= 1;
+            }
+        }
+    }
+    tip
+}
+
+/// Wing numbers of edges by literal sequential peeling with full
+/// recount each step.
+pub fn wing_numbers(g: &BipartiteGraph) -> Vec<u64> {
+    let m = g.m();
+    let mut alive = vec![true; m];
+    let mut wing = vec![0u64; m];
+    let mut k = 0u64;
+    let mut remaining = m;
+    let edges = g.edges();
+    // counts butterflies on each alive edge, only via alive edges.
+    let count_edge = |alive: &[bool]| -> Vec<u64> {
+        let mut be = vec![0u64; m];
+        for (eid, &(u1, v1)) in edges.iter().enumerate() {
+            if !alive[eid] {
+                continue;
+            }
+            let mut b = 0u64;
+            for (j, &u2) in g.nbrs_v(v1 as usize).iter().enumerate() {
+                if u2 == u1 {
+                    continue;
+                }
+                let e2 = g.eids_v(v1 as usize)[j];
+                if !alive[e2 as usize] {
+                    continue;
+                }
+                // common alive-edge neighbors of u1, u2 besides v1.
+                for &v2 in g.nbrs_u(u1 as usize) {
+                    if v2 == v1 {
+                        continue;
+                    }
+                    let ea = g.edge_id(u1 as usize, v2).unwrap();
+                    let eb = match g.edge_id(u2 as usize, v2) {
+                        Some(e) => e,
+                        None => continue,
+                    };
+                    if alive[ea as usize] && alive[eb as usize] {
+                        b += 1;
+                    }
+                }
+            }
+            be[eid] = b;
+        }
+        be
+    };
+    while remaining > 0 {
+        let counts = count_edge(&alive);
+        let min = (0..m).filter(|&e| alive[e]).map(|e| counts[e]).min().unwrap();
+        k = k.max(min);
+        for e in 0..m {
+            if alive[e] && counts[e] == min {
+                wing[e] = k;
+                alive[e] = false;
+                remaining -= 1;
+            }
+        }
+    }
+    wing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn fig1_oracle() {
+        let g = BipartiteGraph::from_edges(
+            3,
+            3,
+            &[(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2), (2, 2)],
+        );
+        assert_eq!(total(&g), 3);
+        let (bu, bv) = per_vertex(&g);
+        assert_eq!(bu, vec![3, 3, 0]);
+        assert_eq!(bv, vec![2, 2, 2]);
+        // Per-edge sum = 4 * total.
+        assert_eq!(per_edge(&g).iter().sum::<u64>(), 12);
+    }
+
+    #[test]
+    fn complete_bipartite_tips() {
+        // K_{3,4}: every U vertex is in C(2,1)*C(4,2) = 12 butterflies;
+        // peeling removes them all at once -> tip number 12 for all.
+        let g = gen::complete_bipartite(3, 4);
+        assert_eq!(tip_numbers_u(&g), vec![12, 12, 12]);
+    }
+
+    #[test]
+    fn single_butterfly_wings() {
+        let g = gen::complete_bipartite(2, 2);
+        assert_eq!(wing_numbers(&g), vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn per_vertex_sums_match_total() {
+        let g = gen::erdos_renyi(15, 18, 120, 3);
+        let t = total(&g);
+        let (bu, bv) = per_vertex(&g);
+        assert_eq!(bu.iter().sum::<u64>(), 2 * t);
+        assert_eq!(bv.iter().sum::<u64>(), 2 * t);
+        assert_eq!(per_edge(&g).iter().sum::<u64>(), 4 * t);
+    }
+}

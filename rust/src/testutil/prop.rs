@@ -1,0 +1,154 @@
+//! Mini property-test harness (offline stand-in for `proptest`).
+//!
+//! ```no_run
+//! use parbutterfly::testutil::prop::{check, prop_assert, Gen};
+//! check("sum is commutative", 100, |g| {
+//!     let a = g.u64_below(1000);
+//!     let b = g.u64_below(1000);
+//!     prop_assert(a + b == b + a, format!("{a} {b}"))
+//! });
+//! ```
+//!
+//! On failure the panic message carries the iteration seed, so a case
+//! reproduces with `Gen::from_seed(seed)`.
+
+use crate::graph::gen as graph_gen;
+use crate::graph::BipartiteGraph;
+use crate::prims::rng::Pcg32;
+
+/// Random-input source handed to each property iteration.
+pub struct Gen {
+    rng: Pcg32,
+    seed: u64,
+}
+
+impl Gen {
+    pub fn from_seed(seed: u64) -> Self {
+        Self { rng: Pcg32::new(seed), seed }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn u64_below(&mut self, bound: u64) -> u64 {
+        self.rng.next_below(bound)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.next_bool(p)
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.next_below(items.len() as u64) as usize]
+    }
+
+    /// A small random bipartite graph drawn from a random family —
+    /// ER, Chung-Lu, planted blocks, or complete — so properties see
+    /// regular, skewed, clustered, and extremal inputs.
+    pub fn bipartite(&mut self, max_side: usize, max_m: usize) -> BipartiteGraph {
+        let nu = self.usize_in(1, max_side);
+        let nv = self.usize_in(1, max_side);
+        let m = self.usize_in(0, max_m);
+        match self.u64_below(4) {
+            0 => graph_gen::erdos_renyi(nu, nv, m, self.rng.next_u64()),
+            1 => graph_gen::chung_lu(nu, nv, m, 1.8 + self.f64_unit(), self.rng.next_u64()),
+            2 => {
+                let k = self.usize_in(1, 3);
+                let bu = (nu / k).max(1);
+                let bv = (nv / k).max(1);
+                graph_gen::planted_blocks(
+                    k * bu.max(1),
+                    k * bv.max(1),
+                    k,
+                    bu,
+                    bv,
+                    0.5 + self.f64_unit() / 2.0,
+                    m / 4,
+                    self.rng.next_u64(),
+                )
+            }
+            _ => graph_gen::complete_bipartite(nu.min(8).max(1), nv.min(8).max(1)),
+        }
+    }
+}
+
+/// Run `body` for `iters` seeded iterations; panics with the seed on
+/// the first failure.
+pub fn check(name: &str, iters: u64, mut body: impl FnMut(&mut Gen) -> Result<(), String>) {
+    // Derive per-iteration seeds from the property name so adding
+    // properties doesn't reshuffle others' cases.
+    let base = crate::prims::rng::hash64(name.len() as u64 ^ name.bytes().map(u64::from).sum::<u64>());
+    for i in 0..iters {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let mut g = Gen::from_seed(seed);
+        if let Err(msg) = body(&mut g) {
+            panic!("property '{name}' failed at iteration {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// `assert!` that returns an Err for use inside [`check`] bodies.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Equality assertion with debug formatting.
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{a:?} != {b:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let mut count = 0u64;
+        check("trivially true", 25, |_g| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "seed")]
+    fn failing_property_reports_seed() {
+        check("always fails", 5, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn generated_graphs_are_valid() {
+        check("graphs within bounds", 30, |g| {
+            let bg = g.bipartite(20, 100);
+            prop_assert(bg.nu() >= 1 && bg.nv() >= 1, "side empty")?;
+            // CSR self-consistency: every edge visible from both sides.
+            for u in 0..bg.nu() {
+                for &v in bg.nbrs_u(u) {
+                    prop_assert(
+                        bg.nbrs_v(v as usize).contains(&(u as u32)),
+                        format!("edge ({u},{v}) missing from V side"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,223 @@
+//! Property-based integration tests: randomized graphs from four
+//! families (ER / Chung-Lu / planted blocks / complete) checked against
+//! brute-force oracles and against each other, across the framework's
+//! configuration space.  Uses the in-repo prop harness (DESIGN.md §2 —
+//! no proptest offline); failures report a reproducing seed.
+
+use parbutterfly::count::{
+    count_per_edge, count_per_vertex, count_total, sparsify, BflyAgg, CountOpts, WedgeAgg,
+};
+use parbutterfly::graph::BipartiteGraph;
+use parbutterfly::peel::{
+    peel_edges, peel_vertices, wpeel_edges, wpeel_vertices, BucketKind, PeelEOpts, PeelSide,
+    PeelVOpts, WedgeStore,
+};
+use parbutterfly::rank::Ranking;
+use parbutterfly::testutil::brute;
+use parbutterfly::testutil::prop::{check, prop_assert, prop_assert_eq};
+
+#[test]
+fn prop_total_invariant_sums() {
+    check("sum identities bu=2T bv=2T be=4T", 40, |g| {
+        let bg = g.bipartite(18, 120);
+        let t = count_total(&bg, &CountOpts::default());
+        let vc = count_per_vertex(&bg, &CountOpts::default());
+        let be = count_per_edge(&bg, &CountOpts::default());
+        prop_assert_eq(vc.bu.iter().sum::<u64>(), 2 * t)?;
+        prop_assert_eq(vc.bv.iter().sum::<u64>(), 2 * t)?;
+        prop_assert_eq(be.iter().sum::<u64>(), 4 * t)
+    });
+}
+
+#[test]
+fn prop_all_configs_agree_with_brute_force() {
+    check("every (ranking, agg, bfly, cache) matches brute force", 12, |g| {
+        let bg = g.bipartite(14, 90);
+        let expect_t = brute::total(&bg);
+        let (ebu, ebv) = brute::per_vertex(&bg);
+        let ebe = brute::per_edge(&bg);
+        // One random full sweep axis per iteration keeps runtime sane.
+        let ranking = *g.pick(&Ranking::ALL);
+        for agg in WedgeAgg::ALL {
+            for cache_opt in [false, true] {
+                let bfly = if g.bool(0.5) { BflyAgg::Atomic } else { BflyAgg::Reagg };
+                let opts = CountOpts { ranking, agg, bfly, cache_opt, ..Default::default() };
+                prop_assert_eq(count_total(&bg, &opts), expect_t)?;
+                let vc = count_per_vertex(&bg, &opts);
+                prop_assert(vc.bu == ebu && vc.bv == ebv, format!("{opts:?} per-vertex"))?;
+                prop_assert(count_per_edge(&bg, &opts) == ebe, format!("{opts:?} per-edge"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunked_processing_invariant() {
+    check("wedge-memory budget never changes results", 20, |g| {
+        let bg = g.bipartite(16, 150);
+        let base = count_total(&bg, &CountOpts::default());
+        let cap = g.usize_in(1, 64);
+        for agg in [WedgeAgg::Sort, WedgeAgg::Hash, WedgeAgg::Hist] {
+            let opts = CountOpts { agg, max_wedges: cap, ..Default::default() };
+            prop_assert_eq(count_total(&bg, &opts), base)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mirror_swaps_sides() {
+    check("transposing the graph swaps bu/bv and preserves totals", 25, |g| {
+        let bg = g.bipartite(15, 100);
+        let edges_t: Vec<(u32, u32)> = bg.edges().into_iter().map(|(u, v)| (v, u)).collect();
+        let gt = BipartiteGraph::from_edges(bg.nv(), bg.nu(), &edges_t);
+        let a = count_per_vertex(&bg, &CountOpts::default());
+        let b = count_per_vertex(&gt, &CountOpts::default());
+        prop_assert_eq(a.bu, b.bv)?;
+        prop_assert_eq(a.bv, b.bu)
+    });
+}
+
+#[test]
+fn prop_disjoint_union_adds() {
+    check("butterflies of a disjoint union add up", 20, |g| {
+        let a = g.bipartite(12, 70);
+        let b = g.bipartite(12, 70);
+        let mut edges = a.edges();
+        for (u, v) in b.edges() {
+            edges.push((u + a.nu() as u32, v + a.nv() as u32));
+        }
+        let un = BipartiteGraph::from_edges(a.nu() + b.nu(), a.nv() + b.nv(), &edges);
+        prop_assert_eq(
+            count_total(&un, &CountOpts::default()),
+            count_total(&a, &CountOpts::default()) + count_total(&b, &CountOpts::default()),
+        )
+    });
+}
+
+#[test]
+fn prop_tip_numbers_bounded_and_correct() {
+    check("tips match brute force; tip(u) <= b_u(u)", 15, |g| {
+        let bg = g.bipartite(10, 60);
+        let expect = brute::tip_numbers_u(&bg);
+        let vc = count_per_vertex(&bg, &CountOpts::default());
+        let agg = *g.pick(&WedgeAgg::ALL);
+        let buckets = *g.pick(&BucketKind::ALL);
+        let r = peel_vertices(&bg, &vc.bu, &vc.bv, &PeelVOpts { agg, buckets, side: PeelSide::U });
+        prop_assert(r.tips == expect, format!("{agg:?}/{buckets:?}"))?;
+        for u in 0..bg.nu() {
+            prop_assert(r.tips[u] <= vc.bu[u], format!("tip > count at {u}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wing_numbers_correct_all_backends() {
+    check("wings match brute force", 10, |g| {
+        let bg = g.bipartite(8, 40);
+        let expect = brute::wing_numbers(&bg);
+        let be = count_per_edge(&bg, &CountOpts::default());
+        let agg = *g.pick(&WedgeAgg::ALL);
+        let buckets = *g.pick(&BucketKind::ALL);
+        let r = peel_edges(&bg, &be, &PeelEOpts { agg, buckets });
+        prop_assert(r.wings == expect, format!("{agg:?}/{buckets:?}"))?;
+        // wing(e) <= b_e(e).
+        for e in 0..bg.m() {
+            prop_assert(r.wings[e] <= be[e], format!("wing > count at {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wstore_variants_agree() {
+    check("WPEEL == PEEL for both decompositions", 10, |g| {
+        let bg = g.bipartite(9, 45);
+        let vc = count_per_vertex(&bg, &CountOpts::default());
+        let be = count_per_edge(&bg, &CountOpts::default());
+        let ranking = *g.pick(&[Ranking::Side, Ranking::Degree, Ranking::ApproxDegree]);
+        let store = WedgeStore::build(&bg, ranking);
+        let wt = wpeel_vertices(&bg, &store, &vc.bu, &vc.bv, PeelSide::U, BucketKind::Julienne);
+        let pt = peel_vertices(
+            &bg,
+            &vc.bu,
+            &vc.bv,
+            &PeelVOpts { side: PeelSide::U, ..Default::default() },
+        );
+        prop_assert_eq(wt.tips, pt.tips)?;
+        let ww = wpeel_edges(&bg, &store, &be, BucketKind::FibHeap);
+        let pw = peel_edges(&bg, &be, &PeelEOpts::default());
+        prop_assert_eq(ww.wings, pw.wings)
+    });
+}
+
+#[test]
+fn prop_sequential_baselines_agree() {
+    check("baselines equal the framework", 15, |g| {
+        let bg = g.bipartite(14, 90);
+        let t = count_total(&bg, &CountOpts::default());
+        use parbutterfly::baseline::{seq_count, seq_peel};
+        prop_assert_eq(seq_count::sanei_mehri_total(&bg), t)?;
+        prop_assert_eq(seq_count::wang_vanilla(&bg).1, t)?;
+        prop_assert_eq(seq_count::chiba_nishizeki_total(&bg), t)?;
+        prop_assert_eq(seq_count::pgd_like_total(&bg), t)?;
+        let vc = count_per_vertex(&bg, &CountOpts::default());
+        let (tips, _) = seq_peel::sp_tip_numbers_u(&bg, &vc.bu);
+        prop_assert_eq(tips, brute::tip_numbers_u(&bg))
+    });
+}
+
+#[test]
+fn prop_sparsification_identity_and_bounds() {
+    check("p=1 sparsification is exact; estimates nonnegative", 15, |g| {
+        let bg = g.bipartite(15, 100);
+        let t = count_total(&bg, &CountOpts::default()) as f64;
+        prop_assert_eq(
+            sparsify::approx_total_edge(&bg, 1.0, g.seed(), &CountOpts::default()),
+            t,
+        )?;
+        prop_assert_eq(
+            sparsify::approx_total_colorful(&bg, 1, g.seed(), &CountOpts::default()),
+            t,
+        )?;
+        let p = 0.3 + g.f64_unit() * 0.6;
+        let est = sparsify::approx_total_edge(&bg, p, g.seed(), &CountOpts::default());
+        prop_assert(est >= 0.0, "negative estimate")?;
+        // Sub-sampled graph is a subgraph: its raw count <= exact.
+        let sparse = sparsify::edge_sparsify(&bg, p, g.seed());
+        prop_assert(
+            count_total(&sparse, &CountOpts::default()) as f64 <= t,
+            "subgraph exceeds graph",
+        )
+    });
+}
+
+#[test]
+fn prop_thread_count_invariance() {
+    check("results identical at any thread count", 10, |g| {
+        let bg = g.bipartite(16, 120);
+        let base = count_per_vertex(&bg, &CountOpts::default());
+        for t in [2usize, 3, 8] {
+            let vc = parbutterfly::prims::pool::with_threads(t, || {
+                count_per_vertex(&bg, &CountOpts::default())
+            });
+            prop_assert(vc == base, format!("threads={t}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wedge_counts_match_ranked_graph() {
+    check("f-metric wedges equal enumerated wedges", 15, |g| {
+        let bg = g.bipartite(14, 90);
+        for r in Ranking::ALL {
+            let rg = parbutterfly::rank::preprocess(&bg, r);
+            let counts = parbutterfly::count::wedges::source_wedge_counts(&rg, false);
+            prop_assert_eq(counts.iter().map(|&c| c as u64).sum::<u64>(), rg.wedges_processed())?;
+        }
+        Ok(())
+    });
+}
