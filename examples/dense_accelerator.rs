@@ -1,39 +1,40 @@
-//! The Layer-1/2 dense-core accelerator from the Rust hot path:
-//! load the AOT artifacts, count dense blocks on the PJRT executable,
-//! and cross-check against the CPU framework.
+//! The dense-core accelerator from the Rust hot path: resolve the
+//! dense backend (PJRT artifacts when built with `--features pjrt` and
+//! `make artifacts` has run, the pure-Rust tiled reference kernel
+//! otherwise), count dense blocks on it, and cross-check against the
+//! sparse CPU framework.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example dense_accelerator
+//! cargo run --release --example dense_accelerator
+//! # or, with artifacts:
+//! make artifacts && cargo run --release --features pjrt --example dense_accelerator
 //! ```
 
 use std::time::Instant;
 
 use parbutterfly::count::{count_total, dense, CountOpts};
 use parbutterfly::graph::gen;
-use parbutterfly::runtime::Engine;
+use parbutterfly::runtime::default_backend;
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::load_default().map_err(|e| {
-        anyhow::anyhow!("{e:#}\nhint: run `make artifacts` first")
-    })?;
-    println!("loaded {} artifacts:", engine.specs().len());
-    for s in engine.specs() {
-        println!("  {:<12} {:>4} x {}", s.entry, s.u, s.v);
-    }
+    let backend = default_backend()
+        .ok_or_else(|| anyhow::anyhow!("dense path disabled (PARBUTTERFLY_BACKEND=none)"))?;
+    let dim = backend.max_dim();
+    println!("backend: {} (max tile {dim} x {dim})", backend.name());
 
     // A dense community block: exactly the regime the MXU-shaped
-    // artifact targets.
+    // dense model targets.
     let g = gen::planted_blocks(512, 512, 8, 64, 64, 0.9, 2_000, 5);
     println!("\nblock workload: {} x {}, m={}", g.nu(), g.nv(), g.m());
 
     let t = Instant::now();
-    let d = dense::count_dense(&g, &engine)?;
+    let d = dense::count_dense(&g, backend.as_ref())?;
     let dense_ms = t.elapsed().as_secs_f64() * 1e3;
     let t = Instant::now();
     let cpu = count_total(&g, &CountOpts::default());
     let cpu_ms = t.elapsed().as_secs_f64() * 1e3;
     assert_eq!(d.total, cpu);
-    println!("dense artifact: {} butterflies in {dense_ms:.1} ms", d.total);
+    println!("dense backend:  {} butterflies in {dense_ms:.1} ms", d.total);
     println!("cpu framework:  {} butterflies in {cpu_ms:.1} ms", cpu);
     println!(
         "per-vertex max (U): {}, per-edge max: {}",
@@ -41,11 +42,12 @@ fn main() -> anyhow::Result<()> {
         d.be.iter().max().unwrap()
     );
 
-    // Hybrid on a graph too large for any artifact: dense core on the
-    // PJRT path, the long tail on the CPU framework.
+    // Hybrid on a graph too large for any tile: dense core on the
+    // backend, the long tail on the CPU framework.
     let big = gen::chung_lu(4_000, 6_000, 120_000, 2.05, 8);
     let t = Instant::now();
-    let hybrid = dense::count_total_hybrid(&big, &engine, 256, 256, &CountOpts::default())?;
+    let hybrid =
+        dense::count_total_hybrid(&big, backend.as_ref(), 256, 256, &CountOpts::default())?;
     let hy_ms = t.elapsed().as_secs_f64() * 1e3;
     let t = Instant::now();
     let cpu = count_total(&big, &CountOpts::default());

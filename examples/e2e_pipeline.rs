@@ -5,9 +5,9 @@
 //!   2. runtime ranking selection (f metric),
 //!   3. exact counting (total / per-vertex / per-edge) on the parallel
 //!      CPU framework,
-//!   4. the PJRT dense-core path (Layer-1 Pallas kernel, AOT-lowered by
-//!      Layer 2, loaded by the Rust runtime) — cross-checked against
-//!      the CPU numbers,
+//!   4. the dense-core path (the PJRT artifact engine under `--features
+//!      pjrt`, the pure-Rust tiled reference kernel otherwise) —
+//!      cross-checked against the CPU numbers,
 //!   5. approximate counting via sparsification,
 //!   6. tip + wing decomposition,
 //!   7. sequential baselines for the headline speedup metric.
@@ -26,7 +26,7 @@ use parbutterfly::count::{dense, sparsify, CountOpts};
 use parbutterfly::graph::gen;
 use parbutterfly::peel::{peel_edges, peel_vertices, PeelEOpts, PeelVOpts};
 use parbutterfly::rank::{choose_ranking, Ranking};
-use parbutterfly::runtime::Engine;
+use parbutterfly::runtime::default_backend;
 
 fn main() {
     println!("== ParButterfly end-to-end pipeline ==\n");
@@ -62,30 +62,24 @@ fn main() {
     assert_eq!(vc.bu.iter().sum::<u64>(), 2 * r.total);
     assert_eq!(be.iter().sum::<u64>(), 4 * r.total);
 
-    // 4. Dense-core path through the PJRT artifacts.
-    match Engine::load_default() {
-        Ok(engine) => {
+    // 4. Dense-core path through the selected backend.
+    match default_backend() {
+        Some(backend) => {
             let t = Instant::now();
             let hybrid =
-                dense::count_total_hybrid(&g, &engine, 256, 256, &cfg.opts).unwrap();
+                dense::count_total_hybrid(&g, backend.as_ref(), 256, 256, &cfg.opts).unwrap();
             println!(
-                "[4] dense-core hybrid (256x256 top-degree core on the MXU-shaped \
-                 artifact): {} butterflies ({:.0} ms)",
+                "[4] dense-core hybrid (256x256 top-degree core on the {} backend): \
+                 {} butterflies ({:.0} ms)",
+                backend.name(),
                 hybrid,
                 t.elapsed().as_secs_f64() * 1e3
             );
             assert_eq!(hybrid, r.total, "dense path must agree exactly");
-
-            // Pure dense on the densified core itself.
-            let spec = engine.pick("count_total", 512, 512).unwrap();
-            println!(
-                "    artifacts loaded: {} entries (largest {}x{})",
-                engine.specs().len(),
-                spec.u,
-                spec.v
-            );
+            let (pu, pv) = backend.plan(256, 256).unwrap();
+            println!("    dense tile for the 256x256 core: {pu} x {pv}");
         }
-        Err(e) => println!("[4] dense-core SKIPPED (run `make artifacts`): {e}"),
+        None => println!("[4] dense-core SKIPPED (PARBUTTERFLY_BACKEND=none)"),
     }
 
     // 5. Approximate counting.

@@ -396,21 +396,25 @@ pub fn datasets_table(bench_name: &str) {
     }
 }
 
-/// Dense-core accelerator bench (ours): PJRT artifact vs CPU framework
-/// on dense-block workloads, plus the hybrid split.
+/// Dense-core accelerator bench (ours): the selected dense backend
+/// (PJRT artifacts when available, the pure-Rust reference kernel
+/// otherwise) vs CPU framework on dense-block workloads, plus the
+/// hybrid split.
 pub fn dense_core_bench(bench_name: &str) {
     banner(
         bench_name,
-        "Layer-1/2 dense artifact vs CPU sparse path (requires `make artifacts`)",
+        "dense-core backend vs CPU sparse path (PARBUTTERFLY_BACKEND selects; \
+         PJRT needs `make artifacts`)",
     );
-    let engine = match crate::runtime::Engine::load_default() {
-        Ok(e) => e,
-        Err(e) => {
-            println!("SKIPPED: {e:#}");
+    let backend = match crate::runtime::default_backend() {
+        Some(b) => b,
+        None => {
+            println!("SKIPPED: dense path disabled (PARBUTTERFLY_BACKEND=none)");
             return;
         }
     };
     use crate::graph::gen;
+    println!("backend: {}", backend.name());
     for (label, g) in [
         ("er-256", gen::erdos_renyi(256, 256, 8_000, 21)),
         ("dense-256", gen::planted_blocks(256, 256, 4, 64, 64, 0.9, 500, 22)),
@@ -418,25 +422,37 @@ pub fn dense_core_bench(bench_name: &str) {
         ("k-128x128", gen::complete_bipartite(128, 128)),
     ] {
         let expect = count_total(&g, &CountOpts::default());
-        let m = bench(|| crate::count::dense::count_total_dense(&g, &engine).unwrap());
-        report(bench_name, label, "dense-artifact", &m);
+        let m = bench(|| crate::count::dense::count_total_dense(&g, backend.as_ref()).unwrap());
+        report(bench_name, label, &format!("dense-{}", backend.name()), &m);
         let m = bench(|| count_total(&g, &CountOpts::default()));
         report(bench_name, label, "cpu-framework", &m);
-        let got = crate::count::dense::count_total_dense(&g, &engine).unwrap();
+        let got = crate::count::dense::count_total_dense(&g, backend.as_ref()).unwrap();
         assert_eq!(got, expect, "{label}");
     }
     // Hybrid on a larger skewed graph.
     let g = gen::chung_lu(2_000, 3_000, 60_000, 2.05, 25);
     let expect = count_total(&g, &CountOpts::default());
     let m = bench(|| {
-        crate::count::dense::count_total_hybrid(&g, &engine, 256, 256, &CountOpts::default())
-            .unwrap()
+        crate::count::dense::count_total_hybrid(
+            &g,
+            backend.as_ref(),
+            256,
+            256,
+            &CountOpts::default(),
+        )
+        .unwrap()
     });
     report(bench_name, "cl-2kx3k", "hybrid-256core", &m);
     let m = bench(|| count_total(&g, &CountOpts::default()));
     report(bench_name, "cl-2kx3k", "cpu-framework", &m);
-    let got = crate::count::dense::count_total_hybrid(&g, &engine, 256, 256, &CountOpts::default())
-        .unwrap();
+    let got = crate::count::dense::count_total_hybrid(
+        &g,
+        backend.as_ref(),
+        256,
+        256,
+        &CountOpts::default(),
+    )
+    .unwrap();
     assert_eq!(got, expect);
 }
 

@@ -8,8 +8,9 @@
 //! parbutterfly peel   --graph FILE [--mode vertex|edge] [--agg A]
 //!                     [--buckets julienne|fibheap] [--threads T]
 //! parbutterfly approx --graph FILE --method edge|colorful --p P [--seed S]
-//! parbutterfly dense  --graph FILE            # PJRT dense-core path
-//! parbutterfly artifacts                      # list loaded artifacts
+//! parbutterfly dense  --graph FILE [--backend auto|rust|pjrt]  # dense-core path
+//! parbutterfly backends                       # dense backend availability
+//! parbutterfly artifacts                      # list PJRT artifacts (feature pjrt)
 //! ```
 
 use std::collections::HashMap;
@@ -113,6 +114,7 @@ fn run_inner(argv: &[String]) -> anyhow::Result<()> {
         "peel" => cmd_peel(&args),
         "approx" => cmd_approx(&args),
         "dense" => cmd_dense(&args),
+        "backends" => cmd_backends(),
         "artifacts" => cmd_artifacts(),
         _ => {
             println!("{}", HELP);
@@ -122,7 +124,7 @@ fn run_inner(argv: &[String]) -> anyhow::Result<()> {
 }
 
 const HELP: &str = "parbutterfly — parallel butterfly computations (Shi & Shun 2019)
-commands: gen, info, count, peel, approx, dense, artifacts
+commands: gen, info, count, peel, approx, dense, backends, artifacts
 run `parbutterfly <cmd> --help-flags` or see rust/src/cli.rs for flags";
 
 fn cmd_gen(args: &Args) -> anyhow::Result<()> {
@@ -250,19 +252,57 @@ fn cmd_approx(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_dense(args: &Args) -> anyhow::Result<()> {
     let g = load(args)?;
-    let coord = Coordinator::with_default_engine();
-    anyhow::ensure!(coord.has_engine(), "no artifacts available (run `make artifacts`)");
+    // --backend (auto | rust | pjrt | none) overrides the
+    // PARBUTTERFLY_BACKEND env selection for this run; resolution
+    // errors (unknown name, pjrt feature off, artifacts missing)
+    // surface directly instead of degrading.
+    let coord = match args.get("backend") {
+        Some(choice) => match crate::runtime::backend_for(choice)? {
+            Some(backend) => Coordinator::with_backend(backend),
+            None => anyhow::bail!("dense path disabled by --backend {choice}"),
+        },
+        None => Coordinator::with_default_backend(),
+    };
+    anyhow::ensure!(coord.has_backend(), "no dense backend available (PARBUTTERFLY_BACKEND=none?)");
     let r = coord.count_total_routed(&g, &CountConfig::default());
     println!("total = {} via {} backend ({:.2} ms)", r.total, r.backend, r.millis);
     Ok(())
 }
 
+fn cmd_backends() -> anyhow::Result<()> {
+    use crate::runtime::DenseBackend;
+    let rd = crate::runtime::RustDense::default();
+    println!("rust-dense  available  (max tile {0} x {0})", rd.max_dim());
+    // Availability probe is a manifest check only — `selected` below is
+    // the one place a PJRT client actually starts.
+    #[cfg(feature = "pjrt")]
+    if crate::count::dense::artifacts_available() {
+        println!("pjrt        artifacts present");
+    } else {
+        println!("pjrt        unavailable (no artifacts manifest; run `make artifacts`)");
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("pjrt        disabled   (build with --features pjrt)");
+    let selected = crate::runtime::default_backend();
+    println!(
+        "selected: {}",
+        selected.as_deref().map(|b| b.name()).unwrap_or("none (dense path off)")
+    );
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_artifacts() -> anyhow::Result<()> {
     let engine = crate::runtime::Engine::load_default()?;
     for s in engine.specs() {
         println!("{:<14} {:>4} x {:<4} {} outputs  {}", s.entry, s.u, s.v, s.n_out, s.path.display());
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_artifacts() -> anyhow::Result<()> {
+    anyhow::bail!("built without the `pjrt` feature; rebuild with --features pjrt")
 }
 
 #[cfg(test)]

@@ -1,7 +1,7 @@
 //! Coordinator: the framework facade gluing ranking selection,
-//! counting, peeling, approximation, and the PJRT dense-core engine
-//! behind one configuration surface.  This is the layer the CLI,
-//! examples, and benches drive.
+//! counting, peeling, approximation, and the pluggable dense-core
+//! backend behind one configuration surface.  This is the layer the
+//! CLI, examples, and benches drive.
 
 use std::time::Instant;
 
@@ -11,7 +11,7 @@ use crate::count::{
 use crate::graph::BipartiteGraph;
 use crate::peel::{self, PeelEOpts, PeelVOpts, TipResult, WingResult};
 use crate::rank::{choose_ranking, Ranking};
-use crate::runtime::Engine;
+use crate::runtime::{self, DenseBackend};
 
 /// What to compute.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,7 +52,8 @@ pub struct CountReport {
     pub wedges: u64,
     /// Wall-clock milliseconds for the counting phase.
     pub millis: f64,
-    /// "cpu" or "dense" (PJRT artifact path).
+    /// "cpu" (sparse framework) or the dense backend's name
+    /// ("rust-dense", "pjrt").
     pub backend: &'static str,
 }
 
@@ -124,50 +125,61 @@ pub fn wing_report(g: &BipartiteGraph, cfg: &PeelConfig) -> (WingResult, f64) {
     (r, start.elapsed().as_secs_f64() * 1e3)
 }
 
-/// A coordinator that may hold a PJRT engine for the dense path.
+/// Default routing cap for [`Coordinator::count_total_routed`]: the
+/// dense model is `O(u^2 * v)` regardless of sparsity, so beyond small
+/// blocks the sparse CPU framework wins even when the backend *could*
+/// fit the graph in a tile.
+const DENSE_ROUTE_LIMIT: usize = 512;
+
+/// A coordinator that may hold a dense backend for small/dense blocks.
 pub struct Coordinator {
-    engine: Option<Engine>,
-    /// Largest `max(nu, nv)` routed to the dense backend.
+    backend: Option<Box<dyn DenseBackend>>,
+    /// Largest `max(nu, nv)` routed to the dense backend.  Defaults to
+    /// `min(backend.max_dim(), 512)`; raise it (up to the backend's
+    /// `max_dim`) to widen dense routing.
     pub dense_limit: usize,
 }
 
 impl Coordinator {
-    /// CPU-only coordinator.
+    /// CPU-only coordinator (no dense path at all).
     pub fn cpu_only() -> Self {
-        Self { engine: None, dense_limit: 0 }
+        Self { backend: None, dense_limit: 0 }
     }
 
-    /// Try to attach the PJRT engine from the default artifact dir;
-    /// falls back to CPU-only when artifacts are missing.
-    pub fn with_default_engine() -> Self {
-        match Engine::load_default() {
-            Ok(engine) => {
-                let dense_limit =
-                    engine.specs().iter().map(|s| s.u.max(s.v)).max().unwrap_or(0);
-                Self { engine: Some(engine), dense_limit }
-            }
-            Err(_) => Self::cpu_only(),
+    /// Coordinator over an explicit dense backend.
+    pub fn with_backend(backend: Box<dyn DenseBackend>) -> Self {
+        let dense_limit = backend.max_dim().min(DENSE_ROUTE_LIMIT);
+        Self { backend: Some(backend), dense_limit }
+    }
+
+    /// Attach the process-default dense backend
+    /// ([`runtime::default_backend`]): PJRT when the feature is on and
+    /// artifacts load, the pure-Rust reference kernel otherwise;
+    /// degrades to CPU-only when the dense path is disabled.
+    pub fn with_default_backend() -> Self {
+        match runtime::default_backend() {
+            Some(backend) => Self::with_backend(backend),
+            None => Self::cpu_only(),
         }
     }
 
-    pub fn has_engine(&self) -> bool {
-        self.engine.is_some()
+    pub fn has_backend(&self) -> bool {
+        self.backend.is_some()
     }
 
-    pub fn engine(&self) -> Option<&Engine> {
-        self.engine.as_ref()
+    pub fn backend(&self) -> Option<&dyn DenseBackend> {
+        self.backend.as_deref()
     }
 
-    /// Route a total count: dense artifact when the graph fits and the
-    /// engine is up, CPU framework otherwise.
+    /// Route a total count: dense backend when the graph fits a tile,
+    /// CPU framework otherwise (including on dense-path errors).
     pub fn count_total_routed(&self, g: &BipartiteGraph, cfg: &CountConfig) -> CountReport {
-        if let Some(engine) = &self.engine {
+        if let Some(backend) = &self.backend {
             if g.nu().max(g.nv()) <= self.dense_limit {
-                if let Some(spec) = engine.pick("count_total", g.nu(), g.nv()) {
-                    let (pu, pv) = (spec.u, spec.v);
+                if let Some((pu, pv)) = backend.plan(g.nu(), g.nv()) {
                     let start = Instant::now();
                     let a = g.to_dense_f32(pu, pv);
-                    if let Ok(t) = engine.count_total(pu, pv, &a) {
+                    if let Ok(t) = backend.count_total(pu, pv, &a) {
                         return CountReport {
                             total: t.round() as u64,
                             per_vertex: None,
@@ -175,7 +187,7 @@ impl Coordinator {
                             ranking: cfg.opts.ranking,
                             wedges: 0,
                             millis: start.elapsed().as_secs_f64() * 1e3,
-                            backend: "dense",
+                            backend: backend.name(),
                         };
                     }
                 }
@@ -218,6 +230,35 @@ mod tests {
         let r = c.count_total_routed(&g, &CountConfig::default());
         assert_eq!(r.backend, "cpu");
         assert_eq!(r.total, brute::total(&g));
+    }
+
+    #[test]
+    fn default_backend_coordinator_routes_small_graphs_dense() {
+        if std::env::var("PARBUTTERFLY_BACKEND").map(|v| v == "none" || v == "off").unwrap_or(false)
+        {
+            return; // dense path disabled by the developer's environment
+        }
+        // Under the default (auto) selection a dense backend is always
+        // available: small graphs go dense, oversized graphs fall back.
+        let c = Coordinator::with_default_backend();
+        assert!(c.has_backend());
+        let g = gen::erdos_renyi(60, 70, 700, 9);
+        let r = c.count_total_routed(&g, &CountConfig::default());
+        assert_ne!(r.backend, "cpu");
+        assert_eq!(r.total, brute::total(&g));
+        let big = gen::erdos_renyi(c.dense_limit + 1, 10, 50, 1);
+        let r2 = c.count_total_routed(&big, &CountConfig::default());
+        assert_eq!(r2.backend, "cpu");
+    }
+
+    #[test]
+    fn explicit_backend_coordinator_respects_tile_cap() {
+        let c = Coordinator::with_backend(Box::new(crate::runtime::RustDense::with_max_dim(32)));
+        assert_eq!(c.dense_limit, 32);
+        let g = gen::erdos_renyi(20, 20, 120, 5);
+        assert_eq!(c.count_total_routed(&g, &CountConfig::default()).backend, "rust-dense");
+        let big = gen::erdos_renyi(40, 40, 300, 5);
+        assert_eq!(c.count_total_routed(&big, &CountConfig::default()).backend, "cpu");
     }
 
     #[test]

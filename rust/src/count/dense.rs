@@ -1,12 +1,13 @@
 //! Dense-core accelerator: butterfly counting for dense blocks through
-//! the AOT-compiled Layer-1/2 artifacts (see DESIGN.md
-//! §Hardware-Adaptation).
+//! a [`DenseBackend`] — the pure-Rust tiled reference kernel by
+//! default, the AOT-compiled Layer-1/2 artifacts under the `pjrt`
+//! feature (see DESIGN.md §Hardware-Adaptation).
 //!
 //! Use cases:
-//! * counting whole small-but-dense graphs (fits a `<=512x512` tile);
+//! * counting whole small-but-dense graphs (fits a backend tile);
 //! * the **hybrid** path: extract the dense core (the top-degree
 //!   vertices that degree ordering fronts), count core-internal
-//!   butterflies on the MXU-shaped artifact, and count the remaining
+//!   butterflies on the dense kernel, and count the remaining
 //!   wedge work on the sparse CPU path.
 //!
 //! For the hybrid split, butterflies are partitioned by *how many of
@@ -32,7 +33,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use anyhow::Result;
 
 use crate::graph::BipartiteGraph;
-use crate::runtime::Engine;
+use crate::runtime::DenseBackend;
 
 use super::{choose2, wedges, CountOpts};
 use crate::rank::preprocess;
@@ -46,15 +47,14 @@ pub struct DenseCounts {
     pub be: Vec<u64>,
 }
 
-/// Count a whole graph on the dense artifact (must fit an available
-/// artifact shape after padding).
-pub fn count_dense(g: &BipartiteGraph, engine: &Engine) -> Result<DenseCounts> {
-    let spec = engine
-        .pick("count_dense", g.nu(), g.nv())
-        .ok_or_else(|| anyhow::anyhow!("no dense artifact fits {}x{}", g.nu(), g.nv()))?;
-    let (pu, pv) = (spec.u, spec.v);
+/// Count a whole graph on the dense backend (must fit a supported
+/// tile shape after padding).
+pub fn count_dense(g: &BipartiteGraph, backend: &dyn DenseBackend) -> Result<DenseCounts> {
+    let (pu, pv) = backend
+        .plan(g.nu(), g.nv())
+        .ok_or_else(|| anyhow::anyhow!("no dense tile fits {}x{}", g.nu(), g.nv()))?;
     let a = g.to_dense_f32(pu, pv);
-    let out = engine.count_dense(pu, pv, &a)?;
+    let out = backend.count_dense(pu, pv, &a)?;
     let total = out.total.round() as u64;
     let bu: Vec<u64> = out.bu[..g.nu()].iter().map(|&x| x.round() as u64).collect();
     let bv: Vec<u64> = out.bv[..g.nv()].iter().map(|&x| x.round() as u64).collect();
@@ -68,19 +68,19 @@ pub fn count_dense(g: &BipartiteGraph, engine: &Engine) -> Result<DenseCounts> {
     Ok(DenseCounts { total, bu, bv, be })
 }
 
-/// Total count on the dense artifact only.
-pub fn count_total_dense(g: &BipartiteGraph, engine: &Engine) -> Result<u64> {
-    let spec = engine
-        .pick("count_total", g.nu(), g.nv())
-        .ok_or_else(|| anyhow::anyhow!("no dense artifact fits {}x{}", g.nu(), g.nv()))?;
-    let a = g.to_dense_f32(spec.u, spec.v);
-    Ok(engine.count_total(spec.u, spec.v, &a)?.round() as u64)
+/// Total count on the dense backend only.
+pub fn count_total_dense(g: &BipartiteGraph, backend: &dyn DenseBackend) -> Result<u64> {
+    let (pu, pv) = backend
+        .plan(g.nu(), g.nv())
+        .ok_or_else(|| anyhow::anyhow!("no dense tile fits {}x{}", g.nu(), g.nv()))?;
+    let a = g.to_dense_f32(pu, pv);
+    Ok(backend.count_total(pu, pv, &a)?.round() as u64)
 }
 
 /// Hybrid dense/sparse total count.
 ///
 /// The core is the top `core_u x core_v` vertices by degree.  The dense
-/// engine counts butterflies entirely inside the core; the sparse path
+/// backend counts butterflies entirely inside the core; the sparse path
 /// counts every remaining butterfly by enumerating all wedges but
 /// splitting each endpoint-pair's multiplicity `d` into core-internal
 /// centers `dc` vs rest: pairs fully in the core contribute
@@ -88,7 +88,7 @@ pub fn count_total_dense(g: &BipartiteGraph, engine: &Engine) -> Result<u64> {
 /// engine's), every other pair contributes `C(d,2)`.
 pub fn count_total_hybrid(
     g: &BipartiteGraph,
-    engine: &Engine,
+    backend: &dyn DenseBackend,
     core_u: usize,
     core_v: usize,
     opts: &CountOpts,
@@ -110,7 +110,7 @@ pub fn count_total_hybrid(
 
     // Dense side: the induced core subgraph.
     let core = g.induced(&in_core_u, &in_core_v);
-    let dense_total = count_total_dense(&core, engine)?;
+    let dense_total = count_total_dense(&core, backend)?;
 
     // Sparse side: full wedge enumeration with all-core butterflies
     // excluded pair-by-pair.
@@ -151,4 +151,44 @@ pub fn count_total_hybrid(
 pub fn artifacts_available() -> bool {
     let dir = std::env::var("PARBUTTERFLY_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     Path::new(&dir).join("manifest.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::count::count_total;
+    use crate::graph::gen;
+    use crate::runtime::RustDense;
+    use crate::testutil::brute;
+
+    #[test]
+    fn dense_counts_match_brute_force() {
+        let backend = RustDense::default();
+        let g = gen::erdos_renyi(30, 40, 350, 11);
+        let got = count_dense(&g, &backend).unwrap();
+        assert_eq!(got.total, brute::total(&g));
+        let (ebu, ebv) = brute::per_vertex(&g);
+        assert_eq!(got.bu, ebu);
+        assert_eq!(got.bv, ebv);
+        assert_eq!(got.be, brute::per_edge(&g));
+    }
+
+    #[test]
+    fn hybrid_split_is_exact() {
+        let backend = RustDense::default();
+        let g = gen::chung_lu(120, 150, 2200, 2.1, 3);
+        let expect = count_total(&g, &CountOpts::default());
+        for (cu, cv) in [(20, 20), (64, 64), (120, 150)] {
+            let got =
+                count_total_hybrid(&g, &backend, cu, cv, &CountOpts::default()).unwrap();
+            assert_eq!(got, expect, "core {cu}x{cv}");
+        }
+    }
+
+    #[test]
+    fn oversized_graph_is_rejected() {
+        let backend = RustDense::with_max_dim(16);
+        let g = gen::erdos_renyi(40, 10, 80, 2);
+        assert!(count_total_dense(&g, &backend).is_err());
+    }
 }

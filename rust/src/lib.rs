@@ -12,9 +12,13 @@
 //!
 //! The crate is the Layer-3 coordinator of a three-layer stack: a JAX +
 //! Pallas build-time pipeline (`python/compile/`) AOT-lowers a dense-tile
-//! butterfly-counting model to HLO text, which [`runtime`] loads through
-//! the PJRT C API and [`count::dense`] uses as a dense-core accelerator.
-//! Python never runs at request time.
+//! butterfly-counting model to HLO text.  [`runtime`] exposes that dense
+//! model behind a pluggable [`runtime::DenseBackend`] trait: the default
+//! build runs the pure-Rust tiled reference kernel
+//! ([`runtime::RustDense`]); the `pjrt` feature adds an engine that
+//! loads the AOT artifacts through the PJRT C API.  [`count::dense`]
+//! and the [`coordinator`] route dense blocks to whichever backend is
+//! selected.  Python never runs at request time.
 //!
 //! ## Quickstart
 //!

@@ -179,14 +179,10 @@ fn co_degeneracy(g: &BipartiteGraph, approx: bool) -> Vec<u32> {
                 let wg = if gid < nu { nu + w as usize } else { w as usize };
                 if !removed[wg] && cur_deg[wg] > 0 {
                     cur_deg[wg] -= 1;
-                    let b = bucket_of(cur_deg[wg]);
-                    if b != top as usize || approx {
-                        buckets[b].push(wg as u32);
-                    } else {
-                        // Degree dropped within the same exact bucket
-                        // impossible (buckets are exact degrees).
-                        buckets[b].push(wg as u32);
-                    }
+                    // Lazy re-insertion at the (possibly same, for
+                    // approx log-buckets) new bucket; stale entries are
+                    // filtered on extraction.
+                    buckets[bucket_of(cur_deg[wg])].push(wg as u32);
                 }
             }
         }

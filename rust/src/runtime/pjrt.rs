@@ -1,0 +1,277 @@
+//! PJRT engine: load and execute the AOT artifacts from Layer 1/2
+//! (feature `pjrt`).
+//!
+//! `make artifacts` (Python, build time only) writes
+//! `artifacts/<entry>_<U>x<V>.hlo.txt` plus `manifest.txt`; this module
+//! compiles them once on the PJRT CPU client and serves executions from
+//! the Rust hot path.  HLO **text** is the interchange format (jax>=0.5
+//! serialized protos are rejected by xla_extension 0.5.1 — see
+//! `python/compile/aot.py`).
+//!
+//! Compilation is lazy (first use per artifact) and cached.  The
+//! in-tree `xla` dependency is a type-compatible stub whose client
+//! constructor fails, so building with `--features pjrt` but without
+//! the real bindings degrades to the [`super::RustDense`] fallback at
+//! runtime.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{DenseBackend, DenseOutputs};
+
+/// One artifact as described by `manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub entry: String,
+    pub u: usize,
+    pub v: usize,
+    pub n_out: usize,
+    pub path: PathBuf,
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    n_out: usize,
+}
+
+/// PJRT engine over a directory of artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    specs: Vec<ArtifactSpec>,
+    cache: Mutex<HashMap<(String, usize, usize), usize>>, // -> compiled idx
+    compiled: Mutex<Vec<Option<Compiled>>>,
+}
+
+// The PJRT client and executables are used behind &self from multiple
+// coordinator threads; the underlying C API objects are thread-safe for
+// execution, and compilation is serialized through the mutex above.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load `manifest.txt` from `dir` and start a PJRT CPU client.
+    pub fn load_dir(dir: &Path) -> Result<Engine> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut specs = Vec::new();
+        for line in text.lines() {
+            let t = line.trim();
+            if t.is_empty() {
+                continue;
+            }
+            let mut it = t.split_whitespace();
+            let entry = it.next().ok_or_else(|| anyhow!("bad manifest line: {t}"))?.to_string();
+            let u: usize = it.next().ok_or_else(|| anyhow!("bad manifest line: {t}"))?.parse()?;
+            let v: usize = it.next().ok_or_else(|| anyhow!("bad manifest line: {t}"))?.parse()?;
+            let n_out: usize =
+                it.next().ok_or_else(|| anyhow!("bad manifest line: {t}"))?.parse()?;
+            let fname = it.next().ok_or_else(|| anyhow!("bad manifest line: {t}"))?;
+            specs.push(ArtifactSpec { entry, u, v, n_out, path: dir.join(fname) });
+        }
+        anyhow::ensure!(!specs.is_empty(), "empty manifest {}", manifest.display());
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let n = specs.len();
+        Ok(Engine {
+            client,
+            specs,
+            cache: Mutex::new(HashMap::new()),
+            compiled: Mutex::new((0..n).map(|_| None).collect()),
+        })
+    }
+
+    /// Default artifact location: `$PARBUTTERFLY_ARTIFACTS` or
+    /// `./artifacts`.
+    pub fn load_default() -> Result<Engine> {
+        let dir = std::env::var("PARBUTTERFLY_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load_dir(Path::new(&dir))
+    }
+
+    /// All artifact specs (for diagnostics / CLI `artifacts`).
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Smallest artifact of `entry` that fits a `u x v` block.
+    pub fn pick(&self, entry: &str, u: usize, v: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| s.entry == entry && s.u >= u && s.v >= v)
+            .min_by_key(|s| s.u * s.v)
+    }
+
+    fn compile_idx(&self, idx: usize) -> Result<()> {
+        let mut compiled = self.compiled.lock().unwrap();
+        if compiled[idx].is_some() {
+            return Ok(());
+        }
+        let spec = &self.specs[idx];
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", spec.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", spec.path.display()))?;
+        compiled[idx] = Some(Compiled { exe, n_out: spec.n_out });
+        Ok(())
+    }
+
+    /// Execute `entry` at exactly `u x v` with a row-major f32 input.
+    /// Returns the raw tuple elements as literals.
+    pub fn run_raw(&self, entry: &str, u: usize, v: usize, a: &[f32]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(a.len() == u * v, "input is {} values, expected {}", a.len(), u * v);
+        let idx = {
+            let mut cache = self.cache.lock().unwrap();
+            match cache.get(&(entry.to_string(), u, v)) {
+                Some(&i) => i,
+                None => {
+                    let i = self
+                        .specs
+                        .iter()
+                        .position(|s| s.entry == entry && s.u == u && s.v == v)
+                        .ok_or_else(|| anyhow!("no artifact {entry} {u}x{v}"))?;
+                    cache.insert((entry.to_string(), u, v), i);
+                    i
+                }
+            }
+        };
+        self.compile_idx(idx)?;
+        let compiled = self.compiled.lock().unwrap();
+        let c = compiled[idx].as_ref().unwrap();
+        let input = xla::Literal::vec1(a)
+            .reshape(&[u as i64, v as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = c
+            .exe
+            .execute::<xla::Literal>(&[input])
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let tuple = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == c.n_out,
+            "artifact {entry} returned {} outputs, manifest says {}",
+            parts.len(),
+            c.n_out
+        );
+        Ok(parts)
+    }
+
+    /// Execute the `wedge_stats` artifact (kept off the trait's padded
+    /// contract for direct artifact-shape callers).
+    pub fn wedge_stats_raw(&self, u: usize, v: usize, a: &[f32]) -> Result<(f64, f64)> {
+        let parts = self.run_raw("wedge_stats", u, v, a)?;
+        let wu = parts[0].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let wv = parts[1].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?[0];
+        Ok((wu, wv))
+    }
+}
+
+/// Tight bounding box of the nonzero content of a row-major `u x v`
+/// block.  Zero rows/columns contribute nothing to any dense model, so
+/// the block may be re-shaped to anything covering this box.
+fn content_dims(a: &[f32], u: usize, v: usize) -> (usize, usize) {
+    let (mut cu, mut cv) = (0usize, 0usize);
+    for i in 0..u {
+        let row = &a[i * v..(i + 1) * v];
+        if let Some(last) = row.iter().rposition(|&x| x != 0.0) {
+            cu = i + 1;
+            cv = cv.max(last + 1);
+        }
+    }
+    (cu, cv)
+}
+
+/// Copy the leading `cu x cv` corner of a row-major `u x v` block into
+/// a zero-padded `pu x pv` block.
+fn reshape_block(a: &[f32], v: usize, cu: usize, cv: usize, pu: usize, pv: usize) -> Vec<f32> {
+    debug_assert!(pu >= cu && pv >= cv);
+    let mut out = vec![0f32; pu * pv];
+    for i in 0..cu {
+        out[i * pv..i * pv + cv].copy_from_slice(&a[i * v..i * v + cv]);
+    }
+    out
+}
+
+impl Engine {
+    /// Resolve the artifact shape for `entry` covering a `u x v` block
+    /// already padded by the caller: exact match when the manifest has
+    /// one, else the smallest shape *for that entry* covering the
+    /// block's nonzero content, with the input re-shaped (entries need
+    /// not share shape sets, and `plan()` may have padded for a
+    /// different entry).
+    fn shape_for<'a>(
+        &self,
+        entry: &str,
+        u: usize,
+        v: usize,
+        a: &'a [f32],
+    ) -> Result<(usize, usize, std::borrow::Cow<'a, [f32]>)> {
+        if self.specs.iter().any(|s| s.entry == entry && s.u == u && s.v == v) {
+            return Ok((u, v, std::borrow::Cow::Borrowed(a)));
+        }
+        let (cu, cv) = content_dims(a, u, v);
+        let spec = self
+            .pick(entry, cu, cv)
+            .ok_or_else(|| anyhow!("no artifact {entry} fits {cu}x{cv}"))?;
+        let (pu, pv) = (spec.u, spec.v);
+        Ok((pu, pv, std::borrow::Cow::Owned(reshape_block(a, v, cu, cv, pu, pv))))
+    }
+}
+
+impl DenseBackend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn plan(&self, u: usize, v: usize) -> Option<(usize, usize)> {
+        // Plan against the full-model entry, falling back to the
+        // total-only entry; per-entry shape differences are absorbed by
+        // `shape_for` at execution time.
+        self.pick("count_dense", u, v)
+            .or_else(|| self.pick("count_total", u, v))
+            .map(|s| (s.u, s.v))
+    }
+
+    fn max_dim(&self) -> usize {
+        self.specs.iter().map(|s| s.u.max(s.v)).max().unwrap_or(0)
+    }
+
+    fn count_dense(&self, u: usize, v: usize, a: &[f32]) -> Result<DenseOutputs> {
+        let (pu, pv, a) = self.shape_for("count_dense", u, v, a)?;
+        let parts = self.run_raw("count_dense", pu, pv, &a)?;
+        anyhow::ensure!(parts.len() == 4, "count_dense must have 4 outputs");
+        let total: f64 = parts[0].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let bu_art = parts[1].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+        let bv_art = parts[2].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+        let be_art = parts[3].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        // Map artifact-shape outputs back to the caller's `u x v`
+        // shape.  The artifact may be larger or smaller than the
+        // caller's padding; the nonzero content fits both, so anything
+        // outside the copied corner is zero.
+        let (rc, cc) = (u.min(pu), v.min(pv));
+        let mut bu = vec![0f64; u];
+        bu[..rc].copy_from_slice(&bu_art[..rc]);
+        let mut bv = vec![0f64; v];
+        bv[..cc].copy_from_slice(&bv_art[..cc]);
+        let mut be = vec![0f32; u * v];
+        for i in 0..rc {
+            be[i * v..i * v + cc].copy_from_slice(&be_art[i * pv..i * pv + cc]);
+        }
+        Ok(DenseOutputs { total, bu, bv, be })
+    }
+
+    fn count_total(&self, u: usize, v: usize, a: &[f32]) -> Result<f64> {
+        let (pu, pv, a) = self.shape_for("count_total", u, v, a)?;
+        let parts = self.run_raw("count_total", pu, pv, &a)?;
+        Ok(parts[0].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?[0])
+    }
+
+    fn wedge_stats(&self, u: usize, v: usize, a: &[f32]) -> Result<(f64, f64)> {
+        let (pu, pv, a) = self.shape_for("wedge_stats", u, v, a)?;
+        self.wedge_stats_raw(pu, pv, &a)
+    }
+}

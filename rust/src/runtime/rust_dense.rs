@@ -1,0 +1,285 @@
+//! `RustDense` — the pure-Rust reference dense backend.
+//!
+//! A tiled CPU implementation of the Lemma 4.2 linear-algebra
+//! formulation, bit-for-bit matching `python/compile/kernels/ref.py`
+//! (all quantities are exact integer counts carried in floats):
+//!
+//! * wedge matrix `W = A Aᵀ` with the diagonal zeroed (`W0`);
+//! * per-vertex: `b_u[i] = Σ_j C(W0[i,j], 2)`, `b_v` likewise on `AᵀA`;
+//! * total: `Σ_i b_u[i] / 2`;
+//! * per-edge: `B_e = A ∘ (W0 A − (deg_v − 1))`.
+//!
+//! The kernel walks the `U x U` wedge matrix one `row_tile`-row block
+//! at a time (the same row-block grid the Pallas kernel tiles for the
+//! MXU), never materializing `W` — each row's wedge counts are
+//! consumed as they are produced — and parallelizes over row blocks
+//! with the crate's fork-join pool.
+//!
+//! Exactness bound: with `max_dim = 2048`, every intermediate
+//! (`W` entries `<= 2048`, `W0·A` entries `<= 2^22`, per-edge counts
+//! `<= 2^22`) stays below the 2^24 f32-exact-integer limit, and the
+//! f64 accumulators hold the per-vertex / total sums exactly.
+
+use anyhow::Result;
+
+use super::{DenseBackend, DenseOutputs};
+use crate::prims::pool::{parallel_for_dynamic, SyncPtr};
+
+/// Pure-Rust tiled dense kernel (see module docs).
+pub struct RustDense {
+    max_dim: usize,
+    row_tile: usize,
+}
+
+impl Default for RustDense {
+    fn default() -> Self {
+        Self { max_dim: 2048, row_tile: 64 }
+    }
+}
+
+impl RustDense {
+    /// Backend with a smaller size cap (testing / memory-bound hosts).
+    /// Caps above 2048 are rejected: beyond that the `W0·A` partial
+    /// sums can exceed f32's exact-integer range (see module docs).
+    pub fn with_max_dim(max_dim: usize) -> Self {
+        assert!(max_dim <= 2048, "max_dim {max_dim} would break f32 exactness (limit 2048)");
+        Self { max_dim, ..Self::default() }
+    }
+}
+
+#[inline]
+fn choose2f(w: f32) -> f64 {
+    let d = w as f64;
+    d * (d - 1.0) * 0.5
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// Per-row butterfly endpoint counts of a row-major `n x k` 0/1
+/// matrix: `out[i] = Σ_{j != i} C((M Mᵀ)[i,j], 2)`, tiled, parallel
+/// over row blocks.
+fn endpoint_counts(m: &[f32], n: usize, k: usize, row_tile: usize) -> Vec<f64> {
+    let mut out = vec![0f64; n];
+    let op = SyncPtr(out.as_mut_ptr());
+    let nblocks = n.div_ceil(row_tile.max(1));
+    parallel_for_dynamic(nblocks, 1, |blocks| {
+        for b in blocks {
+            let lo = b * row_tile;
+            let hi = (lo + row_tile).min(n);
+            for i in lo..hi {
+                let mi = &m[i * k..(i + 1) * k];
+                let mut acc = 0f64;
+                for j in 0..n {
+                    if j == i {
+                        continue;
+                    }
+                    acc += choose2f(dot(mi, &m[j * k..(j + 1) * k]));
+                }
+                // SAFETY: row blocks are disjoint; each i written once.
+                unsafe { *op.get().add(i) = acc };
+            }
+        }
+    });
+    out
+}
+
+/// Column sums (`deg_v`) of a row-major `u x v` matrix.
+fn col_sums(a: &[f32], u: usize, v: usize) -> Vec<f32> {
+    let mut deg = vec![0f32; v];
+    for i in 0..u {
+        for (d, x) in deg.iter_mut().zip(&a[i * v..(i + 1) * v]) {
+            *d += x;
+        }
+    }
+    deg
+}
+
+/// Transpose a row-major `u x v` matrix into `v x u`.
+fn transpose(a: &[f32], u: usize, v: usize) -> Vec<f32> {
+    let mut t = vec![0f32; u * v];
+    for i in 0..u {
+        for j in 0..v {
+            t[j * u + i] = a[i * v + j];
+        }
+    }
+    t
+}
+
+impl DenseBackend for RustDense {
+    fn name(&self) -> &'static str {
+        "rust-dense"
+    }
+
+    fn plan(&self, u: usize, v: usize) -> Option<(usize, usize)> {
+        // Pad to multiples of 8 (mirrors the MXU-shaped artifacts and
+        // keeps the padded-shape paths exercised under default builds).
+        let pad = |d: usize| d.max(1).div_ceil(8) * 8;
+        let (pu, pv) = (pad(u), pad(v));
+        if pu <= self.max_dim && pv <= self.max_dim {
+            Some((pu, pv))
+        } else {
+            None
+        }
+    }
+
+    fn max_dim(&self) -> usize {
+        self.max_dim
+    }
+
+    fn count_dense(&self, u: usize, v: usize, a: &[f32]) -> Result<DenseOutputs> {
+        anyhow::ensure!(a.len() == u * v, "input is {} values, expected {}", a.len(), u * v);
+        anyhow::ensure!(u.max(v) <= self.max_dim, "{u}x{v} exceeds max_dim {}", self.max_dim);
+        let degv = col_sums(a, u, v);
+        let at = transpose(a, u, v);
+        let bv = endpoint_counts(&at, v, u, self.row_tile);
+
+        // Per-vertex (U side) and per-edge in ONE row-block sweep over
+        // `W0`: each row's wedge counts feed both `b_u[i] = Σ C(w, 2)`
+        // and `B_e = A ∘ (W0 A − (deg_v − 1))` — the dominant
+        // `O(u^2 * v)` dot products are computed once, not twice.
+        let mut bu = vec![0f64; u];
+        let mut be = vec![0f32; u * v];
+        {
+            let bp = SyncPtr(be.as_mut_ptr());
+            let up = SyncPtr(bu.as_mut_ptr());
+            let degv = &degv;
+            let nblocks = u.div_ceil(self.row_tile.max(1));
+            let row_tile = self.row_tile;
+            parallel_for_dynamic(nblocks, 1, |blocks| {
+                let mut wa = vec![0f32; v];
+                for b in blocks {
+                    let lo = b * row_tile;
+                    let hi = (lo + row_tile).min(u);
+                    for i in lo..hi {
+                        let ai = &a[i * v..(i + 1) * v];
+                        wa.fill(0.0);
+                        let mut acc = 0f64;
+                        for j in 0..u {
+                            if j == i {
+                                continue;
+                            }
+                            let aj = &a[j * v..(j + 1) * v];
+                            let w = dot(ai, aj);
+                            if w != 0.0 {
+                                acc += choose2f(w);
+                                for (s, x) in wa.iter_mut().zip(aj) {
+                                    *s += w * x;
+                                }
+                            }
+                        }
+                        // SAFETY: row blocks are disjoint; each i (and
+                        // each be row) is written by exactly one worker.
+                        unsafe { *up.get().add(i) = acc };
+                        for (x, ((&av, &wv), &dv)) in
+                            ai.iter().zip(wa.iter()).zip(degv.iter()).enumerate()
+                        {
+                            unsafe { *bp.get().add(i * v + x) = av * (wv - (dv - 1.0)) };
+                        }
+                    }
+                }
+            });
+        }
+        let total: f64 = bu.iter().sum::<f64>() / 2.0;
+        Ok(DenseOutputs { total, bu, bv, be })
+    }
+
+    fn count_total(&self, u: usize, v: usize, a: &[f32]) -> Result<f64> {
+        anyhow::ensure!(a.len() == u * v, "input is {} values, expected {}", a.len(), u * v);
+        anyhow::ensure!(u.max(v) <= self.max_dim, "{u}x{v} exceeds max_dim {}", self.max_dim);
+        Ok(endpoint_counts(a, u, v, self.row_tile).iter().sum::<f64>() / 2.0)
+    }
+
+    fn wedge_stats(&self, u: usize, v: usize, a: &[f32]) -> Result<(f64, f64)> {
+        anyhow::ensure!(a.len() == u * v, "input is {} values, expected {}", a.len(), u * v);
+        // Wedges with endpoints on U are centered on V: Σ_v C(deg_v, 2)
+        // (and symmetrically for endpoints on V).
+        let wu: f64 = col_sums(a, u, v).into_iter().map(choose2f).sum();
+        let mut wv = 0f64;
+        for i in 0..u {
+            let d: f32 = a[i * v..(i + 1) * v].iter().sum();
+            wv += choose2f(d);
+        }
+        Ok((wu, wv))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, BipartiteGraph};
+    use crate::testutil::brute;
+
+    fn run_full(g: &BipartiteGraph, pad_u: usize, pad_v: usize) -> DenseOutputs {
+        let b = RustDense::default();
+        let a = g.to_dense_f32(pad_u, pad_v);
+        b.count_dense(pad_u, pad_v, &a).unwrap()
+    }
+
+    #[test]
+    fn fig1_graph_exact() {
+        let g = BipartiteGraph::from_edges(
+            3,
+            3,
+            &[(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2), (2, 2)],
+        );
+        let out = run_full(&g, 3, 3);
+        assert_eq!(out.total.round() as u64, 3);
+        let (ebu, ebv) = brute::per_vertex(&g);
+        for (i, &e) in ebu.iter().enumerate() {
+            assert_eq!(out.bu[i].round() as u64, e, "bu[{i}]");
+        }
+        for (j, &e) in ebv.iter().enumerate() {
+            assert_eq!(out.bv[j].round() as u64, e, "bv[{j}]");
+        }
+    }
+
+    #[test]
+    fn padded_nonsquare_matches_brute_force() {
+        let g = gen::erdos_renyi(37, 53, 400, 9);
+        let out = run_full(&g, 40, 56);
+        assert_eq!(out.total.round() as u64, brute::total(&g));
+        let (ebu, _) = brute::per_vertex(&g);
+        for (i, &e) in ebu.iter().enumerate() {
+            assert_eq!(out.bu[i].round() as u64, e);
+        }
+        // Padding rows/cols must contribute nothing.
+        for i in g.nu()..40 {
+            assert_eq!(out.bu[i], 0.0);
+        }
+        let ebe = brute::per_edge(&g);
+        for u in 0..g.nu() {
+            for (k, &v) in g.nbrs_u(u).iter().enumerate() {
+                let eid = g.eid_u(u, k) as usize;
+                assert_eq!(out.be[u * 56 + v as usize].round() as u64, ebe[eid]);
+            }
+        }
+    }
+
+    #[test]
+    fn wedge_stats_match_graph() {
+        let g = gen::chung_lu(30, 45, 300, 2.2, 4);
+        let b = RustDense::default();
+        let (pu, pv) = b.plan(g.nu(), g.nv()).unwrap();
+        let a = g.to_dense_f32(pu, pv);
+        let (wu, wv) = b.wedge_stats(pu, pv, &a).unwrap();
+        assert_eq!(wu.round() as u64, g.wedges_centered_v());
+        assert_eq!(wv.round() as u64, g.wedges_centered_u());
+    }
+
+    #[test]
+    fn empty_and_complete_blocks() {
+        let b = RustDense::default();
+        let a = vec![0f32; 64];
+        assert_eq!(b.count_total(8, 8, &a).unwrap(), 0.0);
+        let g = gen::complete_bipartite(6, 7);
+        let out = run_full(&g, 8, 8);
+        assert_eq!(out.total.round() as u64, 15 * 21);
+    }
+}

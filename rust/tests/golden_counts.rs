@@ -1,0 +1,96 @@
+//! Golden-count corpus: tiny fixed datasets with pinned butterfly
+//! totals (in the spirit of the cspx `P900–P905` regenerable bench
+//! problems).  Each file under `tests/golden/` carries its generator
+//! call and expected total in the header; the totals here are the
+//! brute-force ground truth, and every `WedgeAgg x Ranking x cache_opt`
+//! configuration of the framework must reproduce them exactly.
+//!
+//! Regeneration: run the `gen::...` call named in each file's header
+//! and write the graph with `graph::io::save_edge_list` (the
+//! `# regenerate:` line in each file is the literal recipe).
+
+use std::path::PathBuf;
+
+use parbutterfly::count::{count_total, dense, CountOpts, WedgeAgg};
+use parbutterfly::graph::{gen, io, BipartiteGraph};
+use parbutterfly::rank::Ranking;
+use parbutterfly::runtime::RustDense;
+use parbutterfly::testutil::brute;
+
+/// (file, expected total, regenerator for byte-determinism checks —
+/// `None` for generators on float paths, where libm rounding could
+/// legally differ across hosts).
+fn corpus() -> Vec<(&'static str, u64, Option<BipartiteGraph>)> {
+    vec![
+        ("davis.txt", 341, Some(gen::davis_southern_women())),
+        ("k6x7.txt", 315, Some(gen::complete_bipartite(6, 7))),
+        ("er20x25.txt", 251, Some(gen::erdos_renyi(20, 25, 150, 7))),
+        ("er16x16.txt", 132, Some(gen::erdos_renyi(16, 16, 100, 1))),
+        ("cl30x20.txt", 567, None), // gen::chung_lu(30, 20, 200, 2.1, 5)
+        ("blocks12.txt", 73, Some(gen::planted_blocks(12, 12, 2, 4, 4, 1.0, 10, 3))),
+    ]
+}
+
+fn load(file: &str) -> BipartiteGraph {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(file);
+    io::load_edge_list(&path).unwrap_or_else(|e| panic!("loading {file}: {e:#}"))
+}
+
+#[test]
+fn golden_totals_across_all_agg_and_ranking_combos() {
+    for (file, expect, _) in corpus() {
+        let g = load(file);
+        assert_eq!(brute::total(&g), expect, "{file}: brute-force anchor");
+        for ranking in Ranking::ALL {
+            for agg in WedgeAgg::ALL {
+                for cache_opt in [false, true] {
+                    let opts = CountOpts { ranking, agg, cache_opt, ..Default::default() };
+                    assert_eq!(
+                        count_total(&g, &opts),
+                        expect,
+                        "{file}: ranking={ranking:?} agg={agg:?} cache_opt={cache_opt}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_totals_on_the_dense_backend() {
+    let backend = RustDense::default();
+    for (file, expect, _) in corpus() {
+        let g = load(file);
+        assert_eq!(dense::count_total_dense(&g, &backend).unwrap(), expect, "{file}");
+    }
+}
+
+#[test]
+fn golden_files_are_regenerable() {
+    // Integer-path generators must reproduce the committed edge lists
+    // byte-for-byte (the float-path chung_lu entry is checked by total
+    // only, through the tests above).
+    for (file, _, regen) in corpus() {
+        let Some(expected_graph) = regen else { continue };
+        let g = load(file);
+        assert_eq!(g.nu(), expected_graph.nu(), "{file}: nu");
+        assert_eq!(g.nv(), expected_graph.nv(), "{file}: nv");
+        assert_eq!(g.edges(), expected_graph.edges(), "{file}: edge list drifted");
+    }
+}
+
+#[test]
+fn golden_headers_pin_the_expected_totals() {
+    // The `expected total` comment in each file must agree with the
+    // table in this test — keeps file and test from drifting apart.
+    for (file, expect, _) in corpus() {
+        let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(file);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("# expected total butterflies:"))
+            .unwrap_or_else(|| panic!("{file}: missing expected-total header"));
+        let pinned: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert_eq!(pinned, expect, "{file}: header vs test table");
+    }
+}

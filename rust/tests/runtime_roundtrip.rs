@@ -1,115 +1,177 @@
-//! Integration: the AOT artifacts (Python Layer 1/2) load, compile and
-//! execute through the Rust PJRT runtime with exactly the same numbers
-//! as the CPU counting framework — the end-to-end wiring of the
-//! three-layer stack.  Skipped (with a note) if `make artifacts` has
-//! not run.
-
-use std::path::Path;
+//! Integration: the dense-core runtime round-trips through whatever
+//! backend the build provides.
+//!
+//! * Default features: no PJRT, no artifacts — the tests exercise the
+//!   backend-selection and graceful-degradation paths, and the
+//!   artifact-bound tests are compiled out behind `cfg(feature =
+//!   "pjrt")`.
+//! * `--features pjrt`: the artifact tests run when `make artifacts`
+//!   has produced `rust/artifacts/manifest.txt` (and skip with a note
+//!   otherwise — e.g. when built against the in-tree `xla` stub).
 
 use parbutterfly::coordinator::{Coordinator, CountConfig};
-use parbutterfly::count::{count_per_edge, count_per_vertex, count_total, dense, CountOpts};
 use parbutterfly::graph::gen;
-use parbutterfly::runtime::Engine;
+use parbutterfly::runtime::{default_backend, DenseBackend, RustDense};
 use parbutterfly::testutil::brute;
 
-fn engine() -> Option<Engine> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.txt").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Engine::load_dir(&dir).expect("engine must load from a present manifest"))
-}
-
 #[test]
-fn manifest_lists_expected_entries() {
-    let Some(engine) = engine() else { return };
-    for entry in ["count_dense", "count_total", "wedge_stats"] {
-        assert!(
-            engine.specs().iter().any(|s| s.entry == entry),
-            "missing {entry}"
-        );
+fn default_backend_is_always_present_without_artifacts() {
+    if std::env::var("PARBUTTERFLY_BACKEND").map(|v| v != "auto").unwrap_or(false) {
+        return; // selection overridden by the developer's environment
     }
-    // Every listed file exists.
-    for s in engine.specs() {
-        assert!(s.path.exists(), "{} missing", s.path.display());
+    // Regardless of features, with no artifacts on disk the selector
+    // must hand back the pure-Rust reference backend, never None.
+    let b = default_backend().expect("auto selection must fall back to rust-dense");
+    if !parbutterfly::count::dense::artifacts_available() {
+        assert_eq!(b.name(), "rust-dense");
     }
 }
 
 #[test]
-fn dense_total_matches_cpu_framework() {
-    let Some(engine) = engine() else { return };
-    for seed in [1, 2] {
-        let g = gen::erdos_renyi(100, 120, 1500, seed);
-        let expect = count_total(&g, &CountOpts::default());
-        let got = dense::count_total_dense(&g, &engine).unwrap();
-        assert_eq!(got, expect, "seed={seed}");
-    }
-}
-
-#[test]
-fn dense_full_counts_match_cpu() {
-    let Some(engine) = engine() else { return };
-    let g = gen::chung_lu(90, 110, 1200, 2.2, 7);
-    let got = dense::count_dense(&g, &engine).unwrap();
-    assert_eq!(got.total, count_total(&g, &CountOpts::default()));
-    let vc = count_per_vertex(&g, &CountOpts::default());
-    assert_eq!(got.bu, vc.bu);
-    assert_eq!(got.bv, vc.bv);
-    assert_eq!(got.be, count_per_edge(&g, &CountOpts::default()));
-}
-
-#[test]
-fn dense_handles_extremes() {
-    let Some(engine) = engine() else { return };
-    // Complete bipartite block (densest case).
-    let g = gen::complete_bipartite(60, 50);
-    let got = dense::count_dense(&g, &engine).unwrap();
-    assert_eq!(got.total, brute::total(&g));
-    // Empty graph.
-    let g0 = parbutterfly::graph::BipartiteGraph::from_edges(10, 10, &[]);
-    assert_eq!(dense::count_total_dense(&g0, &engine).unwrap(), 0);
-}
-
-#[test]
-fn wedge_stats_artifact_matches_graph() {
-    let Some(engine) = engine() else { return };
-    let g = gen::erdos_renyi(80, 90, 900, 5);
-    let spec = engine.pick("wedge_stats", g.nu(), g.nv()).unwrap();
-    let a = g.to_dense_f32(spec.u, spec.v);
-    let (wu, wv) = engine.wedge_stats(spec.u, spec.v, &a).unwrap();
-    assert_eq!(wu.round() as u64, g.wedges_centered_v()); // endpoints U = centers V
-    assert_eq!(wv.round() as u64, g.wedges_centered_u());
-}
-
-#[test]
-fn hybrid_split_is_exact() {
-    let Some(engine) = engine() else { return };
-    // Skewed graph: dense core on top-degree vertices.
-    let g = gen::chung_lu(300, 400, 6000, 2.1, 3);
-    let expect = count_total(&g, &CountOpts::default());
-    for (cu, cv) in [(50, 50), (128, 128), (300, 400)] {
-        let got =
-            dense::count_total_hybrid(&g, &engine, cu, cv, &CountOpts::default()).unwrap();
-        assert_eq!(got, expect, "core {cu}x{cv}");
-    }
-}
-
-#[test]
-fn coordinator_routes_small_graphs_dense() {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.txt").exists() {
-        return;
-    }
-    std::env::set_var("PARBUTTERFLY_ARTIFACTS", dir.to_str().unwrap());
-    let c = Coordinator::with_default_engine();
-    assert!(c.has_engine());
-    let g = gen::erdos_renyi(100, 100, 1000, 9);
+fn coordinator_degrades_gracefully_without_engine() {
+    // A coordinator built when no engine/artifacts exist must still
+    // answer exact counts (dense via the reference kernel, or CPU).
+    let c = Coordinator::with_default_backend();
+    let g = gen::erdos_renyi(50, 60, 600, 9);
     let r = c.count_total_routed(&g, &CountConfig::default());
-    assert_eq!(r.backend, "dense");
     assert_eq!(r.total, brute::total(&g));
-    // Oversized graphs fall back to the CPU framework.
-    let big = gen::erdos_renyi(600, 600, 3000, 9);
-    let r2 = c.count_total_routed(&big, &CountConfig::default());
+    // And an explicitly backend-less coordinator routes to the CPU.
+    let cpu = Coordinator::cpu_only();
+    let r2 = cpu.count_total_routed(&g, &CountConfig::default());
     assert_eq!(r2.backend, "cpu");
+    assert_eq!(r2.total, r.total);
+}
+
+#[test]
+fn reference_backend_roundtrips_through_trait_object() {
+    // The same end-to-end path the PJRT engine takes (plan -> pad ->
+    // execute -> slice), driven through `dyn DenseBackend`.
+    let backend: Box<dyn DenseBackend> = Box::new(RustDense::default());
+    let g = gen::chung_lu(90, 110, 1200, 2.2, 7);
+    let got = parbutterfly::count::dense::count_dense(&g, backend.as_ref()).unwrap();
+    assert_eq!(got.total, brute::total(&g));
+    let (ebu, ebv) = brute::per_vertex(&g);
+    assert_eq!(got.bu, ebu);
+    assert_eq!(got.bv, ebv);
+    assert_eq!(got.be, brute::per_edge(&g));
+}
+
+/// Artifact-gated paths: compiled only with the `pjrt` feature, and
+/// skipped (with a note) unless `make artifacts` has run AND the build
+/// links the real `xla` bindings rather than the in-tree stub.
+#[cfg(feature = "pjrt")]
+mod pjrt_artifacts {
+    use super::*;
+    use parbutterfly::count::{count_per_edge, count_per_vertex, count_total, dense, CountOpts};
+    use parbutterfly::runtime::Engine;
+    use std::path::Path;
+
+    fn engine() -> Option<Engine> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        match Engine::load_dir(&dir) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                // The stub xla crate fails at client construction; a
+                // manifest with a real xla build must load.
+                eprintln!("skipping: engine did not load ({e:#})");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn manifest_lists_expected_entries() {
+        let Some(engine) = engine() else { return };
+        for entry in ["count_dense", "count_total", "wedge_stats"] {
+            assert!(
+                engine.specs().iter().any(|s| s.entry == entry),
+                "missing {entry}"
+            );
+        }
+        for s in engine.specs() {
+            assert!(s.path.exists(), "{} missing", s.path.display());
+        }
+    }
+
+    #[test]
+    fn dense_total_matches_cpu_framework() {
+        let Some(engine) = engine() else { return };
+        for seed in [1, 2] {
+            let g = gen::erdos_renyi(100, 120, 1500, seed);
+            let expect = count_total(&g, &CountOpts::default());
+            let got = dense::count_total_dense(&g, &engine).unwrap();
+            assert_eq!(got, expect, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn dense_full_counts_match_cpu() {
+        let Some(engine) = engine() else { return };
+        let g = gen::chung_lu(90, 110, 1200, 2.2, 7);
+        let got = dense::count_dense(&g, &engine).unwrap();
+        assert_eq!(got.total, count_total(&g, &CountOpts::default()));
+        let vc = count_per_vertex(&g, &CountOpts::default());
+        assert_eq!(got.bu, vc.bu);
+        assert_eq!(got.bv, vc.bv);
+        assert_eq!(got.be, count_per_edge(&g, &CountOpts::default()));
+    }
+
+    #[test]
+    fn dense_handles_extremes() {
+        let Some(engine) = engine() else { return };
+        // Complete bipartite block (densest case).
+        let g = gen::complete_bipartite(60, 50);
+        let got = dense::count_dense(&g, &engine).unwrap();
+        assert_eq!(got.total, brute::total(&g));
+        // Empty graph.
+        let g0 = parbutterfly::graph::BipartiteGraph::from_edges(10, 10, &[]);
+        assert_eq!(dense::count_total_dense(&g0, &engine).unwrap(), 0);
+    }
+
+    #[test]
+    fn wedge_stats_artifact_matches_graph() {
+        let Some(engine) = engine() else { return };
+        let g = gen::erdos_renyi(80, 90, 900, 5);
+        let (pu, pv) = engine.plan(g.nu(), g.nv()).unwrap();
+        let a = g.to_dense_f32(pu, pv);
+        let (wu, wv) = engine.wedge_stats(pu, pv, &a).unwrap();
+        assert_eq!(wu.round() as u64, g.wedges_centered_v()); // endpoints U = centers V
+        assert_eq!(wv.round() as u64, g.wedges_centered_u());
+    }
+
+    #[test]
+    fn hybrid_split_is_exact() {
+        let Some(engine) = engine() else { return };
+        // Skewed graph: dense core on top-degree vertices.
+        let g = gen::chung_lu(300, 400, 6000, 2.1, 3);
+        let expect = count_total(&g, &CountOpts::default());
+        for (cu, cv) in [(50, 50), (128, 128), (300, 400)] {
+            let got =
+                dense::count_total_hybrid(&g, &engine, cu, cv, &CountOpts::default()).unwrap();
+            assert_eq!(got, expect, "core {cu}x{cv}");
+        }
+    }
+
+    #[test]
+    fn coordinator_routes_small_graphs_to_artifacts() {
+        // Build the coordinator from the loaded engine directly rather
+        // than via env vars: set_var racing sibling tests' getenv calls
+        // under the parallel test harness is UB on glibc.
+        let Some(engine) = engine() else { return };
+        let dense_limit = engine.max_dim();
+        let c = Coordinator::with_backend(Box::new(engine));
+        assert!(c.has_backend());
+        let g = gen::erdos_renyi(100, 100, 1000, 9);
+        let r = c.count_total_routed(&g, &CountConfig::default());
+        assert_eq!(r.backend, "pjrt");
+        assert_eq!(r.total, brute::total(&g));
+        // Oversized graphs fall back to the CPU framework.
+        let big = gen::erdos_renyi(dense_limit + 1, dense_limit + 1, 3000, 9);
+        let r2 = c.count_total_routed(&big, &CountConfig::default());
+        assert_eq!(r2.backend, "cpu");
+    }
 }

@@ -1,0 +1,193 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access and no registry cache,
+//! so the subset of `anyhow` this workspace actually uses is
+//! implemented here and wired in as a path dependency: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`] macros, and
+//! the [`Context`] extension trait.  Semantics follow the real crate
+//! where they overlap: `{:#}` formatting prints the context chain,
+//! `?` converts any `std::error::Error + Send + Sync + 'static`.
+
+use std::fmt;
+
+/// Error type: a message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Self {
+        Error { msg: ctx.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain of messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur.msg.as_str())
+        })
+    }
+
+    /// The immediate cause, if any.
+    pub fn source(&self) -> Option<&Error> {
+        self.source.as_deref()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let mut first = true;
+            for msg in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                first = false;
+                write!(f, "{msg}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause = self.source.as_deref();
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(c) = cause {
+            write!(f, "\n    {}", c.msg)?;
+            cause = c.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Flatten the std source chain into our chain.
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            err = Some(Error { msg, source: err.map(Box::new) });
+        }
+        err.unwrap()
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to fallible results.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse()?;
+        ensure!(v < 100, "value {v} too large");
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_and_ensure() {
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+        assert!(parse("500").is_err());
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = std::fs::read_to_string("/nonexistent/really/not")
+            .with_context(|| "reading config".to_string())
+            .unwrap_err();
+        let plain = format!("{e}");
+        let full = format!("{e:#}");
+        assert_eq!(plain, "reading config");
+        assert!(full.starts_with("reading config: "), "{full}");
+        assert!(full.len() > plain.len());
+    }
+
+    #[test]
+    fn bail_returns_error() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("flagged {}", 42);
+            }
+            Ok(())
+        }
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flagged 42");
+        assert!(f(false).is_ok());
+    }
+}
