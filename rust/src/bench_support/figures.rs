@@ -11,7 +11,7 @@
 
 use crate::baseline::{seq_count, seq_peel};
 use crate::count::{
-    count_per_edge, count_per_vertex, count_total, sparsify, BflyAgg, CountOpts, WedgeAgg,
+    count_per_edge, count_per_vertex, count_total, sparsify, BflyAgg, CountOpts, Engine, WedgeAgg,
 };
 use crate::graph::BipartiteGraph;
 use crate::peel::{
@@ -49,17 +49,22 @@ fn run_count(g: &BipartiteGraph, stat: Stat, opts: &CountOpts) -> u64 {
     }
 }
 
-/// The paper's aggregation rows: (label, agg, butterfly agg).
-pub fn agg_rows() -> Vec<(&'static str, WedgeAgg, BflyAgg)> {
+/// The comparison rows: the paper's eight aggregation configurations
+/// plus the streaming intersect engine.  Each row is a base
+/// [`CountOpts`]; figures overlay ranking / cache_opt via struct
+/// update.
+pub fn agg_rows() -> Vec<(&'static str, CountOpts)> {
+    let wedges = |agg: WedgeAgg, bfly: BflyAgg| CountOpts { agg, bfly, ..Default::default() };
     vec![
-        ("Sort", WedgeAgg::Sort, BflyAgg::Reagg),
-        ("ASort", WedgeAgg::Sort, BflyAgg::Atomic),
-        ("Hash", WedgeAgg::Hash, BflyAgg::Reagg),
-        ("AHash", WedgeAgg::Hash, BflyAgg::Atomic),
-        ("Hist", WedgeAgg::Hist, BflyAgg::Reagg),
-        ("AHist", WedgeAgg::Hist, BflyAgg::Atomic),
-        ("BatchS", WedgeAgg::BatchS, BflyAgg::Atomic),
-        ("BatchWA", WedgeAgg::BatchWA, BflyAgg::Atomic),
+        ("Sort", wedges(WedgeAgg::Sort, BflyAgg::Reagg)),
+        ("ASort", wedges(WedgeAgg::Sort, BflyAgg::Atomic)),
+        ("Hash", wedges(WedgeAgg::Hash, BflyAgg::Reagg)),
+        ("AHash", wedges(WedgeAgg::Hash, BflyAgg::Atomic)),
+        ("Hist", wedges(WedgeAgg::Hist, BflyAgg::Reagg)),
+        ("AHist", wedges(WedgeAgg::Hist, BflyAgg::Atomic)),
+        ("BatchS", wedges(WedgeAgg::BatchS, BflyAgg::Atomic)),
+        ("BatchWA", wedges(WedgeAgg::BatchWA, BflyAgg::Atomic)),
+        ("Intersect", CountOpts { engine: Engine::Intersect, ..Default::default() }),
     ]
 }
 
@@ -87,8 +92,8 @@ pub fn agg_figure_on(bench_name: &str, stat: Stat, cache_opt: bool, suite: &[&st
         println!("[{}] {} — ranking {}", wl.id, wl.describe, ranking.name());
         let mut rows = Vec::new();
         let mut expected = None;
-        for (label, agg, bfly) in agg_rows() {
-            let opts = CountOpts { ranking, agg, bfly, cache_opt, ..Default::default() };
+        for (label, base) in agg_rows() {
+            let opts = CountOpts { ranking, cache_opt, ..base };
             let mut result = 0u64;
             let m = bench(|| {
                 result = run_count(&wl.graph, stat, &opts);
@@ -122,6 +127,7 @@ pub fn counting_table_on(bench_name: &str, cache_opt: bool, suite: &[&str]) {
         let g = &wl.graph;
         let ranking = choose_ranking(g);
         let opts = CountOpts { ranking, cache_opt, ..Default::default() }; // BatchS default
+        let iopts = CountOpts { ranking, engine: Engine::Intersect, ..Default::default() };
         println!("[{}] {}", wl.id, wl.describe);
 
         // --- total ---
@@ -130,6 +136,9 @@ pub fn counting_table_on(bench_name: &str, cache_opt: bool, suite: &[&str]) {
         report(bench_name, wl.id, "total/PB-par", &m);
         let m = bench(|| with_threads(1, || count_total(g, &opts)));
         report(bench_name, wl.id, "total/PB-T1", &m);
+        assert_eq!(count_total(g, &iopts), expect, "intersect disagrees on {wl_id}");
+        let m = bench(|| count_total(g, &iopts));
+        report(bench_name, wl.id, "total/PB-intersect", &m);
         let m = bench_n(0, 1, || seq_count::sanei_mehri_total(g));
         report(bench_name, wl.id, "total/SaneiMehri-T1", &m);
         let m = bench_n(0, 1, || seq_count::chiba_nishizeki_total(g));
@@ -158,6 +167,8 @@ pub fn counting_table_on(bench_name: &str, cache_opt: bool, suite: &[&str]) {
         report(bench_name, wl.id, "vertex/PB-par", &m);
         let m = bench(|| with_threads(1, || count_per_vertex(g, &opts)));
         report(bench_name, wl.id, "vertex/PB-T1", &m);
+        let m = bench(|| count_per_vertex(g, &iopts));
+        report(bench_name, wl.id, "vertex/PB-intersect", &m);
         let m = bench_n(0, 1, || seq_count::wang_vanilla(g));
         report(bench_name, wl.id, "vertex/Wang2014-T1", &m);
 
@@ -166,6 +177,8 @@ pub fn counting_table_on(bench_name: &str, cache_opt: bool, suite: &[&str]) {
         report(bench_name, wl.id, "edge/PB-par", &m);
         let m = bench(|| with_threads(1, || count_per_edge(g, &opts)));
         report(bench_name, wl.id, "edge/PB-T1", &m);
+        let m = bench(|| count_per_edge(g, &iopts));
+        report(bench_name, wl.id, "edge/PB-intersect", &m);
     }
 }
 
@@ -180,14 +193,15 @@ pub fn scaling_figure(bench_name: &str, cache_opt: bool) {
     let wl = workloads::build("clL");
     let ranking = choose_ranking(&wl.graph);
     for (stat, label) in [(Stat::PerVertex, "per-vertex"), (Stat::PerEdge, "per-edge")] {
-        for (agg_label, agg, bfly) in agg_rows() {
+        for (agg_label, base) in agg_rows() {
             // The paper sweeps every aggregation; keep the figure's
-            // shape but one row per aggregation family.
-            if !matches!(agg_label, "AHash" | "BatchS" | "BatchWA") {
+            // shape but one row per aggregation family (plus the
+            // streaming engine).
+            if !matches!(agg_label, "AHash" | "BatchS" | "BatchWA" | "Intersect") {
                 continue;
             }
             for t in [1usize, 2, 4] {
-                let opts = CountOpts { ranking, agg, bfly, cache_opt, ..Default::default() };
+                let opts = CountOpts { ranking, cache_opt, ..base.clone() };
                 let m = bench_n(0, 2, || with_threads(t, || run_count(&wl.graph, stat, &opts)));
                 report(bench_name, wl.id, &format!("{label}/{agg_label}/t{t}"), &m);
             }

@@ -4,7 +4,7 @@
 //! parbutterfly gen    --kind er|cl|blocks|davis --nu N --nv N --m M [--seed S] --out FILE
 //! parbutterfly info   --graph FILE
 //! parbutterfly count  --graph FILE [--mode total|vertex|edge] [--rank R] [--agg A]
-//!                     [--cache-opt] [--auto-rank] [--threads T]
+//!                     [--engine wedges|intersect] [--cache-opt] [--auto-rank] [--threads T]
 //! parbutterfly peel   --graph FILE [--mode vertex|edge] [--agg A]
 //!                     [--buckets julienne|fibheap] [--threads T]
 //! parbutterfly approx --graph FILE --method edge|colorful --p P [--seed S]
@@ -19,7 +19,7 @@ use std::path::Path;
 use crate::coordinator::{
     count_report, tip_report, wing_report, Coordinator, CountConfig, CountMode, PeelConfig,
 };
-use crate::count::{sparsify, BflyAgg, CountOpts, WedgeAgg};
+use crate::count::{sparsify, BflyAgg, CountOpts, Engine, WedgeAgg};
 use crate::graph::{gen, io, BipartiteGraph};
 use crate::peel::{BucketKind, PeelSide};
 use crate::rank::Ranking;
@@ -78,6 +78,7 @@ fn load(args: &Args) -> anyhow::Result<BipartiteGraph> {
 fn count_opts(args: &Args) -> CountOpts {
     CountOpts {
         ranking: args.get("rank").and_then(Ranking::parse).unwrap_or(Ranking::Degree),
+        engine: args.get("engine").and_then(Engine::parse).unwrap_or(Engine::Wedges),
         agg: args.get("agg").and_then(WedgeAgg::parse).unwrap_or(WedgeAgg::BatchS),
         bfly: if args.has("reagg") { BflyAgg::Reagg } else { BflyAgg::Atomic },
         cache_opt: args.has("cache-opt"),
@@ -183,9 +184,10 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
     };
     let r = with_threads_arg(args, || count_report(&g, mode, &cfg));
     println!(
-        "total = {} (ranking {}, {} wedges, {:.2} ms, backend {})",
+        "total = {} (ranking {}, engine {}, {} wedges, {:.2} ms, backend {})",
         r.total,
         r.ranking.name(),
+        r.engine,
         r.wedges,
         r.millis,
         r.backend
@@ -271,6 +273,11 @@ fn cmd_dense(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_backends() -> anyhow::Result<()> {
     use crate::runtime::DenseBackend;
+    println!("counting engines (count --engine E):");
+    let aggs = WedgeAgg::ALL.map(|a| a.name()).join("/");
+    println!("  wedges     materializing aggregation ({aggs})");
+    println!("  intersect  streaming per-source counter (no wedge materialization)");
+    println!("dense backends (dense --backend B):");
     let rd = crate::runtime::RustDense::default();
     println!("rust-dense  available  (max tile {0} x {0})", rd.max_dim());
     // Availability probe is a manifest check only — `selected` below is
@@ -336,6 +343,12 @@ mod tests {
         run_inner(&argv).unwrap();
         let argv: Vec<String> =
             ["count", "--graph", path.to_str().unwrap()].iter().map(|s| s.to_string()).collect();
+        run_inner(&argv).unwrap();
+        let argv: Vec<String> =
+            ["count", "--graph", path.to_str().unwrap(), "--engine", "intersect", "--mode", "full"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
         run_inner(&argv).unwrap();
         let argv: Vec<String> =
             ["peel", "--graph", path.to_str().unwrap()].iter().map(|s| s.to_string()).collect();

@@ -55,6 +55,9 @@ pub struct CountReport {
     /// "cpu" (sparse framework) or the dense backend's name
     /// ("rust-dense", "pjrt").
     pub backend: &'static str,
+    /// Counting engine used on the CPU path ("wedges", "intersect");
+    /// "dense" when a dense backend answered instead.
+    pub engine: &'static str,
 }
 
 fn resolve_ranking(g: &BipartiteGraph, cfg: &CountConfig) -> Ranking {
@@ -99,6 +102,7 @@ pub fn count_report(g: &BipartiteGraph, mode: CountMode, cfg: &CountConfig) -> C
         wedges,
         millis: start.elapsed().as_secs_f64() * 1e3,
         backend: "cpu",
+        engine: opts.engine.name(),
     }
 }
 
@@ -188,6 +192,7 @@ impl Coordinator {
                             wedges: 0,
                             millis: start.elapsed().as_secs_f64() * 1e3,
                             backend: backend.name(),
+                            engine: "dense",
                         };
                     }
                 }
@@ -211,6 +216,21 @@ mod tests {
         for mode in [CountMode::Total, CountMode::PerVertex, CountMode::PerEdge, CountMode::Full] {
             let r = count_report(&g, mode, &cfg);
             assert_eq!(r.total, expect, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn intersect_engine_flows_through_the_facade() {
+        let g = gen::erdos_renyi(25, 30, 220, 4);
+        let expect = brute::total(&g);
+        let cfg = CountConfig {
+            opts: CountOpts { engine: count::Engine::Intersect, ..Default::default() },
+            auto_rank: false,
+        };
+        for mode in [CountMode::Total, CountMode::PerVertex, CountMode::PerEdge, CountMode::Full] {
+            let r = count_report(&g, mode, &cfg);
+            assert_eq!(r.total, expect, "{mode:?}");
+            assert_eq!(r.engine, "intersect");
         }
     }
 

@@ -16,12 +16,12 @@
 //! serial aggregation sees every wedge of each key — `C(d, 2)` is
 //! computed on complete multiplicities.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::AtomicU64;
 
 use super::wedges::{wedges_of_source, Wedge};
 use super::{atomic_add, choose2};
 use crate::graph::RankedGraph;
-use crate::prims::pool::num_threads;
+use crate::prims::pool::{parallel_for_chunks_with, parallel_for_dynamic_with};
 
 /// Per-worker scratch: dense second-endpoint counts, touched list, and
 /// the materialized wedges of the current source.
@@ -54,7 +54,6 @@ fn run_batch(
     handle: impl Fn(usize, &mut Scratch) + Sync,
 ) {
     let n = rg.n();
-    let t = num_threads();
     // Fill the per-source scratch: count wedges by second endpoint.
     let fill = |src: usize, s: &mut Scratch| {
         s.wbuf.clear();
@@ -78,52 +77,20 @@ fn run_batch(
             });
         }
     };
-    let reset = |s: &mut Scratch| {
-        for &o in &s.touched {
-            s.cnt[o as usize] = 0;
+    let per_range = |s: &mut Scratch, r: std::ops::Range<usize>| {
+        for src in r {
+            fill(src, s);
+            handle(src, s);
+            for &o in &s.touched {
+                s.cnt[o as usize] = 0;
+            }
         }
     };
-    if t <= 1 {
-        let mut s = Scratch::new(n);
-        for src in 0..n {
-            fill(src, &mut s);
-            handle(src, &mut s);
-            reset(&mut s);
-        }
-        return;
+    if dynamic {
+        parallel_for_dynamic_with(n, WA_GRAIN, || Scratch::new(n), per_range);
+    } else {
+        parallel_for_chunks_with(n, || Scratch::new(n), per_range);
     }
-    let next = AtomicUsize::new(0);
-    let nworkers = t.min(n.max(1));
-    let chunk = n.div_ceil(nworkers);
-    std::thread::scope(|sc| {
-        for wid in 0..nworkers {
-            let (fill, handle, reset, next) = (&fill, &handle, &reset, &next);
-            sc.spawn(move || {
-                let mut s = Scratch::new(n);
-                if dynamic {
-                    loop {
-                        let lo = next.fetch_add(WA_GRAIN, Ordering::Relaxed);
-                        if lo >= n {
-                            break;
-                        }
-                        for src in lo..(lo + WA_GRAIN).min(n) {
-                            fill(src, &mut s);
-                            handle(src, &mut s);
-                            reset(&mut s);
-                        }
-                    }
-                } else {
-                    let lo = wid * chunk;
-                    let hi = ((wid + 1) * chunk).min(n);
-                    for src in lo..hi {
-                        fill(src, &mut s);
-                        handle(src, &mut s);
-                        reset(&mut s);
-                    }
-                }
-            });
-        }
-    });
 }
 
 /// Global count via batching.

@@ -1,0 +1,179 @@
+//! The counting-engine abstraction.
+//!
+//! Every counting path answers the same three questions — global,
+//! per-vertex (rank-indexed), per-edge (edge-id-indexed) butterfly
+//! counts on a preprocessed [`RankedGraph`] — so the stack exposes one
+//! [`WedgeEngine`] trait and two implementation families:
+//!
+//! * [`AggEngine`] — the materializing "retrieve → aggregate →
+//!   combine" skeleton of §3.1: GET-WEDGES materializes (or streams)
+//!   wedge records, one of the five [`WedgeAgg`] strategies
+//!   (Sort/Hash/Hist fully parallel, BatchS/BatchWA partially
+//!   parallel) aggregates them by endpoint key, and butterfly counts
+//!   are combined atomically or by re-aggregation.  Memory scales with
+//!   the wedge count (bounded by `CountOpts::max_wedges` chunking).
+//! * [`intersect`](super::intersect) — the streaming intersect engine:
+//!   per-source dense-counter two-hop walks that never allocate a
+//!   wedge record.  Memory scales with `m + threads * n`, independent
+//!   of the wedge count.
+//!
+//! [`Engine`] is the user-facing selector carried by
+//! [`CountOpts::engine`]; [`engine_for`] resolves it to a trait object.
+
+use std::sync::atomic::AtomicU64;
+
+use super::{agg, batch, intersect, CountOpts, WedgeAgg};
+use crate::graph::RankedGraph;
+
+/// Which counting engine a run uses (selected via [`CountOpts`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Engine {
+    /// Materializing wedge aggregation; the strategy is
+    /// [`CountOpts::agg`].
+    Wedges,
+    /// Streaming per-source intersect counting — zero wedge
+    /// materialization, ignores [`CountOpts::agg`],
+    /// [`CountOpts::bfly`], [`CountOpts::cache_opt`], and
+    /// [`CountOpts::max_wedges`].
+    Intersect,
+}
+
+impl Engine {
+    pub const ALL: [Engine; 2] = [Engine::Wedges, Engine::Intersect];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Wedges => "wedges",
+            Engine::Intersect => "intersect",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Engine> {
+        Engine::ALL.into_iter().find(|e| e.name() == s)
+    }
+}
+
+/// A butterfly-counting engine over a preprocessed graph.
+///
+/// `out` arrays are zero-initialized by the caller; engines add into
+/// them (atomic, relaxed) and must produce exact counts.
+pub trait WedgeEngine: Sync {
+    /// Short name for reports and CLI output.
+    fn name(&self) -> &'static str;
+    /// Global butterfly count.
+    fn total(&self, rg: &RankedGraph) -> u64;
+    /// Per-vertex counts into a rank-indexed array of length `rg.n()`.
+    fn per_vertex(&self, rg: &RankedGraph, out: &[AtomicU64]);
+    /// Per-edge counts into an edge-id-indexed array of length `rg.m()`.
+    fn per_edge(&self, rg: &RankedGraph, out: &[AtomicU64]);
+}
+
+/// The materializing family: all five [`WedgeAgg`] strategies behind
+/// one engine, parameterized by the full [`CountOpts`].
+pub struct AggEngine<'a> {
+    opts: &'a CountOpts,
+}
+
+impl<'a> AggEngine<'a> {
+    pub fn new(opts: &'a CountOpts) -> Self {
+        Self { opts }
+    }
+}
+
+impl WedgeEngine for AggEngine<'_> {
+    fn name(&self) -> &'static str {
+        self.opts.agg.name()
+    }
+
+    fn total(&self, rg: &RankedGraph) -> u64 {
+        match self.opts.agg {
+            WedgeAgg::BatchS => batch::total_batch(rg, self.opts.cache_opt, false),
+            WedgeAgg::BatchWA => batch::total_batch(rg, self.opts.cache_opt, true),
+            _ => agg::total_agg(rg, self.opts),
+        }
+    }
+
+    fn per_vertex(&self, rg: &RankedGraph, out: &[AtomicU64]) {
+        match self.opts.agg {
+            WedgeAgg::BatchS => batch::per_vertex_batch(rg, self.opts.cache_opt, false, out),
+            WedgeAgg::BatchWA => batch::per_vertex_batch(rg, self.opts.cache_opt, true, out),
+            _ => agg::per_vertex_agg(rg, self.opts, out),
+        }
+    }
+
+    fn per_edge(&self, rg: &RankedGraph, out: &[AtomicU64]) {
+        match self.opts.agg {
+            WedgeAgg::BatchS => batch::per_edge_batch(rg, self.opts.cache_opt, false, out),
+            WedgeAgg::BatchWA => batch::per_edge_batch(rg, self.opts.cache_opt, true, out),
+            _ => agg::per_edge_agg(rg, self.opts, out),
+        }
+    }
+}
+
+/// The streaming intersect engine (see [`intersect`]).
+pub struct IntersectEngine;
+
+impl WedgeEngine for IntersectEngine {
+    fn name(&self) -> &'static str {
+        "intersect"
+    }
+
+    fn total(&self, rg: &RankedGraph) -> u64 {
+        intersect::total_intersect(rg)
+    }
+
+    fn per_vertex(&self, rg: &RankedGraph, out: &[AtomicU64]) {
+        intersect::per_vertex_intersect(rg, out)
+    }
+
+    fn per_edge(&self, rg: &RankedGraph, out: &[AtomicU64]) {
+        intersect::per_edge_intersect(rg, out)
+    }
+}
+
+/// Resolve the engine an option set selects.
+pub fn engine_for(opts: &CountOpts) -> Box<dyn WedgeEngine + '_> {
+    match opts.engine {
+        Engine::Wedges => Box::new(AggEngine::new(opts)),
+        Engine::Intersect => Box::new(IntersectEngine),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::rank::{preprocess, Ranking};
+    use crate::testutil::brute;
+
+    #[test]
+    fn engine_names_roundtrip() {
+        for e in Engine::ALL {
+            assert_eq!(Engine::parse(e.name()), Some(e));
+        }
+        assert_eq!(Engine::parse("nope"), None);
+    }
+
+    #[test]
+    fn every_engine_agrees_through_the_trait() {
+        let g = gen::erdos_renyi(20, 24, 170, 8);
+        let rg = preprocess(&g, Ranking::Degree);
+        let expect = brute::total(&g);
+        for engine in Engine::ALL {
+            for agg in WedgeAgg::ALL {
+                let opts = CountOpts { engine, agg, ..Default::default() };
+                let e = engine_for(&opts);
+                assert_eq!(e.total(&rg), expect, "{engine:?}/{agg:?}");
+                let load = |a: &AtomicU64| a.load(std::sync::atomic::Ordering::Relaxed);
+                let pv: Vec<AtomicU64> = (0..rg.n()).map(|_| AtomicU64::new(0)).collect();
+                e.per_vertex(&rg, &pv);
+                let sum: u64 = pv.iter().map(load).sum();
+                assert_eq!(sum, 4 * expect, "{engine:?}/{agg:?} per-vertex sum");
+                let pe: Vec<AtomicU64> = (0..rg.m()).map(|_| AtomicU64::new(0)).collect();
+                e.per_edge(&rg, &pe);
+                let sum: u64 = pe.iter().map(load).sum();
+                assert_eq!(sum, 4 * expect, "{engine:?}/{agg:?} per-edge sum");
+            }
+        }
+    }
+}

@@ -1,11 +1,29 @@
 //! Butterfly counting (§3.1, §4.2): global, per-vertex, and per-edge,
-//! parameterized over wedge-aggregation strategy, butterfly-aggregation
-//! mode, ranking, the cache optimization, and a wedge-memory budget.
+//! parameterized over the counting **engine**, wedge-aggregation
+//! strategy, butterfly-aggregation mode, ranking, the cache
+//! optimization, and a wedge-memory budget.
 //!
+//! Two engine families sit behind the [`engine::WedgeEngine`] trait
+//! (selected by [`CountOpts::engine`]):
+//!
+//! * **`wedges`** (default) — the paper's retrieve → aggregate →
+//!   combine pipeline.  GET-WEDGES produces wedge records and one of
+//!   the five [`WedgeAgg`] strategies aggregates them; memory scales
+//!   with the wedge count (chunked by [`CountOpts::max_wedges`]).
+//! * **`intersect`** — the streaming per-source counter (BFC-VP++
+//!   style, Wang et al.): dense-counter two-hop walks that never
+//!   materialize a wedge; memory scales with `m + threads * n`, so
+//!   graphs whose wedge sets dwarf RAM still count exactly.
+//!
+//! Modules:
+//!
+//! * [`engine`] — the [`engine::WedgeEngine`] trait, [`Engine`]
+//!   selector, and both engine implementations' dispatch.
 //! * [`wedges`] — GET-WEDGES (Algorithm 2) + cache-optimized variant.
 //! * [`agg`] — the fully-parallel aggregations: Sort, Hash, Hist.
 //! * [`batch`] — the partially-parallel batching aggregations: BatchS
 //!   (simple, static chunking) and BatchWA (wedge-aware, dynamic).
+//! * [`intersect`] — the zero-materialization streaming engine.
 //! * [`sparsify`] — approximate counting via edge / colorful
 //!   sparsification (§4.4).
 //! * [`dense`] — the PJRT dense-core accelerator (Layer 1/2 artifacts).
@@ -13,10 +31,14 @@
 pub mod agg;
 pub mod batch;
 pub mod dense;
+pub mod engine;
+pub mod intersect;
 pub mod sparsify;
 pub mod wedges;
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+pub use engine::{engine_for, Engine, WedgeEngine};
 
 use crate::graph::{BipartiteGraph, RankedGraph};
 use crate::rank::{preprocess, Ranking};
@@ -63,6 +85,10 @@ pub enum BflyAgg {
 #[derive(Clone, Debug)]
 pub struct CountOpts {
     pub ranking: Ranking,
+    /// Counting engine; [`Engine::Wedges`] runs the aggregation
+    /// selected by `agg`, [`Engine::Intersect`] streams and ignores
+    /// `agg`/`bfly`/`cache_opt`/`max_wedges`.
+    pub engine: Engine,
     pub agg: WedgeAgg,
     pub bfly: BflyAgg,
     /// Enumerate wedges from the higher-ranked endpoint (Wang et al.).
@@ -77,6 +103,7 @@ impl Default for CountOpts {
     fn default() -> Self {
         Self {
             ranking: Ranking::Degree,
+            engine: Engine::Wedges,
             agg: WedgeAgg::BatchS,
             bfly: BflyAgg::Atomic,
             cache_opt: false,
@@ -106,11 +133,7 @@ pub fn count_total(g: &BipartiteGraph, opts: &CountOpts) -> u64 {
 
 /// Total count on an already-preprocessed graph.
 pub fn count_total_ranked(rg: &RankedGraph, opts: &CountOpts) -> u64 {
-    match opts.agg {
-        WedgeAgg::BatchS => batch::total_batch(rg, opts.cache_opt, false),
-        WedgeAgg::BatchWA => batch::total_batch(rg, opts.cache_opt, true),
-        _ => agg::total_agg(rg, opts),
-    }
+    engine_for(opts).total(rg)
 }
 
 /// Per-vertex butterfly counts (COUNT-V, Algorithm 3).
@@ -135,11 +158,7 @@ pub fn count_per_vertex(g: &BipartiteGraph, opts: &CountOpts) -> VertexCounts {
 /// Per-vertex counts in *rank space* on a preprocessed graph.
 pub fn count_per_vertex_ranked(rg: &RankedGraph, opts: &CountOpts) -> Vec<u64> {
     let counts: Vec<AtomicU64> = (0..rg.n()).map(|_| AtomicU64::new(0)).collect();
-    match opts.agg {
-        WedgeAgg::BatchS => batch::per_vertex_batch(rg, opts.cache_opt, false, &counts),
-        WedgeAgg::BatchWA => batch::per_vertex_batch(rg, opts.cache_opt, true, &counts),
-        _ => agg::per_vertex_agg(rg, opts, &counts),
-    }
+    engine_for(opts).per_vertex(rg, &counts);
     counts.into_iter().map(|c| c.into_inner()).collect()
 }
 
@@ -152,11 +171,7 @@ pub fn count_per_edge(g: &BipartiteGraph, opts: &CountOpts) -> Vec<u64> {
 /// Per-edge counts on a preprocessed graph (`m` = edge count).
 pub fn count_per_edge_ranked(rg: &RankedGraph, m: usize, opts: &CountOpts) -> Vec<u64> {
     let counts: Vec<AtomicU64> = (0..m).map(|_| AtomicU64::new(0)).collect();
-    match opts.agg {
-        WedgeAgg::BatchS => batch::per_edge_batch(rg, opts.cache_opt, false, &counts),
-        WedgeAgg::BatchWA => batch::per_edge_batch(rg, opts.cache_opt, true, &counts),
-        _ => agg::per_edge_agg(rg, opts, &counts),
-    }
+    engine_for(opts).per_edge(rg, &counts);
     counts.into_iter().map(|c| c.into_inner()).collect()
 }
 
@@ -180,10 +195,20 @@ mod tests {
             for agg in WedgeAgg::ALL {
                 for cache_opt in [false, true] {
                     for bfly in [BflyAgg::Atomic, BflyAgg::Reagg] {
-                        v.push(CountOpts { ranking, agg, bfly, cache_opt, max_wedges: 1 << 26 });
+                        v.push(CountOpts {
+                            ranking,
+                            engine: Engine::Wedges,
+                            agg,
+                            bfly,
+                            cache_opt,
+                            max_wedges: 1 << 26,
+                        });
                     }
                 }
             }
+            // The streaming engine has no agg/bfly/cache knobs — one
+            // combo per ranking.
+            v.push(CountOpts { ranking, engine: Engine::Intersect, ..Default::default() });
         }
         v
     }

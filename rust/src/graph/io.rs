@@ -7,6 +7,10 @@
 //! * KONECT out.* files — `% bip` header, whitespace-separated
 //!   1-indexed pairs (extra columns such as weights/timestamps are
 //!   ignored), matching how the paper loads its datasets.
+//!
+//! Both accept CRLF line endings, and malformed rows — missing
+//! columns, non-numeric / negative / header-exceeding ids — fail with
+//! a line-numbered error instead of a panic deep in CSR construction.
 
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
@@ -23,7 +27,9 @@ pub fn load_edge_list(path: &Path) -> anyhow::Result<BipartiteGraph> {
     let mut konect = false;
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
-        let t = line.trim();
+        // `BufRead::lines` keeps the `\r` of CRLF files; drop it (and
+        // any other stray whitespace) before sniffing or tokenizing.
+        let t = line.trim_end_matches('\r').trim();
         if t.is_empty() {
             continue;
         }
@@ -36,8 +42,9 @@ pub fn load_edge_list(path: &Path) -> anyhow::Result<BipartiteGraph> {
         }
         if let Some(rest) = t.strip_prefix("# bip") {
             let mut it = rest.split_whitespace();
-            let nu: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad bip header"))?.parse()?;
-            let nv: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad bip header"))?.parse()?;
+            let bad = || anyhow::anyhow!("line {}: bad `# bip <nu> <nv>` header", lineno + 1);
+            let nu: usize = it.next().ok_or_else(bad)?.parse().map_err(|_| bad())?;
+            let nv: usize = it.next().ok_or_else(bad)?.parse().map_err(|_| bad())?;
             header = Some((nu, nv));
             continue;
         }
@@ -45,18 +52,30 @@ pub fn load_edge_list(path: &Path) -> anyhow::Result<BipartiteGraph> {
             continue;
         }
         let mut it = t.split_whitespace();
-        let u: u32 = it
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("line {}: missing u", lineno + 1))?
-            .parse()?;
-        let v: u32 = it
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("line {}: missing v", lineno + 1))?
-            .parse()?;
+        let parse_id = |tok: Option<&str>, what: &str| -> anyhow::Result<u32> {
+            let tok =
+                tok.ok_or_else(|| anyhow::anyhow!("line {}: missing {what} id", lineno + 1))?;
+            tok.parse::<u32>().map_err(|_| {
+                anyhow::anyhow!(
+                    "line {}: bad {what} id {tok:?} (expected an integer in 0..{})",
+                    lineno + 1,
+                    u32::MAX
+                )
+            })
+        };
+        let u = parse_id(it.next(), "u")?;
+        let v = parse_id(it.next(), "v")?;
         if konect {
             anyhow::ensure!(u >= 1 && v >= 1, "line {}: KONECT ids are 1-indexed", lineno + 1);
             edges.push((u - 1, v - 1));
         } else {
+            if let Some((nu, nv)) = header {
+                anyhow::ensure!(
+                    (u as usize) < nu && (v as usize) < nv,
+                    "line {}: edge ({u}, {v}) out of range for `# bip {nu} {nv}` header",
+                    lineno + 1
+                );
+            }
             edges.push((u, v));
         }
     }
@@ -65,6 +84,21 @@ pub fn load_edge_list(path: &Path) -> anyhow::Result<BipartiteGraph> {
         let nv = edges.iter().map(|e| e.1 as usize + 1).max().unwrap_or(0);
         (nu, nv)
     });
+    // Backstops: never let an oversized id or dimension reach the CSR
+    // builder's asserts.
+    anyhow::ensure!(
+        nu < u32::MAX as usize && nv < u32::MAX as usize,
+        "{}: vertex ids exceed the supported range (max {})",
+        path.display(),
+        u32::MAX - 1
+    );
+    for &(u, v) in &edges {
+        anyhow::ensure!(
+            (u as usize) < nu && (v as usize) < nv,
+            "{}: edge ({u}, {v}) out of range for `# bip {nu} {nv}` header",
+            path.display()
+        );
+    }
     Ok(BipartiteGraph::from_edges(nu, nv, &edges))
 }
 
@@ -123,5 +157,67 @@ mod tests {
     #[test]
     fn missing_file_errors() {
         assert!(load_edge_list(Path::new("/nonexistent/nope.txt")).is_err());
+    }
+
+    fn write_tmp(name: &str, contents: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("pb_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        std::fs::write(&path, contents).unwrap();
+        path
+    }
+
+    #[test]
+    fn crlf_plain_format_loads() {
+        let path = write_tmp("crlf_plain.txt", "# bip 3 3\r\n# a comment\r\n0 1\r\n2 2\r\n");
+        let g = load_edge_list(&path).unwrap();
+        assert_eq!((g.nu(), g.nv(), g.m()), (3, 3, 2));
+        assert_eq!(g.edges(), vec![(0, 1), (2, 2)]);
+    }
+
+    #[test]
+    fn crlf_konect_format_loads() {
+        let path = write_tmp("crlf_konect.txt", "% bip unweighted\r\n1 1 1 99\r\n2 2\r\n");
+        let g = load_edge_list(&path).unwrap();
+        assert_eq!((g.nu(), g.nv()), (2, 2));
+        assert_eq!(g.edges(), vec![(0, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn negative_id_is_a_line_numbered_error() {
+        let path = write_tmp("neg.txt", "0 1\n-3 2\n");
+        let err = load_edge_list(&path).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("-3"), "{err}");
+    }
+
+    #[test]
+    fn non_numeric_id_is_a_line_numbered_error() {
+        let path = write_tmp("alpha.txt", "0 1\nfoo 2\n");
+        let err = load_edge_list(&path).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn header_exceeding_id_is_a_line_numbered_error_not_a_panic() {
+        let path = write_tmp("oob.txt", "# bip 2 2\n0 1\n0 5\n");
+        let err = load_edge_list(&path).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("# bip 2 2"), "{err}");
+    }
+
+    #[test]
+    fn missing_column_is_a_line_numbered_error() {
+        let path = write_tmp("short.txt", "0 1\n7\n");
+        let err = load_edge_list(&path).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("missing v"), "{err}");
+    }
+
+    #[test]
+    fn konect_zero_id_is_a_line_numbered_error() {
+        let path = write_tmp("k0.txt", "% bip\n1 1\n0 1\n");
+        let err = load_edge_list(&path).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
     }
 }

@@ -15,4 +15,4 @@ pub mod io;
 pub mod ranked;
 
 pub use bipartite::BipartiteGraph;
-pub use ranked::RankedGraph;
+pub use ranked::{RankedGraph, UpCsr};

@@ -164,6 +164,43 @@ impl RankedGraph {
         (self.orig[x] as usize) < self.nu
     }
 
+    /// Build the compact rank-ascending up-adjacency view used by the
+    /// streaming intersect engine (see [`UpCsr`]).  `O(m)` work,
+    /// parallel over sources.
+    pub fn up_csr(&self) -> UpCsr {
+        let n = self.n;
+        let mut off = vec![0usize; n + 1];
+        for x in 0..n {
+            off[x + 1] = off[x] + self.up_deg[x] as usize;
+        }
+        let total = off[n];
+        debug_assert_eq!(total, self.m(), "each edge appears once, from its lower endpoint");
+        let mut adj = vec![0u32; total];
+        let mut eid = vec![0u32; total];
+        {
+            let ap = SyncPtr(adj.as_mut_ptr());
+            let ep = SyncPtr(eid.as_mut_ptr());
+            let off = &off;
+            parallel_for_chunks(n, |range| {
+                for x in range {
+                    let up = self.up_deg[x] as usize;
+                    let nbrs = &self.nbrs(x)[..up];
+                    let eids = &self.eids(x)[..up];
+                    let base = off[x];
+                    // The up-prefix is stored by decreasing rank;
+                    // reverse it so the view scans increasing ranks.
+                    for i in 0..up {
+                        unsafe {
+                            *ap.get().add(base + i) = nbrs[up - 1 - i];
+                            *ep.get().add(base + i) = eids[up - 1 - i];
+                        }
+                    }
+                }
+            });
+        }
+        UpCsr { off, adj, eid }
+    }
+
     /// Total number of wedges GET-WEDGES will process under this
     /// ranking: `sum_x sum_{y in N_x(x)} deg_x(y)`.  This is the `w_r`
     /// of the Table 3 `f` metric.
@@ -181,6 +218,55 @@ impl RankedGraph {
             },
             |a, b| a + b,
         )
+    }
+}
+
+/// Compact up-adjacency in CSR form: row `x` holds exactly the
+/// neighbors of rank-vertex `x` with rank **greater** than `x`, sorted
+/// by **increasing** rank, with the original edge ids riding along.
+///
+/// Every edge appears exactly once — in the row of its lower-ranked
+/// endpoint — so the whole structure is `m` slots (half the full
+/// adjacency) and a sweep over all sources reads it sequentially.
+/// This is the view the streaming intersect engine walks for the first
+/// wedge hop; the second hop still needs the full decreasing-rank
+/// lists of [`RankedGraph`] (a neighbor of the center that out-ranks
+/// the source may still rank *below* the center).
+#[derive(Clone, Debug)]
+pub struct UpCsr {
+    off: Vec<usize>,
+    adj: Vec<u32>,
+    eid: Vec<u32>,
+}
+
+impl UpCsr {
+    /// Up-neighbors of rank-vertex `x`, sorted by increasing rank.
+    #[inline]
+    pub fn nbrs(&self, x: usize) -> &[u32] {
+        &self.adj[self.off[x]..self.off[x + 1]]
+    }
+
+    /// Edge ids parallel to [`Self::nbrs`].
+    #[inline]
+    pub fn eids(&self, x: usize) -> &[u32] {
+        &self.eid[self.off[x]..self.off[x + 1]]
+    }
+
+    /// Up-degree of `x` (equals [`RankedGraph::up_deg`]).
+    #[inline]
+    pub fn deg(&self, x: usize) -> usize {
+        self.off[x + 1] - self.off[x]
+    }
+
+    /// Total slots — one per edge.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.adj.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.adj.is_empty()
     }
 }
 
@@ -282,5 +368,49 @@ mod tests {
     fn duplicate_rank_panics() {
         let g = fig1();
         RankedGraph::new(&g, vec![0, 0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn up_csr_is_the_reversed_up_prefix() {
+        let g = fig1();
+        for rank in [
+            (0..6u32).collect::<Vec<_>>(),
+            (0..6u32).rev().collect::<Vec<_>>(),
+            vec![2, 4, 0, 5, 1, 3],
+        ] {
+            let rg = RankedGraph::new(&g, rank);
+            let up = rg.up_csr();
+            assert_eq!(up.len(), rg.m(), "one slot per edge");
+            for x in 0..rg.n() {
+                assert_eq!(up.deg(x), rg.up_deg(x));
+                let mut expect: Vec<(u32, u32)> = rg.nbrs(x)[..rg.up_deg(x)]
+                    .iter()
+                    .zip(&rg.eids(x)[..rg.up_deg(x)])
+                    .map(|(&y, &e)| (y, e))
+                    .collect();
+                expect.reverse(); // decreasing -> increasing rank
+                let got: Vec<(u32, u32)> =
+                    up.nbrs(x).iter().zip(up.eids(x)).map(|(&y, &e)| (y, e)).collect();
+                assert_eq!(got, expect, "row {x}");
+                for w in up.nbrs(x).windows(2) {
+                    assert!(w[0] < w[1], "row {x} not increasing");
+                }
+                assert!(up.nbrs(x).iter().all(|&y| (y as usize) > x));
+            }
+        }
+    }
+
+    #[test]
+    fn up_csr_covers_every_edge_once() {
+        let g = fig1();
+        let rg = RankedGraph::new(&g, identity_rank(6));
+        let up = rg.up_csr();
+        let mut seen = vec![0u32; g.m()];
+        for x in 0..rg.n() {
+            for &e in up.eids(x) {
+                seen[e as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "each edge from its lower endpoint only");
     }
 }

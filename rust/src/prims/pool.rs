@@ -59,10 +59,35 @@ pub fn parallel_for_chunks<F>(n: usize, f: F)
 where
     F: Fn(std::ops::Range<usize>) + Sync,
 {
+    parallel_for_chunks_with(n, || (), |_, r| f(r));
+}
+
+/// Parallel loop over `0..n`, one index at a time (static chunking).
+pub fn parallel_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    parallel_for_chunks(n, |r| {
+        for i in r {
+            f(i)
+        }
+    });
+}
+
+/// [`parallel_for_chunks`] with per-worker state: every worker builds
+/// one `S` via `init` and hands it to each range it processes.  Use for
+/// reusable scratch (dense counter arrays, wedge buffers) that is too
+/// expensive to allocate per range.
+pub fn parallel_for_chunks_with<S, I, F>(n: usize, init: I, f: F)
+where
+    S: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, std::ops::Range<usize>) + Sync,
+{
     let t = num_threads();
     if t <= 1 || n < MIN_GRAIN.min(2 * t) {
         if n > 0 {
-            f(0..n);
+            f(&mut init(), 0..n);
         }
         return;
     }
@@ -78,23 +103,11 @@ where
             if lo >= hi {
                 break;
             }
-            let f = &f;
+            let (f, init) = (&f, &init);
             s.spawn(move || {
                 OVERRIDE.with(|o| o.set(Some(1)));
-                f(lo..hi)
+                f(&mut init(), lo..hi)
             });
-        }
-    });
-}
-
-/// Parallel loop over `0..n`, one index at a time (static chunking).
-pub fn parallel_for<F>(n: usize, f: F)
-where
-    F: Fn(usize) + Sync,
-{
-    parallel_for_chunks(n, |r| {
-        for i in r {
-            f(i)
         }
     });
 }
@@ -106,27 +119,41 @@ pub fn parallel_for_dynamic<F>(n: usize, grain: usize, f: F)
 where
     F: Fn(std::ops::Range<usize>) + Sync,
 {
+    parallel_for_dynamic_with(n, grain, || (), |_, r| f(r));
+}
+
+/// [`parallel_for_dynamic`] with per-worker state: every worker builds
+/// one `S` via `init`, then reuses it across all the grains it claims.
+/// This is the scheduling substrate for batching/intersect counting,
+/// where each worker owns a dense `n`-slot scratch array that must not
+/// be reallocated per claim.
+pub fn parallel_for_dynamic_with<S, I, F>(n: usize, grain: usize, init: I, f: F)
+where
+    S: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, std::ops::Range<usize>) + Sync,
+{
     let grain = grain.max(1);
     let t = num_threads();
     if t <= 1 || n <= grain {
         if n > 0 {
-            f(0..n);
+            f(&mut init(), 0..n);
         }
         return;
     }
     let next = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..t.min(n.div_ceil(grain)) {
-            let f = &f;
-            let next = &next;
+            let (f, init, next) = (&f, &init, &next);
             s.spawn(move || {
                 OVERRIDE.with(|o| o.set(Some(1)));
+                let mut state = init();
                 loop {
                     let lo = next.fetch_add(grain, Ordering::Relaxed);
                     if lo >= n {
                         break;
                     }
-                    f(lo..(lo + grain).min(n));
+                    f(&mut state, lo..(lo + grain).min(n));
                 }
             });
         }

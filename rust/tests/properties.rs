@@ -5,7 +5,7 @@
 //! no proptest offline); failures report a reproducing seed.
 
 use parbutterfly::count::{
-    count_per_edge, count_per_vertex, count_total, sparsify, BflyAgg, CountOpts, WedgeAgg,
+    count_per_edge, count_per_vertex, count_total, sparsify, BflyAgg, CountOpts, Engine, WedgeAgg,
 };
 use parbutterfly::graph::BipartiteGraph;
 use parbutterfly::peel::{
@@ -50,6 +50,46 @@ fn prop_all_configs_agree_with_brute_force() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_intersect_engine_matches_every_strategy_and_brute_force() {
+    // The zero-materialization engine must agree exactly with brute
+    // force and with all five materializing strategies, for every
+    // statistic, both on the degenerate single-thread path and under
+    // real fork-join (PARBUTTERFLY_THREADS analogue via with_threads).
+    for threads in [1usize, 4] {
+        parbutterfly::prims::pool::with_threads(threads, || {
+            check(&format!("intersect == brute == every WedgeAgg (t={threads})"), 10, |g| {
+                let bg = g.bipartite(14, 90);
+                let expect_t = brute::total(&bg);
+                let (ebu, ebv) = brute::per_vertex(&bg);
+                let ebe = brute::per_edge(&bg);
+                let ranking = *g.pick(&Ranking::ALL);
+                let iopts =
+                    CountOpts { ranking, engine: Engine::Intersect, ..Default::default() };
+                prop_assert_eq(count_total(&bg, &iopts), expect_t)?;
+                let ivc = count_per_vertex(&bg, &iopts);
+                prop_assert(ivc.bu == ebu && ivc.bv == ebv, "intersect per-vertex vs brute")?;
+                let ibe = count_per_edge(&bg, &iopts);
+                prop_assert(ibe == ebe, "intersect per-edge vs brute")?;
+                for agg in WedgeAgg::ALL {
+                    let wopts = CountOpts { ranking, agg, ..Default::default() };
+                    prop_assert_eq(count_total(&bg, &wopts), expect_t)?;
+                    let wvc = count_per_vertex(&bg, &wopts);
+                    prop_assert(
+                        wvc.bu == ivc.bu && wvc.bv == ivc.bv,
+                        format!("{agg:?} per-vertex vs intersect"),
+                    )?;
+                    prop_assert(
+                        count_per_edge(&bg, &wopts) == ibe,
+                        format!("{agg:?} per-edge vs intersect"),
+                    )?;
+                }
+                Ok(())
+            });
+        });
+    }
 }
 
 #[test]
