@@ -15,7 +15,7 @@ use crate::count::{
 };
 use crate::graph::BipartiteGraph;
 use crate::peel::{
-    peel_edges, peel_vertices, BucketKind, PeelEOpts, PeelSide, PeelVOpts, WedgeStore,
+    peel_edges, peel_vertices, BucketKind, PeelEOpts, PeelEngine, PeelSide, PeelVOpts, WedgeStore,
 };
 use crate::prims::pool::with_threads;
 use crate::rank::{choose_ranking, f_metric, preprocess, Ranking};
@@ -275,11 +275,25 @@ pub fn approx_figure(bench_name: &str, cache_opt: bool) {
     }
 }
 
-/// Figures 12/13: peeling runtime per aggregation method.
+/// The peeling comparison rows: the five aggregation strategies plus
+/// the streaming intersect engine (labels shared by fig12/13 and the
+/// `peel_intersect_vs_agg` bench).
+pub fn peel_rows() -> Vec<(&'static str, PeelEngine, WedgeAgg)> {
+    let mut rows: Vec<(&'static str, PeelEngine, WedgeAgg)> = WedgeAgg::ALL
+        .into_iter()
+        .map(|agg| (agg.name(), PeelEngine::Agg, agg))
+        .collect();
+    rows.push(("intersect", PeelEngine::Intersect, WedgeAgg::BatchS));
+    rows
+}
+
+/// Figures 12/13: peeling runtime per aggregation method, plus the
+/// streaming intersect engine as a ninth row.
 pub fn peel_figure(bench_name: &str) {
     banner(
         bench_name,
-        "tip & wing decomposition across aggregations (Julienne buckets); paper: Figs 12/13",
+        "tip & wing decomposition across aggregations + intersect engine (Julienne \
+         buckets); paper: Figs 12/13",
     );
     for wl_id in PEELING_SUITE {
         let wl = workloads::build(wl_id);
@@ -289,14 +303,18 @@ pub fn peel_figure(bench_name: &str) {
         println!("[{}] {}", wl.id, wl.describe);
         let mut vrows = Vec::new();
         let mut erows = Vec::new();
-        for agg in WedgeAgg::ALL {
-            let vopts =
-                PeelVOpts { agg, buckets: BucketKind::Julienne, side: PeelSide::Auto };
+        for (label, engine, agg) in peel_rows() {
+            let vopts = PeelVOpts {
+                engine,
+                agg,
+                buckets: BucketKind::Julienne,
+                side: PeelSide::Auto,
+            };
             let m = bench_n(0, 2, || peel_vertices(g, &vc.bu, &vc.bv, &vopts));
-            vrows.push((format!("V/{}", agg.name()), m));
-            let eopts = PeelEOpts { agg, buckets: BucketKind::Julienne };
+            vrows.push((format!("V/{label}"), m));
+            let eopts = PeelEOpts { engine, agg, buckets: BucketKind::Julienne };
             let m = bench_n(0, 2, || peel_edges(g, &be, &eopts));
-            erows.push((format!("E/{}", agg.name()), m));
+            erows.push((format!("E/{label}"), m));
         }
         report_normalized(bench_name, wl.id, &vrows);
         report_normalized(bench_name, wl.id, &erows);
@@ -318,7 +336,10 @@ pub fn peeling_table(bench_name: &str) {
         let be = count_per_edge(g, &CountOpts::default());
         println!("[{}] {}", wl.id, wl.describe);
 
-        let vopts = PeelVOpts::default();
+        // Baseline rows pin engine: Agg explicitly — the labels imply
+        // the aggregation path, and PeelVOpts::default() follows
+        // PARBUTTERFLY_PEEL_ENGINE (the CI matrix sets it).
+        let vopts = PeelVOpts { engine: PeelEngine::Agg, ..Default::default() };
         let mut rounds_v = 0usize;
         let m = bench_n(0, 2, || {
             let r = peel_vertices(g, &vc.bu, &vc.bv, &vopts);
@@ -328,7 +349,14 @@ pub fn peeling_table(bench_name: &str) {
         report(bench_name, wl.id, "tip/PB-par", &m);
         let m = bench_n(0, 2, || with_threads(1, || peel_vertices(g, &vc.bu, &vc.bv, &vopts)));
         report(bench_name, wl.id, "tip/PB-T1", &m);
-        let fib = PeelVOpts { buckets: BucketKind::FibHeap, ..Default::default() };
+        let isect = PeelVOpts { engine: PeelEngine::Intersect, ..Default::default() };
+        let m = bench_n(0, 2, || peel_vertices(g, &vc.bu, &vc.bv, &isect));
+        report(bench_name, wl.id, "tip/PB-intersect", &m);
+        let fib = PeelVOpts {
+            engine: PeelEngine::Agg,
+            buckets: BucketKind::FibHeap,
+            ..Default::default()
+        };
         let m = bench_n(0, 2, || peel_vertices(g, &vc.bu, &vc.bv, &fib));
         report(bench_name, wl.id, "tip/PB-fibheap", &m);
         let store = WedgeStore::build(g, Ranking::Degree);
@@ -353,7 +381,7 @@ pub fn peeling_table(bench_name: &str) {
         report(bench_name, wl.id, "tip/SariyucePinar-T1", &m);
         println!("    rho_v = {rounds_v}, baseline scanned {empties} empty buckets");
 
-        let eopts = PeelEOpts::default();
+        let eopts = PeelEOpts { engine: PeelEngine::Agg, ..Default::default() };
         let mut rounds_e = 0usize;
         let m = bench_n(0, 2, || {
             let r = peel_edges(g, &be, &eopts);
@@ -363,6 +391,9 @@ pub fn peeling_table(bench_name: &str) {
         report(bench_name, wl.id, "wing/PB-par", &m);
         let m = bench_n(0, 2, || with_threads(1, || peel_edges(g, &be, &eopts)));
         report(bench_name, wl.id, "wing/PB-T1", &m);
+        let isect = PeelEOpts { engine: PeelEngine::Intersect, ..Default::default() };
+        let m = bench_n(0, 2, || peel_edges(g, &be, &isect));
+        report(bench_name, wl.id, "wing/PB-intersect", &m);
         let m = bench_n(0, 1, || seq_peel::sp_wing_numbers(g, &be));
         report(bench_name, wl.id, "wing/SariyucePinar-T1", &m);
         println!("    rho_e = {rounds_e}");

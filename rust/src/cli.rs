@@ -5,7 +5,8 @@
 //! parbutterfly info   --graph FILE
 //! parbutterfly count  --graph FILE [--mode total|vertex|edge] [--rank R] [--agg A]
 //!                     [--engine wedges|intersect] [--cache-opt] [--auto-rank] [--threads T]
-//! parbutterfly peel   --graph FILE [--mode vertex|edge] [--agg A]
+//! parbutterfly peel   --graph FILE [--mode vertex|edge] [--engine agg|intersect]
+//!                     [--count-engine wedges|intersect] [--agg A]
 //!                     [--buckets julienne|fibheap] [--threads T]
 //! parbutterfly approx --graph FILE --method edge|colorful --p P [--seed S]
 //! parbutterfly dense  --graph FILE [--backend auto|rust|pjrt]  # dense-core path
@@ -21,7 +22,7 @@ use crate::coordinator::{
 };
 use crate::count::{sparsify, BflyAgg, CountOpts, Engine, WedgeAgg};
 use crate::graph::{gen, io, BipartiteGraph};
-use crate::peel::{BucketKind, PeelSide};
+use crate::peel::{BucketKind, PeelEngine, PeelSide};
 use crate::rank::Ranking;
 
 struct Args {
@@ -206,27 +207,50 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
 fn cmd_peel(args: &Args) -> anyhow::Result<()> {
     let g = load(args)?;
     let agg = args.get("agg").and_then(WedgeAgg::parse).unwrap_or(WedgeAgg::Hist);
+    // `peel --engine` selects ONLY the peeling UPDATE engine (default:
+    // PARBUTTERFLY_PEEL_ENGINE env var, else agg).  The counting phase
+    // keeps its own default unless `--count-engine` overrides it — so
+    // flipping the peel engine never silently changes what is timed in
+    // the counting phase.
+    let engine = match args.get("engine") {
+        Some(s) => PeelEngine::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown peel engine {s:?} (agg|intersect)"))?,
+        None => PeelEngine::default(),
+    };
+    let mut copts = count_opts(args);
+    copts.engine = match args.get("count-engine") {
+        Some(s) => Engine::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown counting engine {s:?} (wedges|intersect)"))?,
+        None => CountOpts::default().engine,
+    };
     let buckets = match args.get("buckets").unwrap_or("julienne") {
         "fibheap" => BucketKind::FibHeap,
         _ => BucketKind::Julienne,
     };
     let cfg = PeelConfig {
-        count: CountConfig { opts: count_opts(args), auto_rank: false },
-        vopts: crate::peel::PeelVOpts { agg, buckets, side: PeelSide::Auto },
-        eopts: crate::peel::PeelEOpts { agg, buckets },
+        count: CountConfig { opts: copts, auto_rank: false },
+        vopts: crate::peel::PeelVOpts { engine, agg, buckets, side: PeelSide::Auto },
+        eopts: crate::peel::PeelEOpts { engine, agg, buckets },
     };
     match args.get("mode").unwrap_or("vertex") {
         "edge" => {
             let (w, ms) = with_threads_arg(args, || wing_report(&g, &cfg));
             let max = w.wings.iter().max().copied().unwrap_or(0);
-            println!("wing decomposition: {} rounds, max wing {}, {:.2} ms", w.rounds, max, ms);
+            println!(
+                "wing decomposition ({} engine): {} rounds, max wing {}, {:.2} ms",
+                engine.name(),
+                w.rounds,
+                max,
+                ms
+            );
         }
         _ => {
             let (t, ms) = with_threads_arg(args, || tip_report(&g, &cfg));
             let max = t.tips.iter().max().copied().unwrap_or(0);
             println!(
-                "tip decomposition ({} side): {} rounds, max tip {}, {:.2} ms",
+                "tip decomposition ({} side, {} engine): {} rounds, max tip {}, {:.2} ms",
                 if t.peeled_u { "U" } else { "V" },
+                engine.name(),
                 t.rounds,
                 max,
                 ms
@@ -277,6 +301,10 @@ fn cmd_backends() -> anyhow::Result<()> {
     let aggs = WedgeAgg::ALL.map(|a| a.name()).join("/");
     println!("  wedges     materializing aggregation ({aggs})");
     println!("  intersect  streaming per-source counter (no wedge materialization)");
+    println!("peeling engines (peel --engine E, default via PARBUTTERFLY_PEEL_ENGINE):");
+    println!("  agg        UPDATE-V/E through the wedge aggregations ({aggs})");
+    println!("  intersect  streaming live-view updates (no wedge materialization)");
+    println!("  selected default: {}", PeelEngine::default().name());
     println!("dense backends (dense --backend B):");
     let rd = crate::runtime::RustDense::default();
     println!("rust-dense  available  (max tile {0} x {0})", rd.max_dim());
@@ -353,5 +381,17 @@ mod tests {
         let argv: Vec<String> =
             ["peel", "--graph", path.to_str().unwrap()].iter().map(|s| s.to_string()).collect();
         run_inner(&argv).unwrap();
+        let argv: Vec<String> =
+            ["peel", "--graph", path.to_str().unwrap(), "--engine", "intersect", "--mode", "edge"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        run_inner(&argv).unwrap();
+        let argv: Vec<String> =
+            ["peel", "--graph", path.to_str().unwrap(), "--engine", "bogus"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        assert!(run_inner(&argv).is_err(), "unknown peel engine must be rejected");
     }
 }

@@ -32,7 +32,10 @@ pub struct CountConfig {
     pub auto_rank: bool,
 }
 
-/// Peeling configuration.
+/// Peeling configuration.  The update engine
+/// ([`peel::PeelEngine`], agg vs streaming intersect) rides in
+/// `vopts`/`eopts`, mirroring how `count.opts.engine` selects the
+/// counting engine.
 #[derive(Clone, Debug, Default)]
 pub struct PeelConfig {
     pub count: CountConfig,
@@ -286,6 +289,24 @@ mod tests {
         let g = gen::erdos_renyi(12, 13, 70, 3);
         let cfg = PeelConfig {
             vopts: PeelVOpts { side: peel::PeelSide::U, ..Default::default() },
+            ..Default::default()
+        };
+        let (t, _) = tip_report(&g, &cfg);
+        assert_eq!(t.tips, brute::tip_numbers_u(&g));
+        let (w, _) = wing_report(&g, &cfg);
+        assert_eq!(w.wings, brute::wing_numbers(&g));
+    }
+
+    #[test]
+    fn intersect_peel_engine_flows_through_the_facade() {
+        let g = gen::erdos_renyi(12, 13, 70, 3);
+        let cfg = PeelConfig {
+            vopts: PeelVOpts {
+                engine: peel::PeelEngine::Intersect,
+                side: peel::PeelSide::U,
+                ..Default::default()
+            },
+            eopts: PeelEOpts { engine: peel::PeelEngine::Intersect, ..Default::default() },
             ..Default::default()
         };
         let (t, _) = tip_report(&g, &cfg);

@@ -19,6 +19,14 @@
 //!
 //! [`Engine`] is the user-facing selector carried by
 //! [`CountOpts::engine`]; [`engine_for`] resolves it to a trait object.
+//!
+//! The peeling stack mirrors this split one-for-one: its
+//! [`PeelEngine`](crate::peel::PeelEngine) selects between the same
+//! two families for the per-round UPDATE-V/UPDATE-E computations, and
+//! its intersect path reuses this module family's core scratch (the
+//! [`intersect`] dense [`TouchedCounter`](intersect::TouchedCounter)
+//! walk discipline) over live shrinking views instead of the static
+//! [`UpCsr`](crate::graph::UpCsr).
 
 use std::sync::atomic::AtomicU64;
 

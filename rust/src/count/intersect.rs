@@ -32,23 +32,63 @@ use crate::prims::pool::parallel_for_dynamic_with;
 /// Sources per dynamic claim (mirrors BatchWA's grain).
 const GRAIN: usize = 8;
 
-/// Per-worker scratch: dense second-endpoint counters, the touched
-/// list that makes resets proportional to the work done, and the
+/// Dense `u32` tally with O(#touched) reset — the core scratch of
+/// every streaming intersect walk.  Shared with the peel engine's
+/// UPDATE-V path (`peel/vertex.rs`), which runs the same
+/// counter-and-touched-list discipline over a shrinking live view.
+pub(crate) struct TouchedCounter {
+    pub(crate) cnt: Vec<u32>,
+    pub(crate) touched: Vec<u32>,
+}
+
+impl TouchedCounter {
+    pub(crate) fn new(n: usize) -> Self {
+        Self { cnt: vec![0u32; n], touched: Vec::new() }
+    }
+
+    /// Increment slot `i`, recording first touches.
+    #[inline]
+    pub(crate) fn bump(&mut self, i: u32) {
+        if self.cnt[i as usize] == 0 {
+            self.touched.push(i);
+        }
+        self.cnt[i as usize] += 1;
+    }
+
+    /// Visit every touched `(index, count)` and reset it to zero.
+    #[inline]
+    pub(crate) fn drain(&mut self, mut f: impl FnMut(u32, u32)) {
+        for &i in &self.touched {
+            f(i, std::mem::take(&mut self.cnt[i as usize]));
+        }
+        self.touched.clear();
+    }
+
+    /// Zero all touched slots without visiting them.
+    #[inline]
+    pub(crate) fn reset(&mut self) {
+        for &i in &self.touched {
+            self.cnt[i as usize] = 0;
+        }
+        self.touched.clear();
+    }
+}
+
+/// Per-worker scratch: the dense second-endpoint counter plus the
 /// current source's per-center prefix lengths so the credit sweep
 /// doesn't redo `up_deg_above`'s binary search.
 struct Scratch {
-    cnt: Vec<u32>,
-    touched: Vec<u32>,
+    ctr: TouchedCounter,
     pres: Vec<u32>,
 }
 
 impl Scratch {
     fn new(n: usize) -> Self {
-        Self { cnt: vec![0u32; n], touched: Vec::new(), pres: Vec::new() }
+        Self { ctr: TouchedCounter::new(n), pres: Vec::new() }
     }
 }
 
-/// Tally the wedges of `src` by second endpoint into `s.cnt`,
+/// Tally the wedges of `src` by second endpoint into `s.ctr`,
 /// recording each center's second-hop prefix length in `s.pres`.
 #[inline]
 fn fill(rg: &RankedGraph, up: &UpCsr, src: usize, s: &mut Scratch) {
@@ -58,20 +98,9 @@ fn fill(rg: &RankedGraph, up: &UpCsr, src: usize, s: &mut Scratch) {
         let pre = rg.up_deg_above(y as usize, r);
         s.pres.push(pre as u32);
         for &z in &rg.nbrs(y as usize)[..pre] {
-            if s.cnt[z as usize] == 0 {
-                s.touched.push(z);
-            }
-            s.cnt[z as usize] += 1;
+            s.ctr.bump(z);
         }
     }
-}
-
-#[inline]
-fn reset(s: &mut Scratch) {
-    for &z in &s.touched {
-        s.cnt[z as usize] = 0;
-    }
-    s.touched.clear();
 }
 
 /// Global butterfly count, single pass.
@@ -87,10 +116,7 @@ pub fn total_intersect(rg: &RankedGraph) -> u64 {
             let mut local = 0u64;
             for src in range {
                 fill(rg, &up, src, s);
-                for &z in &s.touched {
-                    local += choose2(s.cnt[z as usize] as u64);
-                }
-                reset(s);
+                s.ctr.drain(|_z, d| local += choose2(d as u64));
             }
             atomic_add(&acc, local);
         },
@@ -112,8 +138,8 @@ pub fn per_vertex_intersect(rg: &RankedGraph, out: &[AtomicU64]) {
                 // Endpoints: `src` and each distinct second endpoint
                 // gain C(d, 2) (Lemma 4.2 Eq. 1).
                 let mut src_total = 0u64;
-                for &z in &s.touched {
-                    let b = choose2(s.cnt[z as usize] as u64);
+                for &z in &s.ctr.touched {
+                    let b = choose2(s.ctr.cnt[z as usize] as u64);
                     if b > 0 {
                         src_total += b;
                         atomic_add(&out[z as usize], b);
@@ -127,11 +153,11 @@ pub fn per_vertex_intersect(rg: &RankedGraph, out: &[AtomicU64]) {
                     let pre = s.pres[i] as usize;
                     let mut center = 0u64;
                     for &z in &rg.nbrs(y as usize)[..pre] {
-                        center += s.cnt[z as usize] as u64 - 1;
+                        center += s.ctr.cnt[z as usize] as u64 - 1;
                     }
                     atomic_add(&out[y as usize], center);
                 }
-                reset(s);
+                s.ctr.reset();
             }
         },
     );
@@ -158,7 +184,7 @@ pub fn per_edge_intersect(rg: &RankedGraph, out: &[AtomicU64]) {
                     let yeids = &rg.eids(y as usize)[..pre];
                     let mut lo_leg = 0u64;
                     for j in 0..pre {
-                        let d = s.cnt[ynbrs[j] as usize] as u64;
+                        let d = s.ctr.cnt[ynbrs[j] as usize] as u64;
                         if d > 1 {
                             lo_leg += d - 1;
                             atomic_add(&out[yeids[j] as usize], d - 1);
@@ -166,7 +192,7 @@ pub fn per_edge_intersect(rg: &RankedGraph, out: &[AtomicU64]) {
                     }
                     atomic_add(&out[eids[i] as usize], lo_leg);
                 }
-                reset(s);
+                s.ctr.reset();
             }
         },
     );

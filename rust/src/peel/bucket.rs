@@ -377,6 +377,54 @@ mod tests {
     }
 
     #[test]
+    fn fib_adapter_matches_current_count_oracle() {
+        // §5.4 adapter semantics against a direct oracle over the
+        // `cur` array: pop_min must return exactly the non-finalized
+        // items holding the minimum current count, whatever sequence
+        // of lazy re-pushes preceded it.
+        let mut rng = Pcg32::new(31);
+        for _trial in 0..10 {
+            let n = 40usize;
+            let counts: Vec<u64> = (0..n).map(|_| rng.next_below(200)).collect();
+            let mut fb = FibBuckets::new(&counts);
+            let mut cur = counts.clone();
+            let mut finalized = vec![false; n];
+            let mut k = 0u64;
+            while let Some((c, items)) = fb.pop_min() {
+                let live_min = (0..n)
+                    .filter(|&i| !finalized[i])
+                    .map(|i| cur[i])
+                    .min()
+                    .expect("pop from drained oracle");
+                assert_eq!(c, live_min, "popped count is not the live minimum");
+                let mut expect: Vec<u32> = (0..n)
+                    .filter(|&i| !finalized[i] && cur[i] == live_min)
+                    .map(|i| i as u32)
+                    .collect();
+                let mut got = items.clone();
+                got.sort_unstable();
+                expect.sort_unstable();
+                assert_eq!(got, expect, "popped members differ from oracle");
+                for &i in &items {
+                    finalized[i as usize] = true;
+                }
+                k = k.max(c);
+                // Random clamped decrements, mirrored into the oracle.
+                for _ in 0..rng.next_below(6) {
+                    let i = rng.next_below(n as u64) as usize;
+                    if finalized[i] || cur[i] <= k {
+                        continue;
+                    }
+                    let nc = k + rng.next_below(cur[i] - k);
+                    fb.update(i as u32, nc);
+                    cur[i] = nc;
+                }
+            }
+            assert!(finalized.iter().all(|&f| f), "drain left live items");
+        }
+    }
+
+    #[test]
     fn randomized_model_equivalence() {
         // Both backends must produce identical pop sequences under an
         // identical random update schedule.

@@ -8,44 +8,136 @@
 //! 7k times.  `DenseDelta` is allocated once per decomposition and
 //! cleared in O(#touched) via the touched list.
 //!
-//! Single-writer semantics: parallel enumeration accumulates into
-//! per-worker locals that are merged into the `DenseDelta` by one
-//! thread (the merge is bounded by the deltas actually produced, which
-//! the peeling work bounds already account for).
+//! Two write phases (NOT single-writer any more):
+//!
+//! * **Exclusive** — [`DenseDelta::add`] / [`DenseDelta::drain`] take
+//!   `&mut self`; this is how per-worker *local* accumulators are
+//!   filled during round enumeration, and how the aggregation peel
+//!   paths fill the global one directly.
+//! * **Parallel merge** — [`DenseDelta::merge_parallel`] folds a set of
+//!   local accumulators into `self` concurrently: slot additions are
+//!   relaxed `fetch_add`s, and the worker whose add observes the slot
+//!   at zero claims it for the touched list (each slot is claimed
+//!   exactly once).  The merge is bounded by the deltas actually
+//!   produced, which the peeling work bounds already account for.
+//!
+//! The two phases must not interleave: `add`/`drain` are exclusive-
+//! access by signature, and a debug assertion (`merging`) additionally
+//! guards against a future caller leaking shared handles into the
+//! merge window.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::prims::pool::{parallel_for_dynamic, SyncPtr};
 
 /// Dense index->u64 accumulator with O(touched) drain.
 pub struct DenseDelta {
-    vals: Vec<u64>,
+    vals: Vec<AtomicU64>,
     touched: Vec<u32>,
+    /// True only inside [`Self::merge_parallel`]; guards exclusive-
+    /// phase entry points against concurrent misuse (debug builds).
+    merging: AtomicBool,
 }
 
 impl DenseDelta {
     pub fn new(n: usize) -> Self {
-        Self { vals: vec![0; n], touched: Vec::new() }
+        Self {
+            vals: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            touched: Vec::new(),
+            merging: AtomicBool::new(false),
+        }
     }
 
     #[inline]
     pub fn add(&mut self, i: u32, delta: u64) {
+        debug_assert!(
+            !self.merging.load(Ordering::Relaxed),
+            "DenseDelta::add during a parallel merge"
+        );
         if delta == 0 {
             return;
         }
-        let slot = &mut self.vals[i as usize];
+        let slot = self.vals[i as usize].get_mut();
         if *slot == 0 {
             self.touched.push(i);
         }
         *slot += delta;
     }
 
+    /// Below this many combined touched entries the merge folds
+    /// serially: most peel rounds are tiny, and a fork-join per round
+    /// would cost more than the merge itself.
+    const PAR_MERGE_MIN: usize = 1 << 14;
+
+    /// Fold `parts` into `self` (each part is visited by exactly one
+    /// worker; slot sums go through relaxed atomic adds) and reset
+    /// every part to empty so its owner can reuse it next round.
+    /// Claims for the touched list ride on the adds: the worker whose
+    /// `fetch_add` saw zero owns the slot's entry.  Small rounds skip
+    /// the fork-join entirely and fold inline.
+    pub fn merge_parallel(&mut self, parts: &mut [&mut DenseDelta]) {
+        let total: usize = parts.iter().map(|p| p.touched.len()).sum();
+        if parts.len() <= 1 || total < Self::PAR_MERGE_MIN {
+            for part in parts.iter_mut() {
+                let DenseDelta { vals: pvals, touched: ptouched, .. } = &mut **part;
+                for &i in ptouched.iter() {
+                    let v = std::mem::take(pvals[i as usize].get_mut());
+                    self.add(i, v);
+                }
+                ptouched.clear();
+            }
+            return;
+        }
+        let was_merging = self.merging.swap(true, Ordering::Relaxed);
+        debug_assert!(!was_merging, "re-entrant merge");
+        let claimed = Mutex::new(Vec::<u32>::new());
+        {
+            let vals = &self.vals;
+            let pp = SyncPtr(parts.as_mut_ptr());
+            parallel_for_dynamic(parts.len(), 1, |range| {
+                let mut local: Vec<u32> = Vec::new();
+                for pi in range {
+                    // SAFETY: dynamic scheduling hands each part index
+                    // to exactly one worker, so this &mut is unique.
+                    let part: &mut DenseDelta = unsafe { &mut **pp.get().add(pi) };
+                    debug_assert!(
+                        !part.merging.load(Ordering::Relaxed),
+                        "a part is itself mid-merge"
+                    );
+                    let DenseDelta { vals: pvals, touched: ptouched, .. } = part;
+                    for &i in ptouched.iter() {
+                        let v = std::mem::take(pvals[i as usize].get_mut());
+                        debug_assert!(v != 0, "touched slot holds zero");
+                        if vals[i as usize].fetch_add(v, Ordering::Relaxed) == 0 {
+                            local.push(i);
+                        }
+                    }
+                    ptouched.clear();
+                }
+                if !local.is_empty() {
+                    claimed.lock().unwrap().append(&mut local);
+                }
+            });
+        }
+        self.touched.append(&mut claimed.into_inner().unwrap());
+        self.merging.store(false, Ordering::Relaxed);
+    }
+
     /// Visit and reset every nonzero slot.
     pub fn drain(&mut self, mut f: impl FnMut(u32, u64)) {
-        for &i in &self.touched {
-            let v = self.vals[i as usize];
+        debug_assert!(
+            !self.merging.load(Ordering::Relaxed),
+            "DenseDelta::drain during a parallel merge"
+        );
+        let Self { vals, touched, .. } = self;
+        for &i in touched.iter() {
+            let v = std::mem::take(vals[i as usize].get_mut());
             if v != 0 {
-                self.vals[i as usize] = 0;
                 f(i, v);
             }
         }
-        self.touched.clear();
+        touched.clear();
     }
 
     pub fn is_clear(&self) -> bool {
@@ -56,6 +148,7 @@ impl DenseDelta {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prims::pool::with_threads;
 
     #[test]
     fn accumulates_and_resets() {
@@ -74,5 +167,44 @@ mod tests {
         let mut got = Vec::new();
         d.drain(|i, v| got.push((i, v)));
         assert_eq!(got, vec![(3, 1)]);
+    }
+
+    #[test]
+    fn merge_matches_sequential_fold_in_both_regimes() {
+        // Small totals take the inline serial fold; totals above
+        // PAR_MERGE_MIN exercise the atomic claim-on-zero protocol.
+        let large = DenseDelta::PAR_MERGE_MIN / 4;
+        for (n, per_part) in [(200usize, 40usize), (6 * large, large)] {
+            for t in [1usize, 4, 8] {
+                with_threads(t, || {
+                    let mut global = DenseDelta::new(n);
+                    global.add(0, 7); // pre-existing entry must not be double-claimed
+                    let mut parts: Vec<DenseDelta> =
+                        (0..6).map(|_| DenseDelta::new(n)).collect();
+                    let mut expect = vec![0u64; n];
+                    expect[0] = 7;
+                    for (pi, p) in parts.iter_mut().enumerate() {
+                        for j in 0..per_part {
+                            let i = ((pi * 31 + j * 7 + 1) % n) as u32;
+                            let v = (pi + j + 1) as u64;
+                            p.add(i, v);
+                            expect[i as usize] += v;
+                        }
+                    }
+                    let mut refs: Vec<&mut DenseDelta> = parts.iter_mut().collect();
+                    global.merge_parallel(&mut refs);
+                    // Parts are reset and reusable.
+                    assert!(parts.iter().all(|p| p.is_clear()));
+                    let mut got = vec![0u64; n];
+                    let mut seen = std::collections::HashSet::new();
+                    global.drain(|i, v| {
+                        assert!(seen.insert(i), "slot {i} claimed twice (threads={t})");
+                        got[i as usize] = v;
+                    });
+                    assert_eq!(got, expect, "n={n} threads={t}");
+                    assert!(global.is_clear());
+                });
+            }
+        }
     }
 }

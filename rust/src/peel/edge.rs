@@ -4,7 +4,19 @@
 //! count edge and recomputes the destroyed butterflies by explicit
 //! intersection (UPDATE-E): for peeled edge `(u1, v1)` and each live
 //! co-edge `(u2, v1)`, every live `v2 ∈ N(u1) ∩ N(u2) \ {v1}` closes a
-//! butterfly whose three surviving edges each lose one count.
+//! butterfly whose three surviving edges each lose one count.  Two
+//! engines ([`PeelEngine`]):
+//!
+//! * **Agg** — sorted-list intersections over the full adjacency with
+//!   `round_of[]` liveness filtering, deltas combined through the
+//!   configured aggregation strategy.
+//! * **Intersect** — dense-stamp two-hop walks over [`LiveCsr`] views
+//!   pruned of every *previous* round's edges (the batch is removed
+//!   only after its walk, so the same-round tie-break below still
+//!   applies): stamp `u1`'s live neighborhood, stream `u2`'s live
+//!   neighborhood against the stamps, accumulate the three per-
+//!   butterfly decrements into per-worker [`DenseDelta`]s merged in
+//!   parallel.  No decrement list or wedge record is materialized.
 //!
 //! Double-counting control (the §4.3.2 tie-break): an edge peeled in a
 //! *previous* round is dead everywhere; among edges peeled in the
@@ -20,11 +32,15 @@ use std::sync::Mutex;
 use crate::count::WedgeAgg;
 use crate::graph::BipartiteGraph;
 use crate::prims::histogram::histogram;
-use crate::prims::pool::{num_threads, parallel_for_dynamic};
+use crate::prims::pool::{
+    num_threads, parallel_for_dynamic, parallel_for_dynamic_pooled, ScratchPool,
+};
 use crate::prims::semisort::aggregate_counts;
 
 use super::bucket::{make_buckets, BucketKind};
 use super::delta::DenseDelta;
+use super::live::LiveCsr;
+use super::PeelEngine;
 
 /// Result of a wing decomposition.
 #[derive(Clone, Debug)]
@@ -38,13 +54,19 @@ pub struct WingResult {
 /// Options for edge peeling.
 #[derive(Clone, Debug)]
 pub struct PeelEOpts {
+    /// UPDATE-E engine; [`PeelEngine::Intersect`] ignores `agg`.
+    pub engine: PeelEngine,
     pub agg: WedgeAgg,
     pub buckets: BucketKind,
 }
 
 impl Default for PeelEOpts {
     fn default() -> Self {
-        Self { agg: WedgeAgg::Hash, buckets: BucketKind::Julienne }
+        Self {
+            engine: PeelEngine::default(),
+            agg: WedgeAgg::Hash,
+            buckets: BucketKind::Julienne,
+        }
     }
 }
 
@@ -54,6 +76,14 @@ const ALIVE: u32 = u32::MAX;
 
 /// Wing decomposition given per-edge butterfly counts.
 pub fn peel_edges(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> WingResult {
+    match opts.engine {
+        PeelEngine::Agg => peel_edges_agg(g, be, opts),
+        PeelEngine::Intersect => peel_edges_intersect(g, be, opts),
+    }
+}
+
+/// The aggregation engine: UPDATE-E through `opts.agg`.
+fn peel_edges_agg(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> WingResult {
     let m = g.m();
     assert_eq!(be.len(), m);
     let mut buckets = make_buckets(opts.buckets, be);
@@ -79,6 +109,121 @@ pub fn peel_edges(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> WingResul
             let cur = buckets.current(e);
             let nc = cur.saturating_sub(removed).max(k);
             buckets.update(e, nc);
+        });
+        round += 1;
+    }
+    WingResult { wings, rounds: round as usize }
+}
+
+/// Per-worker scratch for the intersect engine: `v2` stamps keyed by
+/// the peeled edge being processed (so stale stamps from other batch
+/// edges or earlier rounds never need clearing — every edge id is
+/// peeled at most once) plus the worker's share of the round's deltas.
+struct EScratch {
+    /// `v2` -> edge id of `(u1, v2)` when stamped for the current edge.
+    stamp_eid: Vec<u32>,
+    /// `v2` -> the peeled edge id the stamp belongs to (`ALIVE` =
+    /// never stamped).
+    stamp_tag: Vec<u32>,
+    delta: DenseDelta,
+}
+
+/// The streaming intersect engine: dense-stamp two-hop walks over live
+/// views pruned of previous rounds' edges (see the module docs).
+fn peel_edges_intersect(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> WingResult {
+    let m = g.m();
+    assert_eq!(be.len(), m);
+    let mut buckets = make_buckets(opts.buckets, be);
+    let mut round_of = vec![ALIVE; m];
+    let mut wings = vec![0u64; m];
+    let mut k = 0u64;
+    let mut round = 0u32;
+    let mut delta = DenseDelta::new(m);
+    let mut live_u = LiveCsr::u_view(g);
+    let mut live_v = LiveCsr::v_view(g);
+    let mut pool: ScratchPool<EScratch> = ScratchPool::new();
+
+    while let Some((c, batch)) = buckets.pop_min() {
+        k = k.max(c);
+        for &e in &batch {
+            wings[e as usize] = k;
+            round_of[e as usize] = round;
+        }
+        // UPDATE-E over the live views.  Batch edges are still present
+        // (pruned only after the walk), so the same-round alive_for
+        // tie-break sees them exactly as the aggregation engine does;
+        // everything peeled earlier is already gone from the views.
+        {
+            let (live_u, live_v) = (&live_u, &live_v);
+            let (batch, round_of) = (&batch[..], &round_of[..]);
+            parallel_for_dynamic_pooled(
+                batch.len(),
+                1,
+                &pool,
+                || EScratch {
+                    stamp_eid: vec![0u32; g.nv()],
+                    stamp_tag: vec![ALIVE; g.nv()],
+                    delta: DenseDelta::new(m),
+                },
+                |s, range| {
+                    for bi in range {
+                        let e = batch[bi];
+                        let (u1, v1) = g.edge(e);
+                        // Stamp u1's live neighborhood; the (u1, v1)
+                        // slot is edge `e` itself, which alive_for
+                        // rejects, so v2 != v1 falls out for free.
+                        let vn = live_u.nbrs(u1 as usize);
+                        let ve = live_u.eids(u1 as usize);
+                        for j in 0..vn.len() {
+                            if alive_for(round_of, round, ve[j], e) {
+                                s.stamp_eid[vn[j] as usize] = ve[j];
+                                s.stamp_tag[vn[j] as usize] = e;
+                            }
+                        }
+                        // Co-edges (u2, v1), then u2's live
+                        // neighborhood against the stamps.
+                        let un = live_v.nbrs(v1 as usize);
+                        let ue = live_v.eids(v1 as usize);
+                        for j in 0..un.len() {
+                            let (u2, e2) = (un[j], ue[j]);
+                            if !alive_for(round_of, round, e2, e) {
+                                continue;
+                            }
+                            let wn = live_u.nbrs(u2 as usize);
+                            let we = live_u.eids(u2 as usize);
+                            for t in 0..wn.len() {
+                                let (v2, eb) = (wn[t], we[t]);
+                                if s.stamp_tag[v2 as usize] == e
+                                    && alive_for(round_of, round, eb, e)
+                                {
+                                    // Butterfly (u1, v1, u2, v2) dies:
+                                    // surviving edges lose one each.
+                                    s.delta.add(e2, 1);
+                                    s.delta.add(s.stamp_eid[v2 as usize], 1);
+                                    s.delta.add(eb, 1);
+                                }
+                            }
+                        }
+                    }
+                },
+            );
+        }
+        // Prune the batch from the live views, fold the per-worker
+        // accumulators in parallel, re-bucket the survivors.
+        for &e in &batch {
+            let (u, v) = g.edge(e);
+            live_u.remove(u as usize, e);
+            live_v.remove(v as usize, e);
+        }
+        let mut parts: Vec<&mut DenseDelta> =
+            pool.items_mut().iter_mut().map(|s| &mut s.delta).collect();
+        delta.merge_parallel(&mut parts);
+        delta.drain(|e, removed| {
+            if round_of[e as usize] != ALIVE {
+                return; // finalized edges ignore updates
+            }
+            let cur = buckets.current(e);
+            buckets.update(e, cur.saturating_sub(removed).max(k));
         });
         round += 1;
     }
@@ -276,12 +421,35 @@ mod tests {
         for seed in [2, 7] {
             let g = gen::erdos_renyi(8, 9, 40, seed);
             let expect = brute::wing_numbers(&g);
-            for agg in WedgeAgg::ALL {
-                for buckets in BucketKind::ALL {
-                    let r = wings_via(&g, &PeelEOpts { agg, buckets });
-                    assert_eq!(r.wings, expect, "seed={seed} agg={agg:?} {buckets:?}");
+            for engine in PeelEngine::ALL {
+                for agg in WedgeAgg::ALL {
+                    for buckets in BucketKind::ALL {
+                        let r = wings_via(&g, &PeelEOpts { engine, agg, buckets });
+                        assert_eq!(
+                            r.wings, expect,
+                            "seed={seed} {engine:?} agg={agg:?} {buckets:?}"
+                        );
+                    }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn intersect_engine_under_real_fork_join() {
+        let g = gen::chung_lu(30, 40, 350, 2.1, 19);
+        let be = count_per_edge(&g, &CountOpts::default());
+        let base = peel_edges(&g, &be, &PeelEOpts { engine: PeelEngine::Agg, ..Default::default() });
+        for t in [1usize, 3, 8] {
+            let r = crate::prims::pool::with_threads(t, || {
+                peel_edges(
+                    &g,
+                    &be,
+                    &PeelEOpts { engine: PeelEngine::Intersect, ..Default::default() },
+                )
+            });
+            assert_eq!(r.wings, base.wings, "threads={t}");
+            assert_eq!(r.rounds, base.rounds, "threads={t}");
         }
     }
 

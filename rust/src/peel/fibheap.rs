@@ -518,6 +518,137 @@ mod tests {
         assert_eq!(count, 450);
     }
 
+    /// Sorted-vec oracle: a plain `Vec<(key, id)>` re-sorted after
+    /// every mutation — dumber than the BTreeMap model above (no
+    /// structure shared with the heap at all), used to cross-check
+    /// long scripted batch-op sequences.
+    struct VecOracle {
+        items: Vec<(u64, u64)>,
+    }
+
+    impl VecOracle {
+        fn new() -> Self {
+            Self { items: Vec::new() }
+        }
+        fn insert(&mut self, key: u64, id: u64) {
+            self.items.push((key, id));
+            self.items.sort_unstable();
+        }
+        /// Remove the entry the heap extracted, checking its key was
+        /// minimal (ties may be broken by either id).
+        fn delete_exact(&mut self, key: u64, id: u64) {
+            assert_eq!(self.min(), Some(key), "extracted key not minimal");
+            let pos = self.items.iter().position(|&(k, i)| k == key && i == id).unwrap();
+            self.items.remove(pos);
+        }
+        fn decrease(&mut self, id: u64, new_key: u64) {
+            let slot = self.items.iter_mut().find(|(_, i)| *i == id).unwrap();
+            assert!(new_key <= slot.0);
+            slot.0 = new_key;
+            self.items.sort_unstable();
+        }
+        fn min(&self) -> Option<u64> {
+            self.items.first().map(|&(k, _)| k)
+        }
+    }
+
+    #[test]
+    fn scripted_batch_sequences_match_sorted_vec_oracle() {
+        // Deterministic long scripts of batch_insert / delete_min /
+        // batch_decrease_key; after every operation the heap's minimum
+        // and length must equal the oracle's, and full drains must
+        // produce the oracle's sorted key sequence.
+        let mut rng = Pcg32::new(4096);
+        for trial in 0..10 {
+            let mut heap: FibHeap<u64> = FibHeap::new();
+            let mut oracle = VecOracle::new();
+            let mut handles: Vec<(Handle, u64)> = Vec::new();
+            let mut next_id = 0u64;
+            for op in 0..400 {
+                match rng.next_below(12) {
+                    0..=5 => {
+                        let batch_size = rng.next_below(6) + 1;
+                        let mut items = Vec::new();
+                        for _ in 0..batch_size {
+                            let key = rng.next_below(500);
+                            items.push((key, next_id));
+                            oracle.insert(key, next_id);
+                            next_id += 1;
+                        }
+                        let ids: Vec<u64> = items.iter().map(|x| x.1).collect();
+                        handles.extend(heap.batch_insert(items).into_iter().zip(ids));
+                    }
+                    6..=8 => match heap.delete_min() {
+                        Some((k, id)) => {
+                            handles.retain(|&(_, hid)| hid != id);
+                            oracle.delete_exact(k, id);
+                        }
+                        None => {
+                            assert!(oracle.items.is_empty(), "trial {trial} op {op}: empty heap")
+                        }
+                    },
+                    _ => {
+                        if handles.is_empty() {
+                            continue;
+                        }
+                        let mut batch = Vec::new();
+                        let mut chosen = std::collections::HashSet::new();
+                        for _ in 0..rng.next_below(5) + 1 {
+                            let i = rng.next_below(handles.len() as u64) as usize;
+                            if !chosen.insert(i) {
+                                continue;
+                            }
+                            let (h, id) = handles[i];
+                            let nk = rng.next_below(heap.key(h) + 1);
+                            batch.push((h, nk));
+                            oracle.decrease(id, nk);
+                        }
+                        heap.batch_decrease_key(batch);
+                    }
+                }
+                assert_eq!(heap.peek_min().map(|(k, _)| k), oracle.min(), "trial {trial} op {op}");
+                assert_eq!(heap.len(), oracle.items.len(), "trial {trial} op {op}");
+            }
+            // Full drain, key order must match exactly.
+            let mut got = Vec::new();
+            while let Some((k, _)) = heap.delete_min() {
+                got.push(k);
+            }
+            let expect: Vec<u64> = oracle.items.iter().map(|&(k, _)| k).collect();
+            assert_eq!(got, expect, "trial {trial} drain");
+        }
+    }
+
+    #[test]
+    fn freed_slots_are_recycled() {
+        // Arena hygiene: delete-min frees slots that later inserts must
+        // reuse, so long insert/delete churn cannot grow the arena
+        // unboundedly.
+        let mut h: FibHeap<u64> = FibHeap::new();
+        for i in 0..64u64 {
+            h.insert(i, i);
+        }
+        let arena_after_fill = h.nodes.len();
+        for _round in 0..50 {
+            for _ in 0..32 {
+                h.delete_min().unwrap();
+            }
+            for i in 0..32u64 {
+                h.insert(1_000 + i, i);
+            }
+        }
+        assert_eq!(h.len(), 64);
+        assert_eq!(h.nodes.len(), arena_after_fill, "arena grew despite recycling");
+        let mut prev = 0;
+        let mut drained = 0;
+        while let Some((k, _)) = h.delete_min() {
+            assert!(k >= prev);
+            prev = k;
+            drained += 1;
+        }
+        assert_eq!(drained, 64);
+    }
+
     #[test]
     fn interleaved_stress_small_keys() {
         let mut h = FibHeap::new();

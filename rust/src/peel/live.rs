@@ -1,0 +1,192 @@
+//! Incrementally-shrinking adjacency views for the intersect peel
+//! engine.
+//!
+//! The aggregation UPDATE paths re-scan full adjacency lists every
+//! round and filter dead entries with `peeled[]` / `round_of[]`
+//! checks; late in a decomposition almost everything they scan is
+//! dead.  [`LiveCsr`] keeps, per row, the *live* entries compacted at
+//! the front of the row, with O(1) removal: every edge records its
+//! slot position inside its row, and removal swap-pops the slot (the
+//! swapped survivor's position is patched).  A two-hop walk over the
+//! view touches only live wedges, so round cost tracks the surviving
+//! graph instead of the original one.
+//!
+//! One view is one *orientation*: rows are the vertices of one side,
+//! entries are that side's neighbors on the other side (plus edge
+//! ids).  PEEL-V uses a single view (rows = the centers' side, i.e.
+//! the side **not** being peeled); PEEL-E uses both orientations and
+//! removes each peeled edge from the two views it appears in.
+
+use crate::graph::BipartiteGraph;
+
+/// CSR adjacency whose rows shrink as edges are removed.
+pub struct LiveCsr {
+    off: Vec<usize>,
+    nbr: Vec<u32>,
+    eid: Vec<u32>,
+    /// Live prefix length per row.
+    len: Vec<u32>,
+    /// Edge id -> slot index of that edge within its row.
+    pos: Vec<u32>,
+}
+
+impl LiveCsr {
+    /// Build from per-row entry counts and a filler that writes row
+    /// `r`'s `(neighbor, edge id)` pairs through the given emit
+    /// callback — straight into the CSR arrays, no intermediate
+    /// per-row buffers.
+    fn build(
+        m: usize,
+        nrows: usize,
+        row_len: impl Fn(usize) -> usize,
+        fill_row: impl Fn(usize, &mut dyn FnMut(u32, u32)),
+    ) -> Self {
+        let mut off = vec![0usize; nrows + 1];
+        for r in 0..nrows {
+            off[r + 1] = off[r] + row_len(r);
+        }
+        let total = off[nrows];
+        let mut nbr = vec![0u32; total];
+        let mut eid = vec![0u32; total];
+        let mut len = vec![0u32; nrows];
+        let mut pos = vec![0u32; m];
+        for r in 0..nrows {
+            let base = off[r];
+            let mut i = 0usize;
+            fill_row(r, &mut |x, e| {
+                nbr[base + i] = x;
+                eid[base + i] = e;
+                pos[e as usize] = i as u32;
+                i += 1;
+            });
+            debug_assert_eq!(i, off[r + 1] - base, "row {r} filler length drift");
+            len[r] = i as u32;
+        }
+        Self { off, nbr, eid, len, pos }
+    }
+
+    /// Rows = U vertices, entries = (v neighbor, edge id).
+    pub fn u_view(g: &BipartiteGraph) -> Self {
+        Self::build(
+            g.m(),
+            g.nu(),
+            |u| g.deg_u(u),
+            |u, emit| {
+                for (i, &v) in g.nbrs_u(u).iter().enumerate() {
+                    emit(v, g.eid_u(u, i));
+                }
+            },
+        )
+    }
+
+    /// Rows = V vertices, entries = (u neighbor, edge id).
+    pub fn v_view(g: &BipartiteGraph) -> Self {
+        Self::build(
+            g.m(),
+            g.nv(),
+            |v| g.deg_v(v),
+            |v, emit| {
+                for (&u, &e) in g.nbrs_v(v).iter().zip(g.eids_v(v)) {
+                    emit(u, e);
+                }
+            },
+        )
+    }
+
+    /// Live neighbors of `row` (unordered — removal swap-pops).
+    #[inline]
+    pub fn nbrs(&self, row: usize) -> &[u32] {
+        &self.nbr[self.off[row]..self.off[row] + self.len[row] as usize]
+    }
+
+    /// Edge ids parallel to [`Self::nbrs`].
+    #[inline]
+    pub fn eids(&self, row: usize) -> &[u32] {
+        &self.eid[self.off[row]..self.off[row] + self.len[row] as usize]
+    }
+
+    /// Live degree of `row`.
+    #[inline]
+    pub fn deg(&self, row: usize) -> usize {
+        self.len[row] as usize
+    }
+
+    /// Remove edge `e` from `row` in O(1) (must currently be live in
+    /// that row).
+    pub fn remove(&mut self, row: usize, e: u32) {
+        let base = self.off[row];
+        let i = self.pos[e as usize] as usize;
+        let last = self.len[row] as usize - 1;
+        debug_assert_eq!(self.eid[base + i], e, "stale position for edge {e}");
+        self.nbr[base + i] = self.nbr[base + last];
+        self.eid[base + i] = self.eid[base + last];
+        self.pos[self.eid[base + i] as usize] = i as u32;
+        self.len[row] = last as u32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::prims::rng::Pcg32;
+
+    fn sorted(mut v: Vec<u32>) -> Vec<u32> {
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn views_start_equal_to_the_graph() {
+        let g = gen::erdos_renyi(9, 11, 50, 3);
+        let u = LiveCsr::u_view(&g);
+        let v = LiveCsr::v_view(&g);
+        for x in 0..g.nu() {
+            assert_eq!(sorted(u.nbrs(x).to_vec()), g.nbrs_u(x).to_vec());
+            assert_eq!(u.deg(x), g.deg_u(x));
+        }
+        for x in 0..g.nv() {
+            assert_eq!(sorted(v.nbrs(x).to_vec()), g.nbrs_v(x).to_vec());
+            assert_eq!(sorted(v.eids(x).to_vec()), sorted(g.eids_v(x).to_vec()));
+        }
+    }
+
+    #[test]
+    fn removal_shrinks_exactly_the_removed_edge() {
+        let g = gen::erdos_renyi(8, 8, 40, 5);
+        let mut u = LiveCsr::u_view(&g);
+        let mut v = LiveCsr::v_view(&g);
+        let mut alive: Vec<bool> = vec![true; g.m()];
+        let mut rng = Pcg32::new(9);
+        // Remove every edge in a random order, checking the views
+        // against a filtered model after each removal.
+        let mut order: Vec<u32> = (0..g.m() as u32).collect();
+        for i in (1..order.len()).rev() {
+            order.swap(i, rng.next_below(i as u64 + 1) as usize);
+        }
+        for e in order {
+            let (eu, ev) = g.edge(e);
+            u.remove(eu as usize, e);
+            v.remove(ev as usize, e);
+            alive[e as usize] = false;
+            let expect_u: Vec<u32> = g
+                .nbrs_u(eu as usize)
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| alive[g.eid_u(eu as usize, *i) as usize])
+                .map(|(_, &x)| x)
+                .collect();
+            assert_eq!(sorted(u.nbrs(eu as usize).to_vec()), expect_u);
+            let expect_v: Vec<u32> = g
+                .nbrs_v(ev as usize)
+                .iter()
+                .zip(g.eids_v(ev as usize))
+                .filter(|(_, &e2)| alive[e2 as usize])
+                .map(|(&x, _)| x)
+                .collect();
+            assert_eq!(sorted(v.nbrs(ev as usize).to_vec()), sorted(expect_v));
+        }
+        assert!((0..g.nu()).all(|x| u.deg(x) == 0));
+        assert!((0..g.nv()).all(|x| v.deg(x) == 0));
+    }
+}

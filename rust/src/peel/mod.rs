@@ -6,16 +6,34 @@
 //! * [`fibheap`] — the batch-parallel Fibonacci heap (§5).
 //! * [`vertex`] — PEEL-V (Algorithm 5).
 //! * [`edge`] — PEEL-E (Algorithm 6).
+//! * [`live`] — the shrinking adjacency views the intersect engine
+//!   peels over.
 //! * [`wstore`] — WPEEL-V / WPEEL-E, the wedge-storing O(b)-work
 //!   variants (Algorithms 7–8).
 //!
+//! Like counting, peeling now has two **engines** behind one option
+//! surface ([`PeelEngine`], carried by [`PeelVOpts`]/[`PeelEOpts`] and
+//! mirroring [`count::Engine`](crate::count::Engine)):
+//!
+//! * [`PeelEngine::Agg`] — the paper's UPDATE-V/UPDATE-E through the
+//!   materializing [`WedgeAgg`](crate::count::WedgeAgg) strategies;
+//!   per-round memory scales with the round's wedge count.
+//! * [`PeelEngine::Intersect`] — streaming per-source two-hop walks
+//!   over a [`live::LiveCsr`] view that shrinks as vertices/edges are
+//!   peeled: dense counters + touched-list resets, per-worker
+//!   [`delta::DenseDelta`] accumulators merged in parallel, and **no
+//!   wedge record is ever allocated** in the round loop.
+//!
 //! Convenience drivers [`tip_decomposition`] / [`wing_decomposition`]
 //! run counting + peeling end to end.
+
+use std::sync::OnceLock;
 
 pub mod bucket;
 pub mod delta;
 pub mod edge;
 pub mod fibheap;
+pub mod live;
 pub mod vertex;
 pub mod wstore;
 
@@ -26,6 +44,55 @@ pub use wstore::{wpeel_edges, wpeel_vertices, WedgeStore};
 
 use crate::count::{count_per_edge, count_per_vertex, CountOpts};
 use crate::graph::BipartiteGraph;
+
+/// Which update engine a peeling run uses (carried by
+/// [`PeelVOpts`]/[`PeelEOpts`], selected on the CLI via
+/// `peel --engine E`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PeelEngine {
+    /// UPDATE-V/UPDATE-E through the configured wedge-aggregation
+    /// strategy (`opts.agg`).
+    Agg,
+    /// Streaming live-view intersect updates — zero wedge
+    /// materialization, ignores `opts.agg`.
+    Intersect,
+}
+
+impl PeelEngine {
+    pub const ALL: [PeelEngine; 2] = [PeelEngine::Agg, PeelEngine::Intersect];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PeelEngine::Agg => "agg",
+            PeelEngine::Intersect => "intersect",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PeelEngine> {
+        PeelEngine::ALL.into_iter().find(|e| e.name() == s)
+    }
+
+    /// Process default: the `PARBUTTERFLY_PEEL_ENGINE` environment
+    /// variable when set (the CI matrix leg sets it), otherwise
+    /// [`PeelEngine::Agg`].  A set-but-invalid value panics instead of
+    /// silently falling back — a typo in the CI matrix must not turn
+    /// the intersect leg into a second agg leg.
+    pub fn default_from_env() -> PeelEngine {
+        static DEFAULT: OnceLock<PeelEngine> = OnceLock::new();
+        *DEFAULT.get_or_init(|| match std::env::var("PARBUTTERFLY_PEEL_ENGINE") {
+            Ok(s) => PeelEngine::parse(&s).unwrap_or_else(|| {
+                panic!("PARBUTTERFLY_PEEL_ENGINE={s:?} names no peel engine (agg|intersect)")
+            }),
+            Err(_) => PeelEngine::Agg,
+        })
+    }
+}
+
+impl Default for PeelEngine {
+    fn default() -> Self {
+        PeelEngine::default_from_env()
+    }
+}
 
 /// Count + vertex-peel in one call.
 pub fn tip_decomposition(g: &BipartiteGraph, copts: &CountOpts, popts: &PeelVOpts) -> TipResult {
@@ -46,16 +113,30 @@ mod tests {
     use crate::testutil::brute;
 
     #[test]
-    fn drivers_match_brute_force() {
+    fn engine_names_roundtrip() {
+        for e in PeelEngine::ALL {
+            assert_eq!(PeelEngine::parse(e.name()), Some(e));
+        }
+        assert_eq!(PeelEngine::parse("wedges"), None);
+    }
+
+    #[test]
+    fn drivers_match_brute_force_on_both_engines() {
         let g = gen::erdos_renyi(10, 12, 55, 11);
-        let t = tip_decomposition(
-            &g,
-            &CountOpts::default(),
-            &PeelVOpts { side: PeelSide::U, ..Default::default() },
-        );
-        assert_eq!(t.tips, brute::tip_numbers_u(&g));
-        let w = wing_decomposition(&g, &CountOpts::default(), &PeelEOpts::default());
-        assert_eq!(w.wings, brute::wing_numbers(&g));
+        for engine in PeelEngine::ALL {
+            let t = tip_decomposition(
+                &g,
+                &CountOpts::default(),
+                &PeelVOpts { engine, side: PeelSide::U, ..Default::default() },
+            );
+            assert_eq!(t.tips, brute::tip_numbers_u(&g), "{engine:?}");
+            let w = wing_decomposition(
+                &g,
+                &CountOpts::default(),
+                &PeelEOpts { engine, ..Default::default() },
+            );
+            assert_eq!(w.wings, brute::wing_numbers(&g), "{engine:?}");
+        }
     }
 
     #[test]

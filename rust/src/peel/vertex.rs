@@ -2,31 +2,48 @@
 //!
 //! Peels one bipartition (the cheaper one, or the caller's choice);
 //! each round extracts every vertex with the minimum butterfly count,
-//! recomputes the butterflies destroyed by the batch through the same
-//! wedge-aggregation machinery as counting (UPDATE-V = GET-V-WEDGES +
-//! COUNT-V-WEDGES), and re-buckets the survivors.  Tip numbers are the
-//! running maximum of the extracted counts.
+//! recomputes the butterflies destroyed by the batch, and re-buckets
+//! the survivors.  Tip numbers are the running maximum of the
+//! extracted counts.  Two UPDATE-V engines ([`PeelEngine`]):
+//!
+//! * **Agg** — the paper's GET-V-WEDGES + COUNT-V-WEDGES through the
+//!   configured wedge-aggregation strategy; per-round memory scales
+//!   with the batch's wedge count.
+//! * **Intersect** — streaming two-hop walks (batch vertex -> center
+//!   -> live second endpoint) over a [`LiveCsr`] view that the peeled
+//!   side is removed from as it dies, with a dense
+//!   [`TouchedCounter`] per worker and per-worker [`DenseDelta`]
+//!   accumulators merged in parallel.  No wedge record is ever
+//!   materialized, and late rounds never rescan peeled vertices.
 //!
 //! Liveness rules (the §4.3.1 double-counting discussion):
 //! * wedges are only charged to second endpoints that are still live —
 //!   previously peeled vertices and same-round batch members are
 //!   skipped entirely (butterflies between two batch members die with
-//!   them and charge no one; V-side counts are untracked);
+//!   them and charge no one; V-side counts are untracked).  The
+//!   intersect engine gets this by construction: the whole batch is
+//!   retired from the live view before the walk;
 //! * centers are on the un-peeled side and stay valid throughout.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::count::intersect::TouchedCounter;
 use crate::count::wedges::key_endpoints;
 use crate::count::{choose2, WedgeAgg};
 use crate::graph::BipartiteGraph;
 use crate::prims::hashtable::CountTable;
 use crate::prims::histogram::histogram;
-use crate::prims::pool::{num_threads, parallel_for_chunks, parallel_for_dynamic};
+use crate::prims::pool::{
+    num_threads, parallel_for_chunks, parallel_for_dynamic, parallel_for_dynamic_pooled,
+    ScratchPool,
+};
 use crate::prims::semisort::aggregate_counts;
 
 use super::bucket::{make_buckets, BucketKind};
 use super::delta::DenseDelta;
+use super::live::LiveCsr;
+use super::PeelEngine;
 
 /// Which bipartition to peel.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,6 +68,8 @@ pub struct TipResult {
 /// Options for vertex peeling.
 #[derive(Clone, Debug)]
 pub struct PeelVOpts {
+    /// UPDATE-V engine; [`PeelEngine::Intersect`] ignores `agg`.
+    pub engine: PeelEngine,
     pub agg: WedgeAgg,
     pub buckets: BucketKind,
     pub side: PeelSide,
@@ -61,7 +80,12 @@ impl Default for PeelVOpts {
         // §Perf: batch aggregation wins on this substrate (Fig 12 rows:
         // BatchS 431 ms vs Hist 678 ms on `cl`); the paper found
         // histogramming best on 48 cores — the option is one field away.
-        Self { agg: WedgeAgg::BatchS, buckets: BucketKind::Julienne, side: PeelSide::Auto }
+        Self {
+            engine: PeelEngine::default(),
+            agg: WedgeAgg::BatchS,
+            buckets: BucketKind::Julienne,
+            side: PeelSide::Auto,
+        }
     }
 }
 
@@ -93,6 +117,23 @@ impl<'a> SideView<'a> {
             self.g.nbrs_u(y)
         }
     }
+    /// Edge id of the `i`-th neighbor slot of peel-side vertex `x`.
+    fn eid_peel(&self, x: usize, i: usize) -> u32 {
+        if self.peel_u {
+            self.g.eid_u(x, i)
+        } else {
+            self.g.eids_v(x)[i]
+        }
+    }
+    /// Live view whose rows are the centers (the un-peeled side) and
+    /// whose entries are peel-side vertices.
+    fn live_centers(&self) -> LiveCsr {
+        if self.peel_u {
+            LiveCsr::v_view(self.g)
+        } else {
+            LiveCsr::u_view(self.g)
+        }
+    }
 }
 
 /// Tip decomposition given per-vertex butterfly counts for both sides
@@ -107,8 +148,16 @@ pub fn peel_vertices(g: &BipartiteGraph, bu: &[u64], bv: &[u64], opts: &PeelVOpt
     };
     let view = SideView { g, peel_u };
     let counts: &[u64] = if peel_u { bu } else { bv };
+    assert_eq!(counts.len(), view.n_peel(), "counts must cover the peeled side");
+    match opts.engine {
+        PeelEngine::Agg => peel_vertices_agg(&view, counts, opts),
+        PeelEngine::Intersect => peel_vertices_intersect(&view, counts, opts),
+    }
+}
+
+/// The aggregation engine: UPDATE-V through `opts.agg`.
+fn peel_vertices_agg(view: &SideView<'_>, counts: &[u64], opts: &PeelVOpts) -> TipResult {
     let n = view.n_peel();
-    assert_eq!(counts.len(), n, "counts must cover the peeled side");
     let mut buckets = make_buckets(opts.buckets, counts);
     let mut peeled = vec![false; n];
     let mut tips = vec![0u64; n];
@@ -118,7 +167,7 @@ pub fn peel_vertices(g: &BipartiteGraph, bu: &[u64], bv: &[u64], opts: &PeelVOpt
     // scratch once per decomposition (per-round Mutex<HashMap> merging
     // used to dominate at high rho_v — see EXPERIMENTS.md §Perf).
     let mut delta = DenseDelta::new(n);
-    let mut scratch = BatchScratch { cnt: vec![0u32; n], touched: Vec::new() };
+    let mut scratch = TouchedCounter::new(n);
 
     while let Some((c, batch)) = buckets.pop_min() {
         rounds += 1;
@@ -127,7 +176,7 @@ pub fn peel_vertices(g: &BipartiteGraph, bu: &[u64], bv: &[u64], opts: &PeelVOpt
             tips[x as usize] = k;
             peeled[x as usize] = true;
         }
-        update_v(&view, &batch, &peeled, opts.agg, &mut delta, &mut scratch);
+        update_v(view, &batch, &peeled, opts.agg, &mut delta, &mut scratch);
         delta.drain(|x2, removed| {
             if peeled[x2 as usize] {
                 return;
@@ -137,24 +186,95 @@ pub fn peel_vertices(g: &BipartiteGraph, bu: &[u64], bv: &[u64], opts: &PeelVOpt
             buckets.update(x2, nc);
         });
     }
-    TipResult { peeled_u: peel_u, tips, rounds }
+    TipResult { peeled_u: view.peel_u, tips, rounds }
 }
 
-/// Persistent scratch for the batch aggregation path.
-struct BatchScratch {
-    cnt: Vec<u32>,
-    touched: Vec<u32>,
+/// Grain of the intersect engine's dynamic batch claims (peel batches
+/// are small and heavily skewed by wedge count).
+const INTERSECT_GRAIN: usize = 2;
+
+/// Per-worker scratch for the intersect engine: the dense wedge tally
+/// for the source being walked and the worker's share of the round's
+/// deltas.  Pooled across rounds — steady state allocates nothing.
+struct VScratch {
+    ctr: TouchedCounter,
+    delta: DenseDelta,
+}
+
+/// The streaming intersect engine: per-batch-vertex two-hop walks over
+/// a shrinking live view.  No wedge records, no `peeled[]` filtering —
+/// dead vertices are simply no longer in the view.
+fn peel_vertices_intersect(view: &SideView<'_>, counts: &[u64], opts: &PeelVOpts) -> TipResult {
+    let n = view.n_peel();
+    let mut live = view.live_centers();
+    let mut buckets = make_buckets(opts.buckets, counts);
+    let mut tips = vec![0u64; n];
+    let mut k = 0u64;
+    let mut rounds = 0usize;
+    let mut delta = DenseDelta::new(n);
+    let mut pool: ScratchPool<VScratch> = ScratchPool::new();
+
+    while let Some((c, batch)) = buckets.pop_min() {
+        rounds += 1;
+        k = k.max(c);
+        for &x in &batch {
+            tips[x as usize] = k;
+        }
+        // Retire the whole batch from the live view up front: a walk
+        // then meets neither previously-peeled vertices, nor same-round
+        // members, nor the source itself (§4.3.1's liveness rules, by
+        // construction instead of by filtering).
+        for &x1 in &batch {
+            for (i, &y) in view.nbrs_peel(x1 as usize).iter().enumerate() {
+                live.remove(y as usize, view.eid_peel(x1 as usize, i));
+            }
+        }
+        // UPDATE-V: for each batch vertex, tally live second endpoints
+        // through its centers; each endpoint reached through d centers
+        // loses C(d, 2) butterflies.
+        {
+            let (live, batch) = (&live, &batch[..]);
+            parallel_for_dynamic_pooled(
+                batch.len(),
+                INTERSECT_GRAIN,
+                &pool,
+                || VScratch { ctr: TouchedCounter::new(n), delta: DenseDelta::new(n) },
+                |s, range| {
+                    for bi in range {
+                        let x1 = batch[bi];
+                        for &y in view.nbrs_peel(x1 as usize) {
+                            for &x2 in live.nbrs(y as usize) {
+                                s.ctr.bump(x2);
+                            }
+                        }
+                        let delta = &mut s.delta;
+                        s.ctr.drain(|x2, d| delta.add(x2, choose2(d as u64)));
+                    }
+                },
+            );
+        }
+        // Fold the per-worker accumulators in parallel, then re-bucket.
+        let mut parts: Vec<&mut DenseDelta> =
+            pool.items_mut().iter_mut().map(|s| &mut s.delta).collect();
+        delta.merge_parallel(&mut parts);
+        delta.drain(|x2, removed| {
+            let cur = buckets.current(x2);
+            buckets.update(x2, cur.saturating_sub(removed).max(k));
+        });
+    }
+    TipResult { peeled_u: view.peel_u, tips, rounds }
 }
 
 /// UPDATE-V: butterflies destroyed per live second endpoint,
-/// accumulated into `out`.
+/// accumulated into `out`.  `scratch` is the decomposition-lifetime
+/// dense counter the batch path tallies into.
 fn update_v(
     view: &SideView<'_>,
     batch: &[u32],
     peeled: &[bool],
     agg: WedgeAgg,
     out: &mut DenseDelta,
-    scratch: &mut BatchScratch,
+    scratch: &mut TouchedCounter,
 ) {
     match agg {
         WedgeAgg::Hash => update_v_hash(view, batch, peeled, out),
@@ -246,56 +366,41 @@ fn update_v_batch(
     peeled: &[bool],
     dynamic: bool,
     out: &mut DenseDelta,
-    scratch: &mut BatchScratch,
+    scratch: &mut TouchedCounter,
 ) {
     let n = view.n_peel();
     if num_threads() <= 1 {
-        let cnt = &mut scratch.cnt;
-        let touched = &mut scratch.touched;
         for &x1 in batch {
             for &y in view.nbrs_peel(x1 as usize) {
                 for &x2 in view.nbrs_other(y as usize) {
                     if x2 != x1 && !peeled[x2 as usize] {
-                        if cnt[x2 as usize] == 0 {
-                            touched.push(x2);
-                        }
-                        cnt[x2 as usize] += 1;
+                        scratch.bump(x2);
                     }
                 }
             }
-            for &x2 in touched.iter() {
-                out.add(x2, choose2(cnt[x2 as usize] as u64));
-                cnt[x2 as usize] = 0;
-            }
-            touched.clear();
+            scratch.drain(|x2, d| out.add(x2, choose2(d as u64)));
         }
         return;
     }
     let merged = Mutex::new(HashMap::<u32, u64>::new());
     let process = |range: std::ops::Range<usize>| {
-        let mut cnt = vec![0u32; n];
-        let mut touched: Vec<u32> = Vec::new();
+        let mut ctr = TouchedCounter::new(n);
         let mut local: HashMap<u32, u64> = HashMap::new();
         for bi in range {
             let x1 = batch[bi];
             for &y in view.nbrs_peel(x1 as usize) {
                 for &x2 in view.nbrs_other(y as usize) {
                     if x2 != x1 && !peeled[x2 as usize] {
-                        if cnt[x2 as usize] == 0 {
-                            touched.push(x2);
-                        }
-                        cnt[x2 as usize] += 1;
+                        ctr.bump(x2);
                     }
                 }
             }
-            for &x2 in &touched {
-                let b = choose2(cnt[x2 as usize] as u64);
+            ctr.drain(|x2, d| {
+                let b = choose2(d as u64);
                 if b > 0 {
                     *local.entry(x2).or_insert(0) += b;
                 }
-                cnt[x2 as usize] = 0;
-            }
-            touched.clear();
+            });
         }
         let mut g = merged.lock().unwrap();
         for (x2, b) in local {
@@ -353,10 +458,18 @@ mod tests {
         for seed in [1, 5, 9] {
             let g = gen::erdos_renyi(12, 14, 80, seed);
             let expect = brute::tip_numbers_u(&g);
-            for agg in WedgeAgg::ALL {
-                for buckets in BucketKind::ALL {
-                    let r = tips_via(&g, &PeelVOpts { agg, buckets, side: PeelSide::U });
-                    assert_eq!(r.tips, expect, "seed={seed} agg={agg:?} {buckets:?}");
+            for engine in PeelEngine::ALL {
+                for agg in WedgeAgg::ALL {
+                    for buckets in BucketKind::ALL {
+                        let r = tips_via(
+                            &g,
+                            &PeelVOpts { engine, agg, buckets, side: PeelSide::U },
+                        );
+                        assert_eq!(
+                            r.tips, expect,
+                            "seed={seed} {engine:?} agg={agg:?} {buckets:?}"
+                        );
+                    }
                 }
             }
         }
@@ -368,10 +481,42 @@ mod tests {
         // Peel V of g == peel U of the transposed graph.
         let edges_t: Vec<(u32, u32)> = g.edges().into_iter().map(|(u, v)| (v, u)).collect();
         let gt = BipartiteGraph::from_edges(g.nv(), g.nu(), &edges_t);
-        let rv = tips_via(&g, &PeelVOpts { side: PeelSide::V, ..Default::default() });
-        let ru = tips_via(&gt, &PeelVOpts { side: PeelSide::U, ..Default::default() });
-        assert!(!rv.peeled_u);
-        assert_eq!(rv.tips, ru.tips);
+        for engine in PeelEngine::ALL {
+            let rv = tips_via(&g, &PeelVOpts { engine, side: PeelSide::V, ..Default::default() });
+            let ru = tips_via(&gt, &PeelVOpts { engine, side: PeelSide::U, ..Default::default() });
+            assert!(!rv.peeled_u);
+            assert_eq!(rv.tips, ru.tips, "{engine:?}");
+        }
+    }
+
+    #[test]
+    fn intersect_engine_under_real_fork_join() {
+        // The pooled-scratch + parallel-merge machinery must produce
+        // identical tips at every thread count.
+        let g = gen::chung_lu(40, 50, 500, 2.1, 13);
+        let vc = count_per_vertex(&g, &CountOpts::default());
+        let base = peel_vertices(
+            &g,
+            &vc.bu,
+            &vc.bv,
+            &PeelVOpts { engine: PeelEngine::Agg, side: PeelSide::U, ..Default::default() },
+        );
+        for t in [1usize, 3, 8] {
+            let r = crate::prims::pool::with_threads(t, || {
+                peel_vertices(
+                    &g,
+                    &vc.bu,
+                    &vc.bv,
+                    &PeelVOpts {
+                        engine: PeelEngine::Intersect,
+                        side: PeelSide::U,
+                        ..Default::default()
+                    },
+                )
+            });
+            assert_eq!(r.tips, base.tips, "threads={t}");
+            assert_eq!(r.rounds, base.rounds, "threads={t}");
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Mutex, OnceLock};
 
 thread_local! {
     static OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
@@ -160,6 +160,85 @@ where
     });
 }
 
+/// A reusable bag of per-worker scratch states.
+///
+/// [`parallel_for_dynamic_with`] builds fresh per-worker state on every
+/// call, which is fine for one-shot sweeps but wasteful inside a loop
+/// that forks thousands of times (peeling runs one fork-join per
+/// round).  A `ScratchPool` owns the states across calls: workers take
+/// one on entry (building it only on first use) and return it on exit,
+/// so steady-state rounds allocate nothing.  Between calls the caller
+/// has exclusive access ([`ScratchPool::items_mut`]) — that is where
+/// peeling merges the per-worker delta accumulators.
+pub struct ScratchPool<S> {
+    pool: Mutex<Vec<S>>,
+}
+
+impl<S> Default for ScratchPool<S> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<S> ScratchPool<S> {
+    pub fn new() -> Self {
+        Self { pool: Mutex::new(Vec::new()) }
+    }
+
+    fn take(&self, make: impl FnOnce() -> S) -> S {
+        let reused = self.pool.lock().unwrap().pop();
+        reused.unwrap_or_else(make)
+    }
+
+    fn put(&self, s: S) {
+        self.pool.lock().unwrap().push(s);
+    }
+
+    /// Exclusive access to the pooled states (between parallel calls).
+    pub fn items_mut(&mut self) -> &mut Vec<S> {
+        self.pool.get_mut().unwrap()
+    }
+}
+
+/// Guard returning a pooled scratch on drop (worker exit).
+struct PoolGuard<'a, S> {
+    s: Option<S>,
+    pool: &'a ScratchPool<S>,
+}
+
+impl<S> Drop for PoolGuard<'_, S> {
+    fn drop(&mut self) {
+        if let Some(s) = self.s.take() {
+            self.pool.put(s);
+        }
+    }
+}
+
+/// [`parallel_for_dynamic_with`] drawing per-worker state from `pool`
+/// instead of building it fresh: each worker takes a pooled state (or
+/// builds one via `init` when the pool runs dry) and returns it when
+/// the loop finishes.  The sequential degenerate path reuses one pooled
+/// state the same way, so a 1-thread decomposition allocates its
+/// scratch exactly once.
+pub fn parallel_for_dynamic_pooled<S, I, F>(
+    n: usize,
+    grain: usize,
+    pool: &ScratchPool<S>,
+    init: I,
+    f: F,
+) where
+    S: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, std::ops::Range<usize>) + Sync,
+{
+    parallel_for_dynamic_with(
+        n,
+        grain,
+        || PoolGuard { s: Some(pool.take(&init)), pool },
+        |g, r| f(g.s.as_mut().expect("scratch taken"), r),
+    );
+}
+
 /// Parallel map producing a `Vec<T>`.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
@@ -294,6 +373,39 @@ mod tests {
             assert_eq!(num_threads(), 3);
         });
         assert_eq!(num_threads(), outer);
+    }
+
+    #[test]
+    fn pooled_scratch_visits_every_index_and_recycles() {
+        for t in [1usize, 3, 8] {
+            with_threads(t, || {
+                let mut pool: ScratchPool<Vec<u64>> = ScratchPool::new();
+                let n = 4_000;
+                let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                // Two rounds over the same pool: the second must reuse
+                // the first round's scratches (pool never exceeds the
+                // worker count).
+                for _round in 0..2 {
+                    parallel_for_dynamic_pooled(
+                        n,
+                        64,
+                        &pool,
+                        || vec![0u64; 8],
+                        |s, r| {
+                            s[0] += r.len() as u64;
+                            for i in r {
+                                hits[i].fetch_add(1, Ordering::Relaxed);
+                            }
+                        },
+                    );
+                    assert!(!pool.items_mut().is_empty(), "scratch returned to pool");
+                    assert!(pool.items_mut().len() <= t, "at most one scratch per worker");
+                }
+                assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 2));
+                let total: u64 = pool.items_mut().iter().map(|s| s[0]).sum();
+                assert_eq!(total, 2 * n as u64, "per-scratch tallies cover every index");
+            });
+        }
     }
 
     #[test]

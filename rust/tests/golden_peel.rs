@@ -1,0 +1,125 @@
+//! Golden decomposition corpus: the six pinned datasets of
+//! `tests/golden/` now also carry their full peeling results —
+//! `<name>.peel` pins the tip numbers of BOTH sides and the wing
+//! numbers, computed by the literal recount-every-round oracle
+//! (regenerate with `python3 scripts/peel_model.py golden`).  Every
+//! `PeelEngine x BucketKind` combination must reproduce them exactly,
+//! at 1 and 4 threads.
+
+use std::path::PathBuf;
+
+use parbutterfly::count::{count_per_edge, count_per_vertex, CountOpts};
+use parbutterfly::graph::{io, BipartiteGraph};
+use parbutterfly::peel::{
+    peel_edges, peel_vertices, BucketKind, PeelEOpts, PeelEngine, PeelSide, PeelVOpts,
+};
+use parbutterfly::prims::pool::with_threads;
+use parbutterfly::testutil::brute;
+
+const CORPUS: [&str; 6] = ["davis", "k6x7", "er20x25", "er16x16", "cl30x20", "blocks12"];
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+fn load_graph(name: &str) -> BipartiteGraph {
+    let path = golden_dir().join(format!("{name}.txt"));
+    io::load_edge_list(&path).unwrap_or_else(|e| panic!("loading {name}.txt: {e:#}"))
+}
+
+/// Pinned decomposition: (tips_u, tips_v, wings).
+fn load_peel(name: &str) -> (Vec<u64>, Vec<u64>, Vec<u64>) {
+    let path = golden_dir().join(format!("{name}.peel"));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("loading {name}.peel: {e}"));
+    let row = |key: &str| -> Vec<u64> {
+        let line = text
+            .lines()
+            .find(|l| l.starts_with(key))
+            .unwrap_or_else(|| panic!("{name}.peel: missing `{key}` row"));
+        line[key.len()..]
+            .split_whitespace()
+            .map(|t| t.parse().unwrap_or_else(|_| panic!("{name}.peel: bad value {t:?}")))
+            .collect()
+    };
+    (row("tips_u "), row("tips_v "), row("wings "))
+}
+
+#[test]
+fn golden_peel_rows_have_the_right_shapes() {
+    for name in CORPUS {
+        let g = load_graph(name);
+        let (tu, tv, w) = load_peel(name);
+        assert_eq!(tu.len(), g.nu(), "{name}: tips_u length");
+        assert_eq!(tv.len(), g.nv(), "{name}: tips_v length");
+        assert_eq!(w.len(), g.m(), "{name}: wings length");
+    }
+}
+
+#[test]
+fn golden_peel_files_match_the_brute_oracle_on_anchors() {
+    // Anchor the pinned files themselves against the in-repo oracle on
+    // the datasets small enough for the literal recount (the rest are
+    // covered transitively: every engine must match the files, and the
+    // engines match the oracle on the randomized property sweeps).
+    for name in ["k6x7", "er16x16", "blocks12"] {
+        let g = load_graph(name);
+        let (tu, tv, w) = load_peel(name);
+        assert_eq!(tu, brute::tip_numbers_u(&g), "{name}: tips_u vs oracle");
+        let edges_t: Vec<(u32, u32)> = g.edges().into_iter().map(|(u, v)| (v, u)).collect();
+        let gt = BipartiteGraph::from_edges(g.nv(), g.nu(), &edges_t);
+        assert_eq!(tv, brute::tip_numbers_u(&gt), "{name}: tips_v vs oracle");
+        assert_eq!(w, brute::wing_numbers(&g), "{name}: wings vs oracle");
+    }
+}
+
+#[test]
+fn golden_decompositions_across_every_engine_and_bucket_combo() {
+    for name in CORPUS {
+        let g = load_graph(name);
+        let (tu, tv, w) = load_peel(name);
+        let vc = count_per_vertex(&g, &CountOpts::default());
+        let be = count_per_edge(&g, &CountOpts::default());
+        for threads in [1usize, 4] {
+            with_threads(threads, || {
+                for engine in PeelEngine::ALL {
+                    for buckets in BucketKind::ALL {
+                        let tag = format!("{name} t={threads} {engine:?} {buckets:?}");
+                        let opts = |side| PeelVOpts {
+                            engine,
+                            buckets,
+                            side,
+                            ..Default::default()
+                        };
+                        let ru = peel_vertices(&g, &vc.bu, &vc.bv, &opts(PeelSide::U));
+                        assert!(ru.peeled_u);
+                        assert_eq!(ru.tips, tu, "{tag}: tips_u");
+                        let rv = peel_vertices(&g, &vc.bu, &vc.bv, &opts(PeelSide::V));
+                        assert!(!rv.peeled_u);
+                        assert_eq!(rv.tips, tv, "{tag}: tips_v");
+                        let re = peel_edges(
+                            &g,
+                            &be,
+                            &PeelEOpts { engine, buckets, ..Default::default() },
+                        );
+                        assert_eq!(re.wings, w, "{tag}: wings");
+                    }
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn golden_peel_headers_name_their_regenerator() {
+    // Keep the corpus self-describing: every .peel file must carry the
+    // regeneration recipe next to its rows.
+    for name in CORPUS {
+        let path = golden_dir().join(format!("{name}.peel"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            text.lines().any(|l| l.contains("scripts/peel_model.py golden")),
+            "{name}.peel: missing regeneration recipe header"
+        );
+    }
+}

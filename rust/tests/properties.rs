@@ -9,8 +9,8 @@ use parbutterfly::count::{
 };
 use parbutterfly::graph::BipartiteGraph;
 use parbutterfly::peel::{
-    peel_edges, peel_vertices, wpeel_edges, wpeel_vertices, BucketKind, PeelEOpts, PeelSide,
-    PeelVOpts, WedgeStore,
+    peel_edges, peel_vertices, wpeel_edges, wpeel_vertices, BucketKind, PeelEOpts, PeelEngine,
+    PeelSide, PeelVOpts, WedgeStore,
 };
 use parbutterfly::rank::Ranking;
 use parbutterfly::testutil::brute;
@@ -142,10 +142,16 @@ fn prop_tip_numbers_bounded_and_correct() {
         let bg = g.bipartite(10, 60);
         let expect = brute::tip_numbers_u(&bg);
         let vc = count_per_vertex(&bg, &CountOpts::default());
+        let engine = *g.pick(&PeelEngine::ALL);
         let agg = *g.pick(&WedgeAgg::ALL);
         let buckets = *g.pick(&BucketKind::ALL);
-        let r = peel_vertices(&bg, &vc.bu, &vc.bv, &PeelVOpts { agg, buckets, side: PeelSide::U });
-        prop_assert(r.tips == expect, format!("{agg:?}/{buckets:?}"))?;
+        let r = peel_vertices(
+            &bg,
+            &vc.bu,
+            &vc.bv,
+            &PeelVOpts { engine, agg, buckets, side: PeelSide::U },
+        );
+        prop_assert(r.tips == expect, format!("{engine:?}/{agg:?}/{buckets:?}"))?;
         for u in 0..bg.nu() {
             prop_assert(r.tips[u] <= vc.bu[u], format!("tip > count at {u}"))?;
         }
@@ -159,10 +165,11 @@ fn prop_wing_numbers_correct_all_backends() {
         let bg = g.bipartite(8, 40);
         let expect = brute::wing_numbers(&bg);
         let be = count_per_edge(&bg, &CountOpts::default());
+        let engine = *g.pick(&PeelEngine::ALL);
         let agg = *g.pick(&WedgeAgg::ALL);
         let buckets = *g.pick(&BucketKind::ALL);
-        let r = peel_edges(&bg, &be, &PeelEOpts { agg, buckets });
-        prop_assert(r.wings == expect, format!("{agg:?}/{buckets:?}"))?;
+        let r = peel_edges(&bg, &be, &PeelEOpts { engine, agg, buckets });
+        prop_assert(r.wings == expect, format!("{engine:?}/{agg:?}/{buckets:?}"))?;
         // wing(e) <= b_e(e).
         for e in 0..bg.m() {
             prop_assert(r.wings[e] <= be[e], format!("wing > count at {e}"))?;
@@ -172,25 +179,198 @@ fn prop_wing_numbers_correct_all_backends() {
 }
 
 #[test]
-fn prop_wstore_variants_agree() {
-    check("WPEEL == PEEL for both decompositions", 10, |g| {
+fn prop_peel_engines_agree_at_1_and_4_threads() {
+    // The wedge-free intersect engine must reproduce the aggregation
+    // engine (and the oracle) exactly, on the degenerate sequential
+    // path and under real fork-join with parallel delta merging.
+    for threads in [1usize, 4] {
+        parbutterfly::prims::pool::with_threads(threads, || {
+            check(&format!("intersect peel == agg peel == brute (t={threads})"), 8, |g| {
+                let bg = g.bipartite(10, 55);
+                let vc = count_per_vertex(&bg, &CountOpts::default());
+                let be = count_per_edge(&bg, &CountOpts::default());
+                let expect_tips = brute::tip_numbers_u(&bg);
+                let expect_wings = brute::wing_numbers(&bg);
+                let buckets = *g.pick(&BucketKind::ALL);
+                for engine in PeelEngine::ALL {
+                    let r = peel_vertices(
+                        &bg,
+                        &vc.bu,
+                        &vc.bv,
+                        &PeelVOpts { engine, buckets, side: PeelSide::U, ..Default::default() },
+                    );
+                    prop_assert(r.tips == expect_tips, format!("{engine:?} tips"))?;
+                    let w =
+                        peel_edges(&bg, &be, &PeelEOpts { engine, buckets, ..Default::default() });
+                    prop_assert(w.wings == expect_wings, format!("{engine:?} wings"))?;
+                }
+                Ok(())
+            });
+        });
+    }
+}
+
+/// Per-edge butterfly counts restricted to `alive` edges (the wing
+/// k-set oracle; mirrors the counter inside `brute::wing_numbers`).
+fn per_edge_alive(g: &BipartiteGraph, alive: &[bool]) -> Vec<u64> {
+    let mut be = vec![0u64; g.m()];
+    for eid in 0..g.m() {
+        if !alive[eid] {
+            continue;
+        }
+        let (u1, v1) = g.edge(eid as u32);
+        let mut b = 0u64;
+        for (j, &u2) in g.nbrs_v(v1 as usize).iter().enumerate() {
+            if u2 == u1 || !alive[g.eids_v(v1 as usize)[j] as usize] {
+                continue;
+            }
+            for &v2 in g.nbrs_u(u1 as usize) {
+                if v2 == v1 {
+                    continue;
+                }
+                let ea = g.edge_id(u1 as usize, v2).unwrap();
+                let Some(eb) = g.edge_id(u2 as usize, v2) else { continue };
+                if alive[ea as usize] && alive[eb as usize] {
+                    b += 1;
+                }
+            }
+        }
+        be[eid] = b;
+    }
+    be
+}
+
+#[test]
+fn prop_peel_order_monotonicity_via_k_sets() {
+    // Peel order monotonicity, stated on the outputs: because rounds
+    // extract non-decreasing counts, every level set {tip >= k} must be
+    // a valid k-tip subgraph (each member holds >= k butterflies inside
+    // the set), and likewise {wing >= k} for edges.
+    check("every tip/wing level set is internally >= k", 8, |g| {
         let bg = g.bipartite(9, 45);
+        let engine = *g.pick(&PeelEngine::ALL);
         let vc = count_per_vertex(&bg, &CountOpts::default());
-        let be = count_per_edge(&bg, &CountOpts::default());
-        let ranking = *g.pick(&[Ranking::Side, Ranking::Degree, Ranking::ApproxDegree]);
-        let store = WedgeStore::build(&bg, ranking);
-        let wt = wpeel_vertices(&bg, &store, &vc.bu, &vc.bv, PeelSide::U, BucketKind::Julienne);
-        let pt = peel_vertices(
+        let r = peel_vertices(
             &bg,
             &vc.bu,
             &vc.bv,
-            &PeelVOpts { side: PeelSide::U, ..Default::default() },
+            &PeelVOpts { engine, side: PeelSide::U, ..Default::default() },
         );
-        prop_assert_eq(wt.tips, pt.tips)?;
-        let ww = wpeel_edges(&bg, &store, &be, BucketKind::FibHeap);
-        let pw = peel_edges(&bg, &be, &PeelEOpts::default());
-        prop_assert_eq(ww.wings, pw.wings)
+        let mut ks = r.tips.clone();
+        ks.sort_unstable();
+        ks.dedup();
+        for &k in ks.iter().filter(|&&k| k > 0) {
+            let keep_u: Vec<bool> = (0..bg.nu()).map(|u| r.tips[u] >= k).collect();
+            let keep_v = vec![true; bg.nv()];
+            let sub = bg.induced(&keep_u, &keep_v);
+            let (bu, _) = brute::per_vertex(&sub);
+            prop_assert(
+                bu.iter().all(|&b| b >= k),
+                format!("{engine:?}: k-tip set invalid at k={k}"),
+            )?;
+        }
+        let be = count_per_edge(&bg, &CountOpts::default());
+        let w = peel_edges(&bg, &be, &PeelEOpts { engine, ..Default::default() });
+        let mut ks = w.wings.clone();
+        ks.sort_unstable();
+        ks.dedup();
+        for &k in ks.iter().filter(|&&k| k > 0) {
+            let alive: Vec<bool> = w.wings.iter().map(|&x| x >= k).collect();
+            let sub = per_edge_alive(&bg, &alive);
+            for e in 0..bg.m() {
+                if alive[e] {
+                    prop_assert(
+                        sub[e] >= k,
+                        format!("{engine:?}: k-wing set invalid at k={k} edge {e}"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
     });
+}
+
+#[test]
+fn prop_decompositions_invariant_under_relabeling() {
+    fn permutation(g: &mut parbutterfly::testutil::prop::Gen, n: usize) -> Vec<u32> {
+        let mut p: Vec<u32> = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            let j = g.u64_below(i as u64 + 1) as usize;
+            p.swap(i, j);
+        }
+        p
+    }
+    check("tips/wings are label-independent", 10, |g| {
+        let bg = g.bipartite(9, 45);
+        let pu = permutation(g, bg.nu());
+        let pv = permutation(g, bg.nv());
+        let edges2: Vec<(u32, u32)> = bg
+            .edges()
+            .into_iter()
+            .map(|(u, v)| (pu[u as usize], pv[v as usize]))
+            .collect();
+        let bg2 = BipartiteGraph::from_edges(bg.nu(), bg.nv(), &edges2);
+        let engine = *g.pick(&PeelEngine::ALL);
+        let buckets = *g.pick(&BucketKind::ALL);
+        let vopts = PeelVOpts { engine, buckets, side: PeelSide::U, ..Default::default() };
+        let vc1 = count_per_vertex(&bg, &CountOpts::default());
+        let vc2 = count_per_vertex(&bg2, &CountOpts::default());
+        let t1 = peel_vertices(&bg, &vc1.bu, &vc1.bv, &vopts);
+        let t2 = peel_vertices(&bg2, &vc2.bu, &vc2.bv, &vopts);
+        for u in 0..bg.nu() {
+            prop_assert(
+                t2.tips[pu[u] as usize] == t1.tips[u],
+                format!("{engine:?}: tip changed under relabeling at {u}"),
+            )?;
+        }
+        let eopts = PeelEOpts { engine, buckets, ..Default::default() };
+        let w1 = peel_edges(&bg, &count_per_edge(&bg, &CountOpts::default()), &eopts);
+        let w2 = peel_edges(&bg2, &count_per_edge(&bg2, &CountOpts::default()), &eopts);
+        for eid in 0..bg.m() {
+            let (u, v) = bg.edge(eid as u32);
+            let eid2 = bg2
+                .edge_id(pu[u as usize] as usize, pv[v as usize])
+                .expect("relabeled edge exists");
+            prop_assert(
+                w2.wings[eid2 as usize] == w1.wings[eid],
+                format!("{engine:?}: wing changed under relabeling at {eid}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wstore_variants_agree() {
+    // The wedge-storing WPEEL variants must agree with BOTH standard
+    // PEEL engines, sequentially and under fork-join.
+    for threads in [1usize, 4] {
+        parbutterfly::prims::pool::with_threads(threads, || {
+            check(&format!("WPEEL == PEEL for both decompositions (t={threads})"), 6, |g| {
+                let bg = g.bipartite(9, 45);
+                let vc = count_per_vertex(&bg, &CountOpts::default());
+                let be = count_per_edge(&bg, &CountOpts::default());
+                let ranking = *g.pick(&[Ranking::Side, Ranking::Degree, Ranking::ApproxDegree]);
+                let store = WedgeStore::build(&bg, ranking);
+                let wt =
+                    wpeel_vertices(&bg, &store, &vc.bu, &vc.bv, PeelSide::U, BucketKind::Julienne);
+                let ww = wpeel_edges(&bg, &store, &be, BucketKind::FibHeap);
+                for engine in PeelEngine::ALL {
+                    let pt = peel_vertices(
+                        &bg,
+                        &vc.bu,
+                        &vc.bv,
+                        &PeelVOpts { engine, side: PeelSide::U, ..Default::default() },
+                    );
+                    prop_assert(wt.tips == pt.tips, format!("{engine:?} tips"))?;
+                    let pw =
+                        peel_edges(&bg, &be, &PeelEOpts { engine, ..Default::default() });
+                    prop_assert(ww.wings == pw.wings, format!("{engine:?} wings"))?;
+                }
+                Ok(())
+            });
+        });
+    }
 }
 
 #[test]

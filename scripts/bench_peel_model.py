@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Model harness seeding BENCH_peel.json.
+
+Mirrors `cargo bench --bench peel_intersect_vs_agg` at the algorithmic
+level: the aggregation UPDATE-V/UPDATE-E paths (full-adjacency
+re-scans with peeled/round_of filtering, per-pair aggregation — the
+shape of every `WedgeAgg` strategy) versus the streaming intersect
+peel engine (incrementally-shrinking live adjacency, dense counters /
+stamps, no wedge records).  Both drive the identical bucket model, so
+the measured gap isolates exactly what the Rust engines differ in:
+re-filtering dead adjacency and materializing per-pair work versus
+walking only the surviving graph.
+
+This exists because the authoring container has no Rust toolchain
+(same situation as scripts/bench_intersect_model.py in the previous
+PR); the JSON it writes is labeled `"harness": "python-model"` and is
+superseded by re-running the Rust bench, which overwrites the same
+file with native numbers and the full 6-row aggregation comparison.
+
+Usage: python3 scripts/bench_peel_model.py
+"""
+import json
+import time
+from pathlib import Path
+
+from bench_intersect_model import (chung_lu, erdos_renyi, per_edge_intersect,
+                                   planted_blocks, preprocess)
+from peel_model import (Graph, initial_vertex_counts, peel_e_agg,
+                        peel_e_intersect, peel_v_agg, peel_v_intersect)
+
+# Model-scale stand-ins for the Rust PEELING_SUITE (small / cl / dense),
+# shrunk so the pure-Python rounds finish in bench time.
+WORKLOADS = [
+    ("small", "ER 500x700 m~5k (model)", erdos_renyi(500, 700, 5_000, 101)),
+    ("cl", "Chung-Lu beta=2.1 1500x2400 m~14k (model)", chung_lu(1_500, 2_400, 14_000, 2.1, 105)),
+    ("dense", "8 planted 36x36 blocks p=0.85 + noise (model)",
+     planted_blocks(600, 600, 8, 36, 36, 0.85, 1_200, 109)),
+]
+
+
+def edge_counts(nu, nv, edges):
+    """Per-edge butterfly counts via the ranked streaming model (edge
+    ids = positions in the sorted edge list, same as the Rust CSR)."""
+    n, m = nu + nv, len(edges)
+    adj, up = preprocess(nu, nv, edges)
+    be = [0] * m
+    per_edge_intersect(n, m, adj, up, be)
+    return be
+
+
+def bench(f, runs=2):
+    samples = []
+    for _ in range(runs):
+        t = time.perf_counter()
+        f()
+        samples.append((time.perf_counter() - t) * 1e3)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def main():
+    rows = []
+    summary = []
+    for wl_id, describe, (nu, nv, edges) in WORKLOADS:
+        g = Graph(nu, nv, edges)
+        peel_u = g.wedges_centered_v() <= g.wedges_centered_u()
+        vc = initial_vertex_counts(g, peel_u)
+        be = edge_counts(nu, nv, g.edges)
+        print(f"[{wl_id}] {describe}: m={g.m} peel_u={peel_u}")
+        for mode, agg_f, isect_f, counts in [
+            ("tip", lambda: peel_v_agg(g, vc, peel_u),
+             lambda: peel_v_intersect(g, vc, peel_u), vc),
+            ("wing", lambda: peel_e_agg(g, be),
+             lambda: peel_e_intersect(g, be), be),
+        ]:
+            a, b = agg_f(), isect_f()
+            assert a == b, f"{wl_id}/{mode}: engines disagree"
+            rounds = len(set(a))  # distinct peel values ~ informative proxy
+            ms = {"agg": bench(agg_f), "intersect": bench(isect_f)}
+            for label in ("agg", "intersect"):
+                rows.append({"workload": wl_id, "mode": mode, "config": label,
+                             "median_ms": round(ms[label], 3)})
+                print(f"  {mode}/{label:<10} {ms[label]:10.2f} ms")
+            speedup = ms["agg"] / ms["intersect"]
+            print(f"  {mode}: intersect speedup {speedup:.2f}x")
+            summary.append({
+                "workload": wl_id, "mode": mode,
+                "best_agg": "agg-model",
+                "best_agg_ms": round(ms["agg"], 3),
+                "intersect_ms": round(ms["intersect"], 3),
+                "speedup": round(speedup, 3),
+                "distinct_peel_values": rounds,
+            })
+    doc = {
+        "bench": "peel_intersect_vs_agg",
+        "harness": "python-model",
+        "note": ("Algorithmic model measurements (scripts/bench_peel_model.py): "
+                 "aggregation UPDATE paths (full-adjacency rescans + per-pair "
+                 "aggregation) vs the streaming live-view intersect peel engine, "
+                 "identical bucket model.  The authoring container has no Rust "
+                 "toolchain; `cargo bench --bench peel_intersect_vs_agg` "
+                 "overwrites this file with native numbers and the full "
+                 "per-aggregation comparison."),
+        "threads": 1,
+        "rows": rows,
+        "summary": summary,
+    }
+    out = Path(__file__).resolve().parent.parent / "BENCH_peel.json"
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,496 @@
+#!/usr/bin/env python3
+"""Algorithmic model of the Rust peeling stack + golden-corpus generator.
+
+Two jobs (the authoring container has no Rust toolchain, so this model
+is how the intersect peeling path was validated before being written in
+Rust — the same role scripts/bench_intersect_model.py played for the
+counting engine in the previous PR):
+
+* ``validate`` — randomized equivalence sweep: the aggregation-style
+  UPDATE-V/UPDATE-E (what `peel/vertex.rs` / `peel/edge.rs` compute via
+  the WedgeAgg strategies), the live-view streaming intersect
+  UPDATE-V/UPDATE-E (what the new `PeelEngine::Intersect` path
+  computes: incrementally-shrinking adjacency, dense counters,
+  touched-list resets, no wedge records), and the literal
+  recount-every-round oracle (`testutil/brute.rs`) must produce
+  identical tip and wing numbers on every random graph.
+
+* ``golden`` — regenerate ``rust/tests/golden/<name>.peel`` from the
+  committed golden edge lists: pinned tip numbers for BOTH sides and
+  wing numbers, computed by the literal oracle.  `golden_peel.rs`
+  asserts every PeelEngine x BucketKind combination against these
+  files.
+
+Usage:
+    python3 scripts/peel_model.py validate [trials]
+    python3 scripts/peel_model.py golden
+"""
+import random
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+GOLDEN = ROOT / "rust" / "tests" / "golden"
+
+
+# ---------------------------------------------------------------------------
+# Graph plumbing (mirrors graph/bipartite.rs: edge id = position in the
+# (u, v)-sorted deduplicated edge list).
+# ---------------------------------------------------------------------------
+
+class Graph:
+    def __init__(self, nu, nv, edges):
+        self.nu, self.nv = nu, nv
+        self.edges = sorted(set(edges))
+        self.m = len(self.edges)
+        self.nbrs_u = [[] for _ in range(nu)]  # (v, eid)
+        self.nbrs_v = [[] for _ in range(nv)]  # (u, eid)
+        for eid, (u, v) in enumerate(self.edges):
+            self.nbrs_u[u].append((v, eid))
+            self.nbrs_v[v].append((u, eid))
+
+    def wedges_centered_u(self):
+        return sum(len(n) * (len(n) - 1) // 2 for n in self.nbrs_u)
+
+    def wedges_centered_v(self):
+        return sum(len(n) * (len(n) - 1) // 2 for n in self.nbrs_v)
+
+
+def load_golden(path):
+    nu = nv = None
+    edges = []
+    for line in path.read_text().splitlines():
+        t = line.strip()
+        if t.startswith("# bip"):
+            _, _, a, b = t.split()
+            nu, nv = int(a), int(b)
+        elif t and not t.startswith("#"):
+            u, v = t.split()
+            edges.append((int(u), int(v)))
+    return Graph(nu, nv, edges)
+
+
+def common(a, b):
+    return len(set(a) & set(b))
+
+
+# ---------------------------------------------------------------------------
+# Literal oracles (testutil/brute.rs): recount everything each round.
+# ---------------------------------------------------------------------------
+
+def oracle_tips(g, peel_u):
+    nbrs = g.nbrs_u if peel_u else g.nbrs_v
+    n = g.nu if peel_u else g.nv
+    alive = [True] * n
+    tip = [0] * n
+    k, remaining = 0, n
+    adj = [[v for (v, _) in nbrs[x]] for x in range(n)]
+    while remaining:
+        counts = [0] * n
+        live = [x for x in range(n) if alive[x]]
+        for i, x1 in enumerate(live):
+            for x2 in live[i + 1:]:
+                c = common(adj[x1], adj[x2])
+                b = c * (c - 1) // 2
+                counts[x1] += b
+                counts[x2] += b
+        mn = min(counts[x] for x in live)
+        k = max(k, mn)
+        for x in live:
+            if counts[x] == mn:
+                tip[x] = k
+                alive[x] = False
+                remaining -= 1
+    return tip
+
+
+def butterflies_per_edge(g, alive):
+    """Per-edge butterfly counts over alive edges only."""
+    be = [0] * g.m
+    eid_of = {e: i for i, e in enumerate(g.edges)}
+    for eid, (u1, v1) in enumerate(g.edges):
+        if not alive[eid]:
+            continue
+        b = 0
+        for (u2, e2) in g.nbrs_v[v1]:
+            if u2 == u1 or not alive[e2]:
+                continue
+            for (v2, ea) in g.nbrs_u[u1]:
+                if v2 == v1 or not alive[ea]:
+                    continue
+                eb = eid_of.get((u2, v2))
+                if eb is not None and alive[eb]:
+                    b += 1
+        be[eid] = b
+    return be
+
+
+def oracle_wings(g):
+    alive = [True] * g.m
+    wing = [0] * g.m
+    k, remaining = 0, g.m
+    while remaining:
+        counts = butterflies_per_edge(g, alive)
+        mn = min(counts[e] for e in range(g.m) if alive[e])
+        k = max(k, mn)
+        for e in range(g.m):
+            if alive[e] and counts[e] == mn:
+                wing[e] = k
+                alive[e] = False
+                remaining -= 1
+    return wing
+
+
+# ---------------------------------------------------------------------------
+# Bucketing model (both Rust backends produce this exact sequence).
+# ---------------------------------------------------------------------------
+
+class Buckets:
+    def __init__(self, counts):
+        self.cur = list(counts)
+        self.final = [False] * len(counts)
+
+    def pop_min(self):
+        live = [i for i in range(len(self.cur)) if not self.final[i]]
+        if not live:
+            return None
+        mn = min(self.cur[i] for i in live)
+        batch = [i for i in live if self.cur[i] == mn]
+        for i in batch:
+            self.final[i] = True
+        return mn, batch
+
+    def update(self, i, nc):
+        if not self.final[i]:
+            self.cur[i] = nc
+
+
+# ---------------------------------------------------------------------------
+# PEEL-V: aggregation path vs live-view intersect path.
+# ---------------------------------------------------------------------------
+
+def peel_v_agg(g, counts, peel_u):
+    """update_v semantics of peel/vertex.rs: per-pair wedge
+    multiplicities over the FULL adjacency, second endpoints filtered by
+    the peeled[] array (previous rounds + current batch)."""
+    nbrs_peel = g.nbrs_u if peel_u else g.nbrs_v
+    nbrs_other = g.nbrs_v if peel_u else g.nbrs_u
+    n = g.nu if peel_u else g.nv
+    buckets = Buckets(counts)
+    peeled = [False] * n
+    tips = [0] * n
+    k = 0
+    while True:
+        popped = buckets.pop_min()
+        if popped is None:
+            break
+        c, batch = popped
+        k = max(k, c)
+        for x in batch:
+            tips[x] = k
+            peeled[x] = True
+        delta = {}
+        for x1 in batch:
+            pair = {}
+            for (y, _e) in nbrs_peel[x1]:
+                for (x2, _e2) in nbrs_other[y]:
+                    if x2 != x1 and not peeled[x2]:
+                        pair[x2] = pair.get(x2, 0) + 1
+            for x2, d in pair.items():
+                b = d * (d - 1) // 2
+                if b:
+                    delta[x2] = delta.get(x2, 0) + b
+        for x2, removed in delta.items():
+            if not peeled[x2]:
+                buckets.update(x2, max(buckets.cur[x2] - removed, k))
+    return tips
+
+
+def peel_v_intersect(g, counts, peel_u):
+    """Live-view streaming path (the new PeelEngine::Intersect):
+    remove the batch from every center's live list FIRST, then walk
+    x1 -> y -> live x2 with a dense counter + touched list."""
+    nbrs_peel = g.nbrs_u if peel_u else g.nbrs_v
+    nbrs_other = g.nbrs_v if peel_u else g.nbrs_u
+    n = g.nu if peel_u else g.nv
+    n_other = g.nv if peel_u else g.nu
+    # Live CSR: per center y, live peel-side neighbors with O(1)
+    # swap-removal via a per-edge position index.
+    live = [[(x, e) for (x, e) in nbrs_other[y]] for y in range(n_other)]
+    llen = [len(live[y]) for y in range(n_other)]
+    pos = [0] * g.m
+    for y in range(n_other):
+        for i, (_x, e) in enumerate(live[y]):
+            pos[e] = i
+
+    def remove(y, e):
+        i = pos[e]
+        last = llen[y] - 1
+        assert live[y][i][1] == e
+        live[y][i] = live[y][last]
+        pos[live[y][i][1]] = i
+        llen[y] = last
+
+    buckets = Buckets(counts)
+    tips = [0] * n
+    k = 0
+    cnt = [0] * n
+    while True:
+        popped = buckets.pop_min()
+        if popped is None:
+            break
+        c, batch = popped
+        k = max(k, c)
+        for x in batch:
+            tips[x] = k
+        for x1 in batch:
+            for (y, e) in nbrs_peel[x1]:
+                remove(y, e)
+        delta = {}
+        for x1 in batch:
+            touched = []
+            for (y, _e) in nbrs_peel[x1]:
+                row = live[y]
+                for i in range(llen[y]):
+                    x2 = row[i][0]
+                    if cnt[x2] == 0:
+                        touched.append(x2)
+                    cnt[x2] += 1
+            for x2 in touched:
+                b = cnt[x2] * (cnt[x2] - 1) // 2
+                if b:
+                    delta[x2] = delta.get(x2, 0) + b
+                cnt[x2] = 0
+        for x2, removed in delta.items():
+            buckets.update(x2, max(buckets.cur[x2] - removed, k))
+    return tips
+
+
+# ---------------------------------------------------------------------------
+# PEEL-E: aggregation path vs live-view intersect path.
+# ---------------------------------------------------------------------------
+
+ALIVE = -1
+
+
+def alive_for(round_of, rnd, x, e):
+    r = round_of[x]
+    return r == ALIVE or (r == rnd and x > e)
+
+
+def peel_e_agg(g, counts):
+    """update_e semantics of peel/edge.rs: sorted-list intersections
+    over the full adjacency, same-round tie-break via alive_for."""
+    eid_of = {e: i for i, e in enumerate(g.edges)}
+    buckets = Buckets(counts)
+    round_of = [ALIVE] * g.m
+    wings = [0] * g.m
+    k, rnd = 0, 0
+    while True:
+        popped = buckets.pop_min()
+        if popped is None:
+            break
+        c, batch = popped
+        k = max(k, c)
+        for e in batch:
+            wings[e] = k
+            round_of[e] = rnd
+        delta = {}
+
+        def emit(eid):
+            delta[eid] = delta.get(eid, 0) + 1
+
+        for e in batch:
+            u1, v1 = g.edges[e]
+            for (u2, e2) in g.nbrs_v[v1]:
+                if u2 == u1 or not alive_for(round_of, rnd, e2, e):
+                    continue
+                for (v2, ea) in g.nbrs_u[u1]:
+                    if v2 == v1:
+                        continue
+                    eb = eid_of.get((u2, v2))
+                    if eb is None:
+                        continue
+                    if alive_for(round_of, rnd, ea, e) and alive_for(round_of, rnd, eb, e):
+                        emit(e2)
+                        emit(ea)
+                        emit(eb)
+        for e, removed in delta.items():
+            if round_of[e] == ALIVE:
+                buckets.update(e, max(buckets.cur[e] - removed, k))
+        rnd += 1
+    return wings
+
+
+def peel_e_intersect(g, counts):
+    """Live-view streaming path: adjacency pruned of PREVIOUS rounds
+    (batch edges removed only after the walk, so the same-round
+    alive_for tie-break still sees them), dense v2 stamps instead of
+    pairwise intersections."""
+    buckets = Buckets(counts)
+    round_of = [ALIVE] * g.m
+    wings = [0] * g.m
+    k, rnd = 0, 0
+    # Live incident-edge lists for both sides, O(1) removal.
+    live_u = [list(g.nbrs_u[u]) for u in range(g.nu)]
+    live_v = [list(g.nbrs_v[v]) for v in range(g.nv)]
+    ulen = [len(r) for r in live_u]
+    vlen = [len(r) for r in live_v]
+    pos_u = [0] * g.m
+    pos_v = [0] * g.m
+    for u in range(g.nu):
+        for i, (_v, e) in enumerate(live_u[u]):
+            pos_u[e] = i
+    for v in range(g.nv):
+        for i, (_u, e) in enumerate(live_v[v]):
+            pos_v[e] = i
+
+    def remove(e):
+        u, v = g.edges[e]
+        i = pos_u[e]
+        last = ulen[u] - 1
+        live_u[u][i] = live_u[u][last]
+        pos_u[live_u[u][i][1]] = i
+        ulen[u] = last
+        i = pos_v[e]
+        last = vlen[v] - 1
+        live_v[v][i] = live_v[v][last]
+        pos_v[live_v[v][i][1]] = i
+        vlen[v] = last
+
+    stamp_eid = [0] * g.nv   # v2 -> ea edge id
+    stamp_tag = [-1] * g.nv  # validity tag (peeled-edge id being processed)
+    while True:
+        popped = buckets.pop_min()
+        if popped is None:
+            break
+        c, batch = popped
+        k = max(k, c)
+        for e in batch:
+            wings[e] = k
+            round_of[e] = rnd
+        delta = {}
+
+        def emit(eid):
+            delta[eid] = delta.get(eid, 0) + 1
+
+        for e in batch:
+            u1, v1 = g.edges[e]
+            # Stamp live N(u1); edge e itself fails alive_for(e, e).
+            for i in range(ulen[u1]):
+                v2, ea = live_u[u1][i]
+                if alive_for(round_of, rnd, ea, e):
+                    stamp_eid[v2] = ea
+                    stamp_tag[v2] = e
+            for i in range(vlen[v1]):
+                u2, e2 = live_v[v1][i]
+                if not alive_for(round_of, rnd, e2, e):
+                    continue
+                for j in range(ulen[u2]):
+                    v2, eb = live_u[u2][j]
+                    if stamp_tag[v2] == e and alive_for(round_of, rnd, eb, e):
+                        emit(e2)
+                        emit(stamp_eid[v2])
+                        emit(eb)
+        for e in batch:
+            remove(e)
+        for e, removed in delta.items():
+            if round_of[e] == ALIVE:
+                buckets.update(e, max(buckets.cur[e] - removed, k))
+        rnd += 1
+    return wings
+
+
+# ---------------------------------------------------------------------------
+# Initial counts (the counting framework's per-vertex / per-edge output).
+# ---------------------------------------------------------------------------
+
+def initial_vertex_counts(g, peel_u):
+    nbrs = g.nbrs_u if peel_u else g.nbrs_v
+    n = g.nu if peel_u else g.nv
+    adj = [[v for (v, _) in nbrs[x]] for x in range(n)]
+    counts = [0] * n
+    for x1 in range(n):
+        for x2 in range(x1 + 1, n):
+            c = common(adj[x1], adj[x2])
+            b = c * (c - 1) // 2
+            counts[x1] += b
+            counts[x2] += b
+    return counts
+
+
+def initial_edge_counts(g):
+    return butterflies_per_edge(g, [True] * g.m)
+
+
+# ---------------------------------------------------------------------------
+# Entrypoints.
+# ---------------------------------------------------------------------------
+
+def random_graph(rng):
+    nu = rng.randrange(2, 13)
+    nv = rng.randrange(2, 13)
+    m = rng.randrange(0, min(nu * nv, 70))
+    edges = {(rng.randrange(nu), rng.randrange(nv)) for _ in range(m)}
+    return Graph(nu, nv, edges)
+
+
+def validate(trials):
+    rng = random.Random(20260729)
+    for t in range(trials):
+        g = random_graph(rng)
+        for peel_u in (True, False):
+            counts = initial_vertex_counts(g, peel_u)
+            expect = oracle_tips(g, peel_u)
+            agg = peel_v_agg(g, counts, peel_u)
+            isect = peel_v_intersect(g, counts, peel_u)
+            assert agg == expect, f"trial {t} peel_u={peel_u}: agg {agg} != {expect}"
+            assert isect == expect, f"trial {t} peel_u={peel_u}: intersect {isect} != {expect}"
+        be = initial_edge_counts(g)
+        expect = oracle_wings(g)
+        agg = peel_e_agg(g, be)
+        isect = peel_e_intersect(g, be)
+        assert agg == expect, f"trial {t}: edge agg {agg} != {expect}"
+        assert isect == expect, f"trial {t}: edge intersect {isect} != {expect}"
+        if (t + 1) % 50 == 0:
+            print(f"  {t + 1}/{trials} trials ok")
+    print(f"validate: {trials} randomized graphs, all four peeling paths == oracle")
+
+
+CORPUS = ["davis", "k6x7", "er20x25", "er16x16", "cl30x20", "blocks12"]
+
+
+def golden():
+    for name in CORPUS:
+        g = load_golden(GOLDEN / f"{name}.txt")
+        tips_u = oracle_tips(g, True)
+        tips_v = oracle_tips(g, False)
+        wings = oracle_wings(g)
+        # Cross-check the pinned values against the incremental models
+        # before writing anything.
+        assert peel_v_intersect(g, initial_vertex_counts(g, True), True) == tips_u, name
+        assert peel_v_intersect(g, initial_vertex_counts(g, False), False) == tips_v, name
+        assert peel_e_intersect(g, initial_edge_counts(g)) == wings, name
+        out = GOLDEN / f"{name}.peel"
+        lines = [
+            f"# golden peeling decomposition for {name}.txt",
+            "# regenerate: python3 scripts/peel_model.py golden "
+            "(literal recount-every-round oracle, = testutil/brute.rs)",
+            f"# rows: tips_u ({g.nu} values), tips_v ({g.nv} values), wings ({g.m} values)",
+            "tips_u " + " ".join(map(str, tips_u)),
+            "tips_v " + " ".join(map(str, tips_v)),
+            "wings " + " ".join(map(str, wings)),
+        ]
+        out.write_text("\n".join(lines) + "\n")
+        print(f"wrote {out} (max tip_u {max(tips_u)}, max tip_v {max(tips_v)}, "
+              f"max wing {max(wings) if wings else 0})")
+
+
+if __name__ == "__main__":
+    cmd = sys.argv[1] if len(sys.argv) > 1 else "validate"
+    if cmd == "validate":
+        validate(int(sys.argv[2]) if len(sys.argv) > 2 else 300)
+    elif cmd == "golden":
+        golden()
+    else:
+        sys.exit(f"unknown command {cmd!r}")

@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Reproduces the z-score maxima pinned by the Rust seeded sparsify test.
+
+`rust/tests/golden_counts.rs::sparsify_estimates_within_exact_variance_bounds_on_golden_corpus`
+asserts fixed-seed sparsified estimates within 4.5σ (edge) / 8σ
+(colorful) per seed and 2.5σ/√n on the mean, with σ² the exact
+estimator variance from the butterfly overlap structure.  Those bounds
+were pinned against the maxima this script computes: it ports the Rust
+sampling streams bit-for-bit — splitmix64 `hash64`, the
+`(p * u64::MAX as f64) as u64` edge threshold, `seed.rotate_left(17)` /
+`rotate_left(29)` mixing, edge ids as positions in the sorted
+deduplicated edge list — so its estimates are exactly what the Rust
+test computes (the authoring container had no Rust toolchain).
+
+Run: python3 scripts/sparsify_bounds_check.py
+Asserts every pinned bound with the same constants as the Rust test and
+prints the observed maxima.
+"""
+import math
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from peel_model import CORPUS, GOLDEN, load_golden
+
+M64 = (1 << 64) - 1
+P = 0.5
+NCOLORS = 2
+SEEDS = range(20)
+
+
+def hash64(x):
+    """splitmix64 finalizer — exact port of prims::rng::hash64."""
+    x = (x + 0x9E3779B97F4A7C15) & M64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & M64
+    return x ^ (x >> 31)
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+def total_of_edges(nu, edges):
+    adj = [set() for _ in range(nu)]
+    for (u, v) in edges:
+        adj[u].add(v)
+    b = 0
+    for u1 in range(nu):
+        for u2 in range(u1 + 1, nu):
+            c = len(adj[u1] & adj[u2])
+            b += c * (c - 1) // 2
+    return b
+
+
+def edge_sparsify(g, p, seed):
+    # Rust: `(p * u64::MAX as f64) as u64`; float(M64) rounds to 2^64
+    # exactly like `u64::MAX as f64`, and int() truncates like `as`.
+    thr = int(p * float(M64))
+    return [e for eid, e in enumerate(g.edges) if hash64(eid ^ rotl(seed, 17)) <= thr]
+
+
+def colorful_sparsify(g, ncolors, seed):
+    def color(gid):
+        return hash64(gid ^ rotl(seed, 29)) % ncolors
+
+    return [(u, v) for (u, v) in g.edges if color(u) == color(g.nu + v)]
+
+
+def butterflies(g):
+    """All butterflies as (edge-id frozenset, global-vertex frozenset)."""
+    eid_of = {e: i for i, e in enumerate(g.edges)}
+    adj = [set(v for v, _ in g.nbrs_u[u]) for u in range(g.nu)]
+    out = []
+    for u1 in range(g.nu):
+        for u2 in range(u1 + 1, g.nu):
+            com = sorted(adj[u1] & adj[u2])
+            for i, v1 in enumerate(com):
+                for v2 in com[i + 1:]:
+                    out.append((
+                        frozenset((eid_of[(u1, v1)], eid_of[(u1, v2)],
+                                   eid_of[(u2, v1)], eid_of[(u2, v2)])),
+                        frozenset((u1, u2, g.nu + v1, g.nu + v2)),
+                    ))
+    return out
+
+
+def var_edge(bflies, p):
+    var_x = sum(p ** len(ei | ej) - p ** 8 for (ei, _) in bflies for (ej, _) in bflies)
+    return var_x / p ** 8
+
+
+def var_colorful(bflies, p):
+    var_x = 0.0
+    for (_, vi) in bflies:
+        for (_, vj) in bflies:
+            both = p ** (len(vi | vj) - 1) if vi & vj else p ** 6
+            var_x += both - p ** 6
+    return var_x / p ** 6
+
+
+def main():
+    max_edge_z = max_col_z = max_mean_z = 0.0
+    for name in CORPUS:
+        g = load_golden(GOLDEN / f"{name}.txt")
+        exact = total_of_edges(g.nu, g.edges)
+        bf = butterflies(g)
+        assert len(bf) == exact, name
+
+        sd = math.sqrt(var_edge(bf, P))
+        ests = [total_of_edges(g.nu, edge_sparsify(g, P, s)) / P ** 4 for s in SEEDS]
+        zs = [abs(e - exact) / sd for e in ests]
+        zmean = abs(sum(ests) / len(ests) - exact) / (sd / math.sqrt(len(ests)))
+        assert all(z <= 4.5 for z in zs), (name, "edge per-seed bound", max(zs))
+        assert zmean <= 2.5, (name, "edge mean bound", zmean)
+        max_edge_z = max(max_edge_z, max(zs))
+        max_mean_z = max(max_mean_z, zmean)
+
+        sd = math.sqrt(var_colorful(bf, 1.0 / NCOLORS))
+        # est = X / p^3 with p = 1/ncolors, i.e. X * ncolors^3.
+        ests = [total_of_edges(g.nu, colorful_sparsify(g, NCOLORS, s)) * NCOLORS ** 3
+                for s in SEEDS]
+        zs = [abs(e - exact) / sd for e in ests]
+        zmean = abs(sum(ests) / len(ests) - exact) / (sd / math.sqrt(len(ests)))
+        assert all(z <= 8.0 for z in zs), (name, "colorful per-seed bound", max(zs))
+        assert zmean <= 2.5, (name, "colorful mean bound", zmean)
+        max_col_z = max(max_col_z, max(zs))
+        max_mean_z = max(max_mean_z, zmean)
+        print(f"{name:10} ok (B={exact})")
+    print(f"observed maxima: edge per-seed {max_edge_z:.2f} (bound 4.5), "
+          f"colorful per-seed {max_col_z:.2f} (bound 8.0), "
+          f"mean {max_mean_z:.2f} (bound 2.5)")
+
+
+if __name__ == "__main__":
+    main()
