@@ -18,7 +18,8 @@ use std::collections::HashMap;
 use std::path::Path;
 
 use crate::coordinator::{
-    count_report, tip_report, wing_report, Coordinator, CountConfig, CountMode, PeelConfig,
+    count_report, tip_report, wing_report, Coordinator, CountConfig, CountMode, CountReport,
+    PeelConfig,
 };
 use crate::count::{sparsify, BflyAgg, CountOpts, Engine, WedgeAgg};
 use crate::graph::{gen, io, BipartiteGraph};
@@ -175,7 +176,6 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_count(args: &Args) -> anyhow::Result<()> {
-    let g = load(args)?;
     let cfg = CountConfig { opts: count_opts(args), auto_rank: args.has("auto-rank") };
     let mode = match args.get("mode").unwrap_or("total") {
         "vertex" => CountMode::PerVertex,
@@ -183,7 +183,15 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
         "full" => CountMode::Full,
         _ => CountMode::Total,
     };
-    let r = with_threads_arg(args, || count_report(&g, mode, &cfg));
+    // `--threads` must cover the load too: the parser and CSR build are
+    // parallel stages of the measured pipeline, so timing them outside
+    // the override would mix thread settings in the breakdown below.
+    let (load_ms, r) = with_threads_arg(args, || -> anyhow::Result<(f64, CountReport)> {
+        let t_load = std::time::Instant::now();
+        let g = load(args)?;
+        let load_ms = t_load.elapsed().as_secs_f64() * 1e3;
+        Ok((load_ms, count_report(&g, mode, &cfg)))
+    })?;
     println!(
         "total = {} (ranking {}, engine {}, {} wedges, {:.2} ms, backend {})",
         r.total,
@@ -192,6 +200,14 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
         r.wedges,
         r.millis,
         r.backend
+    );
+    println!(
+        "preprocess: load {:.2} ms (parse + CSR), rank {:.2} ms, build {:.2} ms \
+         (pipeline {:.2} ms before counting)",
+        load_ms,
+        r.preprocess.rank_ms,
+        r.preprocess.build_ms,
+        load_ms + r.preprocess.total_ms()
     );
     if let Some(vc) = &r.per_vertex {
         let mx_u = vc.bu.iter().max().unwrap_or(&0);

@@ -10,7 +10,7 @@ use crate::count::{
 };
 use crate::graph::BipartiteGraph;
 use crate::peel::{self, PeelEOpts, PeelVOpts, TipResult, WingResult};
-use crate::rank::{choose_ranking, Ranking};
+use crate::rank::{choose_ranking, PreprocessTiming, Ranking};
 use crate::runtime::{self, DenseBackend};
 
 /// What to compute.
@@ -55,6 +55,10 @@ pub struct CountReport {
     pub wedges: u64,
     /// Wall-clock milliseconds for the counting phase.
     pub millis: f64,
+    /// Per-stage breakdown of the preprocessing pipeline (rank
+    /// permutation + PREPROCESS build) that ran before counting;
+    /// zeroed when a dense backend answered without preprocessing.
+    pub preprocess: PreprocessTiming,
     /// "cpu" (sparse framework) or the dense backend's name
     /// ("rust-dense", "pjrt").
     pub backend: &'static str,
@@ -75,7 +79,7 @@ fn resolve_ranking(g: &BipartiteGraph, cfg: &CountConfig) -> Ranking {
 pub fn count_report(g: &BipartiteGraph, mode: CountMode, cfg: &CountConfig) -> CountReport {
     let ranking = resolve_ranking(g, cfg);
     let opts = CountOpts { ranking, ..cfg.opts.clone() };
-    let rg = crate::rank::preprocess(g, ranking);
+    let (rg, preprocess) = crate::rank::preprocess_timed(g, ranking);
     let wedges = rg.wedges_processed();
     let start = Instant::now();
     let (total, per_vertex, per_edge) = match mode {
@@ -104,6 +108,7 @@ pub fn count_report(g: &BipartiteGraph, mode: CountMode, cfg: &CountConfig) -> C
         ranking,
         wedges,
         millis: start.elapsed().as_secs_f64() * 1e3,
+        preprocess,
         backend: "cpu",
         engine: opts.engine.name(),
     }
@@ -194,6 +199,7 @@ impl Coordinator {
                             ranking: cfg.opts.ranking,
                             wedges: 0,
                             millis: start.elapsed().as_secs_f64() * 1e3,
+                            preprocess: PreprocessTiming::default(),
                             backend: backend.name(),
                             engine: "dense",
                         };

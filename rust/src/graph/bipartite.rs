@@ -8,7 +8,18 @@
 //! Construction removes duplicate edges (the paper's KONECT
 //! preprocessing removes self-loops and multi-edges; bipartite graphs
 //! have no self-loops by construction).
+//!
+//! The build is fully parallel (`O(m log m)` work, polylog span):
+//! pack + [`par_sort`] + scan-based [`dedup_sorted`] produce the
+//! U-side CSR directly (the packed keys sort by `(u, v)`), and the
+//! V-side CSR comes from a second parallel sort of `(v, edge id)`
+//! keys — a stable radix-style partition by destination vertex that
+//! replaces the old sequential degree-count / prefix-sum / cursor-
+//! scatter loops.  Offsets are recovered per vertex by binary search
+//! over the sorted keys (`O(n log m)` fully parallel work).
 
+use crate::prims::pool::{parallel_for, parallel_map, SyncPtr};
+use crate::prims::scan::dedup_sorted;
 use crate::prims::sort::par_sort;
 
 /// A simple undirected bipartite graph in CSR form.
@@ -27,45 +38,45 @@ impl BipartiteGraph {
     /// Build from an edge list; duplicates are removed, ids validated.
     pub fn from_edges(nu: usize, nv: usize, edges: &[(u32, u32)]) -> Self {
         assert!(nu < u32::MAX as usize && nv < u32::MAX as usize);
-        let mut packed: Vec<u64> = edges
-            .iter()
-            .map(|&(u, v)| {
-                assert!((u as usize) < nu, "u id {u} out of range {nu}");
-                assert!((v as usize) < nv, "v id {v} out of range {nv}");
-                ((u as u64) << 32) | v as u64
-            })
-            .collect();
+        let mut packed: Vec<u64> = parallel_map(edges.len(), |i| {
+            let (u, v) = edges[i];
+            assert!((u as usize) < nu, "u id {u} out of range {nu}");
+            assert!((v as usize) < nv, "v id {v} out of range {nv}");
+            ((u as u64) << 32) | v as u64
+        });
         par_sort(&mut packed);
-        packed.dedup();
+        let packed = dedup_sorted(packed);
 
         let m = packed.len();
-        // U-side CSR (packed is sorted by (u, v) already).
-        let mut off_u = vec![0usize; nu + 1];
-        for &e in &packed {
-            off_u[(e >> 32) as usize + 1] += 1;
-        }
-        for i in 0..nu {
-            off_u[i + 1] += off_u[i];
-        }
-        let adj_u: Vec<u32> = packed.iter().map(|&e| e as u32).collect();
+        // U-side CSR (packed is sorted by (u, v) already): offsets are
+        // the per-vertex boundaries of the sorted keys.
+        let off_u: Vec<usize> =
+            parallel_map(nu + 1, |x| packed.partition_point(|&e| ((e >> 32) as usize) < x));
+        let adj_u: Vec<u32> = parallel_map(m, |i| packed[i] as u32);
 
-        // V-side CSR with edge ids.
-        let mut off_v = vec![0usize; nv + 1];
-        for &e in &packed {
-            off_v[(e & 0xffff_ffff) as usize + 1] += 1;
-        }
-        for i in 0..nv {
-            off_v[i + 1] += off_v[i];
-        }
+        // V-side CSR with edge ids: stable partition by destination via
+        // a second parallel sort of (v, eid) keys.  Within a fixed v,
+        // eid order equals u order (packed is sorted by (u, v)), so the
+        // result is byte-identical to the old sequential cursor scatter.
+        let mut vkeys: Vec<u64> =
+            parallel_map(m, |eid| ((packed[eid] & 0xffff_ffff) << 32) | eid as u64);
+        par_sort(&mut vkeys);
+        let off_v: Vec<usize> =
+            parallel_map(nv + 1, |x| vkeys.partition_point(|&k| ((k >> 32) as usize) < x));
         let mut adj_v = vec![0u32; m];
         let mut eid_v = vec![0u32; m];
-        let mut cursor = off_v.clone();
-        for (eid, &e) in packed.iter().enumerate() {
-            let u = (e >> 32) as u32;
-            let v = (e & 0xffff_ffff) as usize;
-            adj_v[cursor[v]] = u;
-            eid_v[cursor[v]] = eid as u32;
-            cursor[v] += 1;
+        {
+            let ap = SyncPtr(adj_v.as_mut_ptr());
+            let ep = SyncPtr(eid_v.as_mut_ptr());
+            let (packed, vkeys) = (&packed, &vkeys);
+            parallel_for(m, |i| {
+                let eid = (vkeys[i] & 0xffff_ffff) as usize;
+                // SAFETY: each index written by exactly one worker.
+                unsafe {
+                    *ap.get().add(i) = (packed[eid] >> 32) as u32;
+                    *ep.get().add(i) = eid as u32;
+                }
+            });
         }
         Self { nu, nv, off_u, adj_u, off_v, adj_v, eid_v }
     }
@@ -313,6 +324,33 @@ mod tests {
         assert_eq!(sub.nu(), 2);
         assert_eq!(sub.nv(), 2);
         assert_eq!(sub.m(), 4);
+    }
+
+    #[test]
+    fn parallel_build_matches_sequential_build_exactly() {
+        use crate::prims::pool::with_threads;
+        use crate::prims::rng::Pcg32;
+        // Random multigraph input (duplicates included) must build the
+        // identical CSR — offsets, adjacency, edge ids — at any thread
+        // count, including above the par_sort/dedup thresholds.
+        let mut rng = Pcg32::new(77);
+        let (nu, nv) = (300usize, 400usize);
+        let edges: Vec<(u32, u32)> = (0..20_000)
+            .map(|_| (rng.next_below(nu as u64) as u32, rng.next_below(nv as u64) as u32))
+            .collect();
+        let base = with_threads(1, || BipartiteGraph::from_edges(nu, nv, &edges));
+        for t in [2usize, 4, 8] {
+            let g = with_threads(t, || BipartiteGraph::from_edges(nu, nv, &edges));
+            assert_eq!(g.m(), base.m(), "t={t}");
+            assert_eq!(g.edges(), base.edges(), "t={t}");
+            for v in 0..nv {
+                assert_eq!(g.nbrs_v(v), base.nbrs_v(v), "t={t} v={v}");
+                assert_eq!(g.eids_v(v), base.eids_v(v), "t={t} v={v}");
+            }
+            for u in 0..nu {
+                assert_eq!(g.nbrs_u(u), base.nbrs_u(u), "t={t} u={u}");
+            }
+        }
     }
 
     #[test]

@@ -11,79 +11,174 @@
 //! Both accept CRLF line endings, and malformed rows — missing
 //! columns, non-numeric / negative / header-exceeding ids — fail with
 //! a line-numbered error instead of a panic deep in CSR construction.
+//!
+//! ## Parallel parsing
+//!
+//! [`load_edge_list`] reads the whole file into one byte buffer and —
+//! above [`PAR_MIN_BYTES`] with more than one worker — parses it with
+//! the **chunked parallel pipeline**: the buffer is split into one
+//! chunk per worker *at line boundaries*, every chunk is tokenized
+//! independently under [`parallel_for_blocks`], and the per-chunk
+//! outputs are stitched with [`prefix_sum`] scans (line counts for
+//! error numbering, edge counts for the final placement), so the whole
+//! parse is `O(bytes)` work with chunk-level span.  Both paths drive
+//! the **single** line grammar [`tokenize_line`], which reports
+//! failures as deferred [`ErrKind`] templates; each path renders them
+//! with the absolute line number ([`ErrKind::render`] is the one
+//! source of every message), so the parallel path reconstructs
+//! byte-identical edge lists *and* byte-identical error messages
+//! (the earliest failing line wins, exactly as a sequential scan
+//! would report — the `loader_parity` suite pins this).
+//!
+//! Memory: only the chunked path slurps the file into one byte buffer
+//! (it needs random access for the chunk split; the buffer is dropped
+//! before CSR construction).  Sequential parsing — one thread, or the
+//! explicit [`parse_edge_list_serial`] — streams through a `BufRead`
+//! line loop in `O(edges)` memory, driving the same grammar.
+//!
+//! The one construct the chunked parser cannot handle locally is a
+//! `# bip` header appearing *after* data lines (its bounds apply only
+//! to subsequent lines); chunks detect that case and the loader falls
+//! back to the serial scan, which handles it with unchanged semantics.
 
-use std::io::{BufRead, BufWriter, Write};
+use std::io::{BufWriter, Write};
 use std::path::Path;
+use std::sync::Mutex;
+
+use crate::prims::pool::{num_threads, parallel_for_blocks, parallel_reduce, SyncPtr};
+use crate::prims::scan::prefix_sum;
 
 use super::bipartite::BipartiteGraph;
 
-/// Load either supported format (sniffed from the header / indexing).
-pub fn load_edge_list(path: &Path) -> anyhow::Result<BipartiteGraph> {
-    let f = std::fs::File::open(path)
-        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
-    let reader = std::io::BufReader::new(f);
-    let mut edges: Vec<(u32, u32)> = Vec::new();
-    let mut header: Option<(usize, usize)> = None;
-    let mut konect = false;
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        // `BufRead::lines` keeps the `\r` of CRLF files; drop it (and
-        // any other stray whitespace) before sniffing or tokenizing.
-        let t = line.trim_end_matches('\r').trim();
-        if t.is_empty() {
-            continue;
-        }
-        if t.starts_with('%') {
-            // KONECT-style header.
-            if lineno == 0 {
-                konect = true;
-            }
-            continue;
-        }
-        if let Some(rest) = t.strip_prefix("# bip") {
-            let mut it = rest.split_whitespace();
-            let bad = || anyhow::anyhow!("line {}: bad `# bip <nu> <nv>` header", lineno + 1);
-            let nu: usize = it.next().ok_or_else(bad)?.parse().map_err(|_| bad())?;
-            let nv: usize = it.next().ok_or_else(bad)?.parse().map_err(|_| bad())?;
-            header = Some((nu, nv));
-            continue;
-        }
-        if t.starts_with('#') {
-            continue;
-        }
-        let mut it = t.split_whitespace();
-        let parse_id = |tok: Option<&str>, what: &str| -> anyhow::Result<u32> {
-            let tok =
-                tok.ok_or_else(|| anyhow::anyhow!("line {}: missing {what} id", lineno + 1))?;
-            tok.parse::<u32>().map_err(|_| {
-                anyhow::anyhow!(
-                    "line {}: bad {what} id {tok:?} (expected an integer in 0..{})",
-                    lineno + 1,
-                    u32::MAX
-                )
-            })
-        };
-        let u = parse_id(it.next(), "u")?;
-        let v = parse_id(it.next(), "v")?;
-        if konect {
-            anyhow::ensure!(u >= 1 && v >= 1, "line {}: KONECT ids are 1-indexed", lineno + 1);
-            edges.push((u - 1, v - 1));
-        } else {
-            if let Some((nu, nv)) = header {
-                anyhow::ensure!(
-                    (u as usize) < nu && (v as usize) < nv,
-                    "line {}: edge ({u}, {v}) out of range for `# bip {nu} {nv}` header",
-                    lineno + 1
-                );
-            }
-            edges.push((u, v));
+/// Below this file size the chunked parser is not worth the stitch
+/// bookkeeping; [`load_edge_list`] uses the serial scan.
+pub const PAR_MIN_BYTES: usize = 1 << 16;
+
+/// The sniffed file format, fixed by the prologue (leading comment /
+/// header lines): KONECT files are 1-indexed, a `# bip` header pins
+/// the dimensions for per-line range checks.
+#[derive(Clone, Copy, Default)]
+struct Format {
+    konect: bool,
+    header: Option<(usize, usize)>,
+}
+
+/// One classified line.
+enum Line {
+    Skip,
+    Header(usize, usize),
+    Edge(u32, u32),
+}
+
+/// Deferred line-error templates — [`ErrKind::render`] is the single
+/// source of every parse message, so the serial and chunked paths
+/// cannot drift apart; callers substitute the absolute (0-based) line
+/// number once they know it.
+enum ErrKind {
+    InvalidUtf8,
+    BadHeader,
+    MissingId(&'static str),
+    BadId(&'static str, String),
+    KonectZero,
+    OutOfRange(u32, u32, usize, usize),
+}
+
+impl ErrKind {
+    fn render(&self, lineno: usize) -> anyhow::Error {
+        let l = lineno + 1;
+        match self {
+            ErrKind::InvalidUtf8 => anyhow::anyhow!("line {l}: invalid UTF-8"),
+            ErrKind::BadHeader => anyhow::anyhow!("line {l}: bad `# bip <nu> <nv>` header"),
+            ErrKind::MissingId(what) => anyhow::anyhow!("line {l}: missing {what} id"),
+            ErrKind::BadId(what, tok) => anyhow::anyhow!(
+                "line {l}: bad {what} id {tok:?} (expected an integer in 0..{})",
+                u32::MAX
+            ),
+            ErrKind::KonectZero => anyhow::anyhow!("line {l}: KONECT ids are 1-indexed"),
+            ErrKind::OutOfRange(u, v, nu, nv) => anyhow::anyhow!(
+                "line {l}: edge ({u}, {v}) out of range for `# bip {nu} {nv}` header"
+            ),
         }
     }
-    let (nu, nv) = header.unwrap_or_else(|| {
-        let nu = edges.iter().map(|e| e.0 as usize + 1).max().unwrap_or(0);
-        let nv = edges.iter().map(|e| e.1 as usize + 1).max().unwrap_or(0);
-        (nu, nv)
-    });
+}
+
+/// Trim a raw line's bytes to the tokenizable `&str` (CRLF + stray
+/// whitespace).
+fn trim_line(raw: &[u8]) -> Result<&str, ErrKind> {
+    match std::str::from_utf8(raw) {
+        Ok(t) => Ok(t.trim_end_matches('\r').trim()),
+        Err(_) => Err(ErrKind::InvalidUtf8),
+    }
+}
+
+/// **The** line grammar, shared verbatim by the serial scan, the
+/// prologue, and the chunk tokenizer: classify + tokenize one trimmed
+/// line against the sniffed format.
+fn tokenize_line(t: &str, fmt: &Format) -> Result<Line, ErrKind> {
+    if t.is_empty() || t.starts_with('%') {
+        return Ok(Line::Skip);
+    }
+    if let Some(rest) = t.strip_prefix("# bip") {
+        let mut it = rest.split_whitespace();
+        let nu: usize = it.next().and_then(|s| s.parse().ok()).ok_or(ErrKind::BadHeader)?;
+        let nv: usize = it.next().and_then(|s| s.parse().ok()).ok_or(ErrKind::BadHeader)?;
+        return Ok(Line::Header(nu, nv));
+    }
+    if t.starts_with('#') {
+        return Ok(Line::Skip);
+    }
+    let mut it = t.split_whitespace();
+    let mut parse_id = |what: &'static str| -> Result<u32, ErrKind> {
+        let tok = it.next().ok_or(ErrKind::MissingId(what))?;
+        tok.parse::<u32>().map_err(|_| ErrKind::BadId(what, tok.to_string()))
+    };
+    let u = parse_id("u")?;
+    let v = parse_id("v")?;
+    if fmt.konect {
+        if u < 1 || v < 1 {
+            return Err(ErrKind::KonectZero);
+        }
+        Ok(Line::Edge(u - 1, v - 1))
+    } else {
+        if let Some((nu, nv)) = fmt.header {
+            if (u as usize) >= nu || (v as usize) >= nv {
+                return Err(ErrKind::OutOfRange(u, v, nu, nv));
+            }
+        }
+        Ok(Line::Edge(u, v))
+    }
+}
+
+/// Visit every line of `bytes[lo..hi]` (split on `\n`, no trailing
+/// phantom line when the range ends with a newline).  `f` returns
+/// `false` to stop early.
+fn for_each_line(bytes: &[u8], lo: usize, hi: usize, mut f: impl FnMut(&[u8]) -> bool) {
+    let mut pos = lo;
+    while pos < hi {
+        let end = bytes[pos..hi].iter().position(|&b| b == b'\n').map(|i| pos + i).unwrap_or(hi);
+        if !f(&bytes[pos..end]) {
+            return;
+        }
+        pos = end + 1;
+    }
+}
+
+/// Infer/validate dimensions and run the backstop range checks shared
+/// by both parse paths.
+fn finalize(
+    path: &Path,
+    header: Option<(usize, usize)>,
+    edges: Vec<(u32, u32)>,
+) -> anyhow::Result<(usize, usize, Vec<(u32, u32)>)> {
+    let (nu, nv) = match header {
+        Some(h) => h,
+        None => parallel_reduce(
+            edges.len(),
+            (0usize, 0usize),
+            |i| (edges[i].0 as usize + 1, edges[i].1 as usize + 1),
+            |a, b| (a.0.max(b.0), a.1.max(b.1)),
+        ),
+    };
     // Backstops: never let an oversized id or dimension reach the CSR
     // builder's asserts.
     anyhow::ensure!(
@@ -92,13 +187,320 @@ pub fn load_edge_list(path: &Path) -> anyhow::Result<BipartiteGraph> {
         path.display(),
         u32::MAX - 1
     );
-    for &(u, v) in &edges {
-        anyhow::ensure!(
-            (u as usize) < nu && (v as usize) < nv,
+    // First out-of-range edge in file order, if any (only reachable
+    // through a header that appears after its data lines).
+    let bad = parallel_reduce(
+        edges.len(),
+        usize::MAX,
+        |i| {
+            let (u, v) = edges[i];
+            if (u as usize) < nu && (v as usize) < nv {
+                usize::MAX
+            } else {
+                i
+            }
+        },
+        |a, b| a.min(b),
+    );
+    if bad != usize::MAX {
+        let (u, v) = edges[bad];
+        anyhow::bail!(
             "{}: edge ({u}, {v}) out of range for `# bip {nu} {nv}` header",
             path.display()
         );
     }
+    Ok((nu, nv, edges))
+}
+
+/// Sequential byte-buffer scan — the reference semantics.
+fn parse_bytes_serial(
+    bytes: &[u8],
+    path: &Path,
+) -> anyhow::Result<(usize, usize, Vec<(u32, u32)>)> {
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut fmt = Format::default();
+    let mut lineno = 0usize;
+    let mut err: Option<anyhow::Error> = None;
+    for_each_line(bytes, 0, bytes.len(), |raw| {
+        let this_line = lineno;
+        lineno += 1;
+        let t = match trim_line(raw) {
+            Ok(t) => t,
+            Err(kind) => {
+                err = Some(kind.render(this_line));
+                return false;
+            }
+        };
+        if this_line == 0 && t.starts_with('%') {
+            fmt.konect = true;
+        }
+        match tokenize_line(t, &fmt) {
+            Ok(Line::Skip) => {}
+            Ok(Line::Header(nu, nv)) => fmt.header = Some((nu, nv)),
+            Ok(Line::Edge(u, v)) => edges.push((u, v)),
+            Err(kind) => {
+                err = Some(kind.render(this_line));
+                return false;
+            }
+        }
+        true
+    });
+    if let Some(e) = err {
+        return Err(e);
+    }
+    finalize(path, fmt.header, edges)
+}
+
+/// Streaming sequential scan — `O(edges)` memory (one reused line
+/// buffer, no file slurp); drives the same [`tokenize_line`] grammar
+/// and [`ErrKind::render`] messages as the byte-buffer paths.
+fn parse_stream_serial(path: &Path) -> anyhow::Result<(usize, usize, Vec<(u32, u32)>)> {
+    use std::io::BufRead;
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+    let mut reader = std::io::BufReader::new(f);
+    let mut line: Vec<u8> = Vec::new();
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut fmt = Format::default();
+    let mut lineno = 0usize;
+    loop {
+        line.clear();
+        if reader.read_until(b'\n', &mut line)? == 0 {
+            break;
+        }
+        let raw = if line.last() == Some(&b'\n') { &line[..line.len() - 1] } else { &line[..] };
+        let t = match trim_line(raw) {
+            Ok(t) => t,
+            Err(kind) => return Err(kind.render(lineno)),
+        };
+        if lineno == 0 && t.starts_with('%') {
+            fmt.konect = true;
+        }
+        match tokenize_line(t, &fmt) {
+            Ok(Line::Skip) => {}
+            Ok(Line::Header(nu, nv)) => fmt.header = Some((nu, nv)),
+            Ok(Line::Edge(u, v)) => edges.push((u, v)),
+            Err(kind) => return Err(kind.render(lineno)),
+        }
+        lineno += 1;
+    }
+    finalize(path, fmt.header, edges)
+}
+
+/// Per-chunk output of the parallel tokenizer.
+struct ChunkOut {
+    edges: Vec<(u32, u32)>,
+    nlines: usize,
+    /// First failing line *within this chunk* (local 0-based line
+    /// index, message template) — re-rendered with the absolute line
+    /// number after the line-count scan.
+    err: Option<(usize, ErrKind)>,
+    /// A `# bip` header past the prologue: bail to the serial path.
+    late_header: bool,
+}
+
+/// Tokenize one chunk against the prologue-fixed format — the same
+/// [`tokenize_line`] grammar the serial scan drives.  Stops at the
+/// first error (later lines of the chunk cannot mask an earlier
+/// sequential failure) and on well-formed late headers; a *malformed*
+/// late header is an ordinary line error, exactly as the serial scan
+/// reports it.
+fn parse_chunk(bytes: &[u8], lo: usize, hi: usize, fmt: &Format) -> ChunkOut {
+    let mut out = ChunkOut { edges: Vec::new(), nlines: 0, err: None, late_header: false };
+    for_each_line(bytes, lo, hi, |raw| {
+        let local = out.nlines;
+        out.nlines += 1;
+        let t = match trim_line(raw) {
+            Ok(t) => t,
+            Err(kind) => {
+                out.err = Some((local, kind));
+                return false;
+            }
+        };
+        match tokenize_line(t, fmt) {
+            Ok(Line::Skip) => true,
+            Ok(Line::Header(..)) => {
+                out.late_header = true;
+                false
+            }
+            Ok(Line::Edge(u, v)) => {
+                out.edges.push((u, v));
+                true
+            }
+            Err(kind) => {
+                out.err = Some((local, kind));
+                false
+            }
+        }
+    });
+    out
+}
+
+/// Chunked parallel scan of the byte buffer.  `nchunks` >= 2 keeps the
+/// stitch machinery exercised even when forced at one thread.
+fn parse_bytes_parallel(
+    bytes: &[u8],
+    path: &Path,
+    nchunks: usize,
+) -> anyhow::Result<(usize, usize, Vec<(u32, u32)>)> {
+    // Prologue: consume leading comment / blank / header lines
+    // sequentially (they fix the format every chunk parses against).
+    let mut fmt = Format::default();
+    let mut prologue_lines = 0usize;
+    let mut data_start = bytes.len();
+    let mut prologue_err: Option<anyhow::Error> = None;
+    {
+        let mut pos = 0usize;
+        while pos < bytes.len() {
+            let end = bytes[pos..].iter().position(|&b| b == b'\n').map(|i| pos + i);
+            let raw = &bytes[pos..end.unwrap_or(bytes.len())];
+            let t = match trim_line(raw) {
+                Ok(t) => t,
+                Err(kind) => {
+                    prologue_err = Some(kind.render(prologue_lines));
+                    break;
+                }
+            };
+            if prologue_lines == 0 && t.starts_with('%') {
+                fmt.konect = true;
+            }
+            if t.is_empty() || t.starts_with('%') {
+                // comment
+            } else if t.starts_with("# bip") {
+                match tokenize_line(t, &fmt) {
+                    Ok(Line::Header(nu, nv)) => fmt.header = Some((nu, nv)),
+                    Ok(_) => unreachable!("`# bip` lines classify as headers"),
+                    Err(kind) => {
+                        prologue_err = Some(kind.render(prologue_lines));
+                        break;
+                    }
+                }
+            } else if t.starts_with('#') {
+                // comment
+            } else {
+                data_start = pos;
+                break;
+            }
+            prologue_lines += 1;
+            pos = match end {
+                Some(e) => e + 1,
+                None => bytes.len(),
+            };
+        }
+    }
+    if let Some(e) = prologue_err {
+        return Err(e);
+    }
+    if data_start >= bytes.len() {
+        return finalize(path, fmt.header, Vec::new());
+    }
+
+    // Chunk [data_start, len) at line boundaries.
+    let span = bytes.len() - data_start;
+    let nchunks = nchunks.min(span).max(1);
+    let mut bounds = Vec::with_capacity(nchunks + 1);
+    bounds.push(data_start);
+    for c in 1..nchunks {
+        let raw = data_start + c * span / nchunks;
+        let raw = raw.max(*bounds.last().unwrap());
+        let b = bytes[raw..]
+            .iter()
+            .position(|&b| b == b'\n')
+            .map(|i| raw + i + 1)
+            .unwrap_or(bytes.len());
+        bounds.push(b);
+    }
+    bounds.push(bytes.len());
+
+    // Tokenize every chunk in parallel.
+    let slots: Mutex<Vec<(usize, ChunkOut)>> = Mutex::new(Vec::with_capacity(nchunks));
+    {
+        let bounds = &bounds;
+        let fmt = &fmt;
+        parallel_for_blocks(nchunks, |c| {
+            let out = parse_chunk(bytes, bounds[c], bounds[c + 1], fmt);
+            slots.lock().unwrap().push((c, out));
+        });
+    }
+    let mut outs = slots.into_inner().unwrap();
+    outs.sort_unstable_by_key(|&(c, _)| c);
+    let outs: Vec<ChunkOut> = outs.into_iter().map(|(_, o)| o).collect();
+
+    if outs.iter().any(|o| o.late_header) {
+        // A `# bip` header after data lines scopes the chunks' range
+        // checks non-locally; replay the file sequentially.
+        return parse_bytes_serial(bytes, path);
+    }
+
+    // Stitch line numbers: a chunk's first line is the prologue plus
+    // every earlier chunk's line count.
+    let line_counts: Vec<usize> = outs.iter().map(|o| o.nlines).collect();
+    let (line_offs, _) = prefix_sum(&line_counts);
+    // The earliest failing chunk holds the earliest failing line (all
+    // earlier chunks completed clean), matching the sequential report.
+    for (c, o) in outs.iter().enumerate() {
+        if let Some((local, kind)) = &o.err {
+            return Err(kind.render(prologue_lines + line_offs[c] + local));
+        }
+    }
+
+    // Stitch edges: scan of per-chunk counts, then parallel placement.
+    let edge_counts: Vec<usize> = outs.iter().map(|o| o.edges.len()).collect();
+    let (edge_offs, total) = prefix_sum(&edge_counts);
+    let mut edges: Vec<(u32, u32)> = vec![(0, 0); total];
+    {
+        let ep = SyncPtr(edges.as_mut_ptr());
+        let outs = &outs;
+        let edge_offs = &edge_offs;
+        parallel_for_blocks(nchunks, |c| {
+            let src = &outs[c].edges;
+            // SAFETY: chunk slices [edge_offs[c], edge_offs[c]+len)
+            // are disjoint by construction of the scan.
+            unsafe {
+                std::ptr::copy_nonoverlapping(src.as_ptr(), ep.get().add(edge_offs[c]), src.len())
+            };
+        });
+    }
+    finalize(path, fmt.header, edges)
+}
+
+fn read_bytes(path: &Path) -> anyhow::Result<Vec<u8>> {
+    std::fs::read(path).map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))
+}
+
+/// Parse either supported format into `(nu, nv, edges)` without
+/// building the CSR; picks the chunked parallel scan for large files
+/// when more than one worker is available, and the `O(edges)`-memory
+/// streaming scan when single-threaded.
+pub fn parse_edge_list(path: &Path) -> anyhow::Result<(usize, usize, Vec<(u32, u32)>)> {
+    let t = num_threads();
+    if t <= 1 {
+        return parse_stream_serial(path);
+    }
+    let bytes = read_bytes(path)?;
+    if bytes.len() < PAR_MIN_BYTES {
+        parse_bytes_serial(&bytes, path)
+    } else {
+        parse_bytes_parallel(&bytes, path, t)
+    }
+}
+
+/// Force the sequential streaming scan (reference semantics; also the
+/// loader parity oracle).
+pub fn parse_edge_list_serial(path: &Path) -> anyhow::Result<(usize, usize, Vec<(u32, u32)>)> {
+    parse_stream_serial(path)
+}
+
+/// Force the chunked parallel scan regardless of size thresholds (at
+/// least two chunks, so the stitch paths run even under one thread).
+pub fn parse_edge_list_parallel(path: &Path) -> anyhow::Result<(usize, usize, Vec<(u32, u32)>)> {
+    let bytes = read_bytes(path)?;
+    parse_bytes_parallel(&bytes, path, num_threads().max(2))
+}
+
+/// Load either supported format (sniffed from the header / indexing).
+pub fn load_edge_list(path: &Path) -> anyhow::Result<BipartiteGraph> {
+    let (nu, nv, edges) = parse_edge_list(path)?;
     Ok(BipartiteGraph::from_edges(nu, nv, &edges))
 }
 
@@ -219,5 +621,52 @@ mod tests {
         let path = write_tmp("k0.txt", "% bip\n1 1\n0 1\n");
         let err = load_edge_list(&path).unwrap_err().to_string();
         assert!(err.contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn late_header_falls_back_to_serial_semantics() {
+        // A `# bip` header after data lines: the chunked path must
+        // yield the same result as the sequential scan (here, the
+        // backstop rejects the pre-header out-of-range edge without a
+        // line number — historical behaviour).
+        let path = write_tmp("late.txt", "0 9\n# bip 2 2\n0 1\n");
+        let se = parse_edge_list_serial(&path).unwrap_err().to_string();
+        let pe = parse_edge_list_parallel(&path).unwrap_err().to_string();
+        assert_eq!(se, pe);
+        assert!(se.contains("out of range"), "{se}");
+        let ok = write_tmp("late_ok.txt", "0 1\n# bip 4 4\n2 3\n");
+        let s = parse_edge_list_serial(&ok).unwrap();
+        let p = parse_edge_list_parallel(&ok).unwrap();
+        assert_eq!(s, p);
+        assert_eq!(s.0, 4);
+    }
+
+    #[test]
+    fn no_trailing_newline_and_empty_files() {
+        let path = write_tmp("notrail.txt", "# bip 3 3\n0 1\n2 2");
+        let g = load_edge_list(&path).unwrap();
+        assert_eq!(g.m(), 2);
+        let empty = write_tmp("empty.txt", "");
+        let g = load_edge_list(&empty).unwrap();
+        assert_eq!((g.nu(), g.nv(), g.m()), (0, 0, 0));
+        let only_comments = write_tmp("cmt.txt", "# nothing\n% here\n");
+        let g = load_edge_list(&only_comments).unwrap();
+        assert_eq!((g.nu(), g.nv(), g.m()), (0, 0, 0));
+    }
+
+    #[test]
+    fn forced_parallel_matches_serial_on_small_inputs() {
+        // The forced chunked path must agree with the serial scan even
+        // when chunks are only a few bytes wide.
+        for contents in [
+            "# bip 5 5\n0 1\n1 2\n2 3\n3 4\n4 0\n",
+            "% bip\n1 1\n2 2\n3 3\n",
+            "0 0\n\n# c\n1 1\n",
+        ] {
+            let path = write_tmp("tiny_par.txt", contents);
+            let s = parse_edge_list_serial(&path).unwrap();
+            let p = parse_edge_list_parallel(&path).unwrap();
+            assert_eq!(s, p, "{contents:?}");
+        }
     }
 }

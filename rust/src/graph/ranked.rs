@@ -10,9 +10,18 @@
 //!
 //! Global vertex ids: U-side vertex `u` is `u`; V-side vertex `v` is
 //! `nu + v`.
+//!
+//! Construction is parallel end to end: per-rank degrees are gathered
+//! with a parallel map, offsets come from the scan primitive
+//! ([`prefix_sum`]), and the rename + per-vertex decreasing-rank sort
+//! runs under dynamic self-scheduling with pooled per-worker buffers
+//! (skewed degree distributions make static chunking lopsided).
 
 use super::bipartite::BipartiteGraph;
-use crate::prims::pool::{parallel_for_chunks, SyncPtr};
+use crate::prims::pool::{
+    parallel_for_chunks, parallel_for_dynamic_pooled, parallel_map, ScratchPool, SyncPtr,
+};
+use crate::prims::scan::prefix_sum;
 
 /// Rank-renamed graph (output of PREPROCESS).
 #[derive(Clone, Debug)]
@@ -41,20 +50,25 @@ impl RankedGraph {
             orig[r as usize] = gid as u32;
         }
 
-        // Degrees in rank space.
-        let mut off = vec![0usize; n + 1];
-        for x in 0..n {
+        // Degrees in rank space -> offsets via a parallel scan.
+        let deg: Vec<usize> = parallel_map(n, |x| {
             let gid = orig[x] as usize;
-            let d = if gid < nu { g.deg_u(gid) } else { g.deg_v(gid - nu) };
-            off[x + 1] = d;
-        }
-        for x in 0..n {
-            off[x + 1] += off[x];
-        }
-        let m2 = off[n];
+            if gid < nu {
+                g.deg_u(gid)
+            } else {
+                g.deg_v(gid - nu)
+            }
+        });
+        let (mut off, m2) = prefix_sum(&deg);
+        off.push(m2);
         let mut adj = vec![0u32; m2];
         let mut eid = vec![0u32; m2];
         let mut up_deg = vec![0u32; n];
+        // Fill + sort each adjacency row.  Dynamic self-scheduling
+        // balances the skewed per-vertex sort costs; the scratch pool
+        // gives every worker one reusable (rank, eid) buffer instead
+        // of an allocation per row.
+        let pool: ScratchPool<Vec<(u32, u32)>> = ScratchPool::new();
         {
             let ap = SyncPtr(adj.as_mut_ptr());
             let ep = SyncPtr(eid.as_mut_ptr());
@@ -62,8 +76,7 @@ impl RankedGraph {
             let off = &off;
             let orig = &orig;
             let rank_of = &rank_of;
-            parallel_for_chunks(n, |range| {
-                let mut buf: Vec<(u32, u32)> = Vec::new();
+            parallel_for_dynamic_pooled(n, 256, &pool, Vec::new, |buf, range| {
                 for x in range {
                     let gid = orig[x] as usize;
                     buf.clear();
@@ -169,11 +182,9 @@ impl RankedGraph {
     /// parallel over sources.
     pub fn up_csr(&self) -> UpCsr {
         let n = self.n;
-        let mut off = vec![0usize; n + 1];
-        for x in 0..n {
-            off[x + 1] = off[x] + self.up_deg[x] as usize;
-        }
-        let total = off[n];
+        let updeg: Vec<usize> = parallel_map(n, |x| self.up_deg[x] as usize);
+        let (mut off, total) = prefix_sum(&updeg);
+        off.push(total);
         debug_assert_eq!(total, self.m(), "each edge appears once, from its lower endpoint");
         let mut adj = vec![0u32; total];
         let mut eid = vec![0u32; total];
@@ -396,6 +407,31 @@ mod tests {
                     assert!(w[0] < w[1], "row {x} not increasing");
                 }
                 assert!(up.nbrs(x).iter().all(|&y| (y as usize) > x));
+            }
+        }
+    }
+
+    #[test]
+    fn build_is_thread_count_invariant_on_large_graphs() {
+        use crate::prims::pool::with_threads;
+        // Large enough to cross the prefix-sum and dynamic-pool
+        // thresholds: the CSR must be identical at every thread count.
+        let g = crate::graph::gen::chung_lu(400, 500, 8_000, 2.1, 23);
+        let n = g.n();
+        // (i * 7919) mod n is a permutation because 7919 is prime and
+        // coprime to n; double-check rather than trust the arithmetic.
+        let rank: Vec<u32> = (0..n).map(|i| ((i * 7919) % n) as u32).collect();
+        let mut seen = vec![false; n];
+        for &r in &rank {
+            assert!(!std::mem::replace(&mut seen[r as usize], true), "not a permutation");
+        }
+        let base = with_threads(1, || RankedGraph::new(&g, rank.clone()));
+        for t in [4usize, 8] {
+            let rg = with_threads(t, || RankedGraph::new(&g, rank.clone()));
+            for x in 0..n {
+                assert_eq!(rg.nbrs(x), base.nbrs(x), "t={t} x={x}");
+                assert_eq!(rg.eids(x), base.eids(x), "t={t} x={x}");
+                assert_eq!(rg.up_deg(x), base.up_deg(x), "t={t} x={x}");
             }
         }
     }

@@ -2,8 +2,11 @@
 //! and wing decomposition (edge peeling).
 //!
 //! * [`bucket`] — Julienne-style bucketing (128-bucket window +
-//!   skip-ahead) and the Fibonacci-heap bucketing of §5.4.
-//! * [`fibheap`] — the batch-parallel Fibonacci heap (§5).
+//!   skip-ahead) and the Fibonacci-heap bucketing of §5.4; now lives
+//!   in [`crate::prims::bucket`] (shared with the co-degeneracy
+//!   rankings) and is re-exported here.
+//! * [`fibheap`] — the batch-parallel Fibonacci heap (§5), re-exported
+//!   from [`crate::prims::fibheap`].
 //! * [`vertex`] — PEEL-V (Algorithm 5).
 //! * [`edge`] — PEEL-E (Algorithm 6).
 //! * [`live`] — the shrinking adjacency views the intersect engine
@@ -29,15 +32,15 @@
 
 use std::sync::OnceLock;
 
-pub mod bucket;
 pub mod delta;
 pub mod edge;
-pub mod fibheap;
 pub mod live;
 pub mod vertex;
 pub mod wstore;
 
-pub use bucket::{BucketKind, BucketStruct};
+pub use crate::prims::{bucket, fibheap};
+
+pub use crate::prims::bucket::{BucketKind, BucketStruct};
 pub use edge::{peel_edges, PeelEOpts, WingResult};
 pub use vertex::{peel_vertices, PeelSide, PeelVOpts, TipResult};
 pub use wstore::{wpeel_edges, wpeel_vertices, WedgeStore};

@@ -1,4 +1,10 @@
-//! Bucketing structures for peeling.
+//! Bucketing structures shared by peeling and ranking.
+//!
+//! Originally `peel::bucket`; hoisted into `prims` so that both the
+//! PEEL-V/PEEL-E round loops *and* the bucket-parallel co-degeneracy
+//! ranking (`rank::co_degeneracy`) drive the same lazy-bucket
+//! machinery instead of each growing its own.  `peel` re-exports this
+//! module, so existing `peel::bucket::...` paths keep resolving.
 //!
 //! [`BucketStruct`] is the interface the peeling loops drive: pop the
 //! minimum-count bucket (finalizing its members), push decreased counts
@@ -273,6 +279,107 @@ impl BucketStruct for FibBuckets {
     }
 }
 
+/// Descending lazy-bucket walk for *max-first* peeling orders (the
+/// co-degeneracy rankings of §4.6): items `0..n` carry small integer
+/// keys that only **decrease**; [`MaxBuckets::pop_max`] claims every
+/// live item currently holding the maximum key — one ranking round —
+/// with the same lazy re-insertion discipline as [`JulienneBuckets`]
+/// (an item is re-pushed on every decrease; stale entries are filtered
+/// on extraction).
+///
+/// Because keys only decrease, the walk never has to revisit a higher
+/// bucket: after a round at key `k`, no live item can hold a key above
+/// `k`, so the structure visits each bucket index at most once plus
+/// one extra take per round — `O(n + max_key + total_updates)` work
+/// over a full drain.
+pub struct MaxBuckets {
+    cur: Vec<u64>,
+    finalized: Vec<bool>,
+    /// `buckets[k]` holds items believed to have key `k` (lazy).
+    buckets: Vec<Vec<u32>>,
+    top: isize,
+    remaining: usize,
+}
+
+impl MaxBuckets {
+    /// Build over items `0..keys.len()` with initial keys.
+    pub fn new(keys: &[u64]) -> Self {
+        let n = keys.len();
+        let nb = keys.iter().copied().max().map(|k| k as usize + 1).unwrap_or(0);
+        let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); nb];
+        for (item, &k) in keys.iter().enumerate() {
+            buckets[k as usize].push(item as u32);
+        }
+        Self {
+            cur: keys.to_vec(),
+            finalized: vec![false; n],
+            buckets,
+            top: nb as isize - 1,
+            remaining: n,
+        }
+    }
+
+    /// Claim **all** live items at the current maximum key (marking
+    /// them finalized).  Returns `(key, items)` in lazy insertion
+    /// order — callers needing a canonical order sort the frontier —
+    /// or `None` when drained.
+    pub fn pop_max(&mut self) -> Option<(u64, Vec<u32>)> {
+        while self.top >= 0 {
+            let t = self.top as usize;
+            if self.buckets[t].is_empty() {
+                self.top -= 1;
+                continue;
+            }
+            let members = std::mem::take(&mut self.buckets[t]);
+            // Filter-and-mark in one pass: lazy entries can contain
+            // duplicates (re-pushed on every decrease), so an item is
+            // claimed the first time it is seen at its live key.
+            let mut valid = Vec::new();
+            for item in members {
+                let idx = item as usize;
+                if !self.finalized[idx] && self.cur[idx] == t as u64 {
+                    self.finalized[idx] = true;
+                    valid.push(item);
+                }
+            }
+            if valid.is_empty() {
+                continue; // all stale; the live entries sit lower
+            }
+            self.remaining -= valid.len();
+            return Some((t as u64, valid));
+        }
+        debug_assert_eq!(self.remaining, 0);
+        None
+    }
+
+    /// Decrease `item`'s key to `new_key` (no-op on finalized items or
+    /// unchanged keys; `new_key` must not exceed the current key).
+    pub fn update(&mut self, item: u32, new_key: u64) {
+        let idx = item as usize;
+        if self.finalized[idx] || new_key == self.cur[idx] {
+            return;
+        }
+        debug_assert!(new_key < self.cur[idx], "keys only decrease");
+        self.cur[idx] = new_key;
+        self.buckets[new_key as usize].push(item);
+    }
+
+    /// Current key of an item.
+    pub fn current(&self, item: u32) -> u64 {
+        self.cur[item as usize]
+    }
+
+    /// Has `item` been claimed by a previous [`Self::pop_max`]?
+    pub fn is_finalized(&self, item: u32) -> bool {
+        self.finalized[item as usize]
+    }
+
+    /// Items not yet finalized.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+}
+
 /// Which bucketing backend a peeling run uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BucketKind {
@@ -422,6 +529,85 @@ mod tests {
             }
             assert!(finalized.iter().all(|&f| f), "drain left live items");
         }
+    }
+
+    #[test]
+    fn max_buckets_drain_in_descending_rounds() {
+        let keys = vec![5u64, 0, 3, 5, 0, 9, 3];
+        let mut mb = MaxBuckets::new(&keys);
+        let mut out = Vec::new();
+        while let Some((k, mut items)) = mb.pop_max() {
+            items.sort_unstable();
+            out.push((k, items));
+        }
+        assert_eq!(
+            out,
+            vec![(9, vec![5]), (5, vec![0, 3]), (3, vec![2, 6]), (0, vec![1, 4])]
+        );
+        assert_eq!(mb.remaining(), 0);
+    }
+
+    #[test]
+    fn max_buckets_lazy_updates_match_oracle() {
+        // pop_max must always return exactly the live items at the
+        // maximum current key, under random clamped decreases mirrored
+        // into a direct oracle over the `cur` array.
+        let mut rng = Pcg32::new(93);
+        for _trial in 0..10 {
+            let n = 50usize;
+            let keys: Vec<u64> = (0..n).map(|_| rng.next_below(40)).collect();
+            let mut mb = MaxBuckets::new(&keys);
+            let mut cur = keys.clone();
+            let mut finalized = vec![false; n];
+            while let Some((k, items)) = mb.pop_max() {
+                let live_max = (0..n)
+                    .filter(|&i| !finalized[i])
+                    .map(|i| cur[i])
+                    .max()
+                    .expect("pop from drained oracle");
+                assert_eq!(k, live_max, "popped key is not the live maximum");
+                let mut expect: Vec<u32> = (0..n)
+                    .filter(|&i| !finalized[i] && cur[i] == live_max)
+                    .map(|i| i as u32)
+                    .collect();
+                let mut got = items.clone();
+                got.sort_unstable();
+                expect.sort_unstable();
+                assert_eq!(got, expect, "popped members differ from oracle");
+                for &i in &items {
+                    finalized[i as usize] = true;
+                }
+                // Random decreases on survivors (keys may only drop).
+                for _ in 0..rng.next_below(8) {
+                    let i = rng.next_below(n as u64) as usize;
+                    if finalized[i] || cur[i] == 0 {
+                        continue;
+                    }
+                    let nk = rng.next_below(cur[i]);
+                    mb.update(i as u32, nk);
+                    cur[i] = nk;
+                }
+            }
+            assert!(finalized.iter().all(|&f| f), "drain left live items");
+        }
+    }
+
+    #[test]
+    fn max_buckets_ignores_finalized_and_equal_updates() {
+        let mut mb = MaxBuckets::new(&[2, 1]);
+        let (k, items) = mb.pop_max().unwrap();
+        assert_eq!((k, items), (2, vec![0]));
+        mb.update(0, 0); // finalized: ignored
+        mb.update(1, 1); // equal key: ignored
+        assert_eq!(mb.pop_max().unwrap(), (1, vec![1]));
+        assert!(mb.pop_max().is_none());
+    }
+
+    #[test]
+    fn max_buckets_empty() {
+        let mut mb = MaxBuckets::new(&[]);
+        assert!(mb.pop_max().is_none());
+        assert_eq!(mb.remaining(), 0);
     }
 
     #[test]

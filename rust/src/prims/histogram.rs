@@ -8,7 +8,7 @@
 
 use std::collections::HashMap;
 
-use super::pool::{num_threads, parallel_for_chunks, SyncPtr};
+use super::pool::{num_threads, parallel_for_blocks, SyncPtr};
 use super::rng::hash64;
 use super::scan::prefix_sum;
 
@@ -35,15 +35,13 @@ pub fn histogram(keys: &[u64]) -> Vec<(u64, u64)> {
     let mut counts = vec![0usize; nblocks * nbuckets];
     {
         let cp = SyncPtr(counts.as_mut_ptr());
-        parallel_for_chunks(nblocks, |r| {
-            for b in r {
-                let lo = b * block;
-                let hi = ((b + 1) * block).min(n);
-                let base = b * nbuckets;
-                for i in lo..hi {
-                    let bk = (hash64(keys[i]) & bmask) as usize;
-                    unsafe { *cp.get().add(base + bk) += 1 };
-                }
+        parallel_for_blocks(nblocks, |b| {
+            let lo = b * block;
+            let hi = ((b + 1) * block).min(n);
+            let base = b * nbuckets;
+            for i in lo..hi {
+                let bk = (hash64(keys[i]) & bmask) as usize;
+                unsafe { *cp.get().add(base + bk) += 1 };
             }
         });
     }
@@ -60,37 +58,32 @@ pub fn histogram(keys: &[u64]) -> Vec<(u64, u64)> {
     {
         let sp = SyncPtr(scratch.as_mut_ptr());
         let offsets = &offsets;
-        parallel_for_chunks(nblocks, |r| {
-            for b in r {
-                let lo = b * block;
-                let hi = ((b + 1) * block).min(n);
-                let mut cursor: Vec<usize> =
-                    (0..nbuckets).map(|bk| offsets[bk * nblocks + b]).collect();
-                for i in lo..hi {
-                    let bk = (hash64(keys[i]) & bmask) as usize;
-                    unsafe { *sp.get().add(cursor[bk]) = keys[i] };
-                    cursor[bk] += 1;
-                }
+        parallel_for_blocks(nblocks, |b| {
+            let lo = b * block;
+            let hi = ((b + 1) * block).min(n);
+            let mut cursor: Vec<usize> =
+                (0..nbuckets).map(|bk| offsets[bk * nblocks + b]).collect();
+            for i in lo..hi {
+                let bk = (hash64(keys[i]) & bmask) as usize;
+                unsafe { *sp.get().add(cursor[bk]) = keys[i] };
+                cursor[bk] += 1;
             }
         });
     }
     // Pass 3: count within each bucket in parallel.
     let bucket_start: Vec<usize> = (0..nbuckets).map(|bk| offsets[bk * nblocks]).collect();
     let out = std::sync::Mutex::new(Vec::with_capacity(n / 4));
-    parallel_for_chunks(nbuckets, |r| {
-        let mut local: Vec<(u64, u64)> = Vec::new();
-        for bk in r {
-            let lo = bucket_start[bk];
-            let hi = if bk + 1 < nbuckets { bucket_start[bk + 1] } else { n };
-            if lo >= hi {
-                continue;
-            }
-            let mut m: HashMap<u64, u64> = HashMap::with_capacity((hi - lo).min(1 << 14));
-            for &k in &scratch[lo..hi] {
-                *m.entry(k).or_insert(0) += 1;
-            }
-            local.extend(m);
+    parallel_for_blocks(nbuckets, |bk| {
+        let lo = bucket_start[bk];
+        let hi = if bk + 1 < nbuckets { bucket_start[bk + 1] } else { n };
+        if lo >= hi {
+            return;
         }
+        let mut m: HashMap<u64, u64> = HashMap::with_capacity((hi - lo).min(1 << 14));
+        for &k in &scratch[lo..hi] {
+            *m.entry(k).or_insert(0) += 1;
+        }
+        let local: Vec<(u64, u64)> = m.into_iter().collect();
         out.lock().unwrap().extend(local);
     });
     out.into_inner().unwrap()

@@ -20,8 +20,15 @@
 //! * [`atomics`] — CAS min/max helpers.
 //! * [`rng`] — splittable PCG32 used by generators, sparsification, and
 //!   the property-test harness.
+//! * [`bucket`] — lazy bucketing structures (Julienne window,
+//!   Fibonacci-heap buckets, descending max-walk) shared by the peeling
+//!   round loops and the co-degeneracy rankings.
+//! * [`fibheap`] — the batch-parallel Fibonacci heap of §5 backing
+//!   [`bucket::FibBuckets`].
 
 pub mod atomics;
+pub mod bucket;
+pub mod fibheap;
 pub mod hashtable;
 pub mod histogram;
 pub mod pool;
@@ -32,5 +39,5 @@ pub mod sort;
 
 pub use hashtable::CountTable;
 pub use pool::{num_threads, parallel_for, parallel_for_chunks, parallel_for_dynamic, with_threads};
-pub use scan::{filter, pack_indices, prefix_sum};
+pub use scan::{dedup_sorted, filter, pack_indices, prefix_sum};
 pub use sort::{par_sort, par_sort_by_key};

@@ -112,6 +112,48 @@ where
     });
 }
 
+/// Fork-per-block loop for **coarse-grained** block work: each index is
+/// a whole block of work (a scan pass over `n/t` items, a sorted run,
+/// a parser chunk), so the spawn is always worth it.
+///
+/// [`parallel_for_chunks`] assumes per-index work is tiny and refuses
+/// to fork when `n < min(MIN_GRAIN, 2t)` — the right call for element
+/// loops, but block loops pass `n == nblocks ~ t`, which always lands
+/// under that threshold and silently serialized every block-level pass
+/// (scan, histogram, merge-sort rounds).  This combinator forks
+/// whenever more than one worker *and* more than one block exist,
+/// assigning each worker a contiguous range of blocks.
+pub fn parallel_for_blocks<F>(nblocks: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let t = num_threads();
+    if t <= 1 || nblocks <= 1 {
+        for b in 0..nblocks {
+            f(b);
+        }
+        return;
+    }
+    let w = t.min(nblocks);
+    let per = nblocks.div_ceil(w);
+    std::thread::scope(|s| {
+        for c in 0..w {
+            let lo = c * per;
+            let hi = ((c + 1) * per).min(nblocks);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || {
+                OVERRIDE.with(|o| o.set(Some(1)));
+                for b in lo..hi {
+                    f(b);
+                }
+            });
+        }
+    });
+}
+
 /// Self-scheduling parallel loop: workers claim `grain`-sized ranges
 /// from a shared atomic counter.  Use when per-index work is skewed
 /// (wedge-aware batching, peeling frontiers).
@@ -333,6 +375,27 @@ mod tests {
                 assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
             });
         }
+    }
+
+    #[test]
+    fn blocks_visit_every_block_once_even_when_nblocks_equals_threads() {
+        // The regression this combinator exists for: nblocks == t used
+        // to fall under parallel_for_chunks' spawn threshold.
+        for t in [1, 2, 4, 8] {
+            with_threads(t, || {
+                for nblocks in [1usize, t, 2 * t + 1] {
+                    let hits: Vec<AtomicU64> = (0..nblocks).map(|_| AtomicU64::new(0)).collect();
+                    parallel_for_blocks(nblocks, |b| {
+                        hits[b].fetch_add(1, Ordering::Relaxed);
+                    });
+                    assert!(
+                        hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                        "t={t} nblocks={nblocks}"
+                    );
+                }
+            });
+        }
+        parallel_for_blocks(0, |_| panic!("must not be called"));
     }
 
     #[test]

@@ -1,10 +1,10 @@
-//! Parallel prefix sum, filter, and pack.
+//! Parallel prefix sum, filter, pack, and sorted-dedup.
 //!
 //! Classic two-pass blocked scan: per-block sums, sequential scan of the
 //! (tiny) block-sum array, then a parallel down-sweep.  `O(n)` work,
 //! `O(log n)` span with the usual block-count caveat.
 
-use super::pool::{num_threads, parallel_for_chunks, SyncPtr};
+use super::pool::{num_threads, parallel_for_blocks, SyncPtr};
 
 /// Exclusive prefix sum of `a`; returns `(sums, total)` where
 /// `sums[i] = a[0] + ... + a[i-1]`.
@@ -29,16 +29,14 @@ pub fn prefix_sum(a: &[usize]) -> (Vec<usize>, usize) {
     let mut block_sums = vec![0usize; nblocks];
     {
         let bs = SyncPtr(block_sums.as_mut_ptr());
-        parallel_for_chunks(nblocks, |r| {
-            for b in r {
-                let lo = b * block;
-                let hi = ((b + 1) * block).min(n);
-                let mut s = 0usize;
-                for i in lo..hi {
-                    s += a[i];
-                }
-                unsafe { *bs.get().add(b) = s };
+        parallel_for_blocks(nblocks, |b| {
+            let lo = b * block;
+            let hi = ((b + 1) * block).min(n);
+            let mut s = 0usize;
+            for i in lo..hi {
+                s += a[i];
             }
+            unsafe { *bs.get().add(b) = s };
         });
     }
     // Scan block sums sequentially (nblocks == #threads, tiny).
@@ -54,15 +52,13 @@ pub fn prefix_sum(a: &[usize]) -> (Vec<usize>, usize) {
     {
         let op = SyncPtr(out.as_mut_ptr());
         let offs = &block_offsets;
-        parallel_for_chunks(nblocks, |r| {
-            for b in r {
-                let lo = b * block;
-                let hi = ((b + 1) * block).min(n);
-                let mut s = offs[b];
-                for i in lo..hi {
-                    unsafe { *op.get().add(i) = s };
-                    s += a[i];
-                }
+        parallel_for_blocks(nblocks, |b| {
+            let lo = b * block;
+            let hi = ((b + 1) * block).min(n);
+            let mut s = offs[b];
+            for i in lo..hi {
+                unsafe { *op.get().add(i) = s };
+                s += a[i];
             }
         });
     }
@@ -82,39 +78,87 @@ pub fn filter<T: Clone + Send + Sync>(a: &[T], pred: impl Fn(&T) -> bool + Sync)
     {
         let cp = SyncPtr(counts.as_mut_ptr());
         let pred = &pred;
-        parallel_for_chunks(nblocks, |r| {
-            for b in r {
-                let lo = b * block;
-                let hi = ((b + 1) * block).min(n);
-                let c = a[lo..hi].iter().filter(|x| pred(x)).count();
-                unsafe { *cp.get().add(b) = c };
-            }
+        parallel_for_blocks(nblocks, |b| {
+            let lo = b * block;
+            let hi = ((b + 1) * block).min(n);
+            let c = a[lo..hi].iter().filter(|x| pred(x)).count();
+            unsafe { *cp.get().add(b) = c };
         });
     }
     let (offsets, total) = prefix_sum(&counts);
     let mut out: Vec<T> = Vec::with_capacity(total);
-    #[allow(clippy::uninit_vec)]
-    unsafe {
-        out.set_len(total)
-    };
     {
         let op = SyncPtr(out.as_mut_ptr());
         let pred = &pred;
         let offsets = &offsets;
-        parallel_for_chunks(nblocks, |r| {
-            for b in r {
-                let lo = b * block;
-                let hi = ((b + 1) * block).min(n);
-                let mut w = offsets[b];
-                for x in &a[lo..hi] {
-                    if pred(x) {
-                        unsafe { std::ptr::write(op.get().add(w), x.clone()) };
-                        w += 1;
-                    }
+        parallel_for_blocks(nblocks, |b| {
+            let lo = b * block;
+            let hi = ((b + 1) * block).min(n);
+            let mut w = offsets[b];
+            for x in &a[lo..hi] {
+                if pred(x) {
+                    unsafe { std::ptr::write(op.get().add(w), x.clone()) };
+                    w += 1;
                 }
             }
         });
     }
+    // SAFETY: length adopted only after every slot was written — a
+    // panicking clone()/pred() mid-scatter leaks the written clones
+    // instead of dropping uninitialized slots.
+    unsafe { out.set_len(total) };
+    out
+}
+
+/// Remove adjacent duplicates from a **sorted** vector in parallel
+/// (scan-based compaction): keep flags compare each slot with its
+/// predecessor, per-block survivor counts are prefix-summed, and
+/// survivors scatter to their final positions.  Equivalent to
+/// `Vec::dedup` on sorted input, `O(n)` work, one scan of span.
+pub fn dedup_sorted<T: PartialEq + Clone + Send + Sync>(v: Vec<T>) -> Vec<T> {
+    let n = v.len();
+    let t = num_threads();
+    if t <= 1 || n < 4096 {
+        let mut v = v;
+        v.dedup();
+        return v;
+    }
+    let keep = |i: usize| i == 0 || v[i] != v[i - 1];
+    let nblocks = t.min(n);
+    let block = n.div_ceil(nblocks);
+    let mut counts = vec![0usize; nblocks];
+    {
+        let cp = SyncPtr(counts.as_mut_ptr());
+        let keep = &keep;
+        parallel_for_blocks(nblocks, |b| {
+            let lo = b * block;
+            let hi = ((b + 1) * block).min(n);
+            let c = (lo..hi).filter(|&i| keep(i)).count();
+            unsafe { *cp.get().add(b) = c };
+        });
+    }
+    let (offsets, total) = prefix_sum(&counts);
+    let mut out: Vec<T> = Vec::with_capacity(total);
+    {
+        let op = SyncPtr(out.as_mut_ptr());
+        let keep = &keep;
+        let offsets = &offsets;
+        parallel_for_blocks(nblocks, |b| {
+            let lo = b * block;
+            let hi = ((b + 1) * block).min(n);
+            let mut w = offsets[b];
+            for i in lo..hi {
+                if keep(i) {
+                    unsafe { std::ptr::write(op.get().add(w), v[i].clone()) };
+                    w += 1;
+                }
+            }
+        });
+    }
+    // SAFETY: length adopted only after every slot was written — a
+    // panicking clone()/eq() mid-scatter leaks the written clones
+    // instead of dropping uninitialized slots.
+    unsafe { out.set_len(total) };
     out
 }
 
@@ -130,13 +174,11 @@ pub fn pack_indices(n: usize, pred: impl Fn(usize) -> bool + Sync) -> Vec<usize>
     {
         let cp = SyncPtr(counts.as_mut_ptr());
         let pred = &pred;
-        parallel_for_chunks(nblocks, |r| {
-            for b in r {
-                let lo = b * block;
-                let hi = ((b + 1) * block).min(n);
-                let c = (lo..hi).filter(|&i| pred(i)).count();
-                unsafe { *cp.get().add(b) = c };
-            }
+        parallel_for_blocks(nblocks, |b| {
+            let lo = b * block;
+            let hi = ((b + 1) * block).min(n);
+            let c = (lo..hi).filter(|&i| pred(i)).count();
+            unsafe { *cp.get().add(b) = c };
         });
     }
     let (offsets, total) = prefix_sum(&counts);
@@ -145,16 +187,14 @@ pub fn pack_indices(n: usize, pred: impl Fn(usize) -> bool + Sync) -> Vec<usize>
         let op = SyncPtr(out.as_mut_ptr());
         let pred = &pred;
         let offsets = &offsets;
-        parallel_for_chunks(nblocks, |r| {
-            for b in r {
-                let lo = b * block;
-                let hi = ((b + 1) * block).min(n);
-                let mut w = offsets[b];
-                for i in lo..hi {
-                    if pred(i) {
-                        unsafe { *op.get().add(w) = i };
-                        w += 1;
-                    }
+        parallel_for_blocks(nblocks, |b| {
+            let lo = b * block;
+            let hi = ((b + 1) * block).min(n);
+            let mut w = offsets[b];
+            for i in lo..hi {
+                if pred(i) {
+                    unsafe { *op.get().add(w) = i };
+                    w += 1;
                 }
             }
         });
@@ -198,6 +238,25 @@ mod tests {
                 let f = filter(&a, |x| x % 3 == 0);
                 let expect: Vec<u32> = (0..20_000).filter(|x| x % 3 == 0).collect();
                 assert_eq!(f, expect);
+            });
+        }
+    }
+
+    #[test]
+    fn dedup_sorted_matches_vec_dedup() {
+        for t in [1, 2, 4] {
+            with_threads(t, || {
+                for n in [0usize, 1, 100, 5000, 30_000] {
+                    let mut a: Vec<u64> = (0..n as u64).map(|i| (i * 7 + 3) % 997).collect();
+                    a.sort_unstable();
+                    let mut expect = a.clone();
+                    expect.dedup();
+                    assert_eq!(dedup_sorted(a), expect, "n={n} t={t}");
+                }
+                // All-equal and all-distinct extremes.
+                assert_eq!(dedup_sorted(vec![9u64; 20_000]), vec![9u64]);
+                let distinct: Vec<u64> = (0..20_000).collect();
+                assert_eq!(dedup_sorted(distinct.clone()), distinct);
             });
         }
     }

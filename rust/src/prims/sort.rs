@@ -4,11 +4,13 @@
 //!   per-worker runs, sort each with the std unstable sort, then merge
 //!   runs pairwise in parallel rounds.  `O(n log n)` work, `O(log^2 n)`-ish
 //!   span; the paper uses PBBS sample sort for the same role (wedge
-//!   aggregation by sorting).
+//!   aggregation by sorting).  Rounds ping-pong between the input and a
+//!   single uninitialized scratch buffer, moving elements bitwise — no
+//!   per-round clones and only one `n`-slot allocation.
 //! * [`radix_sort_u64`] — LSD radix sort (8-bit digits) for dense `u64`
 //!   keys; used by semisort when the key universe is known to be packed.
 
-use super::pool::{num_threads, parallel_for_chunks, with_threads, SyncPtr};
+use super::pool::{num_threads, parallel_for_blocks, with_threads, SyncPtr};
 
 /// Sort a vector in parallel (unstable within equal keys).
 pub fn par_sort<T: Ord + Clone + Send + Sync>(v: &mut Vec<T>) {
@@ -34,71 +36,99 @@ where
     {
         let base = SyncPtr(v.as_mut_ptr());
         let key = &key;
-        parallel_for_chunks(nruns, |r| {
-            for b in r {
-                let lo = b * run;
-                let hi = ((b + 1) * run).min(n);
-                if lo < hi {
-                    // SAFETY: runs are disjoint slices of v.
-                    let s = unsafe { std::slice::from_raw_parts_mut(base.get().add(lo), hi - lo) };
-                    s.sort_unstable_by(|a, b| key(a).cmp(&key(b)));
-                }
+        parallel_for_blocks(nruns, |b| {
+            let lo = b * run;
+            let hi = ((b + 1) * run).min(n);
+            if lo < hi {
+                // SAFETY: runs are disjoint slices of v.
+                let s = unsafe { std::slice::from_raw_parts_mut(base.get().add(lo), hi - lo) };
+                s.sort_unstable_by(|a, b| key(a).cmp(&key(b)));
             }
         });
     }
-    // Merge runs pairwise, ping-ponging between v and a scratch buffer.
-    let mut src: Vec<T> = v.clone();
-    let mut dst: Vec<T> = v.clone();
+    // Merge runs pairwise, ping-ponging between v and ONE uninitialized
+    // scratch buffer (`with_capacity`, length kept at 0 so drops never
+    // see its slots).  Elements are *moved* bitwise between the two
+    // buffers with `ptr::read`/`ptr::write` — no clones, and every
+    // round relocates all `n` elements, so after an odd number of
+    // rounds the data lives in the scratch and is copied back once.
+    // Panic safety: while the rounds run, *neither* Vec owns elements
+    // (`v`'s length is parked at 0, the scratch's never leaves 0), so
+    // a user `key` panic can only leak the elements — it can never
+    // double-drop one whose bits sit in two slots mid-merge.
+    let mut scratch: Vec<T> = Vec::with_capacity(n);
+    let vp = SyncPtr(v.as_mut_ptr());
+    let sp = SyncPtr(scratch.as_mut_ptr());
+    // SAFETY: length restored to `n` after the rounds; the allocation
+    // is untouched (raw-pointer writes only, no push/reserve).
+    unsafe { v.set_len(0) };
     let mut width = run;
-    let mut rounds = 0usize;
+    let mut in_v = true;
     while width < n {
         let npairs = n.div_ceil(2 * width);
         {
-            let dp = SyncPtr(dst.as_mut_ptr());
-            let src = &src;
+            let (srcp, dstp) = if in_v { (&vp, &sp) } else { (&sp, &vp) };
             let key = &key;
-            parallel_for_chunks(npairs, |r| {
-                for p in r {
-                    let lo = p * 2 * width;
-                    let mid = (lo + width).min(n);
-                    let hi = (lo + 2 * width).min(n);
-                    merge_into(&src[lo..mid], &src[mid..hi], key, unsafe {
-                        std::slice::from_raw_parts_mut(dp.get().add(lo), hi - lo)
-                    });
-                }
+            parallel_for_blocks(npairs, |p| {
+                let lo = p * 2 * width;
+                let mid = (lo + width).min(n);
+                let hi = (lo + 2 * width).min(n);
+                // SAFETY: pairs tile 0..n disjointly; src slots were
+                // fully written by the previous round (or are v's
+                // initial contents) and dst slots are exclusively
+                // ours this round.
+                unsafe {
+                    merge_moves(srcp.get().add(lo), mid - lo, hi - mid, key, dstp.get().add(lo))
+                };
             });
         }
-        std::mem::swap(&mut src, &mut dst);
+        in_v = !in_v;
         width *= 2;
-        rounds += 1;
     }
-    if rounds > 0 {
-        *v = src;
+    if !in_v {
+        // Odd round count: the fully merged data sits in the scratch.
+        // SAFETY: both buffers hold >= n slots and do not overlap.
+        unsafe { std::ptr::copy_nonoverlapping(sp.get(), vp.get(), n) };
     }
+    // SAFETY: every slot of v[0..n] holds an initialized element again
+    // (each round rewrites the full prefix; the copy above covers the
+    // odd case), so v may resume ownership.
+    unsafe { v.set_len(n) };
+    // `scratch` drops here with len 0: capacity freed, no element drops
+    // (its bits are either stale or bitwise-duplicated into `v`).
 }
 
-fn merge_into<T: Clone, K: Ord>(a: &[T], b: &[T], key: &(impl Fn(&T) -> K + ?Sized), out: &mut [T]) {
-    let (mut i, mut j, mut w) = (0, 0, 0);
-    while i < a.len() && j < b.len() {
-        if key(&a[i]) <= key(&b[j]) {
-            out[w] = a[i].clone();
-            i += 1;
-        } else {
-            out[w] = b[j].clone();
-            j += 1;
-        }
+/// Merge the sorted runs `src[0..alen]` and `src[alen..alen+blen]` into
+/// `dst[0..alen+blen]` by *moving* elements (bitwise reads/writes).
+///
+/// # Safety
+/// `src` must hold `alen + blen` initialized elements, `dst` must have
+/// room for as many, and the two ranges must not overlap.
+unsafe fn merge_moves<T, K: Ord>(
+    src: *const T,
+    alen: usize,
+    blen: usize,
+    key: &(impl Fn(&T) -> K + ?Sized),
+    dst: *mut T,
+) {
+    let (mut i, mut j, mut w) = (0, alen, 0);
+    let bend = alen + blen;
+    while i < alen && j < bend {
+        let take_a = key(&*src.add(i)) <= key(&*src.add(j));
+        let from = if take_a { &mut i } else { &mut j };
+        std::ptr::write(dst.add(w), std::ptr::read(src.add(*from)));
+        *from += 1;
         w += 1;
     }
-    while i < a.len() {
-        out[w] = a[i].clone();
-        i += 1;
-        w += 1;
+    if i < alen {
+        std::ptr::copy_nonoverlapping(src.add(i), dst.add(w), alen - i);
+        w += alen - i;
     }
-    while j < b.len() {
-        out[w] = b[j].clone();
-        j += 1;
-        w += 1;
+    if j < bend {
+        std::ptr::copy_nonoverlapping(src.add(j), dst.add(w), bend - j);
+        w += bend - j;
     }
+    debug_assert_eq!(w, bend);
 }
 
 /// LSD radix sort of `u64` keys, 8 bits per pass, skipping dead digits.
@@ -177,6 +207,34 @@ mod tests {
                 assert!(w[0] >= w[1]);
             }
         });
+    }
+
+    #[test]
+    fn ping_pong_parity_odd_and_even_merge_rounds() {
+        // The merge loop runs exactly log2(next_power_of_two(t)) rounds
+        // on large inputs: t=2 -> 1 round (odd: the merged data ends in
+        // the scratch and must be copied back), t=4 -> 2 rounds (even:
+        // it ends in `v`), t=7 -> 8 runs -> 3 rounds (odd again).  All
+        // parities must produce the identical sorted output.
+        for t in [2usize, 4, 7, 8] {
+            with_threads(t, || {
+                for n in [8192usize, 10_000, 65_536, 100_001] {
+                    let mut v = random_vec(n, 1000 + (t * n) as u64);
+                    let mut expect = v.clone();
+                    expect.sort_unstable();
+                    par_sort(&mut v);
+                    assert_eq!(v, expect, "t={t} n={n}");
+                    // Pre-sorted and reverse-sorted inputs stress the
+                    // copy tails of the move-based merge.
+                    let mut asc: Vec<u64> = (0..n as u64).collect();
+                    par_sort(&mut asc);
+                    assert!(asc.windows(2).all(|w| w[0] <= w[1]));
+                    let mut desc: Vec<u64> = (0..n as u64).rev().collect();
+                    par_sort(&mut desc);
+                    assert_eq!(desc, (0..n as u64).collect::<Vec<_>>(), "t={t} n={n} desc");
+                }
+            });
+        }
     }
 
     #[test]

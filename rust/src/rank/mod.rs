@@ -20,8 +20,28 @@
 //! [`f_metric`] computes the Table 3 quantity `f = (w_s - w_r) / w_s`;
 //! [`choose_ranking`] applies the paper's rule of thumb (side ordering
 //! unless some ranking saves >= 10% of wedges).
+//!
+//! ## Bucket-parallel co-degeneracy
+//!
+//! The co-degeneracy orderings are computed in **rounds of max-degree
+//! peeling** over the shared bucket machinery
+//! ([`MaxBuckets`](crate::prims::bucket::MaxBuckets), the same lazy
+//! bucketing family the peel loops drive): every round claims the
+//! whole current-maximum frontier at once, expands its neighborhoods
+//! in parallel (offsets by [`prefix_sum`], one scatter pass), and
+//! aggregates the degree decrements with the parallel [`histogram`]
+//! primitive — `O(m)` total update work across all rounds, with no
+//! vertex-at-a-time peel loop anywhere.  Within a round, ranks are
+//! assigned in increasing vertex id (the canonical tie-break), which
+//! makes the permutation identical at every thread count.
+
+use std::time::Instant;
 
 use crate::graph::{BipartiteGraph, RankedGraph};
+use crate::prims::bucket::MaxBuckets;
+use crate::prims::histogram::histogram;
+use crate::prims::pool::{parallel_for_chunks, parallel_map, SyncPtr};
+use crate::prims::scan::prefix_sum;
 use crate::prims::sort::par_sort;
 
 /// The five vertex orderings of the ParButterfly framework.
@@ -117,83 +137,132 @@ fn by_key_desc(g: &BipartiteGraph, key: impl Fn(&BipartiteGraph, usize) -> u64) 
     rank
 }
 
-/// Complement (co-)degeneracy: repeatedly peel all vertices of maximum
-/// (log-)degree from the remaining graph; rank in removal order.
+/// The (log-)degree bucket key of the co-degeneracy orderings.
+#[inline]
+pub(crate) fn codeg_bucket_of(d: u64, approx: bool) -> u64 {
+    if approx {
+        if d == 0 {
+            0
+        } else {
+            64 - d.leading_zeros() as u64
+        }
+    } else {
+        d
+    }
+}
+
+/// Complement (co-)degeneracy: repeatedly peel **all** vertices of
+/// maximum (log-)degree from the remaining graph; rank in removal
+/// order, increasing vertex id within a round.
 ///
-/// Bucketing by current degree with lazy entries, mirroring the
-/// Julienne-based implementation in the paper (but walking buckets from
-/// the top).  Returns `rank_of`.
+/// Bucket-parallel rounds over the shared [`MaxBuckets`] walk: each
+/// round claims the whole max-bucket frontier, expands every frontier
+/// neighborhood in one parallel scatter (scan offsets), aggregates the
+/// per-neighbor decrements with the parallel [`histogram`], and
+/// applies one lazy bucket update per touched vertex.  Total update
+/// work is `O(m)` over the full drain; there is no per-vertex peel
+/// loop.  Returns `rank_of`.
 fn co_degeneracy(g: &BipartiteGraph, approx: bool) -> Vec<u32> {
     let n = g.n();
     let nu = g.nu();
-    let bucket_of = |d: usize| -> usize {
-        if approx {
-            if d == 0 {
-                0
-            } else {
-                usize::BITS as usize - (d.leading_zeros() as usize)
-            }
-        } else {
-            d
-        }
-    };
-    let maxd = g.max_degree();
-    let nb = bucket_of(maxd) + 1;
-    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); nb];
-    let mut cur_deg = vec![0usize; n];
-    for gid in 0..n {
-        let d = degree_of(g, gid);
-        cur_deg[gid] = d;
-        buckets[bucket_of(d)].push(gid as u32);
-    }
-    let mut removed = vec![false; n];
+    let mut deg: Vec<u64> = parallel_map(n, |gid| degree_of(g, gid) as u64);
+    let keys: Vec<u64> = parallel_map(n, |gid| codeg_bucket_of(deg[gid], approx));
+    let mut mb = MaxBuckets::new(&keys);
     let mut rank = vec![0u32; n];
     let mut next_rank = 0u32;
-    let mut top = nb as isize - 1;
-    while top >= 0 {
-        // Collect the valid members of the top bucket (lazy deletion:
-        // entries whose degree has since dropped are skipped; they are
-        // re-inserted at their lower bucket on every decrement).
-        let members: Vec<u32> = std::mem::take(&mut buckets[top as usize]);
-        // Filter-and-mark in one pass: lazy bucket entries can contain
-        // duplicates (a vertex is re-pushed on every decrement), so a
-        // vertex is claimed (marked removed) the first time it is seen.
-        let mut valid: Vec<u32> = Vec::new();
-        for x in members {
-            let gid = x as usize;
-            if !removed[gid] && bucket_of(cur_deg[gid]) == top as usize {
-                removed[gid] = true;
-                rank[gid] = next_rank;
-                next_rank += 1;
-                valid.push(x);
-            }
-        }
-        if valid.is_empty() {
-            top -= 1;
-            continue;
-        }
-        for &x in &valid {
-            let gid = x as usize;
-            let nbrs: &[u32] = if gid < nu { g.nbrs_u(gid) } else { g.nbrs_v(gid - nu) };
-            for &w in nbrs {
-                let wg = if gid < nu { nu + w as usize } else { w as usize };
-                if !removed[wg] && cur_deg[wg] > 0 {
-                    cur_deg[wg] -= 1;
-                    // Lazy re-insertion at the (possibly same, for
-                    // approx log-buckets) new bucket; stale entries are
-                    // filtered on extraction.
-                    buckets[bucket_of(cur_deg[wg])].push(wg as u32);
+    while let Some((_key, mut frontier)) = mb.pop_max() {
+        // Canonical intra-round order: increasing vertex id.  This is
+        // what makes the ordering thread-count invariant (the lazy
+        // bucket vec interleaves initial entries and re-pushes).
+        par_sort(&mut frontier);
+        {
+            let rp = SyncPtr(rank.as_mut_ptr());
+            let frontier = &frontier;
+            let base = next_rank;
+            parallel_for_chunks(frontier.len(), |r| {
+                for i in r {
+                    // SAFETY: frontier ids are distinct, one writer each.
+                    unsafe { *rp.get().add(frontier[i] as usize) = base + i as u32 };
                 }
+            });
+        }
+        next_rank += frontier.len() as u32;
+        // Expand the frontier's neighborhoods into a flat key array
+        // (global vertex ids), scan offsets + parallel scatter.
+        let sizes: Vec<usize> =
+            parallel_map(frontier.len(), |i| degree_of(g, frontier[i] as usize));
+        let (offs, total) = prefix_sum(&sizes);
+        let mut touched = vec![0u64; total];
+        {
+            let tp = SyncPtr(touched.as_mut_ptr());
+            let (frontier, offs) = (&frontier, &offs);
+            parallel_for_chunks(frontier.len(), |r| {
+                for i in r {
+                    let gid = frontier[i] as usize;
+                    let base = offs[i];
+                    if gid < nu {
+                        for (j, &v) in g.nbrs_u(gid).iter().enumerate() {
+                            // SAFETY: rows [offs[i], offs[i]+deg) are disjoint.
+                            unsafe { *tp.get().add(base + j) = (nu + v as usize) as u64 };
+                        }
+                    } else {
+                        for (j, &u) in g.nbrs_v(gid - nu).iter().enumerate() {
+                            unsafe { *tp.get().add(base + j) = u as u64 };
+                        }
+                    }
+                }
+            });
+        }
+        // Aggregate decrements per neighbor and apply one lazy bucket
+        // update each.  Claimed (finalized) vertices — including the
+        // frontier itself — ignore updates, matching the sequential
+        // "skip removed neighbors" rule.
+        for (wg, cnt) in histogram(&touched) {
+            let idx = wg as usize;
+            if mb.is_finalized(wg as u32) {
+                continue;
             }
+            deg[idx] = deg[idx].saturating_sub(cnt);
+            mb.update(wg as u32, codeg_bucket_of(deg[idx], approx));
         }
     }
     debug_assert_eq!(next_rank as usize, n);
     rank
 }
 
+/// Wall-clock breakdown of the pre-counting pipeline stages measured
+/// by [`preprocess_timed`] (the parse / CSR stages happen at load time
+/// and are reported by the CLI / the `preprocess_pipeline` bench).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PreprocessTiming {
+    /// [`rank_vertices`]: computing the rank permutation.
+    pub rank_ms: f64,
+    /// [`RankedGraph::new`]: rename + CSR + per-vertex sorts
+    /// (Algorithm 1 proper).
+    pub build_ms: f64,
+}
+
+impl PreprocessTiming {
+    /// Total preprocessing time covered by this breakdown.
+    pub fn total_ms(&self) -> f64 {
+        self.rank_ms + self.build_ms
+    }
+}
+
 /// Preprocess (Algorithm 1) under the chosen ordering.
 pub fn preprocess(g: &BipartiteGraph, ranking: Ranking) -> RankedGraph {
-    RankedGraph::new(g, rank_vertices(g, ranking))
+    preprocess_timed(g, ranking).0
+}
+
+/// [`preprocess`] with a per-stage timing breakdown.
+pub fn preprocess_timed(g: &BipartiteGraph, ranking: Ranking) -> (RankedGraph, PreprocessTiming) {
+    let t0 = Instant::now();
+    let rank_of = rank_vertices(g, ranking);
+    let rank_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let rg = RankedGraph::new(g, rank_of);
+    let build_ms = t1.elapsed().as_secs_f64() * 1e3;
+    (rg, PreprocessTiming { rank_ms, build_ms })
 }
 
 /// The Table 3 metric `f = (w_s - w_r) / w_s` where `w_s` / `w_r` are
@@ -303,6 +372,51 @@ mod tests {
         let rank = rank_vertices(&g, Ranking::CoDegeneracy);
         for u in 0..4 {
             assert!(rank[u] < 4, "max-degree U vertex must be peeled first");
+        }
+    }
+
+    #[test]
+    fn codegeneracy_rounds_match_sequential_reference() {
+        use crate::prims::pool::with_threads;
+        use crate::testutil::rankref::co_degeneracy_seq;
+        for (g, label) in [
+            (gen::chung_lu(150, 220, 2500, 2.1, 13), "cl"),
+            (gen::erdos_renyi(120, 120, 1200, 8), "er"),
+            (gen::complete_bipartite(7, 11), "kb"),
+        ] {
+            for approx in [false, true] {
+                let expect = co_degeneracy_seq(&g, approx);
+                for t in [1usize, 4] {
+                    let got = with_threads(t, || co_degeneracy(&g, approx));
+                    assert_eq!(got, expect, "{label} approx={approx} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codegeneracy_is_thread_count_invariant() {
+        use crate::prims::pool::with_threads;
+        let g = gen::chung_lu(300, 400, 6000, 2.1, 19);
+        for r in [Ranking::CoDegeneracy, Ranking::ApproxCoDegeneracy] {
+            let base = with_threads(1, || rank_vertices(&g, r));
+            for t in [2usize, 8] {
+                assert_eq!(with_threads(t, || rank_vertices(&g, r)), base, "{r:?} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn preprocess_timed_breakdown_is_sane() {
+        let g = gen::erdos_renyi(60, 70, 600, 3);
+        let (rg, timing) = preprocess_timed(&g, Ranking::Degree);
+        assert_eq!(rg.n(), g.n());
+        assert!(timing.rank_ms >= 0.0 && timing.build_ms >= 0.0);
+        assert!(timing.total_ms() >= timing.rank_ms.max(timing.build_ms));
+        // Same graph as the untimed entry point.
+        let rg2 = preprocess(&g, Ranking::Degree);
+        for x in 0..rg.n() {
+            assert_eq!(rg.nbrs(x), rg2.nbrs(x));
         }
     }
 

@@ -8,3 +8,4 @@
 
 pub mod brute;
 pub mod prop;
+pub mod rankref;

@@ -1,0 +1,55 @@
+//! Sequential reference implementation of the co-degeneracy orderings.
+//!
+//! An independent oracle for the bucket-parallel
+//! `rank::co_degeneracy` rounds: no bucket structure, no laziness —
+//! each round scans the live vertices for the maximum (log-)degree,
+//! claims that whole frontier in increasing vertex id (the canonical
+//! intra-round tie-break), then applies the degree decrements
+//! edge by edge.  `O(n * rounds)` — fine at test scale, never used on
+//! the production path.
+
+use crate::graph::BipartiteGraph;
+
+/// `rank_of` under max-first (log-)degree round peeling, canonical
+/// gid-ascending order within each round.
+pub fn co_degeneracy_seq(g: &BipartiteGraph, approx: bool) -> Vec<u32> {
+    let n = g.n();
+    let nu = g.nu();
+    let bucket_of = |d: u64| crate::rank::codeg_bucket_of(d, approx);
+    let mut deg: Vec<u64> = (0..n)
+        .map(|gid| if gid < nu { g.deg_u(gid) } else { g.deg_v(gid - nu) } as u64)
+        .collect();
+    let mut live = vec![true; n];
+    let mut rank = vec![0u32; n];
+    let mut next_rank = 0u32;
+    let mut remaining = n;
+    while remaining > 0 {
+        let top = (0..n).filter(|&i| live[i]).map(|i| bucket_of(deg[i])).max().unwrap();
+        let frontier: Vec<usize> =
+            (0..n).filter(|&i| live[i] && bucket_of(deg[i]) == top).collect();
+        for &x in &frontier {
+            live[x] = false;
+            rank[x] = next_rank;
+            next_rank += 1;
+        }
+        remaining -= frontier.len();
+        for &x in &frontier {
+            if x < nu {
+                for &v in g.nbrs_u(x) {
+                    let wg = nu + v as usize;
+                    if live[wg] {
+                        deg[wg] -= 1;
+                    }
+                }
+            } else {
+                for &u in g.nbrs_v(x - nu) {
+                    let wg = u as usize;
+                    if live[wg] {
+                        deg[wg] -= 1;
+                    }
+                }
+            }
+        }
+    }
+    rank
+}

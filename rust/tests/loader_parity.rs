@@ -1,0 +1,135 @@
+//! Loader parity: the chunked parallel edge-list parser must be
+//! observationally identical to the sequential scan — byte-identical
+//! graphs on every golden dataset and *byte-identical error messages*
+//! (line numbers included) on every malformed-input case — at one
+//! thread and under real fork-join.
+
+use std::path::PathBuf;
+
+use parbutterfly::graph::{gen, io};
+use parbutterfly::prims::pool::with_threads;
+
+const GOLDEN: [&str; 6] =
+    ["davis.txt", "k6x7.txt", "er20x25.txt", "er16x16.txt", "cl30x20.txt", "blocks12.txt"];
+
+fn golden_path(file: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(file)
+}
+
+fn write_tmp(name: &str, contents: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("pb_loader_parity");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    std::fs::write(&path, contents).unwrap();
+    path
+}
+
+#[test]
+fn golden_datasets_parse_byte_identically() {
+    for file in GOLDEN {
+        let path = golden_path(file);
+        let serial = io::parse_edge_list_serial(&path)
+            .unwrap_or_else(|e| panic!("{file}: serial parse: {e:#}"));
+        for t in [1usize, 4, 8] {
+            let par = with_threads(t, || io::parse_edge_list_parallel(&path))
+                .unwrap_or_else(|e| panic!("{file}: parallel parse (t={t}): {e:#}"));
+            assert_eq!(par, serial, "{file}: parallel != serial at t={t}");
+        }
+        // The auto-dispatching entry point agrees too.
+        let auto = io::parse_edge_list(&path).unwrap();
+        assert_eq!(auto, serial, "{file}: auto path");
+    }
+}
+
+#[test]
+fn large_generated_file_crosses_the_parallel_threshold_identically() {
+    // ~2 MB of edge list: load_edge_list takes the chunked path on its
+    // own above PAR_MIN_BYTES; the built CSR must match the serial one.
+    let g = gen::chung_lu(4_000, 6_000, 150_000, 2.1, 31);
+    let dir = std::env::temp_dir().join("pb_loader_parity");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("big.txt");
+    io::save_edge_list(&g, &path).unwrap();
+    assert!(std::fs::metadata(&path).unwrap().len() as usize >= io::PAR_MIN_BYTES);
+    let serial = io::parse_edge_list_serial(&path).unwrap();
+    for t in [1usize, 4, 8] {
+        let auto = with_threads(t, || io::parse_edge_list(&path)).unwrap();
+        assert_eq!(auto, serial, "t={t}");
+    }
+    let loaded = with_threads(8, || io::load_edge_list(&path)).unwrap();
+    assert_eq!(loaded.nu(), g.nu());
+    assert_eq!(loaded.nv(), g.nv());
+    assert_eq!(loaded.edges(), g.edges());
+}
+
+/// The malformed-input corpus: (name, contents).  Every case must
+/// produce the *same* error string from both parse paths, and the
+/// expected line marker must appear in it.
+fn malformed_cases() -> Vec<(&'static str, String, &'static str)> {
+    let mut cases = vec![
+        ("neg.txt", "0 1\n-3 2\n".to_string(), "line 2"),
+        ("alpha.txt", "0 1\nfoo 2\n".to_string(), "line 2"),
+        ("oob.txt", "# bip 2 2\n0 1\n0 5\n".to_string(), "line 3"),
+        ("short.txt", "0 1\n7\n".to_string(), "line 2"),
+        // Both ids wrong on one line: the u failure must win, exactly
+        // as the sequential scan reports it.
+        ("lonely.txt", "0 1\nfoo\n".to_string(), "bad u id"),
+        ("k0.txt", "% bip\n1 1\n0 1\n".to_string(), "line 3"),
+        ("badhdr.txt", "# bip 2\n0 1\n".to_string(), "line 1"),
+        ("crlf_neg.txt", "# bip 9 9\r\n0 1\r\n0 1\r\n-7 2\r\n".to_string(), "line 4"),
+        ("crlf_oob.txt", "# bip 2 2\r\n0 1\r\n3 0\r\n".to_string(), "line 3"),
+    ];
+    // Errors deep inside a big file: the failing line lands in a late
+    // chunk, so the stitched line numbering is what reports it.
+    let mut big = String::from("# bip 100 100\n");
+    for i in 0..5_000u32 {
+        big.push_str(&format!("{} {}\n", i % 100, (i * 7) % 100));
+    }
+    big.push_str("12 bogus\n"); // line 5002
+    cases.push(("deep.txt", big, "line 5002"));
+    let mut big2 = String::from("% konect-style\n");
+    for i in 0..3_000u32 {
+        big2.push_str(&format!("{} {}\n", 1 + i % 50, 1 + (i * 3) % 50));
+    }
+    big2.push_str("0 7\n"); // line 3002: KONECT ids are 1-indexed
+    cases.push(("deep_konect.txt", big2, "line 3002"));
+    cases
+}
+
+#[test]
+fn malformed_inputs_report_identical_line_numbered_errors() {
+    for (name, contents, marker) in malformed_cases() {
+        let path = write_tmp(name, &contents);
+        let serial_err = io::parse_edge_list_serial(&path)
+            .err()
+            .unwrap_or_else(|| panic!("{name}: serial path accepted malformed input"))
+            .to_string();
+        assert!(
+            serial_err.contains(marker),
+            "{name}: serial error {serial_err:?} lacks {marker:?}"
+        );
+        for t in [1usize, 4, 8] {
+            let par_err = with_threads(t, || io::parse_edge_list_parallel(&path))
+                .err()
+                .unwrap_or_else(|| panic!("{name}: parallel path accepted malformed input (t={t})"))
+                .to_string();
+            assert_eq!(par_err, serial_err, "{name}: error text diverged at t={t}");
+        }
+    }
+}
+
+#[test]
+fn crlf_files_parse_identically_on_both_paths() {
+    for (name, contents) in [
+        ("crlf_plain.txt", "# bip 3 3\r\n# a comment\r\n0 1\r\n2 2\r\n"),
+        ("crlf_konect.txt", "% bip unweighted\r\n1 1 1 99\r\n2 2\r\n"),
+        ("crlf_mixed.txt", "# bip 4 4\r\n0 1\n1 2\r\n3 3\n"),
+    ] {
+        let path = write_tmp(name, contents);
+        let serial = io::parse_edge_list_serial(&path).unwrap();
+        for t in [1usize, 4] {
+            let par = with_threads(t, || io::parse_edge_list_parallel(&path)).unwrap();
+            assert_eq!(par, serial, "{name} t={t}");
+        }
+    }
+}

@@ -430,6 +430,89 @@ fn prop_thread_count_invariance() {
 }
 
 #[test]
+fn prop_every_ranking_is_a_valid_permutation() {
+    for threads in [1usize, 4] {
+        parbutterfly::prims::pool::with_threads(threads, || {
+            check(&format!("rank_vertices is a permutation (t={threads})"), 15, |g| {
+                let bg = g.bipartite(16, 120);
+                for r in Ranking::ALL {
+                    let rank = parbutterfly::rank::rank_vertices(&bg, r);
+                    prop_assert_eq(rank.len(), bg.n())?;
+                    let mut seen = vec![false; bg.n()];
+                    for &x in &rank {
+                        prop_assert(
+                            (x as usize) < bg.n() && !seen[x as usize],
+                            format!("{r:?}: rank {x} repeated or out of range"),
+                        )?;
+                        seen[x as usize] = true;
+                    }
+                }
+                Ok(())
+            });
+        });
+    }
+}
+
+#[test]
+fn prop_degree_rankings_are_rank_monotone_in_degree() {
+    check("Degree/ApproxDegree order by (log-)degree", 20, |g| {
+        let bg = g.bipartite(16, 140);
+        let deg = |gid: usize| {
+            if gid < bg.nu() {
+                bg.deg_u(gid)
+            } else {
+                bg.deg_v(gid - bg.nu())
+            }
+        };
+        let checks: Vec<(Ranking, Box<dyn Fn(usize) -> u64>)> = vec![
+            (Ranking::Degree, Box::new(|d| d as u64)),
+            (Ranking::ApproxDegree, Box::new(|d| 64 - (d as u64 + 1).leading_zeros() as u64)),
+        ];
+        for (r, key) in checks {
+            let rank = parbutterfly::rank::rank_vertices(&bg, r);
+            let mut by_rank = vec![0usize; bg.n()];
+            for gid in 0..bg.n() {
+                by_rank[rank[gid] as usize] = gid;
+            }
+            for w in by_rank.windows(2) {
+                prop_assert(
+                    key(deg(w[0])) >= key(deg(w[1])),
+                    format!("{r:?}: key increases along ranks at {} -> {}", w[0], w[1]),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codegeneracy_matches_sequential_reference_and_wedge_totals() {
+    // The bucket-parallel co-degeneracy rounds must reproduce the
+    // sequential round-peeling reference exactly — same permutation,
+    // hence the same processed-wedge totals (the f-metric numerator) —
+    // on the degenerate single-thread path and under real fork-join.
+    use parbutterfly::testutil::rankref::co_degeneracy_seq;
+    for threads in [1usize, 4] {
+        parbutterfly::prims::pool::with_threads(threads, || {
+            check(&format!("codeg rounds == sequential reference (t={threads})"), 10, |g| {
+                let bg = g.bipartite(14, 110);
+                for (r, approx) in
+                    [(Ranking::CoDegeneracy, false), (Ranking::ApproxCoDegeneracy, true)]
+                {
+                    let got = parbutterfly::rank::rank_vertices(&bg, r);
+                    let expect = co_degeneracy_seq(&bg, approx);
+                    prop_assert(got == expect, format!("{r:?}: permutation diverged"))?;
+                    let wg = parbutterfly::graph::RankedGraph::new(&bg, got).wedges_processed();
+                    let we = parbutterfly::graph::RankedGraph::new(&bg, expect).wedges_processed();
+                    prop_assert_eq(wg, we)?;
+                }
+                Ok(())
+            });
+        });
+    }
+}
+
+#[test]
 fn prop_wedge_counts_match_ranked_graph() {
     check("f-metric wedges equal enumerated wedges", 15, |g| {
         let bg = g.bipartite(14, 90);

@@ -1,0 +1,276 @@
+#!/usr/bin/env python3
+"""Model harness seeding BENCH_preprocess.json.
+
+Mirrors `cargo bench --bench preprocess_pipeline` at the algorithmic
+level: the pre-counting pipeline stages — edge-list parsing (sequential
+line scan vs the chunked line-boundary parser with scan stitching),
+CSR construction (sort + dedup + offset recovery), each of the five
+vertex rankings (co-degeneracy via the round-based max-bucket peel,
+not vertex-at-a-time), and the PREPROCESS build (rank rename +
+per-vertex sort).  Rows are emitted for the 1/4/8-thread sweep the
+Rust bench performs; the Python model executes the chunk-structured
+algorithms serially (pure-Python threads cannot show real speedups),
+so the per-thread rows measure the *decomposition overhead* only and
+are superseded by native numbers.
+
+This exists because the authoring container has no Rust toolchain
+(same situation as scripts/bench_intersect_model.py and
+scripts/bench_peel_model.py in the previous PRs); the JSON it writes
+is labeled `"harness": "python-model"` and is overwritten by
+`cargo bench --bench preprocess_pipeline`.
+
+Usage: python3 scripts/bench_preprocess_model.py
+"""
+import json
+import time
+from pathlib import Path
+
+from bench_intersect_model import chung_lu, erdos_renyi
+
+WORKLOADS = [
+    ("er", "ER near-regular 3000x3000 m~60k (model)", erdos_renyi(3_000, 3_000, 60_000, 103)),
+    ("cl", "Chung-Lu beta=2.1 5000x8000 m~120k (model)", chung_lu(5_000, 8_000, 120_000, 2.1, 105)),
+    ("clL", "Chung-Lu beta=2.1 10000x15000 m~300k (model)",
+     chung_lu(10_000, 15_000, 300_000, 2.1, 107)),
+]
+
+THREADS = [1, 4, 8]
+
+
+def render_edge_list(nu, nv, edges):
+    return ("# bip %d %d\n" % (nu, nv)) + "".join("%d %d\n" % e for e in edges)
+
+
+def parse_serial(text):
+    header = None
+    edges = []
+    for lineno, line in enumerate(text.split("\n")):
+        t = line.strip()
+        if not t or t.startswith("%"):
+            continue
+        if t.startswith("# bip"):
+            parts = t.split()
+            header = (int(parts[2]), int(parts[3]))
+            continue
+        if t.startswith("#"):
+            continue
+        toks = t.split()
+        u, v = int(toks[0]), int(toks[1])
+        if header is not None:
+            assert u < header[0] and v < header[1], f"line {lineno + 1}"
+        edges.append((u, v))
+    return header, edges
+
+
+def parse_chunked(text, nchunks):
+    """The chunked parser's structure: prologue scan, line-boundary
+    chunk split, independent chunk tokenization, prefix-sum stitch."""
+    # Prologue: leading comment/header lines.
+    header = None
+    pos = 0
+    while pos < len(text):
+        end = text.find("\n", pos)
+        end = len(text) if end < 0 else end
+        t = text[pos:end].strip()
+        if t.startswith("# bip"):
+            parts = t.split()
+            header = (int(parts[2]), int(parts[3]))
+        elif t and not t.startswith("#") and not t.startswith("%"):
+            break
+        pos = end + 1
+    data_start = min(pos, len(text))
+    span = len(text) - data_start
+    bounds = [data_start]
+    for c in range(1, nchunks):
+        raw = max(data_start + c * span // nchunks, bounds[-1])
+        nl = text.find("\n", raw)
+        bounds.append(len(text) if nl < 0 else nl + 1)
+    bounds.append(len(text))
+    chunk_edges = []
+    for c in range(nchunks):
+        edges = []
+        for line in text[bounds[c]:bounds[c + 1]].split("\n"):
+            t = line.strip()
+            if not t or t.startswith("#") or t.startswith("%"):
+                continue
+            toks = t.split()
+            u, v = int(toks[0]), int(toks[1])
+            if header is not None:
+                assert u < header[0] and v < header[1]
+            edges.append((u, v))
+        chunk_edges.append(edges)
+    # Stitch (the Rust path prefix-sums chunk sizes and scatters).
+    out = []
+    for ce in chunk_edges:
+        out.extend(ce)
+    return header, out
+
+
+def csr_build(nu, nv, edges):
+    """Sort + dedup + boundary offsets + (v, eid) partition — the shape
+    of the parallel BipartiteGraph::from_edges."""
+    packed = sorted(set((u << 32) | v for (u, v) in edges))
+    m = len(packed)
+    adj_u = [e & 0xFFFFFFFF for e in packed]
+    vkeys = sorted(((packed[eid] & 0xFFFFFFFF) << 32) | eid for eid in range(m))
+    adj_v = [packed[k & 0xFFFFFFFF] >> 32 for k in vkeys]
+    eid_v = [k & 0xFFFFFFFF for k in vkeys]
+    return adj_u, adj_v, eid_v
+
+
+def bucket_of(d, approx):
+    if not approx:
+        return d
+    return 0 if d == 0 else d.bit_length()
+
+
+def codeg_rounds(nu, nv, adj_u, adj_v, approx):
+    """Round-based max-bucket co-degeneracy (the bucket-parallel
+    model): claim the whole max frontier, histogram the decrements."""
+    n = nu + nv
+    deg = [len(adj_u[g]) if g < nu else len(adj_v[g - nu]) for g in range(n)]
+    nb = max((bucket_of(d, approx) for d in deg), default=-1) + 1
+    buckets = [[] for _ in range(nb)]
+    cur = [bucket_of(d, approx) for d in deg]
+    for g in range(n):
+        buckets[cur[g]].append(g)
+    fin = [False] * n
+    rank = [0] * n
+    nxt = 0
+    top = nb - 1
+    while top >= 0:
+        if not buckets[top]:
+            top -= 1
+            continue
+        members, buckets[top] = buckets[top], []
+        frontier = []
+        for x in members:
+            if not fin[x] and cur[x] == top:
+                fin[x] = True
+                frontier.append(x)
+        if not frontier:
+            continue
+        frontier.sort()
+        for i, x in enumerate(frontier):
+            rank[x] = nxt + i
+        nxt += len(frontier)
+        hist = {}
+        for x in frontier:
+            for w in (adj_u[x] if x < nu else adj_v[x - nu]):
+                wg = nu + w if x < nu else w
+                hist[wg] = hist.get(wg, 0) + 1
+        for wg, cnt in hist.items():
+            if fin[wg]:
+                continue
+            deg[wg] -= cnt
+            nk = bucket_of(deg[wg], approx)
+            if nk != cur[wg]:
+                cur[wg] = nk
+                buckets[nk].append(wg)
+    assert nxt == n
+    return rank
+
+
+def adjacency(nu, nv, edges):
+    adj_u = [[] for _ in range(nu)]
+    adj_v = [[] for _ in range(nv)]
+    for (u, v) in edges:
+        adj_u[u].append(v)
+        adj_v[v].append(u)
+    return adj_u, adj_v
+
+
+def rank_one(name, nu, nv, adj_u, adj_v):
+    n = nu + nv
+    deg = [len(adj_u[g]) if g < nu else len(adj_v[g - nu]) for g in range(n)]
+
+    def key_rank(keyf):
+        order = sorted(range(n), key=lambda g: (-keyf(g), g))
+        rank = [0] * n
+        for r, g in enumerate(order):
+            rank[g] = r
+        return rank
+
+    if name == "side":
+        return list(range(n))
+    if name == "degree":
+        return key_rank(lambda g: deg[g])
+    if name == "adegree":
+        return key_rank(lambda g: (deg[g] + 1).bit_length())
+    if name == "codeg":
+        return codeg_rounds(nu, nv, adj_u, adj_v, False)
+    assert name == "acodeg"
+    return codeg_rounds(nu, nv, adj_u, adj_v, True)
+
+
+def preprocess_build(nu, nv, edges, rank):
+    """Rank rename + decreasing-rank adjacency sort (Algorithm 1)."""
+    n = nu + nv
+    adj = [[] for _ in range(n)]
+    for eid, (u, v) in enumerate(edges):
+        adj[rank[u]].append((rank[nu + v], eid))
+        adj[rank[nu + v]].append((rank[u], eid))
+    up = [0] * n
+    for x in range(n):
+        adj[x].sort(key=lambda p: -p[0])
+        up[x] = sum(1 for (r, _) in adj[x] if r > x)
+    return adj, up
+
+
+def bench(f, runs=2):
+    samples = []
+    for _ in range(runs):
+        t = time.perf_counter()
+        f()
+        samples.append((time.perf_counter() - t) * 1e3)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def main():
+    rows = []
+    for wl_id, describe, (nu, nv, edges) in WORKLOADS:
+        text = render_edge_list(nu, nv, edges)
+        print(f"[{wl_id}] {describe}: m={len(edges)}")
+        # Parity anchor, mirroring the Rust bench's pre-timing assert.
+        hs, es = parse_serial(text)
+        for nchunks in (2, 4, 8):
+            hp, ep = parse_chunked(text, nchunks)
+            assert (hs, sorted(es)) == (hp, sorted(ep)), f"{wl_id}: chunk parity nchunks={nchunks}"
+            assert es == ep, f"{wl_id}: chunk stitching reordered edges"
+        adj_u, adj_v = adjacency(nu, nv, edges)
+        degree_rank = rank_one("degree", nu, nv, adj_u, adj_v)
+        for t in THREADS:
+            stages = {
+                "parse-serial": lambda: parse_serial(text),
+                "parse-parallel": lambda t=t: parse_chunked(text, max(t, 2)),
+                "csr-build": lambda: csr_build(nu, nv, edges),
+            }
+            for name in ("side", "degree", "adegree", "codeg", "acodeg"):
+                stages[f"rank-{name}"] = lambda nm=name: rank_one(nm, nu, nv, adj_u, adj_v)
+            stages["preprocess-build"] = lambda: preprocess_build(nu, nv, edges, degree_rank)
+            for name, f in stages.items():
+                ms = bench(f)
+                rows.append({"workload": wl_id, "stage": name, "threads": t,
+                             "median_ms": round(ms, 3)})
+                print(f"  t{t}/{name:<18} {ms:10.2f} ms")
+    doc = {
+        "bench": "preprocess_pipeline",
+        "harness": "python-model",
+        "note": ("Algorithmic model measurements (scripts/bench_preprocess_model.py): "
+                 "serial vs chunked parsing, sort/dedup CSR construction, the five "
+                 "rankings with round-based co-degeneracy, and the PREPROCESS build.  "
+                 "The authoring container has no Rust toolchain; the thread column "
+                 "mirrors the Rust sweep but pure-Python rows run the chunk-structured "
+                 "algorithms serially.  `cargo bench --bench preprocess_pipeline` "
+                 "overwrites this file with native numbers."),
+        "threads_swept": THREADS,
+        "rows": rows,
+    }
+    out = Path(__file__).resolve().parent.parent / "BENCH_preprocess.json"
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,387 @@
+#!/usr/bin/env python3
+"""Model validation for the PR's parallel-preprocessing claims.
+
+The authoring container has no Rust toolchain, so the three delicate
+algorithm rewrites are mirrored here bit-for-bit at the algorithmic
+level and fuzzed against their sequential references:
+
+1. **Chunked parser stitching** — random edge-list files (comments,
+   CRLF, KONECT/plain, headers, random malformed lines) parsed by the
+   sequential scan and by the chunk-split + prefix-sum-stitch model at
+   2/3/5/8 chunks: identical edge vectors, identical error *kind and
+   absolute line number* (earliest failure wins).
+2. **Round-based co-degeneracy** — the MaxBuckets + histogram rounds
+   vs a direct sequential round-peel reference, exact and approx
+   (log-bucket) modes: identical permutations; and vs the pre-refactor
+   lazy-bucket loop: identical round *partitions* (the refactor only
+   canonicalized intra-round tie order).
+3. **V-side CSR via (v, eid) sort** — the parallel build's second sort
+   vs the old sequential cursor scatter: identical `adj_v`/`eid_v`.
+
+Usage: python3 scripts/preprocess_model_check.py  (exit 0 = all good)
+"""
+import random
+import sys
+
+
+# ---------------------------------------------------------------- 1. parser
+def parse_serial(text):
+    """Sequential reference: returns ('ok', header, edges) or
+    ('err', kind, lineno0)."""
+    konect = False
+    header = None
+    edges = []
+    for lineno, line in enumerate(text.split("\n")[:-1] if text.endswith("\n")
+                                  else text.split("\n")):
+        t = line.rstrip("\r").strip()
+        if lineno == 0 and t.startswith("%"):
+            konect = True
+        if not t or t.startswith("%"):
+            continue
+        if t.startswith("# bip"):
+            toks = t[len("# bip"):].split()
+            if len(toks) < 2 or not toks[0].isdigit() or not toks[1].isdigit():
+                return ("err", "badheader", lineno)
+            header = (int(toks[0]), int(toks[1]))
+            continue
+        if t.startswith("#"):
+            continue
+        toks = t.split()
+        if len(toks) < 1 or not toks[0].isdigit():
+            return ("err", "badid" if toks else "missing", lineno)
+        if len(toks) < 2:
+            return ("err", "missing", lineno)
+        if not toks[1].isdigit():
+            return ("err", "badid", lineno)
+        u, v = int(toks[0]), int(toks[1])
+        if konect:
+            if u < 1 or v < 1:
+                return ("err", "konect0", lineno)
+            edges.append((u - 1, v - 1))
+        else:
+            if header is not None and (u >= header[0] or v >= header[1]):
+                return ("err", "oob", lineno)
+            edges.append((u, v))
+    return ("ok", header, edges)
+
+
+def parse_chunked(text, nchunks):
+    """The Rust parallel path's structure: prologue, line-boundary
+    chunks, per-chunk first-error, prefix-sum line stitch, serial
+    fallback on late headers."""
+    konect = False
+    header = None
+    pos = 0
+    prologue_lines = 0
+    data_start = len(text)
+    while pos < len(text):
+        nl = text.find("\n", pos)
+        end = len(text) if nl < 0 else nl
+        t = text[pos:end].rstrip("\r").strip()
+        if prologue_lines == 0 and t.startswith("%"):
+            konect = True
+        if not t or t.startswith("%"):
+            pass
+        elif t.startswith("# bip"):
+            toks = t[len("# bip"):].split()
+            if len(toks) < 2 or not toks[0].isdigit() or not toks[1].isdigit():
+                return ("err", "badheader", prologue_lines)
+            header = (int(toks[0]), int(toks[1]))
+        elif t.startswith("#"):
+            pass
+        else:
+            data_start = pos
+            break
+        prologue_lines += 1
+        pos = len(text) if nl < 0 else nl + 1
+    if data_start >= len(text):
+        return ("ok", header, [])
+    span = len(text) - data_start
+    bounds = [data_start]
+    for c in range(1, nchunks):
+        raw = max(data_start + c * span // nchunks, bounds[-1])
+        nl = text.find("\n", raw)
+        bounds.append(len(text) if nl < 0 else nl + 1)
+    bounds.append(len(text))
+
+    chunk_out = []
+    for c in range(nchunks):
+        lo, hi = bounds[c], bounds[c + 1]
+        edges, nlines, err, late = [], 0, None, False
+        p = lo
+        while p < hi:
+            nl = text.find("\n", p, hi)
+            end = hi if nl < 0 else nl
+            t = text[p:end].rstrip("\r").strip()
+            local = nlines
+            nlines += 1
+            p = hi if nl < 0 else nl + 1
+            if not t or t.startswith("%"):
+                continue
+            if t.startswith("# bip"):
+                late = True
+                break
+            if t.startswith("#"):
+                continue
+            toks = t.split()
+            if len(toks) < 1 or not toks[0].isdigit():
+                err = ("badid" if toks else "missing", local)
+                break
+            if len(toks) < 2:
+                err = ("missing", local)
+                break
+            if not toks[1].isdigit():
+                err = ("badid", local)
+                break
+            u, v = int(toks[0]), int(toks[1])
+            if konect:
+                if u < 1 or v < 1:
+                    err = ("konect0", local)
+                    break
+                edges.append((u - 1, v - 1))
+            else:
+                if header is not None and (u >= header[0] or v >= header[1]):
+                    err = ("oob", local)
+                    break
+                edges.append((u, v))
+        chunk_out.append((edges, nlines, err, late))
+    if any(late for (_, _, _, late) in chunk_out):
+        return parse_serial(text)
+    offs = [0]
+    for (_, nlines, _, _) in chunk_out:
+        offs.append(offs[-1] + nlines)
+    for c, (_, _, err, _) in enumerate(chunk_out):
+        if err is not None:
+            kind, local = err
+            return ("err", kind, prologue_lines + offs[c] + local)
+    out = []
+    for (edges, _, _, _) in chunk_out:
+        out.extend(edges)
+    return ("ok", header, out)
+
+
+def random_file(rng):
+    lines = []
+    kind = rng.choice(["plain", "headered", "konect"])
+    if kind == "konect":
+        lines.append("% bip konect")
+    if kind == "headered":
+        lines.append("# bip 40 40")
+    if rng.random() < 0.5:
+        lines.append("# a comment")
+    nlines = rng.randint(0, 60)
+    for _ in range(nlines):
+        r = rng.random()
+        if r < 0.08:
+            lines.append(rng.choice(["# c", "%x", "", "   "]))
+        elif r < 0.13:
+            lines.append(rng.choice(["foo 3", "4", "-2 5", "3 bar", "7 -1", "0 99"]))
+        else:
+            lo = 1 if kind == "konect" else 0
+            lines.append(f"{rng.randint(lo, 39)} {rng.randint(lo, 39)}")
+    if rng.random() < 0.1 and kind != "konect":
+        lines.append("# bip 40 40")  # late header
+        lines.append("5 5")
+    text = "\n".join(lines)
+    if rng.random() < 0.7:
+        text += "\n"
+    if rng.random() < 0.3:
+        text = text.replace("\n", "\r\n")
+    return text
+
+
+def check_parser(trials):
+    rng = random.Random(7)
+    fails = 0
+    for _ in range(trials):
+        text = random_file(rng)
+        ref = parse_serial(text)
+        for nchunks in (2, 3, 5, 8):
+            got = parse_chunked(text, nchunks)
+            if got != ref:
+                print(f"PARSER DIVERGENCE nchunks={nchunks}\n  ref={ref}\n  got={got}\n"
+                      f"  text={text!r}")
+                fails += 1
+    return fails
+
+
+# ------------------------------------------------------------ 2. codegeneracy
+def bucket_of(d, approx):
+    return d if not approx else (0 if d == 0 else d.bit_length())
+
+
+def old_codeg_rounds(nu, nv, adj_u, adj_v, approx):
+    """Pre-refactor lazy-bucket sequential loop; returns the round
+    partition (list of frozensets)."""
+    n = nu + nv
+    deg0 = lambda g: len(adj_u[g]) if g < nu else len(adj_v[g - nu])
+    maxd = max((deg0(g) for g in range(n)), default=0)
+    buckets = [[] for _ in range(bucket_of(maxd, approx) + 1)]
+    cur = [deg0(g) for g in range(n)]
+    for g in range(n):
+        buckets[bucket_of(cur[g], approx)].append(g)
+    removed = [False] * n
+    rounds = []
+    top = len(buckets) - 1
+    while top >= 0:
+        members, buckets[top] = buckets[top], []
+        # Filter-and-mark in one pass: lazy entries contain duplicates,
+        # a vertex is claimed the first time it is seen.
+        valid = []
+        for x in members:
+            if not removed[x] and bucket_of(cur[x], approx) == top:
+                removed[x] = True
+                valid.append(x)
+        if not valid:
+            top -= 1
+            continue
+        rounds.append(frozenset(valid))
+        for x in valid:
+            for w in (adj_u[x] if x < nu else adj_v[x - nu]):
+                wg = nu + w if x < nu else w
+                if not removed[wg] and cur[wg] > 0:
+                    cur[wg] -= 1
+                    buckets[bucket_of(cur[wg], approx)].append(wg)
+    return rounds
+
+
+def seq_ref(nu, nv, adj_u, adj_v, approx):
+    """testutil::rankref::co_degeneracy_seq."""
+    n = nu + nv
+    deg = [len(adj_u[g]) if g < nu else len(adj_v[g - nu]) for g in range(n)]
+    live = [True] * n
+    rank = [0] * n
+    nxt = 0
+    remaining = n
+    rounds = []
+    while remaining:
+        top = max(bucket_of(deg[i], approx) for i in range(n) if live[i])
+        frontier = [i for i in range(n) if live[i] and bucket_of(deg[i], approx) == top]
+        rounds.append(frozenset(frontier))
+        for x in frontier:
+            live[x] = False
+            rank[x] = nxt
+            nxt += 1
+        remaining -= len(frontier)
+        for x in frontier:
+            for w in (adj_u[x] if x < nu else adj_v[x - nu]):
+                wg = nu + w if x < nu else w
+                if live[wg]:
+                    deg[wg] -= 1
+    return rank, rounds
+
+
+def new_codeg(nu, nv, adj_u, adj_v, approx):
+    """rank::co_degeneracy: MaxBuckets pop_max rounds + histogrammed
+    decrements, gid-sorted frontiers."""
+    n = nu + nv
+    deg = [len(adj_u[g]) if g < nu else len(adj_v[g - nu]) for g in range(n)]
+    cur = [bucket_of(d, approx) for d in deg]
+    nb = max(cur, default=-1) + 1
+    buckets = [[] for _ in range(nb)]
+    for g in range(n):
+        buckets[cur[g]].append(g)
+    fin = [False] * n
+    rank = [0] * n
+    nxt = 0
+    rounds = []
+    top = nb - 1
+    while top >= 0:
+        if not buckets[top]:
+            top -= 1
+            continue
+        members, buckets[top] = buckets[top], []
+        frontier = [x for x in members if not fin[x] and cur[x] == top]
+        for x in frontier:
+            fin[x] = True
+        if not frontier:
+            continue
+        frontier.sort()
+        rounds.append(frozenset(frontier))
+        for i, x in enumerate(frontier):
+            rank[x] = nxt + i
+        nxt += len(frontier)
+        hist = {}
+        for x in frontier:
+            for w in (adj_u[x] if x < nu else adj_v[x - nu]):
+                wg = nu + w if x < nu else w
+                hist[wg] = hist.get(wg, 0) + 1
+        for wg, cnt in hist.items():
+            if fin[wg]:
+                continue
+            deg[wg] = max(0, deg[wg] - cnt)
+            nk = bucket_of(deg[wg], approx)
+            if nk != cur[wg]:
+                assert nk < cur[wg]
+                cur[wg] = nk
+                buckets[nk].append(wg)
+    assert nxt == n
+    return rank, rounds
+
+
+def check_codeg(trials):
+    rng = random.Random(42)
+    fails = 0
+    for _ in range(trials):
+        nu, nv = rng.randint(1, 14), rng.randint(1, 14)
+        edges = set()
+        for _ in range(rng.randint(0, nu * nv)):
+            edges.add((rng.randrange(nu), rng.randrange(nv)))
+        adj_u = [sorted(v for (u, v) in edges if u == uu) for uu in range(nu)]
+        adj_v = [sorted(u for (u, v) in edges if v == vv) for vv in range(nv)]
+        for approx in (False, True):
+            r_seq, rounds_seq = seq_ref(nu, nv, adj_u, adj_v, approx)
+            r_new, rounds_new = new_codeg(nu, nv, adj_u, adj_v, approx)
+            rounds_old = old_codeg_rounds(nu, nv, adj_u, adj_v, approx)
+            if r_new != r_seq:
+                print(f"CODEG PERMUTATION DIVERGENCE approx={approx}")
+                fails += 1
+            if rounds_new != rounds_seq or rounds_new != rounds_old:
+                print(f"CODEG ROUND PARTITION DIVERGENCE approx={approx}")
+                fails += 1
+    return fails
+
+
+# ------------------------------------------------------------- 3. V-side CSR
+def check_vside(trials):
+    rng = random.Random(5)
+    fails = 0
+    for _ in range(trials):
+        nu, nv = rng.randint(1, 20), rng.randint(1, 20)
+        edges = {(rng.randrange(nu), rng.randrange(nv))
+                 for _ in range(rng.randint(0, 2 * nu * nv))}
+        packed = sorted((u << 32) | v for (u, v) in edges)
+        m = len(packed)
+        # Old sequential cursor scatter.
+        off_v = [0] * (nv + 1)
+        for e in packed:
+            off_v[(e & 0xFFFFFFFF) + 1] += 1
+        for i in range(nv):
+            off_v[i + 1] += off_v[i]
+        adj_v_old, eid_v_old = [0] * m, [0] * m
+        cursor = off_v[:]
+        for eid, e in enumerate(packed):
+            v = e & 0xFFFFFFFF
+            adj_v_old[cursor[v]] = e >> 32
+            eid_v_old[cursor[v]] = eid
+            cursor[v] += 1
+        # New (v, eid) sort.
+        vkeys = sorted(((packed[eid] & 0xFFFFFFFF) << 32) | eid for eid in range(m))
+        adj_v_new = [packed[k & 0xFFFFFFFF] >> 32 for k in vkeys]
+        eid_v_new = [k & 0xFFFFFFFF for k in vkeys]
+        off_v_new = [sum(1 for k in vkeys if (k >> 32) < x) for x in range(nv + 1)]
+        if (adj_v_old, eid_v_old, off_v) != (adj_v_new, eid_v_new, off_v_new):
+            print("V-SIDE CSR DIVERGENCE")
+            fails += 1
+    return fails
+
+
+def main():
+    fails = check_parser(600) + check_codeg(400) + check_vside(300)
+    print(f"parser: 600 files x 4 chunkings; codeg: 400 graphs x 2 modes; "
+          f"vside: 300 graphs — failures: {fails}")
+    sys.exit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()
