@@ -12,7 +12,7 @@
 //!   6. tip + wing decomposition,
 //!   7. sequential baselines for the headline speedup metric.
 //!
-//! The run is recorded in EXPERIMENTS.md §E2E.
+//! A full run’s timings land in the `BENCH_*.json` snapshots.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example e2e_pipeline

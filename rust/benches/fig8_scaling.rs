@@ -1,6 +1,6 @@
 //! Figures 8/9: thread-count sweeps for per-vertex/per-edge counting.
 //! (Single-core substrate: records fork-join overhead, not speedup —
-//! see DESIGN.md §2.)
+//! see ARCHITECTURE.md.)
 use parbutterfly::bench_support::figures;
 fn main() {
     figures::scaling_figure("fig8", false);

@@ -1,7 +1,7 @@
 //! Parameterized regenerators for every table and figure of §6.
 //!
 //! Each `cargo bench` target is a thin `harness = false` binary
-//! delegating here (the mapping lives in DESIGN.md §3).  All output
+//! delegating here (the mapping rationale lives in ARCHITECTURE.md).  All output
 //! uses [`super::harness`]'s human + `BENCHROW` machine formats.
 //!
 //! Configuration axes follow the paper's notation: aggregation rows
@@ -188,7 +188,7 @@ pub fn scaling_figure(bench_name: &str, cache_opt: bool) {
         bench_name,
         "thread sweep on clL; paper: Figs 8/9 (17/18 with cache opt).  NOTE: the bench \
          substrate has ONE physical core — the sweep exercises the fork-join machinery \
-         and records overhead, it cannot show real speedup (DESIGN.md §2).",
+         and records overhead, it cannot show real speedup (see ARCHITECTURE.md).",
     );
     let wl = workloads::build("clL");
     let ranking = choose_ranking(&wl.graph);
@@ -502,7 +502,7 @@ pub fn dense_core_bench(bench_name: &str) {
 }
 
 /// Extra ablation: wedge counts per ranking (drives the Fig 10 story
-/// without timing noise) — used by fig10 and EXPERIMENTS.md.
+/// without timing noise) — used by fig10 and the `BENCH_*.json` snapshots.
 pub fn wedge_ablation(bench_name: &str) {
     banner(bench_name, "wedges processed per ranking (exact counts)");
     for wl_id in COUNTING_SUITE {

@@ -6,7 +6,7 @@
 //! * human rows — the same row/series structure as the paper's table
 //!   or figure;
 //! * machine rows — `BENCHROW <bench> <workload> <config> <median_ms>`
-//!   lines that EXPERIMENTS.md records.
+//!   lines the `BENCH_*.json` snapshots record.
 //!
 //! Timing: `warmup` un-timed runs, then `runs` timed runs; the median
 //! is reported (min/max retained for dispersion).

@@ -2,7 +2,7 @@
 //!
 //! Each workload is a deterministic synthetic graph chosen to
 //! reproduce the *structural regime* of one of the paper's KONECT
-//! datasets (see DESIGN.md §2 for the mapping rationale):
+//! datasets (see ARCHITECTURE.md for the mapping rationale):
 //!
 //! | id       | family            | regime it stands in for              |
 //! |----------|-------------------|--------------------------------------|

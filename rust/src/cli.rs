@@ -9,6 +9,9 @@
 //!                     [--count-engine wedges|intersect] [--agg A]
 //!                     [--buckets julienne|fibheap] [--threads T]
 //! parbutterfly approx --graph FILE --method edge|colorful --p P [--seed S]
+//! parbutterfly dynamic --stream FILE [--graph FILE] [--batch N] [--rebuild-fraction F]
+//!                     [--engine wedges|intersect] [--rank R] [--threads T]
+//!                     [--verify] [--per-batch]
 //! parbutterfly dense  --graph FILE [--backend auto|rust|pjrt]  # dense-core path
 //! parbutterfly backends                       # dense backend availability
 //! parbutterfly artifacts                      # list PJRT artifacts (feature pjrt)
@@ -18,10 +21,11 @@ use std::collections::HashMap;
 use std::path::Path;
 
 use crate::coordinator::{
-    count_report, tip_report, wing_report, Coordinator, CountConfig, CountMode, CountReport,
-    PeelConfig,
+    count_report, replay_stream, tip_report, wing_report, Coordinator, CountConfig, CountMode,
+    CountReport, PeelConfig,
 };
 use crate::count::{sparsify, BflyAgg, CountOpts, Engine, WedgeAgg};
+use crate::dynamic::{stream, DynOpts};
 use crate::graph::{gen, io, BipartiteGraph};
 use crate::peel::{BucketKind, PeelEngine, PeelSide};
 use crate::rank::Ranking;
@@ -116,6 +120,7 @@ fn run_inner(argv: &[String]) -> anyhow::Result<()> {
         "count" => cmd_count(&args),
         "peel" => cmd_peel(&args),
         "approx" => cmd_approx(&args),
+        "dynamic" => cmd_dynamic(&args),
         "dense" => cmd_dense(&args),
         "backends" => cmd_backends(),
         "artifacts" => cmd_artifacts(),
@@ -127,7 +132,7 @@ fn run_inner(argv: &[String]) -> anyhow::Result<()> {
 }
 
 const HELP: &str = "parbutterfly — parallel butterfly computations (Shi & Shun 2019)
-commands: gen, info, count, peel, approx, dense, backends, artifacts
+commands: gen, info, count, peel, approx, dynamic, dense, backends, artifacts
 run `parbutterfly <cmd> --help-flags` or see rust/src/cli.rs for flags";
 
 fn cmd_gen(args: &Args) -> anyhow::Result<()> {
@@ -292,6 +297,91 @@ fn cmd_approx(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_dynamic(args: &Args) -> anyhow::Result<()> {
+    let spath = args
+        .get("stream")
+        .ok_or_else(|| anyhow::anyhow!("--stream FILE required (lines: `[ts] op u v`)"))?;
+    let events = stream::parse_stream(Path::new(spath))?;
+    // Batches split on timestamp/op changes; the cap bounds one batch
+    // (0 = unbounded).
+    let batches = stream::group_batches(&events, args.get_usize("batch", 1024));
+    // Start from --graph when given, otherwise from an empty graph
+    // that grows as the stream names vertices.
+    let g0 = match args.get("graph") {
+        Some(p) => io::load_edge_list(Path::new(p))?,
+        None => BipartiteGraph::from_edges(0, 0, &[]),
+    };
+    // Unlike the lenient static `count` defaults, a replay misconfig
+    // silently changes what every batch measures — reject typos on
+    // every knob this subcommand reads.
+    for key in ["batch", "threads"] {
+        if let Some(s) = args.get(key) {
+            let ok = s.parse::<usize>().map(|x| key != "threads" || x > 0).unwrap_or(false);
+            anyhow::ensure!(ok, "bad --{key} {s:?} (need a positive integer)");
+        }
+    }
+    let mut copts = count_opts(args);
+    if let Some(s) = args.get("engine") {
+        copts.engine = Engine::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown counting engine {s:?} (wedges|intersect)"))?;
+    }
+    if let Some(s) = args.get("rank") {
+        copts.ranking = Ranking::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown ranking {s:?} (side|degree|adegree|codeg|acodeg)")
+        })?;
+    }
+    let mut dopts = DynOpts { count: copts, ..Default::default() };
+    if let Some(f) = args.get("rebuild-fraction") {
+        dopts.rebuild_fraction = f
+            .parse::<f64>()
+            .ok()
+            .filter(|x| *x >= 0.0)
+            .ok_or_else(|| anyhow::anyhow!("bad --rebuild-fraction {f:?} (need a float >= 0)"))?;
+    }
+    let verify = args.has("verify");
+    let (dg, rep) = with_threads_arg(args, || replay_stream(g0, &batches, &dopts, verify));
+    if args.has("per-batch") {
+        for (i, o) in rep.outcomes.iter().enumerate() {
+            println!(
+                "batch {i:>4} {:<6} applied {:>6} skipped {:>4} delta {:>8} total {:>10} \
+                 [{}] {:.2} ms",
+                o.kind.name(),
+                o.applied,
+                o.skipped,
+                o.delta,
+                o.total,
+                o.path.name(),
+                o.millis
+            );
+        }
+    }
+    println!(
+        "replayed {} events in {} batches: {} inserted, {} deleted, {} no-ops",
+        events.len(),
+        rep.batches,
+        rep.inserted,
+        rep.deleted,
+        rep.skipped
+    );
+    let g = dg.graph();
+    println!(
+        "graph now {} x {}, {} edges; butterflies = {} ({} delta batches, {} recounts, \
+         {:.2} ms total)",
+        g.nu(),
+        g.nv(),
+        g.m(),
+        rep.total,
+        rep.delta_batches,
+        rep.recount_batches,
+        rep.millis
+    );
+    if let Some(ok) = rep.verified {
+        anyhow::ensure!(ok, "incremental counts diverge from the static recount");
+        println!("verify: incremental counts match the full static recount");
+    }
+    Ok(())
+}
+
 fn cmd_dense(args: &Args) -> anyhow::Result<()> {
     let g = load(args)?;
     // --backend (auto | rust | pjrt | none) overrides the
@@ -409,5 +499,60 @@ mod tests {
                 .map(|s| s.to_string())
                 .collect();
         assert!(run_inner(&argv).is_err(), "unknown peel engine must be rejected");
+    }
+
+    #[test]
+    fn dynamic_replays_a_stream() {
+        let dir = std::env::temp_dir().join("pb_cli_dyn_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let spath = dir.join("stream.txt");
+        // Build Fig. 1, then remove one edge of the 3-butterfly core.
+        std::fs::write(
+            &spath,
+            "# fig1 as a stream\n1 + 0 0\n1 + 0 1\n1 + 0 2\n1 + 1 0\n1 + 1 1\n1 + 1 2\n\
+             2 + 2 2\n3 - 0 0\n",
+        )
+        .unwrap();
+        let argv: Vec<String> =
+            ["dynamic", "--stream", spath.to_str().unwrap(), "--verify", "--per-batch"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        run_inner(&argv).unwrap();
+        // Starting from an existing graph + thread override also works.
+        let gpath = dir.join("g.txt");
+        let g = gen::davis_southern_women();
+        io::save_edge_list(&g, &gpath).unwrap();
+        let s2 = dir.join("s2.txt");
+        std::fs::write(&s2, "+ 0 0\n- 0 0\n").unwrap();
+        let argv: Vec<String> = [
+            "dynamic",
+            "--stream",
+            s2.to_str().unwrap(),
+            "--graph",
+            gpath.to_str().unwrap(),
+            "--threads",
+            "2",
+            "--rebuild-fraction",
+            "0.5",
+            "--verify",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        run_inner(&argv).unwrap();
+        let argv: Vec<String> = ["dynamic", "--stream", "/nonexistent/s.txt"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(run_inner(&argv).is_err());
+        // Replay misconfigs are rejected, not silently defaulted.
+        for bad in [["--engine", "intersct"], ["--rank", "degre"], ["--rebuild-fraction", "-1"]] {
+            let argv: Vec<String> = ["dynamic", "--stream", s2.to_str().unwrap(), bad[0], bad[1]]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+            assert!(run_inner(&argv).is_err(), "{bad:?} must be rejected");
+        }
     }
 }

@@ -1,13 +1,20 @@
 //! Coordinator: the framework facade gluing ranking selection,
-//! counting, peeling, approximation, and the pluggable dense-core
-//! backend behind one configuration surface.  This is the layer the
-//! CLI, examples, and benches drive.
+//! counting, peeling, approximation, batch-dynamic maintenance, and
+//! the pluggable dense-core backend behind one configuration surface.
+//! This is the layer the CLI, examples, and benches drive.
+//!
+//! Static runs flow through [`count_report`] / [`tip_report`] /
+//! [`wing_report`]; update streams flow through [`replay_stream`],
+//! which drives a [`DynGraph`] batch by batch and summarizes the
+//! replay in a [`DynReport`] (the dynamic sibling of [`CountReport`]).
 
 use std::time::Instant;
 
 use crate::count::{
     self, count_per_edge, count_per_vertex, CountOpts, VertexCounts,
 };
+use crate::dynamic::stream::Batch;
+use crate::dynamic::{BatchKind, BatchOutcome, DynGraph, DynOpts};
 use crate::graph::BipartiteGraph;
 use crate::peel::{self, PeelEOpts, PeelVOpts, TipResult, WingResult};
 use crate::rank::{choose_ranking, PreprocessTiming, Ranking};
@@ -135,6 +142,87 @@ pub fn wing_report(g: &BipartiteGraph, cfg: &PeelConfig) -> (WingResult, f64) {
     let start = Instant::now();
     let r = peel::peel_edges(g, &be, &cfg.eopts);
     (r, start.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Outcome of replaying an update stream through [`DynGraph`] — the
+/// dynamic-workload sibling of [`CountReport`].
+#[derive(Clone, Debug)]
+pub struct DynReport {
+    /// Batches replayed (after grouping).
+    pub batches: usize,
+    /// Edges actually inserted / deleted across all batches.
+    pub inserted: usize,
+    pub deleted: usize,
+    /// No-op events (duplicates, present inserts, absent deletes).
+    pub skipped: usize,
+    /// Batches answered by the incremental delta walk vs the
+    /// rebuild-threshold full recount.
+    pub delta_batches: usize,
+    pub recount_batches: usize,
+    /// Global butterfly count after the final batch.
+    pub total: u64,
+    /// Wall-clock milliseconds across all batch applications.
+    pub millis: f64,
+    /// Per-batch outcomes, in replay order.
+    pub outcomes: Vec<BatchOutcome>,
+    /// `Some(ok)` when verification against a full static recount of
+    /// the final graph was requested.
+    pub verified: Option<bool>,
+}
+
+/// Replay grouped update batches over `g`, maintaining exact counts
+/// incrementally; with `verify`, the final counts (all three
+/// granularities) are checked against a full static recount through
+/// the same engine.
+pub fn replay_stream(
+    g: BipartiteGraph,
+    batches: &[Batch],
+    opts: &DynOpts,
+    verify: bool,
+) -> (DynGraph, DynReport) {
+    let mut dg = DynGraph::new(g, opts.clone());
+    let mut rep = DynReport {
+        batches: batches.len(),
+        inserted: 0,
+        deleted: 0,
+        skipped: 0,
+        delta_batches: 0,
+        recount_batches: 0,
+        total: dg.total(),
+        millis: 0.0,
+        outcomes: Vec::with_capacity(batches.len()),
+        verified: None,
+    };
+    for b in batches {
+        let out = match b.kind {
+            BatchKind::Insert => dg.insert_edges(&b.edges),
+            BatchKind::Delete => dg.delete_edges(&b.edges),
+        };
+        match b.kind {
+            BatchKind::Insert => rep.inserted += out.applied,
+            BatchKind::Delete => rep.deleted += out.applied,
+        }
+        rep.skipped += out.skipped;
+        rep.millis += out.millis;
+        rep.outcomes.push(out);
+    }
+    // Path attribution comes from the graph's own counters (no-op
+    // batches take neither path), so the report cannot drift from
+    // [`DynGraph`]'s accounting.
+    rep.delta_batches = dg.delta_batches();
+    rep.recount_batches = dg.recount_batches();
+    rep.total = dg.total();
+    if verify {
+        let opts = &opts.count;
+        let vc = count_per_vertex(dg.graph(), opts);
+        let pe = count_per_edge(dg.graph(), opts);
+        let ok = dg.total() == vc.bu.iter().sum::<u64>() / 2
+            && dg.per_vertex_u() == &vc.bu[..]
+            && dg.per_vertex_v() == &vc.bv[..]
+            && dg.per_edge() == &pe[..];
+        rep.verified = Some(ok);
+    }
+    (dg, rep)
 }
 
 /// Default routing cap for [`Coordinator::count_total_routed`]: the
@@ -288,6 +376,28 @@ mod tests {
         assert_eq!(c.count_total_routed(&g, &CountConfig::default()).backend, "rust-dense");
         let big = gen::erdos_renyi(40, 40, 300, 5);
         assert_eq!(c.count_total_routed(&big, &CountConfig::default()).backend, "cpu");
+    }
+
+    #[test]
+    fn replay_stream_matches_static_and_verifies() {
+        let g = gen::erdos_renyi(15, 16, 110, 6);
+        let edges = g.edges();
+        let half = edges.len() / 2;
+        let g0 = BipartiteGraph::from_edges(g.nu(), g.nv(), &edges[..half]);
+        let batches = vec![
+            Batch { kind: BatchKind::Insert, edges: edges[half..].to_vec() },
+            Batch { kind: BatchKind::Delete, edges: edges[..4].to_vec() },
+            Batch { kind: BatchKind::Insert, edges: edges[..4].to_vec() },
+        ];
+        let (dg, rep) = replay_stream(g0, &batches, &DynOpts::default(), true);
+        assert_eq!(rep.batches, 3);
+        assert_eq!(rep.inserted, edges.len() - half + 4);
+        assert_eq!(rep.deleted, 4);
+        assert_eq!(rep.verified, Some(true));
+        assert_eq!(rep.total, brute::total(&g));
+        assert_eq!(dg.total(), rep.total);
+        assert_eq!(rep.outcomes.len(), 3);
+        assert_eq!(rep.delta_batches + rep.recount_batches, 3);
     }
 
     #[test]

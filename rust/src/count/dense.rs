@@ -1,7 +1,7 @@
 //! Dense-core accelerator: butterfly counting for dense blocks through
 //! a [`DenseBackend`] — the pure-Rust tiled reference kernel by
 //! default, the AOT-compiled Layer-1/2 artifacts under the `pjrt`
-//! feature (see DESIGN.md §Hardware-Adaptation).
+//! feature (see ARCHITECTURE.md §Module map).
 //!
 //! Use cases:
 //! * counting whole small-but-dense graphs (fits a backend tile);

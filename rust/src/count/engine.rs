@@ -24,9 +24,10 @@
 //! [`PeelEngine`](crate::peel::PeelEngine) selects between the same
 //! two families for the per-round UPDATE-V/UPDATE-E computations, and
 //! its intersect path reuses this module family's core scratch (the
-//! [`intersect`] dense [`TouchedCounter`](intersect::TouchedCounter)
-//! walk discipline) over live shrinking views instead of the static
-//! [`UpCsr`](crate::graph::UpCsr).
+//! [`intersect`] dense `TouchedCounter` walk discipline — shared
+//! crate-internally, along with its `EdgeStamp` sibling that the
+//! batch-dynamic delta walks use) over live shrinking views instead
+//! of the static [`UpCsr`](crate::graph::UpCsr).
 
 use std::sync::atomic::AtomicU64;
 

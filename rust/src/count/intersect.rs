@@ -74,6 +74,53 @@ impl TouchedCounter {
     }
 }
 
+/// Dense stamp map `id -> edge id` with the same O(#touched)-reset
+/// discipline as [`TouchedCounter`], for walks that need to recall
+/// *which edge* reached a slot rather than how many times.  The
+/// batch-dynamic delta walks (`dynamic`) stamp one endpoint's
+/// adjacency with its edge ids, then test the two-hop frontier
+/// against the stamp to close butterflies and credit the closing
+/// edges.  `u32::MAX` marks an empty slot (edge ids are CSR positions
+/// and [`BipartiteGraph`](crate::graph::BipartiteGraph) construction
+/// guarantees `m < u32::MAX`).
+pub(crate) struct EdgeStamp {
+    slot: Vec<u32>,
+    touched: Vec<u32>,
+}
+
+impl EdgeStamp {
+    pub(crate) fn new(n: usize) -> Self {
+        Self { slot: vec![u32::MAX; n], touched: Vec::new() }
+    }
+
+    /// Stamp slot `i` with `eid`, recording first touches.
+    #[inline]
+    pub(crate) fn set(&mut self, i: u32, eid: u32) {
+        if self.slot[i as usize] == u32::MAX {
+            self.touched.push(i);
+        }
+        self.slot[i as usize] = eid;
+    }
+
+    /// The edge id stamped on slot `i`, if any.
+    #[inline]
+    pub(crate) fn get(&self, i: u32) -> Option<u32> {
+        match self.slot[i as usize] {
+            u32::MAX => None,
+            e => Some(e),
+        }
+    }
+
+    /// Clear all stamped slots without visiting them.
+    #[inline]
+    pub(crate) fn reset(&mut self) {
+        for &i in &self.touched {
+            self.slot[i as usize] = u32::MAX;
+        }
+        self.touched.clear();
+    }
+}
+
 /// Per-worker scratch: the dense second-endpoint counter plus the
 /// current source's per-center prefix lengths so the credit sweep
 /// doesn't redo `up_deg_above`'s binary search.
@@ -242,6 +289,22 @@ mod tests {
             let total = crate::prims::pool::with_threads(t, || total_intersect(&rg));
             assert_eq!(total, brute::total(&g), "threads={t}");
         }
+    }
+
+    #[test]
+    fn edge_stamp_set_get_reset() {
+        let mut s = EdgeStamp::new(8);
+        assert_eq!(s.get(3), None);
+        s.set(3, 17);
+        s.set(5, 0);
+        s.set(3, 18); // overwrite keeps one touched entry
+        assert_eq!(s.get(3), Some(18));
+        assert_eq!(s.get(5), Some(0));
+        assert_eq!(s.get(0), None);
+        s.reset();
+        assert_eq!(s.get(3), None);
+        assert_eq!(s.get(5), None);
+        assert!(s.touched.is_empty());
     }
 
     #[test]

@@ -132,6 +132,17 @@ pub fn count_total(g: &BipartiteGraph, opts: &CountOpts) -> u64 {
 }
 
 /// Total count on an already-preprocessed graph.
+///
+/// ```
+/// use parbutterfly::count::{count_total_ranked, CountOpts};
+/// use parbutterfly::graph::gen;
+/// use parbutterfly::rank::{preprocess, Ranking};
+///
+/// let g = gen::complete_bipartite(3, 4);
+/// let rg = preprocess(&g, Ranking::Degree);
+/// // K_{3,4} holds C(3,2)·C(4,2) = 18 butterflies.
+/// assert_eq!(count_total_ranked(&rg, &CountOpts::default()), 18);
+/// ```
 pub fn count_total_ranked(rg: &RankedGraph, opts: &CountOpts) -> u64 {
     engine_for(opts).total(rg)
 }

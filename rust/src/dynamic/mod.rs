@@ -1,0 +1,897 @@
+//! Batch-dynamic butterfly maintenance.
+//!
+//! The ParButterfly framework (and the paper) counts over a *static*
+//! bipartite graph; this module opens the dynamic workload class: a
+//! [`DynGraph`] wraps [`BipartiteGraph`] with batched
+//! [`insert_edges`](DynGraph::insert_edges) /
+//! [`delete_edges`](DynGraph::delete_edges) and keeps the global,
+//! per-vertex, and per-edge butterfly counts **exact** after every
+//! batch without recounting from scratch.
+//!
+//! ## The update rule
+//!
+//! The per-edge delta structure follows Wang et al. ("Efficient
+//! Butterfly Counting for Large Bipartite Networks"): the butterflies
+//! gained by inserting edge `(u, v)` are exactly the wedge closures
+//! `(u, v, u2, v2)` with `u2 ∈ N(v)`, `v2 ∈ N(u)`, `(u2, v2) ∈ E` —
+//! an intersection walk over only the touched adjacency lists.  For a
+//! **batch** the subtlety is double counting: a butterfly created by
+//! two batch edges would be found from both.  `DynGraph` fixes the
+//! convention with edge ids: batch edges are deduplicated and
+//! parallel-sorted ([`prims::sort`](crate::prims::sort) /
+//! [`prims::scan`](crate::prims::scan)) into CSR order, so their edge
+//! ids ascend, and each new (or destroyed) butterfly is enumerated
+//! exactly once — from its **maximum-edge-id batch edge**, with the
+//! other three edges filtered to "non-batch, or batch with a smaller
+//! id".  Insertions walk the post-insertion graph; deletions walk the
+//! pre-deletion graph; the enumeration credits all four vertices and
+//! all four edges of every butterfly it finds, so the three count
+//! granularities stay consistent (`Σ per-vertex = 2·total`,
+//! `Σ per-edge = 4·total` — debug builds assert this after every
+//! batch).
+//!
+//! The walk itself is the intersect engine's discipline
+//! ([`count::intersect`](crate::count::intersect)): a per-worker dense
+//! stamp (`EdgeStamp`, the sibling of `TouchedCounter`) over one
+//! endpoint's adjacency, a two-hop scan from the other endpoint, and
+//! an O(#touched) reset — batch edges are claimed dynamically
+//! ([`parallel_for_dynamic_with`]) because per-edge wedge counts are
+//! heavily skewed.  Each edge's walk is oriented from whichever side
+//! scans fewer adjacency entries (the degree-ordered choice of the
+//! rank-ordered static walks).
+//!
+//! ## Cost model and the rebuild threshold
+//!
+//! A batch of `b` edges costs `O(m log m)` for the parallel CSR
+//! rebuild plus `O(Σ_{(u,v) ∈ B} min(Σ_{u2 ∈ N(v)} deg(u2),
+//! Σ_{v2 ∈ N(u)} deg(v2)))` for the delta walk — the batch's wedge
+//! frontier, independent of the total butterfly count.  When the
+//! update log outgrows the graph the walk loses to a full recount, so
+//! [`DynOpts::rebuild_fraction`] bounds it: once the edges applied
+//! since the last full count exceed `rebuild_fraction · m`, the batch
+//! falls back to the static `count_*_ranked` pipeline (through the
+//! engine selected by [`DynOpts::count`], i.e. the whole
+//! [`WedgeEngine`](crate::count::WedgeEngine) machinery) and the log
+//! resets — the classic amortized rebuild.  `rebuild_fraction = 0`
+//! forces a recount every batch (the benchmark baseline);
+//! `f64::INFINITY` never recounts.
+//!
+//! Determinism: deltas are exact integers combined by commutative
+//! atomic adds, so counts are identical at every thread count (the
+//! `dynamic_oracle` suite pins 1/4/8 threads).
+//!
+//! [`stream`] parses the timestamped edge streams the CLI `dynamic`
+//! subcommand replays.
+
+pub mod stream;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::count::intersect::EdgeStamp;
+use crate::count::{atomic_add, count_per_edge_ranked, count_per_vertex_ranked, CountOpts};
+use crate::graph::BipartiteGraph;
+use crate::prims::pool::{parallel_for, parallel_for_chunks, parallel_for_dynamic_with, SyncPtr};
+use crate::prims::scan::{dedup_sorted, pack_indices};
+use crate::prims::sort::par_sort;
+use crate::rank::preprocess;
+
+/// Batch edges per dynamic claim (per-edge walk costs are skewed).
+const GRAIN: usize = 2;
+
+/// Options for a [`DynGraph`].
+#[derive(Clone, Debug)]
+pub struct DynOpts {
+    /// Ranking + engine used by full recounts (initial count and
+    /// rebuild-threshold fallbacks).
+    pub count: CountOpts,
+    /// Fall back to a full static recount once the edges applied since
+    /// the last full count exceed this fraction of the current edge
+    /// count.  `0` recounts every batch; `f64::INFINITY` never does.
+    /// Default `0.25`, overridable via `PARBUTTERFLY_DYN_REBUILD`.
+    pub rebuild_fraction: f64,
+}
+
+impl Default for DynOpts {
+    fn default() -> Self {
+        let rebuild_fraction = std::env::var("PARBUTTERFLY_DYN_REBUILD")
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .filter(|f| *f >= 0.0)
+            .unwrap_or(0.25);
+        Self { count: CountOpts::default(), rebuild_fraction }
+    }
+}
+
+/// Which kind of batch an outcome describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchKind {
+    Insert,
+    Delete,
+}
+
+impl BatchKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchKind::Insert => "insert",
+            BatchKind::Delete => "delete",
+        }
+    }
+}
+
+/// How a batch's counts were brought up to date.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdatePath {
+    /// Incremental wedge-walk delta over the touched frontier.
+    Delta,
+    /// Full static recount (rebuild threshold exceeded).
+    Recount,
+}
+
+impl UpdatePath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            UpdatePath::Delta => "delta",
+            UpdatePath::Recount => "recount",
+        }
+    }
+}
+
+/// Per-batch summary returned by
+/// [`insert_edges`](DynGraph::insert_edges) /
+/// [`delete_edges`](DynGraph::delete_edges) — the batch-level sibling
+/// of [`CountReport`](crate::coordinator::CountReport).
+#[derive(Clone, Debug)]
+pub struct BatchOutcome {
+    pub kind: BatchKind,
+    /// Edges actually inserted/deleted.
+    pub applied: usize,
+    /// No-ops: in-batch duplicates, inserts of present edges, deletes
+    /// of absent edges.
+    pub skipped: usize,
+    /// Signed change in the global butterfly count.
+    pub delta: i64,
+    /// Global count after the batch.
+    pub total: u64,
+    pub path: UpdatePath,
+    pub millis: f64,
+}
+
+/// A bipartite graph under batch edge updates, with exact butterfly
+/// counts (global, per-vertex, per-edge) maintained incrementally.
+///
+/// The vertex universe grows on demand: inserting an edge whose ids
+/// exceed the current `|U|`/`|V|` extends the side (deletion never
+/// shrinks it).  Per-edge counts are indexed by the **current**
+/// graph's edge ids (CSR positions, remapped across rebuilds).
+pub struct DynGraph {
+    g: BipartiteGraph,
+    total: u64,
+    bu: Vec<u64>,
+    bv: Vec<u64>,
+    per_edge: Vec<u64>,
+    opts: DynOpts,
+    /// Edges applied through the delta path since the last full count.
+    pending: usize,
+    delta_batches: usize,
+    recount_batches: usize,
+}
+
+impl DynGraph {
+    /// Wrap an existing graph; runs one full static count.
+    pub fn new(g: BipartiteGraph, opts: DynOpts) -> Self {
+        let mut dg = Self {
+            g,
+            total: 0,
+            bu: Vec::new(),
+            bv: Vec::new(),
+            per_edge: Vec::new(),
+            opts,
+            pending: 0,
+            delta_batches: 0,
+            recount_batches: 0,
+        };
+        dg.recount();
+        dg
+    }
+
+    /// Build from an edge list (see [`BipartiteGraph::from_edges`]).
+    pub fn from_edges(nu: usize, nv: usize, edges: &[(u32, u32)], opts: DynOpts) -> Self {
+        Self::new(BipartiteGraph::from_edges(nu, nv, edges), opts)
+    }
+
+    /// The current graph.
+    pub fn graph(&self) -> &BipartiteGraph {
+        &self.g
+    }
+
+    /// Global butterfly count.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Per-vertex butterfly counts of the U side (original ids).
+    pub fn per_vertex_u(&self) -> &[u64] {
+        &self.bu
+    }
+
+    /// Per-vertex butterfly counts of the V side (original ids).
+    pub fn per_vertex_v(&self) -> &[u64] {
+        &self.bv
+    }
+
+    /// Per-edge butterfly counts, indexed by the current edge ids.
+    pub fn per_edge(&self) -> &[u64] {
+        &self.per_edge
+    }
+
+    /// Edges applied through the delta path since the last full count.
+    pub fn pending_updates(&self) -> usize {
+        self.pending
+    }
+
+    /// Batches answered by the incremental walk.
+    pub fn delta_batches(&self) -> usize {
+        self.delta_batches
+    }
+
+    /// Batches answered by the rebuild-threshold full recount.
+    pub fn recount_batches(&self) -> usize {
+        self.recount_batches
+    }
+
+    /// Insert a batch of edges.  The batch is deduplicated and edges
+    /// already present are skipped as no-ops; ids beyond the current
+    /// `|U|`/`|V|` grow the vertex universe.
+    ///
+    /// ```
+    /// use parbutterfly::dynamic::{DynGraph, DynOpts};
+    ///
+    /// // Figure 1 of the paper, grown one batch at a time.
+    /// let mut dg = DynGraph::from_edges(3, 3, &[(0, 0), (0, 1), (1, 0)], DynOpts::default());
+    /// assert_eq!(dg.total(), 0);
+    /// let out = dg.insert_edges(&[(1, 1), (0, 2), (1, 2), (2, 2), (1, 1)]);
+    /// assert_eq!(out.applied, 4); // the repeated (1, 1) is a no-op
+    /// assert_eq!(out.delta, 3);
+    /// assert_eq!(dg.total(), 3);
+    /// let out = dg.delete_edges(&[(0, 0)]);
+    /// assert_eq!(out.delta, -2);
+    /// assert_eq!(dg.total(), 1);
+    /// ```
+    pub fn insert_edges(&mut self, edges: &[(u32, u32)]) -> BatchOutcome {
+        let start = Instant::now();
+        let (nu0, nv0) = (self.g.nu(), self.g.nv());
+        // Dedup + CSR-sort the batch, keep genuinely new edges only.
+        let fresh: Vec<(u32, u32)> = sorted_unique(edges)
+            .into_iter()
+            .filter(|&(u, v)| {
+                (u as usize) >= nu0
+                    || (v as usize) >= nv0
+                    || self.g.edge_id(u as usize, v).is_none()
+            })
+            .collect();
+        let skipped = edges.len() - fresh.len();
+        if fresh.is_empty() {
+            return self.noop(BatchKind::Insert, skipped, start);
+        }
+
+        // Grow the vertex universe if the batch names new ids.
+        let nu = nu0.max(fresh.iter().map(|&(u, _)| u as usize + 1).max().unwrap());
+        let nv = nv0.max(fresh.iter().map(|&(_, v)| v as usize + 1).max().unwrap());
+        self.bu.resize(nu, 0);
+        self.bv.resize(nv, 0);
+
+        // Rebuild the CSR over old + fresh edges (parallel sort-based
+        // build).  The path decision only needs the batch and edge
+        // counts, so it is made first: the recount path skips the
+        // per-edge remap and batch-id lookups whose results it would
+        // overwrite wholesale.
+        let m0 = self.g.m();
+        let applied = fresh.len();
+        let path = self.choose_path(applied, m0 + applied);
+        let mut all = self.edges_by_id();
+        all.resize(m0 + applied, (0, 0));
+        all[m0..].copy_from_slice(&fresh);
+        let g_new = BipartiteGraph::from_edges(nu, nv, &all);
+        let delta = match path {
+            UpdatePath::Recount => {
+                self.g = g_new;
+                let before = self.total as i64;
+                self.recount();
+                self.recount_batches += 1;
+                self.total as i64 - before
+            }
+            UpdatePath::Delta => {
+                // Carry per-edge counts into the new id space (fresh
+                // edges start at zero); fresh ids ascend with the
+                // (u, v)-sorted batch order — the max-id convention
+                // the delta walk depends on.
+                let old_pe = std::mem::take(&mut self.per_edge);
+                self.per_edge = remap_per_edge(&self.g, &old_pe, &g_new);
+                let batch_eids: Vec<u32> = fresh
+                    .iter()
+                    .map(|&(u, v)| {
+                        g_new.edge_id(u as usize, v).expect("batch edge present after rebuild")
+                    })
+                    .collect();
+                self.g = g_new;
+                let gained = self.apply_delta(&batch_eids, true);
+                self.total += gained;
+                self.pending += applied;
+                self.delta_batches += 1;
+                gained as i64
+            }
+        };
+        self.check_invariants();
+        BatchOutcome {
+            kind: BatchKind::Insert,
+            applied,
+            skipped,
+            delta,
+            total: self.total,
+            path,
+            millis: ms(start),
+        }
+    }
+
+    /// Delete a batch of edges.  The batch is deduplicated; edges not
+    /// present are skipped as no-ops.  The vertex universe never
+    /// shrinks.
+    pub fn delete_edges(&mut self, edges: &[(u32, u32)]) -> BatchOutcome {
+        let start = Instant::now();
+        let (nu0, nv0) = (self.g.nu(), self.g.nv());
+        let mut gone = Vec::new();
+        let mut gone_eids = Vec::new();
+        for (u, v) in sorted_unique(edges) {
+            if (u as usize) < nu0 && (v as usize) < nv0 {
+                if let Some(e) = self.g.edge_id(u as usize, v) {
+                    gone.push((u, v));
+                    gone_eids.push(e);
+                }
+            }
+        }
+        let skipped = edges.len() - gone.len();
+        if gone.is_empty() {
+            return self.noop(BatchKind::Delete, skipped, start);
+        }
+
+        let applied = gone.len();
+        let path = self.choose_path(applied, self.g.m() - applied);
+        // The destroyed butterflies are walked in the *pre-deletion*
+        // graph, subtracting per-edge credits in the old id space;
+        // afterwards every deleted edge's count is exactly zero and
+        // the remap below drops those slots.  The recount path skips
+        // both the walk and the remap it would overwrite.
+        let mut delta = 0i64;
+        if path == UpdatePath::Delta {
+            let lost = self.apply_delta(&gone_eids, false);
+            self.total -= lost;
+            delta = -(lost as i64);
+        }
+
+        let mut is_gone = vec![false; self.g.m()];
+        for &e in &gone_eids {
+            is_gone[e as usize] = true;
+        }
+        let all = self.edges_by_id();
+        let keep = pack_indices(all.len(), |i| !is_gone[i]);
+        let remaining: Vec<(u32, u32)> =
+            crate::prims::pool::parallel_map(keep.len(), |j| all[keep[j]]);
+        let g_new = BipartiteGraph::from_edges(nu0, nv0, &remaining);
+
+        match path {
+            UpdatePath::Recount => {
+                self.g = g_new;
+                let before = self.total as i64;
+                self.recount();
+                self.recount_batches += 1;
+                delta = self.total as i64 - before;
+            }
+            UpdatePath::Delta => {
+                let old_pe = std::mem::take(&mut self.per_edge);
+                if cfg!(debug_assertions) {
+                    for &e in &gone_eids {
+                        debug_assert_eq!(
+                            old_pe[e as usize],
+                            0,
+                            "residual count on deleted edge {e}"
+                        );
+                    }
+                }
+                self.per_edge = remap_per_edge(&self.g, &old_pe, &g_new);
+                self.g = g_new;
+                self.pending += applied;
+                self.delta_batches += 1;
+            }
+        }
+        self.check_invariants();
+        BatchOutcome {
+            kind: BatchKind::Delete,
+            applied,
+            skipped,
+            delta,
+            total: self.total,
+            path,
+            millis: ms(start),
+        }
+    }
+
+    fn noop(&self, kind: BatchKind, skipped: usize, start: Instant) -> BatchOutcome {
+        BatchOutcome {
+            kind,
+            applied: 0,
+            skipped,
+            delta: 0,
+            total: self.total,
+            path: UpdatePath::Delta,
+            millis: ms(start),
+        }
+    }
+
+    /// Amortized rebuild rule (see [`DynOpts::rebuild_fraction`]):
+    /// `m_after` is the edge count the batch will leave behind.
+    fn choose_path(&self, applied: usize, m_after: usize) -> UpdatePath {
+        let cap = self.opts.rebuild_fraction * m_after.max(1) as f64;
+        if (self.pending + applied) as f64 >= cap {
+            UpdatePath::Recount
+        } else {
+            UpdatePath::Delta
+        }
+    }
+
+    /// Full static recount through the configured counting engine;
+    /// resets the update log.
+    fn recount(&mut self) {
+        let opts = &self.opts.count;
+        let rg = preprocess(&self.g, opts.ranking);
+        let pv = count_per_vertex_ranked(&rg, opts);
+        let nu = self.g.nu();
+        self.bu = vec![0; nu];
+        self.bv = vec![0; self.g.nv()];
+        for (x, &c) in pv.iter().enumerate() {
+            let gid = rg.orig(x) as usize;
+            if gid < nu {
+                self.bu[gid] = c;
+            } else {
+                self.bv[gid - nu] = c;
+            }
+        }
+        self.per_edge = count_per_edge_ranked(&rg, self.g.m(), opts);
+        self.total = self.bu.iter().sum::<u64>() / 2;
+        self.pending = 0;
+    }
+
+    /// Walk every batch edge's butterfly frontier in `self.g` under the
+    /// max-edge-id filter, crediting all four vertices and edges of
+    /// each butterfly found; apply the credits with `+1`/`-1` sign and
+    /// return the number of butterflies (the |delta|).
+    fn apply_delta(&mut self, batch_eids: &[u32], gain: bool) -> u64 {
+        let g = &self.g;
+        let (nu, nv, m) = (g.nu(), g.nv(), g.m());
+        let mut is_batch = vec![false; m];
+        for &e in batch_eids {
+            is_batch[e as usize] = true;
+        }
+        let d_bu: Vec<AtomicU64> = (0..nu).map(|_| AtomicU64::new(0)).collect();
+        let d_bv: Vec<AtomicU64> = (0..nv).map(|_| AtomicU64::new(0)).collect();
+        let d_pe: Vec<AtomicU64> = (0..m).map(|_| AtomicU64::new(0)).collect();
+        let found = AtomicU64::new(0);
+        let stamp_len = nu.max(nv);
+        let (is_batch, d_bu2, d_bv2, d_pe2) = (&is_batch, &d_bu, &d_bv, &d_pe);
+        parallel_for_dynamic_with(
+            batch_eids.len(),
+            GRAIN,
+            || EdgeStamp::new(stamp_len),
+            |stamp, range| {
+                let mut local = 0u64;
+                for bi in range {
+                    local += walk_one(g, is_batch, batch_eids[bi], stamp, d_bu2, d_bv2, d_pe2);
+                }
+                atomic_add(&found, local);
+            },
+        );
+        apply_signed(&mut self.bu, &d_bu, gain);
+        apply_signed(&mut self.bv, &d_bv, gain);
+        apply_signed(&mut self.per_edge, &d_pe, gain);
+        found.into_inner()
+    }
+
+    /// All edges indexed by edge id (parallel row copy; the sibling of
+    /// the sequential [`BipartiteGraph::edges`]).
+    fn edges_by_id(&self) -> Vec<(u32, u32)> {
+        let g = &self.g;
+        let mut all = vec![(0u32, 0u32); g.m()];
+        {
+            let ap = SyncPtr(all.as_mut_ptr());
+            parallel_for_chunks(g.nu(), |range| {
+                for u in range {
+                    let base = g.eid_u(u, 0) as usize;
+                    for (i, &v) in g.nbrs_u(u).iter().enumerate() {
+                        // SAFETY: edge ids are disjoint per row.
+                        unsafe { *ap.get().add(base + i) = (u as u32, v) };
+                    }
+                }
+            });
+        }
+        all
+    }
+
+    /// `Σ per-vertex = 2·total` and `Σ per-edge = 4·total` after every
+    /// batch (debug builds only — O(n + m) per batch).
+    fn check_invariants(&self) {
+        if cfg!(debug_assertions) {
+            let su: u64 = self.bu.iter().sum();
+            let sv: u64 = self.bv.iter().sum();
+            let se: u64 = self.per_edge.iter().sum();
+            debug_assert_eq!(su, 2 * self.total, "U-side per-vertex sum");
+            debug_assert_eq!(sv, 2 * self.total, "V-side per-vertex sum");
+            debug_assert_eq!(se, 4 * self.total, "per-edge sum");
+        }
+    }
+}
+
+/// Milliseconds since `start`.
+fn ms(start: Instant) -> f64 {
+    start.elapsed().as_secs_f64() * 1e3
+}
+
+/// Dedup a batch into CSR (`(u, v)`-ascending) order via the parallel
+/// sort + scan primitives.
+fn sorted_unique(edges: &[(u32, u32)]) -> Vec<(u32, u32)> {
+    let mut packed: Vec<u64> =
+        edges.iter().map(|&(u, v)| ((u as u64) << 32) | v as u64).collect();
+    par_sort(&mut packed);
+    let packed = dedup_sorted(packed);
+    packed.into_iter().map(|k| ((k >> 32) as u32, k as u32)).collect()
+}
+
+/// Scatter per-edge counts from `old`'s id space into `new`'s (edges
+/// absent from `old` start at zero, edges absent from `new` drop).
+fn remap_per_edge(old: &BipartiteGraph, old_pe: &[u64], new: &BipartiteGraph) -> Vec<u64> {
+    let mut pe = vec![0u64; new.m()];
+    {
+        let ap = SyncPtr(pe.as_mut_ptr());
+        parallel_for_chunks(new.nu(), |range| {
+            for u in range {
+                let base = new.eid_u(u, 0) as usize;
+                for (i, &v) in new.nbrs_u(u).iter().enumerate() {
+                    let c = if u < old.nu() && (v as usize) < old.nv() {
+                        old.edge_id(u, v).map(|e| old_pe[e as usize]).unwrap_or(0)
+                    } else {
+                        0
+                    };
+                    // SAFETY: edge ids are disjoint per row.
+                    unsafe { *ap.get().add(base + i) = c };
+                }
+            }
+        });
+    }
+    pe
+}
+
+/// Fold a delta array into `dst` with sign (parallel, disjoint slots).
+fn apply_signed(dst: &mut [u64], delta: &[AtomicU64], gain: bool) {
+    debug_assert_eq!(dst.len(), delta.len());
+    let p = SyncPtr(dst.as_mut_ptr());
+    parallel_for(dst.len(), |i| {
+        let d = delta[i].load(Ordering::Relaxed);
+        if d != 0 {
+            // SAFETY: each index written by exactly one worker.
+            unsafe {
+                let s = p.get().add(i);
+                if gain {
+                    *s += d;
+                } else {
+                    *s -= d;
+                }
+            }
+        }
+    });
+}
+
+/// Enumerate every butterfly of `g` containing batch edge `e` whose
+/// other three edges each pass the max-id filter (non-batch, or batch
+/// with a smaller edge id); credit the 4 vertices and 4 edges of each
+/// into the delta arrays and return the number found.
+fn walk_one(
+    g: &BipartiteGraph,
+    is_batch: &[bool],
+    e: u32,
+    stamp: &mut EdgeStamp,
+    d_bu: &[AtomicU64],
+    d_bv: &[AtomicU64],
+    d_pe: &[AtomicU64],
+) -> u64 {
+    let (eu, ev) = g.edge(e);
+    let (u, v) = (eu as usize, ev as usize);
+    let passes = |x: u32| !is_batch[x as usize] || x < e;
+    // Orient from the cheaper side: the walk scans every center's full
+    // adjacency once, so compare the two centers' degree sums.
+    let cost_a: usize = g.nbrs_v(v).iter().map(|&u2| g.deg_u(u2 as usize)).sum();
+    let cost_b: usize = g.nbrs_u(u).iter().map(|&v2| g.deg_v(v2 as usize)).sum();
+    let mut found = 0u64;
+    if cost_a <= cost_b {
+        // Stamp N(u) — the candidate second V endpoints, remembering
+        // the (u, v2) edge id — then walk centers u2 ∈ N(v) and scan
+        // their adjacency against the stamp.
+        for (i, &v2) in g.nbrs_u(u).iter().enumerate() {
+            let e_uv2 = g.eid_u(u, i);
+            if v2 as usize != v && passes(e_uv2) {
+                stamp.set(v2, e_uv2);
+            }
+        }
+        let (centers, center_eids) = (g.nbrs_v(v), g.eids_v(v));
+        for (i, &u2) in centers.iter().enumerate() {
+            let e_u2v = center_eids[i];
+            if u2 as usize == u || !passes(e_u2v) {
+                continue;
+            }
+            let u2 = u2 as usize;
+            let mut cnt = 0u64;
+            for (k, &v2) in g.nbrs_u(u2).iter().enumerate() {
+                let e_u2v2 = g.eid_u(u2, k);
+                if !passes(e_u2v2) {
+                    continue;
+                }
+                if let Some(e_uv2) = stamp.get(v2) {
+                    cnt += 1;
+                    atomic_add(&d_bv[v2 as usize], 1);
+                    atomic_add(&d_pe[e_uv2 as usize], 1);
+                    atomic_add(&d_pe[e_u2v2 as usize], 1);
+                }
+            }
+            if cnt > 0 {
+                atomic_add(&d_bu[u2], cnt);
+                atomic_add(&d_pe[e_u2v as usize], cnt);
+                found += cnt;
+            }
+        }
+    } else {
+        // Mirror: stamp N(v), walk centers v2 ∈ N(u).
+        let (unbrs, ueids) = (g.nbrs_v(v), g.eids_v(v));
+        for (i, &u2) in unbrs.iter().enumerate() {
+            let e_u2v = ueids[i];
+            if u2 as usize != u && passes(e_u2v) {
+                stamp.set(u2, e_u2v);
+            }
+        }
+        for (i, &v2) in g.nbrs_u(u).iter().enumerate() {
+            let e_uv2 = g.eid_u(u, i);
+            if v2 as usize == v || !passes(e_uv2) {
+                continue;
+            }
+            let v2 = v2 as usize;
+            let mut cnt = 0u64;
+            let (nbrs2, eids2) = (g.nbrs_v(v2), g.eids_v(v2));
+            for (k, &u2) in nbrs2.iter().enumerate() {
+                let e_u2v2 = eids2[k];
+                if !passes(e_u2v2) {
+                    continue;
+                }
+                if let Some(e_u2v) = stamp.get(u2) {
+                    cnt += 1;
+                    atomic_add(&d_bu[u2 as usize], 1);
+                    atomic_add(&d_pe[e_u2v as usize], 1);
+                    atomic_add(&d_pe[e_u2v2 as usize], 1);
+                }
+            }
+            if cnt > 0 {
+                atomic_add(&d_bv[v2], cnt);
+                atomic_add(&d_pe[e_uv2 as usize], cnt);
+                found += cnt;
+            }
+        }
+    }
+    stamp.reset();
+    if found > 0 {
+        atomic_add(&d_bu[u], found);
+        atomic_add(&d_bv[v], found);
+        atomic_add(&d_pe[e as usize], found);
+    }
+    found
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::count::{count_per_edge, count_per_vertex, CountOpts};
+    use crate::graph::gen;
+    use crate::prims::rng::Pcg32;
+    use crate::testutil::brute;
+
+    fn delta_only() -> DynOpts {
+        DynOpts { rebuild_fraction: f64::INFINITY, ..Default::default() }
+    }
+
+    fn recount_only() -> DynOpts {
+        DynOpts { rebuild_fraction: 0.0, ..Default::default() }
+    }
+
+    /// Assert dg's three count granularities against a static recount.
+    fn assert_matches_static(dg: &DynGraph, ctx: &str) {
+        let g = dg.graph();
+        assert_eq!(dg.total(), brute::total(g), "{ctx}: total");
+        let (ebu, ebv) = brute::per_vertex(g);
+        assert_eq!(dg.per_vertex_u(), &ebu[..], "{ctx}: per-vertex U");
+        assert_eq!(dg.per_vertex_v(), &ebv[..], "{ctx}: per-vertex V");
+        assert_eq!(dg.per_edge(), &brute::per_edge(g)[..], "{ctx}: per-edge");
+    }
+
+    #[test]
+    fn fig1_grown_and_shrunk_edge_by_edge() {
+        let fig1 = [(0u32, 0u32), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2), (2, 2)];
+        for opts in [delta_only(), recount_only()] {
+            let mut dg = DynGraph::from_edges(3, 3, &[], opts);
+            for (i, &e) in fig1.iter().enumerate() {
+                let out = dg.insert_edges(&[e]);
+                assert_eq!(out.applied, 1);
+                assert_matches_static(&dg, &format!("insert {i}"));
+            }
+            assert_eq!(dg.total(), 3);
+            for (i, &e) in fig1.iter().enumerate() {
+                dg.delete_edges(&[e]);
+                assert_matches_static(&dg, &format!("delete {i}"));
+            }
+            assert_eq!(dg.total(), 0);
+            assert_eq!(dg.graph().m(), 0);
+        }
+    }
+
+    #[test]
+    fn batch_insert_matches_static_count() {
+        let g = gen::erdos_renyi(18, 20, 150, 7);
+        let edges = g.edges();
+        let (a, b) = (edges.len() / 3, 2 * edges.len() / 3);
+        for opts in [delta_only(), DynOpts::default()] {
+            let mut dg = DynGraph::from_edges(g.nu(), g.nv(), &edges[..a], opts);
+            dg.insert_edges(&edges[a..b]);
+            assert_matches_static(&dg, "mid");
+            dg.insert_edges(&edges[b..]);
+            assert_matches_static(&dg, "full");
+            assert_eq!(dg.total(), brute::total(&g));
+        }
+    }
+
+    #[test]
+    fn duplicate_and_noop_batches() {
+        let g = gen::erdos_renyi(10, 10, 40, 3);
+        let edges = g.edges();
+        let mut dg = DynGraph::from_edges(10, 10, &edges, delta_only());
+        let before = dg.total();
+        // Re-inserting present edges and deleting absent ones are no-ops.
+        let out = dg.insert_edges(&edges[..10]);
+        assert_eq!((out.applied, out.delta), (0, 0));
+        assert_eq!(out.skipped, 10);
+        let absent: Vec<(u32, u32)> =
+            (0..5).map(|i| (i, 9)).filter(|&(u, v)| g.edge_id(u as usize, v).is_none()).collect();
+        let out = dg.delete_edges(&absent);
+        assert_eq!((out.applied, out.delta), (0, 0));
+        assert_eq!(dg.total(), before);
+        assert_matches_static(&dg, "noop");
+    }
+
+    #[test]
+    fn vertex_universe_grows_on_insert() {
+        let mut dg = DynGraph::from_edges(2, 2, &[(0, 0), (1, 1)], delta_only());
+        let out = dg.insert_edges(&[(3, 4), (0, 1), (1, 0)]);
+        assert_eq!(out.applied, 3);
+        assert_eq!(dg.graph().nu(), 4);
+        assert_eq!(dg.graph().nv(), 5);
+        assert_eq!(dg.per_vertex_u().len(), 4);
+        assert_eq!(dg.per_vertex_v().len(), 5);
+        assert_matches_static(&dg, "grown");
+    }
+
+    #[test]
+    fn interleaved_stream_matches_static_at_every_batch() {
+        // Randomized insert/delete interleaving with duplicate and
+        // no-op pollution, checked against the brute-force oracle
+        // after every batch — the Rust twin of
+        // scripts/dynamic_model_check.py.
+        let (nu, nv) = (14usize, 12usize);
+        let mut rng = Pcg32::new(2026);
+        for opts in [delta_only(), DynOpts::default()] {
+            let mut dg = DynGraph::from_edges(nu, nv, &[], opts);
+            let mut removed: Vec<(u32, u32)> = Vec::new();
+            for step in 0..40 {
+                let sz = 1 + (rng.next_below(9) as usize);
+                if rng.next_below(100) < 55 || dg.graph().m() == 0 {
+                    let mut batch: Vec<(u32, u32)> = (0..sz)
+                        .map(|_| {
+                            (rng.next_below(nu as u64) as u32, rng.next_below(nv as u64) as u32)
+                        })
+                        .collect();
+                    if let Some(&re) = removed.last() {
+                        batch.push(re); // re-insert a deleted edge
+                    }
+                    let dup = batch[0];
+                    batch.push(dup); // in-batch duplicate
+                    dg.insert_edges(&batch);
+                } else {
+                    let edges = dg.graph().edges();
+                    let mut batch: Vec<(u32, u32)> = (0..sz.min(edges.len()))
+                        .map(|_| edges[rng.next_below(edges.len() as u64) as usize])
+                        .collect();
+                    removed.extend(batch.iter().copied());
+                    batch.push((nu as u32 - 1, nv as u32 - 1)); // maybe absent
+                    dg.delete_edges(&batch);
+                }
+                assert_matches_static(&dg, &format!("step {step}"));
+            }
+            assert!(dg.delta_batches() + dg.recount_batches() > 0);
+        }
+    }
+
+    #[test]
+    fn delta_and_recount_paths_agree() {
+        let g = gen::chung_lu(40, 50, 400, 2.1, 9);
+        let edges = g.edges();
+        let half = edges.len() / 2;
+        let mut a = DynGraph::from_edges(g.nu(), g.nv(), &edges[..half], delta_only());
+        let mut b = DynGraph::from_edges(g.nu(), g.nv(), &edges[..half], recount_only());
+        for chunk in edges[half..].chunks(37) {
+            let oa = a.insert_edges(chunk);
+            let ob = b.insert_edges(chunk);
+            assert_eq!(oa.path, UpdatePath::Delta);
+            assert_eq!(ob.path, UpdatePath::Recount);
+            assert_eq!(oa.total, ob.total);
+            assert_eq!(oa.delta, ob.delta);
+        }
+        assert_eq!(a.per_edge(), b.per_edge());
+        assert_eq!(a.per_vertex_u(), b.per_vertex_u());
+        assert!(a.recount_batches() == 0 && b.delta_batches() == 0);
+    }
+
+    #[test]
+    fn rebuild_threshold_switches_paths() {
+        let g = gen::erdos_renyi(30, 30, 300, 5);
+        let edges = g.edges();
+        let base = edges.len() - 5;
+        let opts = DynOpts { rebuild_fraction: 0.25, ..Default::default() };
+        let mut dg = DynGraph::from_edges(30, 30, &edges[..base], opts.clone());
+        // Small batch stays on the delta path…
+        let out = dg.insert_edges(&edges[base..]);
+        assert_eq!(out.path, UpdatePath::Delta);
+        assert_eq!(dg.pending_updates(), 5);
+        // …until the pending log crosses the fraction: recount + reset.
+        // 150 fresh edges against ~250 old ones clears 0.25·m.
+        let big: Vec<(u32, u32)> = (0..150u32).map(|i| (i % 30, 30 + i / 30)).collect();
+        let mut dg2 = DynGraph::from_edges(30, 31, &edges[..base], opts);
+        let out = dg2.insert_edges(&big);
+        assert_eq!(out.path, UpdatePath::Recount);
+        assert_eq!(dg2.pending_updates(), 0);
+        assert_matches_static(&dg2, "post-recount");
+    }
+
+    #[test]
+    fn engine_choice_flows_into_recounts() {
+        use crate::count::Engine;
+        let g = gen::erdos_renyi(20, 20, 160, 11);
+        let edges = g.edges();
+        let opts = DynOpts {
+            count: CountOpts { engine: Engine::Intersect, ..Default::default() },
+            rebuild_fraction: 0.0,
+        };
+        let half = edges.len() / 2;
+        let mut dg = DynGraph::from_edges(20, 20, &edges[..half], opts);
+        dg.insert_edges(&edges[half..]);
+        assert_eq!(dg.total(), brute::total(&g));
+        assert_eq!(dg.recount_batches(), 1);
+    }
+
+    #[test]
+    fn static_counters_agree_with_dyn_per_edge_ids() {
+        // Per-edge ids must line up with a static count on the same
+        // graph (CSR construction is deterministic in the edge set).
+        let g = gen::erdos_renyi(16, 18, 120, 13);
+        let edges = g.edges();
+        let half = edges.len() / 2;
+        let mut dg = DynGraph::from_edges(16, 18, &edges[..half], delta_only());
+        dg.insert_edges(&edges[half..]);
+        let opts = CountOpts::default();
+        let vc = count_per_vertex(dg.graph(), &opts);
+        assert_eq!(dg.per_vertex_u(), &vc.bu[..]);
+        assert_eq!(dg.per_vertex_v(), &vc.bv[..]);
+        assert_eq!(dg.per_edge(), &count_per_edge(dg.graph(), &opts)[..]);
+    }
+}

@@ -1,0 +1,196 @@
+//! Timestamped edge-stream parsing and batching.
+//!
+//! The CLI `dynamic` subcommand replays streams of edge updates; this
+//! module defines the on-disk format and the batching rule.  One event
+//! per line, blank lines and `#`/`%` comments skipped:
+//!
+//! ```text
+//! [ts] op u v
+//! ```
+//!
+//! `op` is `+` (insert) or `-` (delete), `u`/`v` are 0-indexed
+//! side-local vertex ids, and `ts` is an optional non-negative integer
+//! timestamp — four-field lines carry one, three-field lines default
+//! to timestamp 0 (so untimestamped streams batch purely by operation
+//! and cap).  Malformed lines fail with a line-numbered error, the
+//! same contract as the [`graph::io`](crate::graph::io) loaders.
+//!
+//! [`group_batches`] groups consecutive events into maximal batches: a
+//! batch extends while the operation and the timestamp stay the same
+//! and the size cap is not exceeded.  Batching preserves stream order,
+//! so replays are semantically the one-at-a-time sequential replay —
+//! [`DynGraph`](super::DynGraph) deduplicates and no-op-filters within
+//! each batch.  Parsing is a sequential line scan: update streams are
+//! replayed in order anyway, so batch application (not parsing) is the
+//! parallel phase.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use super::BatchKind;
+
+/// One edge update in a replayable stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamEvent {
+    pub ts: u64,
+    pub kind: BatchKind,
+    pub u: u32,
+    pub v: u32,
+}
+
+/// A replayable batch: one operation applied to a set of edges.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub kind: BatchKind,
+    pub edges: Vec<(u32, u32)>,
+}
+
+fn parse_id(tok: &str, what: &str, lineno: usize) -> anyhow::Result<u32> {
+    tok.parse::<u32>().map_err(|_| {
+        anyhow::anyhow!("line {}: bad {what} id {tok:?} (expected an integer)", lineno + 1)
+    })
+}
+
+/// Parse a stream file (see the module docs for the format).
+pub fn parse_stream(path: &Path) -> anyhow::Result<Vec<StreamEvent>> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+    let mut events = Vec::new();
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line.map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let toks: Vec<&str> = t.split_whitespace().collect();
+        let (ts, rest) = match toks.len() {
+            3 => (0u64, &toks[..]),
+            4 => {
+                let ts = toks[0].parse::<u64>().map_err(|_| {
+                    anyhow::anyhow!(
+                        "line {}: bad timestamp {:?} (expected a non-negative integer)",
+                        lineno + 1,
+                        toks[0]
+                    )
+                })?;
+                (ts, &toks[1..])
+            }
+            _ => anyhow::bail!(
+                "line {}: expected `[ts] op u v`, got {} fields",
+                lineno + 1,
+                toks.len()
+            ),
+        };
+        let kind = match rest[0] {
+            "+" => BatchKind::Insert,
+            "-" => BatchKind::Delete,
+            other => {
+                anyhow::bail!("line {}: bad op {other:?} (expected `+` or `-`)", lineno + 1)
+            }
+        };
+        let u = parse_id(rest[1], "u", lineno)?;
+        let v = parse_id(rest[2], "v", lineno)?;
+        events.push(StreamEvent { ts, kind, u, v });
+    }
+    Ok(events)
+}
+
+/// Write a stream file (timestamps included; round-trips
+/// [`parse_stream`]).
+pub fn save_stream(events: &[StreamEvent], path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("create {}: {e}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# parbutterfly edge stream: ts op u v")?;
+    for e in events {
+        let op = if e.kind == BatchKind::Insert { "+" } else { "-" };
+        writeln!(w, "{} {} {} {}", e.ts, op, e.u, e.v)?;
+    }
+    Ok(())
+}
+
+/// Group consecutive events into maximal batches: same operation, same
+/// timestamp, at most `cap` events per batch (`cap = 0` means
+/// unbounded).
+pub fn group_batches(events: &[StreamEvent], cap: usize) -> Vec<Batch> {
+    let mut out: Vec<Batch> = Vec::new();
+    let mut last_ts = 0u64;
+    for e in events {
+        let split = match out.last() {
+            None => true,
+            Some(b) => {
+                b.kind != e.kind || last_ts != e.ts || (cap > 0 && b.edges.len() >= cap)
+            }
+        };
+        if split {
+            out.push(Batch { kind: e.kind, edges: Vec::new() });
+        }
+        out.last_mut().unwrap().edges.push((e.u, e.v));
+        last_ts = e.ts;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("pb_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_and_grouping() {
+        let events = vec![
+            StreamEvent { ts: 1, kind: BatchKind::Insert, u: 0, v: 0 },
+            StreamEvent { ts: 1, kind: BatchKind::Insert, u: 0, v: 1 },
+            StreamEvent { ts: 2, kind: BatchKind::Insert, u: 1, v: 0 },
+            StreamEvent { ts: 2, kind: BatchKind::Delete, u: 0, v: 0 },
+            StreamEvent { ts: 2, kind: BatchKind::Delete, u: 0, v: 1 },
+        ];
+        let path = tmp("s.txt");
+        save_stream(&events, &path).unwrap();
+        let back = parse_stream(&path).unwrap();
+        assert_eq!(back, events);
+        let batches = group_batches(&back, 0);
+        assert_eq!(batches.len(), 3, "split on ts change and op change");
+        assert_eq!(batches[0].edges, vec![(0, 0), (0, 1)]);
+        assert_eq!(batches[1].kind, BatchKind::Insert);
+        assert_eq!(batches[2].kind, BatchKind::Delete);
+        assert_eq!(batches[2].edges.len(), 2);
+        // Cap forces further splits.
+        let capped = group_batches(&back, 1);
+        assert_eq!(capped.len(), 5);
+    }
+
+    #[test]
+    fn untimestamped_lines_and_comments() {
+        let path = tmp("u.txt");
+        std::fs::write(&path, "# comment\n% другой\n+ 3 4\n+ 1 2\n\n- 3 4\n").unwrap();
+        let events = parse_stream(&path).unwrap();
+        assert_eq!(events.len(), 3);
+        assert!(events.iter().all(|e| e.ts == 0));
+        let batches = group_batches(&events, 0);
+        assert_eq!(batches.len(), 2, "op flip splits; ts stays 0");
+    }
+
+    #[test]
+    fn malformed_lines_are_line_numbered() {
+        for (body, needle) in [
+            ("+ 1\n", "line 1"),
+            ("+ 1 2 3 4\n", "line 1"),
+            ("1 ? 2 3\n", "bad op"),
+            ("+ x 2\n", "bad u id"),
+            ("+ 1 -2\n", "bad v id"),
+            ("ts + 1 2\n", "bad timestamp"),
+            ("+ 1 2\nnope\n", "line 2"),
+        ] {
+            let path = tmp("bad.txt");
+            std::fs::write(&path, body).unwrap();
+            let err = parse_stream(&path).unwrap_err().to_string();
+            assert!(err.contains(needle), "{body:?} -> {err}");
+        }
+    }
+}

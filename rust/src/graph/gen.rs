@@ -2,7 +2,7 @@
 //!
 //! The paper evaluates on KONECT graphs (unavailable offline); these
 //! generators reproduce the *structural properties* that drive the
-//! paper's results (DESIGN.md §2):
+//! paper's results (see ARCHITECTURE.md):
 //!
 //! * [`erdos_renyi`] — near-regular degrees: the side-ordering `f`
 //!   metric is small, so side ordering wins (itwiki/livejournal-like).

@@ -22,9 +22,9 @@
 //! outputs are stitched with [`prefix_sum`] scans (line counts for
 //! error numbering, edge counts for the final placement), so the whole
 //! parse is `O(bytes)` work with chunk-level span.  Both paths drive
-//! the **single** line grammar [`tokenize_line`], which reports
-//! failures as deferred [`ErrKind`] templates; each path renders them
-//! with the absolute line number ([`ErrKind::render`] is the one
+//! the **single** line grammar (the private `tokenize_line`), which
+//! reports failures as deferred `ErrKind` templates; each path renders
+//! them with the absolute line number (`ErrKind::render` is the one
 //! source of every message), so the parallel path reconstructs
 //! byte-identical edge lists *and* byte-identical error messages
 //! (the earliest failing line wins, exactly as a sequential scan
@@ -472,6 +472,16 @@ fn read_bytes(path: &Path) -> anyhow::Result<Vec<u8>> {
 /// building the CSR; picks the chunked parallel scan for large files
 /// when more than one worker is available, and the `O(edges)`-memory
 /// streaming scan when single-threaded.
+///
+/// ```
+/// use parbutterfly::graph::io::parse_edge_list;
+///
+/// let path = std::env::temp_dir().join("pb_doc_parse.txt");
+/// std::fs::write(&path, "# bip 2 3\n0 0\n0 2\n1 1\n").unwrap();
+/// let (nu, nv, edges) = parse_edge_list(&path).unwrap();
+/// assert_eq!((nu, nv), (2, 3));
+/// assert_eq!(edges, vec![(0, 0), (0, 2), (1, 1)]);
+/// ```
 pub fn parse_edge_list(path: &Path) -> anyhow::Result<(usize, usize, Vec<(u32, u32)>)> {
     let t = num_threads();
     if t <= 1 {

@@ -8,7 +8,14 @@
 //! degeneracy, approximate complement degeneracy) and **wedge
 //! aggregation** strategies (sort, hash, histogram, simple batching,
 //! wedge-aware batching), plus approximate counting via edge / colorful
-//! sparsification and the Wang et al. cache optimization.
+//! sparsification and the Wang et al. cache optimization.  Beyond the
+//! paper's static setting, [`dynamic`] maintains exact counts under
+//! batched edge insertions/deletions (incremental wedge-walk deltas
+//! with an amortized full-recount fallback).
+//!
+//! See `ARCHITECTURE.md` at the repository root for the module map,
+//! the paper-section cross-reference, and the invariants each layer
+//! guarantees.
 //!
 //! The crate is the Layer-3 coordinator of a three-layer stack: a JAX +
 //! Pallas build-time pipeline (`python/compile/`) AOT-lowers a dense-tile
@@ -39,6 +46,7 @@ pub mod bench_support;
 pub mod cli;
 pub mod coordinator;
 pub mod count;
+pub mod dynamic;
 pub mod graph;
 pub mod peel;
 pub mod prims;

@@ -52,6 +52,16 @@ pub struct WingResult {
 }
 
 /// Options for edge peeling.
+///
+/// ```
+/// use parbutterfly::count::CountOpts;
+/// use parbutterfly::graph::gen;
+/// use parbutterfly::peel::{wing_decomposition, PeelEOpts};
+///
+/// let g = gen::complete_bipartite(2, 2); // one butterfly
+/// let w = wing_decomposition(&g, &CountOpts::default(), &PeelEOpts::default());
+/// assert_eq!(w.wings, vec![1, 1, 1, 1]);
+/// ```
 #[derive(Clone, Debug)]
 pub struct PeelEOpts {
     /// UPDATE-E engine; [`PeelEngine::Intersect`] ignores `agg`.

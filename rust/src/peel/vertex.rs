@@ -11,8 +11,9 @@
 //!   with the batch's wedge count.
 //! * **Intersect** — streaming two-hop walks (batch vertex -> center
 //!   -> live second endpoint) over a [`LiveCsr`] view that the peeled
-//!   side is removed from as it dies, with a dense
-//!   [`TouchedCounter`] per worker and per-worker [`DenseDelta`]
+//!   side is removed from as it dies, with a dense `TouchedCounter`
+//!   (crate-internal, shared with the streaming count engine) per
+//!   worker and per-worker [`DenseDelta`]
 //!   accumulators merged in parallel.  No wedge record is ever
 //!   materialized, and late rounds never rescan peeled vertices.
 //!
@@ -66,6 +67,19 @@ pub struct TipResult {
 }
 
 /// Options for vertex peeling.
+///
+/// ```
+/// use parbutterfly::count::CountOpts;
+/// use parbutterfly::graph::gen;
+/// use parbutterfly::peel::{tip_decomposition, PeelSide, PeelVOpts};
+///
+/// let g = gen::complete_bipartite(3, 4);
+/// let opts = PeelVOpts { side: PeelSide::U, ..Default::default() };
+/// let t = tip_decomposition(&g, &CountOpts::default(), &opts);
+/// // Every U vertex of K_{3,4} sits in C(2,1)·C(4,2) = 12 butterflies
+/// // and they all peel together.
+/// assert_eq!(t.tips, vec![12, 12, 12]);
+/// ```
 #[derive(Clone, Debug)]
 pub struct PeelVOpts {
     /// UPDATE-V engine; [`PeelEngine::Intersect`] ignores `agg`.
@@ -165,7 +179,7 @@ fn peel_vertices_agg(view: &SideView<'_>, counts: &[u64], opts: &PeelVOpts) -> T
     let mut rounds = 0usize;
     // §Perf: allocate the delta accumulator and the batch-aggregation
     // scratch once per decomposition (per-round Mutex<HashMap> merging
-    // used to dominate at high rho_v — see EXPERIMENTS.md §Perf).
+    // used to dominate at high rho_v — measured on the e2e workload).
     let mut delta = DenseDelta::new(n);
     let mut scratch = TouchedCounter::new(n);
 

@@ -1,4 +1,13 @@
 //! Atomic helpers: CAS-loop min/max and cache-line-padded counters.
+//!
+//! The paper's framework assumes priority-write/fetch-and-add
+//! primitives from the Cilk/PBBS substrate; these are their `std`
+//! equivalents.  `fetch_min`/`fetch_max` are lock-free CAS loops —
+//! O(1) amortized per call under low contention, with the usual
+//! retry-under-contention caveat — used for bucket thresholds and
+//! report maxima.  [`PaddedCounter`] spaces per-worker counters a
+//! cache line apart so contiguous `Vec<PaddedCounter>` tallies don't
+//! false-share.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 

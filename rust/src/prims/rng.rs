@@ -1,6 +1,11 @@
 //! Small deterministic PRNG (PCG32) — graph generators, sparsification,
 //! ranking tie-breaks, and the property-test harness all need seeded,
 //! splittable randomness; no `rand` crate is available offline.
+//!
+//! PCG-XSH-RR 64/32 (O'Neill 2014): O(1) per draw, 64-bit state with
+//! per-stream increments, so [`Pcg32::split`] hands independent
+//! deterministic streams to parallel workers — the property the
+//! sparsification estimators (§4.4) rely on for reproducible seeds.
 
 /// PCG-XSH-RR 64/32 (O'Neill 2014).
 #[derive(Clone, Debug)]

@@ -10,7 +10,8 @@
 //! * [`RustDense`] — the pure-Rust tiled reference kernel.  Always
 //!   available, no artifacts, exact for every shape it accepts; this is
 //!   what CI and the default build run.
-//! * [`pjrt::Engine`] *(feature `pjrt`)* — loads the AOT artifacts
+//! * `pjrt::Engine` *(feature `pjrt`; the module only exists then, so
+//!   this is intentionally not a doc link)* — loads the AOT artifacts
 //!   (`make artifacts`) through the PJRT C API and serves executions
 //!   from the hot path.  The in-tree `xla` dependency is a
 //!   type-compatible stub, so the feature type-checks offline; point it

@@ -1,7 +1,7 @@
 //! Test substrate: brute-force oracles and a mini property-test
 //! harness.
 //!
-//! `proptest` is unavailable in this offline environment (DESIGN.md §2),
+//! `proptest` is unavailable in this offline environment (see ARCHITECTURE.md),
 //! so [`prop`] provides the minimal machinery the invariants need:
 //! seeded random generation, many-iteration checks, and failing-seed
 //! reporting for reproduction.

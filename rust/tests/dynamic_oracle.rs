@@ -1,0 +1,220 @@
+//! Batch-dynamic oracle suite: incremental [`DynGraph`] counts must
+//! equal full static recounts — global, per-vertex, per-edge — after
+//! **every** batch, on the golden corpus and on randomized interleaved
+//! insert/delete streams, at 1/4/8 threads.
+//!
+//! The thread sweep pins determinism (deltas combine by commutative
+//! atomic adds, so counts are thread-count invariant) and the
+//! degenerate inline paths of the parallel combinators; the property
+//! stream pollutes batches with in-batch duplicates, inserts of
+//! present edges, deletes of absent edges, and re-inserts of deleted
+//! edges, all of which must be exact no-ops.
+
+use std::path::PathBuf;
+
+use parbutterfly::count::{count_per_edge, count_per_vertex, CountOpts};
+use parbutterfly::dynamic::{BatchKind, DynGraph, DynOpts, UpdatePath};
+use parbutterfly::graph::{io, BipartiteGraph};
+use parbutterfly::prims::pool::with_threads;
+use parbutterfly::prims::rng::Pcg32;
+use parbutterfly::testutil::brute;
+
+const GOLDEN: [&str; 6] =
+    ["davis.txt", "k6x7.txt", "er20x25.txt", "er16x16.txt", "cl30x20.txt", "blocks12.txt"];
+
+const THREADS: [usize; 3] = [1, 4, 8];
+
+fn load(file: &str) -> BipartiteGraph {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(file);
+    io::load_edge_list(&path).unwrap_or_else(|e| panic!("loading {file}: {e:#}"))
+}
+
+/// Assert all three granularities against the sequential baseline
+/// recount of the same edge set (the definition, not an algorithm).
+fn assert_matches_recount(dg: &DynGraph, ctx: &str) {
+    let g = dg.graph();
+    assert_eq!(dg.total(), brute::total(g), "{ctx}: total");
+    let (bu, bv) = brute::per_vertex(g);
+    assert_eq!(dg.per_vertex_u(), &bu[..], "{ctx}: per-vertex U");
+    assert_eq!(dg.per_vertex_v(), &bv[..], "{ctx}: per-vertex V");
+    assert_eq!(dg.per_edge(), &brute::per_edge(g)[..], "{ctx}: per-edge");
+}
+
+#[test]
+fn golden_corpus_prefix_replay_at_every_thread_count() {
+    // Replay each golden dataset from empty in batches; after every
+    // batch the incremental counts must equal a static recount of the
+    // prefix graph.  The final state must reproduce the pinned
+    // dataset's counts exactly.
+    for file in GOLDEN {
+        let g = load(file);
+        let edges = g.edges();
+        let static_opts = CountOpts::default();
+        let expect_vc = count_per_vertex(&g, &static_opts);
+        let expect_pe = count_per_edge(&g, &static_opts);
+        for t in THREADS {
+            with_threads(t, || {
+                let opts = DynOpts { rebuild_fraction: f64::INFINITY, ..Default::default() };
+                let mut dg = DynGraph::from_edges(g.nu(), g.nv(), &[], opts);
+                for chunk in edges.chunks(edges.len().div_ceil(4).max(1)) {
+                    let out = dg.insert_edges(chunk);
+                    assert_eq!(out.path, UpdatePath::Delta, "{file} t={t}");
+                    assert_matches_recount(&dg, &format!("{file} t={t} prefix"));
+                }
+                assert_eq!(dg.total(), brute::total(&g), "{file} t={t}: final total");
+                assert_eq!(dg.per_vertex_u(), &expect_vc.bu[..], "{file} t={t}");
+                assert_eq!(dg.per_vertex_v(), &expect_vc.bv[..], "{file} t={t}");
+                assert_eq!(dg.per_edge(), &expect_pe[..], "{file} t={t}");
+            });
+        }
+    }
+}
+
+#[test]
+fn golden_corpus_deletion_replay() {
+    // Tear each golden dataset down to empty in batches, checking
+    // after every batch; the walk runs on the pre-deletion graph, so
+    // this exercises the destroy-side filter symmetrically.
+    for file in GOLDEN {
+        let g = load(file);
+        let edges = g.edges();
+        for t in [1usize, 4] {
+            with_threads(t, || {
+                let opts = DynOpts { rebuild_fraction: f64::INFINITY, ..Default::default() };
+                let mut dg = DynGraph::new(g.clone(), opts);
+                for chunk in edges.chunks(edges.len().div_ceil(5).max(1)) {
+                    dg.delete_edges(chunk);
+                    assert_matches_recount(&dg, &format!("{file} t={t} suffix"));
+                }
+                assert_eq!(dg.graph().m(), 0, "{file} t={t}");
+                assert_eq!(dg.total(), 0, "{file} t={t}");
+            });
+        }
+    }
+}
+
+/// One randomized interleaved stream; returns the final graph size.
+fn run_stream(seed: u64, nu: usize, nv: usize, opts: DynOpts, check_every: bool) -> usize {
+    let mut rng = Pcg32::new(seed);
+    let mut dg = DynGraph::from_edges(nu, nv, &[], opts);
+    let mut removed: Vec<(u32, u32)> = Vec::new();
+    for step in 0..30 {
+        let sz = 1 + rng.next_below(10) as usize;
+        if rng.next_below(100) < 55 || dg.graph().m() == 0 {
+            let mut batch: Vec<(u32, u32)> = (0..sz)
+                .map(|_| (rng.next_below(nu as u64) as u32, rng.next_below(nv as u64) as u32))
+                .collect();
+            // Pollution: re-insert a deleted edge, duplicate in-batch,
+            // repeat a present edge.
+            if let Some(&re) = removed.last() {
+                batch.push(re);
+            }
+            let dup = batch[0];
+            batch.push(dup);
+            if dg.graph().m() > 0 {
+                batch.push(dg.graph().edges()[0]);
+            }
+            dg.insert_edges(&batch);
+        } else {
+            let edges = dg.graph().edges();
+            let mut batch: Vec<(u32, u32)> = (0..sz.min(edges.len()))
+                .map(|_| edges[rng.next_below(edges.len() as u64) as usize])
+                .collect();
+            removed.extend(batch.iter().copied());
+            batch.push((0, 0)); // possibly absent
+            dg.delete_edges(&batch);
+        }
+        if check_every {
+            assert_matches_recount(&dg, &format!("seed {seed} step {step}"));
+        }
+    }
+    assert_matches_recount(&dg, &format!("seed {seed} final"));
+    dg.graph().m()
+}
+
+#[test]
+fn randomized_interleaved_streams_match_recount_after_every_batch() {
+    // The headline acceptance property: interleaved insert/delete
+    // batches (with no-op pollution) keep all three granularities
+    // equal to the sequential baseline recount, at 1/4/8 threads,
+    // under both the delta-only and the amortized-rebuild policies.
+    for t in THREADS {
+        with_threads(t, || {
+            for seed in [11u64, 22, 33] {
+                let delta_only =
+                    DynOpts { rebuild_fraction: f64::INFINITY, ..Default::default() };
+                run_stream(seed, 13, 11, delta_only, true);
+                run_stream(seed, 13, 11, DynOpts::default(), true);
+            }
+        });
+    }
+}
+
+#[test]
+fn streams_are_thread_count_invariant() {
+    // Same stream, different thread counts: the *entire* final state
+    // (graph, total, every per-vertex and per-edge count) must be
+    // bit-identical — deltas are exact and commute.
+    let run = |t: usize| {
+        with_threads(t, || {
+            let opts = DynOpts { rebuild_fraction: f64::INFINITY, ..Default::default() };
+            let mut rng = Pcg32::new(77);
+            let mut dg = DynGraph::from_edges(20, 18, &[], opts);
+            for _ in 0..25 {
+                let sz = 1 + rng.next_below(12) as usize;
+                let batch: Vec<(u32, u32)> = (0..sz)
+                    .map(|_| (rng.next_below(20) as u32, rng.next_below(18) as u32))
+                    .collect();
+                if rng.next_below(100) < 60 || dg.graph().m() == 0 {
+                    dg.insert_edges(&batch);
+                } else {
+                    dg.delete_edges(&batch);
+                }
+            }
+            (
+                dg.graph().edges(),
+                dg.total(),
+                dg.per_vertex_u().to_vec(),
+                dg.per_vertex_v().to_vec(),
+                dg.per_edge().to_vec(),
+            )
+        })
+    };
+    let base = run(1);
+    for t in [4usize, 8] {
+        assert_eq!(run(t), base, "t={t}");
+    }
+}
+
+#[test]
+fn property_interleaved_batches_with_reinsertions() {
+    // Heavier single-thread property sweep over many seeds and a
+    // larger universe (checks only at stream end to keep the oracle
+    // cost bounded; the per-batch variant above covers the small
+    // universe exhaustively).
+    for seed in 100..112 {
+        run_stream(seed, 25, 21, DynOpts::default(), false);
+    }
+}
+
+#[test]
+fn replay_stream_facade_on_golden_data() {
+    use parbutterfly::coordinator::replay_stream;
+    use parbutterfly::dynamic::stream::Batch;
+    let g = load("davis.txt");
+    let edges = g.edges();
+    let half = edges.len() / 2;
+    let g0 = BipartiteGraph::from_edges(g.nu(), g.nv(), &edges[..half]);
+    let batches = vec![
+        Batch { kind: BatchKind::Insert, edges: edges[half..].to_vec() },
+        Batch { kind: BatchKind::Delete, edges: edges[..6].to_vec() },
+        Batch { kind: BatchKind::Insert, edges: edges[..6].to_vec() },
+    ];
+    for t in THREADS {
+        let (dg, rep) =
+            with_threads(t, || replay_stream(g0.clone(), &batches, &DynOpts::default(), true));
+        assert_eq!(rep.verified, Some(true), "t={t}");
+        assert_eq!(rep.total, 341, "t={t}: Davis pinned total");
+        assert_eq!(dg.graph().edges(), edges, "t={t}: graph restored");
+    }
+}

@@ -1,7 +1,7 @@
 //! Property-based integration tests: randomized graphs from four
 //! families (ER / Chung-Lu / planted blocks / complete) checked against
 //! brute-force oracles and against each other, across the framework's
-//! configuration space.  Uses the in-repo prop harness (DESIGN.md §2 —
+//! configuration space.  Uses the in-repo prop harness (see ARCHITECTURE.md —
 //! no proptest offline); failures report a reproducing seed.
 
 use parbutterfly::count::{

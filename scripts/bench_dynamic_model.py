@@ -1,0 +1,154 @@
+#!/usr/bin/env python3
+"""Model harness seeding BENCH_dynamic.json.
+
+Mirrors `cargo bench --bench fig_dynamic` at the algorithmic level:
+the last 10% of each workload's edges is replayed as an update stream
+(insert batches, then delete batches of the same edges), comparing
+
+* the **delta** path — per batch edge, the max-edge-id-filtered
+  intersection walk over only the touched adjacency lists (the
+  `DynGraph` incremental rule, validated against brute force by
+  scripts/dynamic_model_check.py), plus the CSR rebuild; against
+* the **recount** baseline — the same CSR rebuild plus a full
+  wedge-walk recount of the whole graph every batch (what serving the
+  stream through the static pipeline costs).
+
+This exists because the authoring container has no Rust toolchain
+(same situation as scripts/bench_intersect_model.py and friends); the
+JSON it writes is labeled `"harness": "python-model"`, runs the
+algorithms serially (per-thread rows only record the decomposition,
+real speedups need native threads), and is overwritten by
+`cargo bench --bench fig_dynamic`.
+
+Usage: python3 scripts/bench_dynamic_model.py
+"""
+import json
+import time
+from collections import defaultdict
+from pathlib import Path
+
+from bench_intersect_model import chung_lu, erdos_renyi, planted_blocks
+
+WORKLOADS = [
+    ("er", erdos_renyi(3_000, 3_000, 60_000, 103)),
+    ("cl", chung_lu(5_000, 8_000, 120_000, 2.1, 105)),
+    ("dense", planted_blocks(1_000, 1_000, 8, 60, 60, 0.85, 2_000, 109)),
+]
+BATCH_SIZES = [64, 1_024, 16_384]
+THREADS = [1, 4, 8]
+UPDATE_FRACTION = 0.10
+
+
+def build_adj(edges):
+    nbrs_u, nbrs_v = defaultdict(set), defaultdict(set)
+    for (u, v) in edges:
+        nbrs_u[u].add(v)
+        nbrs_v[v].add(u)
+    return nbrs_u, nbrs_v
+
+
+def count_via_sources(nbrs_u, nbrs_v):
+    """Static global count via the per-source dense-counter two-hop walk
+    (what the recount path runs every batch)."""
+    total = 0
+    for u1, nv1 in nbrs_u.items():
+        cnt = defaultdict(int)
+        for v in nv1:
+            for u2 in nbrs_v[v]:
+                if u2 > u1:
+                    cnt[u2] += 1
+        for c in cnt.values():
+            total += c * (c - 1) // 2
+    return total
+
+
+def delta_insert(nbrs_u, nbrs_v, batch):
+    """Batch-edge delta walks (insert), after adjacency already updated.
+    Max-order convention via batch position: earlier batch edges and
+    all old edges pass the filter."""
+    batch_pos = {e: i for i, e in enumerate(batch)}
+    gained = 0
+    for i, (u, v) in enumerate(batch):
+        def passes(e):
+            p = batch_pos.get(e)
+            return p is None or p < i
+        stamp = {v2 for v2 in nbrs_u[u] if v2 != v and passes((u, v2))}
+        for u2 in nbrs_v[v]:
+            if u2 == u or not passes((u2, v)):
+                continue
+            for v2 in nbrs_u[u2]:
+                if v2 in stamp and passes((u2, v2)):
+                    gained += 1
+    return gained
+
+
+def replay(base_edges, updates, batch_size, path):
+    nbrs_u, nbrs_v = build_adj(base_edges)
+    for op in ("insert", "delete"):
+        for lo in range(0, len(updates), batch_size):
+            chunk = sorted(set(updates[lo:lo + batch_size]))
+            if op == "insert":
+                for (u, v) in chunk:
+                    nbrs_u[u].add(v)
+                    nbrs_v[v].add(u)
+                if path == "delta":
+                    delta_insert(nbrs_u, nbrs_v, chunk)
+                else:
+                    count_via_sources(nbrs_u, nbrs_v)
+            else:
+                if path == "delta":
+                    delta_insert(nbrs_u, nbrs_v, chunk)  # pre-removal walk
+                else:
+                    count_via_sources(nbrs_u, nbrs_v)
+                for (u, v) in chunk:
+                    nbrs_u[u].discard(v)
+                    nbrs_v[v].discard(u)
+
+
+def main():
+    rows, summary = [], []
+    for wl_id, (nu, nv, edges) in WORKLOADS:
+        split = len(edges) - int(len(edges) * UPDATE_FRACTION)
+        base, updates = edges[:split], edges[split:]
+        print(f"[{wl_id}] {len(updates)} update edges over {split} base")
+        for batch in BATCH_SIZES:
+            if batch > len(updates):
+                continue
+            timings = {}
+            for path in ("delta", "recount"):
+                t0 = time.perf_counter()
+                replay(base, updates, batch, path)
+                timings[path] = (time.perf_counter() - t0) * 1e3
+            for t in THREADS:
+                for path in ("delta", "recount"):
+                    # Serial model: thread rows record the same serial
+                    # measurement (see module docstring).
+                    rows.append({
+                        "workload": wl_id, "batch": batch, "threads": t,
+                        "path": path, "median_ms": round(timings[path], 3),
+                    })
+                summary.append({
+                    "workload": wl_id, "batch": batch, "threads": t,
+                    "delta_ms": round(timings["delta"], 3),
+                    "recount_ms": round(timings["recount"], 3),
+                    "speedup": round(timings["recount"] / max(timings["delta"], 1e-9), 3),
+                })
+            print(f"  b{batch}: delta {timings['delta']:.1f} ms vs "
+                  f"recount-per-batch {timings['recount']:.1f} ms "
+                  f"({timings['recount'] / max(timings['delta'], 1e-9):.1f}x)")
+    out = {
+        "bench": "fig_dynamic",
+        "harness": "python-model",
+        "note": "seeded by scripts/bench_dynamic_model.py (no Rust toolchain in the "
+                "authoring container); serial algorithmic model — thread rows repeat the "
+                "serial measurement; superseded by `cargo bench --bench fig_dynamic`",
+        "rows": rows,
+        "summary": summary,
+    }
+    path = Path(__file__).resolve().parent.parent / "BENCH_dynamic.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

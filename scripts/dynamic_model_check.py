@@ -1,0 +1,234 @@
+#!/usr/bin/env python3
+"""Model check for the batch-dynamic butterfly maintenance algorithm
+(`rust/src/dynamic/`), run in place of `cargo test` because the
+authoring container has no Rust toolchain (same situation as
+scripts/preprocess_model_check.py and scripts/peel_model.py in the
+previous PRs).
+
+It mirrors `DynGraph`'s update rule at the algorithmic level:
+
+* Edges live in a CSR-ordered list (sorted by `(u, v)`); edge id =
+  position, exactly as `BipartiteGraph::from_edges` assigns them.
+* An insert batch B is deduplicated, filtered to genuinely new edges,
+  and applied; the count delta is the number of butterflies of
+  `G_new = G_old + B` that contain at least one batch edge.  Each such
+  butterfly is enumerated exactly once, from its **maximum-edge-id
+  batch edge**: walking batch edge `e`, the other three edges of a
+  candidate butterfly must each be either non-batch or a batch edge
+  with smaller id (batch ids are CSR-sorted, so "smaller id" ==
+  "earlier batch position").
+* A delete batch walks `G_old` (before removal) under the same filter,
+  so each destroyed butterfly is subtracted exactly once.
+* Per-vertex / per-edge counts get +-1 credit for every enumerated
+  butterfly on each of its 4 vertices / 4 edges.
+
+Both walk orientations (stamp N(u), iterate N(v) centers — and the
+side-swapped mirror) are checked against each other and against the
+brute-force recount, over randomized interleaved insert/delete streams
+that include in-batch duplicates, inserts of already-present edges,
+deletes of absent edges, and re-inserts of previously deleted edges.
+
+Usage: python3 scripts/dynamic_model_check.py [iters]
+"""
+import itertools
+import random
+import sys
+from collections import defaultdict
+
+
+def brute_counts(nu, nv, edges):
+    """Ground truth: total, per-vertex, per-(u,v)-edge butterfly counts."""
+    adj_u = defaultdict(set)
+    for (u, v) in edges:
+        adj_u[u].add(v)
+    total = 0
+    bu = defaultdict(int)
+    bv = defaultdict(int)
+    be = defaultdict(int)
+    us = sorted(adj_u)
+    for i, u1 in enumerate(us):
+        for u2 in us[i + 1:]:
+            common = sorted(adj_u[u1] & adj_u[u2])
+            c = len(common)
+            b = c * (c - 1) // 2
+            if b == 0:
+                continue
+            total += b
+            bu[u1] += b
+            bu[u2] += b
+            for v1, v2 in itertools.combinations(common, 2):
+                bv[v1] += 1
+                bv[v2] += 1
+                for e in ((u1, v1), (u1, v2), (u2, v1), (u2, v2)):
+                    be[e] += 1
+    return total, dict(bu), dict(bv), dict(be)
+
+
+class Csr:
+    """Edge-id view mirroring BipartiteGraph: ids are positions in the
+    (u, v)-sorted edge list; both adjacency directions carry the id."""
+
+    def __init__(self, edges):
+        self.edges = sorted(edges)
+        self.eid = {e: i for i, e in enumerate(self.edges)}
+        self.nbrs_u = defaultdict(list)  # u -> [(v, eid)]
+        self.nbrs_v = defaultdict(list)  # v -> [(u, eid)]
+        for i, (u, v) in enumerate(self.edges):
+            self.nbrs_u[u].append((v, i))
+            self.nbrs_v[v].append((u, i))
+
+
+class DynModel:
+    """The DynGraph update rule over plain dicts."""
+
+    def __init__(self, orientation="auto"):
+        self.edges = set()
+        self.total = 0
+        self.bu = defaultdict(int)
+        self.bv = defaultdict(int)
+        self.be = defaultdict(int)  # keyed by (u, v); the Rust side keys
+        # by edge id and remaps on rebuild — same content either way.
+        self.orientation = orientation
+
+    def _walk(self, csr, batch_eids, sign):
+        """Enumerate butterflies containing >=1 batch edge, each exactly
+        once (max-eid batch edge), crediting vertices and edges."""
+        is_batch = set(batch_eids)
+        for e in batch_eids:
+            u, v = csr.edges[e]
+
+            def passes(eid):
+                return eid not in is_batch or eid < e
+
+            cost_a = sum(len(csr.nbrs_u[u2]) for (u2, _) in csr.nbrs_v[v])
+            cost_b = sum(len(csr.nbrs_v[v2]) for (v2, _) in csr.nbrs_u[u])
+            if self.orientation == "a":
+                use_a = True
+            elif self.orientation == "b":
+                use_a = False
+            else:
+                use_a = cost_a <= cost_b
+            found = 0
+            if use_a:
+                # Stamp N(u): second V endpoints + the (u, v2) edge id.
+                stamp = {v2: ev2 for (v2, ev2) in csr.nbrs_u[u]
+                         if v2 != v and passes(ev2)}
+                for (u2, e_u2v) in csr.nbrs_v[v]:
+                    if u2 == u or not passes(e_u2v):
+                        continue
+                    cnt = 0
+                    for (v2, e_u2v2) in csr.nbrs_u[u2]:
+                        if not passes(e_u2v2) or v2 not in stamp:
+                            continue
+                        cnt += 1
+                        self.bv[v2] += sign
+                        self.be[csr.edges[stamp[v2]]] += sign
+                        self.be[csr.edges[e_u2v2]] += sign
+                    if cnt:
+                        self.bu[u2] += sign * cnt
+                        self.be[csr.edges[e_u2v]] += sign * cnt
+                    found += cnt
+            else:
+                # Mirror: stamp N(v), iterate N(u) centers.
+                stamp = {u2: e_u2v for (u2, e_u2v) in csr.nbrs_v[v]
+                         if u2 != u and passes(e_u2v)}
+                for (v2, e_uv2) in csr.nbrs_u[u]:
+                    if v2 == v or not passes(e_uv2):
+                        continue
+                    cnt = 0
+                    for (u2, e_u2v2) in csr.nbrs_v[v2]:
+                        if not passes(e_u2v2) or u2 not in stamp:
+                            continue
+                        cnt += 1
+                        self.bu[u2] += sign
+                        self.be[csr.edges[stamp[u2]]] += sign
+                        self.be[csr.edges[e_u2v2]] += sign
+                    if cnt:
+                        self.bv[v2] += sign * cnt
+                        self.be[csr.edges[e_uv2]] += sign * cnt
+                    found += cnt
+            if found:
+                self.bu[u] += sign * found
+                self.bv[v] += sign * found
+                self.be[(u, v)] += sign * found
+            self.total += sign * found
+
+    def insert(self, batch):
+        fresh = sorted({e for e in batch if e not in self.edges})
+        if not fresh:
+            return
+        self.edges |= set(fresh)
+        csr = Csr(self.edges)  # G_new
+        self._walk(csr, sorted(csr.eid[e] for e in fresh), +1)
+
+    def delete(self, batch):
+        gone = sorted({e for e in batch if e in self.edges})
+        if not gone:
+            return
+        csr = Csr(self.edges)  # G_old: walk before removal
+        self._walk(csr, sorted(csr.eid[e] for e in gone), -1)
+        self.edges -= set(gone)
+        for e in gone:
+            assert self.be.get(e, 0) == 0, f"residual count on deleted {e}"
+            self.be.pop(e, None)
+
+
+def clean(d):
+    return {k: c for k, c in d.items() if c}
+
+
+def run_stream(rng, nu, nv, nbatches, orientation):
+    model = DynModel(orientation)
+    deleted_pool = []
+    for step in range(nbatches):
+        op = rng.random()
+        size = rng.randrange(1, 12)
+        if op < 0.55 or not model.edges:
+            batch = [(rng.randrange(nu), rng.randrange(nv)) for _ in range(size)]
+            if deleted_pool and rng.random() < 0.5:
+                batch += rng.sample(deleted_pool, min(3, len(deleted_pool)))
+            if model.edges and rng.random() < 0.4:  # already-present no-ops
+                batch += rng.sample(sorted(model.edges), min(2, len(model.edges)))
+            batch += batch[: max(1, size // 3)]  # in-batch duplicates
+            model.insert(batch)
+        else:
+            present = rng.sample(sorted(model.edges), min(size, len(model.edges)))
+            absent = [(rng.randrange(nu), rng.randrange(nv)) for _ in range(2)]
+            batch = present + absent + present[:1]
+            deleted_pool += present
+            model.delete(batch)
+        t, bu, bv, be = brute_counts(nu, nv, model.edges)
+        assert model.total == t, f"step {step}: total {model.total} != {t}"
+        assert clean(model.bu) == bu, f"step {step}: per-U mismatch"
+        assert clean(model.bv) == bv, f"step {step}: per-V mismatch"
+        assert clean(model.be) == be, f"step {step}: per-edge mismatch"
+    return model
+
+
+def main():
+    iters = int(sys.argv[1]) if len(sys.argv) > 1 else 120
+    rng = random.Random(20260730)
+    shapes = [(4, 4), (6, 5), (9, 7), (12, 14), (20, 16)]
+    for it in range(iters):
+        nu, nv = shapes[it % len(shapes)]
+        seed = rng.randrange(1 << 30)
+        models = {}
+        for orientation in ("a", "b", "auto"):
+            r = random.Random(seed)
+            models[orientation] = run_stream(r, nu, nv, 14, orientation)
+        base = models["auto"]
+        for o in ("a", "b"):
+            m = models[o]
+            assert m.total == base.total and m.edges == base.edges
+            assert clean(m.be) == clean(base.be), f"orientation {o} drifts"
+        if (it + 1) % 20 == 0:
+            print(f"  {it + 1}/{iters} streams ok "
+                  f"(last: {nu}x{nv}, {len(base.edges)} edges, "
+                  f"{base.total} butterflies)")
+    print(f"OK: {iters} randomized interleaved streams x 3 orientations, "
+          f"all counts (total/per-vertex/per-edge) match brute recount "
+          f"after every batch")
+
+
+if __name__ == "__main__":
+    main()
