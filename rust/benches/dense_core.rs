@@ -1,6 +1,10 @@
-//! Dense-core accelerator: PJRT artifact vs CPU framework (ours; the
-//! Layer-1/2 integration bench).
-use parbutterfly::bench_support::figures;
+//! Dense-core rectangle counting backends and the hybrid crossover.
+//!
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench dense_core` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
+
 fn main() {
-    figures::dense_core_bench("dense");
+    parbutterfly::bench_support::registry::run_from_bench_binary("dense_core");
 }

@@ -1,6 +1,10 @@
-//! Figure 10 + Table 3: ranking comparison and the f metric.
-use parbutterfly::bench_support::figures;
+//! Ranking comparison and the wedge-count ablation (paper Fig. 10 / Table 3).
+//!
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench fig10_rankings` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
+
 fn main() {
-    figures::rankings_figure("fig10", false);
-    figures::wedge_ablation("table3-wedges");
+    parbutterfly::bench_support::registry::run_from_bench_binary("fig10_rankings");
 }

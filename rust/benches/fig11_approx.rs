@@ -1,6 +1,10 @@
-//! Figure 11: approximate counting via sparsification over p.
-use parbutterfly::bench_support::figures;
+//! Approximate counting via edge and colorful sparsification (paper Figs. 11 and 20; both variants run — the old --cache-opt flag is no longer needed).
+//!
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench fig11_approx` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
+
 fn main() {
-    let cache_opt = std::env::args().any(|a| a == "--cache-opt");
-    figures::approx_figure(if cache_opt { "fig20" } else { "fig11" }, cache_opt);
+    parbutterfly::bench_support::registry::run_from_bench_binary("fig11_approx");
 }

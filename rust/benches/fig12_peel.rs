@@ -1,5 +1,10 @@
-//! Figures 12/13: tip & wing decomposition across aggregations.
-use parbutterfly::bench_support::figures;
+//! Tip/wing peeling across engines (paper Fig. 12).
+//!
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench fig12_peel` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
+
 fn main() {
-    figures::peel_figure("fig12");
+    parbutterfly::bench_support::registry::run_from_bench_binary("fig12_peel");
 }

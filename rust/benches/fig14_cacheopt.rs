@@ -1,13 +1,10 @@
-//! §6.3–6.4 (Figs 14–19, Table 5): the cache-optimization suite —
-//! the counting benches re-run with Wang et al.'s wedge retrieval, on
-//! the two skewed workloads (the regime where the optimization
-//! matters; bounded for total bench time).
-use parbutterfly::bench_support::figures::{self, Stat};
+//! Cache-optimized counting figures and Table 5 (paper Figs. 14-16/19).
+//!
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench fig14_cacheopt` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
+
 fn main() {
-    let suite = ["cl", "clL"];
-    figures::agg_figure_on("fig14", Stat::PerVertex, true, &suite);
-    figures::agg_figure_on("fig15", Stat::PerEdge, true, &suite);
-    figures::agg_figure_on("fig16", Stat::Total, true, &suite);
-    figures::rankings_figure_on("fig19", true, &suite);
-    figures::counting_table_on("table5", true, &suite);
+    parbutterfly::bench_support::registry::run_from_bench_binary("fig14_cacheopt");
 }

@@ -1,5 +1,10 @@
-//! Figure 5: per-vertex counting across aggregation methods.
-use parbutterfly::bench_support::figures::{agg_figure, Stat};
+//! Per-vertex butterfly counting across wedge aggregations (paper Fig. 5).
+//!
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench fig5_agg_vertex` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
+
 fn main() {
-    agg_figure("fig5", Stat::PerVertex, false);
+    parbutterfly::bench_support::registry::run_from_bench_binary("fig5_agg_vertex");
 }

@@ -1,5 +1,10 @@
-//! Figure 6: per-edge counting across aggregation methods.
-use parbutterfly::bench_support::figures::{agg_figure, Stat};
+//! Per-edge butterfly counting across wedge aggregations (paper Fig. 6).
+//!
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench fig6_agg_edge` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
+
 fn main() {
-    agg_figure("fig6", Stat::PerEdge, false);
+    parbutterfly::bench_support::registry::run_from_bench_binary("fig6_agg_edge");
 }

@@ -1,5 +1,10 @@
-//! Figure 7: total counting across aggregation methods.
-use parbutterfly::bench_support::figures::{agg_figure, Stat};
+//! Total butterfly counting across wedge aggregations (paper Fig. 7).
+//!
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench fig7_agg_total` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
+
 fn main() {
-    agg_figure("fig7", Stat::Total, false);
+    parbutterfly::bench_support::registry::run_from_bench_binary("fig7_agg_total");
 }

@@ -1,7 +1,10 @@
-//! Figures 8/9: thread-count sweeps for per-vertex/per-edge counting.
-//! (Single-core substrate: records fork-join overhead, not speedup —
-//! see ARCHITECTURE.md.)
-use parbutterfly::bench_support::figures;
+//! Self-relative scaling over the thread sweep (paper Fig. 8).
+//!
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench fig8_scaling` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
+
 fn main() {
-    figures::scaling_figure("fig8", false);
+    parbutterfly::bench_support::registry::run_from_bench_binary("fig8_scaling");
 }

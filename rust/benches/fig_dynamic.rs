@@ -1,121 +1,10 @@
-//! Batch-dynamic maintenance vs full recount, swept over batch size ×
-//! thread count.  Prints the usual human + `BENCHROW` rows and writes
-//! `BENCH_dynamic.json` at the workspace root so the perf trajectory
-//! of the dynamic workload is recorded in-repo.
+//! Batch-dynamic maintenance vs recount-per-batch; rewrites BENCH_dynamic.json at the workspace root.
 //!
-//! For each workload, the last `UPDATE_FRACTION` of the edges becomes
-//! an update stream (insert batches, then delete batches of the same
-//! edges — the graph returns to its starting state between
-//! measurements).  The incremental path (`rebuild_fraction = ∞`) is
-//! timed against the recount-every-batch baseline
-//! (`rebuild_fraction = 0`), which is what serving the same stream
-//! through the static pipeline would cost.
-//!
-//! Regenerate: `cargo bench --bench fig_dynamic`
-
-use parbutterfly::bench_support::harness::{banner, bench_n, report};
-use parbutterfly::bench_support::workloads;
-use parbutterfly::dynamic::{DynGraph, DynOpts};
-use parbutterfly::graph::BipartiteGraph;
-use parbutterfly::prims::pool::with_threads;
-
-const SUITE: [&str; 3] = ["er", "cl", "dense"];
-const BATCH_SIZES: [usize; 3] = [64, 1_024, 16_384];
-const THREADS: [usize; 3] = [1, 4, 8];
-/// Fraction of each workload's edges replayed as the update stream.
-const UPDATE_FRACTION: f64 = 0.10;
-
-fn replay(
-    base: &BipartiteGraph,
-    updates: &[(u32, u32)],
-    batch: usize,
-    rebuild_fraction: f64,
-) -> u64 {
-    let mut dg = DynGraph::new(base.clone(), DynOpts { rebuild_fraction, ..Default::default() });
-    for chunk in updates.chunks(batch) {
-        dg.insert_edges(chunk);
-    }
-    let total_at_peak = dg.total();
-    for chunk in updates.chunks(batch) {
-        dg.delete_edges(chunk);
-    }
-    assert_eq!(dg.graph().m(), base.m(), "stream returns to the base graph");
-    total_at_peak
-}
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench fig_dynamic` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
 
 fn main() {
-    banner(
-        "dynamic",
-        "incremental batch maintenance vs recount-per-batch; emits BENCH_dynamic.json",
-    );
-    let mut rows_json = Vec::new();
-    let mut summary_json = Vec::new();
-    for wl_id in SUITE {
-        let wl = workloads::build(wl_id);
-        let edges = wl.graph.edges();
-        let split = edges.len() - (edges.len() as f64 * UPDATE_FRACTION) as usize;
-        let base = BipartiteGraph::from_edges(wl.graph.nu(), wl.graph.nv(), &edges[..split]);
-        let updates = &edges[split..];
-        println!("[{}] {} — {} update edges over {split} base", wl.id, wl.describe, updates.len());
-        for &batch in &BATCH_SIZES {
-            if batch > updates.len() {
-                continue;
-            }
-            for &t in &THREADS {
-                let mut expect = None;
-                let mut delta_ms = f64::NAN;
-                let mut recount_ms = f64::NAN;
-                for (label, fraction) in
-                    [("delta", f64::INFINITY), ("recount", 0.0)]
-                {
-                    let mut peak = 0u64;
-                    let m = with_threads(t, || {
-                        bench_n(1, 3, || {
-                            peak = replay(&base, updates, batch, fraction);
-                            peak
-                        })
-                    });
-                    match expect {
-                        None => expect = Some(peak),
-                        Some(e) => assert_eq!(e, peak, "{label} diverges on {wl_id}"),
-                    }
-                    let config = format!("b{batch}/t{t}/{label}");
-                    report("dynamic", wl.id, &config, &m);
-                    rows_json.push(format!(
-                        "    {{\"workload\": \"{}\", \"batch\": {batch}, \"threads\": {t}, \
-                         \"path\": \"{label}\", \"median_ms\": {:.3}}}",
-                        wl.id, m.median_ms
-                    ));
-                    if label == "delta" {
-                        delta_ms = m.median_ms;
-                    } else {
-                        recount_ms = m.median_ms;
-                    }
-                }
-                let speedup = recount_ms / delta_ms;
-                println!(
-                    "  [b{batch}/t{t}] delta {delta_ms:.2} ms vs recount-per-batch \
-                     {recount_ms:.2} ms ({speedup:.2}x)"
-                );
-                summary_json.push(format!(
-                    "    {{\"workload\": \"{}\", \"batch\": {batch}, \"threads\": {t}, \
-                     \"delta_ms\": {delta_ms:.3}, \"recount_ms\": {recount_ms:.3}, \
-                     \"speedup\": {speedup:.3}, \"butterflies_at_peak\": {}}}",
-                    wl.id,
-                    expect.unwrap()
-                ));
-            }
-        }
-    }
-    let json = format!(
-        "{{\n  \"bench\": \"fig_dynamic\",\n  \"note\": \"replay of insert-then-delete update \
-         stream (10% of edges); median ms over 3 timed runs (1 warmup); regenerate with \
-         `cargo bench --bench fig_dynamic`\",\n  \"rows\": [\n{}\n  ],\n  \
-         \"summary\": [\n{}\n  ]\n}}\n",
-        rows_json.join(",\n"),
-        summary_json.join(",\n")
-    );
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_dynamic.json");
-    std::fs::write(path, &json).expect("write BENCH_dynamic.json");
-    println!("wrote {path}");
+    parbutterfly::bench_support::registry::run_from_bench_binary("fig_dynamic");
 }

@@ -1,94 +1,10 @@
-//! Streaming intersect engine vs the materializing aggregations, on
-//! the generated counting workloads.  Prints the usual human +
-//! `BENCHROW` rows and additionally writes `BENCH_intersect.json` at
-//! the workspace root so the perf trajectory of the
-//! zero-materialization path is recorded in-repo.
+//! Streaming intersect vs materializing aggregations; rewrites BENCH_intersect.json at the workspace root.
 //!
-//! Regenerate: `cargo bench --bench intersect_vs_agg`
-
-use parbutterfly::bench_support::figures::agg_rows;
-use parbutterfly::bench_support::harness::{banner, bench, report};
-use parbutterfly::bench_support::workloads;
-use parbutterfly::count::{count_per_edge, count_per_vertex, count_total, CountOpts};
-use parbutterfly::rank::choose_ranking;
-
-const SUITE: [&str; 3] = ["er", "cl", "dense"];
-const STATS: [&str; 3] = ["total", "vertex", "edge"];
-
-fn run(g: &parbutterfly::graph::BipartiteGraph, stat: &str, opts: &CountOpts) -> u64 {
-    match stat {
-        "total" => count_total(g, opts),
-        "vertex" => count_per_vertex(g, opts).bu.iter().sum::<u64>() / 2,
-        _ => count_per_edge(g, opts).iter().sum::<u64>() / 4,
-    }
-}
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench intersect_vs_agg` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
 
 fn main() {
-    banner(
-        "intersect",
-        "streaming intersect vs materializing aggregations; emits BENCH_intersect.json",
-    );
-    let mut rows_json = Vec::new();
-    let mut summary_json = Vec::new();
-    for wl_id in SUITE {
-        let wl = workloads::build(wl_id);
-        let g = &wl.graph;
-        let ranking = choose_ranking(g);
-        println!("[{}] {} — ranking {}", wl.id, wl.describe, ranking.name());
-        for stat in STATS {
-            let mut expected = None;
-            let mut best_mat: Option<(&'static str, f64)> = None;
-            let mut intersect_ms = f64::NAN;
-            for (label, base) in agg_rows() {
-                let opts = CountOpts { ranking, ..base };
-                let mut result = 0u64;
-                let m = bench(|| {
-                    result = run(g, stat, &opts);
-                    result
-                });
-                match expected {
-                    None => expected = Some(result),
-                    Some(e) => assert_eq!(e, result, "{label} disagrees on {wl_id}/{stat}"),
-                }
-                report("intersect", wl.id, &format!("{stat}/{label}"), &m);
-                rows_json.push(format!(
-                    "    {{\"workload\": \"{}\", \"stat\": \"{stat}\", \"config\": \"{label}\", \
-                     \"median_ms\": {:.3}}}",
-                    wl.id, m.median_ms
-                ));
-                if label == "Intersect" {
-                    intersect_ms = m.median_ms;
-                } else if best_mat.map(|(_, ms)| m.median_ms < ms).unwrap_or(true) {
-                    best_mat = Some((label, m.median_ms));
-                }
-            }
-            let (best_label, best_ms) = best_mat.unwrap();
-            let speedup = best_ms / intersect_ms;
-            println!(
-                "  [{}/{stat}] intersect {intersect_ms:.2} ms vs best materializing \
-                 {best_label} {best_ms:.2} ms ({speedup:.2}x)",
-                wl.id
-            );
-            summary_json.push(format!(
-                "    {{\"workload\": \"{}\", \"stat\": \"{stat}\", \
-                 \"best_materializing\": \"{best_label}\", \
-                 \"best_materializing_ms\": {best_ms:.3}, \
-                 \"intersect_ms\": {intersect_ms:.3}, \"speedup\": {speedup:.3}, \
-                 \"butterflies\": {}}}",
-                wl.id,
-                expected.unwrap()
-            ));
-        }
-    }
-    let json = format!(
-        "{{\n  \"bench\": \"intersect_vs_agg\",\n  \"note\": \"median ms over 3 timed runs \
-         (1 warmup); regenerate with `cargo bench --bench intersect_vs_agg`\",\n  \
-         \"threads\": {},\n  \"rows\": [\n{}\n  ],\n  \"summary\": [\n{}\n  ]\n}}\n",
-        parbutterfly::prims::pool::num_threads(),
-        rows_json.join(",\n"),
-        summary_json.join(",\n")
-    );
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_intersect.json");
-    std::fs::write(path, &json).expect("write BENCH_intersect.json");
-    println!("wrote {path}");
+    parbutterfly::bench_support::registry::run_from_bench_binary("intersect_vs_agg");
 }

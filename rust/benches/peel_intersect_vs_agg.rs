@@ -1,96 +1,10 @@
-//! Streaming intersect peel engine vs the aggregation UPDATE paths, on
-//! the peeling workloads.  Prints the usual human + `BENCHROW` rows and
-//! additionally writes `BENCH_peel.json` at the workspace root so the
-//! perf trajectory of the wedge-free peeling path is recorded in-repo.
+//! Peeling UPDATE paths vs the streaming intersect engine; rewrites BENCH_peel.json at the workspace root.
 //!
-//! Regenerate: `cargo bench --bench peel_intersect_vs_agg`
-
-use parbutterfly::bench_support::figures::peel_rows;
-use parbutterfly::bench_support::harness::{banner, bench_n, report};
-use parbutterfly::bench_support::workloads::{self, PEELING_SUITE};
-use parbutterfly::count::{count_per_edge, count_per_vertex, CountOpts};
-use parbutterfly::peel::{peel_edges, peel_vertices, BucketKind, PeelEOpts, PeelSide, PeelVOpts};
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench peel_intersect_vs_agg` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
 
 fn main() {
-    banner(
-        "peel",
-        "aggregation UPDATE paths vs streaming intersect peeling; emits BENCH_peel.json",
-    );
-    let mut rows_json = Vec::new();
-    let mut summary_json = Vec::new();
-    for wl_id in PEELING_SUITE {
-        let wl = workloads::build(wl_id);
-        let g = &wl.graph;
-        let vc = count_per_vertex(g, &CountOpts::default());
-        let be = count_per_edge(g, &CountOpts::default());
-        println!("[{}] {}", wl.id, wl.describe);
-        for mode in ["tip", "wing"] {
-            let mut expected: Option<Vec<u64>> = None;
-            let mut rounds = 0usize;
-            let mut best_agg: Option<(&'static str, f64)> = None;
-            let mut intersect_ms = f64::NAN;
-            for (label, engine, agg) in peel_rows() {
-                let mut result = Vec::new();
-                let m = bench_n(0, 2, || {
-                    if mode == "tip" {
-                        let vopts = PeelVOpts {
-                            engine,
-                            agg,
-                            buckets: BucketKind::Julienne,
-                            side: PeelSide::Auto,
-                        };
-                        let r = peel_vertices(g, &vc.bu, &vc.bv, &vopts);
-                        rounds = r.rounds;
-                        result = r.tips;
-                    } else {
-                        let eopts = PeelEOpts { engine, agg, buckets: BucketKind::Julienne };
-                        let r = peel_edges(g, &be, &eopts);
-                        rounds = r.rounds;
-                        result = r.wings;
-                    }
-                });
-                if let Some(e) = &expected {
-                    assert_eq!(e, &result, "{label} disagrees on {wl_id}/{mode}");
-                } else {
-                    expected = Some(std::mem::take(&mut result));
-                }
-                report("peel", wl.id, &format!("{mode}/{label}"), &m);
-                rows_json.push(format!(
-                    "    {{\"workload\": \"{}\", \"mode\": \"{mode}\", \"config\": \"{label}\", \
-                     \"median_ms\": {:.3}, \"rounds\": {rounds}}}",
-                    wl.id, m.median_ms
-                ));
-                if label == "intersect" {
-                    intersect_ms = m.median_ms;
-                } else if best_agg.map(|(_, ms)| m.median_ms < ms).unwrap_or(true) {
-                    best_agg = Some((label, m.median_ms));
-                }
-            }
-            let (best_label, best_ms) = best_agg.unwrap();
-            let speedup = best_ms / intersect_ms;
-            println!(
-                "  [{}/{mode}] intersect {intersect_ms:.2} ms vs best aggregation \
-                 {best_label} {best_ms:.2} ms ({speedup:.2}x, {rounds} rounds)",
-                wl.id
-            );
-            summary_json.push(format!(
-                "    {{\"workload\": \"{}\", \"mode\": \"{mode}\", \
-                 \"best_agg\": \"{best_label}\", \"best_agg_ms\": {best_ms:.3}, \
-                 \"intersect_ms\": {intersect_ms:.3}, \"speedup\": {speedup:.3}, \
-                 \"rounds\": {rounds}}}",
-                wl.id
-            ));
-        }
-    }
-    let json = format!(
-        "{{\n  \"bench\": \"peel_intersect_vs_agg\",\n  \"note\": \"median ms over 2 timed \
-         runs; regenerate with `cargo bench --bench peel_intersect_vs_agg`\",\n  \
-         \"threads\": {},\n  \"rows\": [\n{}\n  ],\n  \"summary\": [\n{}\n  ]\n}}\n",
-        parbutterfly::prims::pool::num_threads(),
-        rows_json.join(",\n"),
-        summary_json.join(",\n")
-    );
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_peel.json");
-    std::fs::write(path, &json).expect("write BENCH_peel.json");
-    println!("wrote {path}");
+    parbutterfly::bench_support::registry::run_from_bench_binary("peel_intersect_vs_agg");
 }

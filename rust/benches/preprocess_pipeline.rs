@@ -1,77 +1,10 @@
-//! Preprocessing pipeline bench: parse (serial vs chunked parallel),
-//! CSR construction, each ranking, and the PREPROCESS build, swept at
-//! 1/4/8 threads.  Prints the usual human + `BENCHROW` rows and writes
-//! `BENCH_preprocess.json` at the workspace root so the perf
-//! trajectory of everything *upstream of the counting engines* is
-//! recorded in-repo.
+//! Parse / CSR / rank / PREPROCESS stage timings over the thread sweep; rewrites BENCH_preprocess.json at the workspace root.
 //!
-//! Regenerate: `cargo bench --bench preprocess_pipeline`
-
-use std::path::PathBuf;
-
-use parbutterfly::bench_support::harness::{banner, bench, report, Measurement};
-use parbutterfly::bench_support::workloads;
-use parbutterfly::graph::{io, BipartiteGraph, RankedGraph};
-use parbutterfly::prims::pool::with_threads;
-use parbutterfly::rank::{rank_vertices, Ranking};
-
-const SUITE: [&str; 3] = ["er", "cl", "clL"];
-const THREADS: [usize; 3] = [1, 4, 8];
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench preprocess_pipeline` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
 
 fn main() {
-    banner(
-        "preprocess",
-        "parse / CSR / rank / PREPROCESS stage timings at 1/4/8 threads; emits \
-         BENCH_preprocess.json",
-    );
-    let dir = std::env::temp_dir().join("pb_preprocess_bench");
-    std::fs::create_dir_all(&dir).expect("create temp dir");
-    let mut rows_json = Vec::new();
-    for wl_id in SUITE {
-        let wl = workloads::build(wl_id);
-        let g = &wl.graph;
-        let path: PathBuf = dir.join(format!("{wl_id}.txt"));
-        io::save_edge_list(g, &path).expect("write workload edge list");
-        println!("[{}] {} — m={}", wl.id, wl.describe, g.m());
-        // Parity anchor: both parse paths must agree before timing.
-        let parsed = io::parse_edge_list_serial(&path).expect("serial parse");
-        assert_eq!(parsed, io::parse_edge_list_parallel(&path).expect("parallel parse"));
-        let (nu, nv, edges) = parsed;
-        for t in THREADS {
-            with_threads(t, || {
-                let mut stage = |name: &str, m: &Measurement| {
-                    report("preprocess", wl.id, &format!("t{t}/{name}"), m);
-                    rows_json.push(format!(
-                        "    {{\"workload\": \"{}\", \"stage\": \"{name}\", \"threads\": {t}, \
-                         \"median_ms\": {:.3}}}",
-                        wl.id, m.median_ms
-                    ));
-                };
-                let m = bench(|| io::parse_edge_list_serial(&path).unwrap());
-                stage("parse-serial", &m);
-                let m = bench(|| io::parse_edge_list_parallel(&path).unwrap());
-                stage("parse-parallel", &m);
-                let m = bench(|| BipartiteGraph::from_edges(nu, nv, &edges));
-                stage("csr-build", &m);
-                for ranking in Ranking::ALL {
-                    let m = bench(|| rank_vertices(g, ranking));
-                    stage(&format!("rank-{}", ranking.name()), &m);
-                }
-                let rank = rank_vertices(g, Ranking::Degree);
-                let m = bench(|| RankedGraph::new(g, rank.clone()));
-                stage("preprocess-build", &m);
-            });
-        }
-    }
-    let json = format!(
-        "{{\n  \"bench\": \"preprocess_pipeline\",\n  \"note\": \"median ms over 3 timed runs \
-         (1 warmup); stages: parse-serial / parse-parallel (chunked loader), csr-build \
-         (BipartiteGraph::from_edges), rank-* (rank_vertices per ordering), preprocess-build \
-         (RankedGraph::new, Algorithm 1); regenerate with `cargo bench --bench \
-         preprocess_pipeline`\",\n  \"threads_swept\": [1, 4, 8],\n  \"rows\": [\n{}\n  ]\n}}\n",
-        rows_json.join(",\n")
-    );
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_preprocess.json");
-    std::fs::write(path, &json).expect("write BENCH_preprocess.json");
-    println!("wrote {path}");
+    parbutterfly::bench_support::registry::run_from_bench_binary("preprocess_pipeline");
 }

@@ -1,6 +1,10 @@
-//! Table 1: workload statistics (sizes, butterfly counts, peeling
-//! complexities).  `cargo bench --bench table1_datasets`.
-use parbutterfly::bench_support::figures;
+//! Dataset statistics (paper Table 1).
+//!
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench table1_datasets` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
+
 fn main() {
-    figures::datasets_table("table1");
+    parbutterfly::bench_support::registry::run_from_bench_binary("table1_datasets");
 }

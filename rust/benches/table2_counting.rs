@@ -1,6 +1,10 @@
-//! Table 2: best parallel counting vs sequential baselines
-//! (Sanei-Mehri, Chiba–Nishizeki, Wang 2014, PGD-like).
-use parbutterfly::bench_support::figures;
+//! Counting comparison vs baselines (paper Table 2).
+//!
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench table2_counting` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
+
 fn main() {
-    figures::counting_table("table2", false);
+    parbutterfly::bench_support::registry::run_from_bench_binary("table2_counting");
 }

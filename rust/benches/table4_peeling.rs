@@ -1,6 +1,10 @@
-//! Table 4: peeling vs the Sariyüce–Pinar dense-bucket baseline,
-//! plus Fibonacci-heap and wedge-storing ablations.
-use parbutterfly::bench_support::figures;
+//! Peeling comparison vs baselines (paper Table 4).
+//!
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench table4_peeling` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
+
 fn main() {
-    figures::peeling_table("table4");
+    parbutterfly::bench_support::registry::run_from_bench_binary("table4_peeling");
 }

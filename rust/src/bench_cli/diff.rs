@@ -1,0 +1,405 @@
+//! `bench diff` — the regression barometer over `BENCH_*.json` files.
+//!
+//! Rows are matched by *identity*: every row field except the measured
+//! annotations (`median_ms`, `min_ms`, `max_ms`, `p90_ms`, `runs`,
+//! `value`, `rounds`, `butterflies`).  That makes the comparison
+//! schema-agnostic across the four snapshot shapes — (workload, stat,
+//! config) for counting, (workload, mode, config) for peeling,
+//! (workload, stage, threads) for preprocessing, (workload, batch,
+//! threads, path) for dynamic — and keeps python-model seed rows
+//! comparable with native rows.
+//!
+//! A row regressed when `new_median / old_median > threshold`;
+//! improvements are the mirror image.  `cmd_diff` prints a ranked
+//! table and returns an error (nonzero process exit) when any
+//! regression passes the threshold — that error is the CI perf gate.
+//!
+//! `--check-schema` instead validates each file against the stable
+//! snapshot schema (`bench` / `harness` / `rows`; every row carries a
+//! workload and a numeric `median_ms` or `value`), so CI catches a
+//! malformed snapshot before it poisons future diffs.
+
+use std::path::Path;
+
+use crate::bench_support::json::Json;
+
+/// Row fields that describe the *measurement*, not the row identity.
+const ANNOTATIONS: [&str; 8] =
+    ["median_ms", "min_ms", "max_ms", "p90_ms", "runs", "value", "rounds", "butterflies"];
+
+/// Stable identity of a snapshot row: the non-annotation fields,
+/// sorted, rendered `k=v` — robust to field order and to labels
+/// containing spaces (never re-parsed from a composed string).
+pub fn row_key(row: &Json) -> Option<String> {
+    let obj = row.as_obj()?;
+    let mut parts: Vec<String> = obj
+        .iter()
+        .filter(|(k, _)| !ANNOTATIONS.contains(&k.as_str()))
+        .map(|(k, v)| match v.as_str() {
+            Some(s) => format!("{k}={s}"),
+            None => format!("{k}={}", v.compact()),
+        })
+        .collect();
+    if parts.is_empty() {
+        return None;
+    }
+    parts.sort();
+    Some(parts.join(" "))
+}
+
+/// One compared row.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub key: String,
+    pub old_ms: f64,
+    pub new_ms: f64,
+    /// `new_ms / old_ms` — above 1 is slower.
+    pub ratio: f64,
+}
+
+/// Outcome of comparing two snapshots.
+#[derive(Debug, Default)]
+pub struct Diff {
+    /// Rows past the threshold, worst first.
+    pub regressions: Vec<DiffRow>,
+    /// Rows past the mirrored threshold, best first.
+    pub improvements: Vec<DiffRow>,
+    /// Rows within the threshold either way.
+    pub within: usize,
+    /// Identity keys only in the new file.
+    pub added: Vec<String>,
+    /// Identity keys only in the old file.
+    pub removed: Vec<String>,
+}
+
+fn timed_rows(doc: &Json) -> anyhow::Result<Vec<(String, f64)>> {
+    let rows = doc
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("snapshot has no `rows` array"))?;
+    let mut out = Vec::new();
+    for row in rows {
+        // Unmeasured rows (`value`-only: f-metrics, dataset stats)
+        // carry no timing to compare.
+        let Some(ms) = row.get("median_ms").and_then(Json::as_f64) else {
+            continue;
+        };
+        let key = row_key(row).ok_or_else(|| {
+            anyhow::anyhow!("row {} has no identity fields", row.compact())
+        })?;
+        out.push((key, ms));
+    }
+    Ok(out)
+}
+
+/// Compare two parsed snapshots at `threshold` (> 1).
+pub fn diff_docs(old: &Json, new: &Json, threshold: f64) -> anyhow::Result<Diff> {
+    anyhow::ensure!(threshold > 1.0, "bad --threshold {threshold} (need a ratio > 1)");
+    let old_rows = timed_rows(old)?;
+    let new_rows = timed_rows(new)?;
+    let mut diff = Diff::default();
+    for (key, new_ms) in &new_rows {
+        // Duplicate identities would make "the" old median ambiguous;
+        // first match wins and duplicates are a schema-check concern.
+        match old_rows.iter().find(|(k, _)| k == key) {
+            None => diff.added.push(key.clone()),
+            Some((_, old_ms)) => {
+                // Sub-precision medians (0.0 after 3-decimal rounding)
+                // cannot support a ratio; treat as within-threshold.
+                let ratio = if *old_ms > 0.0 && *new_ms > 0.0 { new_ms / old_ms } else { 1.0 };
+                let row = DiffRow { key: key.clone(), old_ms: *old_ms, new_ms: *new_ms, ratio };
+                if ratio > threshold {
+                    diff.regressions.push(row);
+                } else if ratio < 1.0 / threshold {
+                    diff.improvements.push(row);
+                } else {
+                    diff.within += 1;
+                }
+            }
+        }
+    }
+    for (key, _) in &old_rows {
+        if !new_rows.iter().any(|(k, _)| k == key) {
+            diff.removed.push(key.clone());
+        }
+    }
+    diff.regressions.sort_by(|a, b| b.ratio.partial_cmp(&a.ratio).unwrap());
+    diff.improvements.sort_by(|a, b| a.ratio.partial_cmp(&b.ratio).unwrap());
+    Ok(diff)
+}
+
+/// Validate one snapshot file against the stable schema.
+pub fn check_schema(path: &Path) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e:#}", path.display()))?;
+    let fail = |what: &str| anyhow::anyhow!("{}: {what}", path.display());
+    doc.get("bench").and_then(Json::as_str).ok_or_else(|| fail("missing string `bench`"))?;
+    let harness =
+        doc.get("harness").and_then(Json::as_str).ok_or_else(|| fail("missing string `harness`"))?;
+    anyhow::ensure!(
+        harness == "native" || harness == "python-model",
+        fail(&format!("harness {harness:?} is neither \"native\" nor \"python-model\""))
+    );
+    let rows = doc.get("rows").and_then(Json::as_arr).ok_or_else(|| fail("missing `rows` array"))?;
+    let mut keys: Vec<String> = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        let rfail = |what: &str| fail(&format!("rows[{i}] {what}"));
+        row.get("workload")
+            .and_then(Json::as_str)
+            .ok_or_else(|| rfail("has no string `workload`"))?;
+        let timed = row.get("median_ms").and_then(Json::as_f64).is_some();
+        let valued = row.get("value").is_some();
+        anyhow::ensure!(timed || valued, rfail("has neither numeric `median_ms` nor `value`"));
+        if timed {
+            let key = row_key(row).ok_or_else(|| rfail("has no identity fields"))?;
+            anyhow::ensure!(
+                !keys.contains(&key),
+                rfail(&format!("duplicates identity `{key}`"))
+            );
+            keys.push(key);
+        }
+    }
+    Ok(())
+}
+
+fn print_section(title: &str, rows: &[DiffRow]) {
+    if rows.is_empty() {
+        return;
+    }
+    println!("{title}:");
+    for r in rows {
+        println!(
+            "  {:>7.2}x  {:>10.3} ms -> {:>10.3} ms   {}",
+            r.ratio, r.old_ms, r.new_ms, r.key
+        );
+    }
+}
+
+/// `bench diff` entry point (`argv` excludes `diff` itself).
+pub fn cmd_diff(argv: &[String]) -> anyhow::Result<()> {
+    let mut files: Vec<&str> = Vec::new();
+    let mut threshold = 1.15_f64;
+    let mut check = false;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--threshold" => {
+                i += 1;
+                let s = argv.get(i).ok_or_else(|| anyhow::anyhow!("--threshold needs a value"))?;
+                threshold = s
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|t| *t > 1.0)
+                    .ok_or_else(|| anyhow::anyhow!("bad --threshold {s:?} (need a ratio > 1)"))?;
+                i += 1;
+            }
+            "--check-schema" => {
+                check = true;
+                i += 1;
+            }
+            other if other.starts_with("--") => {
+                anyhow::bail!(
+                    "unknown bench diff flag {other:?} (valid: --threshold|--check-schema)"
+                )
+            }
+            file => {
+                files.push(file);
+                i += 1;
+            }
+        }
+    }
+    if check {
+        anyhow::ensure!(!files.is_empty(), "bench diff --check-schema needs at least one file");
+        for f in &files {
+            check_schema(Path::new(f))?;
+            println!("ok: {f}");
+        }
+        return Ok(());
+    }
+    anyhow::ensure!(
+        files.len() == 2,
+        "bench diff needs exactly two files: OLD.json NEW.json (got {})",
+        files.len()
+    );
+    let load = |p: &str| -> anyhow::Result<Json> {
+        Json::parse(&std::fs::read_to_string(p).map_err(|e| anyhow::anyhow!("{p}: {e}"))?)
+            .map_err(|e| anyhow::anyhow!("{p}: {e:#}"))
+    };
+    let old = load(files[0])?;
+    let new = load(files[1])?;
+    let diff = diff_docs(&old, &new, threshold)?;
+    println!(
+        "bench diff: {} vs {} (threshold {threshold}x)",
+        files[0], files[1]
+    );
+    print_section("regressions (worst first)", &diff.regressions);
+    print_section("improvements (best first)", &diff.improvements);
+    if !diff.added.is_empty() {
+        println!("new rows (no baseline): {}", diff.added.len());
+    }
+    if !diff.removed.is_empty() {
+        println!("removed rows:");
+        for k in &diff.removed {
+            println!("  {k}");
+        }
+    }
+    println!(
+        "{} row(s) within threshold, {} regressed, {} improved, {} added, {} removed",
+        diff.within,
+        diff.regressions.len(),
+        diff.improvements.len(),
+        diff.added.len(),
+        diff.removed.len()
+    );
+    anyhow::ensure!(
+        diff.regressions.is_empty(),
+        "{} row(s) regressed past {threshold}x (worst: {} at {:.2}x)",
+        diff.regressions.len(),
+        diff.regressions[0].key,
+        diff.regressions[0].ratio
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(rows: &str) -> Json {
+        Json::parse(&format!(
+            r#"{{"bench": "t", "harness": "native", "rows": [{rows}]}}"#
+        ))
+        .unwrap()
+    }
+
+    fn row(workload: &str, config: &str, ms: f64) -> String {
+        format!(r#"{{"workload": "{workload}", "config": "{config}", "median_ms": {ms}}}"#)
+    }
+
+    #[test]
+    fn regression_past_threshold_is_detected_and_ranked() {
+        let old = snap(&[row("er", "a", 10.0), row("er", "b", 10.0)].join(", "));
+        let new = snap(&[row("er", "a", 13.0), row("er", "b", 20.0)].join(", "));
+        let d = diff_docs(&old, &new, 1.15).unwrap();
+        assert_eq!(d.regressions.len(), 2);
+        // Ranked worst-first: b at 2.0x before a at 1.3x.
+        assert!(d.regressions[0].key.contains("config=b"));
+        assert!((d.regressions[0].ratio - 2.0).abs() < 1e-9);
+        assert!(d.regressions[1].key.contains("config=a"));
+        assert_eq!(d.within, 0);
+        assert!(d.improvements.is_empty());
+    }
+
+    #[test]
+    fn within_threshold_rows_do_not_trip_the_gate() {
+        let old = snap(&row("er", "a", 10.0));
+        let new = snap(&row("er", "a", 11.0));
+        let d = diff_docs(&old, &new, 1.15).unwrap();
+        assert!(d.regressions.is_empty() && d.improvements.is_empty());
+        assert_eq!(d.within, 1);
+        // And the inverse direction counts as an improvement.
+        let d = diff_docs(&old, &snap(&row("er", "a", 5.0)), 1.15).unwrap();
+        assert_eq!(d.improvements.len(), 1);
+        assert!((d.improvements[0].ratio - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn new_and_missing_rows_are_reported_not_compared() {
+        let old = snap(&[row("er", "a", 10.0), row("er", "gone", 9.0)].join(", "));
+        let new = snap(&[row("er", "a", 10.0), row("cl", "fresh", 3.0)].join(", "));
+        let d = diff_docs(&old, &new, 1.15).unwrap();
+        assert_eq!(d.added, vec!["config=fresh workload=cl".to_string()]);
+        assert_eq!(d.removed, vec!["config=gone workload=er".to_string()]);
+        assert_eq!(d.within, 1);
+        assert!(d.regressions.is_empty());
+    }
+
+    #[test]
+    fn identity_ignores_annotations_and_survives_spaces() {
+        let a = Json::parse(
+            r#"{"workload": "er", "config": "PB par", "median_ms": 1.0, "p90_ms": 2.0,
+                "runs": 3, "rounds": 7}"#,
+        )
+        .unwrap();
+        let b = Json::parse(r#"{"config": "PB par", "workload": "er", "median_ms": 99.0}"#)
+            .unwrap();
+        assert_eq!(row_key(&a).unwrap(), "config=PB par workload=er");
+        assert_eq!(row_key(&a), row_key(&b), "field order and annotations must not matter");
+    }
+
+    #[test]
+    fn cmd_diff_exits_nonzero_on_doctored_regression() {
+        let dir = std::env::temp_dir().join("pb_bench_diff_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let old_p = dir.join("old.json");
+        let new_p = dir.join("new.json");
+        std::fs::write(&old_p, snap(&row("er", "a", 10.0)).pretty()).unwrap();
+        std::fs::write(&new_p, snap(&row("er", "a", 30.0)).pretty()).unwrap();
+        let argv = |v: &[&str]| -> Vec<String> { v.iter().map(|s| s.to_string()).collect() };
+        let err = cmd_diff(&argv(&[old_p.to_str().unwrap(), new_p.to_str().unwrap()]))
+            .expect_err("3x regression must fail the gate");
+        assert!(format!("{err:#}").contains("regressed"));
+        // A generous threshold lets the same pair pass.
+        cmd_diff(&argv(&[
+            old_p.to_str().unwrap(),
+            new_p.to_str().unwrap(),
+            "--threshold",
+            "4.0",
+        ]))
+        .unwrap();
+        // Flag hygiene.
+        assert!(cmd_diff(&argv(&["--threshold", "0.5", "x", "y"])).is_err());
+        assert!(cmd_diff(&argv(&["only-one.json"])).is_err());
+        assert!(cmd_diff(&argv(&["a", "b", "--bogus"])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn check_schema_accepts_good_and_rejects_bad_files() {
+        let dir = std::env::temp_dir().join("pb_bench_schema_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("good.json");
+        std::fs::write(&good, snap(&row("er", "a", 1.0)).pretty()).unwrap();
+        check_schema(&good).unwrap();
+        for (name, text) in [
+            ("not-json.json", "{nope"),
+            ("no-harness.json", r#"{"bench": "t", "rows": []}"#),
+            ("bad-harness.json", r#"{"bench": "t", "harness": "guess", "rows": []}"#),
+            ("no-rows.json", r#"{"bench": "t", "harness": "native"}"#),
+            (
+                "bad-row.json",
+                r#"{"bench": "t", "harness": "native", "rows": [{"workload": "er"}]}"#,
+            ),
+            (
+                "dup-row.json",
+                &format!(
+                    r#"{{"bench": "t", "harness": "native", "rows": [{}, {}]}}"#,
+                    row("er", "a", 1.0),
+                    row("er", "a", 2.0)
+                ),
+            ),
+        ] {
+            let p = dir.join(name);
+            std::fs::write(&p, text).unwrap();
+            assert!(check_schema(&p).is_err(), "{name} must fail schema check");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn committed_snapshots_pass_the_schema_check_and_self_diff_clean() {
+        let root = crate::bench_support::registry::workspace_root();
+        for name in
+            ["BENCH_intersect.json", "BENCH_peel.json", "BENCH_preprocess.json",
+             "BENCH_dynamic.json"]
+        {
+            let path = root.join(name);
+            check_schema(&path).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+            let d = diff_docs(&doc, &doc, 1.15).unwrap();
+            assert!(d.regressions.is_empty() && d.improvements.is_empty(), "{name} self-diff");
+            assert!(d.added.is_empty() && d.removed.is_empty(), "{name} self-diff");
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! `parbutterfly bench` — the native benchmark harness CLI.
+//!
+//! Three subcommands, rebar-style (named workloads, one runner,
+//! recorded results, a regression barometer):
+//!
+//! ```text
+//! bench list                          # every registered target
+//! bench run [--filter S] [--smoke] [--threads T] [--out-dir DIR]
+//! bench diff OLD.json NEW.json [--threshold 1.15]
+//! bench diff --check-schema FILE...
+//! ```
+//!
+//! `bench run` executes targets from the shared
+//! [`crate::bench_support::registry`] — the same code `cargo bench`
+//! runs — and rewrites the `BENCH_*.json` snapshots with
+//! `harness: "native"` rows plus environment metadata.  `--smoke` is
+//! the CI profile: tiny workloads, 0 warmup + 1 timed run, snapshots
+//! written to a temp directory (never dirtying the committed files)
+//! unless `--out-dir` says otherwise.
+//!
+//! `bench diff` compares medians per identity row (all row fields
+//! except the measured annotations) and exits nonzero when any row
+//! regressed past the threshold — the perf gate CI and future PRs
+//! cite instead of eyeballing `BENCHROW` dumps.
+
+pub mod diff;
+
+use std::path::PathBuf;
+
+use crate::bench_support::registry::{self, Profile, Target};
+use crate::prims::pool::with_threads;
+
+const HELP: &str = "parbutterfly bench — native benchmark harness
+  bench list                                   list registered targets
+  bench run  [--filter S] [--smoke] [--threads T] [--out-dir DIR]
+  bench diff OLD.json NEW.json [--threshold R]  (R > 1, default 1.15)
+  bench diff --check-schema FILE...             validate snapshot schema";
+
+/// Entry point from the main CLI dispatcher (`argv` excludes `bench`).
+pub fn run(argv: &[String]) -> anyhow::Result<()> {
+    let sub = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = &argv[1.min(argv.len())..];
+    match sub {
+        "list" => cmd_list(rest),
+        "run" => cmd_run(rest),
+        "diff" => diff::cmd_diff(rest),
+        "help" | "--help" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown bench subcommand {other:?} (valid: run|diff|list)"),
+    }
+}
+
+/// Pull the value after a flag, erroring (not defaulting) when absent.
+fn flag_value<'a>(argv: &'a [String], i: &mut usize, flag: &str) -> anyhow::Result<&'a str> {
+    *i += 1;
+    let v = argv.get(*i).ok_or_else(|| anyhow::anyhow!("{flag} needs a value"))?;
+    *i += 1;
+    Ok(v)
+}
+
+fn cmd_list(argv: &[String]) -> anyhow::Result<()> {
+    anyhow::ensure!(argv.is_empty(), "bench list takes no arguments");
+    println!("{:<12} {:<22} {:<22} description", "id", "cargo bench --bench", "snapshot");
+    for t in registry::targets() {
+        println!(
+            "{:<12} {:<22} {:<22} {}",
+            t.id,
+            t.bin,
+            t.snapshot.unwrap_or("-"),
+            t.describe
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
+    let mut filter: Option<String> = None;
+    let mut smoke = false;
+    let mut threads: Option<usize> = None;
+    let mut out_dir: Option<PathBuf> = None;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--smoke" => {
+                smoke = true;
+                i += 1;
+            }
+            "--filter" => filter = Some(flag_value(argv, &mut i, "--filter")?.to_string()),
+            "--threads" => {
+                let s = flag_value(argv, &mut i, "--threads")?;
+                threads = match s.parse::<usize>() {
+                    Ok(t) if t > 0 => Some(t),
+                    _ => anyhow::bail!("bad --threads {s:?} (need a positive integer)"),
+                };
+            }
+            "--out-dir" => {
+                out_dir = Some(PathBuf::from(flag_value(argv, &mut i, "--out-dir")?))
+            }
+            other => anyhow::bail!(
+                "unknown bench run flag {other:?} (valid: --filter|--smoke|--threads|--out-dir)"
+            ),
+        }
+    }
+    let profile = if smoke { Profile::Smoke } else { Profile::Full };
+    // Full runs rewrite the committed snapshots at the workspace root;
+    // smoke runs are a harness health check and land in a temp dir.
+    let out_dir = out_dir.unwrap_or_else(|| match profile {
+        Profile::Full => registry::workspace_root(),
+        Profile::Smoke => std::env::temp_dir().join("pb_bench_smoke"),
+    });
+    let selected: Vec<&'static Target> = registry::targets()
+        .iter()
+        .filter(|t| match &filter {
+            Some(f) => t.id.contains(f.as_str()) || t.bin.contains(f.as_str()),
+            None => true,
+        })
+        .collect();
+    anyhow::ensure!(
+        !selected.is_empty(),
+        "no bench targets match --filter {:?} (see `bench list`)",
+        filter.as_deref().unwrap_or("")
+    );
+    let run_all = || -> anyhow::Result<usize> {
+        let mut snapshots = 0;
+        for t in &selected {
+            println!("\n### bench {} — {}", t.id, t.describe);
+            if let Some(path) = registry::run_target(t, profile, &out_dir)? {
+                println!("snapshot: {}", path.display());
+                snapshots += 1;
+            }
+        }
+        Ok(snapshots)
+    };
+    let snapshots = match threads {
+        Some(t) => with_threads(t, run_all),
+        None => run_all(),
+    }?;
+    println!(
+        "\nran {} target(s) at the {} profile ({} snapshot(s) written to {})",
+        selected.len(),
+        profile.name(),
+        snapshots,
+        out_dir.display()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn unknown_subcommands_and_flags_are_rejected() {
+        assert!(run(&argv(&["frobnicate"])).is_err());
+        assert!(run(&argv(&["run", "--no-such-flag"])).is_err());
+        assert!(run(&argv(&["run", "--threads", "zero"])).is_err());
+        assert!(run(&argv(&["run", "--threads", "0"])).is_err());
+        assert!(run(&argv(&["run", "--filter"])).is_err(), "--filter needs a value");
+        assert!(run(&argv(&["run", "--filter", "no-such-target"])).is_err());
+        assert!(run(&argv(&["list", "stray"])).is_err());
+        run(&argv(&["list"])).unwrap();
+        run(&argv(&[])).unwrap(); // help
+    }
+
+    #[test]
+    fn smoke_run_writes_native_snapshots_to_out_dir() {
+        let dir = std::env::temp_dir().join("pb_bench_cli_smoke_test");
+        std::fs::remove_dir_all(&dir).ok();
+        run(&argv(&[
+            "run",
+            "--smoke",
+            "--filter",
+            "dynamic",
+            "--threads",
+            "2",
+            "--out-dir",
+            dir.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let text = std::fs::read_to_string(dir.join("BENCH_dynamic.json")).unwrap();
+        let doc = crate::bench_support::json::Json::parse(&text).unwrap();
+        assert_eq!(doc.get("harness").unwrap().as_str().unwrap(), "native");
+        assert_eq!(
+            doc.get("env").unwrap().get("profile").unwrap().as_str().unwrap(),
+            "smoke"
+        );
+        assert!(!doc.get("rows").unwrap().as_arr().unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -20,7 +20,8 @@ use crate::peel::{
 use crate::prims::pool::with_threads;
 use crate::rank::{choose_ranking, f_metric, preprocess, Ranking};
 
-use super::harness::{banner, bench, bench_n, report, report_normalized};
+use super::harness::{banner, bench, bench_n, report, report_normalized, report_value};
+use super::json::Json;
 use super::workloads::{self, COUNTING_SUITE, PEELING_SUITE};
 
 /// Counting target: which statistic a figure measures.
@@ -157,7 +158,7 @@ pub fn counting_table_on(bench_name: &str, cache_opt: bool, suite: &[&str]) {
             }
             None => {
                 println!("  {:<24} > {:?} (budget exhausted)", "total/PGD-like", budget);
-                println!("BENCHROW {bench_name} {} total/PGD-like-timeout {}", wl.id, 60_000);
+                report_value(bench_name, wl.id, "total/PGD-like-timeout", Json::Num(60_000.0));
             }
         }
         assert_eq!(seq_count::sanei_mehri_total(g), expect);
@@ -184,13 +185,18 @@ pub fn counting_table_on(bench_name: &str, cache_opt: bool, suite: &[&str]) {
 
 /// Figures 8/9 (17/18 with `cache_opt`): thread-count sweep.
 pub fn scaling_figure(bench_name: &str, cache_opt: bool) {
+    scaling_figure_on(bench_name, cache_opt, "clL", &[1, 2, 4]);
+}
+
+/// [`scaling_figure`] on an explicit workload and thread matrix.
+pub fn scaling_figure_on(bench_name: &str, cache_opt: bool, wl_id: &str, threads: &[usize]) {
     banner(
         bench_name,
-        "thread sweep on clL; paper: Figs 8/9 (17/18 with cache opt).  NOTE: the bench \
+        "thread sweep; paper: Figs 8/9 (17/18 with cache opt).  NOTE: the bench \
          substrate has ONE physical core — the sweep exercises the fork-join machinery \
          and records overhead, it cannot show real speedup (see ARCHITECTURE.md).",
     );
-    let wl = workloads::build("clL");
+    let wl = workloads::build(wl_id);
     let ranking = choose_ranking(&wl.graph);
     for (stat, label) in [(Stat::PerVertex, "per-vertex"), (Stat::PerEdge, "per-edge")] {
         for (agg_label, base) in agg_rows() {
@@ -200,7 +206,7 @@ pub fn scaling_figure(bench_name: &str, cache_opt: bool) {
             if !matches!(agg_label, "AHash" | "BatchS" | "BatchWA" | "Intersect") {
                 continue;
             }
-            for t in [1usize, 2, 4] {
+            for &t in threads {
                 let opts = CountOpts { ranking, cache_opt, ..base.clone() };
                 let m = bench_n(0, 2, || with_threads(t, || run_count(&wl.graph, stat, &opts)));
                 report(bench_name, wl.id, &format!("{label}/{agg_label}/t{t}"), &m);
@@ -229,7 +235,7 @@ pub fn rankings_figure_on(bench_name: &str, cache_opt: bool, suite: &[&str]) {
         for r in Ranking::ALL {
             let f = f_metric(&wl.graph, r);
             println!("  f({:<7}) = {:+.4}", r.name(), f);
-            println!("BENCHROW {bench_name}-f {} {} {:.6}", wl.id, r.name(), f);
+            report_value(&format!("{bench_name}-f"), wl.id, r.name(), Json::Num(f));
         }
         // Fig 10: runtime per ranking (rank+count together).
         let mut rows = Vec::new();
@@ -245,16 +251,21 @@ pub fn rankings_figure_on(bench_name: &str, cache_opt: bool, suite: &[&str]) {
 /// Figure 11 (20 with `cache_opt`): sparsification sweep, 1-thread vs
 /// parallel, plus estimate quality.
 pub fn approx_figure(bench_name: &str, cache_opt: bool) {
+    approx_figure_on(bench_name, cache_opt, "clL", &[0.1, 0.25, 0.5, 0.75]);
+}
+
+/// [`approx_figure`] on an explicit workload and `p` sweep.
+pub fn approx_figure_on(bench_name: &str, cache_opt: bool, wl_id: &str, ps: &[f64]) {
     banner(
         bench_name,
-        "edge & colorful sparsification over p on clL; paper: Fig 11 (20 with cache opt)",
+        "edge & colorful sparsification over p; paper: Fig 11 (20 with cache opt)",
     );
-    let wl = workloads::build("clL");
+    let wl = workloads::build(wl_id);
     let g = &wl.graph;
     let opts = CountOpts { cache_opt, ..Default::default() };
     let exact = count_total(g, &opts) as f64;
     println!("exact = {exact}");
-    for &p in &[0.1f64, 0.25, 0.5, 0.75] {
+    for &p in ps {
         let mut est = 0.0;
         let m = bench(|| {
             est = sparsify::approx_total_edge(g, p, 7, &opts);
@@ -290,12 +301,17 @@ pub fn peel_rows() -> Vec<(&'static str, PeelEngine, WedgeAgg)> {
 /// Figures 12/13: peeling runtime per aggregation method, plus the
 /// streaming intersect engine as a ninth row.
 pub fn peel_figure(bench_name: &str) {
+    peel_figure_on(bench_name, &PEELING_SUITE);
+}
+
+/// [`peel_figure`] on an explicit workload list.
+pub fn peel_figure_on(bench_name: &str, suite: &[&str]) {
     banner(
         bench_name,
         "tip & wing decomposition across aggregations + intersect engine (Julienne \
          buckets); paper: Figs 12/13",
     );
-    for wl_id in PEELING_SUITE {
+    for &wl_id in suite {
         let wl = workloads::build(wl_id);
         let g = &wl.graph;
         let vc = count_per_vertex(g, &CountOpts::default());
@@ -325,11 +341,16 @@ pub fn peel_figure(bench_name: &str) {
 /// dense-array baseline (with its empty-bucket scan count), plus the
 /// WPEEL and Fibonacci-heap variants as ablations.
 pub fn peeling_table(bench_name: &str) {
+    peeling_table_on(bench_name, &PEELING_SUITE);
+}
+
+/// [`peeling_table`] on an explicit workload list.
+pub fn peeling_table_on(bench_name: &str, suite: &[&str]) {
     banner(
         bench_name,
         "peeling vs the dense-bucket sequential baseline; paper: Table 4",
     );
-    for wl_id in PEELING_SUITE {
+    for &wl_id in suite {
         let wl = workloads::build(wl_id);
         let g = &wl.graph;
         let vc = count_per_vertex(g, &CountOpts::default());
@@ -407,12 +428,17 @@ fn mirror(g: &BipartiteGraph) -> BipartiteGraph {
 
 /// Table 1: the dataset statistics table.
 pub fn datasets_table(bench_name: &str) {
+    datasets_table_on(bench_name, &workloads::ALL);
+}
+
+/// [`datasets_table`] on an explicit workload list.
+pub fn datasets_table_on(bench_name: &str, suite: &[&str]) {
     banner(bench_name, "workload statistics; paper: Table 1");
     println!(
         "{:<8} {:>8} {:>8} {:>9} {:>14} {:>7} {:>7}",
         "dataset", "|U|", "|V|", "|E|", "#butterflies", "rho_v", "rho_e"
     );
-    for wl_id in workloads::ALL {
+    for &wl_id in suite {
         let wl = workloads::build(wl_id);
         let g = &wl.graph;
         let total = count_total(g, &CountOpts::default());
@@ -437,7 +463,7 @@ pub fn datasets_table(bench_name: &str) {
             rv,
             re
         );
-        println!("BENCHROW {bench_name} {} stats {}", wl.id, total);
+        report_value(bench_name, wl.id, "stats", Json::Num(total as f64));
     }
 }
 
@@ -446,6 +472,12 @@ pub fn datasets_table(bench_name: &str) {
 /// otherwise) vs CPU framework on dense-block workloads, plus the
 /// hybrid split.
 pub fn dense_core_bench(bench_name: &str) {
+    dense_core_bench_sized(bench_name, false);
+}
+
+/// [`dense_core_bench`]; `quick` restricts to the smallest tile and
+/// skips the hybrid sweep (smoke profile).
+pub fn dense_core_bench_sized(bench_name: &str, quick: bool) {
     banner(
         bench_name,
         "dense-core backend vs CPU sparse path (PARBUTTERFLY_BACKEND selects; \
@@ -460,12 +492,13 @@ pub fn dense_core_bench(bench_name: &str) {
     };
     use crate::graph::gen;
     println!("backend: {}", backend.name());
-    for (label, g) in [
-        ("er-256", gen::erdos_renyi(256, 256, 8_000, 21)),
-        ("dense-256", gen::planted_blocks(256, 256, 4, 64, 64, 0.9, 500, 22)),
-        ("er-512", gen::erdos_renyi(512, 512, 30_000, 23)),
-        ("k-128x128", gen::complete_bipartite(128, 128)),
-    ] {
+    let mut tiles = vec![("er-256", gen::erdos_renyi(256, 256, 8_000, 21))];
+    if !quick {
+        tiles.push(("dense-256", gen::planted_blocks(256, 256, 4, 64, 64, 0.9, 500, 22)));
+        tiles.push(("er-512", gen::erdos_renyi(512, 512, 30_000, 23)));
+        tiles.push(("k-128x128", gen::complete_bipartite(128, 128)));
+    }
+    for (label, g) in tiles {
         let expect = count_total(&g, &CountOpts::default());
         let m = bench(|| crate::count::dense::count_total_dense(&g, backend.as_ref()).unwrap());
         report(bench_name, label, &format!("dense-{}", backend.name()), &m);
@@ -473,6 +506,9 @@ pub fn dense_core_bench(bench_name: &str) {
         report(bench_name, label, "cpu-framework", &m);
         let got = crate::count::dense::count_total_dense(&g, backend.as_ref()).unwrap();
         assert_eq!(got, expect, "{label}");
+    }
+    if quick {
+        return;
     }
     // Hybrid on a larger skewed graph.
     let g = gen::chung_lu(2_000, 3_000, 60_000, 2.05, 25);
@@ -504,12 +540,17 @@ pub fn dense_core_bench(bench_name: &str) {
 /// Extra ablation: wedge counts per ranking (drives the Fig 10 story
 /// without timing noise) — used by fig10 and the `BENCH_*.json` snapshots.
 pub fn wedge_ablation(bench_name: &str) {
+    wedge_ablation_on(bench_name, &COUNTING_SUITE);
+}
+
+/// [`wedge_ablation`] on an explicit workload list.
+pub fn wedge_ablation_on(bench_name: &str, suite: &[&str]) {
     banner(bench_name, "wedges processed per ranking (exact counts)");
-    for wl_id in COUNTING_SUITE {
+    for &wl_id in suite {
         let wl = workloads::build(wl_id);
         for r in Ranking::ALL {
             let w = preprocess(&wl.graph, r).wedges_processed();
-            println!("BENCHROW {bench_name} {} {} {}", wl.id, r.name(), w);
+            report_value(bench_name, wl.id, r.name(), Json::Num(w as f64));
         }
     }
 }

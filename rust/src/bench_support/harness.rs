@@ -1,17 +1,27 @@
 //! Micro-bench harness (offline stand-in for criterion).
 //!
 //! Benches are `harness = false` binaries; each calls [`bench`] /
-//! [`bench_n`] and prints two row formats:
+//! [`bench_n`] and prints three row formats:
 //!
 //! * human rows — the same row/series structure as the paper's table
 //!   or figure;
-//! * machine rows — `BENCHROW <bench> <workload> <config> <median_ms>`
-//!   lines the `BENCH_*.json` snapshots record.
+//! * legacy machine rows — `BENCHROW <bench> <workload> <config>
+//!   <median_ms>` (space-separated; composed config labels make this
+//!   format ambiguous, so it is kept only for eyeball-grepping);
+//! * structured machine rows — `BENCHJSON {...}` one-object-per-line
+//!   JSON carrying the full [`Measurement`] plus any structured row
+//!   fields.  This is the format the `bench run` recorder consumes
+//!   ([`record`]) and the `BENCH_*.json` snapshots are built from.
 //!
 //! Timing: `warmup` un-timed runs, then `runs` timed runs; the median
-//! is reported (min/max retained for dispersion).
+//! is reported (min/max/p90 retained for dispersion).  Under
+//! [`set_quick`] (the `bench run --smoke` profile) every call is
+//! clamped to 0 warmup + 1 timed run.
 
+use std::cell::Cell;
 use std::time::Instant;
+
+use super::json::Json;
 
 /// One measured result.
 #[derive(Clone, Debug)]
@@ -19,12 +29,39 @@ pub struct Measurement {
     pub median_ms: f64,
     pub min_ms: f64,
     pub max_ms: f64,
+    /// 90th-percentile sample (nearest-rank); equals `max_ms` for
+    /// small run counts — recorded so `bench diff` can report tail
+    /// dispersion, not just medians.
+    pub p90_ms: f64,
     pub runs: usize,
+}
+
+thread_local! {
+    /// Quick (smoke) mode: clamp every bench to 0 warmup + 1 run.
+    static QUICK: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Enable/disable quick mode for this thread (smoke profile).
+pub fn set_quick(on: bool) {
+    QUICK.with(|q| q.set(on));
+}
+
+/// Is quick (smoke) mode active on this thread?
+pub fn quick() -> bool {
+    QUICK.with(|q| q.get())
+}
+
+/// Nearest-rank percentile over ascending `samples` (`q` in 0..=1).
+fn percentile(samples: &[f64], q: f64) -> f64 {
+    debug_assert!(!samples.is_empty());
+    let rank = (samples.len() as f64 * q).ceil() as usize;
+    samples[rank.clamp(1, samples.len()) - 1]
 }
 
 /// Time `f` with `warmup` + `runs` invocations; returns the stats.
 pub fn bench_n<R>(warmup: usize, runs: usize, mut f: impl FnMut() -> R) -> Measurement {
     assert!(runs >= 1);
+    let (warmup, runs) = if quick() { (0, 1) } else { (warmup, runs) };
     for _ in 0..warmup {
         std::hint::black_box(f());
     }
@@ -35,11 +72,20 @@ pub fn bench_n<R>(warmup: usize, runs: usize, mut f: impl FnMut() -> R) -> Measu
         samples.push(t.elapsed().as_secs_f64() * 1e3);
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Even run counts average the two middle samples; `samples[n/2]`
+    // alone is the *upper* middle and biases medians high.
+    let n = samples.len();
+    let median_ms = if n % 2 == 0 {
+        (samples[n / 2 - 1] + samples[n / 2]) / 2.0
+    } else {
+        samples[n / 2]
+    };
     Measurement {
-        median_ms: samples[samples.len() / 2],
+        median_ms,
         min_ms: samples[0],
         max_ms: *samples.last().unwrap(),
-        runs,
+        p90_ms: percentile(&samples, 0.9),
+        runs: n,
     }
 }
 
@@ -49,13 +95,92 @@ pub fn bench<R>(f: impl FnMut() -> R) -> Measurement {
     bench_n(1, 3, f)
 }
 
-/// Print both row formats.
-pub fn report(bench_name: &str, workload: &str, config: &str, m: &Measurement) {
+/// The `bench run` recorder: an optional per-thread sink that
+/// [`report_keyed`] / [`report_value`] push each structured
+/// (`BENCHJSON`) row into.  The registry wraps every snapshot target
+/// in [`record::start`] / [`record::finish`] and builds the
+/// `BENCH_*.json` rows from exactly what was printed.
+pub mod record {
+    use super::Json;
+    use std::cell::RefCell;
+
+    thread_local! {
+        static SINK: RefCell<Option<Vec<Json>>> = const { RefCell::new(None) };
+    }
+
+    /// Begin recording rows on this thread (replaces any prior sink).
+    pub fn start() {
+        SINK.with(|s| *s.borrow_mut() = Some(Vec::new()));
+    }
+
+    /// Stop recording and return everything captured since [`start`].
+    pub fn finish() -> Vec<Json> {
+        SINK.with(|s| s.borrow_mut().take()).unwrap_or_default()
+    }
+
+    pub(super) fn push(row: Json) {
+        SINK.with(|s| {
+            if let Some(rows) = s.borrow_mut().as_mut() {
+                rows.push(row);
+            }
+        });
+    }
+}
+
+/// Emit one measured row in all machine formats (legacy `BENCHROW`,
+/// structured `BENCHJSON`, recorder).
+///
+/// `display` is the composed human/`BENCHROW` label (e.g.
+/// `"total/BatchS"`); `fields` are the structured identity fields the
+/// snapshot row keeps *separately* (e.g. `stat: "total"`,
+/// `config: "BatchS"`), so composed labels never need re-parsing and
+/// spaces in labels cannot corrupt the machine format.
+pub fn report_keyed(
+    bench_name: &str,
+    workload: &str,
+    display: &str,
+    m: &Measurement,
+    fields: &[(&str, Json)],
+) {
     println!(
-        "  {config:<24} median {:>10.2} ms   (min {:.2}, max {:.2}, n={})",
-        m.median_ms, m.min_ms, m.max_ms, m.runs
+        "  {display:<24} median {:>10.2} ms   (min {:.2}, max {:.2}, p90 {:.2}, n={})",
+        m.median_ms, m.min_ms, m.max_ms, m.p90_ms, m.runs
     );
-    println!("BENCHROW {bench_name} {workload} {config} {:.3}", m.median_ms);
+    println!("BENCHROW {bench_name} {workload} {display} {:.3}", m.median_ms);
+    let mut row: Vec<(String, Json)> = vec![
+        ("bench".into(), Json::str(bench_name)),
+        ("workload".into(), Json::str(workload)),
+    ];
+    for (k, v) in fields {
+        row.push(((*k).to_string(), v.clone()));
+    }
+    row.push(("median_ms".into(), Json::ms(m.median_ms)));
+    row.push(("min_ms".into(), Json::ms(m.min_ms)));
+    row.push(("max_ms".into(), Json::ms(m.max_ms)));
+    row.push(("p90_ms".into(), Json::ms(m.p90_ms)));
+    row.push(("runs".into(), Json::Num(m.runs as f64)));
+    let row = Json::Obj(row);
+    println!("BENCHJSON {}", row.compact());
+    record::push(row);
+}
+
+/// Emit an *unmeasured* recorded value (an `f`-metric, a wedge count,
+/// a dataset statistic) in the machine formats.
+pub fn report_value(bench_name: &str, workload: &str, config: &str, value: Json) {
+    println!("BENCHROW {bench_name} {workload} {config} {}", value.compact());
+    let row = Json::Obj(vec![
+        ("bench".into(), Json::str(bench_name)),
+        ("workload".into(), Json::str(workload)),
+        ("config".into(), Json::str(config)),
+        ("value".into(), value),
+    ]);
+    println!("BENCHJSON {}", row.compact());
+    record::push(row);
+}
+
+/// Print both row formats for a simple `config`-keyed measurement.
+pub fn report(bench_name: &str, workload: &str, config: &str, m: &Measurement) {
+    report_keyed(bench_name, workload, config, m, &[("config", Json::str(config))]);
 }
 
 /// Print a figure-style normalized bar: `value / best` per config.
@@ -72,7 +197,7 @@ pub fn report_normalized(bench_name: &str, workload: &str, rows: &[(String, Meas
             m.median_ms / best,
             "#".repeat(bar_len.max(1))
         );
-        println!("BENCHROW {bench_name} {workload} {config} {:.3}", m.median_ms);
+        report_keyed(bench_name, workload, config, m, &[("config", Json::str(config))]);
     }
 }
 
@@ -98,6 +223,75 @@ mod tests {
             s
         });
         assert!(m.min_ms <= m.median_ms && m.median_ms <= m.max_ms);
+        assert!(m.median_ms <= m.p90_ms && m.p90_ms <= m.max_ms);
         assert_eq!(m.runs, 5);
+    }
+
+    #[test]
+    fn median_of_even_runs_averages_the_middle_pair() {
+        // Feed deterministic "samples" by sorting a known multiset:
+        // easier to pin the arithmetic directly on the helper path.
+        let samples = [1.0, 2.0, 4.0, 8.0];
+        let n = samples.len();
+        let median = (samples[n / 2 - 1] + samples[n / 2]) / 2.0;
+        assert_eq!(median, 3.0);
+        // And through the public API: with identical work per run the
+        // measured median must sit between min and max even for even
+        // run counts (the old upper-middle bug made median == a raw
+        // sample; the averaged version must satisfy the same bounds).
+        let m = bench_n(0, 4, || std::hint::black_box(3u64.pow(7)));
+        assert_eq!(m.runs, 4);
+        assert!(m.min_ms <= m.median_ms && m.median_ms <= m.max_ms);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let s = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        assert_eq!(percentile(&s, 0.9), 9.0);
+        assert_eq!(percentile(&s[..1], 0.9), 1.0);
+        assert_eq!(percentile(&s[..4], 0.9), 4.0);
+    }
+
+    #[test]
+    fn quick_mode_clamps_runs() {
+        set_quick(true);
+        let m = bench_n(3, 9, || ());
+        set_quick(false);
+        assert_eq!(m.runs, 1);
+    }
+
+    #[test]
+    fn recorder_captures_structured_rows() {
+        record::start();
+        let m = bench_n(0, 1, || ());
+        report_keyed(
+            "t2",
+            "er",
+            "total/PB par",
+            &m,
+            &[("stat", Json::str("total")), ("config", Json::str("PB par"))],
+        );
+        report_value("t2", "er", "stats", Json::Num(42.0));
+        let rows = record::finish();
+        assert_eq!(rows.len(), 2);
+        // Config names with spaces survive structurally.
+        assert_eq!(rows[0].get("config").unwrap().as_str().unwrap(), "PB par");
+        assert_eq!(rows[0].get("stat").unwrap().as_str().unwrap(), "total");
+        assert!(rows[0].get("median_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(rows[0].get("p90_ms").is_some());
+        assert_eq!(rows[1].get("value").unwrap().as_f64().unwrap(), 42.0);
+        // A second finish without start is empty, not stale.
+        assert!(record::finish().is_empty());
+    }
+
+    #[test]
+    fn benchjson_lines_round_trip_through_the_parser() {
+        record::start();
+        let m = bench_n(0, 2, || ());
+        report("fig5 test", "cl", "label with spaces", &m);
+        let rows = record::finish();
+        assert_eq!(rows.len(), 1);
+        let reparsed = Json::parse(&rows[0].compact()).unwrap();
+        assert_eq!(&reparsed, &rows[0]);
     }
 }

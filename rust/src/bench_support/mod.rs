@@ -1,8 +1,23 @@
 //! Benchmark substrate: the workload suite (the stand-ins for the
-//! paper's KONECT datasets) and a small timing harness (criterion is
+//! paper's KONECT datasets), a small timing harness (criterion is
 //! unavailable offline; `cargo bench` drives `harness = false` targets
-//! built on [`harness::bench`]).
+//! built on [`harness::bench`]), and the target [`registry`] both
+//! `cargo bench` and `parbutterfly bench run` dispatch through.
+//!
+//! Layout:
+//!
+//! * [`harness`] — timing ([`harness::bench_n`]), row formats
+//!   (`BENCHROW` / `BENCHJSON`), the `bench run` row recorder;
+//! * [`json`] — minimal JSON value (parse / print), no serde offline;
+//! * [`workloads`] — named generated graphs and suites;
+//! * [`figures`] — the paper's figure/table workload bodies;
+//! * [`snapshots`] — the four workloads recorded as `BENCH_*.json`;
+//! * [`registry`] — named targets uniting all of the above; the
+//!   snapshot writer with environment/provenance metadata.
 
 pub mod figures;
 pub mod harness;
+pub mod json;
+pub mod registry;
+pub mod snapshots;
 pub mod workloads;

@@ -1,0 +1,508 @@
+//! Registry of named benchmark targets — one entry per bench binary.
+//!
+//! This is the single list both entry points dispatch through:
+//!
+//! * `cargo bench --bench <bin>` — each `rust/benches/*.rs` is a thin
+//!   wrapper calling [`run_from_bench_binary`];
+//! * `parbutterfly bench run` — the CLI runner iterates the same
+//!   [`targets`] list.
+//!
+//! Because both paths execute the same target function under the same
+//! recorder, "what `bench run` measured" and "what `cargo bench`
+//! measured" are identical by construction (rebar-style: named
+//! workloads, one runner, recorded results).
+//!
+//! Targets whose results are tracked in-repo declare a `snapshot`
+//! file; [`run_target`] wraps those in the row recorder and rewrites
+//! `BENCH_<id>.json` in the stable schema (`bench` / `harness` /
+//! `note` / `env` / `rows` / optional `summary`), tagging rows with
+//! `harness: "native"` plus environment metadata so provenance is
+//! never ambiguous.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use super::figures::{self, Stat};
+use super::harness::{self, record};
+use super::json::Json;
+use super::snapshots;
+use crate::prims::pool;
+
+/// How much work a run does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    /// The real measurement: full suites, full warmup/run counts.
+    Full,
+    /// CI smoke: tiny workloads, 0 warmup + 1 timed run (via
+    /// [`harness::set_quick`]).  Keeps the harness compiling and the
+    /// snapshot schema valid without minutes of wall clock.
+    Smoke,
+}
+
+impl Profile {
+    pub fn name(self) -> &'static str {
+        match self {
+            Profile::Full => "full",
+            Profile::Smoke => "smoke",
+        }
+    }
+}
+
+/// Snapshot metadata a target returns when it owns a `BENCH_*.json`.
+pub struct SnapshotMeta {
+    /// Human provenance note written into the snapshot.
+    pub note: String,
+    /// Extra top-level fields (e.g. `threads`, `threads_swept`).
+    pub top: Vec<(String, Json)>,
+    /// Optional `summary` array.
+    pub summary: Option<Json>,
+}
+
+/// One named benchmark target.
+pub struct Target {
+    /// Short id — also the `bench` field of its recorded rows.
+    pub id: &'static str,
+    /// The `cargo bench --bench <bin>` binary name.
+    pub bin: &'static str,
+    /// One-line description for `bench list`.
+    pub describe: &'static str,
+    /// Snapshot file name at the workspace root, if tracked in-repo.
+    pub snapshot: Option<&'static str>,
+    run: fn(Profile) -> Option<SnapshotMeta>,
+}
+
+/// Tiny suites for the smoke profile.
+const SMOKE_COUNTING: &[&str] = &["small"];
+const SMOKE_PEELING: &[&str] = &["women"];
+
+fn run_fig5(p: Profile) -> Option<SnapshotMeta> {
+    match p {
+        Profile::Full => figures::agg_figure("fig5", Stat::PerVertex, false),
+        Profile::Smoke => figures::agg_figure_on("fig5", Stat::PerVertex, false, SMOKE_COUNTING),
+    }
+    None
+}
+
+fn run_fig6(p: Profile) -> Option<SnapshotMeta> {
+    match p {
+        Profile::Full => figures::agg_figure("fig6", Stat::PerEdge, false),
+        Profile::Smoke => figures::agg_figure_on("fig6", Stat::PerEdge, false, SMOKE_COUNTING),
+    }
+    None
+}
+
+fn run_fig7(p: Profile) -> Option<SnapshotMeta> {
+    match p {
+        Profile::Full => figures::agg_figure("fig7", Stat::Total, false),
+        Profile::Smoke => figures::agg_figure_on("fig7", Stat::Total, false, SMOKE_COUNTING),
+    }
+    None
+}
+
+fn run_fig8(p: Profile) -> Option<SnapshotMeta> {
+    match p {
+        Profile::Full => figures::scaling_figure("fig8", false),
+        Profile::Smoke => figures::scaling_figure_on("fig8", false, "small", &[1, 2]),
+    }
+    None
+}
+
+fn run_fig10(p: Profile) -> Option<SnapshotMeta> {
+    match p {
+        Profile::Full => {
+            figures::rankings_figure("fig10", false);
+            figures::wedge_ablation("table3-wedges");
+        }
+        Profile::Smoke => {
+            figures::rankings_figure_on("fig10", false, SMOKE_COUNTING);
+            figures::wedge_ablation_on("table3-wedges", SMOKE_COUNTING);
+        }
+    }
+    None
+}
+
+fn run_fig11(p: Profile) -> Option<SnapshotMeta> {
+    match p {
+        Profile::Full => {
+            figures::approx_figure("fig11", false);
+            figures::approx_figure("fig20", true);
+        }
+        Profile::Smoke => figures::approx_figure_on("fig11", false, "small", &[0.5]),
+    }
+    None
+}
+
+fn run_fig12(p: Profile) -> Option<SnapshotMeta> {
+    match p {
+        Profile::Full => figures::peel_figure("fig12"),
+        Profile::Smoke => figures::peel_figure_on("fig12", SMOKE_PEELING),
+    }
+    None
+}
+
+fn run_fig14(p: Profile) -> Option<SnapshotMeta> {
+    let suite: &[&str] = match p {
+        Profile::Full => &["cl", "clL"],
+        Profile::Smoke => SMOKE_COUNTING,
+    };
+    figures::agg_figure_on("fig14", Stat::PerVertex, true, suite);
+    figures::agg_figure_on("fig15", Stat::PerEdge, true, suite);
+    figures::agg_figure_on("fig16", Stat::Total, true, suite);
+    figures::rankings_figure_on("fig19", true, suite);
+    figures::counting_table_on("table5", true, suite);
+    None
+}
+
+fn run_table1(p: Profile) -> Option<SnapshotMeta> {
+    match p {
+        Profile::Full => figures::datasets_table("table1"),
+        Profile::Smoke => figures::datasets_table_on("table1", SMOKE_PEELING),
+    }
+    None
+}
+
+fn run_table2(p: Profile) -> Option<SnapshotMeta> {
+    match p {
+        Profile::Full => figures::counting_table("table2", false),
+        Profile::Smoke => figures::counting_table_on("table2", false, SMOKE_PEELING),
+    }
+    None
+}
+
+fn run_table4(p: Profile) -> Option<SnapshotMeta> {
+    match p {
+        Profile::Full => figures::peeling_table("table4"),
+        Profile::Smoke => figures::peeling_table_on("table4", SMOKE_PEELING),
+    }
+    None
+}
+
+fn run_dense(p: Profile) -> Option<SnapshotMeta> {
+    figures::dense_core_bench_sized("dense", matches!(p, Profile::Smoke));
+    None
+}
+
+fn run_intersect(p: Profile) -> Option<SnapshotMeta> {
+    Some(snapshots::intersect_vs_agg(p))
+}
+
+fn run_peel(p: Profile) -> Option<SnapshotMeta> {
+    Some(snapshots::peel_intersect_vs_agg(p))
+}
+
+fn run_preprocess(p: Profile) -> Option<SnapshotMeta> {
+    Some(snapshots::preprocess_pipeline(p))
+}
+
+fn run_dynamic(p: Profile) -> Option<SnapshotMeta> {
+    Some(snapshots::fig_dynamic(p))
+}
+
+/// Every benchmark target, in rough paper order.
+pub fn targets() -> &'static [Target] {
+    static TARGETS: [Target; 16] = [
+        Target {
+            id: "fig5",
+            bin: "fig5_agg_vertex",
+            describe: "per-vertex counting across wedge aggregations (paper Fig. 5)",
+            snapshot: None,
+            run: run_fig5,
+        },
+        Target {
+            id: "fig6",
+            bin: "fig6_agg_edge",
+            describe: "per-edge counting across wedge aggregations (paper Fig. 6)",
+            snapshot: None,
+            run: run_fig6,
+        },
+        Target {
+            id: "fig7",
+            bin: "fig7_agg_total",
+            describe: "total counting across wedge aggregations (paper Fig. 7)",
+            snapshot: None,
+            run: run_fig7,
+        },
+        Target {
+            id: "fig8",
+            bin: "fig8_scaling",
+            describe: "self-relative scaling over the thread sweep (paper Fig. 8)",
+            snapshot: None,
+            run: run_fig8,
+        },
+        Target {
+            id: "fig10",
+            bin: "fig10_rankings",
+            describe: "ranking comparison + wedge-count ablation (paper Fig. 10 / Table 3)",
+            snapshot: None,
+            run: run_fig10,
+        },
+        Target {
+            id: "fig11",
+            bin: "fig11_approx",
+            describe: "approximate counting via edge/colorful sparsification (paper Figs. 11/20)",
+            snapshot: None,
+            run: run_fig11,
+        },
+        Target {
+            id: "fig12",
+            bin: "fig12_peel",
+            describe: "tip/wing peeling across engines (paper Fig. 12)",
+            snapshot: None,
+            run: run_fig12,
+        },
+        Target {
+            id: "fig14",
+            bin: "fig14_cacheopt",
+            describe: "cache-optimized counting figures + Table 5 (paper Figs. 14-16/19)",
+            snapshot: None,
+            run: run_fig14,
+        },
+        Target {
+            id: "table1",
+            bin: "table1_datasets",
+            describe: "dataset statistics (paper Table 1)",
+            snapshot: None,
+            run: run_table1,
+        },
+        Target {
+            id: "table2",
+            bin: "table2_counting",
+            describe: "counting comparison vs baselines (paper Table 2)",
+            snapshot: None,
+            run: run_table2,
+        },
+        Target {
+            id: "table4",
+            bin: "table4_peeling",
+            describe: "peeling comparison vs baselines (paper Table 4)",
+            snapshot: None,
+            run: run_table4,
+        },
+        Target {
+            id: "dense",
+            bin: "dense_core",
+            describe: "dense-core rectangle counting backends + hybrid crossover",
+            snapshot: None,
+            run: run_dense,
+        },
+        Target {
+            id: "intersect",
+            bin: "intersect_vs_agg",
+            describe: "streaming intersect vs materializing aggregations",
+            snapshot: Some("BENCH_intersect.json"),
+            run: run_intersect,
+        },
+        Target {
+            id: "peel",
+            bin: "peel_intersect_vs_agg",
+            describe: "peeling UPDATE paths vs streaming intersect engine",
+            snapshot: Some("BENCH_peel.json"),
+            run: run_peel,
+        },
+        Target {
+            id: "preprocess",
+            bin: "preprocess_pipeline",
+            describe: "parse / CSR / rank / PREPROCESS stage timings",
+            snapshot: Some("BENCH_preprocess.json"),
+            run: run_preprocess,
+        },
+        Target {
+            id: "dynamic",
+            bin: "fig_dynamic",
+            describe: "batch-dynamic maintenance vs recount-per-batch",
+            snapshot: Some("BENCH_dynamic.json"),
+            run: run_dynamic,
+        },
+    ];
+    &TARGETS
+}
+
+/// Find a target by id or bench-binary name.
+pub fn find(name: &str) -> Option<&'static Target> {
+    targets().iter().find(|t| t.id == name || t.bin == name)
+}
+
+/// The workspace root (parent of the `rust/` crate).
+pub fn workspace_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+fn git_rev() -> String {
+    Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .current_dir(workspace_root())
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// `YYYY-MM-DD` (UTC) without a date crate: Howard Hinnant's
+/// `civil_from_days`, epoch 1970-01-01.
+fn utc_date() -> String {
+    let secs = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1_460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Environment metadata recorded into every snapshot.
+pub fn environment(profile: Profile) -> Json {
+    Json::Obj(vec![
+        ("threads".into(), Json::Num(pool::num_threads() as f64)),
+        (
+            "host_parallelism".into(),
+            Json::Num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),
+        ),
+        ("git_rev".into(), Json::str(git_rev())),
+        ("date".into(), Json::str(utc_date())),
+        ("profile".into(), Json::str(profile.name())),
+    ])
+}
+
+/// Run one target; if it owns a snapshot, rewrite
+/// `<out_dir>/<snapshot>` from the recorded rows and return the path.
+pub fn run_target(
+    target: &Target,
+    profile: Profile,
+    out_dir: &Path,
+) -> anyhow::Result<Option<PathBuf>> {
+    let quick_before = harness::quick();
+    harness::set_quick(matches!(profile, Profile::Smoke));
+    if target.snapshot.is_some() {
+        record::start();
+    }
+    let meta = (target.run)(profile);
+    harness::set_quick(quick_before);
+    let Some(file) = target.snapshot else {
+        return Ok(None);
+    };
+    let meta = meta.expect("snapshot target returned no metadata");
+    // Rows keep their structured fields; the per-row `bench` key is
+    // redundant with the file-level field and is stripped for schema
+    // compatibility with the seeded snapshots.
+    let rows: Vec<Json> = record::finish()
+        .into_iter()
+        .map(|row| match row {
+            Json::Obj(fields) => {
+                Json::Obj(fields.into_iter().filter(|(k, _)| k != "bench").collect())
+            }
+            other => other,
+        })
+        .collect();
+    let mut doc: Vec<(String, Json)> = vec![
+        ("bench".into(), Json::str(target.bin)),
+        ("harness".into(), Json::str("native")),
+        ("note".into(), Json::str(meta.note)),
+        ("env".into(), environment(profile)),
+    ];
+    doc.extend(meta.top);
+    doc.push(("rows".into(), Json::Arr(rows)));
+    if let Some(summary) = meta.summary {
+        doc.push(("summary".into(), summary));
+    }
+    std::fs::create_dir_all(out_dir)?;
+    let path = out_dir.join(file);
+    std::fs::write(&path, Json::Obj(doc).pretty())?;
+    Ok(Some(path))
+}
+
+/// Entry point for the thin `rust/benches/*.rs` wrappers: run the
+/// target owning this binary at the full profile, writing any snapshot
+/// to the workspace root (the historical `cargo bench` behavior).
+pub fn run_from_bench_binary(bin: &str) {
+    let target = find(bin).unwrap_or_else(|| panic!("no bench target for binary {bin:?}"));
+    match run_target(target, Profile::Full, &workspace_root()) {
+        Ok(Some(path)) => println!("wrote {}", path.display()),
+        Ok(None) => {}
+        Err(e) => panic!("bench target {bin}: {e:#}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_bench_binary() {
+        let bins: Vec<&str> = targets().iter().map(|t| t.bin).collect();
+        let mut dir: Vec<String> = std::fs::read_dir(workspace_root().join("rust/benches"))
+            .expect("read benches dir")
+            .map(|e| {
+                e.unwrap()
+                    .file_name()
+                    .to_string_lossy()
+                    .trim_end_matches(".rs")
+                    .to_string()
+            })
+            .collect();
+        dir.sort();
+        for bin in &dir {
+            assert!(bins.contains(&bin.as_str()), "bench binary {bin} missing from registry");
+        }
+        assert_eq!(dir.len(), targets().len(), "registry has stale entries");
+    }
+
+    #[test]
+    fn ids_and_bins_are_unique_and_findable() {
+        let ts = targets();
+        for t in ts {
+            assert!(std::ptr::eq(find(t.id).unwrap(), t), "id {} not findable", t.id);
+            assert!(std::ptr::eq(find(t.bin).unwrap(), t), "bin {} not findable", t.bin);
+        }
+        let mut ids: Vec<&str> = ts.iter().map(|t| t.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), ts.len());
+        assert!(find("no-such-target").is_none());
+    }
+
+    #[test]
+    fn utc_date_is_iso_shaped() {
+        let d = utc_date();
+        assert_eq!(d.len(), 10);
+        assert_eq!(&d[4..5], "-");
+        assert_eq!(&d[7..8], "-");
+        let year: i64 = d[..4].parse().unwrap();
+        assert!((2024..2200).contains(&year), "implausible year in {d}");
+    }
+
+    #[test]
+    fn smoke_snapshot_round_trips() {
+        // The smallest snapshot target, smoke profile, temp out dir:
+        // the written file must parse and carry the stable schema.
+        let target = find("dynamic").unwrap();
+        let dir = std::env::temp_dir().join("pb_registry_test");
+        let path = run_target(target, Profile::Smoke, &dir)
+            .expect("run smoke target")
+            .expect("snapshot path");
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "fig_dynamic");
+        assert_eq!(doc.get("harness").unwrap().as_str().unwrap(), "native");
+        let env = doc.get("env").unwrap();
+        assert_eq!(env.get("profile").unwrap().as_str().unwrap(), "smoke");
+        assert!(env.get("git_rev").is_some() && env.get("date").is_some());
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert!(!rows.is_empty());
+        for row in rows {
+            assert!(row.get("bench").is_none(), "per-row bench key must be stripped");
+            assert!(row.get("workload").is_some());
+            assert!(row.get("median_ms").is_some());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,379 @@
+//! The four snapshot benches — the workloads whose results are
+//! recorded in-repo as `BENCH_*.json` files at the workspace root.
+//!
+//! Each function here is the *single* definition of its workload:
+//! the `harness = false` bench binary (`cargo bench --bench <name>`)
+//! and the CLI runner (`parbutterfly bench run`) both dispatch through
+//! [`super::registry`], which wraps these in the row recorder
+//! ([`super::harness::record`]) and writes the snapshot file — so the
+//! two entry points execute identical code and produce identical
+//! rows.
+//!
+//! Rows are emitted through [`report_keyed`]: the structured fields
+//! (`stat` / `mode` / `stage` / `batch` / `threads` / `path` /
+//! `config`) are recorded separately from the composed human label, so
+//! the snapshot schema never depends on re-parsing `BENCHROW` labels.
+
+use super::figures::{agg_rows, peel_rows};
+use super::harness::{banner, bench, bench_n, report_keyed, Measurement};
+use super::json::Json;
+use super::registry::{Profile, SnapshotMeta};
+use super::workloads::{self, PEELING_SUITE};
+use crate::count::{count_per_edge, count_per_vertex, count_total, CountOpts};
+use crate::dynamic::{DynGraph, DynOpts};
+use crate::graph::{io, BipartiteGraph, RankedGraph};
+use crate::peel::{peel_edges, peel_vertices, BucketKind, PeelEOpts, PeelSide, PeelVOpts};
+use crate::prims::pool::{num_threads, with_threads};
+use crate::rank::{choose_ranking, rank_vertices, Ranking};
+
+/// Round to 3 decimals (dimensionless ratios; [`Json::ms`] covers ms).
+fn round3(v: f64) -> Json {
+    Json::Num((v * 1e3).round() / 1e3)
+}
+
+fn run_stat(g: &BipartiteGraph, stat: &str, opts: &CountOpts) -> u64 {
+    match stat {
+        "total" => count_total(g, opts),
+        "vertex" => count_per_vertex(g, opts).bu.iter().sum::<u64>() / 2,
+        _ => count_per_edge(g, opts).iter().sum::<u64>() / 4,
+    }
+}
+
+/// Streaming intersect engine vs the materializing aggregations
+/// (`BENCH_intersect.json`).
+pub fn intersect_vs_agg(profile: Profile) -> SnapshotMeta {
+    let suite: &[&str] = match profile {
+        Profile::Full => &["er", "cl", "dense"],
+        Profile::Smoke => &["small"],
+    };
+    banner(
+        "intersect",
+        "streaming intersect vs materializing aggregations; snapshot: BENCH_intersect.json",
+    );
+    let mut summary = Vec::new();
+    for &wl_id in suite {
+        let wl = workloads::build(wl_id);
+        let g = &wl.graph;
+        let ranking = choose_ranking(g);
+        println!("[{}] {} — ranking {}", wl.id, wl.describe, ranking.name());
+        for stat in ["total", "vertex", "edge"] {
+            let mut expected = None;
+            let mut best_mat: Option<(&'static str, f64)> = None;
+            let mut intersect_ms = f64::NAN;
+            for (label, base) in agg_rows() {
+                let opts = CountOpts { ranking, ..base };
+                let mut result = 0u64;
+                let m = bench(|| {
+                    result = run_stat(g, stat, &opts);
+                    result
+                });
+                match expected {
+                    None => expected = Some(result),
+                    Some(e) => assert_eq!(e, result, "{label} disagrees on {wl_id}/{stat}"),
+                }
+                report_keyed(
+                    "intersect",
+                    wl.id,
+                    &format!("{stat}/{label}"),
+                    &m,
+                    &[("stat", Json::str(stat)), ("config", Json::str(label))],
+                );
+                if label == "Intersect" {
+                    intersect_ms = m.median_ms;
+                } else if best_mat.map(|(_, ms)| m.median_ms < ms).unwrap_or(true) {
+                    best_mat = Some((label, m.median_ms));
+                }
+            }
+            let (best_label, best_ms) = best_mat.unwrap();
+            let speedup = best_ms / intersect_ms;
+            println!(
+                "  [{}/{stat}] intersect {intersect_ms:.2} ms vs best materializing \
+                 {best_label} {best_ms:.2} ms ({speedup:.2}x)",
+                wl.id
+            );
+            summary.push(Json::Obj(vec![
+                ("workload".into(), Json::str(wl.id)),
+                ("stat".into(), Json::str(stat)),
+                ("best_materializing".into(), Json::str(best_label)),
+                ("best_materializing_ms".into(), Json::ms(best_ms)),
+                ("intersect_ms".into(), Json::ms(intersect_ms)),
+                ("speedup".into(), round3(speedup)),
+                ("butterflies".into(), Json::Num(expected.unwrap() as f64)),
+            ]));
+        }
+    }
+    SnapshotMeta {
+        note: "per-source counting across the materializing aggregations (BatchS family et \
+               al.) vs the streaming intersect engine, same ranked two-hop walk; regenerate \
+               with `parbutterfly bench run --filter intersect` or `cargo bench --bench \
+               intersect_vs_agg`"
+            .into(),
+        top: vec![("threads".into(), Json::Num(num_threads() as f64))],
+        summary: Some(Json::Arr(summary)),
+    }
+}
+
+/// Aggregation UPDATE paths vs the streaming live-view intersect peel
+/// engine (`BENCH_peel.json`).
+pub fn peel_intersect_vs_agg(profile: Profile) -> SnapshotMeta {
+    let suite: &[&str] = match profile {
+        Profile::Full => &PEELING_SUITE,
+        Profile::Smoke => &["women"],
+    };
+    banner(
+        "peel",
+        "aggregation UPDATE paths vs streaming intersect peeling; snapshot: BENCH_peel.json",
+    );
+    let mut summary = Vec::new();
+    for &wl_id in suite {
+        let wl = workloads::build(wl_id);
+        let g = &wl.graph;
+        let vc = count_per_vertex(g, &CountOpts::default());
+        let be = count_per_edge(g, &CountOpts::default());
+        println!("[{}] {}", wl.id, wl.describe);
+        for mode in ["tip", "wing"] {
+            let mut expected: Option<Vec<u64>> = None;
+            let mut rounds = 0usize;
+            let mut best_agg: Option<(&'static str, f64)> = None;
+            let mut intersect_ms = f64::NAN;
+            for (label, engine, agg) in peel_rows() {
+                let mut result = Vec::new();
+                let m = bench_n(0, 2, || {
+                    if mode == "tip" {
+                        let vopts = PeelVOpts {
+                            engine,
+                            agg,
+                            buckets: BucketKind::Julienne,
+                            side: PeelSide::Auto,
+                        };
+                        let r = peel_vertices(g, &vc.bu, &vc.bv, &vopts);
+                        rounds = r.rounds;
+                        result = r.tips;
+                    } else {
+                        let eopts = PeelEOpts { engine, agg, buckets: BucketKind::Julienne };
+                        let r = peel_edges(g, &be, &eopts);
+                        rounds = r.rounds;
+                        result = r.wings;
+                    }
+                });
+                if let Some(e) = &expected {
+                    assert_eq!(e, &result, "{label} disagrees on {wl_id}/{mode}");
+                } else {
+                    expected = Some(std::mem::take(&mut result));
+                }
+                report_keyed(
+                    "peel",
+                    wl.id,
+                    &format!("{mode}/{label}"),
+                    &m,
+                    &[
+                        ("mode", Json::str(mode)),
+                        ("config", Json::str(label)),
+                        ("rounds", Json::Num(rounds as f64)),
+                    ],
+                );
+                if label == "intersect" {
+                    intersect_ms = m.median_ms;
+                } else if best_agg.map(|(_, ms)| m.median_ms < ms).unwrap_or(true) {
+                    best_agg = Some((label, m.median_ms));
+                }
+            }
+            let (best_label, best_ms) = best_agg.unwrap();
+            let speedup = best_ms / intersect_ms;
+            println!(
+                "  [{}/{mode}] intersect {intersect_ms:.2} ms vs best aggregation \
+                 {best_label} {best_ms:.2} ms ({speedup:.2}x, {rounds} rounds)",
+                wl.id
+            );
+            summary.push(Json::Obj(vec![
+                ("workload".into(), Json::str(wl.id)),
+                ("mode".into(), Json::str(mode)),
+                ("best_agg".into(), Json::str(best_label)),
+                ("best_agg_ms".into(), Json::ms(best_ms)),
+                ("intersect_ms".into(), Json::ms(intersect_ms)),
+                ("speedup".into(), round3(speedup)),
+                ("rounds".into(), Json::Num(rounds as f64)),
+            ]));
+        }
+    }
+    SnapshotMeta {
+        note: "aggregation UPDATE paths (full-adjacency rescans + per-pair aggregation) vs \
+               the streaming live-view intersect peel engine, identical Julienne buckets; \
+               regenerate with `parbutterfly bench run --filter peel` or `cargo bench \
+               --bench peel_intersect_vs_agg`"
+            .into(),
+        top: vec![("threads".into(), Json::Num(num_threads() as f64))],
+        summary: Some(Json::Arr(summary)),
+    }
+}
+
+/// Parse / CSR / rank / PREPROCESS stage timings over a thread sweep
+/// (`BENCH_preprocess.json`).
+pub fn preprocess_pipeline(profile: Profile) -> SnapshotMeta {
+    let (suite, threads): (&[&str], &[usize]) = match profile {
+        Profile::Full => (&["er", "cl", "clL"], &[1, 4, 8]),
+        Profile::Smoke => (&["small"], &[1, 2]),
+    };
+    banner(
+        "preprocess",
+        "parse / CSR / rank / PREPROCESS stage timings over the thread sweep; snapshot: \
+         BENCH_preprocess.json",
+    );
+    let dir = std::env::temp_dir().join("pb_preprocess_bench");
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    for &wl_id in suite {
+        let wl = workloads::build(wl_id);
+        let g = &wl.graph;
+        let path = dir.join(format!("{wl_id}.txt"));
+        io::save_edge_list(g, &path).expect("write workload edge list");
+        println!("[{}] {} — m={}", wl.id, wl.describe, g.m());
+        // Parity anchor: both parse paths must agree before timing.
+        let parsed = io::parse_edge_list_serial(&path).expect("serial parse");
+        assert_eq!(parsed, io::parse_edge_list_parallel(&path).expect("parallel parse"));
+        let (nu, nv, edges) = parsed;
+        for &t in threads {
+            with_threads(t, || {
+                let stage = |name: &str, m: &Measurement| {
+                    report_keyed(
+                        "preprocess",
+                        wl.id,
+                        &format!("t{t}/{name}"),
+                        m,
+                        &[("stage", Json::str(name)), ("threads", Json::Num(t as f64))],
+                    );
+                };
+                let m = bench(|| io::parse_edge_list_serial(&path).unwrap());
+                stage("parse-serial", &m);
+                let m = bench(|| io::parse_edge_list_parallel(&path).unwrap());
+                stage("parse-parallel", &m);
+                let m = bench(|| BipartiteGraph::from_edges(nu, nv, &edges));
+                stage("csr-build", &m);
+                for ranking in Ranking::ALL {
+                    let m = bench(|| rank_vertices(g, ranking));
+                    stage(&format!("rank-{}", ranking.name()), &m);
+                }
+                let rank = rank_vertices(g, Ranking::Degree);
+                let m = bench(|| RankedGraph::new(g, rank.clone()));
+                stage("preprocess-build", &m);
+            });
+        }
+    }
+    SnapshotMeta {
+        note: "stages: parse-serial / parse-parallel (chunked loader), csr-build \
+               (BipartiteGraph::from_edges), rank-* (rank_vertices per ordering), \
+               preprocess-build (RankedGraph::new, Algorithm 1); regenerate with \
+               `parbutterfly bench run --filter preprocess` or `cargo bench --bench \
+               preprocess_pipeline`"
+            .into(),
+        top: vec![(
+            "threads_swept".into(),
+            Json::Arr(threads.iter().map(|&t| Json::Num(t as f64)).collect()),
+        )],
+        summary: None,
+    }
+}
+
+/// Fraction of each workload's edges replayed as the update stream.
+const UPDATE_FRACTION: f64 = 0.10;
+
+fn replay(
+    base: &BipartiteGraph,
+    updates: &[(u32, u32)],
+    batch: usize,
+    rebuild_fraction: f64,
+) -> u64 {
+    let mut dg = DynGraph::new(base.clone(), DynOpts { rebuild_fraction, ..Default::default() });
+    for chunk in updates.chunks(batch) {
+        dg.insert_edges(chunk);
+    }
+    let total_at_peak = dg.total();
+    for chunk in updates.chunks(batch) {
+        dg.delete_edges(chunk);
+    }
+    assert_eq!(dg.graph().m(), base.m(), "stream returns to the base graph");
+    total_at_peak
+}
+
+/// Batch-dynamic maintenance vs full recount over batch size × thread
+/// count (`BENCH_dynamic.json`).
+pub fn fig_dynamic(profile: Profile) -> SnapshotMeta {
+    let (suite, batch_sizes, threads): (&[&str], &[usize], &[usize]) = match profile {
+        Profile::Full => (&["er", "cl", "dense"], &[64, 1_024, 16_384], &[1, 4, 8]),
+        Profile::Smoke => (&["small"], &[64], &[1, 2]),
+    };
+    banner(
+        "dynamic",
+        "incremental batch maintenance vs recount-per-batch; snapshot: BENCH_dynamic.json",
+    );
+    let mut summary = Vec::new();
+    for &wl_id in suite {
+        let wl = workloads::build(wl_id);
+        let edges = wl.graph.edges();
+        let split = edges.len() - (edges.len() as f64 * UPDATE_FRACTION) as usize;
+        let base = BipartiteGraph::from_edges(wl.graph.nu(), wl.graph.nv(), &edges[..split]);
+        let updates = &edges[split..];
+        println!("[{}] {} — {} update edges over {split} base", wl.id, wl.describe, updates.len());
+        for &batch in batch_sizes {
+            if batch > updates.len() {
+                continue;
+            }
+            for &t in threads {
+                let mut expect = None;
+                let mut delta_ms = f64::NAN;
+                let mut recount_ms = f64::NAN;
+                for (label, fraction) in [("delta", f64::INFINITY), ("recount", 0.0)] {
+                    let mut peak = 0u64;
+                    let m = with_threads(t, || {
+                        bench_n(1, 3, || {
+                            peak = replay(&base, updates, batch, fraction);
+                            peak
+                        })
+                    });
+                    match expect {
+                        None => expect = Some(peak),
+                        Some(e) => assert_eq!(e, peak, "{label} diverges on {wl_id}"),
+                    }
+                    report_keyed(
+                        "dynamic",
+                        wl.id,
+                        &format!("b{batch}/t{t}/{label}"),
+                        &m,
+                        &[
+                            ("batch", Json::Num(batch as f64)),
+                            ("threads", Json::Num(t as f64)),
+                            ("path", Json::str(label)),
+                        ],
+                    );
+                    if label == "delta" {
+                        delta_ms = m.median_ms;
+                    } else {
+                        recount_ms = m.median_ms;
+                    }
+                }
+                let speedup = recount_ms / delta_ms;
+                println!(
+                    "  [b{batch}/t{t}] delta {delta_ms:.2} ms vs recount-per-batch \
+                     {recount_ms:.2} ms ({speedup:.2}x)"
+                );
+                summary.push(Json::Obj(vec![
+                    ("workload".into(), Json::str(wl.id)),
+                    ("batch".into(), Json::Num(batch as f64)),
+                    ("threads".into(), Json::Num(t as f64)),
+                    ("delta_ms".into(), Json::ms(delta_ms)),
+                    ("recount_ms".into(), Json::ms(recount_ms)),
+                    ("speedup".into(), round3(speedup)),
+                    ("butterflies_at_peak".into(), Json::Num(expect.unwrap() as f64)),
+                ]));
+            }
+        }
+    }
+    SnapshotMeta {
+        note: "replay of an insert-then-delete update stream (10% of edges): incremental \
+               delta path (rebuild_fraction = inf) vs recount-every-batch baseline \
+               (rebuild_fraction = 0); regenerate with `parbutterfly bench run --filter \
+               dynamic` or `cargo bench --bench fig_dynamic`"
+            .into(),
+        top: vec![],
+        summary: Some(Json::Arr(summary)),
+    }
+}

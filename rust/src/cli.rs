@@ -61,12 +61,35 @@ impl Args {
         self.flags.get(k).map(|s| s.as_str())
     }
 
-    fn get_usize(&self, k: &str, default: usize) -> usize {
-        self.get(k).and_then(|s| s.parse().ok()).unwrap_or(default)
+    // Numeric flags are strict: an unparseable value is a hard error
+    // naming the flag, never a silent default ("--m 10k" must not
+    // quietly run with m = 10_000 and report those numbers).
+
+    fn get_usize(&self, k: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad --{k} {s:?} (need an unsigned integer)")),
+        }
     }
 
-    fn get_u64(&self, k: &str, default: u64) -> u64 {
-        self.get(k).and_then(|s| s.parse().ok()).unwrap_or(default)
+    fn get_u64(&self, k: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad --{k} {s:?} (need an unsigned integer)")),
+        }
+    }
+
+    fn get_f64(&self, k: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(s) => {
+                s.parse().map_err(|_| anyhow::anyhow!("bad --{k} {s:?} (need a number)"))
+            }
+        }
     }
 
     fn has(&self, k: &str) -> bool {
@@ -81,21 +104,51 @@ fn load(args: &Args) -> anyhow::Result<BipartiteGraph> {
     io::load_edge_list(Path::new(path))
 }
 
-fn count_opts(args: &Args) -> CountOpts {
-    CountOpts {
-        ranking: args.get("rank").and_then(Ranking::parse).unwrap_or(Ranking::Degree),
-        engine: args.get("engine").and_then(Engine::parse).unwrap_or(Engine::Wedges),
-        agg: args.get("agg").and_then(WedgeAgg::parse).unwrap_or(WedgeAgg::BatchS),
+/// Counting options minus `--engine` — `peel` reuses this because its
+/// own `--engine` selects the *peeling* engine, not the counting one.
+fn count_opts_base(args: &Args) -> anyhow::Result<CountOpts> {
+    let ranking = match args.get("rank") {
+        None => Ranking::Degree,
+        Some(s) => Ranking::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown --rank {s:?} (valid: side|degree|adegree|codeg|acodeg)")
+        })?,
+    };
+    let agg = match args.get("agg") {
+        None => WedgeAgg::BatchS,
+        Some(s) => WedgeAgg::parse(s).ok_or_else(|| {
+            let all = WedgeAgg::ALL.map(|a| a.name()).join("|");
+            anyhow::anyhow!("unknown --agg {s:?} (valid: {all})")
+        })?,
+    };
+    Ok(CountOpts {
+        ranking,
+        engine: Engine::Wedges,
+        agg,
         bfly: if args.has("reagg") { BflyAgg::Reagg } else { BflyAgg::Atomic },
         cache_opt: args.has("cache-opt"),
-        max_wedges: args.get_usize("max-wedges", 1 << 26),
-    }
+        max_wedges: args.get_usize("max-wedges", 1 << 26)?,
+    })
 }
 
-fn with_threads_arg<R>(args: &Args, f: impl FnOnce() -> R) -> R {
-    match args.get("threads").and_then(|s| s.parse::<usize>().ok()) {
-        Some(t) => crate::prims::pool::with_threads(t, f),
-        None => f(),
+fn count_opts(args: &Args) -> anyhow::Result<CountOpts> {
+    let mut opts = count_opts_base(args)?;
+    if let Some(s) = args.get("engine") {
+        opts.engine = Engine::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown --engine {s:?} (valid: wedges|intersect)"))?;
+    }
+    Ok(opts)
+}
+
+/// Apply `--threads` around `f`.  Invalid values are a hard error: a
+/// typo'd `--threads` silently running at the default width would
+/// label measurements with a thread count that never ran.
+fn with_threads_arg<R>(args: &Args, f: impl FnOnce() -> R) -> anyhow::Result<R> {
+    match args.get("threads") {
+        None => Ok(f()),
+        Some(s) => match s.parse::<usize>() {
+            Ok(t) if t > 0 => Ok(crate::prims::pool::with_threads(t, f)),
+            _ => anyhow::bail!("bad --threads {s:?} (need a positive integer)"),
+        },
     }
 }
 
@@ -124,6 +177,9 @@ fn run_inner(argv: &[String]) -> anyhow::Result<()> {
         "dense" => cmd_dense(&args),
         "backends" => cmd_backends(),
         "artifacts" => cmd_artifacts(),
+        // `bench` has its own subcommand grammar (run/diff/list with
+        // positional file arguments) — hand it the raw argv tail.
+        "bench" => crate::bench_cli::run(&argv[1..]),
         _ => {
             println!("{}", HELP);
             Ok(())
@@ -132,30 +188,25 @@ fn run_inner(argv: &[String]) -> anyhow::Result<()> {
 }
 
 const HELP: &str = "parbutterfly — parallel butterfly computations (Shi & Shun 2019)
-commands: gen, info, count, peel, approx, dynamic, dense, backends, artifacts
+commands: gen, info, count, peel, approx, dynamic, dense, backends, artifacts,
+          bench (run | diff | list — the native benchmark harness)
 run `parbutterfly <cmd> --help-flags` or see rust/src/cli.rs for flags";
 
 fn cmd_gen(args: &Args) -> anyhow::Result<()> {
     let kind = args.get("kind").unwrap_or("er");
-    let nu = args.get_usize("nu", 1000);
-    let nv = args.get_usize("nv", 1000);
-    let m = args.get_usize("m", 10_000);
-    let seed = args.get_u64("seed", 42);
+    let nu = args.get_usize("nu", 1000)?;
+    let nv = args.get_usize("nv", 1000)?;
+    let m = args.get_usize("m", 10_000)?;
+    let seed = args.get_u64("seed", 42)?;
     let g = match kind {
         "er" => gen::erdos_renyi(nu, nv, m, seed),
-        "cl" => gen::chung_lu(
-            nu,
-            nv,
-            m,
-            args.get("beta").and_then(|s| s.parse().ok()).unwrap_or(2.1),
-            seed,
-        ),
+        "cl" => gen::chung_lu(nu, nv, m, args.get_f64("beta", 2.1)?, seed),
         "blocks" => {
-            let k = args.get_usize("k", 4);
+            let k = args.get_usize("k", 4)?;
             gen::planted_blocks(nu, nv, k, nu / (2 * k), nv / (2 * k), 0.9, m / 4, seed)
         }
         "davis" => gen::davis_southern_women(),
-        other => anyhow::bail!("unknown kind {other}"),
+        other => anyhow::bail!("unknown --kind {other:?} (valid: er|cl|blocks|davis)"),
     };
     let out = args.get("out").ok_or_else(|| anyhow::anyhow!("--out FILE required"))?;
     io::save_edge_list(&g, Path::new(out))?;
@@ -181,12 +232,13 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_count(args: &Args) -> anyhow::Result<()> {
-    let cfg = CountConfig { opts: count_opts(args), auto_rank: args.has("auto-rank") };
+    let cfg = CountConfig { opts: count_opts(args)?, auto_rank: args.has("auto-rank") };
     let mode = match args.get("mode").unwrap_or("total") {
+        "total" => CountMode::Total,
         "vertex" => CountMode::PerVertex,
         "edge" => CountMode::PerEdge,
         "full" => CountMode::Full,
-        _ => CountMode::Total,
+        other => anyhow::bail!("unknown --mode {other:?} (valid: total|vertex|edge|full)"),
     };
     // `--threads` must cover the load too: the parser and CSR build are
     // parallel stages of the measured pipeline, so timing them outside
@@ -196,7 +248,7 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
         let g = load(args)?;
         let load_ms = t_load.elapsed().as_secs_f64() * 1e3;
         Ok((load_ms, count_report(&g, mode, &cfg)))
-    })?;
+    })??;
     println!(
         "total = {} (ranking {}, engine {}, {} wedges, {:.2} ms, backend {})",
         r.total,
@@ -227,7 +279,13 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_peel(args: &Args) -> anyhow::Result<()> {
     let g = load(args)?;
-    let agg = args.get("agg").and_then(WedgeAgg::parse).unwrap_or(WedgeAgg::Hist);
+    let agg = match args.get("agg") {
+        None => WedgeAgg::Hist,
+        Some(s) => WedgeAgg::parse(s).ok_or_else(|| {
+            let all = WedgeAgg::ALL.map(|a| a.name()).join("|");
+            anyhow::anyhow!("unknown --agg {s:?} (valid: {all})")
+        })?,
+    };
     // `peel --engine` selects ONLY the peeling UPDATE engine (default:
     // PARBUTTERFLY_PEEL_ENGINE env var, else agg).  The counting phase
     // keeps its own default unless `--count-engine` overrides it — so
@@ -235,18 +293,20 @@ fn cmd_peel(args: &Args) -> anyhow::Result<()> {
     // the counting phase.
     let engine = match args.get("engine") {
         Some(s) => PeelEngine::parse(s)
-            .ok_or_else(|| anyhow::anyhow!("unknown peel engine {s:?} (agg|intersect)"))?,
+            .ok_or_else(|| anyhow::anyhow!("unknown --engine {s:?} (valid: agg|intersect)"))?,
         None => PeelEngine::default(),
     };
-    let mut copts = count_opts(args);
+    let mut copts = count_opts_base(args)?;
     copts.engine = match args.get("count-engine") {
-        Some(s) => Engine::parse(s)
-            .ok_or_else(|| anyhow::anyhow!("unknown counting engine {s:?} (wedges|intersect)"))?,
+        Some(s) => Engine::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown --count-engine {s:?} (valid: wedges|intersect)")
+        })?,
         None => CountOpts::default().engine,
     };
     let buckets = match args.get("buckets").unwrap_or("julienne") {
+        "julienne" => BucketKind::Julienne,
         "fibheap" => BucketKind::FibHeap,
-        _ => BucketKind::Julienne,
+        other => anyhow::bail!("unknown --buckets {other:?} (valid: julienne|fibheap)"),
     };
     let cfg = PeelConfig {
         count: CountConfig { opts: copts, auto_rank: false },
@@ -255,7 +315,7 @@ fn cmd_peel(args: &Args) -> anyhow::Result<()> {
     };
     match args.get("mode").unwrap_or("vertex") {
         "edge" => {
-            let (w, ms) = with_threads_arg(args, || wing_report(&g, &cfg));
+            let (w, ms) = with_threads_arg(args, || wing_report(&g, &cfg))?;
             let max = w.wings.iter().max().copied().unwrap_or(0);
             println!(
                 "wing decomposition ({} engine): {} rounds, max wing {}, {:.2} ms",
@@ -265,8 +325,8 @@ fn cmd_peel(args: &Args) -> anyhow::Result<()> {
                 ms
             );
         }
-        _ => {
-            let (t, ms) = with_threads_arg(args, || tip_report(&g, &cfg));
+        "vertex" => {
+            let (t, ms) = with_threads_arg(args, || tip_report(&g, &cfg))?;
             let max = t.tips.iter().max().copied().unwrap_or(0);
             println!(
                 "tip decomposition ({} side, {} engine): {} rounds, max tip {}, {:.2} ms",
@@ -277,21 +337,24 @@ fn cmd_peel(args: &Args) -> anyhow::Result<()> {
                 ms
             );
         }
+        other => anyhow::bail!("unknown --mode {other:?} (valid: vertex|edge)"),
     }
     Ok(())
 }
 
 fn cmd_approx(args: &Args) -> anyhow::Result<()> {
     let g = load(args)?;
-    let p: f64 = args.get("p").and_then(|s| s.parse().ok()).unwrap_or(0.5);
-    let seed = args.get_u64("seed", 1);
-    let opts = count_opts(args);
+    let p = args.get_f64("p", 0.5)?;
+    anyhow::ensure!(p > 0.0 && p <= 1.0, "bad --p {p} (need a probability in (0, 1])");
+    let seed = args.get_u64("seed", 1)?;
+    let opts = count_opts(args)?;
     let est = match args.get("method").unwrap_or("edge") {
         "colorful" => {
             let c = (1.0 / p).round().max(1.0) as u64;
             sparsify::approx_total_colorful(&g, c, seed, &opts)
         }
-        _ => sparsify::approx_total_edge(&g, p, seed, &opts),
+        "edge" => sparsify::approx_total_edge(&g, p, seed, &opts),
+        other => anyhow::bail!("unknown --method {other:?} (valid: edge|colorful)"),
     };
     println!("estimated butterflies = {est:.1}");
     Ok(())
@@ -304,33 +367,17 @@ fn cmd_dynamic(args: &Args) -> anyhow::Result<()> {
     let events = stream::parse_stream(Path::new(spath))?;
     // Batches split on timestamp/op changes; the cap bounds one batch
     // (0 = unbounded).
-    let batches = stream::group_batches(&events, args.get_usize("batch", 1024));
+    let batches = stream::group_batches(&events, args.get_usize("batch", 1024)?);
     // Start from --graph when given, otherwise from an empty graph
     // that grows as the stream names vertices.
     let g0 = match args.get("graph") {
         Some(p) => io::load_edge_list(Path::new(p))?,
         None => BipartiteGraph::from_edges(0, 0, &[]),
     };
-    // Unlike the lenient static `count` defaults, a replay misconfig
-    // silently changes what every batch measures — reject typos on
-    // every knob this subcommand reads.
-    for key in ["batch", "threads"] {
-        if let Some(s) = args.get(key) {
-            let ok = s.parse::<usize>().map(|x| key != "threads" || x > 0).unwrap_or(false);
-            anyhow::ensure!(ok, "bad --{key} {s:?} (need a positive integer)");
-        }
-    }
-    let mut copts = count_opts(args);
-    if let Some(s) = args.get("engine") {
-        copts.engine = Engine::parse(s)
-            .ok_or_else(|| anyhow::anyhow!("unknown counting engine {s:?} (wedges|intersect)"))?;
-    }
-    if let Some(s) = args.get("rank") {
-        copts.ranking = Ranking::parse(s).ok_or_else(|| {
-            anyhow::anyhow!("unknown ranking {s:?} (side|degree|adegree|codeg|acodeg)")
-        })?;
-    }
-    let mut dopts = DynOpts { count: copts, ..Default::default() };
+    // All knobs reject typos (count_opts / with_threads_arg are strict
+    // everywhere now) — a replay misconfig silently changes what every
+    // batch measures.
+    let mut dopts = DynOpts { count: count_opts(args)?, ..Default::default() };
     if let Some(f) = args.get("rebuild-fraction") {
         dopts.rebuild_fraction = f
             .parse::<f64>()
@@ -339,7 +386,7 @@ fn cmd_dynamic(args: &Args) -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("bad --rebuild-fraction {f:?} (need a float >= 0)"))?;
     }
     let verify = args.has("verify");
-    let (dg, rep) = with_threads_arg(args, || replay_stream(g0, &batches, &dopts, verify));
+    let (dg, rep) = with_threads_arg(args, || replay_stream(g0, &batches, &dopts, verify))?;
     if args.has("per-batch") {
         for (i, o) in rep.outcomes.iter().enumerate() {
             println!(
@@ -499,6 +546,49 @@ mod tests {
                 .map(|s| s.to_string())
                 .collect();
         assert!(run_inner(&argv).is_err(), "unknown peel engine must be rejected");
+    }
+
+    #[test]
+    fn invalid_option_values_are_rejected_naming_the_flag() {
+        let dir = std::env::temp_dir().join("pb_cli_reject_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let gpath = dir.join("g.txt");
+        io::save_edge_list(&gen::davis_southern_women(), &gpath).unwrap();
+        let graph = gpath.to_str().unwrap();
+        // (argv, flag the error must name) — every enum/numeric knob
+        // that used to fall back to its default silently.
+        let cases: Vec<(Vec<&str>, &str)> = vec![
+            (vec!["count", "--graph", graph, "--engine", "intesect"], "--engine"),
+            (vec!["count", "--graph", graph, "--rank", "degre"], "--rank"),
+            (vec!["count", "--graph", graph, "--agg", "histo"], "--agg"),
+            (vec!["count", "--graph", graph, "--mode", "vertx"], "--mode"),
+            (vec!["count", "--graph", graph, "--threads", "two"], "--threads"),
+            (vec!["count", "--graph", graph, "--threads", "0"], "--threads"),
+            (vec!["count", "--graph", graph, "--max-wedges", "1e6"], "--max-wedges"),
+            (vec!["peel", "--graph", graph, "--agg", "sortx"], "--agg"),
+            (vec!["peel", "--graph", graph, "--buckets", "julienn"], "--buckets"),
+            (vec!["peel", "--graph", graph, "--mode", "both"], "--mode"),
+            (vec!["peel", "--graph", graph, "--count-engine", "agg"], "--count-engine"),
+            (vec!["approx", "--graph", graph, "--method", "color"], "--method"),
+            (vec!["approx", "--graph", graph, "--p", "2.0"], "--p"),
+            (vec!["approx", "--graph", graph, "--seed", "x"], "--seed"),
+            (vec!["gen", "--kind", "er", "--m", "10k", "--out", "/dev/null"], "--m"),
+            (vec!["gen", "--kind", "grid", "--out", "/dev/null"], "--kind"),
+        ];
+        for (argv, flag) in cases {
+            let argv: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+            let err = run_inner(&argv).expect_err(&format!("{argv:?} must be rejected"));
+            let msg = format!("{err:#}");
+            assert!(msg.contains(flag), "error for {argv:?} must name {flag}; got: {msg}");
+        }
+        // Valid values still work after the strictness pass.
+        let argv: Vec<String> =
+            ["count", "--graph", graph, "--engine", "intersect", "--rank", "codeg", "--agg",
+             "hist", "--threads", "2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        run_inner(&argv).unwrap();
     }
 
     #[test]

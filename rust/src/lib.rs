@@ -42,6 +42,7 @@
 //! harness regenerating every table and figure of the paper.
 
 pub mod baseline;
+pub mod bench_cli;
 pub mod bench_support;
 pub mod cli;
 pub mod coordinator;

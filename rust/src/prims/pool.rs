@@ -24,14 +24,14 @@ thread_local! {
 
 fn env_default() -> usize {
     static DEFAULT: OnceLock<usize> = OnceLock::new();
-    *DEFAULT.get_or_init(|| {
-        std::env::var("PARBUTTERFLY_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .filter(|&t| t > 0)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            })
+    *DEFAULT.get_or_init(|| match std::env::var("PARBUTTERFLY_THREADS") {
+        // Set-but-invalid must not silently fall back to full
+        // parallelism: a typo'd sweep would then record full-machine
+        // numbers under a 1-thread label.
+        Ok(s) => s.parse::<usize>().ok().filter(|&t| t > 0).unwrap_or_else(|| {
+            panic!("PARBUTTERFLY_THREADS={s:?} is not a positive integer")
+        }),
+        Err(_) => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
     })
 }
 

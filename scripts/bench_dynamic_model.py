@@ -27,6 +27,7 @@ import time
 from collections import defaultdict
 from pathlib import Path
 
+import bench_model_common
 from bench_intersect_model import chung_lu, erdos_renyi, planted_blocks
 
 WORKLOADS = [
@@ -139,9 +140,13 @@ def main():
     out = {
         "bench": "fig_dynamic",
         "harness": "python-model",
-        "note": "seeded by scripts/bench_dynamic_model.py (no Rust toolchain in the "
-                "authoring container); serial algorithmic model — thread rows repeat the "
-                "serial measurement; superseded by `cargo bench --bench fig_dynamic`",
+        "note": ("Algorithmic model measurements (scripts/bench_dynamic_model.py): "
+                 "serial model — thread rows repeat the serial measurement (real "
+                 "speedups need native threads).  Regenerate natively with "
+                 "`parbutterfly bench run --filter dynamic` (or `cargo bench --bench "
+                 "fig_dynamic`), which overwrites this file with `harness: "
+                 "\"native\"` rows; compare snapshots with `parbutterfly bench diff`."),
+        "env": bench_model_common.environment(threads=1),
         "rows": rows,
         "summary": summary,
     }

@@ -21,6 +21,8 @@ import random
 import time
 from pathlib import Path
 
+import bench_model_common
+
 
 def erdos_renyi(nu, nv, m, seed):
     rng = random.Random(seed)
@@ -204,8 +206,9 @@ def bench(f, warmup=1, runs=3):
         t = time.perf_counter()
         f()
         samples.append((time.perf_counter() - t) * 1e3)
-    samples.sort()
-    return samples[len(samples) // 2]
+    # Averaged-middle-pair median (see bench_model_common): the old
+    # samples[len // 2] is the upper middle for even run counts.
+    return bench_model_common.median(samples)
 
 
 WORKLOADS = [
@@ -261,9 +264,12 @@ def main():
         "note": ("Algorithmic model measurements (scripts/bench_intersect_model.py): "
                  "per-source counting with a materialized wedge buffer (BatchS family, "
                  "the fastest materializing aggregation) vs the streaming intersect "
-                 "engine, same ranked two-hop walk.  The authoring container has no "
-                 "Rust toolchain; `cargo bench --bench intersect_vs_agg` overwrites "
-                 "this file with native numbers and the full 9-row comparison."),
+                 "engine, same ranked two-hop walk.  Regenerate natively with "
+                 "`parbutterfly bench run --filter intersect` (or `cargo bench --bench "
+                 "intersect_vs_agg`), which overwrites this file with `harness: "
+                 "\"native\"` rows and the full 9-row comparison; compare snapshots "
+                 "with `parbutterfly bench diff`."),
+        "env": bench_model_common.environment(threads=1),
         "threads": 1,
         "rows": rows,
         "summary": summary,

@@ -1,0 +1,82 @@
+"""Shared pieces of the `bench_*_model.py` seed scripts.
+
+The model scripts exist for containers without a Rust toolchain: they
+measure pure-Python implementations of the same algorithms so the
+`BENCH_*.json` snapshots carry real (if model-scale) numbers instead
+of placeholders.  `parbutterfly bench run` overwrites these files with
+`harness: "native"` rows; until then every snapshot says
+`harness: "python-model"` and carries the environment block below so
+provenance is never ambiguous.
+
+This module mirrors two pieces of `rust/src/bench_support`:
+
+* `median` — the fixed estimator: even-length sample lists average the
+  two middle samples (`samples[n // 2]` alone is the *upper* middle
+  and biases medians high — with runs=2 it silently reported the max);
+* `environment` — the same env metadata the native snapshot writer
+  records (threads, host parallelism, git rev, date, profile).
+"""
+
+import datetime
+import os
+import subprocess
+
+
+def median(samples):
+    """Median of a sorted-or-not list; even lengths average the middle pair."""
+    s = sorted(samples)
+    n = len(s)
+    if n == 0:
+        raise ValueError("median of no samples")
+    if n % 2 == 0:
+        return (s[n // 2 - 1] + s[n // 2]) / 2.0
+    return s[n // 2]
+
+
+def bench(f, warmup=1, runs=3):
+    """Time `f`: `warmup` untimed calls, then the median of `runs` timed ones."""
+    import time
+
+    for _ in range(warmup):
+        f()
+    samples = []
+    for _ in range(runs):
+        t = time.perf_counter()
+        f()
+        samples.append((time.perf_counter() - t) * 1e3)
+    return median(samples)
+
+
+def _git_rev():
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True,
+            text=True,
+            timeout=10,
+        )
+        rev = out.stdout.strip()
+        return rev if out.returncode == 0 and rev else "unknown"
+    except OSError:
+        return "unknown"
+
+
+def environment(threads=1):
+    """The same env block `bench run` writes into native snapshots."""
+    return {
+        "threads": threads,
+        "host_parallelism": os.cpu_count() or 1,
+        "git_rev": _git_rev(),
+        "date": datetime.date.today().isoformat(),
+        "profile": "model",
+    }
+
+
+if __name__ == "__main__":
+    assert median([1.0, 2.0, 4.0, 8.0]) == 3.0
+    assert median([1.0, 2.0, 4.0]) == 2.0
+    assert median([5.0]) == 5.0
+    env = environment()
+    assert env["threads"] == 1 and len(env["date"]) == 10
+    print("bench_model_common self-checks pass;", env)

@@ -23,6 +23,7 @@ import json
 import time
 from pathlib import Path
 
+import bench_model_common
 from bench_intersect_model import (chung_lu, erdos_renyi, per_edge_intersect,
                                    planted_blocks, preprocess)
 from peel_model import (Graph, initial_vertex_counts, peel_e_agg,
@@ -54,8 +55,9 @@ def bench(f, runs=2):
         t = time.perf_counter()
         f()
         samples.append((time.perf_counter() - t) * 1e3)
-    samples.sort()
-    return samples[len(samples) // 2]
+    # With runs=2 the old samples[len // 2] silently reported the MAX
+    # of the two runs, not a median; average the middle pair instead.
+    return bench_model_common.median(samples)
 
 
 def main():
@@ -97,10 +99,12 @@ def main():
         "note": ("Algorithmic model measurements (scripts/bench_peel_model.py): "
                  "aggregation UPDATE paths (full-adjacency rescans + per-pair "
                  "aggregation) vs the streaming live-view intersect peel engine, "
-                 "identical bucket model.  The authoring container has no Rust "
-                 "toolchain; `cargo bench --bench peel_intersect_vs_agg` "
-                 "overwrites this file with native numbers and the full "
-                 "per-aggregation comparison."),
+                 "identical bucket model.  Regenerate natively with `parbutterfly "
+                 "bench run --filter peel` (or `cargo bench --bench "
+                 "peel_intersect_vs_agg`), which overwrites this file with "
+                 "`harness: \"native\"` rows and the full per-aggregation "
+                 "comparison; compare snapshots with `parbutterfly bench diff`."),
+        "env": bench_model_common.environment(threads=1),
         "threads": 1,
         "rows": rows,
         "summary": summary,

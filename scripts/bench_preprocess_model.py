@@ -25,6 +25,7 @@ import json
 import time
 from pathlib import Path
 
+import bench_model_common
 from bench_intersect_model import chung_lu, erdos_renyi
 
 WORKLOADS = [
@@ -223,8 +224,9 @@ def bench(f, runs=2):
         t = time.perf_counter()
         f()
         samples.append((time.perf_counter() - t) * 1e3)
-    samples.sort()
-    return samples[len(samples) // 2]
+    # With runs=2 the old samples[len // 2] silently reported the MAX
+    # of the two runs, not a median; average the middle pair instead.
+    return bench_model_common.median(samples)
 
 
 def main():
@@ -260,10 +262,13 @@ def main():
         "note": ("Algorithmic model measurements (scripts/bench_preprocess_model.py): "
                  "serial vs chunked parsing, sort/dedup CSR construction, the five "
                  "rankings with round-based co-degeneracy, and the PREPROCESS build.  "
-                 "The authoring container has no Rust toolchain; the thread column "
-                 "mirrors the Rust sweep but pure-Python rows run the chunk-structured "
-                 "algorithms serially.  `cargo bench --bench preprocess_pipeline` "
-                 "overwrites this file with native numbers."),
+                 "The thread column mirrors the Rust sweep but pure-Python rows run "
+                 "the chunk-structured algorithms serially.  Regenerate natively with "
+                 "`parbutterfly bench run --filter preprocess` (or `cargo bench "
+                 "--bench preprocess_pipeline`), which overwrites this file with "
+                 "`harness: \"native\"` rows; compare snapshots with `parbutterfly "
+                 "bench diff`."),
+        "env": bench_model_common.environment(threads=1),
         "threads_swept": THREADS,
         "rows": rows,
     }
