@@ -1,0 +1,10 @@
+//! Flat vs hub memory layout for the intersect engine; rewrites BENCH_layout.json at the workspace root.
+//!
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench layout_sweep` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
+
+fn main() {
+    parbutterfly::bench_support::registry::run_from_bench_binary("layout_sweep");
+}

@@ -391,8 +391,8 @@ mod tests {
     fn committed_snapshots_pass_the_schema_check_and_self_diff_clean() {
         let root = crate::bench_support::registry::workspace_root();
         for name in
-            ["BENCH_intersect.json", "BENCH_peel.json", "BENCH_preprocess.json",
-             "BENCH_dynamic.json"]
+            ["BENCH_intersect.json", "BENCH_layout.json", "BENCH_peel.json",
+             "BENCH_preprocess.json", "BENCH_dynamic.json"]
         {
             let path = root.join(name);
             check_schema(&path).unwrap_or_else(|e| panic!("{name}: {e:#}"));

@@ -13,7 +13,7 @@ use crate::baseline::{seq_count, seq_peel};
 use crate::count::{
     count_per_edge, count_per_vertex, count_total, sparsify, BflyAgg, CountOpts, Engine, WedgeAgg,
 };
-use crate::graph::BipartiteGraph;
+use crate::graph::{BipartiteGraph, Layout};
 use crate::peel::{
     peel_edges, peel_vertices, BucketKind, PeelEOpts, PeelEngine, PeelSide, PeelVOpts, WedgeStore,
 };
@@ -65,7 +65,17 @@ pub fn agg_rows() -> Vec<(&'static str, CountOpts)> {
         ("AHist", wedges(WedgeAgg::Hist, BflyAgg::Atomic)),
         ("BatchS", wedges(WedgeAgg::BatchS, BflyAgg::Atomic)),
         ("BatchWA", wedges(WedgeAgg::BatchWA, BflyAgg::Atomic)),
-        ("Intersect", CountOpts { engine: Engine::Intersect, ..Default::default() }),
+        // The layout axis is pinned on both intersect rows: the flat
+        // baseline must survive even when the env default resolves to
+        // hub, and vice versa.
+        (
+            "Intersect",
+            CountOpts { engine: Engine::Intersect, layout: Layout::Flat, ..Default::default() },
+        ),
+        (
+            "Intersect-hub",
+            CountOpts { engine: Engine::Intersect, layout: Layout::Hub, ..Default::default() },
+        ),
     ]
 }
 
@@ -325,10 +335,12 @@ pub fn peel_figure_on(bench_name: &str, suite: &[&str]) {
                 agg,
                 buckets: BucketKind::Julienne,
                 side: PeelSide::Auto,
+                ..Default::default()
             };
             let m = bench_n(0, 2, || peel_vertices(g, &vc.bu, &vc.bv, &vopts));
             vrows.push((format!("V/{label}"), m));
-            let eopts = PeelEOpts { engine, agg, buckets: BucketKind::Julienne };
+            let eopts =
+                PeelEOpts { engine, agg, buckets: BucketKind::Julienne, ..Default::default() };
             let m = bench_n(0, 2, || peel_edges(g, &be, &eopts));
             erows.push((format!("E/{label}"), m));
         }

@@ -187,6 +187,10 @@ fn run_intersect(p: Profile) -> Option<SnapshotMeta> {
     Some(snapshots::intersect_vs_agg(p))
 }
 
+fn run_layout(p: Profile) -> Option<SnapshotMeta> {
+    Some(snapshots::layout_sweep(p))
+}
+
 fn run_peel(p: Profile) -> Option<SnapshotMeta> {
     Some(snapshots::peel_intersect_vs_agg(p))
 }
@@ -201,7 +205,7 @@ fn run_dynamic(p: Profile) -> Option<SnapshotMeta> {
 
 /// Every benchmark target, in rough paper order.
 pub fn targets() -> &'static [Target] {
-    static TARGETS: [Target; 16] = [
+    static TARGETS: [Target; 17] = [
         Target {
             id: "fig5",
             bin: "fig5_agg_vertex",
@@ -292,6 +296,13 @@ pub fn targets() -> &'static [Target] {
             describe: "streaming intersect vs materializing aggregations",
             snapshot: Some("BENCH_intersect.json"),
             run: run_intersect,
+        },
+        Target {
+            id: "layout",
+            bin: "layout_sweep",
+            describe: "flat vs hub memory layout for the intersect engine's wedge walks",
+            snapshot: Some("BENCH_layout.json"),
+            run: run_layout,
         },
         Target {
             id: "peel",

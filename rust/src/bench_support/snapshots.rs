@@ -1,4 +1,4 @@
-//! The four snapshot benches — the workloads whose results are
+//! The five snapshot benches — the workloads whose results are
 //! recorded in-repo as `BENCH_*.json` files at the workspace root.
 //!
 //! Each function here is the *single* definition of its workload:
@@ -19,9 +19,9 @@ use super::harness::{banner, bench, bench_n, report_keyed, Measurement};
 use super::json::Json;
 use super::registry::{Profile, SnapshotMeta};
 use super::workloads::{self, PEELING_SUITE};
-use crate::count::{count_per_edge, count_per_vertex, count_total, CountOpts};
+use crate::count::{count_per_edge, count_per_vertex, count_total, CountOpts, Engine};
 use crate::dynamic::{DynGraph, DynOpts};
-use crate::graph::{io, BipartiteGraph, RankedGraph};
+use crate::graph::{io, BipartiteGraph, Layout, RankedGraph};
 use crate::peel::{peel_edges, peel_vertices, BucketKind, PeelEOpts, PeelSide, PeelVOpts};
 use crate::prims::pool::{num_threads, with_threads};
 use crate::rank::{choose_ranking, rank_vertices, Ranking};
@@ -42,8 +42,11 @@ fn run_stat(g: &BipartiteGraph, stat: &str, opts: &CountOpts) -> u64 {
 /// Streaming intersect engine vs the materializing aggregations
 /// (`BENCH_intersect.json`).
 pub fn intersect_vs_agg(profile: Profile) -> SnapshotMeta {
+    // `small` is in the Full suite so the committed snapshot carries
+    // every row identity the Smoke profile emits — `bench diff`
+    // compares smoke runs against it in CI.
     let suite: &[&str] = match profile {
-        Profile::Full => &["er", "cl", "dense"],
+        Profile::Full => &["small", "er", "cl", "dense"],
         Profile::Smoke => &["small"],
     };
     banner(
@@ -60,6 +63,7 @@ pub fn intersect_vs_agg(profile: Profile) -> SnapshotMeta {
             let mut expected = None;
             let mut best_mat: Option<(&'static str, f64)> = None;
             let mut intersect_ms = f64::NAN;
+            let mut hub_ms = f64::NAN;
             for (label, base) in agg_rows() {
                 let opts = CountOpts { ranking, ..base };
                 let mut result = 0u64;
@@ -80,6 +84,10 @@ pub fn intersect_vs_agg(profile: Profile) -> SnapshotMeta {
                 );
                 if label == "Intersect" {
                     intersect_ms = m.median_ms;
+                } else if label == "Intersect-hub" {
+                    // The hub layout is a variant of the intersect
+                    // engine, not a materializing competitor.
+                    hub_ms = m.median_ms;
                 } else if best_mat.map(|(_, ms)| m.median_ms < ms).unwrap_or(true) {
                     best_mat = Some((label, m.median_ms));
                 }
@@ -87,8 +95,8 @@ pub fn intersect_vs_agg(profile: Profile) -> SnapshotMeta {
             let (best_label, best_ms) = best_mat.unwrap();
             let speedup = best_ms / intersect_ms;
             println!(
-                "  [{}/{stat}] intersect {intersect_ms:.2} ms vs best materializing \
-                 {best_label} {best_ms:.2} ms ({speedup:.2}x)",
+                "  [{}/{stat}] intersect {intersect_ms:.2} ms (hub {hub_ms:.2} ms) vs best \
+                 materializing {best_label} {best_ms:.2} ms ({speedup:.2}x)",
                 wl.id
             );
             summary.push(Json::Obj(vec![
@@ -97,6 +105,7 @@ pub fn intersect_vs_agg(profile: Profile) -> SnapshotMeta {
                 ("best_materializing".into(), Json::str(best_label)),
                 ("best_materializing_ms".into(), Json::ms(best_ms)),
                 ("intersect_ms".into(), Json::ms(intersect_ms)),
+                ("intersect_hub_ms".into(), Json::ms(hub_ms)),
                 ("speedup".into(), round3(speedup)),
                 ("butterflies".into(), Json::Num(expected.unwrap() as f64)),
             ]));
@@ -107,6 +116,85 @@ pub fn intersect_vs_agg(profile: Profile) -> SnapshotMeta {
                al.) vs the streaming intersect engine, same ranked two-hop walk; regenerate \
                with `parbutterfly bench run --filter intersect` or `cargo bench --bench \
                intersect_vs_agg`"
+            .into(),
+        top: vec![("threads".into(), Json::Num(num_threads() as f64))],
+        summary: Some(Json::Arr(summary)),
+    }
+}
+
+/// Flat vs hub memory layout for the intersect engine's wedge walks
+/// (`BENCH_layout.json`) — the PR 7 locality fast path: hub-first
+/// renumbering, dense hub bitmaps (word-wise AND/popcount second
+/// hops), and L2-tiled fill/drain walks.
+pub fn layout_sweep(profile: Profile) -> SnapshotMeta {
+    let suite: &[&str] = match profile {
+        Profile::Full => &["small", "er", "cl", "dense"],
+        Profile::Smoke => &["small"],
+    };
+    banner(
+        "layout",
+        "flat vs hub memory layout for the intersect engine; snapshot: BENCH_layout.json",
+    );
+    let mut summary = Vec::new();
+    for &wl_id in suite {
+        let wl = workloads::build(wl_id);
+        let g = &wl.graph;
+        let ranking = choose_ranking(g);
+        println!("[{}] {} — ranking {}", wl.id, wl.describe, ranking.name());
+        for stat in ["total", "vertex", "edge"] {
+            let mut expected = None;
+            let mut flat_ms = f64::NAN;
+            let mut hub_ms = f64::NAN;
+            for (label, layout) in [("flat", Layout::Flat), ("hub", Layout::Hub)] {
+                let opts = CountOpts {
+                    ranking,
+                    engine: Engine::Intersect,
+                    layout,
+                    ..Default::default()
+                };
+                let mut result = 0u64;
+                let m = bench(|| {
+                    result = run_stat(g, stat, &opts);
+                    result
+                });
+                // Layouts must be bit-identical, not just fast.
+                match expected {
+                    None => expected = Some(result),
+                    Some(e) => assert_eq!(e, result, "{label} disagrees on {wl_id}/{stat}"),
+                }
+                report_keyed(
+                    "layout",
+                    wl.id,
+                    &format!("{stat}/{label}"),
+                    &m,
+                    &[("stat", Json::str(stat)), ("config", Json::str(label))],
+                );
+                if label == "flat" {
+                    flat_ms = m.median_ms;
+                } else {
+                    hub_ms = m.median_ms;
+                }
+            }
+            let speedup = flat_ms / hub_ms;
+            println!(
+                "  [{}/{stat}] flat {flat_ms:.2} ms vs hub {hub_ms:.2} ms ({speedup:.2}x)",
+                wl.id
+            );
+            summary.push(Json::Obj(vec![
+                ("workload".into(), Json::str(wl.id)),
+                ("stat".into(), Json::str(stat)),
+                ("flat_ms".into(), Json::ms(flat_ms)),
+                ("hub_ms".into(), Json::ms(hub_ms)),
+                ("speedup".into(), round3(speedup)),
+                ("butterflies".into(), Json::Num(expected.unwrap() as f64)),
+            ]));
+        }
+    }
+    SnapshotMeta {
+        note: "intersect-engine counting under the flat rank-ordered layout vs the hub \
+               layout (hub-first renumbering + bitmap AND/popcount second hops + L2-tiled \
+               walks), outputs asserted bit-identical; regenerate with `parbutterfly bench \
+               run --filter layout` or `cargo bench --bench layout_sweep`"
             .into(),
         top: vec![("threads".into(), Json::Num(num_threads() as f64))],
         summary: Some(Json::Arr(summary)),
@@ -145,12 +233,18 @@ pub fn peel_intersect_vs_agg(profile: Profile) -> SnapshotMeta {
                             agg,
                             buckets: BucketKind::Julienne,
                             side: PeelSide::Auto,
+                            ..Default::default()
                         };
                         let r = peel_vertices(g, &vc.bu, &vc.bv, &vopts);
                         rounds = r.rounds;
                         result = r.tips;
                     } else {
-                        let eopts = PeelEOpts { engine, agg, buckets: BucketKind::Julienne };
+                        let eopts = PeelEOpts {
+                            engine,
+                            agg,
+                            buckets: BucketKind::Julienne,
+                            ..Default::default()
+                        };
                         let r = peel_edges(g, &be, &eopts);
                         rounds = r.rounds;
                         result = r.wings;

@@ -4,14 +4,15 @@
 //! parbutterfly gen    --kind er|cl|blocks|davis --nu N --nv N --m M [--seed S] --out FILE
 //! parbutterfly info   --graph FILE
 //! parbutterfly count  --graph FILE [--mode total|vertex|edge] [--rank R] [--agg A]
-//!                     [--engine wedges|intersect] [--cache-opt] [--auto-rank] [--threads T]
+//!                     [--engine wedges|intersect] [--layout auto|flat|hub]
+//!                     [--cache-opt] [--auto-rank] [--threads T]
 //! parbutterfly peel   --graph FILE [--mode vertex|edge] [--engine agg|intersect]
 //!                     [--count-engine wedges|intersect] [--agg A]
-//!                     [--buckets julienne|fibheap] [--threads T]
+//!                     [--buckets julienne|fibheap] [--layout auto|flat|hub] [--threads T]
 //! parbutterfly approx --graph FILE --method edge|colorful --p P [--seed S]
 //! parbutterfly dynamic --stream FILE [--graph FILE] [--batch N] [--rebuild-fraction F]
-//!                     [--engine wedges|intersect] [--rank R] [--threads T]
-//!                     [--verify] [--per-batch]
+//!                     [--engine wedges|intersect] [--rank R] [--layout auto|flat|hub]
+//!                     [--threads T] [--verify] [--per-batch]
 //! parbutterfly dense  --graph FILE [--backend auto|rust|pjrt]  # dense-core path
 //! parbutterfly backends                       # dense backend availability
 //! parbutterfly artifacts                      # list PJRT artifacts (feature pjrt)
@@ -26,7 +27,7 @@ use crate::coordinator::{
 };
 use crate::count::{sparsify, BflyAgg, CountOpts, Engine, WedgeAgg};
 use crate::dynamic::{stream, DynOpts};
-use crate::graph::{gen, io, BipartiteGraph};
+use crate::graph::{gen, io, BipartiteGraph, Layout};
 use crate::peel::{BucketKind, PeelEngine, PeelSide};
 use crate::rank::Ranking;
 
@@ -120,6 +121,14 @@ fn count_opts_base(args: &Args) -> anyhow::Result<CountOpts> {
             anyhow::anyhow!("unknown --agg {s:?} (valid: {all})")
         })?,
     };
+    // `--layout` wires through every wedge-walk consumer (counting,
+    // peeling, dynamic recounts); default is PARBUTTERFLY_LAYOUT, else
+    // auto (hub bitmaps only when degree skew justifies them).
+    let layout = match args.get("layout") {
+        None => Layout::default_from_env(),
+        Some(s) => Layout::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown --layout {s:?} (valid: auto|flat|hub)"))?,
+    };
     Ok(CountOpts {
         ranking,
         engine: Engine::Wedges,
@@ -127,6 +136,7 @@ fn count_opts_base(args: &Args) -> anyhow::Result<CountOpts> {
         bfly: if args.has("reagg") { BflyAgg::Reagg } else { BflyAgg::Atomic },
         cache_opt: args.has("cache-opt"),
         max_wedges: args.get_usize("max-wedges", 1 << 26)?,
+        layout,
     })
 }
 
@@ -308,10 +318,13 @@ fn cmd_peel(args: &Args) -> anyhow::Result<()> {
         "fibheap" => BucketKind::FibHeap,
         other => anyhow::bail!("unknown --buckets {other:?} (valid: julienne|fibheap)"),
     };
+    // The one parsed `--layout` reaches both the counting phase (via
+    // `copts`) and the peel engines' dense walks.
+    let layout = copts.layout;
     let cfg = PeelConfig {
         count: CountConfig { opts: copts, auto_rank: false },
-        vopts: crate::peel::PeelVOpts { engine, agg, buckets, side: PeelSide::Auto },
-        eopts: crate::peel::PeelEOpts { engine, agg, buckets },
+        vopts: crate::peel::PeelVOpts { engine, agg, buckets, side: PeelSide::Auto, layout },
+        eopts: crate::peel::PeelEOpts { engine, agg, buckets, layout },
     };
     match args.get("mode").unwrap_or("vertex") {
         "edge" => {
@@ -458,6 +471,11 @@ fn cmd_backends() -> anyhow::Result<()> {
     println!("  agg        UPDATE-V/E through the wedge aggregations ({aggs})");
     println!("  intersect  streaming live-view updates (no wedge materialization)");
     println!("  selected default: {}", PeelEngine::default().name());
+    println!("memory layouts (--layout L, default via PARBUTTERFLY_LAYOUT):");
+    println!("  auto       hub bitmaps + renumbering when degree skew justifies them");
+    println!("  flat       rank-ordered CSR walks only");
+    println!("  hub        force the hub renumbering / bitmap fast path");
+    println!("  selected default: {}", Layout::default().name());
     println!("dense backends (dense --backend B):");
     let rd = crate::runtime::RustDense::default();
     println!("rust-dense  available  (max tile {0} x {0})", rd.max_dim());
@@ -562,6 +580,8 @@ mod tests {
             (vec!["count", "--graph", graph, "--rank", "degre"], "--rank"),
             (vec!["count", "--graph", graph, "--agg", "histo"], "--agg"),
             (vec!["count", "--graph", graph, "--mode", "vertx"], "--mode"),
+            (vec!["count", "--graph", graph, "--layout", "hubs"], "--layout"),
+            (vec!["peel", "--graph", graph, "--layout", "flt"], "--layout"),
             (vec!["count", "--graph", graph, "--threads", "two"], "--threads"),
             (vec!["count", "--graph", graph, "--threads", "0"], "--threads"),
             (vec!["count", "--graph", graph, "--max-wedges", "1e6"], "--max-wedges"),
@@ -584,7 +604,7 @@ mod tests {
         // Valid values still work after the strictness pass.
         let argv: Vec<String> =
             ["count", "--graph", graph, "--engine", "intersect", "--rank", "codeg", "--agg",
-             "hist", "--threads", "2"]
+             "hist", "--threads", "2", "--layout", "hub"]
                 .iter()
                 .map(|s| s.to_string())
                 .collect();
@@ -637,7 +657,12 @@ mod tests {
             .collect();
         assert!(run_inner(&argv).is_err());
         // Replay misconfigs are rejected, not silently defaulted.
-        for bad in [["--engine", "intersct"], ["--rank", "degre"], ["--rebuild-fraction", "-1"]] {
+        for bad in [
+            ["--engine", "intersct"],
+            ["--rank", "degre"],
+            ["--rebuild-fraction", "-1"],
+            ["--layout", "dense"],
+        ] {
             let argv: Vec<String> = ["dynamic", "--stream", s2.to_str().unwrap(), bad[0], bad[1]]
                 .iter()
                 .map(|s| s.to_string())

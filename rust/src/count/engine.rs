@@ -32,7 +32,7 @@
 use std::sync::atomic::AtomicU64;
 
 use super::{agg, batch, intersect, CountOpts, WedgeAgg};
-use crate::graph::RankedGraph;
+use crate::graph::{Layout, RankedGraph};
 
 /// Which counting engine a run uses (selected via [`CountOpts`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -119,8 +119,11 @@ impl WedgeEngine for AggEngine<'_> {
     }
 }
 
-/// The streaming intersect engine (see [`intersect`]).
-pub struct IntersectEngine;
+/// The streaming intersect engine (see [`intersect`]), carrying the
+/// memory [`Layout`] its hot loops run under.
+pub struct IntersectEngine {
+    pub layout: Layout,
+}
 
 impl WedgeEngine for IntersectEngine {
     fn name(&self) -> &'static str {
@@ -128,15 +131,15 @@ impl WedgeEngine for IntersectEngine {
     }
 
     fn total(&self, rg: &RankedGraph) -> u64 {
-        intersect::total_intersect(rg)
+        intersect::total_intersect(rg, self.layout)
     }
 
     fn per_vertex(&self, rg: &RankedGraph, out: &[AtomicU64]) {
-        intersect::per_vertex_intersect(rg, out)
+        intersect::per_vertex_intersect(rg, self.layout, out)
     }
 
     fn per_edge(&self, rg: &RankedGraph, out: &[AtomicU64]) {
-        intersect::per_edge_intersect(rg, out)
+        intersect::per_edge_intersect(rg, self.layout, out)
     }
 }
 
@@ -144,7 +147,7 @@ impl WedgeEngine for IntersectEngine {
 pub fn engine_for(opts: &CountOpts) -> Box<dyn WedgeEngine + '_> {
     match opts.engine {
         Engine::Wedges => Box::new(AggEngine::new(opts)),
-        Engine::Intersect => Box::new(IntersectEngine),
+        Engine::Intersect => Box::new(IntersectEngine { layout: opts.layout }),
     }
 }
 

@@ -21,16 +21,46 @@
 //!   source costs its wedge count, not `O(n)`.
 //! * Sources are claimed in small grains from an atomic counter
 //!   ([`parallel_for_dynamic_with`]) — wedge counts per source are
-//!   heavily skewed, so static splits would imbalance.
+//!   heavily skewed, so static splits would imbalance.  The grain is
+//!   derived from the cache-tile budget ([`walk_grain`]), not
+//!   hard-coded.
+//!
+//! # Cache-aware fast path ([`Layout::Hub`])
+//!
+//! The flat walk is memory-bound: second hops scatter counter bumps
+//! across `O(n)` slots.  The hub layout (BFC-VP++-style) reshapes the
+//! same walk three ways, preserving bit-identical outputs:
+//!
+//! * **Hub bitmaps** — second endpoints in the heavy-degree prefix of
+//!   a [`HubView`] get their full multiplicity `d = |N_up(src) ∩ N(z)|`
+//!   from one word-wise AND/popcount ([`crate::prims::simd`]) on first
+//!   touch, instead of `d` scattered bumps.  The hub counter slots
+//!   (`cnt[0..hub_count]`) are a dense, cache-resident prefix.
+//! * **Blocked traversal** — non-hub fills walk the centers' prefixes
+//!   in descending-rank tiles of [`TILE_RANKS`] so every bump lands in
+//!   an L2-resident counter slice; each center keeps a monotone cursor
+//!   (the prefix is rank-sorted) so tiling adds no rescans.
+//! * **Butterfly-sparsity credit skip** — the credit sweeps only add
+//!   nonzero terms for endpoints with `d >= 2`; the hub path collects
+//!   that "hot" set while draining, skips a source's entire credit
+//!   re-walk when it is empty, and otherwise filters per entry through
+//!   a dense hot-bitmap instead of re-touching cold counter slots.
 
 use std::sync::atomic::AtomicU64;
 
 use super::{atomic_add, choose2};
-use crate::graph::{RankedGraph, UpCsr};
+use crate::graph::ranked::{walk_grain, TILE_RANKS};
+use crate::graph::{HubView, Layout, RankedGraph, UpCsr};
 use crate::prims::pool::parallel_for_dynamic_with;
+use crate::prims::simd::{and_popcount_at, Bitset};
 
-/// Sources per dynamic claim (mirrors BatchWA's grain).
-const GRAIN: usize = 8;
+/// Expected distinct-second-endpoint footprint of one source's fill
+/// (average up-degree squared) — the per-item cost the tile-derived
+/// grain policy budgets against.
+fn footprint(rg: &RankedGraph) -> usize {
+    let avg = rg.m().div_ceil(rg.n().max(1)).max(1);
+    avg.saturating_mul(avg)
+}
 
 /// Dense `u32` tally with O(#touched) reset — the core scratch of
 /// every streaming intersect walk.  Shared with the peel engine's
@@ -83,14 +113,19 @@ impl TouchedCounter {
 /// edges.  `u32::MAX` marks an empty slot (edge ids are CSR positions
 /// and [`BipartiteGraph`](crate::graph::BipartiteGraph) construction
 /// guarantees `m < u32::MAX`).
+///
+/// Alongside the slot array it maintains a presence [`Bitset`] — 64x
+/// denser, so scan loops that mostly miss ([`Self::hit`]) stay inside
+/// cache instead of dragging the full `u32` slot array through it.
 pub(crate) struct EdgeStamp {
     slot: Vec<u32>,
     touched: Vec<u32>,
+    present: Bitset,
 }
 
 impl EdgeStamp {
     pub(crate) fn new(n: usize) -> Self {
-        Self { slot: vec![u32::MAX; n], touched: Vec::new() }
+        Self { slot: vec![u32::MAX; n], touched: Vec::new(), present: Bitset::new(n) }
     }
 
     /// Stamp slot `i` with `eid`, recording first touches.
@@ -98,8 +133,15 @@ impl EdgeStamp {
     pub(crate) fn set(&mut self, i: u32, eid: u32) {
         if self.slot[i as usize] == u32::MAX {
             self.touched.push(i);
+            self.present.set(i);
         }
         self.slot[i as usize] = eid;
+    }
+
+    /// Word-test fast reject: is slot `i` stamped at all?
+    #[inline]
+    pub(crate) fn hit(&self, i: u32) -> bool {
+        self.present.test(i)
     }
 
     /// The edge id stamped on slot `i`, if any.
@@ -116,6 +158,7 @@ impl EdgeStamp {
     pub(crate) fn reset(&mut self) {
         for &i in &self.touched {
             self.slot[i as usize] = u32::MAX;
+            self.present.clear(i);
         }
         self.touched.clear();
     }
@@ -150,14 +193,38 @@ fn fill(rg: &RankedGraph, up: &UpCsr, src: usize, s: &mut Scratch) {
     }
 }
 
-/// Global butterfly count, single pass.
-pub fn total_intersect(rg: &RankedGraph) -> u64 {
+/// Global butterfly count.
+pub fn total_intersect(rg: &RankedGraph, layout: Layout) -> u64 {
+    match layout.resolve(rg.m()) {
+        Layout::Flat => total_flat(rg),
+        _ => total_hub(rg, &HubView::build(rg, matches!(layout, Layout::Auto))),
+    }
+}
+
+/// COUNT-V (rank-indexed output, caller's rank space).
+pub fn per_vertex_intersect(rg: &RankedGraph, layout: Layout, out: &[AtomicU64]) {
+    match layout.resolve(rg.m()) {
+        Layout::Flat => per_vertex_flat(rg, out),
+        _ => per_vertex_hub(rg, &HubView::build(rg, matches!(layout, Layout::Auto)), out),
+    }
+}
+
+/// COUNT-E (edge-id-indexed output).
+pub fn per_edge_intersect(rg: &RankedGraph, layout: Layout, out: &[AtomicU64]) {
+    match layout.resolve(rg.m()) {
+        Layout::Flat => per_edge_flat(rg, out),
+        _ => per_edge_hub(rg, &HubView::build(rg, matches!(layout, Layout::Auto)), out),
+    }
+}
+
+/// Global butterfly count, single pass, flat layout.
+fn total_flat(rg: &RankedGraph) -> u64 {
     let up = rg.up_csr();
     let n = rg.n();
     let acc = AtomicU64::new(0);
     parallel_for_dynamic_with(
         n,
-        GRAIN,
+        walk_grain(n, footprint(rg)),
         || Scratch::new(n),
         |s, range| {
             let mut local = 0u64;
@@ -171,13 +238,13 @@ pub fn total_intersect(rg: &RankedGraph) -> u64 {
     acc.into_inner()
 }
 
-/// COUNT-V, two passes per source (rank-indexed output).
-pub fn per_vertex_intersect(rg: &RankedGraph, out: &[AtomicU64]) {
+/// COUNT-V, two passes per source, flat layout.
+fn per_vertex_flat(rg: &RankedGraph, out: &[AtomicU64]) {
     let up = rg.up_csr();
     let n = rg.n();
     parallel_for_dynamic_with(
         n,
-        GRAIN,
+        walk_grain(n, footprint(rg)),
         || Scratch::new(n),
         |s, range| {
             for src in range {
@@ -210,13 +277,13 @@ pub fn per_vertex_intersect(rg: &RankedGraph, out: &[AtomicU64]) {
     );
 }
 
-/// COUNT-E, two passes per source (edge-id-indexed output).
-pub fn per_edge_intersect(rg: &RankedGraph, out: &[AtomicU64]) {
+/// COUNT-E, two passes per source, flat layout.
+fn per_edge_flat(rg: &RankedGraph, out: &[AtomicU64]) {
     let up = rg.up_csr();
     let n = rg.n();
     parallel_for_dynamic_with(
         n,
-        GRAIN,
+        walk_grain(n, footprint(rg)),
         || Scratch::new(n),
         |s, range| {
             for src in range {
@@ -240,6 +307,259 @@ pub fn per_edge_intersect(rg: &RankedGraph, out: &[AtomicU64]) {
                     atomic_add(&out[eids[i] as usize], lo_leg);
                 }
                 s.ctr.reset();
+            }
+        },
+    );
+}
+
+/// Per-worker scratch of the hub walk: the flat scratch plus the
+/// hub-split/cursor arrays of the blocked fill, the source's
+/// up-neighborhood bitmap (for AND/popcount hub probes), and the hot
+/// set of butterfly-carrying endpoints for the credit sweeps.
+struct HubScratch {
+    ctr: TouchedCounter,
+    pres: Vec<u32>,
+    /// Per center: how many prefix entries are non-hub (the hub tail
+    /// sits at the *end* of the decreasing-rank prefix).
+    hsp: Vec<u32>,
+    /// Per center: cursor into the non-hub prefix for the tiled fill.
+    cur: Vec<u32>,
+    srcbits: Bitset,
+    /// Word indices `srcbits` populates, sorted (drives the sparse
+    /// AND/popcount and the O(#words) bitmap reset).
+    srcwords: Vec<u32>,
+    hot: Vec<u32>,
+    hotbits: Bitset,
+}
+
+impl HubScratch {
+    fn new(n: usize) -> Self {
+        Self {
+            ctr: TouchedCounter::new(n),
+            pres: Vec::new(),
+            hsp: Vec::new(),
+            cur: Vec::new(),
+            srcbits: Bitset::new(n),
+            srcwords: Vec::new(),
+            hot: Vec::new(),
+            hotbits: Bitset::new(n),
+        }
+    }
+}
+
+/// Tally the wedges of `src` into `s.ctr` under the hub layout.
+///
+/// Identical final counts to [`fill`]: a hub second endpoint `z` is
+/// counted in the prefix of every center `y` in `N_up(src) ∩ N(z)`
+/// (the prefix filter `rank > src` constrains only `z`, and every hub
+/// outranks `src` wherever it appears in a prefix), so one AND/popcount
+/// of the source's up-neighborhood bitmap against `z`'s adjacency row
+/// equals its flat bump count.  Non-hub endpoints are bumped exactly as
+/// in the flat walk, just tiled by descending rank.
+fn fill_hub(eff: &RankedGraph, up: &UpCsr, view: &HubView, src: usize, s: &mut HubScratch) {
+    let r = src as u32;
+    let hubs = view.hub_count as u32;
+    s.pres.clear();
+    s.hsp.clear();
+    let unbrs = up.nbrs(src);
+    // Hub second endpoints must outrank `src`, so only sources ranked
+    // below the hub prefix can ever meet one.
+    let use_bm = hubs > 0 && r + 1 < hubs;
+    if use_bm {
+        s.srcwords.clear();
+        for &y in unbrs {
+            let w = y >> 6;
+            if s.srcwords.last() != Some(&w) {
+                s.srcwords.push(w);
+            }
+            s.srcbits.set(y);
+        }
+    }
+    for &y in unbrs {
+        let pre = eff.up_deg_above(y as usize, r);
+        let slice = &eff.nbrs(y as usize)[..pre];
+        // Decreasing rank: hubs (ranks < hub_count) are the tail.
+        let hs = if use_bm { slice.partition_point(|&z| z >= hubs) } else { pre };
+        s.pres.push(pre as u32);
+        s.hsp.push(hs as u32);
+        // One popcount per *distinct* hub endpoint; repeats find the
+        // slot already filled (and L1-resident: hub slots are the
+        // dense `cnt[0..hub_count]` prefix).
+        for &z in &slice[hs..] {
+            if s.ctr.cnt[z as usize] == 0 {
+                s.ctr.touched.push(z);
+                s.ctr.cnt[z as usize] =
+                    and_popcount_at(&s.srcwords, s.srcbits.words(), view.bitmap.row(z as usize))
+                        as u32;
+            }
+        }
+    }
+    if use_bm {
+        s.srcbits.clear_words(&s.srcwords);
+    }
+    // Non-hub fill.  The whole remaining rank span usually fits one
+    // tile; otherwise walk it in descending-rank tiles with a monotone
+    // cursor per center (prefixes are rank-sorted, so cursors never
+    // back up) — every bump then lands in a `TILE_RANKS`-slot counter
+    // slice that stays L2-resident across all centers.
+    let n = eff.n();
+    let lo_bound = (src + 1).max(hubs as usize);
+    if n.saturating_sub(lo_bound) <= TILE_RANKS {
+        for (i, &y) in unbrs.iter().enumerate() {
+            let hs = s.hsp[i] as usize;
+            for &z in &eff.nbrs(y as usize)[..hs] {
+                s.ctr.bump(z);
+            }
+        }
+    } else {
+        s.cur.clear();
+        s.cur.resize(unbrs.len(), 0);
+        let mut hi = n;
+        while hi > lo_bound {
+            let tile_lo = hi.saturating_sub(TILE_RANKS).max(lo_bound) as u32;
+            for (i, &y) in unbrs.iter().enumerate() {
+                let hs = s.hsp[i] as usize;
+                let row = &eff.nbrs(y as usize)[..hs];
+                let mut j = s.cur[i] as usize;
+                while j < hs && row[j] >= tile_lo {
+                    s.ctr.bump(row[j]);
+                    j += 1;
+                }
+                s.cur[i] = j as u32;
+            }
+            hi = tile_lo as usize;
+        }
+    }
+}
+
+/// After a fill: credit endpoints (when `out` is given) and extract
+/// the hot set — distinct second endpoints with `d >= 2`, the only
+/// ones contributing nonzero credits anywhere.  Returns the source's
+/// own butterfly total.
+fn collect_hot(
+    s: &mut HubScratch,
+    view: &HubView,
+    out: Option<&[AtomicU64]>,
+    src_total: &mut u64,
+) {
+    s.hot.clear();
+    *src_total = 0;
+    for &z in &s.ctr.touched {
+        let d = s.ctr.cnt[z as usize];
+        if d >= 2 {
+            let b = choose2(d as u64);
+            *src_total += b;
+            if let Some(out) = out {
+                atomic_add(&out[view.back_rank(z as usize)], b);
+            }
+            s.hot.push(z);
+            s.hotbits.set(z);
+        }
+    }
+}
+
+#[inline]
+fn clear_hot(s: &mut HubScratch) {
+    for &z in &s.hot {
+        s.hotbits.clear(z);
+    }
+    s.ctr.reset();
+}
+
+/// Global butterfly count under the hub layout.
+fn total_hub(rg: &RankedGraph, view: &HubView) -> u64 {
+    let eff = view.graph(rg);
+    let up = eff.up_csr();
+    let n = eff.n();
+    let acc = AtomicU64::new(0);
+    parallel_for_dynamic_with(
+        n,
+        walk_grain(n, footprint(eff)),
+        || HubScratch::new(n),
+        |s, range| {
+            let mut local = 0u64;
+            for src in range {
+                fill_hub(eff, &up, view, src, s);
+                s.ctr.drain(|_z, d| local += choose2(d as u64));
+            }
+            atomic_add(&acc, local);
+        },
+    );
+    acc.into_inner()
+}
+
+/// COUNT-V under the hub layout; `out` stays in the caller's rank
+/// space (credits route through [`HubView::back_rank`]).
+fn per_vertex_hub(rg: &RankedGraph, view: &HubView, out: &[AtomicU64]) {
+    let eff = view.graph(rg);
+    let up = eff.up_csr();
+    let n = eff.n();
+    parallel_for_dynamic_with(
+        n,
+        walk_grain(n, footprint(eff)),
+        || HubScratch::new(n),
+        |s, range| {
+            for src in range {
+                fill_hub(eff, &up, view, src, s);
+                let mut src_total = 0u64;
+                collect_hot(s, view, Some(out), &mut src_total);
+                atomic_add(&out[view.back_rank(src)], src_total);
+                // Center credits: a wedge contributes d - 1, which is
+                // zero unless its second endpoint is hot — so skip the
+                // whole re-walk for butterfly-free sources, and filter
+                // the rest through the hot bitmap.
+                if !s.hot.is_empty() {
+                    for (i, &y) in up.nbrs(src).iter().enumerate() {
+                        let pre = s.pres[i] as usize;
+                        let mut center = 0u64;
+                        for &z in &eff.nbrs(y as usize)[..pre] {
+                            if s.hotbits.test(z) {
+                                center += s.ctr.cnt[z as usize] as u64 - 1;
+                            }
+                        }
+                        atomic_add(&out[view.back_rank(y as usize)], center);
+                    }
+                }
+                clear_hot(s);
+            }
+        },
+    );
+}
+
+/// COUNT-E under the hub layout (edge ids are rank-independent, so
+/// `out` needs no mapping).
+fn per_edge_hub(rg: &RankedGraph, view: &HubView, out: &[AtomicU64]) {
+    let eff = view.graph(rg);
+    let up = eff.up_csr();
+    let n = eff.n();
+    parallel_for_dynamic_with(
+        n,
+        walk_grain(n, footprint(eff)),
+        || HubScratch::new(n),
+        |s, range| {
+            for src in range {
+                fill_hub(eff, &up, view, src, s);
+                let mut src_total = 0u64;
+                collect_hot(s, view, None, &mut src_total);
+                if !s.hot.is_empty() {
+                    let eids = up.eids(src);
+                    for (i, &y) in up.nbrs(src).iter().enumerate() {
+                        let pre = s.pres[i] as usize;
+                        let ynbrs = &eff.nbrs(y as usize)[..pre];
+                        let yeids = &eff.eids(y as usize)[..pre];
+                        let mut lo_leg = 0u64;
+                        for j in 0..pre {
+                            let z = ynbrs[j];
+                            if s.hotbits.test(z) {
+                                let d = s.ctr.cnt[z as usize] as u64;
+                                lo_leg += d - 1;
+                                atomic_add(&out[yeids[j] as usize], d - 1);
+                            }
+                        }
+                        atomic_add(&out[eids[i] as usize], lo_leg);
+                    }
+                }
+                clear_hot(s);
             }
         },
     );
@@ -286,23 +606,71 @@ mod tests {
         let g = gen::chung_lu(90, 110, 1400, 2.1, 17);
         let rg = preprocess(&g, Ranking::Degree);
         for t in [1usize, 3, 8] {
-            let total = crate::prims::pool::with_threads(t, || total_intersect(&rg));
-            assert_eq!(total, brute::total(&g), "threads={t}");
+            for layout in crate::graph::Layout::ALL {
+                let total =
+                    crate::prims::pool::with_threads(t, || total_intersect(&rg, layout));
+                assert_eq!(total, brute::total(&g), "threads={t} layout={}", layout.name());
+            }
         }
     }
 
     #[test]
-    fn edge_stamp_set_get_reset() {
+    fn hub_layout_matches_flat_on_all_rankings() {
+        use crate::graph::Layout;
+        use std::sync::atomic::{AtomicU64, Ordering};
+        // Skewed enough that the forced hub layout actually builds
+        // bitmaps; non-Degree rankings exercise the renumbering path.
+        let g = gen::chung_lu(80, 100, 1200, 2.1, 29);
+        for ranking in Ranking::ALL {
+            let rg = preprocess(&g, ranking);
+            assert_eq!(
+                total_intersect(&rg, Layout::Flat),
+                total_intersect(&rg, Layout::Hub),
+                "{ranking:?}"
+            );
+            let n = rg.n();
+            let m = rg.m();
+            let mk = |len: usize| -> Vec<AtomicU64> {
+                (0..len).map(|_| AtomicU64::new(0)).collect()
+            };
+            let (vf, vh) = (mk(n), mk(n));
+            per_vertex_intersect(&rg, Layout::Flat, &vf);
+            per_vertex_intersect(&rg, Layout::Hub, &vh);
+            for x in 0..n {
+                assert_eq!(
+                    vf[x].load(Ordering::Relaxed),
+                    vh[x].load(Ordering::Relaxed),
+                    "{ranking:?} vertex rank {x}"
+                );
+            }
+            let (ef, eh) = (mk(m), mk(m));
+            per_edge_intersect(&rg, Layout::Flat, &ef);
+            per_edge_intersect(&rg, Layout::Hub, &eh);
+            for e in 0..m {
+                assert_eq!(
+                    ef[e].load(Ordering::Relaxed),
+                    eh[e].load(Ordering::Relaxed),
+                    "{ranking:?} edge {e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn edge_stamp_set_get_hit_reset() {
         let mut s = EdgeStamp::new(8);
         assert_eq!(s.get(3), None);
+        assert!(!s.hit(3));
         s.set(3, 17);
         s.set(5, 0);
         s.set(3, 18); // overwrite keeps one touched entry
         assert_eq!(s.get(3), Some(18));
+        assert!(s.hit(3) && s.hit(5) && !s.hit(0));
         assert_eq!(s.get(5), Some(0));
         assert_eq!(s.get(0), None);
         s.reset();
         assert_eq!(s.get(3), None);
+        assert!(!s.hit(3) && !s.hit(5));
         assert_eq!(s.get(5), None);
         assert!(s.touched.is_empty());
     }

@@ -40,7 +40,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 pub use engine::{engine_for, Engine, WedgeEngine};
 
-use crate::graph::{BipartiteGraph, RankedGraph};
+use crate::graph::{BipartiteGraph, Layout, RankedGraph};
 use crate::rank::{preprocess, Ranking};
 
 /// Wedge-aggregation strategy (§3.1.2).
@@ -93,6 +93,11 @@ pub struct CountOpts {
     pub bfly: BflyAgg,
     /// Enumerate wedges from the higher-ranked endpoint (Wang et al.).
     pub cache_opt: bool,
+    /// Memory layout of the intersect hot loops
+    /// ([`Layout::Auto`]/`Flat`/`Hub`); only [`Engine::Intersect`]
+    /// consults it.  Outputs are bit-identical across layouts.  The
+    /// default comes from `PARBUTTERFLY_LAYOUT`.
+    pub layout: Layout,
     /// Memory budget: maximum wedges materialized/aggregated at once
     /// (§3.1.4).  Chunks split at source-vertex boundaries, which keeps
     /// every wedge key inside one chunk.
@@ -107,6 +112,7 @@ impl Default for CountOpts {
             agg: WedgeAgg::BatchS,
             bfly: BflyAgg::Atomic,
             cache_opt: false,
+            layout: Layout::default_from_env(),
             max_wedges: 1 << 26,
         }
     }
@@ -212,14 +218,22 @@ mod tests {
                             agg,
                             bfly,
                             cache_opt,
+                            layout: Layout::default_from_env(),
                             max_wedges: 1 << 26,
                         });
                     }
                 }
             }
             // The streaming engine has no agg/bfly/cache knobs — one
-            // combo per ranking.
-            v.push(CountOpts { ranking, engine: Engine::Intersect, ..Default::default() });
+            // combo per ranking and memory layout.
+            for layout in Layout::ALL {
+                v.push(CountOpts {
+                    ranking,
+                    engine: Engine::Intersect,
+                    layout,
+                    ..Default::default()
+                });
+            }
         }
         v
     }

@@ -70,20 +70,22 @@ use std::time::Instant;
 
 use crate::count::intersect::EdgeStamp;
 use crate::count::{atomic_add, count_per_edge_ranked, count_per_vertex_ranked, CountOpts};
+use crate::graph::ranked::walk_grain;
 use crate::graph::BipartiteGraph;
 use crate::prims::pool::{parallel_for, parallel_for_chunks, parallel_for_dynamic_with, SyncPtr};
 use crate::prims::scan::{dedup_sorted, pack_indices};
 use crate::prims::sort::par_sort;
 use crate::rank::preprocess;
 
-/// Batch edges per dynamic claim (per-edge walk costs are skewed).
-const GRAIN: usize = 2;
-
 /// Options for a [`DynGraph`].
 #[derive(Clone, Debug)]
 pub struct DynOpts {
     /// Ranking + engine used by full recounts (initial count and
-    /// rebuild-threshold fallbacks).
+    /// rebuild-threshold fallbacks).  The memory
+    /// [`Layout`](crate::graph::Layout) the intersect engine runs
+    /// recounts under is inherited from `count.layout`; the delta
+    /// walks themselves are layout-independent (they stream the
+    /// unranked CSR).
     pub count: CountOpts,
     /// Fall back to a full static recount once the edges applied since
     /// the last full count exceed this fraction of the current edge
@@ -478,9 +480,17 @@ impl DynGraph {
         let found = AtomicU64::new(0);
         let stamp_len = nu.max(nv);
         let (is_batch, d_bu2, d_bv2, d_pe2) = (&is_batch, &d_bu, &d_bv, &d_pe);
+        // Per-edge walk costs are skewed, so batch edges are claimed
+        // dynamically; the claim grain derives from the expected stamp-
+        // walk footprint against the cache-tile budget.
+        let fp = {
+            let du = m.div_ceil(nu.max(1)).max(1);
+            let dv = m.div_ceil(nv.max(1)).max(1);
+            du.saturating_mul(dv)
+        };
         parallel_for_dynamic_with(
             batch_eids.len(),
-            GRAIN,
+            walk_grain(batch_eids.len(), fp),
             || EdgeStamp::new(stamp_len),
             |stamp, range| {
                 let mut local = 0u64;
@@ -629,6 +639,11 @@ fn walk_one(
             let u2 = u2 as usize;
             let mut cnt = 0u64;
             for (k, &v2) in g.nbrs_u(u2).iter().enumerate() {
+                // Bitset probe first: the common miss answers from a
+                // 32x denser structure than the stamp's eid slots.
+                if !stamp.hit(v2) {
+                    continue;
+                }
                 let e_u2v2 = g.eid_u(u2, k);
                 if !passes(e_u2v2) {
                     continue;
@@ -664,6 +679,10 @@ fn walk_one(
             let mut cnt = 0u64;
             let (nbrs2, eids2) = (g.nbrs_v(v2), g.eids_v(v2));
             for (k, &u2) in nbrs2.iter().enumerate() {
+                // Bitset probe first (see the mirrored loop above).
+                if !stamp.hit(u2) {
+                    continue;
+                }
                 let e_u2v2 = eids2[k];
                 if !passes(e_u2v2) {
                     continue;

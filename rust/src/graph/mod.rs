@@ -3,7 +3,10 @@
 //! * [`bipartite`] — the CSR bipartite graph (both-side adjacency, edge
 //!   ids shared between sides).
 //! * [`ranked`] — Algorithm 1 preprocessing: rename vertices by rank,
-//!   sort adjacency by decreasing rank, store up-degrees and edge ids.
+//!   sort adjacency by decreasing rank, store up-degrees and edge ids;
+//!   plus the cache-aware locality layer ([`ranked::Layout`],
+//!   [`ranked::HubView`], [`ranked::HubBitmap`]) the wedge hot loops
+//!   select through `--layout` / `PARBUTTERFLY_LAYOUT`.
 //! * [`io`] — edge-list / KONECT-style loaders and writers.
 //! * [`gen`] — synthetic workload generators (Erdős–Rényi, Chung-Lu
 //!   power-law, planted dense blocks) plus the embedded Davis Southern
@@ -15,4 +18,4 @@ pub mod io;
 pub mod ranked;
 
 pub use bipartite::BipartiteGraph;
-pub use ranked::{RankedGraph, UpCsr};
+pub use ranked::{HubBitmap, HubView, Layout, RankedGraph, UpCsr};

@@ -19,9 +19,115 @@
 
 use super::bipartite::BipartiteGraph;
 use crate::prims::pool::{
-    parallel_for_chunks, parallel_for_dynamic_pooled, parallel_map, ScratchPool, SyncPtr,
+    num_threads, parallel_for_chunks, parallel_for_dynamic_pooled, parallel_map, ScratchPool,
+    SyncPtr,
 };
 use crate::prims::scan::prefix_sum;
+
+/// Memory-layout selector for the wedge hot loops (BFC-VP++-style
+/// cache-aware processing; Wang et al., arXiv 1812.00283).
+///
+/// * `Flat` — the PR 3 walk: pointer-chasing second hops into the
+///   dense `TouchedCounter`, adjacency in caller rank order.
+/// * `Hub` — the cache-aware fast path: hub-first rank renumbering,
+///   dense [`HubBitmap`] adjacency for the heavy-degree tail (second
+///   hops into hubs become word-wise AND/popcount), and tiled non-hub
+///   fills so the counter working set stays cache-resident.  Outputs
+///   are bit-identical to `Flat` (see [`HubView`]).
+/// * `Auto` — `Hub` for graphs big enough to leave cache, `Flat` for
+///   tiny ones; within `Hub`, bitmaps are additionally gated on degree
+///   skew (see [`HubView::build`]).
+///
+/// Selected per call through `CountOpts`/`PeelVOpts`/`PeelEOpts` (and
+/// inherited by `DynOpts` via its embedded `CountOpts`); the process
+/// default comes from `PARBUTTERFLY_LAYOUT`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// Pick per graph: `Hub` when the walk outgrows cache, plus the
+    /// degree-skew gate on bitmaps.
+    Auto,
+    /// Always the flat walk (the pre-layout behavior).
+    Flat,
+    /// Always the cache-aware walk; bitmaps for every vertex over the
+    /// degree threshold, skew gate bypassed.
+    Hub,
+}
+
+impl Layout {
+    pub const ALL: [Layout; 3] = [Layout::Auto, Layout::Flat, Layout::Hub];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Layout::Auto => "auto",
+            Layout::Flat => "flat",
+            Layout::Hub => "hub",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Layout> {
+        match s {
+            "auto" => Some(Layout::Auto),
+            "flat" => Some(Layout::Flat),
+            "hub" => Some(Layout::Hub),
+            _ => None,
+        }
+    }
+
+    /// Process-wide default: `PARBUTTERFLY_LAYOUT` if set (same
+    /// read-once discipline as `PARBUTTERFLY_PEEL_ENGINE`), else
+    /// [`Layout::Auto`].  Panics on an unrecognized value — a typo'd
+    /// layout silently falling back would invalidate benchmarks.
+    pub fn default_from_env() -> Layout {
+        use std::sync::OnceLock;
+        static DEFAULT: OnceLock<Layout> = OnceLock::new();
+        *DEFAULT.get_or_init(|| match std::env::var("PARBUTTERFLY_LAYOUT") {
+            Ok(s) => Layout::parse(&s).unwrap_or_else(|| {
+                panic!("PARBUTTERFLY_LAYOUT={s:?} names no layout (auto|flat|hub)")
+            }),
+            Err(_) => Layout::Auto,
+        })
+    }
+
+    /// Resolve `Auto` for a graph with `m` edges.  Tiny graphs stay on
+    /// the flat walk: below ~1k edges every structure is cache-resident
+    /// already and the hub bookkeeping is pure overhead.
+    pub fn resolve(self, m: usize) -> Layout {
+        match self {
+            Layout::Auto => {
+                if m >= 1024 {
+                    Layout::Hub
+                } else {
+                    Layout::Flat
+                }
+            }
+            fixed => fixed,
+        }
+    }
+}
+
+impl Default for Layout {
+    fn default() -> Self {
+        Layout::default_from_env()
+    }
+}
+
+/// Ranks per tile of the blocked second-hop traversal.  A tile's slice
+/// of the dense `u32` counter is `4 * TILE_RANKS` bytes = 256 KiB —
+/// sized to stay resident in a typical L2 across the whole fill.
+pub(crate) const TILE_RANKS: usize = 1 << 16;
+
+/// Dynamic-claim grain for the two-hop walk loops, derived from the
+/// cache tile instead of hard-coded per call site: a claim covers
+/// enough items that their combined counter footprint fills about one
+/// tile (`TILE_RANKS` slots), but never so few claims that dynamic
+/// self-scheduling loses its ability to absorb skewed wedge costs
+/// (at least ~4 claims per worker), clamped to the 1..=8 range the
+/// PR 2–4 tuning found safe.
+pub(crate) fn walk_grain(items: usize, footprint_per_item: usize) -> usize {
+    let cache = TILE_RANKS / footprint_per_item.max(1);
+    let balance = items / (4 * num_threads()).max(1);
+    cache.min(balance).clamp(1, 8)
+}
 
 /// Rank-renamed graph (output of PREPROCESS).
 #[derive(Clone, Debug)]
@@ -212,6 +318,68 @@ impl RankedGraph {
         UpCsr { off, adj, eid }
     }
 
+    /// Rebuild this graph under the rank permutation `sigma`
+    /// (`sigma[old rank] -> new rank`): adjacency rows re-sorted to the
+    /// new decreasing-rank order, up-degrees recomputed, edge ids and
+    /// the original-id maps carried through the composition.
+    ///
+    /// This is the rank-locality renumbering pass of the hub layout.
+    /// Butterfly counts are properties of the *graph*, not the ranking,
+    /// and every count the engines produce is an exact integer sum, so
+    /// walking the renumbered graph and mapping per-vertex results back
+    /// through [`Self::orig`] reproduces the caller's outputs bit for
+    /// bit (per-edge results need no mapping at all — edge ids are
+    /// rank-independent).
+    pub fn renumbered(&self, sigma: &[u32]) -> RankedGraph {
+        let n = self.n;
+        assert_eq!(sigma.len(), n);
+        let mut inv = vec![u32::MAX; n];
+        for (old, &new) in sigma.iter().enumerate() {
+            assert!((new as usize) < n, "rank out of range");
+            assert_eq!(inv[new as usize], u32::MAX, "rank {new} assigned twice");
+            inv[new as usize] = old as u32;
+        }
+        let deg: Vec<usize> = parallel_map(n, |x| self.deg(inv[x] as usize));
+        let (mut off, m2) = prefix_sum(&deg);
+        off.push(m2);
+        let mut adj = vec![0u32; m2];
+        let mut eid = vec![0u32; m2];
+        let mut up_deg = vec![0u32; n];
+        let orig: Vec<u32> = parallel_map(n, |x| self.orig[inv[x] as usize]);
+        let rank_of: Vec<u32> = parallel_map(n, |gid| sigma[self.rank_of[gid] as usize]);
+        let pool: ScratchPool<Vec<(u32, u32)>> = ScratchPool::new();
+        {
+            let ap = SyncPtr(adj.as_mut_ptr());
+            let ep = SyncPtr(eid.as_mut_ptr());
+            let up = SyncPtr(up_deg.as_mut_ptr());
+            let off = &off;
+            let inv = &inv;
+            parallel_for_dynamic_pooled(n, 256, &pool, Vec::new, |buf, range| {
+                for x in range {
+                    let old = inv[x] as usize;
+                    buf.clear();
+                    for (&z, &e) in self.nbrs(old).iter().zip(self.eids(old)) {
+                        buf.push((sigma[z as usize], e));
+                    }
+                    buf.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+                    let base = off[x];
+                    let mut upd = 0u32;
+                    for (i, &(r, e)) in buf.iter().enumerate() {
+                        unsafe {
+                            *ap.get().add(base + i) = r;
+                            *ep.get().add(base + i) = e;
+                        }
+                        if (r as usize) > x {
+                            upd += 1;
+                        }
+                    }
+                    unsafe { *up.get().add(x) = upd };
+                }
+            });
+        }
+        RankedGraph { n, off, adj, eid, up_deg, orig, rank_of, nu: self.nu }
+    }
+
     /// Total number of wedges GET-WEDGES will process under this
     /// ranking: `sum_x sum_{y in N_x(x)} deg_x(y)`.  This is the `w_r`
     /// of the Table 3 `f` metric.
@@ -278,6 +446,177 @@ impl UpCsr {
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.adj.is_empty()
+    }
+}
+
+/// Dense-bitmap adjacency for the heavy-degree tail: one `n`-bit row
+/// per hub (ranks `0..hub_count`), bit `z` set iff `z` is a neighbor.
+///
+/// With hubs occupying a rank prefix the whole structure is
+/// `hub_count * n / 8` bytes — for the `deg > sqrt(m)` threshold that
+/// is at most `2 * sqrt(m) * n / 8`, and in practice far less because
+/// real degree distributions have short heavy tails.  A second hop
+/// into a hub then costs one word-parallel AND/popcount against the
+/// source's up-neighborhood bitmap instead of `deg(hub)` scattered
+/// counter bumps.
+#[derive(Clone, Debug)]
+pub struct HubBitmap {
+    hub_count: usize,
+    words: usize,
+    bits: Vec<u64>,
+}
+
+impl HubBitmap {
+    /// Build rows for ranks `0..hub_count` of `rg`.  Callers arrange
+    /// for hubs to be exactly that prefix (see [`HubView::build`]).
+    pub fn build(rg: &RankedGraph, hub_count: usize) -> Self {
+        let words = rg.n().div_ceil(64);
+        let mut bits = vec![0u64; hub_count * words];
+        {
+            let p = SyncPtr(bits.as_mut_ptr());
+            parallel_for_chunks(hub_count, |range| {
+                for h in range {
+                    let base = h * words;
+                    for &z in rg.nbrs(h) {
+                        // Rows are disjoint per `h`, so the raw writes
+                        // never race.
+                        unsafe { *p.get().add(base + (z >> 6) as usize) |= 1u64 << (z & 63) };
+                    }
+                }
+            });
+        }
+        Self { hub_count, words, bits }
+    }
+
+    /// The bitmap row of hub rank `h`.
+    #[inline]
+    pub fn row(&self, h: usize) -> &[u64] {
+        &self.bits[h * self.words..(h + 1) * self.words]
+    }
+
+    #[inline]
+    pub fn hub_count(&self) -> usize {
+        self.hub_count
+    }
+
+    /// Words per row (`n / 64` rounded up).
+    #[inline]
+    pub fn words_per_row(&self) -> usize {
+        self.words
+    }
+}
+
+/// The composed locality view the cache-aware walks run over: degree
+/// threshold, hub prefix size, the (possibly renumbered) graph, and
+/// the hub bitmaps.
+///
+/// Invariants the walks rely on:
+///
+/// * hubs — vertices with `deg > threshold` — occupy exactly ranks
+///   `[0, hub_count)` of [`Self::graph`];
+/// * [`Self::back_rank`] maps a walk-space rank to the caller's rank
+///   space (identity when no renumbering was needed);
+/// * edge ids in the walk graph are the caller's edge ids unchanged.
+///
+/// Under the default Degree ranking hubs are already a rank prefix
+/// (rank order *is* decreasing degree order), so no renumbering
+/// happens and the view borrows nothing but the bitmaps.  Other
+/// rankings get a stable hub-first permutation: hubs first in caller
+/// rank order, then everyone else in caller rank order — which keeps
+/// rank-adjacency (the "visited together" relation of the wedge walk)
+/// intact within each class.
+pub struct HubView {
+    /// Degree above which a vertex is a hub (`deg > threshold`).
+    pub threshold: usize,
+    /// Hubs are ranks `[0, hub_count)` of [`Self::graph`]; zero means
+    /// the bitmap fast path is off (skew gate) and only the blocked
+    /// traversal applies.
+    pub hub_count: usize,
+    /// Bitmap rows for ranks `[0, hub_count)`.
+    pub bitmap: HubBitmap,
+    renumbered: Option<RankedGraph>,
+    back: Option<Vec<u32>>,
+}
+
+impl HubView {
+    /// Build the view for `rg` with threshold `sqrt(m)`.
+    ///
+    /// With `skew_gated` (the `Layout::Auto` policy) hub bitmaps are
+    /// only enabled when the heavy tail carries at least 1/8 of all
+    /// edge endpoints — on near-regular graphs the "hubs" are barely
+    /// above average degree and bitmap rows would mostly miss.  A
+    /// forced `Layout::Hub` passes `false` and gets bitmaps for every
+    /// vertex over the threshold.
+    pub fn build(rg: &RankedGraph, skew_gated: bool) -> HubView {
+        let m = rg.m();
+        let threshold = m.isqrt();
+        let n = rg.n();
+        let is_hub = |x: usize| rg.deg(x) > threshold;
+        let hub_count = (0..n).filter(|&x| is_hub(x)).count();
+        let hub_mass: usize = (0..n).filter(|&x| is_hub(x)).map(|x| rg.deg(x)).sum();
+        let use_bitmaps = hub_count > 0 && (!skew_gated || hub_mass * 8 >= 2 * m);
+        if !use_bitmaps {
+            return HubView {
+                threshold,
+                hub_count: 0,
+                bitmap: HubBitmap::build(rg, 0),
+                renumbered: None,
+                back: None,
+            };
+        }
+        if (0..hub_count).all(is_hub) {
+            // Hubs already a rank prefix (always true under Degree
+            // ranking): no rebuild, walk the caller's graph directly.
+            return HubView {
+                threshold,
+                hub_count,
+                bitmap: HubBitmap::build(rg, hub_count),
+                renumbered: None,
+                back: None,
+            };
+        }
+        // Stable hub-first permutation sigma[old] -> new.
+        let mut sigma = vec![0u32; n];
+        let mut next_hub = 0u32;
+        let mut next_rest = hub_count as u32;
+        for (x, slot) in sigma.iter_mut().enumerate() {
+            if is_hub(x) {
+                *slot = next_hub;
+                next_hub += 1;
+            } else {
+                *slot = next_rest;
+                next_rest += 1;
+            }
+        }
+        let rn = rg.renumbered(&sigma);
+        let mut back = vec![0u32; n];
+        for (old, &new) in sigma.iter().enumerate() {
+            back[new as usize] = old as u32;
+        }
+        let bitmap = HubBitmap::build(&rn, hub_count);
+        HubView { threshold, hub_count, bitmap, renumbered: Some(rn), back: Some(back) }
+    }
+
+    /// The graph the walk runs over: the renumbered rebuild when one
+    /// was needed, otherwise the caller's graph.
+    #[inline]
+    pub fn graph<'a>(&'a self, caller: &'a RankedGraph) -> &'a RankedGraph {
+        self.renumbered.as_ref().unwrap_or(caller)
+    }
+
+    /// Map a walk-space rank back to the caller's rank space.
+    #[inline]
+    pub fn back_rank(&self, x: usize) -> usize {
+        match &self.back {
+            Some(b) => b[x] as usize,
+            None => x,
+        }
+    }
+
+    /// Did this view renumber (hubs were not already a rank prefix)?
+    #[inline]
+    pub fn is_renumbered(&self) -> bool {
+        self.renumbered.is_some()
     }
 }
 
@@ -448,5 +787,144 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&c| c == 1), "each edge from its lower endpoint only");
+    }
+
+    #[test]
+    fn layout_parse_name_roundtrip_and_resolve() {
+        for l in Layout::ALL {
+            assert_eq!(Layout::parse(l.name()), Some(l));
+        }
+        assert_eq!(Layout::parse("bitmap"), None);
+        assert_eq!(Layout::Auto.resolve(10), Layout::Flat);
+        assert_eq!(Layout::Auto.resolve(100_000), Layout::Hub);
+        assert_eq!(Layout::Flat.resolve(100_000), Layout::Flat);
+        assert_eq!(Layout::Hub.resolve(10), Layout::Hub);
+    }
+
+    #[test]
+    fn renumbered_matches_fresh_build_under_composed_ranking() {
+        let g = crate::graph::gen::chung_lu(120, 150, 1_500, 2.1, 41);
+        let n = g.n();
+        // Two permutations from primes coprime to n; verified below.
+        let rank: Vec<u32> = (0..n).map(|i| ((i * 7919) % n) as u32).collect();
+        let sigma: Vec<u32> = (0..n).map(|i| ((i * 131) % n) as u32).collect();
+        for p in [&rank, &sigma] {
+            let mut seen = vec![false; n];
+            for &r in p.iter() {
+                assert!(!std::mem::replace(&mut seen[r as usize], true), "not a permutation");
+            }
+        }
+        let rg = RankedGraph::new(&g, rank.clone());
+        let rn = rg.renumbered(&sigma);
+        // Renumbering must equal a fresh PREPROCESS under the composed
+        // ranking gid -> sigma[rank[gid]].
+        let composed: Vec<u32> = (0..n).map(|gid| sigma[rank[gid] as usize]).collect();
+        let fresh = RankedGraph::new(&g, composed);
+        for x in 0..n {
+            assert_eq!(rn.nbrs(x), fresh.nbrs(x), "x={x}");
+            assert_eq!(rn.eids(x), fresh.eids(x), "x={x}");
+            assert_eq!(rn.up_deg(x), fresh.up_deg(x), "x={x}");
+            assert_eq!(rn.orig(x), fresh.orig(x), "x={x}");
+        }
+        for gid in 0..n {
+            assert_eq!(rn.rank_of(gid), fresh.rank_of(gid), "gid={gid}");
+        }
+    }
+
+    #[test]
+    fn hub_view_is_identity_under_degree_ranking() {
+        let g = crate::graph::gen::chung_lu(300, 400, 6_000, 2.1, 7);
+        let rg = crate::rank::preprocess(&g, crate::rank::Ranking::Degree);
+        let v = HubView::build(&rg, false);
+        // Degree rank order *is* decreasing degree order, so hubs are
+        // already the prefix and no rebuild happens.
+        assert!(!v.is_renumbered());
+        assert!(v.hub_count > 0);
+        for x in 0..rg.n() {
+            assert_eq!(x < v.hub_count, rg.deg(x) > v.threshold, "x={x}");
+            assert_eq!(v.back_rank(x), x);
+        }
+    }
+
+    #[test]
+    fn hub_bitmap_skew_gate() {
+        // 200 background u's of degree 5 plus one u of degree 40: with
+        // m=1040 the threshold is isqrt(1040)=32, so exactly one hub
+        // exists, carrying ~4% of edge endpoints.  Auto's skew gate
+        // says bitmaps aren't worth building; forced Hub takes them.
+        let mut edges = Vec::new();
+        for u in 0..200u32 {
+            for k in 0..5u32 {
+                edges.push((u, (u * 5 + k) % 500));
+            }
+        }
+        for k in 0..40u32 {
+            edges.push((200, k));
+        }
+        let g = BipartiteGraph::from_edges(201, 500, &edges);
+        assert_eq!(g.m(), 1040);
+        let rg = crate::rank::preprocess(&g, crate::rank::Ranking::Degree);
+        let gated = HubView::build(&rg, true);
+        assert_eq!(gated.hub_count, 0);
+        let forced = HubView::build(&rg, false);
+        assert_eq!(forced.hub_count, 1);
+        assert_eq!(forced.bitmap.hub_count(), 1);
+    }
+
+    #[test]
+    fn hub_bitmap_rows_match_adjacency() {
+        let g = crate::graph::gen::chung_lu(300, 400, 6_000, 2.1, 7);
+        let rg = crate::rank::preprocess(&g, crate::rank::Ranking::Degree);
+        let v = HubView::build(&rg, false);
+        assert!(v.hub_count > 0);
+        let eff = v.graph(&rg);
+        for h in 0..v.hub_count {
+            let mut expect = vec![0u64; v.bitmap.words_per_row()];
+            for &z in eff.nbrs(h) {
+                expect[(z >> 6) as usize] |= 1u64 << (z & 63);
+            }
+            assert_eq!(v.bitmap.row(h), &expect[..], "hub {h}");
+        }
+    }
+
+    #[test]
+    fn hub_view_renumbers_scattered_hubs_and_maps_back() {
+        let g = crate::graph::gen::chung_lu(300, 400, 6_000, 2.1, 9);
+        // Side ranking puts all of U before all of V, so the V-side
+        // hubs cannot be part of any hub prefix — the view must
+        // renumber.
+        let rg = crate::rank::preprocess(&g, crate::rank::Ranking::Side);
+        let v = HubView::build(&rg, false);
+        assert!(v.hub_count > 0);
+        assert!(v.is_renumbered());
+        let eff = v.graph(&rg);
+        for x in 0..eff.n() {
+            assert_eq!(x < v.hub_count, eff.deg(x) > v.threshold, "x={x}");
+        }
+        // back_rank is a bijection consistent with original ids,
+        // degrees, and edge-id multisets.
+        let mut seen = vec![false; eff.n()];
+        for x in 0..eff.n() {
+            let b = v.back_rank(x);
+            assert!(!std::mem::replace(&mut seen[b], true), "back_rank not injective");
+            assert_eq!(eff.orig(x), rg.orig(b), "x={x}");
+            assert_eq!(eff.deg(x), rg.deg(b), "x={x}");
+            let mut ea: Vec<u32> = eff.eids(x).to_vec();
+            let mut eb: Vec<u32> = rg.eids(b).to_vec();
+            ea.sort_unstable();
+            eb.sort_unstable();
+            assert_eq!(ea, eb, "x={x}");
+        }
+    }
+
+    #[test]
+    fn walk_grain_derives_from_tile_and_stays_bounded() {
+        // Footprints beyond a tile collapse to single-item claims;
+        // tiny footprints are capped by the balance bound and the
+        // historical max of 8; degenerate item counts stay at 1.
+        assert_eq!(walk_grain(10_000, TILE_RANKS * 2), 1);
+        assert!((1..=8).contains(&walk_grain(100_000, 1)));
+        assert_eq!(walk_grain(0, 1), 1);
+        assert_eq!(walk_grain(3, 9), 1);
     }
 }

@@ -30,12 +30,14 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::count::WedgeAgg;
-use crate::graph::BipartiteGraph;
+use crate::graph::ranked::walk_grain;
+use crate::graph::{BipartiteGraph, Layout};
 use crate::prims::histogram::histogram;
 use crate::prims::pool::{
     num_threads, parallel_for_dynamic, parallel_for_dynamic_pooled, ScratchPool,
 };
 use crate::prims::semisort::aggregate_counts;
+use crate::prims::simd::{intersect_pairs, Bitset};
 
 use super::bucket::{make_buckets, BucketKind};
 use super::delta::DenseDelta;
@@ -68,6 +70,12 @@ pub struct PeelEOpts {
     pub engine: PeelEngine,
     pub agg: WedgeAgg,
     pub buckets: BucketKind,
+    /// Memory layout for the intersect engine's stamp walks
+    /// ([`Layout::Hub`] = degree-descending relabeling of both sides
+    /// with edge ids mapped through the rebuild); only
+    /// [`PeelEngine::Intersect`] consults it.  Wing numbers are
+    /// identical across layouts.
+    pub layout: Layout,
 }
 
 impl Default for PeelEOpts {
@@ -76,6 +84,7 @@ impl Default for PeelEOpts {
             engine: PeelEngine::default(),
             agg: WedgeAgg::Hash,
             buckets: BucketKind::Julienne,
+            layout: Layout::default_from_env(),
         }
     }
 }
@@ -86,10 +95,77 @@ const ALIVE: u32 = u32::MAX;
 
 /// Wing decomposition given per-edge butterfly counts.
 pub fn peel_edges(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> WingResult {
+    // Cache-aware layout: only the intersect engine's dense stamp
+    // walks benefit (Agg ignores `layout` exactly as Intersect
+    // ignores `agg`).
+    if opts.engine == PeelEngine::Intersect && opts.layout.resolve(g.m()) == Layout::Hub {
+        return peel_edges_relabeled(g, be, opts);
+    }
     match opts.engine {
         PeelEngine::Agg => peel_edges_agg(g, be, opts),
         PeelEngine::Intersect => peel_edges_intersect(g, be, opts),
     }
+}
+
+/// The peel-edge analogue of the counting engine's hub renumbering:
+/// relabel both vertex sides by decreasing degree, rebuild, peel the
+/// relabeled graph flat, and route wing numbers back through the edge-
+/// id map the rebuild induces.
+///
+/// The stamp walk's hot state — `stamp_tag`/`stamp_eid` slots indexed
+/// by `v2` and the per-edge `DenseDelta` — concentrates on high-degree
+/// vertices (stamped and probed through many co-edges), so degree-
+/// descending ids pack the hot slots into a cache-resident prefix.
+///
+/// Wing numbers are invariant under the relabeling: every butterfly is
+/// processed exactly once (by its minimum-*id* same-round peeled edge,
+/// and *which* edge that is may change — but each surviving edge still
+/// receives exactly one decrement per destroyed butterfly, and same-
+/// round decrements are dropped at apply time either way), so bucket
+/// trajectories and rounds are identical.
+fn peel_edges_relabeled(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> WingResult {
+    let m = g.m();
+    assert_eq!(be.len(), m);
+    let perm_u = degree_desc_perm(g.nu(), |u| g.deg_u(u));
+    let perm_v = degree_desc_perm(g.nv(), |v| g.deg_v(v));
+    // Relabeled endpoint pairs indexed by *old* edge id.
+    let edges2: Vec<(u32, u32)> = (0..m)
+        .map(|e| {
+            let (u, v) = g.edge(e as u32);
+            (perm_u[u as usize], perm_v[v as usize])
+        })
+        .collect();
+    let g2 = BipartiteGraph::from_edges(g.nu(), g.nv(), &edges2);
+    // `from_edges` assigns edge ids by sorted (u, v) order, so the old
+    // edge's new id is the rank of its relabeled pair.
+    let mut by_pair: Vec<u32> = (0..m as u32).collect();
+    by_pair.sort_unstable_by_key(|&e| edges2[e as usize]);
+    let mut emap = vec![0u32; m];
+    for (new, &old) in by_pair.iter().enumerate() {
+        emap[old as usize] = new as u32;
+    }
+    let mut be2 = vec![0u64; m];
+    for (e, &c) in be.iter().enumerate() {
+        be2[emap[e] as usize] = c;
+    }
+    let opts2 = PeelEOpts { layout: Layout::Flat, ..opts.clone() };
+    let r2 = peel_edges(&g2, &be2, &opts2);
+    let wings = emap.iter().map(|&e2| r2.wings[e2 as usize]).collect();
+    WingResult { wings, rounds: r2.rounds }
+}
+
+/// Stable permutation `old id -> new id` ordering vertices by
+/// decreasing degree (ties by id).
+fn degree_desc_perm(n: usize, deg: impl Fn(usize) -> usize) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_unstable_by(|&a, &b| {
+        deg(b as usize).cmp(&deg(a as usize)).then_with(|| a.cmp(&b))
+    });
+    let mut perm = vec![0u32; n];
+    for (new, &old) in order.iter().enumerate() {
+        perm[old as usize] = new as u32;
+    }
+    perm
 }
 
 /// The aggregation engine: UPDATE-E through `opts.agg`.
@@ -135,6 +211,10 @@ struct EScratch {
     /// `v2` -> the peeled edge id the stamp belongs to (`ALIVE` =
     /// never stamped).
     stamp_tag: Vec<u32>,
+    /// One bit per currently stamped `v2` — the probe loop's fast
+    /// reject (32x denser than `stamp_tag`, so the hot working set of
+    /// the `N(u2)` scans stays cache-resident).  Cleared per edge.
+    stamped: Bitset,
     delta: DenseDelta,
 }
 
@@ -152,6 +232,14 @@ fn peel_edges_intersect(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> Win
     let mut live_u = LiveCsr::u_view(g);
     let mut live_v = LiveCsr::v_view(g);
     let mut pool: ScratchPool<EScratch> = ScratchPool::new();
+    // Expected stamp-walk footprint of one batch edge (stamp deg(u1)
+    // slots, probe through deg(v1) co-edges): drives the tile-derived
+    // claim grain instead of a hard-coded constant.
+    let fp = {
+        let du = g.m().div_ceil(g.nu().max(1)).max(1);
+        let dv = g.m().div_ceil(g.nv().max(1)).max(1);
+        du.saturating_mul(dv)
+    };
 
     while let Some((c, batch)) = buckets.pop_min() {
         k = k.max(c);
@@ -168,11 +256,12 @@ fn peel_edges_intersect(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> Win
             let (batch, round_of) = (&batch[..], &round_of[..]);
             parallel_for_dynamic_pooled(
                 batch.len(),
-                1,
+                walk_grain(batch.len(), fp),
                 &pool,
                 || EScratch {
                     stamp_eid: vec![0u32; g.nv()],
                     stamp_tag: vec![ALIVE; g.nv()],
+                    stamped: Bitset::new(g.nv()),
                     delta: DenseDelta::new(m),
                 },
                 |s, range| {
@@ -188,10 +277,15 @@ fn peel_edges_intersect(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> Win
                             if alive_for(round_of, round, ve[j], e) {
                                 s.stamp_eid[vn[j] as usize] = ve[j];
                                 s.stamp_tag[vn[j] as usize] = e;
+                                s.stamped.set(vn[j] as usize);
                             }
                         }
                         // Co-edges (u2, v1), then u2's live
-                        // neighborhood against the stamps.
+                        // neighborhood against the stamps.  The bitset
+                        // rejects the common miss before the 4-byte
+                        // tag load; the tag still arbitrates, since
+                        // bits outlive their edge only until the
+                        // clearing sweep below.
                         let un = live_v.nbrs(v1 as usize);
                         let ue = live_v.eids(v1 as usize);
                         for j in 0..un.len() {
@@ -203,7 +297,8 @@ fn peel_edges_intersect(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> Win
                             let we = live_u.eids(u2 as usize);
                             for t in 0..wn.len() {
                                 let (v2, eb) = (wn[t], we[t]);
-                                if s.stamp_tag[v2 as usize] == e
+                                if s.stamped.test(v2 as usize)
+                                    && s.stamp_tag[v2 as usize] == e
                                     && alive_for(round_of, round, eb, e)
                                 {
                                     // Butterfly (u1, v1, u2, v2) dies:
@@ -213,6 +308,10 @@ fn peel_edges_intersect(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> Win
                                     s.delta.add(eb, 1);
                                 }
                             }
+                        }
+                        // Unstamp (clearing an unset bit is harmless).
+                        for &v2 in vn {
+                            s.stamped.clear(v2 as usize);
                         }
                     }
                 },
@@ -275,7 +374,17 @@ fn update_e(
         return;
     }
     let merged = Mutex::new(HashMap::<u32, u64>::new());
-    let grain = if agg == WedgeAgg::BatchWA { 1 } else { 2 };
+    // BatchWA is *defined* by finest-grain work assignment (that is
+    // the scheduling difference Figure 13 measures), so it pins grain
+    // 1; every other strategy derives its claim grain from the
+    // expected per-edge walk footprint against the tile budget.
+    let grain = if agg == WedgeAgg::BatchWA {
+        1
+    } else {
+        let du = g.m().div_ceil(g.nu().max(1)).max(1);
+        let dv = g.m().div_ceil(g.nv().max(1)).max(1);
+        walk_grain(batch.len(), du.saturating_mul(dv))
+    };
     parallel_for_dynamic(batch.len(), grain, |r| {
         let mut local_list = Vec::new();
         let mut local_map = HashMap::<u32, u64>::new();
@@ -338,13 +447,13 @@ fn enumerate_batch_edge(
                 if !alive_for(round_of, round, e2, e) {
                     continue;
                 }
-                // Intersect N(u1) and N(u2).  §Perf: when one list is
-                // much shorter, scan it and binary-search the other —
-                // O(min·log max) instead of O(deg u1 + deg u2), which
-                // realizes the paper's min(deg, deg') intersection
-                // bound on power-law hubs.
+                // Intersect N(u1) and N(u2) through the shared
+                // adaptive kernel ([`intersect_pairs`]): scan-and-
+                // binary-search when one list is much shorter —
+                // O(min·log max), the paper's min(deg, deg') bound on
+                // power-law hubs — else a two-pointer merge.
                 let (a, b) = (g.nbrs_u(u1 as usize), g.nbrs_u(u2 as usize));
-                let mut hit = |i1: usize, i2: usize| {
+                intersect_pairs(a, b, |i1, i2| {
                     let v2 = a[i1];
                     if v2 != v1 {
                         let ea = g.eid_u(u1 as usize, i1);
@@ -359,33 +468,7 @@ fn enumerate_batch_edge(
                             emit(eb);
                         }
                     }
-                };
-                if a.len() * 8 < b.len() {
-                    for (i1, &v2) in a.iter().enumerate() {
-                        if let Ok(i2) = b.binary_search(&v2) {
-                            hit(i1, i2);
-                        }
-                    }
-                } else if b.len() * 8 < a.len() {
-                    for (i2, &v2) in b.iter().enumerate() {
-                        if let Ok(i1) = a.binary_search(&v2) {
-                            hit(i1, i2);
-                        }
-                    }
-                } else {
-                    let (mut i1, mut i2) = (0usize, 0usize);
-                    while i1 < a.len() && i2 < b.len() {
-                        match a[i1].cmp(&b[i2]) {
-                            std::cmp::Ordering::Less => i1 += 1,
-                            std::cmp::Ordering::Greater => i2 += 1,
-                            std::cmp::Ordering::Equal => {
-                                hit(i1, i2);
-                                i1 += 1;
-                                i2 += 1;
-                            }
-                        }
-                    }
-                }
+                });
             }
 }
 
@@ -434,11 +517,15 @@ mod tests {
             for engine in PeelEngine::ALL {
                 for agg in WedgeAgg::ALL {
                     for buckets in BucketKind::ALL {
-                        let r = wings_via(&g, &PeelEOpts { engine, agg, buckets });
-                        assert_eq!(
-                            r.wings, expect,
-                            "seed={seed} {engine:?} agg={agg:?} {buckets:?}"
-                        );
+                        // Hub layout forces the relabeled path even on
+                        // these tiny graphs.
+                        for layout in [Layout::Flat, Layout::Hub] {
+                            let r = wings_via(&g, &PeelEOpts { engine, agg, buckets, layout });
+                            assert_eq!(
+                                r.wings, expect,
+                                "seed={seed} {engine:?} agg={agg:?} {buckets:?} {layout:?}"
+                            );
+                        }
                     }
                 }
             }

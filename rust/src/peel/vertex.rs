@@ -32,7 +32,8 @@ use std::sync::Mutex;
 use crate::count::intersect::TouchedCounter;
 use crate::count::wedges::key_endpoints;
 use crate::count::{choose2, WedgeAgg};
-use crate::graph::BipartiteGraph;
+use crate::graph::ranked::walk_grain;
+use crate::graph::{BipartiteGraph, Layout};
 use crate::prims::hashtable::CountTable;
 use crate::prims::histogram::histogram;
 use crate::prims::pool::{
@@ -87,6 +88,11 @@ pub struct PeelVOpts {
     pub agg: WedgeAgg,
     pub buckets: BucketKind,
     pub side: PeelSide,
+    /// Memory layout of the intersect walks (hub = degree-descending
+    /// relabeling so the counter hot slots cluster; see
+    /// [`peel_vertices_relabeled`]).  Only [`PeelEngine::Intersect`]
+    /// consults it; tip numbers are identical across layouts.
+    pub layout: Layout,
 }
 
 impl Default for PeelVOpts {
@@ -99,6 +105,7 @@ impl Default for PeelVOpts {
             agg: WedgeAgg::BatchS,
             buckets: BucketKind::Julienne,
             side: PeelSide::Auto,
+            layout: Layout::default_from_env(),
         }
     }
 }
@@ -160,6 +167,12 @@ pub fn peel_vertices(g: &BipartiteGraph, bu: &[u64], bv: &[u64], opts: &PeelVOpt
         // centers are on the other side: pick the cheaper direction.
         PeelSide::Auto => g.wedges_centered_v() <= g.wedges_centered_u(),
     };
+    // Cache-aware layout: only the intersect engine walks the dense
+    // counter this helps (Agg ignores `layout` exactly as Intersect
+    // ignores `agg`).
+    if opts.engine == PeelEngine::Intersect && opts.layout.resolve(g.m()) == Layout::Hub {
+        return peel_vertices_relabeled(g, bu, bv, opts, peel_u);
+    }
     let view = SideView { g, peel_u };
     let counts: &[u64] = if peel_u { bu } else { bv };
     assert_eq!(counts.len(), view.n_peel(), "counts must cover the peeled side");
@@ -167,6 +180,72 @@ pub fn peel_vertices(g: &BipartiteGraph, bu: &[u64], bv: &[u64], opts: &PeelVOpt
         PeelEngine::Agg => peel_vertices_agg(&view, counts, opts),
         PeelEngine::Intersect => peel_vertices_intersect(&view, counts, opts),
     }
+}
+
+/// Stable permutation `old id -> new id` ordering vertices by
+/// decreasing degree (ties by id).
+fn degree_desc_perm(n: usize, deg: impl Fn(usize) -> usize) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_unstable_by(|&a, &b| {
+        deg(b as usize).cmp(&deg(a as usize)).then_with(|| a.cmp(&b))
+    });
+    let mut perm = vec![0u32; n];
+    for (new, &old) in order.iter().enumerate() {
+        perm[old as usize] = new as u32;
+    }
+    perm
+}
+
+/// The peel analogue of the counting engine's hub renumbering: rebuild
+/// the graph with both sides relabeled by decreasing degree, peel the
+/// relabeled graph flat, and un-permute the tips.
+///
+/// The intersect walk's scratch — the dense `TouchedCounter` over the
+/// peeled side and the `DenseDelta` accumulators — is indexed by
+/// peel-side vertex id, and hot slots are exactly the high-degree
+/// vertices (reached through many centers).  Degree-descending ids
+/// cluster them into a cache-resident prefix.  Hub *bitmaps* don't
+/// apply here: the live view shrinks every round, so a static bitmap
+/// would go stale.
+///
+/// Tip numbers are graph properties: rounds, batch sets, and all
+/// removal sums are invariant under relabeling, so the un-permuted
+/// result is bit-identical to the flat path's.
+fn peel_vertices_relabeled(
+    g: &BipartiteGraph,
+    bu: &[u64],
+    bv: &[u64],
+    opts: &PeelVOpts,
+    peel_u: bool,
+) -> TipResult {
+    let perm_u = degree_desc_perm(g.nu(), |u| g.deg_u(u));
+    let perm_v = degree_desc_perm(g.nv(), |v| g.deg_v(v));
+    let edges: Vec<(u32, u32)> = g
+        .edges()
+        .into_iter()
+        .map(|(u, v)| (perm_u[u as usize], perm_v[v as usize]))
+        .collect();
+    let g2 = BipartiteGraph::from_edges(g.nu(), g.nv(), &edges);
+    let mut bu2 = vec![0u64; g.nu()];
+    for (u, &c) in bu.iter().enumerate() {
+        bu2[perm_u[u] as usize] = c;
+    }
+    let mut bv2 = vec![0u64; g.nv()];
+    for (v, &c) in bv.iter().enumerate() {
+        bv2[perm_v[v] as usize] = c;
+    }
+    // Pin the side (Auto would re-derive it, identically — the wedge
+    // totals are degree-multiset invariants — but pinning is free) and
+    // drop to the flat path on the relabeled graph.
+    let opts2 = PeelVOpts {
+        layout: Layout::Flat,
+        side: if peel_u { PeelSide::U } else { PeelSide::V },
+        ..opts.clone()
+    };
+    let r2 = peel_vertices(&g2, &bu2, &bv2, &opts2);
+    let perm = if peel_u { &perm_u } else { &perm_v };
+    let tips = perm.iter().map(|&p| r2.tips[p as usize]).collect();
+    TipResult { peeled_u: peel_u, tips, rounds: r2.rounds }
 }
 
 /// The aggregation engine: UPDATE-V through `opts.agg`.
@@ -203,10 +282,6 @@ fn peel_vertices_agg(view: &SideView<'_>, counts: &[u64], opts: &PeelVOpts) -> T
     TipResult { peeled_u: view.peel_u, tips, rounds }
 }
 
-/// Grain of the intersect engine's dynamic batch claims (peel batches
-/// are small and heavily skewed by wedge count).
-const INTERSECT_GRAIN: usize = 2;
-
 /// Per-worker scratch for the intersect engine: the dense wedge tally
 /// for the source being walked and the worker's share of the round's
 /// deltas.  Pooled across rounds — steady state allocates nothing.
@@ -227,6 +302,10 @@ fn peel_vertices_intersect(view: &SideView<'_>, counts: &[u64], opts: &PeelVOpts
     let mut rounds = 0usize;
     let mut delta = DenseDelta::new(n);
     let mut pool: ScratchPool<VScratch> = ScratchPool::new();
+    // Expected touched-counter footprint of one batch vertex's walk:
+    // drives the tile-derived claim grain instead of the old
+    // hard-coded constant.
+    let fp = wedge_footprint(view);
 
     while let Some((c, batch)) = buckets.pop_min() {
         rounds += 1;
@@ -250,7 +329,7 @@ fn peel_vertices_intersect(view: &SideView<'_>, counts: &[u64], opts: &PeelVOpts
             let (live, batch) = (&live, &batch[..]);
             parallel_for_dynamic_pooled(
                 batch.len(),
-                INTERSECT_GRAIN,
+                walk_grain(batch.len(), fp),
                 &pool,
                 || VScratch { ctr: TouchedCounter::new(n), delta: DenseDelta::new(n) },
                 |s, range| {
@@ -317,7 +396,7 @@ fn enumerate_keys(
     peeled: &[bool],
     sink: &(impl Fn(u64) + Sync),
 ) {
-    parallel_for_dynamic(batch.len(), 2, |r| {
+    parallel_for_dynamic(batch.len(), walk_grain(batch.len(), wedge_footprint(view)), |r| {
         for bi in r {
             let x1 = batch[bi];
             for &y in view.nbrs_peel(x1 as usize) {
@@ -347,7 +426,7 @@ fn update_v_sorted(
 ) {
     let keys = Mutex::new(Vec::<u64>::new());
     // Buffer per worker chunk to cut lock traffic.
-    parallel_for_dynamic(batch.len(), 2, |r| {
+    parallel_for_dynamic(batch.len(), walk_grain(batch.len(), wedge_footprint(view)), |r| {
         let mut local = Vec::new();
         for bi in r {
             let x1 = batch[bi];
@@ -422,13 +501,29 @@ fn update_v_batch(
         }
     };
     if dynamic {
-        parallel_for_dynamic(batch.len(), 1, process);
+        // Each claimed vertex walks a dense counter of the same
+        // expected footprint as the intersect engine's, so the claim
+        // grain derives from the tile budget the same way.
+        parallel_for_dynamic(batch.len(), walk_grain(batch.len(), wedge_footprint(view)), process);
     } else {
         parallel_for_chunks(batch.len(), process);
     }
     for (x2, b) in merged.into_inner().unwrap() {
         out.add(x2, b);
     }
+}
+
+/// Expected wedge work per batch vertex (avg peel-side degree × avg
+/// center degree), in counter-slot units: the footprint argument that
+/// [`walk_grain`] balances against the cache-tile budget.  Shared by
+/// the intersect round walks and the wedge-enumeration aggregation
+/// paths so no call site hard-codes a claim grain.
+fn wedge_footprint(view: &SideView<'_>) -> usize {
+    let m = view.g.m();
+    let a = m.div_ceil(view.n_peel().max(1)).max(1);
+    let n_other = view.g.n() - view.n_peel();
+    let b = m.div_ceil(n_other.max(1)).max(1);
+    a.saturating_mul(b)
 }
 
 fn estimate_wedges(view: &SideView<'_>, batch: &[u32]) -> usize {
@@ -475,14 +570,18 @@ mod tests {
             for engine in PeelEngine::ALL {
                 for agg in WedgeAgg::ALL {
                     for buckets in BucketKind::ALL {
-                        let r = tips_via(
-                            &g,
-                            &PeelVOpts { engine, agg, buckets, side: PeelSide::U },
-                        );
-                        assert_eq!(
-                            r.tips, expect,
-                            "seed={seed} {engine:?} agg={agg:?} {buckets:?}"
-                        );
+                        // Hub layout forces the degree-descending
+                        // relabeled path even on these tiny graphs.
+                        for layout in [Layout::Flat, Layout::Hub] {
+                            let r = tips_via(
+                                &g,
+                                &PeelVOpts { engine, agg, buckets, side: PeelSide::U, layout },
+                            );
+                            assert_eq!(
+                                r.tips, expect,
+                                "seed={seed} {engine:?} agg={agg:?} {buckets:?} {layout:?}"
+                            );
+                        }
                     }
                 }
             }

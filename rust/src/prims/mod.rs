@@ -20,6 +20,9 @@
 //! * [`atomics`] — CAS min/max helpers.
 //! * [`rng`] — splittable PCG32 used by generators, sparsification, and
 //!   the property-test harness.
+//! * [`simd`] — explicitly autovectorizable (stable-Rust) kernels for
+//!   sorted-adjacency intersection and bitmap AND/popcount, plus the
+//!   touched-list-reset [`simd::Bitset`] the hot loops share.
 //! * [`bucket`] — lazy bucketing structures (Julienne window,
 //!   Fibonacci-heap buckets, descending max-walk) shared by the peeling
 //!   round loops and the co-degeneracy rankings.
@@ -35,6 +38,7 @@ pub mod pool;
 pub mod rng;
 pub mod scan;
 pub mod semisort;
+pub mod simd;
 pub mod sort;
 
 pub use hashtable::CountTable;

@@ -1,0 +1,95 @@
+//! Cross-layout equality: the hub memory layout (renumbering + hub
+//! bitmaps + tiled walks) must be a pure performance change — every
+//! output bit-identical to the flat layout, at every thread count.
+//!
+//! Randomized graphs come from the in-repo prop harness (no proptest
+//! offline); failures report a reproducing seed.
+
+use parbutterfly::count::{
+    count_per_edge, count_per_vertex, count_total, CountOpts, Engine,
+};
+use parbutterfly::graph::{gen, Layout};
+use parbutterfly::peel::{
+    peel_edges, peel_vertices, BucketKind, PeelEOpts, PeelEngine, PeelSide, PeelVOpts,
+};
+use parbutterfly::prims::pool::with_threads;
+use parbutterfly::rank::Ranking;
+use parbutterfly::testutil::prop::{check, prop_assert_eq};
+
+fn opts(ranking: Ranking, layout: Layout) -> CountOpts {
+    CountOpts { ranking, engine: Engine::Intersect, layout, ..Default::default() }
+}
+
+#[test]
+fn counts_identical_across_layouts_rankings_and_threads() {
+    check("hub == flat for total/vertex/edge counts", 6, |g| {
+        let bg = g.bipartite(20, 140);
+        let ranking = *g.pick(&Ranking::ALL);
+        for threads in [1usize, 4, 8] {
+            with_threads(threads, || {
+                let f = opts(ranking, Layout::Flat);
+                let h = opts(ranking, Layout::Hub);
+                prop_assert_eq(count_total(&bg, &f), count_total(&bg, &h))?;
+                let vf = count_per_vertex(&bg, &f);
+                let vh = count_per_vertex(&bg, &h);
+                prop_assert_eq(vf.bu, vh.bu)?;
+                prop_assert_eq(vf.bv, vh.bv)?;
+                prop_assert_eq(count_per_edge(&bg, &f), count_per_edge(&bg, &h))
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn peel_decompositions_identical_across_layouts_and_threads() {
+    check("hub == flat for tip and wing decompositions", 5, |g| {
+        let bg = g.bipartite(14, 90);
+        let vc = count_per_vertex(&bg, &CountOpts::default());
+        let be = count_per_edge(&bg, &CountOpts::default());
+        let buckets = *g.pick(&BucketKind::ALL);
+        for threads in [1usize, 4, 8] {
+            with_threads(threads, || {
+                let vo = |layout| PeelVOpts {
+                    engine: PeelEngine::Intersect,
+                    buckets,
+                    side: PeelSide::U,
+                    layout,
+                    ..Default::default()
+                };
+                let rf = peel_vertices(&bg, &vc.bu, &vc.bv, &vo(Layout::Flat));
+                let rh = peel_vertices(&bg, &vc.bu, &vc.bv, &vo(Layout::Hub));
+                prop_assert_eq(rf.tips, rh.tips)?;
+                prop_assert_eq(rf.rounds, rh.rounds)?;
+                let eo = |layout| PeelEOpts {
+                    engine: PeelEngine::Intersect,
+                    buckets,
+                    layout,
+                    ..Default::default()
+                };
+                let ef = peel_edges(&bg, &be, &eo(Layout::Flat));
+                let eh = peel_edges(&bg, &be, &eo(Layout::Hub));
+                prop_assert_eq(ef.wings, eh.wings)?;
+                prop_assert_eq(ef.rounds, eh.rounds)
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn auto_layout_matches_both_forced_layouts_on_a_skewed_graph() {
+    // Chung-Lu with beta 2.1 has the heavy-degree tail the auto gate
+    // looks for; whatever it resolves to must not change any output.
+    let bg = gen::chung_lu(200, 300, 4000, 2.1, 17);
+    for ranking in Ranking::ALL {
+        let a = opts(ranking, Layout::Auto);
+        let f = opts(ranking, Layout::Flat);
+        assert_eq!(count_total(&bg, &a), count_total(&bg, &f), "{ranking:?} total");
+        let va = count_per_vertex(&bg, &a);
+        let vf = count_per_vertex(&bg, &f);
+        assert_eq!(va.bu, vf.bu, "{ranking:?} bu");
+        assert_eq!(va.bv, vf.bv, "{ranking:?} bv");
+        assert_eq!(count_per_edge(&bg, &a), count_per_edge(&bg, &f), "{ranking:?} per-edge");
+    }
+}

@@ -7,7 +7,7 @@
 use parbutterfly::count::{
     count_per_edge, count_per_vertex, count_total, sparsify, BflyAgg, CountOpts, Engine, WedgeAgg,
 };
-use parbutterfly::graph::BipartiteGraph;
+use parbutterfly::graph::{BipartiteGraph, Layout};
 use parbutterfly::peel::{
     peel_edges, peel_vertices, wpeel_edges, wpeel_vertices, BucketKind, PeelEOpts, PeelEngine,
     PeelSide, PeelVOpts, WedgeStore,
@@ -145,13 +145,14 @@ fn prop_tip_numbers_bounded_and_correct() {
         let engine = *g.pick(&PeelEngine::ALL);
         let agg = *g.pick(&WedgeAgg::ALL);
         let buckets = *g.pick(&BucketKind::ALL);
+        let layout = *g.pick(&[Layout::Flat, Layout::Hub]);
         let r = peel_vertices(
             &bg,
             &vc.bu,
             &vc.bv,
-            &PeelVOpts { engine, agg, buckets, side: PeelSide::U },
+            &PeelVOpts { engine, agg, buckets, side: PeelSide::U, layout },
         );
-        prop_assert(r.tips == expect, format!("{engine:?}/{agg:?}/{buckets:?}"))?;
+        prop_assert(r.tips == expect, format!("{engine:?}/{agg:?}/{buckets:?}/{layout:?}"))?;
         for u in 0..bg.nu() {
             prop_assert(r.tips[u] <= vc.bu[u], format!("tip > count at {u}"))?;
         }
@@ -168,8 +169,9 @@ fn prop_wing_numbers_correct_all_backends() {
         let engine = *g.pick(&PeelEngine::ALL);
         let agg = *g.pick(&WedgeAgg::ALL);
         let buckets = *g.pick(&BucketKind::ALL);
-        let r = peel_edges(&bg, &be, &PeelEOpts { engine, agg, buckets });
-        prop_assert(r.wings == expect, format!("{engine:?}/{agg:?}/{buckets:?}"))?;
+        let layout = *g.pick(&[Layout::Flat, Layout::Hub]);
+        let r = peel_edges(&bg, &be, &PeelEOpts { engine, agg, buckets, layout });
+        prop_assert(r.wings == expect, format!("{engine:?}/{agg:?}/{buckets:?}/{layout:?}"))?;
         // wing(e) <= b_e(e).
         for e in 0..bg.m() {
             prop_assert(r.wings[e] <= be[e], format!("wing > count at {e}"))?;

@@ -5,258 +5,86 @@ Mirrors `cargo bench --bench intersect_vs_agg` at the algorithmic level:
 per-source butterfly counting with a materialized per-source wedge buffer
 (the BatchS/BatchWA family — the fastest materializing aggregation in the
 Rust suite) versus the streaming intersect engine (no wedge records, dense
-counters + touched-list reset, second credit pass).  Both walk the same
-ranked two-hop structure, so the measured gap isolates exactly what the
-Rust engines differ in: materializing each wedge versus streaming it.
+counters + touched-list reset, second credit pass) under both memory
+layouts — flat (`Intersect`) and hub (`Intersect-hub`: bitmap AND/popcount
+second hops into the heavy-degree tail; see scripts/wedge_model.py).  All
+configurations walk the same ranked two-hop structure, so the measured
+gaps isolate exactly what the Rust engines differ in: materializing each
+wedge vs streaming it, and per-wedge counter bumps vs per-hub popcounts.
 
 This exists because the authoring container has no Rust toolchain; the
 JSON it writes is labeled `"harness": "python-model"` and is superseded by
 re-running the Rust bench, which overwrites the same file with native
-numbers.
+numbers (and the full aggregation-family row set).
 
 Usage: python3 scripts/bench_intersect_model.py
 """
 import json
-import random
-import time
 from pathlib import Path
 
 import bench_model_common
+import wedge_model as wm
 
 
-def erdos_renyi(nu, nv, m, seed):
-    rng = random.Random(seed)
-    return nu, nv, sorted({(rng.randrange(nu), rng.randrange(nv)) for _ in range(m)})
+def runners_for(stat, n, m, adj, up, side):
+    """(label, callable) pairs for one statistic; each callable returns
+    the comparable result (total, or the filled per-item vector)."""
+    if stat == "total":
+        return [
+            ("BatchS", lambda: wm.total_batch(n, adj, up)),
+            ("Intersect", lambda: wm.total_flat(n, adj, up)),
+            ("Intersect-hub", lambda: wm.total_hub(n, m, adj, up, side)),
+        ]
+    if stat == "vertex":
+        return [
+            ("BatchS", lambda: (lambda o: (wm.per_vertex_batch(n, adj, up, o), o)[1])([0] * n)),
+            ("Intersect", lambda: wm.per_vertex_intersect(n, adj, up, [0] * n)),
+            ("Intersect-hub", lambda: wm.per_vertex_hub(n, m, adj, up, side, [0] * n)),
+        ]
+    return [
+        ("BatchS", lambda: (lambda o: (wm.per_edge_batch(n, m, adj, up, o), o)[1])([0] * m)),
+        ("Intersect", lambda: wm.per_edge_intersect(n, m, adj, up, [0] * m)),
+        ("Intersect-hub", lambda: wm.per_edge_hub(n, m, adj, up, side, [0] * m)),
+    ]
 
 
-def chung_lu(nu, nv, m, beta, seed):
-    rng = random.Random(seed)
-    wu = [(i + 1) ** (-1.0 / (beta - 1.0)) for i in range(nu)]
-    wv = [(i + 1) ** (-1.0 / (beta - 1.0)) for i in range(nv)]
-    us = rng.choices(range(nu), weights=wu, k=m)
-    vs = rng.choices(range(nv), weights=wv, k=m)
-    return nu, nv, sorted(set(zip(us, vs)))
-
-
-def planted_blocks(nu, nv, k, bu, bv, p, noise, seed):
-    rng = random.Random(seed)
-    edges = set()
-    for b in range(k):
-        for u in range(b * bu, (b + 1) * bu):
-            for v in range(b * bv, (b + 1) * bv):
-                if rng.random() < p:
-                    edges.add((u, v))
-    for _ in range(noise):
-        edges.add((rng.randrange(nu), rng.randrange(nv)))
-    return nu, nv, sorted(edges)
-
-
-def preprocess(nu, nv, edges):
-    """Degree ranking (decreasing degree, ties by id), rank-renamed
-    adjacency sorted by decreasing rank, up-degrees, edge ids."""
-    n = nu + nv
-    deg = [0] * n
-    for (u, v) in edges:
-        deg[u] += 1
-        deg[nu + v] += 1
-    order = sorted(range(n), key=lambda g: (-deg[g], g))
-    rank_of = [0] * n
-    for r, gid in enumerate(order):
-        rank_of[gid] = r
-    adj = [[] for _ in range(n)]
-    for eid, (u, v) in enumerate(edges):
-        ru, rv = rank_of[u], rank_of[nu + v]
-        adj[ru].append((rv, eid))
-        adj[rv].append((ru, eid))
-    for x in range(n):
-        adj[x].sort(key=lambda pair: -pair[0])
-    up_deg = [0] * n
-    for x in range(n):
-        up_deg[x] = sum(1 for (r, _) in adj[x] if r > x)
-    up = [list(reversed(adj[x][: up_deg[x]])) for x in range(n)]
-    return adj, up
-
-
-def second_hop_prefix(row, r):
-    """Length of the decreasing-rank prefix with rank > r (the Rust
-    side's binary-searched `up_deg_above`)."""
-    lo, hi = 0, len(row)
-    while lo < hi:
-        mid = (lo + hi) // 2
-        if row[mid][0] > r:
-            lo = mid + 1
-        else:
-            hi = mid
-    return lo
-
-
-def per_vertex_batch(n, adj, up, out):
-    """BatchS-analogue: materialize the source's wedges, then credit
-    endpoints from multiplicities and centers from the wedge buffer."""
-    cnt = [0] * n
-    for src in range(n):
-        touched = []
-        wbuf = []
-        for (y, _e) in up[src]:
-            row = adj[y]
-            pre = second_hop_prefix(row, src)
-            for j in range(pre):
-                z = row[j][0]
-                if cnt[z] == 0:
-                    touched.append(z)
-                cnt[z] += 1
-                wbuf.append((z, y))
-        src_total = 0
-        for z in touched:
-            b = cnt[z] * (cnt[z] - 1) // 2
-            src_total += b
-            out[z] += b
-        out[src] += src_total
-        for (z, y) in wbuf:
-            out[y] += cnt[z] - 1
-        for z in touched:
-            cnt[z] = 0
-
-
-def per_vertex_intersect(n, adj, up, out):
-    """Streaming engine: same walk, no wedge buffer, second pass."""
-    cnt = [0] * n
-    for src in range(n):
-        touched = []
-        for (y, _e) in up[src]:
-            row = adj[y]
-            pre = second_hop_prefix(row, src)
-            for j in range(pre):
-                z = row[j][0]
-                if cnt[z] == 0:
-                    touched.append(z)
-                cnt[z] += 1
-        src_total = 0
-        for z in touched:
-            b = cnt[z] * (cnt[z] - 1) // 2
-            src_total += b
-            out[z] += b
-        out[src] += src_total
-        for (y, _e) in up[src]:
-            row = adj[y]
-            pre = second_hop_prefix(row, src)
-            center = 0
-            for j in range(pre):
-                center += cnt[row[j][0]] - 1
-            out[y] += center
-        for z in touched:
-            cnt[z] = 0
-
-
-def per_edge_batch(n, m, adj, up, out):
-    cnt = [0] * n
-    for src in range(n):
-        touched = []
-        wbuf = []
-        for (y, e_lo) in up[src]:
-            row = adj[y]
-            pre = second_hop_prefix(row, src)
-            for j in range(pre):
-                z, e_hi = row[j]
-                if cnt[z] == 0:
-                    touched.append(z)
-                cnt[z] += 1
-                wbuf.append((z, e_lo, e_hi))
-        for (z, e_lo, e_hi) in wbuf:
-            d = cnt[z]
-            if d > 1:
-                out[e_lo] += d - 1
-                out[e_hi] += d - 1
-        for z in touched:
-            cnt[z] = 0
-
-
-def per_edge_intersect(n, m, adj, up, out):
-    cnt = [0] * n
-    for src in range(n):
-        touched = []
-        for (y, _e) in up[src]:
-            row = adj[y]
-            pre = second_hop_prefix(row, src)
-            for j in range(pre):
-                z = row[j][0]
-                if cnt[z] == 0:
-                    touched.append(z)
-                cnt[z] += 1
-        for (y, e_lo) in up[src]:
-            row = adj[y]
-            pre = second_hop_prefix(row, src)
-            lo_leg = 0
-            for j in range(pre):
-                z, e_hi = row[j]
-                d = cnt[z]
-                if d > 1:
-                    lo_leg += d - 1
-                    out[e_hi] += d - 1
-            out[e_lo] += lo_leg
-        for z in touched:
-            cnt[z] = 0
-
-
-def bench(f, warmup=1, runs=3):
-    for _ in range(warmup):
-        f()
-    samples = []
-    for _ in range(runs):
-        t = time.perf_counter()
-        f()
-        samples.append((time.perf_counter() - t) * 1e3)
-    # Averaged-middle-pair median (see bench_model_common): the old
-    # samples[len // 2] is the upper middle for even run counts.
-    return bench_model_common.median(samples)
-
-
-WORKLOADS = [
-    ("er", "ER near-regular 3000x3000 m~30k (model)", erdos_renyi(3000, 3000, 30_000, 103)),
-    ("cl", "Chung-Lu beta=2.1 5000x8000 m~60k (model)", chung_lu(5000, 8000, 60_000, 2.1, 105)),
-    ("dense", "8 planted 60x60 blocks p=0.85 + noise (model)",
-     planted_blocks(1000, 1000, 8, 60, 60, 0.85, 2000, 109)),
-]
+def butterflies(stat, result):
+    if stat == "total":
+        return result
+    return sum(result) // 4  # 4 vertices / 4 edges per butterfly
 
 
 def main():
     rows = []
     summary = []
-    for wl_id, describe, (nu, nv, edges) in WORKLOADS:
+    for wl_id, describe, gen in wm.WORKLOADS:
+        nu, nv, edges = gen()
         n, m = nu + nv, len(edges)
-        adj, up = preprocess(nu, nv, edges)
+        adj, up, side = wm.preprocess(nu, nv, edges)
         print(f"[{wl_id}] {describe}: n={n} m={m}")
-        for stat, runners in [
-            ("vertex", [("BatchS", lambda: per_vertex_batch(n, adj, up, [0] * n)),
-                        ("Intersect", lambda: per_vertex_intersect(n, adj, up, [0] * n))]),
-            ("edge", [("BatchS", lambda: per_edge_batch(n, m, adj, up, [0] * m)),
-                      ("Intersect", lambda: per_edge_intersect(n, m, adj, up, [0] * m))]),
-        ]:
+        for stat in ["total", "vertex", "edge"]:
+            runners = runners_for(stat, n, m, adj, up, side)
             # Cross-check outputs agree before timing.
-            outs = []
-            for _label, f in runners:
-                sink = [0] * (n if stat == "vertex" else m)
-                if stat == "vertex":
-                    (per_vertex_batch if _label == "BatchS" else per_vertex_intersect)(n, adj, up, sink)
-                else:
-                    (per_edge_batch if _label == "BatchS" else per_edge_intersect)(n, m, adj, up, sink)
-                outs.append(sink)
-            assert outs[0] == outs[1], f"{wl_id}/{stat}: engines disagree"
+            outs = [f() for _label, f in runners]
+            for (label, _f), out in zip(runners[1:], outs[1:]):
+                assert outs[0] == out, f"{wl_id}/{stat}: {label} disagrees with BatchS"
             ms = {}
             for label, f in runners:
-                ms[label] = bench(f)
+                ms[label] = bench_model_common.bench(f)
                 rows.append({"workload": wl_id, "stat": stat, "config": label,
                              "median_ms": round(ms[label], 3)})
-                print(f"  {stat}/{label:<10} {ms[label]:10.2f} ms")
+                print(f"  {stat}/{label:<14} {ms[label]:10.2f} ms")
             speedup = ms["BatchS"] / ms["Intersect"]
-            print(f"  {stat}: intersect speedup {speedup:.2f}x")
+            print(f"  {stat}: intersect speedup {speedup:.2f}x "
+                  f"(hub {ms['BatchS'] / ms['Intersect-hub']:.2f}x)")
             summary.append({
                 "workload": wl_id, "stat": stat,
                 "best_materializing": "BatchS",
                 "best_materializing_ms": round(ms["BatchS"], 3),
                 "intersect_ms": round(ms["Intersect"], 3),
+                "intersect_hub_ms": round(ms["Intersect-hub"], 3),
                 "speedup": round(speedup, 3),
-                "butterflies": sum(outs[0]) // 4,
+                "butterflies": butterflies(stat, outs[0]),
             })
     doc = {
         "bench": "intersect_vs_agg",
@@ -264,11 +92,12 @@ def main():
         "note": ("Algorithmic model measurements (scripts/bench_intersect_model.py): "
                  "per-source counting with a materialized wedge buffer (BatchS family, "
                  "the fastest materializing aggregation) vs the streaming intersect "
-                 "engine, same ranked two-hop walk.  Regenerate natively with "
-                 "`parbutterfly bench run --filter intersect` (or `cargo bench --bench "
-                 "intersect_vs_agg`), which overwrites this file with `harness: "
-                 "\"native\"` rows and the full 9-row comparison; compare snapshots "
-                 "with `parbutterfly bench diff`."),
+                 "engine under the flat and hub memory layouts, same ranked two-hop "
+                 "walk.  Model rows cover the BatchS/Intersect/Intersect-hub configs; "
+                 "regenerate natively with `parbutterfly bench run --filter intersect` "
+                 "(or `cargo bench --bench intersect_vs_agg`), which overwrites this "
+                 "file with `harness: \"native\"` rows for the full aggregation "
+                 "family; compare snapshots with `parbutterfly bench diff`."),
         "env": bench_model_common.environment(threads=1),
         "threads": 1,
         "rows": rows,

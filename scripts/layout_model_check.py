@@ -1,0 +1,68 @@
+#!/usr/bin/env python3
+"""Randomized equality check for the hub-layout model kernels.
+
+Python twin of `rust/tests/layout_equality.rs`: on randomized graphs
+from every generator family, the hub-layout kernels (bitmap
+AND/popcount second hops, whole-pass hot-skip) must produce exactly the
+same global / per-vertex / per-edge butterfly counts as the flat
+kernels, and the global count must match the brute-force
+common-neighbor oracle.  Graph sizes are chosen so a good fraction of
+trials actually have a heavy tail (H > 0) — the script fails if none
+do, so the hub path can never silently go untested.
+
+Usage: python3 scripts/layout_model_check.py [trials]
+"""
+import random
+import sys
+
+import wedge_model as wm
+
+
+def random_graph(rng):
+    kind = rng.randrange(3)
+    nu = rng.randint(20, 250)
+    nv = rng.randint(20, 250)
+    m = rng.randint(50, 4000)
+    if kind == 0:
+        return wm.erdos_renyi(nu, nv, m, rng.getrandbits(32))
+    if kind == 1:
+        return wm.chung_lu(nu, nv, m, 1.9 + rng.random() * 0.4, rng.getrandbits(32))
+    k = rng.randint(1, 3)
+    bu, bv = max(1, nu // k), max(1, nv // k)
+    return wm.planted_blocks(k * bu, k * bv, k, bu, bv,
+                             0.5 + rng.random() / 2, m // 4, rng.getrandbits(32))
+
+
+def main():
+    trials = int(sys.argv[1]) if len(sys.argv) > 1 else 40
+    rng = random.Random(0xB1F1)
+    with_hubs = 0
+    for t in range(trials):
+        nu, nv, edges = random_graph(rng)
+        n, m = nu + nv, len(edges)
+        if m == 0:
+            continue
+        adj, up, side = wm.preprocess(nu, nv, edges)
+        thr = max(1, int(m ** 0.5))
+        H = 0
+        while H < n and len(adj[H]) > thr:
+            H += 1
+        with_hubs += H > 0
+        ctx = f"trial {t}: nu={nu} nv={nv} m={m} H={H}"
+        expect = wm.brute_total(nu, nv, edges)
+        assert wm.total_flat(n, adj, up) == expect, f"{ctx}: flat total != brute"
+        assert wm.total_hub(n, m, adj, up, side) == expect, f"{ctx}: hub total != brute"
+        vf = wm.per_vertex_intersect(n, adj, up, [0] * n)
+        vh = wm.per_vertex_hub(n, m, adj, up, side, [0] * n)
+        assert vf == vh, f"{ctx}: per-vertex differs"
+        assert sum(vf) == 4 * expect, f"{ctx}: per-vertex sum != 4*total"
+        ef = wm.per_edge_intersect(n, m, adj, up, [0] * m)
+        eh = wm.per_edge_hub(n, m, adj, up, side, [0] * m)
+        assert ef == eh, f"{ctx}: per-edge differs"
+        assert sum(ef) == 4 * expect, f"{ctx}: per-edge sum != 4*total"
+    assert with_hubs > 0, "no trial had hubs — the hub path went untested"
+    print(f"layout_model_check: {trials} trials OK ({with_hubs} with a heavy tail)")
+
+
+if __name__ == "__main__":
+    main()

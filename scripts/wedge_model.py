@@ -1,0 +1,503 @@
+"""Shared wedge-walk model kernels for the `bench_*_model.py` seed scripts.
+
+Pure-Python mirrors of the Rust counting engines' ranked two-hop wedge
+walk, at the algorithmic level:
+
+* the materializing BatchS family (per-source wedge buffer),
+* the flat streaming intersect engine (dense counters + touched-list
+  reset, second credit pass),
+* the hub-layout streaming engine (`Layout::Hub` in
+  `rust/src/graph/ranked.rs` / `rust/src/count/intersect.rs`): vertices
+  with degree above sqrt(m) get a dense bitmap adjacency, and second
+  hops into them become a single bigint AND + popcount per (source,
+  hub) pair instead of per-wedge counter bumps.  Python bigints stand
+  in for the Rust `HubBitmap` word arrays; `int.bit_count()` is the
+  popcount.
+
+Model correspondence notes:
+
+* Vertices are identified by *rank* throughout (the model's `adj` is
+  indexed by rank), so the flat model is already "renumbered" — the
+  Rust renumbering pass is a pure cache optimization with no Python
+  analogue.
+* Under the degree ranking used here, hubs are exactly the rank prefix
+  `0..H` (degree is monotone decreasing in rank), so the hub-config
+  fill walks each row only up to its first hub entry
+  (`nonhub_len`) — the whole-pass hot-skip, no per-item branch — and a
+  separate pass popcounts every hub above the source's rank.  Hub
+  bitmap construction happens inside the timed region, mirroring the
+  Rust dispatch (`HubView::build` per API call).
+* The popcount identity: for source `src` and hub `z`,
+  `|up(src) ∩ N(z)|` equals the number of flat counter bumps `z` would
+  receive, because the rank-prefix filter constrains only `z`
+  (`z > src`); membership masks of the two bipartition sides are
+  disjoint in the global rank space, so a wrong-side AND is zero.
+
+Every kernel pair is asserted element-identical by the bench scripts
+before timing (and by `layout_model_check.py` on randomized graphs).
+"""
+
+import random
+
+
+# --------------------------------------------------------------------------
+# Deterministic graph generators (scaled-down twins of
+# `rust/src/bench_support/workloads.rs`; ids match, sizes are reduced so
+# the pure-Python kernels finish in seconds).
+# --------------------------------------------------------------------------
+
+
+def erdos_renyi(nu, nv, m, seed):
+    rng = random.Random(seed)
+    return nu, nv, sorted({(rng.randrange(nu), rng.randrange(nv)) for _ in range(m)})
+
+
+def chung_lu(nu, nv, m, beta, seed):
+    rng = random.Random(seed)
+    wu = [(i + 1) ** (-1.0 / (beta - 1.0)) for i in range(nu)]
+    wv = [(i + 1) ** (-1.0 / (beta - 1.0)) for i in range(nv)]
+    us = rng.choices(range(nu), weights=wu, k=m)
+    vs = rng.choices(range(nv), weights=wv, k=m)
+    return nu, nv, sorted(set(zip(us, vs)))
+
+
+def planted_blocks(nu, nv, k, bu, bv, p, noise, seed):
+    rng = random.Random(seed)
+    edges = set()
+    for b in range(k):
+        for u in range(b * bu, (b + 1) * bu):
+            for v in range(b * bv, (b + 1) * bv):
+                if rng.random() < p:
+                    edges.add((u, v))
+    for _ in range(noise):
+        edges.add((rng.randrange(nu), rng.randrange(nv)))
+    return nu, nv, sorted(edges)
+
+
+WORKLOADS = [
+    ("small", "ER 500x700 m~8k (model)", lambda: erdos_renyi(500, 700, 8_000, 101)),
+    ("er", "ER near-regular 3000x3000 m~30k (model)", lambda: erdos_renyi(3000, 3000, 30_000, 103)),
+    ("cl", "Chung-Lu beta=2.1 5000x8000 m~60k (model)", lambda: chung_lu(5000, 8000, 60_000, 2.1, 105)),
+    ("dense", "8 planted 60x60 blocks p=0.85 + noise (model)",
+     lambda: planted_blocks(1000, 1000, 8, 60, 60, 0.85, 2000, 109)),
+]
+
+
+# --------------------------------------------------------------------------
+# PREPROCESS: degree ranking, rank-renamed adjacency, up-neighborhoods.
+# --------------------------------------------------------------------------
+
+
+def preprocess(nu, nv, edges):
+    """Degree ranking (decreasing degree, ties by id), rank-renamed
+    adjacency sorted by decreasing rank, up-degrees, edge ids, and the
+    side of each rank (True = U)."""
+    n = nu + nv
+    deg = [0] * n
+    for (u, v) in edges:
+        deg[u] += 1
+        deg[nu + v] += 1
+    order = sorted(range(n), key=lambda g: (-deg[g], g))
+    rank_of = [0] * n
+    for r, gid in enumerate(order):
+        rank_of[gid] = r
+    side = [order[r] < nu for r in range(n)]
+    adj = [[] for _ in range(n)]
+    for eid, (u, v) in enumerate(edges):
+        ru, rv = rank_of[u], rank_of[nu + v]
+        adj[ru].append((rv, eid))
+        adj[rv].append((ru, eid))
+    for x in range(n):
+        adj[x].sort(key=lambda pair: -pair[0])
+    up_deg = [0] * n
+    for x in range(n):
+        up_deg[x] = sum(1 for (r, _) in adj[x] if r > x)
+    up = [list(reversed(adj[x][: up_deg[x]])) for x in range(n)]
+    return adj, up, side
+
+
+def second_hop_prefix(row, r):
+    """Length of the decreasing-rank prefix with rank > r (the Rust
+    side's binary-searched `up_deg_above`)."""
+    lo, hi = 0, len(row)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if row[mid][0] > r:
+            lo = mid + 1
+        else:
+            hi = mid
+    return lo
+
+
+# --------------------------------------------------------------------------
+# Hub layout structures (model of graph::ranked::HubView / HubBitmap).
+# --------------------------------------------------------------------------
+
+
+def build_hub(n, m, adj, up, side):
+    """Hub structures for the `Layout::Hub` model.
+
+    Under the degree ranking, degree is monotone decreasing in rank, so
+    the hubs (deg > sqrt(m), the Rust threshold) are exactly the rank
+    prefix `0..H`.  Returns `(H, nonhub_len, nbits, upbits, side)`:
+    `nonhub_len[y]` is where row `y`'s hub tail starts (rows are sorted
+    by decreasing rank, so entries with rank < H are a suffix),
+    `nbits[z]` / `upbits[x]` are bigint membership masks of `adj[z]` /
+    `up[x]` over the global rank space.
+    """
+    thr = max(1, int(m ** 0.5))
+    H = 0
+    while H < n and len(adj[H]) > thr:
+        H += 1
+    if H == 0:
+        # No heavy tail: no bitmaps to build, every row is all non-hub.
+        return 0, [len(row) for row in adj], [], [], side
+    nonhub_len = [0] * n
+    for y in range(n):
+        row = adj[y]
+        # First index whose rank drops below H (decreasing order).
+        lo, hi = 0, len(row)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if row[mid][0] >= H:
+                lo = mid + 1
+            else:
+                hi = mid
+        nonhub_len[y] = lo
+    nbits = [0] * H
+    for z in range(H):
+        b = 0
+        for (r, _e) in adj[z]:
+            b |= 1 << r
+        nbits[z] = b
+    # The hub popcount pass only runs for sources below the hub
+    # boundary (`z` ranges over `src+1..H`), so only those sources need
+    # an up-neighborhood mask.
+    upbits = [0] * H
+    for x in range(H):
+        b = 0
+        for (r, _e) in up[x]:
+            b |= 1 << r
+        upbits[x] = b
+    return H, nonhub_len, nbits, upbits, side
+
+
+# --------------------------------------------------------------------------
+# Counting kernels.  Each returns/fills exact butterfly statistics; the
+# three families (batch / flat intersect / hub intersect) must agree
+# bit-for-bit.
+# --------------------------------------------------------------------------
+
+
+def total_batch(n, adj, up):
+    """BatchS-analogue global count: materialize the per-source wedge
+    buffer, then drain multiplicities."""
+    cnt = [0] * n
+    total = 0
+    for src in range(n):
+        touched = []
+        wbuf = []
+        for (y, _e) in up[src]:
+            row = adj[y]
+            pre = second_hop_prefix(row, src)
+            for j in range(pre):
+                z = row[j][0]
+                if cnt[z] == 0:
+                    touched.append(z)
+                cnt[z] += 1
+                wbuf.append(z)
+        for z in touched:
+            c = cnt[z]
+            total += c * (c - 1) // 2
+            cnt[z] = 0
+    return total
+
+
+def total_flat(n, adj, up):
+    """Streaming global count: same walk, no wedge buffer."""
+    cnt = [0] * n
+    total = 0
+    for src in range(n):
+        touched = []
+        for (y, _e) in up[src]:
+            row = adj[y]
+            pre = second_hop_prefix(row, src)
+            for j in range(pre):
+                z = row[j][0]
+                if cnt[z] == 0:
+                    touched.append(z)
+                cnt[z] += 1
+        for z in touched:
+            c = cnt[z]
+            total += c * (c - 1) // 2
+            cnt[z] = 0
+    return total
+
+
+def total_hub(n, m, adj, up, side):
+    """Hub-layout global count: flat walk stops at each row's hub tail,
+    hubs above the source are popcounted."""
+    H, nonhub_len, nbits, upbits, side = build_hub(n, m, adj, up, side)
+    cnt = [0] * n
+    total = 0
+    for src in range(n):
+        touched = []
+        for (y, _e) in up[src]:
+            row = adj[y]
+            pre = second_hop_prefix(row, src)
+            stop = nonhub_len[y] if nonhub_len[y] < pre else pre
+            for j in range(stop):
+                z = row[j][0]
+                if cnt[z] == 0:
+                    touched.append(z)
+                cnt[z] += 1
+        for z in touched:
+            c = cnt[z]
+            total += c * (c - 1) // 2
+            cnt[z] = 0
+        if src + 1 < H:
+            ub = upbits[src]
+            s = side[src]
+            for z in range(src + 1, H):
+                if side[z] is not s:
+                    continue  # wrong-side AND is 0 anyway; skip the bigint op
+                d = (ub & nbits[z]).bit_count()
+                total += d * (d - 1) // 2
+    return total
+
+
+def per_vertex_batch(n, adj, up, out):
+    """BatchS-analogue: materialize the source's wedges, then credit
+    endpoints from multiplicities and centers from the wedge buffer."""
+    cnt = [0] * n
+    for src in range(n):
+        touched = []
+        wbuf = []
+        for (y, _e) in up[src]:
+            row = adj[y]
+            pre = second_hop_prefix(row, src)
+            for j in range(pre):
+                z = row[j][0]
+                if cnt[z] == 0:
+                    touched.append(z)
+                cnt[z] += 1
+                wbuf.append((z, y))
+        src_total = 0
+        for z in touched:
+            b = cnt[z] * (cnt[z] - 1) // 2
+            src_total += b
+            out[z] += b
+        out[src] += src_total
+        for (z, y) in wbuf:
+            out[y] += cnt[z] - 1
+        for z in touched:
+            cnt[z] = 0
+
+
+def per_vertex_intersect(n, adj, up, out):
+    """Streaming engine: same walk, no wedge buffer, second pass."""
+    cnt = [0] * n
+    for src in range(n):
+        touched = []
+        for (y, _e) in up[src]:
+            row = adj[y]
+            pre = second_hop_prefix(row, src)
+            for j in range(pre):
+                z = row[j][0]
+                if cnt[z] == 0:
+                    touched.append(z)
+                cnt[z] += 1
+        src_total = 0
+        for z in touched:
+            b = cnt[z] * (cnt[z] - 1) // 2
+            src_total += b
+            out[z] += b
+        out[src] += src_total
+        for (y, _e) in up[src]:
+            row = adj[y]
+            pre = second_hop_prefix(row, src)
+            center = 0
+            for j in range(pre):
+                center += cnt[row[j][0]] - 1
+            out[y] += center
+        for z in touched:
+            cnt[z] = 0
+    return out
+
+
+def per_vertex_hub(n, m, adj, up, side, out):
+    """Hub-layout streaming engine: popcount fill for hubs, flat fill
+    for the rest; drain and center-credit passes read the same `cnt`."""
+    H, nonhub_len, nbits, upbits, side = build_hub(n, m, adj, up, side)
+    cnt = [0] * n
+    for src in range(n):
+        touched = []
+        for (y, _e) in up[src]:
+            row = adj[y]
+            pre = second_hop_prefix(row, src)
+            stop = nonhub_len[y] if nonhub_len[y] < pre else pre
+            for j in range(stop):
+                z = row[j][0]
+                if cnt[z] == 0:
+                    touched.append(z)
+                cnt[z] += 1
+        if src + 1 < H:
+            ub = upbits[src]
+            s = side[src]
+            for z in range(src + 1, H):
+                if side[z] is not s:
+                    continue
+                d = (ub & nbits[z]).bit_count()
+                if d:
+                    cnt[z] = d
+                    touched.append(z)
+        src_total = 0
+        for z in touched:
+            b = cnt[z] * (cnt[z] - 1) // 2
+            src_total += b
+            out[z] += b
+        out[src] += src_total
+        for (y, _e) in up[src]:
+            row = adj[y]
+            pre = second_hop_prefix(row, src)
+            center = 0
+            for j in range(pre):
+                center += cnt[row[j][0]] - 1
+            out[y] += center
+        for z in touched:
+            cnt[z] = 0
+    return out
+
+
+def per_edge_batch(n, m, adj, up, out):
+    cnt = [0] * n
+    for src in range(n):
+        touched = []
+        wbuf = []
+        for (y, e_lo) in up[src]:
+            row = adj[y]
+            pre = second_hop_prefix(row, src)
+            for j in range(pre):
+                z, e_hi = row[j]
+                if cnt[z] == 0:
+                    touched.append(z)
+                cnt[z] += 1
+                wbuf.append((z, e_lo, e_hi))
+        for (z, e_lo, e_hi) in wbuf:
+            d = cnt[z]
+            if d > 1:
+                out[e_lo] += d - 1
+                out[e_hi] += d - 1
+        for z in touched:
+            cnt[z] = 0
+
+
+def per_edge_intersect(n, m, adj, up, out):
+    cnt = [0] * n
+    for src in range(n):
+        touched = []
+        for (y, _e) in up[src]:
+            row = adj[y]
+            pre = second_hop_prefix(row, src)
+            for j in range(pre):
+                z = row[j][0]
+                if cnt[z] == 0:
+                    touched.append(z)
+                cnt[z] += 1
+        for (y, e_lo) in up[src]:
+            row = adj[y]
+            pre = second_hop_prefix(row, src)
+            lo_leg = 0
+            for j in range(pre):
+                z, e_hi = row[j]
+                d = cnt[z]
+                if d > 1:
+                    lo_leg += d - 1
+                    out[e_hi] += d - 1
+            out[e_lo] += lo_leg
+        for z in touched:
+            cnt[z] = 0
+    return out
+
+
+def per_edge_hub(n, m, adj, up, side, out):
+    """Hub layout for per-edge: only the fill is popcount-accelerated;
+    the credit pass needs per-entry edge ids so it walks the full
+    prefix, reading the already-filled `cnt` (set for hubs too)."""
+    H, nonhub_len, nbits, upbits, side = build_hub(n, m, adj, up, side)
+    cnt = [0] * n
+    for src in range(n):
+        touched = []
+        for (y, _e) in up[src]:
+            row = adj[y]
+            pre = second_hop_prefix(row, src)
+            stop = nonhub_len[y] if nonhub_len[y] < pre else pre
+            for j in range(stop):
+                z = row[j][0]
+                if cnt[z] == 0:
+                    touched.append(z)
+                cnt[z] += 1
+        if src + 1 < H:
+            ub = upbits[src]
+            s = side[src]
+            for z in range(src + 1, H):
+                if side[z] is not s:
+                    continue
+                d = (ub & nbits[z]).bit_count()
+                if d:
+                    cnt[z] = d
+                    touched.append(z)
+        for (y, e_lo) in up[src]:
+            row = adj[y]
+            pre = second_hop_prefix(row, src)
+            lo_leg = 0
+            for j in range(pre):
+                z, e_hi = row[j]
+                d = cnt[z]
+                if d > 1:
+                    lo_leg += d - 1
+                    out[e_hi] += d - 1
+            out[e_lo] += lo_leg
+        for z in touched:
+            cnt[z] = 0
+    return out
+
+
+# --------------------------------------------------------------------------
+# Brute-force oracle (for layout_model_check.py).
+# --------------------------------------------------------------------------
+
+
+def brute_total(nu, nv, edges):
+    """Total butterflies via pairwise common-neighbor counts on U."""
+    nbrs = [set() for _ in range(nu)]
+    for (u, v) in edges:
+        nbrs[u].add(v)
+    total = 0
+    for a in range(nu):
+        for b in range(a + 1, nu):
+            c = len(nbrs[a] & nbrs[b])
+            total += c * (c - 1) // 2
+    return total
+
+
+if __name__ == "__main__":
+    # Self-check on a tiny graph: all three families agree with brute force.
+    nu, nv, edges = erdos_renyi(40, 50, 300, 7)
+    n, m = nu + nv, len(edges)
+    adj, up, side = preprocess(nu, nv, edges)
+    t = brute_total(nu, nv, edges)
+    assert total_batch(n, adj, up) == t
+    assert total_flat(n, adj, up) == t
+    assert total_hub(n, m, adj, up, side) == t
+    vb, vf, vh = [0] * n, [0] * n, [0] * n
+    per_vertex_batch(n, adj, up, vb)
+    per_vertex_intersect(n, adj, up, vf)
+    per_vertex_hub(n, m, adj, up, side, vh)
+    assert vb == vf == vh and sum(vb) == 4 * t
+    eb, ef, eh = [0] * m, [0] * m, [0] * m
+    per_edge_batch(n, m, adj, up, eb)
+    per_edge_intersect(n, m, adj, up, ef)
+    per_edge_hub(n, m, adj, up, side, eh)
+    assert eb == ef == eh and sum(eb) == 4 * t
+    print(f"wedge_model self-checks pass (total={t}, m={m})")
