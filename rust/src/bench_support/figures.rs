@@ -297,14 +297,16 @@ pub fn approx_figure_on(bench_name: &str, cache_opt: bool, wl_id: &str, ps: &[f6
 }
 
 /// The peeling comparison rows: the five aggregation strategies plus
-/// the streaming intersect engine (labels shared by fig12/13 and the
-/// `peel_intersect_vs_agg` bench).
+/// the streaming intersect engine and the two-phase range-parallel
+/// engine (labels shared by fig12/13 and the `peel_intersect_vs_agg`
+/// bench).
 pub fn peel_rows() -> Vec<(&'static str, PeelEngine, WedgeAgg)> {
     let mut rows: Vec<(&'static str, PeelEngine, WedgeAgg)> = WedgeAgg::ALL
         .into_iter()
         .map(|agg| (agg.name(), PeelEngine::Agg, agg))
         .collect();
     rows.push(("intersect", PeelEngine::Intersect, WedgeAgg::BatchS));
+    rows.push(("two-phase", PeelEngine::TwoPhase, WedgeAgg::BatchS));
     rows
 }
 

@@ -204,9 +204,13 @@ pub fn layout_sweep(profile: Profile) -> SnapshotMeta {
 /// Aggregation UPDATE paths vs the streaming live-view intersect peel
 /// engine (`BENCH_peel.json`).
 pub fn peel_intersect_vs_agg(profile: Profile) -> SnapshotMeta {
+    // The smoke workload is a member of the full suite so that the CI
+    // bench gate (`bench run --smoke --filter peel` + `bench diff`
+    // against the committed BENCH_peel.json) compares identical row
+    // identities instead of diffing two disjoint workload sets.
     let suite: &[&str] = match profile {
         Profile::Full => &PEELING_SUITE,
-        Profile::Smoke => &["women"],
+        Profile::Smoke => &["small"],
     };
     banner(
         "peel",
@@ -222,8 +226,10 @@ pub fn peel_intersect_vs_agg(profile: Profile) -> SnapshotMeta {
         for mode in ["tip", "wing"] {
             let mut expected: Option<Vec<u64>> = None;
             let mut rounds = 0usize;
+            let mut sync_rounds = 0usize;
             let mut best_agg: Option<(&'static str, f64)> = None;
             let mut intersect_ms = f64::NAN;
+            let mut two_phase_ms = f64::NAN;
             for (label, engine, agg) in peel_rows() {
                 let mut result = Vec::new();
                 let m = bench_n(0, 2, || {
@@ -268,6 +274,13 @@ pub fn peel_intersect_vs_agg(profile: Profile) -> SnapshotMeta {
                 );
                 if label == "intersect" {
                     intersect_ms = m.median_ms;
+                    // The round-synchronous engines (agg + intersect)
+                    // share one round count; two-phase reports its own
+                    // coarse + max-fine depth, so the summary pins the
+                    // synchronous one.
+                    sync_rounds = rounds;
+                } else if label == "two-phase" {
+                    two_phase_ms = m.median_ms;
                 } else if best_agg.map(|(_, ms)| m.median_ms < ms).unwrap_or(true) {
                     best_agg = Some((label, m.median_ms));
                 }
@@ -275,8 +288,9 @@ pub fn peel_intersect_vs_agg(profile: Profile) -> SnapshotMeta {
             let (best_label, best_ms) = best_agg.unwrap();
             let speedup = best_ms / intersect_ms;
             println!(
-                "  [{}/{mode}] intersect {intersect_ms:.2} ms vs best aggregation \
-                 {best_label} {best_ms:.2} ms ({speedup:.2}x, {rounds} rounds)",
+                "  [{}/{mode}] intersect {intersect_ms:.2} ms / two-phase {two_phase_ms:.2} ms \
+                 vs best aggregation {best_label} {best_ms:.2} ms ({speedup:.2}x, {sync_rounds} \
+                 rounds)",
                 wl.id
             );
             summary.push(Json::Obj(vec![
@@ -285,15 +299,17 @@ pub fn peel_intersect_vs_agg(profile: Profile) -> SnapshotMeta {
                 ("best_agg".into(), Json::str(best_label)),
                 ("best_agg_ms".into(), Json::ms(best_ms)),
                 ("intersect_ms".into(), Json::ms(intersect_ms)),
+                ("two_phase_ms".into(), Json::ms(two_phase_ms)),
                 ("speedup".into(), round3(speedup)),
-                ("rounds".into(), Json::Num(rounds as f64)),
+                ("rounds".into(), Json::Num(sync_rounds as f64)),
             ]));
         }
     }
     SnapshotMeta {
         note: "aggregation UPDATE paths (full-adjacency rescans + per-pair aggregation) vs \
-               the streaming live-view intersect peel engine, identical Julienne buckets; \
-               regenerate with `parbutterfly bench run --filter peel` or `cargo bench \
+               the streaming live-view intersect peel engine and the two-phase coarse/fine \
+               range-parallel engine, identical Julienne buckets; regenerate with \
+               `parbutterfly bench run --filter peel` or `cargo bench \
                --bench peel_intersect_vs_agg`"
             .into(),
         top: vec![("threads".into(), Json::Num(num_threads() as f64))],

@@ -6,7 +6,7 @@
 //! parbutterfly count  --graph FILE [--mode total|vertex|edge] [--rank R] [--agg A]
 //!                     [--engine wedges|intersect] [--layout auto|flat|hub]
 //!                     [--cache-opt] [--auto-rank] [--threads T]
-//! parbutterfly peel   --graph FILE [--mode vertex|edge] [--engine agg|intersect]
+//! parbutterfly peel   --graph FILE [--mode vertex|edge] [--engine agg|intersect|two-phase]
 //!                     [--count-engine wedges|intersect] [--agg A]
 //!                     [--buckets julienne|fibheap] [--layout auto|flat|hub] [--threads T]
 //! parbutterfly approx --graph FILE --method edge|colorful --p P [--seed S]
@@ -302,8 +302,10 @@ fn cmd_peel(args: &Args) -> anyhow::Result<()> {
     // flipping the peel engine never silently changes what is timed in
     // the counting phase.
     let engine = match args.get("engine") {
-        Some(s) => PeelEngine::parse(s)
-            .ok_or_else(|| anyhow::anyhow!("unknown --engine {s:?} (valid: agg|intersect)"))?,
+        Some(s) => PeelEngine::parse(s).ok_or_else(|| {
+            let all = PeelEngine::ALL.map(|e| e.name()).join("|");
+            anyhow::anyhow!("unknown --engine {s:?} (valid: {all})")
+        })?,
         None => PeelEngine::default(),
     };
     let mut copts = count_opts_base(args)?;
@@ -470,6 +472,7 @@ fn cmd_backends() -> anyhow::Result<()> {
     println!("peeling engines (peel --engine E, default via PARBUTTERFLY_PEEL_ENGINE):");
     println!("  agg        UPDATE-V/E through the wedge aggregations ({aggs})");
     println!("  intersect  streaming live-view updates (no wedge materialization)");
+    println!("  two-phase  coarse range staging + concurrent per-range fine peels");
     println!("  selected default: {}", PeelEngine::default().name());
     println!("memory layouts (--layout L, default via PARBUTTERFLY_LAYOUT):");
     println!("  auto       hub bitmaps + renumbering when degree skew justifies them");
@@ -554,6 +557,12 @@ mod tests {
         run_inner(&argv).unwrap();
         let argv: Vec<String> =
             ["peel", "--graph", path.to_str().unwrap(), "--engine", "intersect", "--mode", "edge"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        run_inner(&argv).unwrap();
+        let argv: Vec<String> =
+            ["peel", "--graph", path.to_str().unwrap(), "--engine", "two-phase", "--mode", "edge"]
                 .iter()
                 .map(|s| s.to_string())
                 .collect();

@@ -4,7 +4,7 @@
 //! count edge and recomputes the destroyed butterflies by explicit
 //! intersection (UPDATE-E): for peeled edge `(u1, v1)` and each live
 //! co-edge `(u2, v1)`, every live `v2 ∈ N(u1) ∩ N(u2) \ {v1}` closes a
-//! butterfly whose three surviving edges each lose one count.  Two
+//! butterfly whose three surviving edges each lose one count.  Three
 //! engines ([`PeelEngine`]):
 //!
 //! * **Agg** — sorted-list intersections over the full adjacency with
@@ -17,6 +17,10 @@
 //!   neighborhood against the stamps, accumulate the three per-
 //!   butterfly decrements into per-worker [`DenseDelta`]s merged in
 //!   parallel.  No decrement list or wedge record is materialized.
+//! * **TwoPhase** — coarse range staging followed by concurrent
+//!   per-range fine peels ([`super::two_phase`]); both phases run the
+//!   same stamp walk ([`update_e_stamped`]) over full or `stage >= j`
+//!   filtered views.
 //!
 //! Double-counting control (the §4.3.2 tie-break): an edge peeled in a
 //! *previous* round is dead everywhere; among edges peeled in the
@@ -73,8 +77,8 @@ pub struct PeelEOpts {
     /// Memory layout for the intersect engine's stamp walks
     /// ([`Layout::Hub`] = degree-descending relabeling of both sides
     /// with edge ids mapped through the rebuild); only
-    /// [`PeelEngine::Intersect`] consults it.  Wing numbers are
-    /// identical across layouts.
+    /// [`PeelEngine::Intersect`] and [`PeelEngine::TwoPhase`] consult
+    /// it.  Wing numbers are identical across layouts.
     pub layout: Layout,
 }
 
@@ -91,19 +95,22 @@ impl Default for PeelEOpts {
 
 /// Round tags: `u32::MAX` = alive, otherwise the round the edge was
 /// finalized in.
-const ALIVE: u32 = u32::MAX;
+pub(super) const ALIVE: u32 = u32::MAX;
 
 /// Wing decomposition given per-edge butterfly counts.
 pub fn peel_edges(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> WingResult {
-    // Cache-aware layout: only the intersect engine's dense stamp
-    // walks benefit (Agg ignores `layout` exactly as Intersect
-    // ignores `agg`).
-    if opts.engine == PeelEngine::Intersect && opts.layout.resolve(g.m()) == Layout::Hub {
+    // Cache-aware layout: only the stamp-walking engines' dense scratch
+    // benefits (Agg ignores `layout` exactly as Intersect ignores
+    // `agg`).
+    if matches!(opts.engine, PeelEngine::Intersect | PeelEngine::TwoPhase)
+        && opts.layout.resolve(g.m()) == Layout::Hub
+    {
         return peel_edges_relabeled(g, be, opts);
     }
     match opts.engine {
         PeelEngine::Agg => peel_edges_agg(g, be, opts),
         PeelEngine::Intersect => peel_edges_intersect(g, be, opts),
+        PeelEngine::TwoPhase => super::two_phase::peel_edges_two_phase(g, be, opts),
     }
 }
 
@@ -205,7 +212,7 @@ fn peel_edges_agg(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> WingResul
 /// the peeled edge being processed (so stale stamps from other batch
 /// edges or earlier rounds never need clearing — every edge id is
 /// peeled at most once) plus the worker's share of the round's deltas.
-struct EScratch {
+pub(super) struct EScratch {
     /// `v2` -> edge id of `(u1, v2)` when stamped for the current edge.
     stamp_eid: Vec<u32>,
     /// `v2` -> the peeled edge id the stamp belongs to (`ALIVE` =
@@ -215,7 +222,7 @@ struct EScratch {
     /// reject (32x denser than `stamp_tag`, so the hot working set of
     /// the `N(u2)` scans stays cache-resident).  Cleared per edge.
     stamped: Bitset,
-    delta: DenseDelta,
+    pub(super) delta: DenseDelta,
 }
 
 /// The streaming intersect engine: dense-stamp two-hop walks over live
@@ -232,14 +239,7 @@ fn peel_edges_intersect(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> Win
     let mut live_u = LiveCsr::u_view(g);
     let mut live_v = LiveCsr::v_view(g);
     let mut pool: ScratchPool<EScratch> = ScratchPool::new();
-    // Expected stamp-walk footprint of one batch edge (stamp deg(u1)
-    // slots, probe through deg(v1) co-edges): drives the tile-derived
-    // claim grain instead of a hard-coded constant.
-    let fp = {
-        let du = g.m().div_ceil(g.nu().max(1)).max(1);
-        let dv = g.m().div_ceil(g.nv().max(1)).max(1);
-        du.saturating_mul(dv)
-    };
+    let fp = edge_walk_footprint(g);
 
     while let Some((c, batch)) = buckets.pop_min() {
         k = k.max(c);
@@ -251,72 +251,7 @@ fn peel_edges_intersect(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> Win
         // (pruned only after the walk), so the same-round alive_for
         // tie-break sees them exactly as the aggregation engine does;
         // everything peeled earlier is already gone from the views.
-        {
-            let (live_u, live_v) = (&live_u, &live_v);
-            let (batch, round_of) = (&batch[..], &round_of[..]);
-            parallel_for_dynamic_pooled(
-                batch.len(),
-                walk_grain(batch.len(), fp),
-                &pool,
-                || EScratch {
-                    stamp_eid: vec![0u32; g.nv()],
-                    stamp_tag: vec![ALIVE; g.nv()],
-                    stamped: Bitset::new(g.nv()),
-                    delta: DenseDelta::new(m),
-                },
-                |s, range| {
-                    for bi in range {
-                        let e = batch[bi];
-                        let (u1, v1) = g.edge(e);
-                        // Stamp u1's live neighborhood; the (u1, v1)
-                        // slot is edge `e` itself, which alive_for
-                        // rejects, so v2 != v1 falls out for free.
-                        let vn = live_u.nbrs(u1 as usize);
-                        let ve = live_u.eids(u1 as usize);
-                        for j in 0..vn.len() {
-                            if alive_for(round_of, round, ve[j], e) {
-                                s.stamp_eid[vn[j] as usize] = ve[j];
-                                s.stamp_tag[vn[j] as usize] = e;
-                                s.stamped.set(vn[j] as usize);
-                            }
-                        }
-                        // Co-edges (u2, v1), then u2's live
-                        // neighborhood against the stamps.  The bitset
-                        // rejects the common miss before the 4-byte
-                        // tag load; the tag still arbitrates, since
-                        // bits outlive their edge only until the
-                        // clearing sweep below.
-                        let un = live_v.nbrs(v1 as usize);
-                        let ue = live_v.eids(v1 as usize);
-                        for j in 0..un.len() {
-                            let (u2, e2) = (un[j], ue[j]);
-                            if !alive_for(round_of, round, e2, e) {
-                                continue;
-                            }
-                            let wn = live_u.nbrs(u2 as usize);
-                            let we = live_u.eids(u2 as usize);
-                            for t in 0..wn.len() {
-                                let (v2, eb) = (wn[t], we[t]);
-                                if s.stamped.test(v2 as usize)
-                                    && s.stamp_tag[v2 as usize] == e
-                                    && alive_for(round_of, round, eb, e)
-                                {
-                                    // Butterfly (u1, v1, u2, v2) dies:
-                                    // surviving edges lose one each.
-                                    s.delta.add(e2, 1);
-                                    s.delta.add(s.stamp_eid[v2 as usize], 1);
-                                    s.delta.add(eb, 1);
-                                }
-                            }
-                        }
-                        // Unstamp (clearing an unset bit is harmless).
-                        for &v2 in vn {
-                            s.stamped.clear(v2 as usize);
-                        }
-                    }
-                },
-            );
-        }
+        update_e_stamped(g, &live_u, &live_v, &batch, &round_of, round, fp, &pool);
         // Prune the batch from the live views, fold the per-worker
         // accumulators in parallel, re-bucket the survivors.
         for &e in &batch {
@@ -340,11 +275,108 @@ fn peel_edges_intersect(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> Win
 }
 
 /// Liveness of edge `x` from the perspective of same-round peeled edge
-/// `e` (the tie-break rule in the module docs).
+/// `e` (the tie-break rule in the module docs).  The rule is exact for
+/// *mixed-count* bulk frontiers too (the two-phase coarse batches):
+/// every destroyed butterfly is still enumerated exactly once, by its
+/// minimum-id same-batch edge.
 #[inline]
-fn alive_for(round_of: &[u32], round: u32, x: u32, e: u32) -> bool {
+pub(super) fn alive_for(round_of: &[u32], round: u32, x: u32, e: u32) -> bool {
     let r = round_of[x as usize];
     r == ALIVE || (r == round && x > e)
+}
+
+/// Expected stamp-walk footprint of one batch edge (stamp deg(u1)
+/// slots, probe through deg(v1) co-edges): drives the tile-derived
+/// claim grain instead of a hard-coded constant.
+pub(super) fn edge_walk_footprint(g: &BipartiteGraph) -> usize {
+    let du = g.m().div_ceil(g.nu().max(1)).max(1);
+    let dv = g.m().div_ceil(g.nv().max(1)).max(1);
+    du.saturating_mul(dv)
+}
+
+/// The intersect engine's UPDATE-E round: per-batch-edge dense-stamp
+/// walks over the given live views, decrements accumulated into the
+/// per-worker deltas of `pool` (the caller merges and applies them).
+/// Batch edges must still be present in the views; `round_of`/`round`
+/// drive the [`alive_for`] tie-break.  Shared with the two-phase
+/// engine, whose coarse phase passes the full views and whose fine
+/// phase passes per-range filtered views with a per-range round
+/// array — each caller owns a distinct `pool`, which is what keeps
+/// edge-id stamp tags from going stale across phases.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn update_e_stamped(
+    g: &BipartiteGraph,
+    live_u: &LiveCsr,
+    live_v: &LiveCsr,
+    batch: &[u32],
+    round_of: &[u32],
+    round: u32,
+    fp: usize,
+    pool: &ScratchPool<EScratch>,
+) {
+    let m = g.m();
+    parallel_for_dynamic_pooled(
+        batch.len(),
+        walk_grain(batch.len(), fp),
+        pool,
+        || EScratch {
+            stamp_eid: vec![0u32; g.nv()],
+            stamp_tag: vec![ALIVE; g.nv()],
+            stamped: Bitset::new(g.nv()),
+            delta: DenseDelta::new(m),
+        },
+        |s, range| {
+            for bi in range {
+                let e = batch[bi];
+                let (u1, v1) = g.edge(e);
+                // Stamp u1's live neighborhood; the (u1, v1)
+                // slot is edge `e` itself, which alive_for
+                // rejects, so v2 != v1 falls out for free.
+                let vn = live_u.nbrs(u1 as usize);
+                let ve = live_u.eids(u1 as usize);
+                for j in 0..vn.len() {
+                    if alive_for(round_of, round, ve[j], e) {
+                        s.stamp_eid[vn[j] as usize] = ve[j];
+                        s.stamp_tag[vn[j] as usize] = e;
+                        s.stamped.set(vn[j] as usize);
+                    }
+                }
+                // Co-edges (u2, v1), then u2's live
+                // neighborhood against the stamps.  The bitset
+                // rejects the common miss before the 4-byte
+                // tag load; the tag still arbitrates, since
+                // bits outlive their edge only until the
+                // clearing sweep below.
+                let un = live_v.nbrs(v1 as usize);
+                let ue = live_v.eids(v1 as usize);
+                for j in 0..un.len() {
+                    let (u2, e2) = (un[j], ue[j]);
+                    if !alive_for(round_of, round, e2, e) {
+                        continue;
+                    }
+                    let wn = live_u.nbrs(u2 as usize);
+                    let we = live_u.eids(u2 as usize);
+                    for t in 0..wn.len() {
+                        let (v2, eb) = (wn[t], we[t]);
+                        if s.stamped.test(v2 as usize)
+                            && s.stamp_tag[v2 as usize] == e
+                            && alive_for(round_of, round, eb, e)
+                        {
+                            // Butterfly (u1, v1, u2, v2) dies:
+                            // surviving edges lose one each.
+                            s.delta.add(e2, 1);
+                            s.delta.add(s.stamp_eid[v2 as usize], 1);
+                            s.delta.add(eb, 1);
+                        }
+                    }
+                }
+                // Unstamp (clearing an unset bit is harmless).
+                for &v2 in vn {
+                    s.stamped.clear(v2 as usize);
+                }
+            }
+        },
+    );
 }
 
 /// UPDATE-E: for each destroyed butterfly, one decrement per surviving

@@ -93,6 +93,56 @@ impl LiveCsr {
         )
     }
 
+    /// [`Self::u_view`] restricted to the entries `keep(nbr, eid)`
+    /// accepts — the two-phase engine's per-range sub-views (range
+    /// members for PEEL-V, the `stage >= j` residual for PEEL-E).
+    /// The position index is still sized by the full graph's `m`, so
+    /// removal stays O(1) under global edge ids.
+    pub fn u_view_filtered(g: &BipartiteGraph, keep: &(impl Fn(u32, u32) -> bool + ?Sized)) -> Self {
+        Self::build(
+            g.m(),
+            g.nu(),
+            |u| {
+                g.nbrs_u(u)
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, &v)| keep(v, g.eid_u(u, i)))
+                    .count()
+            },
+            |u, emit| {
+                for (i, &v) in g.nbrs_u(u).iter().enumerate() {
+                    let e = g.eid_u(u, i);
+                    if keep(v, e) {
+                        emit(v, e);
+                    }
+                }
+            },
+        )
+    }
+
+    /// [`Self::v_view`] restricted to the entries `keep(nbr, eid)`
+    /// accepts (see [`Self::u_view_filtered`]).
+    pub fn v_view_filtered(g: &BipartiteGraph, keep: &(impl Fn(u32, u32) -> bool + ?Sized)) -> Self {
+        Self::build(
+            g.m(),
+            g.nv(),
+            |v| {
+                g.nbrs_v(v)
+                    .iter()
+                    .zip(g.eids_v(v))
+                    .filter(|&(&u, &e)| keep(u, e))
+                    .count()
+            },
+            |v, emit| {
+                for (&u, &e) in g.nbrs_v(v).iter().zip(g.eids_v(v)) {
+                    if keep(u, e) {
+                        emit(u, e);
+                    }
+                }
+            },
+        )
+    }
+
     /// Live neighbors of `row` (unordered — removal swap-pops).
     #[inline]
     pub fn nbrs(&self, row: usize) -> &[u32] {
@@ -188,5 +238,39 @@ mod tests {
         }
         assert!((0..g.nu()).all(|x| u.deg(x) == 0));
         assert!((0..g.nv()).all(|x| v.deg(x) == 0));
+    }
+
+    #[test]
+    fn filtered_views_drop_exactly_the_rejected_entries() {
+        let g = gen::erdos_renyi(9, 11, 50, 7);
+        let keep = |_x: u32, e: u32| e % 2 == 0;
+        let mut u = LiveCsr::u_view_filtered(&g, &keep);
+        let v = LiveCsr::v_view_filtered(&g, &keep);
+        for x in 0..g.nu() {
+            let expect: Vec<u32> = g
+                .nbrs_u(x)
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| g.eid_u(x, *i) % 2 == 0)
+                .map(|(_, &y)| y)
+                .collect();
+            assert_eq!(sorted(u.nbrs(x).to_vec()), sorted(expect));
+        }
+        for x in 0..g.nv() {
+            let expect: Vec<u32> = g
+                .nbrs_v(x)
+                .iter()
+                .zip(g.eids_v(x))
+                .filter(|(_, &e)| e % 2 == 0)
+                .map(|(&y, _)| y)
+                .collect();
+            assert_eq!(sorted(v.nbrs(x).to_vec()), sorted(expect));
+        }
+        // Removal still works under *global* edge ids.
+        for e in (0..g.m() as u32).filter(|e| e % 2 == 0) {
+            let (eu, _) = g.edge(e);
+            u.remove(eu as usize, e);
+        }
+        assert!((0..g.nu()).all(|x| u.deg(x) == 0));
     }
 }

@@ -11,10 +11,12 @@
 //! * [`edge`] — PEEL-E (Algorithm 6).
 //! * [`live`] — the shrinking adjacency views the intersect engine
 //!   peels over.
+//! * [`two_phase`] — the coarse→fine range-parallel engine (RECEIPT-
+//!   style) layered on the intersect machinery.
 //! * [`wstore`] — WPEEL-V / WPEEL-E, the wedge-storing O(b)-work
 //!   variants (Algorithms 7–8).
 //!
-//! Like counting, peeling now has two **engines** behind one option
+//! Like counting, peeling now has **engines** behind one option
 //! surface ([`PeelEngine`], carried by [`PeelVOpts`]/[`PeelEOpts`] and
 //! mirroring [`count::Engine`](crate::count::Engine)):
 //!
@@ -26,6 +28,11 @@
 //!   peeled: dense counters + touched-list resets, per-worker
 //!   [`delta::DenseDelta`] accumulators merged in parallel, and **no
 //!   wedge record is ever allocated** in the round loop.
+//! * [`PeelEngine::TwoPhase`] — a coarse pass stages vertices/edges
+//!   into ~sqrt(n) tip/wing-number ranges balanced by butterfly mass,
+//!   then the ranges peel **concurrently**, each running intersect-
+//!   style rounds over its own sub-view; exactness argued in
+//!   [`two_phase`]'s docs.
 //!
 //! Convenience drivers [`tip_decomposition`] / [`wing_decomposition`]
 //! run counting + peeling end to end.
@@ -35,6 +42,7 @@ use std::sync::OnceLock;
 pub mod delta;
 pub mod edge;
 pub mod live;
+pub mod two_phase;
 pub mod vertex;
 pub mod wstore;
 
@@ -59,15 +67,24 @@ pub enum PeelEngine {
     /// Streaming live-view intersect updates — zero wedge
     /// materialization, ignores `opts.agg`.
     Intersect,
+    /// Coarse range staging + concurrent per-range fine peels over
+    /// intersect-style sub-views ([`two_phase`]); ignores `opts.agg`.
+    TwoPhase,
 }
 
 impl PeelEngine {
-    pub const ALL: [PeelEngine; 2] = [PeelEngine::Agg, PeelEngine::Intersect];
+    /// The canonical engine listing: the CLI `--engine` values, the
+    /// `PARBUTTERFLY_PEEL_ENGINE` values, and the sweep the golden
+    /// corpus tests derive from — a new engine added here is
+    /// automatically exercised everywhere.
+    pub const ALL: [PeelEngine; 3] =
+        [PeelEngine::Agg, PeelEngine::Intersect, PeelEngine::TwoPhase];
 
     pub fn name(&self) -> &'static str {
         match self {
             PeelEngine::Agg => "agg",
             PeelEngine::Intersect => "intersect",
+            PeelEngine::TwoPhase => "two-phase",
         }
     }
 
@@ -84,7 +101,8 @@ impl PeelEngine {
         static DEFAULT: OnceLock<PeelEngine> = OnceLock::new();
         *DEFAULT.get_or_init(|| match std::env::var("PARBUTTERFLY_PEEL_ENGINE") {
             Ok(s) => PeelEngine::parse(&s).unwrap_or_else(|| {
-                panic!("PARBUTTERFLY_PEEL_ENGINE={s:?} names no peel engine (agg|intersect)")
+                let valid = PeelEngine::ALL.map(|e| e.name()).join("|");
+                panic!("PARBUTTERFLY_PEEL_ENGINE={s:?} names no peel engine ({valid})")
             }),
             Err(_) => PeelEngine::Agg,
         })
@@ -121,6 +139,15 @@ mod tests {
             assert_eq!(PeelEngine::parse(e.name()), Some(e));
         }
         assert_eq!(PeelEngine::parse("wedges"), None);
+    }
+
+    #[test]
+    fn engine_listing_is_pinned() {
+        // The golden corpus sweep, the CLI `--engine` values, and the
+        // env-var values all derive from `ALL`: pin the canonical
+        // listing so an engine can neither vanish from it silently nor
+        // change its spelling.
+        assert_eq!(PeelEngine::ALL.map(|e| e.name()), ["agg", "intersect", "two-phase"]);
     }
 
     #[test]

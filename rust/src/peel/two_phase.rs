@@ -1,0 +1,699 @@
+//! Two-phase coarse→fine range-parallel peeling
+//! ([`PeelEngine::TwoPhase`](super::PeelEngine::TwoPhase)).
+//!
+//! The round-synchronous engines are span-bound by rho (the number of
+//! peeling rounds).  Following RECEIPT (Lakhotia et al., arXiv
+//! 2110.12511), this engine breaks the round barrier in two phases:
+//!
+//! 1. **Coarse**: [`range_thresholds`] picks ~`sqrt(n)` tip/wing-number
+//!    boundaries balanced by butterfly mass (via the same
+//!    [`MaxBuckets`] log-bucket machinery as `rank::co_degeneracy`).
+//!    For each threshold `thr[j]` in ascending order, the coarse peel
+//!    bulk-removes *every* live item whose current count is `<= thr[j]`
+//!    (repeating until none remain) with one intersect-style update
+//!    walk per sub-round.  By the threshold-core property — bulk
+//!    removal at threshold t eliminates exactly `{x : peel(x) <= t}` —
+//!    the items removed during stage `j` are exactly those whose final
+//!    tip/wing number lies in `(thr[j-1], thr[j]]`, so the pass pins
+//!    `stage[x]` without knowing exact numbers.
+//! 2. **Fine**: the ranges peel **concurrently** (the span of the
+//!    phase is the deepest single range, not the sum).  Each range
+//!    runs ordinary min-bucket rounds over an independent sub-view,
+//!    seeded with butterfly counts restricted to same-or-later ranges:
+//!    the cross-range support is subtracted *once, up front*, never
+//!    maintained.
+//!
+//! Exactness of the fine phase:
+//!
+//! * **Seeds** (PEEL-V): pair wedge multiplicities `d(x1, x2)` are
+//!   static under vertex peeling (wedge centers are on the un-peeled
+//!   side and never die), so `seed(x1) = Σ_{stage(x2) >= stage(x1)}
+//!   C(d(x1, x2), 2)` — one parallel pass — is precisely `x1`'s
+//!   butterfly count at the moment every earlier range has been fully
+//!   peeled.  For PEEL-E the seed is the number of butterflies whose
+//!   three other edges all have `stage >= stage(e)`, found by one
+//!   stamped enumeration over the full adjacency.
+//! * **Range isolation**: when range `j` starts, the true residual
+//!   graph is exactly `stage >= j`.  Items of later ranges sit in the
+//!   `thr[j]`-core, so their counts stay *above* `thr[j]` throughout
+//!   range `j`'s peel — they can never enter a min-batch.  PEEL-V can
+//!   therefore drop them from the sub-view entirely (their wedges with
+//!   range-`j` members are pre-subtracted in the seeds); PEEL-E keeps
+//!   them present-but-immortal (their edges still close butterflies
+//!   with range-`j` edges) in the `stage >= j` filtered views, never
+//!   decremented, never re-bucketed.
+//! * **Running max**: the range-local `k` starts at 0, yet matches the
+//!   global running max: every seed in range `j` exceeds `thr[j-1]`,
+//!   which upper-bounds the global `k` entering the range, so the
+//!   first local min already dominates it and `max(cur - removed, k)`
+//!   clamps identically.
+//!
+//! Determinism: coarse sub-rounds collect batches by id scan, deltas
+//! are additive sums, and each fine range — itself run serially — owns
+//! disjoint output slots, so results are bit-identical at every thread
+//! count.  The fine ranges are dealt to the pool workers by
+//! `parallel_for_dynamic`; nested combinators inside a worker run
+//! inline, so there is no thread oversubscription.
+
+use crate::count::choose2;
+use crate::count::intersect::TouchedCounter;
+use crate::graph::ranked::walk_grain;
+use crate::graph::BipartiteGraph;
+use crate::prims::pool::{parallel_for_dynamic, parallel_for_dynamic_pooled, ScratchPool, SyncPtr};
+use crate::rank::codeg_bucket_of;
+
+use super::bucket::{make_buckets, MaxBuckets};
+use super::delta::DenseDelta;
+use super::edge::{
+    alive_for, edge_walk_footprint, update_e_stamped, EScratch, PeelEOpts, WingResult, ALIVE,
+};
+use super::live::LiveCsr;
+use super::vertex::{wedge_footprint, PeelVOpts, SideView, TipResult, VScratch};
+
+/// Coarse range boundaries, balanced by butterfly mass: walk the
+/// distinct initial-count values in ascending order and cut whenever
+/// the accumulated mass crosses the next of `P ~= sqrt(n)` equal
+/// targets.  The ascending walk reuses the co-degeneracy ranking's
+/// bucket-parallel machinery: [`MaxBuckets`] over `log2` keys
+/// ([`codeg_bucket_of`]) drained from the top, each claimed frontier
+/// sorted by exact count — log buckets cover disjoint value ranges, so
+/// the reversed concatenation is a full ascending sort.  Always ends
+/// with a `u64::MAX` sentinel; zero total mass or `P == 1` degenerates
+/// to a single range.  Mirrored by `range_thresholds` in
+/// `scripts/peel_model.py`.
+pub(crate) fn range_thresholds(counts: &[u64]) -> Vec<u64> {
+    let n = counts.len();
+    let total: u128 = counts.iter().map(|&c| c as u128).sum();
+    let p = ((n as f64).sqrt() as u128).max(1);
+    let mut thr = Vec::new();
+    if total > 0 && p > 1 {
+        let keys: Vec<u64> = counts.iter().map(|&c| codeg_bucket_of(c, true)).collect();
+        let mut mb = MaxBuckets::new(&keys);
+        let mut groups: Vec<Vec<u32>> = Vec::new();
+        while let Some((_key, mut frontier)) = mb.pop_max() {
+            frontier.sort_unstable_by_key(|&i| counts[i as usize]);
+            groups.push(frontier);
+        }
+        let asc: Vec<u32> = groups.into_iter().rev().flatten().collect();
+        let (mut acc, mut i, mut j) = (0u128, 0usize, 1u128);
+        while i < n && j < p {
+            let v = counts[asc[i] as usize];
+            while i < n && counts[asc[i] as usize] == v {
+                acc += v as u128;
+                i += 1;
+            }
+            if acc * p >= j * total {
+                thr.push(v);
+                while j < p && acc * p >= j * total {
+                    j += 1;
+                }
+            }
+        }
+    }
+    thr.push(u64::MAX);
+    thr
+}
+
+/// Two-phase PEEL-V (see the module docs for the phase structure and
+/// exactness argument).
+pub(super) fn peel_vertices_two_phase(
+    view: &SideView<'_>,
+    counts: &[u64],
+    opts: &PeelVOpts,
+) -> TipResult {
+    let n = view.n_peel();
+    let thr = range_thresholds(counts);
+    let nranges = thr.len();
+    let fp = wedge_footprint(view);
+
+    // ---- Phase 1: coarse staged peel over the full center view. ----
+    let mut live = view.live_centers();
+    let mut cur: Vec<u64> = counts.to_vec();
+    let mut alive = vec![true; n];
+    let mut stage = vec![0u32; n];
+    let mut coarse_rounds = 0usize;
+    let mut delta = DenseDelta::new(n);
+    let mut pool: ScratchPool<VScratch> = ScratchPool::new();
+    for (j, &th) in thr.iter().enumerate() {
+        loop {
+            let batch: Vec<u32> = (0..n as u32)
+                .filter(|&x| alive[x as usize] && cur[x as usize] <= th)
+                .collect();
+            if batch.is_empty() {
+                break;
+            }
+            coarse_rounds += 1;
+            for &x in &batch {
+                alive[x as usize] = false;
+                stage[x as usize] = j as u32;
+            }
+            for &x1 in &batch {
+                for (i, &y) in view.nbrs_peel(x1 as usize).iter().enumerate() {
+                    live.remove(y as usize, view.eid_peel(x1 as usize, i));
+                }
+            }
+            // The intersect engine's round walk, verbatim: tally live
+            // second endpoints per batch vertex, charge C(d, 2).
+            {
+                let (live, batch) = (&live, &batch[..]);
+                parallel_for_dynamic_pooled(
+                    batch.len(),
+                    walk_grain(batch.len(), fp),
+                    &pool,
+                    || VScratch { ctr: TouchedCounter::new(n), delta: DenseDelta::new(n) },
+                    |s, range| {
+                        for bi in range {
+                            let x1 = batch[bi];
+                            for &y in view.nbrs_peel(x1 as usize) {
+                                for &x2 in live.nbrs(y as usize) {
+                                    s.ctr.bump(x2);
+                                }
+                            }
+                            let delta = &mut s.delta;
+                            s.ctr.drain(|x2, d| delta.add(x2, choose2(d as u64)));
+                        }
+                    },
+                );
+            }
+            let mut parts: Vec<&mut DenseDelta> =
+                pool.items_mut().iter_mut().map(|s| &mut s.delta).collect();
+            delta.merge_parallel(&mut parts);
+            // A butterfly holds exactly two peel-side vertices, so the
+            // per-source sum is exact even for mixed-count bulk
+            // batches; survivors' counts stay true without clamping.
+            delta.drain(|x2, removed| {
+                cur[x2 as usize] = cur[x2 as usize].saturating_sub(removed);
+            });
+        }
+    }
+
+    // ---- Seeds: one pass over the static pair multiplicities. ----
+    let mut seed = vec![0u64; n];
+    {
+        let sp = SyncPtr(seed.as_mut_ptr());
+        let stage = &stage[..];
+        let spool: ScratchPool<TouchedCounter> = ScratchPool::new();
+        parallel_for_dynamic_pooled(
+            n,
+            walk_grain(n, fp),
+            &spool,
+            || TouchedCounter::new(n),
+            |ctr, range| {
+                for x1 in range {
+                    let s = stage[x1];
+                    for &y in view.nbrs_peel(x1) {
+                        for &x2 in view.nbrs_other(y as usize) {
+                            if x2 as usize != x1 && stage[x2 as usize] >= s {
+                                ctr.bump(x2);
+                            }
+                        }
+                    }
+                    let mut acc = 0u64;
+                    ctr.drain(|_x2, d| acc += choose2(d as u64));
+                    // Disjoint slots: each x1 is written exactly once.
+                    unsafe { *sp.get().add(x1) = acc };
+                }
+            },
+        );
+    }
+
+    // ---- Phase 2: ranges fine-peel concurrently. ----
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); nranges];
+    for x in 0..n as u32 {
+        members[stage[x as usize] as usize].push(x);
+    }
+    let mut local_of = vec![0u32; n];
+    for ms in &members {
+        for (i, &x) in ms.iter().enumerate() {
+            local_of[x as usize] = i as u32;
+        }
+    }
+    let mut tips = vec![0u64; n];
+    let mut fine_rounds = vec![0usize; nranges];
+    {
+        let tp = SyncPtr(tips.as_mut_ptr());
+        let rp = SyncPtr(fine_rounds.as_mut_ptr());
+        let (stage, seed, members, local_of) =
+            (&stage[..], &seed[..], &members[..], &local_of[..]);
+        parallel_for_dynamic(nranges, 1, |range| {
+            for j in range {
+                let r = fine_peel_v_range(view, j as u32, &members[j], local_of, stage, seed, opts, &tp);
+                unsafe { *rp.get().add(j) = r };
+            }
+        });
+    }
+    TipResult {
+        peeled_u: view.peel_u,
+        tips,
+        rounds: coarse_rounds + fine_rounds.into_iter().max().unwrap_or(0),
+    }
+}
+
+/// One range's fine PEEL-V: ordinary min-bucket rounds over a
+/// members-only sub-view, seeded with the range-restricted counts.
+/// Runs serially — the fine phase's parallelism is *across* ranges —
+/// and writes each member's tip through `tips` (ranges own disjoint
+/// slots).  Returns the range's round count.
+#[allow(clippy::too_many_arguments)]
+fn fine_peel_v_range(
+    view: &SideView<'_>,
+    j: u32,
+    members: &[u32],
+    local_of: &[u32],
+    stage: &[u32],
+    seed: &[u64],
+    opts: &PeelVOpts,
+    tips: &SyncPtr<u64>,
+) -> usize {
+    if members.is_empty() {
+        return 0;
+    }
+    let mut live = view.live_centers_filtered(&|x, _e| stage[x as usize] == j);
+    let seeds: Vec<u64> = members.iter().map(|&x| seed[x as usize]).collect();
+    let mut buckets = make_buckets(opts.buckets, &seeds);
+    let mut ctr = TouchedCounter::new(view.n_peel());
+    let mut k = 0u64;
+    let mut rounds = 0usize;
+    while let Some((c, lbatch)) = buckets.pop_min() {
+        rounds += 1;
+        k = k.max(c);
+        for &li in &lbatch {
+            let x = members[li as usize] as usize;
+            unsafe { *tips.get().add(x) = k };
+        }
+        for &li in &lbatch {
+            let x1 = members[li as usize] as usize;
+            for (i, &y) in view.nbrs_peel(x1).iter().enumerate() {
+                live.remove(y as usize, view.eid_peel(x1, i));
+            }
+        }
+        for &li in &lbatch {
+            let x1 = members[li as usize] as usize;
+            for &y in view.nbrs_peel(x1) {
+                for &x2 in live.nbrs(y as usize) {
+                    ctr.bump(x2);
+                }
+            }
+            // Applying per-source is equivalent to batching the delta:
+            // `max(·, k)` clamping commutes with splitting a decrement.
+            let buckets = &mut buckets;
+            ctr.drain(|x2, d| {
+                let b = choose2(d as u64);
+                if b > 0 {
+                    let lx = local_of[x2 as usize];
+                    let cur = buckets.current(lx);
+                    buckets.update(lx, cur.saturating_sub(b).max(k));
+                }
+            });
+        }
+    }
+    rounds
+}
+
+/// Two-phase PEEL-E (see the module docs).  Edge supports are not
+/// static, so the coarse pass runs the exact stamp walk
+/// ([`update_e_stamped`]) per bulk sub-round — the same-round
+/// tie-break stays exact for mixed-count frontiers — and the fine
+/// ranges peel `stage >= j` filtered views in which later-range edges
+/// are permanently alive.
+pub(super) fn peel_edges_two_phase(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> WingResult {
+    let m = g.m();
+    assert_eq!(be.len(), m);
+    let thr = range_thresholds(be);
+    let nranges = thr.len();
+    let fp = edge_walk_footprint(g);
+
+    // ---- Phase 1: coarse staged bulk peel over the full views. ----
+    let mut live_u = LiveCsr::u_view(g);
+    let mut live_v = LiveCsr::v_view(g);
+    let mut cur: Vec<u64> = be.to_vec();
+    let mut round_of = vec![ALIVE; m];
+    let mut stage = vec![0u32; m];
+    let mut rnd = 0u32;
+    let mut delta = DenseDelta::new(m);
+    let mut pool: ScratchPool<EScratch> = ScratchPool::new();
+    for (j, &th) in thr.iter().enumerate() {
+        loop {
+            let batch: Vec<u32> = (0..m as u32)
+                .filter(|&e| round_of[e as usize] == ALIVE && cur[e as usize] <= th)
+                .collect();
+            if batch.is_empty() {
+                break;
+            }
+            for &e in &batch {
+                round_of[e as usize] = rnd;
+                stage[e as usize] = j as u32;
+            }
+            update_e_stamped(g, &live_u, &live_v, &batch, &round_of, rnd, fp, &pool);
+            for &e in &batch {
+                let (u, v) = g.edge(e);
+                live_u.remove(u as usize, e);
+                live_v.remove(v as usize, e);
+            }
+            let mut parts: Vec<&mut DenseDelta> =
+                pool.items_mut().iter_mut().map(|s| &mut s.delta).collect();
+            delta.merge_parallel(&mut parts);
+            delta.drain(|e, removed| {
+                if round_of[e as usize] == ALIVE {
+                    cur[e as usize] = cur[e as usize].saturating_sub(removed);
+                }
+            });
+            rnd += 1;
+        }
+    }
+    let coarse_rounds = rnd as usize;
+
+    // ---- Seeds: butterflies whose other three edges are all
+    // same-or-later range, via one stamped enumeration. ----
+    let mut seed = vec![0u64; m];
+    {
+        let sp = SyncPtr(seed.as_mut_ptr());
+        let stage = &stage[..];
+        let spool: ScratchPool<Vec<u32>> = ScratchPool::new();
+        parallel_for_dynamic_pooled(
+            m,
+            walk_grain(m, fp),
+            &spool,
+            || vec![ALIVE; g.nv()],
+            |tag, range| {
+                for ei in range {
+                    let e = ei as u32;
+                    let s = stage[ei];
+                    let (u1, v1) = g.edge(e);
+                    // Stamp v2 for every (u1, v2) slot of stage >= s.
+                    // The (u1, v1) slot is edge `e` itself, whose
+                    // `stage >= s` holds trivially — skip it
+                    // explicitly so v1 is never stamped.
+                    for (i, &v2) in g.nbrs_u(u1 as usize).iter().enumerate() {
+                        let ea = g.eid_u(u1 as usize, i);
+                        if ea != e && stage[ea as usize] >= s {
+                            tag[v2 as usize] = e;
+                        }
+                    }
+                    // Stale tags from other edges can never equal `e`:
+                    // each edge id is enumerated exactly once.
+                    let mut b = 0u64;
+                    let nb = g.nbrs_v(v1 as usize);
+                    let ed = g.eids_v(v1 as usize);
+                    for (i, &u2) in nb.iter().enumerate() {
+                        let e2 = ed[i];
+                        if u2 == u1 || stage[e2 as usize] < s {
+                            continue;
+                        }
+                        for (t, &v2) in g.nbrs_u(u2 as usize).iter().enumerate() {
+                            let eb = g.eid_u(u2 as usize, t);
+                            if tag[v2 as usize] == e && stage[eb as usize] >= s {
+                                b += 1;
+                            }
+                        }
+                    }
+                    unsafe { *sp.get().add(ei) = b };
+                }
+            },
+        );
+    }
+
+    // ---- Phase 2: ranges fine-peel concurrently. ----
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); nranges];
+    for e in 0..m as u32 {
+        members[stage[e as usize] as usize].push(e);
+    }
+    let mut local_of = vec![0u32; m];
+    for ms in &members {
+        for (i, &e) in ms.iter().enumerate() {
+            local_of[e as usize] = i as u32;
+        }
+    }
+    let mut wings = vec![0u64; m];
+    let mut fine_rounds = vec![0usize; nranges];
+    {
+        let wp = SyncPtr(wings.as_mut_ptr());
+        let rp = SyncPtr(fine_rounds.as_mut_ptr());
+        let (stage, seed, members, local_of) =
+            (&stage[..], &seed[..], &members[..], &local_of[..]);
+        parallel_for_dynamic(nranges, 1, |range| {
+            for j in range {
+                let r = fine_peel_e_range(g, j as u32, &members[j], local_of, stage, seed, opts, &wp);
+                unsafe { *rp.get().add(j) = r };
+            }
+        });
+    }
+    WingResult { wings, rounds: coarse_rounds + fine_rounds.into_iter().max().unwrap_or(0) }
+}
+
+/// One range's fine PEEL-E: min-bucket rounds with the stamp walk over
+/// `stage >= j` filtered views.  Later-range edges are present in
+/// every walk but permanently alive — the *per-range* `fr_round`
+/// array is what makes the concurrent ranges safe: each range only
+/// ever writes rounds for its own members, and a shared array would
+/// race on the later-range reads.  Stamp scratch is fresh per range
+/// (coarse-phase stamps carry the same edge-id tags and would
+/// otherwise be stale); within the range each edge is walked exactly
+/// once, so tags never collide.  Runs serially; returns the range's
+/// round count.
+#[allow(clippy::too_many_arguments)]
+fn fine_peel_e_range(
+    g: &BipartiteGraph,
+    j: u32,
+    members: &[u32],
+    local_of: &[u32],
+    stage: &[u32],
+    seed: &[u64],
+    opts: &PeelEOpts,
+    wings: &SyncPtr<u64>,
+) -> usize {
+    if members.is_empty() {
+        return 0;
+    }
+    let keep = |_x: u32, e: u32| stage[e as usize] >= j;
+    let mut live_u = LiveCsr::u_view_filtered(g, &keep);
+    let mut live_v = LiveCsr::v_view_filtered(g, &keep);
+    let mut fr_round = vec![ALIVE; g.m()];
+    let mut stamp_eid = vec![0u32; g.nv()];
+    let mut stamp_tag = vec![ALIVE; g.nv()];
+    let seeds: Vec<u64> = members.iter().map(|&e| seed[e as usize]).collect();
+    let mut buckets = make_buckets(opts.buckets, &seeds);
+    let mut delta = DenseDelta::new(g.m());
+    let mut k = 0u64;
+    let mut rnd = 0u32;
+    while let Some((c, lbatch)) = buckets.pop_min() {
+        k = k.max(c);
+        for &li in &lbatch {
+            let e = members[li as usize];
+            unsafe { *wings.get().add(e as usize) = k };
+            fr_round[e as usize] = rnd;
+        }
+        // The stamp walk of `update_e_stamped`, serially, against the
+        // range-local round tags.
+        for &li in &lbatch {
+            let e = members[li as usize];
+            let (u1, v1) = g.edge(e);
+            let vn = live_u.nbrs(u1 as usize);
+            let ve = live_u.eids(u1 as usize);
+            for i in 0..vn.len() {
+                if alive_for(&fr_round, rnd, ve[i], e) {
+                    stamp_eid[vn[i] as usize] = ve[i];
+                    stamp_tag[vn[i] as usize] = e;
+                }
+            }
+            let un = live_v.nbrs(v1 as usize);
+            let ue = live_v.eids(v1 as usize);
+            for i in 0..un.len() {
+                let (u2, e2) = (un[i], ue[i]);
+                if !alive_for(&fr_round, rnd, e2, e) {
+                    continue;
+                }
+                let wn = live_u.nbrs(u2 as usize);
+                let we = live_u.eids(u2 as usize);
+                for t in 0..wn.len() {
+                    let (v2, eb) = (wn[t], we[t]);
+                    if stamp_tag[v2 as usize] == e && alive_for(&fr_round, rnd, eb, e) {
+                        delta.add(e2, 1);
+                        delta.add(stamp_eid[v2 as usize], 1);
+                        delta.add(eb, 1);
+                    }
+                }
+            }
+        }
+        for &li in &lbatch {
+            let e = members[li as usize];
+            let (u, v) = g.edge(e);
+            live_u.remove(u as usize, e);
+            live_v.remove(v as usize, e);
+        }
+        delta.drain(|e2, removed| {
+            // Later-range edges (stage > j) absorb decrements without
+            // ever being re-bucketed; finalized range members are
+            // dropped by the round tag.
+            if stage[e2 as usize] == j && fr_round[e2 as usize] == ALIVE {
+                let le = local_of[e2 as usize];
+                let cur = buckets.current(le);
+                buckets.update(le, cur.saturating_sub(removed).max(k));
+            }
+        });
+        rnd += 1;
+    }
+    rnd as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{PeelEngine, PeelSide};
+    use super::*;
+    use crate::count::{count_per_edge, count_per_vertex, CountOpts};
+    use crate::graph::{gen, Layout};
+    use crate::prims::rng::Pcg32;
+
+    /// Direct mirror of the Python model's sorted-walk definition.
+    fn thresholds_reference(counts: &[u64]) -> Vec<u64> {
+        let n = counts.len();
+        let total: u128 = counts.iter().map(|&c| c as u128).sum();
+        let p = ((n as f64).sqrt() as u128).max(1);
+        let mut order = counts.to_vec();
+        order.sort_unstable();
+        let mut thr = Vec::new();
+        if total > 0 && p > 1 {
+            let (mut acc, mut i, mut j) = (0u128, 0usize, 1u128);
+            while i < n && j < p {
+                let v = order[i];
+                while i < n && order[i] == v {
+                    acc += v as u128;
+                    i += 1;
+                }
+                if acc * p >= j * total {
+                    thr.push(v);
+                    while j < p && acc * p >= j * total {
+                        j += 1;
+                    }
+                }
+            }
+        }
+        thr.push(u64::MAX);
+        thr
+    }
+
+    #[test]
+    fn thresholds_match_the_sorted_walk_reference() {
+        let mut rng = Pcg32::new(42);
+        for trial in 0..200 {
+            let n = (rng.next_below(60) + 1) as usize;
+            let counts: Vec<u64> = (0..n)
+                .map(|_| match rng.next_below(3) {
+                    0 => 0,
+                    1 => rng.next_below(8),
+                    _ => rng.next_below(100_000),
+                })
+                .collect();
+            assert_eq!(
+                range_thresholds(&counts),
+                thresholds_reference(&counts),
+                "trial {trial}: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn thresholds_degenerate_cases() {
+        assert_eq!(range_thresholds(&[]), vec![u64::MAX]);
+        assert_eq!(range_thresholds(&[7]), vec![u64::MAX]);
+        assert_eq!(range_thresholds(&[0, 0, 0, 0]), vec![u64::MAX]);
+        // Thresholds are strictly increasing and sentinel-terminated.
+        let thr = range_thresholds(&[1, 1, 2, 3, 3, 8, 9, 40, 40, 41, 90, 90, 90, 200, 1000, 1000]);
+        assert!(thr.windows(2).all(|w| w[0] < w[1]), "{thr:?}");
+        assert_eq!(*thr.last().unwrap(), u64::MAX);
+        assert!(thr.len() > 1, "mass this spread must split: {thr:?}");
+    }
+
+    #[test]
+    fn two_phase_tips_match_agg() {
+        for seed in [3, 17, 29] {
+            let g = gen::chung_lu(30, 36, 320, 2.0, seed);
+            let vc = count_per_vertex(&g, &CountOpts::default());
+            for side in [PeelSide::U, PeelSide::V] {
+                let base = super::super::vertex::peel_vertices(
+                    &g,
+                    &vc.bu,
+                    &vc.bv,
+                    &PeelVOpts { engine: PeelEngine::Agg, side, ..Default::default() },
+                );
+                let two = super::super::vertex::peel_vertices(
+                    &g,
+                    &vc.bu,
+                    &vc.bv,
+                    &PeelVOpts {
+                        engine: PeelEngine::TwoPhase,
+                        side,
+                        layout: Layout::Flat,
+                        ..Default::default()
+                    },
+                );
+                assert_eq!(two.tips, base.tips, "seed={seed} side={side:?}");
+                assert_eq!(two.peeled_u, base.peeled_u);
+            }
+        }
+    }
+
+    #[test]
+    fn two_phase_wings_match_agg() {
+        for seed in [5, 23] {
+            let g = gen::chung_lu(26, 30, 260, 2.1, seed);
+            let be = count_per_edge(&g, &CountOpts::default());
+            let base = super::super::edge::peel_edges(
+                &g,
+                &be,
+                &PeelEOpts { engine: PeelEngine::Agg, ..Default::default() },
+            );
+            let two = super::super::edge::peel_edges(
+                &g,
+                &be,
+                &PeelEOpts {
+                    engine: PeelEngine::TwoPhase,
+                    layout: Layout::Flat,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(two.wings, base.wings, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn two_phase_composes_with_hub_layout() {
+        let g = gen::chung_lu(28, 34, 300, 2.0, 77);
+        let vc = count_per_vertex(&g, &CountOpts::default());
+        let be = count_per_edge(&g, &CountOpts::default());
+        let flat = super::super::vertex::peel_vertices(
+            &g,
+            &vc.bu,
+            &vc.bv,
+            &PeelVOpts {
+                engine: PeelEngine::TwoPhase,
+                side: PeelSide::U,
+                layout: Layout::Flat,
+                ..Default::default()
+            },
+        );
+        let hub = super::super::vertex::peel_vertices(
+            &g,
+            &vc.bu,
+            &vc.bv,
+            &PeelVOpts {
+                engine: PeelEngine::TwoPhase,
+                side: PeelSide::U,
+                layout: Layout::Hub,
+                ..Default::default()
+            },
+        );
+        assert_eq!(hub.tips, flat.tips);
+        let wf = super::super::edge::peel_edges(
+            &g,
+            &be,
+            &PeelEOpts { engine: PeelEngine::TwoPhase, layout: Layout::Flat, ..Default::default() },
+        );
+        let wh = super::super::edge::peel_edges(
+            &g,
+            &be,
+            &PeelEOpts { engine: PeelEngine::TwoPhase, layout: Layout::Hub, ..Default::default() },
+        );
+        assert_eq!(wh.wings, wf.wings);
+    }
+}

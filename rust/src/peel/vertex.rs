@@ -4,7 +4,7 @@
 //! each round extracts every vertex with the minimum butterfly count,
 //! recomputes the butterflies destroyed by the batch, and re-buckets
 //! the survivors.  Tip numbers are the running maximum of the
-//! extracted counts.  Two UPDATE-V engines ([`PeelEngine`]):
+//! extracted counts.  Three UPDATE-V engines ([`PeelEngine`]):
 //!
 //! * **Agg** — the paper's GET-V-WEDGES + COUNT-V-WEDGES through the
 //!   configured wedge-aggregation strategy; per-round memory scales
@@ -16,6 +16,9 @@
 //!   worker and per-worker [`DenseDelta`]
 //!   accumulators merged in parallel.  No wedge record is ever
 //!   materialized, and late rounds never rescan peeled vertices.
+//! * **TwoPhase** — coarse range staging followed by concurrent
+//!   per-range fine peels ([`super::two_phase`]); reuses the intersect
+//!   round machinery inside each range.
 //!
 //! Liveness rules (the §4.3.1 double-counting discussion):
 //! * wedges are only charged to second endpoints that are still live —
@@ -91,7 +94,8 @@ pub struct PeelVOpts {
     /// Memory layout of the intersect walks (hub = degree-descending
     /// relabeling so the counter hot slots cluster; see
     /// [`peel_vertices_relabeled`]).  Only [`PeelEngine::Intersect`]
-    /// consults it; tip numbers are identical across layouts.
+    /// and [`PeelEngine::TwoPhase`] consult it; tip numbers are
+    /// identical across layouts.
     pub layout: Layout,
 }
 
@@ -111,27 +115,28 @@ impl Default for PeelVOpts {
 }
 
 /// Presents the peeled side uniformly regardless of orientation.
-struct SideView<'a> {
-    g: &'a BipartiteGraph,
-    peel_u: bool,
+/// Shared with the two-phase engine ([`super::two_phase`]).
+pub(super) struct SideView<'a> {
+    pub(super) g: &'a BipartiteGraph,
+    pub(super) peel_u: bool,
 }
 
 impl<'a> SideView<'a> {
-    fn n_peel(&self) -> usize {
+    pub(super) fn n_peel(&self) -> usize {
         if self.peel_u {
             self.g.nu()
         } else {
             self.g.nv()
         }
     }
-    fn nbrs_peel(&self, x: usize) -> &[u32] {
+    pub(super) fn nbrs_peel(&self, x: usize) -> &[u32] {
         if self.peel_u {
             self.g.nbrs_u(x)
         } else {
             self.g.nbrs_v(x)
         }
     }
-    fn nbrs_other(&self, y: usize) -> &[u32] {
+    pub(super) fn nbrs_other(&self, y: usize) -> &[u32] {
         if self.peel_u {
             self.g.nbrs_v(y)
         } else {
@@ -139,7 +144,7 @@ impl<'a> SideView<'a> {
         }
     }
     /// Edge id of the `i`-th neighbor slot of peel-side vertex `x`.
-    fn eid_peel(&self, x: usize, i: usize) -> u32 {
+    pub(super) fn eid_peel(&self, x: usize, i: usize) -> u32 {
         if self.peel_u {
             self.g.eid_u(x, i)
         } else {
@@ -148,11 +153,24 @@ impl<'a> SideView<'a> {
     }
     /// Live view whose rows are the centers (the un-peeled side) and
     /// whose entries are peel-side vertices.
-    fn live_centers(&self) -> LiveCsr {
+    pub(super) fn live_centers(&self) -> LiveCsr {
         if self.peel_u {
             LiveCsr::v_view(self.g)
         } else {
             LiveCsr::u_view(self.g)
+        }
+    }
+    /// [`Self::live_centers`] restricted to the peel-side entries
+    /// `keep(x, eid)` accepts — the two-phase engine's per-range
+    /// sub-views.
+    pub(super) fn live_centers_filtered(
+        &self,
+        keep: &(impl Fn(u32, u32) -> bool + ?Sized),
+    ) -> LiveCsr {
+        if self.peel_u {
+            LiveCsr::v_view_filtered(self.g, keep)
+        } else {
+            LiveCsr::u_view_filtered(self.g, keep)
         }
     }
 }
@@ -170,7 +188,9 @@ pub fn peel_vertices(g: &BipartiteGraph, bu: &[u64], bv: &[u64], opts: &PeelVOpt
     // Cache-aware layout: only the intersect engine walks the dense
     // counter this helps (Agg ignores `layout` exactly as Intersect
     // ignores `agg`).
-    if opts.engine == PeelEngine::Intersect && opts.layout.resolve(g.m()) == Layout::Hub {
+    if matches!(opts.engine, PeelEngine::Intersect | PeelEngine::TwoPhase)
+        && opts.layout.resolve(g.m()) == Layout::Hub
+    {
         return peel_vertices_relabeled(g, bu, bv, opts, peel_u);
     }
     let view = SideView { g, peel_u };
@@ -179,6 +199,7 @@ pub fn peel_vertices(g: &BipartiteGraph, bu: &[u64], bv: &[u64], opts: &PeelVOpt
     match opts.engine {
         PeelEngine::Agg => peel_vertices_agg(&view, counts, opts),
         PeelEngine::Intersect => peel_vertices_intersect(&view, counts, opts),
+        PeelEngine::TwoPhase => super::two_phase::peel_vertices_two_phase(&view, counts, opts),
     }
 }
 
@@ -285,9 +306,9 @@ fn peel_vertices_agg(view: &SideView<'_>, counts: &[u64], opts: &PeelVOpts) -> T
 /// Per-worker scratch for the intersect engine: the dense wedge tally
 /// for the source being walked and the worker's share of the round's
 /// deltas.  Pooled across rounds — steady state allocates nothing.
-struct VScratch {
-    ctr: TouchedCounter,
-    delta: DenseDelta,
+pub(super) struct VScratch {
+    pub(super) ctr: TouchedCounter,
+    pub(super) delta: DenseDelta,
 }
 
 /// The streaming intersect engine: per-batch-vertex two-hop walks over
@@ -518,7 +539,7 @@ fn update_v_batch(
 /// [`walk_grain`] balances against the cache-tile budget.  Shared by
 /// the intersect round walks and the wedge-enumeration aggregation
 /// paths so no call site hard-codes a claim grain.
-fn wedge_footprint(view: &SideView<'_>) -> usize {
+pub(super) fn wedge_footprint(view: &SideView<'_>) -> usize {
     let m = view.g.m();
     let a = m.div_ceil(view.n_peel().max(1)).max(1);
     let n_other = view.g.n() - view.n_peel();

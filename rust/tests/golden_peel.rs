@@ -1,10 +1,14 @@
-//! Golden decomposition corpus: the six pinned datasets of
-//! `tests/golden/` now also carry their full peeling results —
-//! `<name>.peel` pins the tip numbers of BOTH sides and the wing
-//! numbers, computed by the literal recount-every-round oracle
-//! (regenerate with `python3 scripts/peel_model.py golden`).  Every
-//! `PeelEngine x BucketKind` combination must reproduce them exactly,
-//! at 1 and 4 threads.
+//! Golden decomposition corpus: the twelve pinned datasets of
+//! `tests/golden/` carry their full peeling results — `<name>.peel`
+//! pins the tip numbers of BOTH sides and the wing numbers, computed
+//! by the literal recount-every-round oracle (regenerate with
+//! `python3 scripts/peel_model.py golden`).  The corpus deliberately
+//! spans the shapes peeling engines get wrong: heavy-tailed hub
+//! graphs (`hub30x22`, `hub14x40`), tie-dense count distributions
+//! (`ties16x16`, `ties15x15`), a disconnected multi-component graph
+//! (`disc20x17`), and a one-side-empty degenerate (`empty9x0`).
+//! Every `PeelEngine x BucketKind` combination must reproduce the
+//! pinned rows exactly, at 1, 4, and 8 threads.
 
 use std::path::PathBuf;
 
@@ -16,7 +20,10 @@ use parbutterfly::peel::{
 use parbutterfly::prims::pool::with_threads;
 use parbutterfly::testutil::brute;
 
-const CORPUS: [&str; 6] = ["davis", "k6x7", "er20x25", "er16x16", "cl30x20", "blocks12"];
+const CORPUS: [&str; 12] = [
+    "davis", "k6x7", "er20x25", "er16x16", "cl30x20", "blocks12", "hub30x22", "hub14x40",
+    "ties16x16", "ties15x15", "disc20x17", "empty9x0",
+];
 
 fn golden_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
@@ -62,7 +69,7 @@ fn golden_peel_files_match_the_brute_oracle_on_anchors() {
     // the datasets small enough for the literal recount (the rest are
     // covered transitively: every engine must match the files, and the
     // engines match the oracle on the randomized property sweeps).
-    for name in ["k6x7", "er16x16", "blocks12"] {
+    for name in ["k6x7", "er16x16", "blocks12", "ties16x16", "disc20x17"] {
         let g = load_graph(name);
         let (tu, tv, w) = load_peel(name);
         assert_eq!(tu, brute::tip_numbers_u(&g), "{name}: tips_u vs oracle");
@@ -80,7 +87,7 @@ fn golden_decompositions_across_every_engine_and_bucket_combo() {
         let (tu, tv, w) = load_peel(name);
         let vc = count_per_vertex(&g, &CountOpts::default());
         let be = count_per_edge(&g, &CountOpts::default());
-        for threads in [1usize, 4] {
+        for threads in [1usize, 4, 8] {
             with_threads(threads, || {
                 for engine in PeelEngine::ALL {
                     for buckets in BucketKind::ALL {

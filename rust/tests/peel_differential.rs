@@ -1,0 +1,136 @@
+//! Differential peel testing: the three UPDATE engines (`agg`,
+//! `intersect`, `two-phase`) are distinct algorithms that must land on
+//! the same decomposition — tip numbers of both sides and wing
+//! numbers, bit for bit.  This suite drives them against each other
+//! over ~200 seeded random graphs (the `Gen::bipartite` family plus
+//! explicit heavy-tailed Chung-Lu hub graphs, the shape that stresses
+//! the two-phase range boundaries hardest), and pins the two
+//! invariances the two-phase engine claims on top of correctness:
+//! thread invariance (1/4/8 threads, identical output) and layout
+//! invariance (`Layout::Flat` vs the hub-relabeled fast path).
+//!
+//! The python mirror of this suite is
+//! `scripts/two_phase_model_check.py`; keep the two roughly aligned in
+//! the families they draw from.
+
+use parbutterfly::count::{count_per_edge, count_per_vertex, CountOpts};
+use parbutterfly::graph::gen;
+use parbutterfly::graph::{BipartiteGraph, Layout};
+use parbutterfly::peel::{
+    peel_edges, peel_vertices, PeelEOpts, PeelEngine, PeelSide, PeelVOpts,
+};
+use parbutterfly::prims::pool::with_threads;
+use parbutterfly::testutil::prop::{check, prop_assert_eq, Gen};
+
+/// Tip numbers for one side under one engine/layout, from shared counts.
+fn tips(
+    g: &BipartiteGraph,
+    bu: &[u64],
+    bv: &[u64],
+    engine: PeelEngine,
+    side: PeelSide,
+    layout: Layout,
+) -> Vec<u64> {
+    let opts = PeelVOpts { engine, side, layout, ..Default::default() };
+    peel_vertices(g, bu, bv, &opts).tips
+}
+
+/// Wing numbers under one engine/layout, from shared counts.
+fn wings(g: &BipartiteGraph, be: &[u64], engine: PeelEngine, layout: Layout) -> Vec<u64> {
+    let opts = PeelEOpts { engine, layout, ..Default::default() };
+    peel_edges(g, be, &opts).wings
+}
+
+/// The graph family for the differential sweep: mostly the shared
+/// property-test family, with every third draw replaced by a
+/// heavy-tailed Chung-Lu graph whose hubs concentrate butterfly mass
+/// in few vertices — the distribution that makes the two-phase
+/// coarse thresholds collapse many vertices into one range.
+fn draw(gen: &mut Gen, i: u64) -> BipartiteGraph {
+    if i % 3 == 0 {
+        let nu = gen.usize_in(8, 40);
+        let nv = gen.usize_in(8, 40);
+        let m = gen.usize_in(nu + nv, 6 * (nu + nv));
+        gen::chung_lu(nu, nv, m, 1.9 + gen.f64_unit(), gen.seed().wrapping_add(i))
+    } else {
+        gen.bipartite(36, 260)
+    }
+}
+
+#[test]
+fn engines_agree_on_random_graphs() {
+    let mut i = 0u64;
+    check("peel_differential::engines_agree", 200, |gen| {
+        i += 1;
+        let g = draw(gen, i);
+        let vc = count_per_vertex(&g, &CountOpts::default());
+        let be = count_per_edge(&g, &CountOpts::default());
+        for side in [PeelSide::U, PeelSide::V] {
+            let a = tips(&g, &vc.bu, &vc.bv, PeelEngine::Agg, side, Layout::Flat);
+            let b = tips(&g, &vc.bu, &vc.bv, PeelEngine::Intersect, side, Layout::Flat);
+            let c = tips(&g, &vc.bu, &vc.bv, PeelEngine::TwoPhase, side, Layout::Flat);
+            prop_assert_eq(&a, &b)?;
+            prop_assert_eq(&a, &c)?;
+        }
+        let wa = wings(&g, &be, PeelEngine::Agg, Layout::Flat);
+        let wi = wings(&g, &be, PeelEngine::Intersect, Layout::Flat);
+        let wt = wings(&g, &be, PeelEngine::TwoPhase, Layout::Flat);
+        prop_assert_eq(&wa, &wi)?;
+        prop_assert_eq(&wa, &wt)
+    });
+}
+
+#[test]
+fn two_phase_is_thread_invariant() {
+    // The two-phase engine derives its coarse batches serially and
+    // writes fine results into disjoint per-range slots, so output
+    // must not depend on the worker count.
+    let mut i = 0u64;
+    check("peel_differential::thread_invariance", 48, |gen| {
+        i += 1;
+        let g = draw(gen, i);
+        let vc = count_per_vertex(&g, &CountOpts::default());
+        let be = count_per_edge(&g, &CountOpts::default());
+        let reference = with_threads(1, || {
+            (
+                tips(&g, &vc.bu, &vc.bv, PeelEngine::TwoPhase, PeelSide::U, Layout::Flat),
+                tips(&g, &vc.bu, &vc.bv, PeelEngine::TwoPhase, PeelSide::V, Layout::Flat),
+                wings(&g, &be, PeelEngine::TwoPhase, Layout::Flat),
+            )
+        });
+        for t in [4usize, 8] {
+            let got = with_threads(t, || {
+                (
+                    tips(&g, &vc.bu, &vc.bv, PeelEngine::TwoPhase, PeelSide::U, Layout::Flat),
+                    tips(&g, &vc.bu, &vc.bv, PeelEngine::TwoPhase, PeelSide::V, Layout::Flat),
+                    wings(&g, &be, PeelEngine::TwoPhase, Layout::Flat),
+                )
+            });
+            prop_assert_eq(&reference, &got)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn two_phase_is_layout_invariant() {
+    // Layout::Hub routes two-phase through the degree-descending
+    // relabeling fast path (`peel_vertices_relabeled`), which must
+    // compose with the per-range relabeling without changing a single
+    // tip or wing number.
+    let mut i = 0u64;
+    check("peel_differential::layout_invariance", 48, |gen| {
+        i += 1;
+        let g = draw(gen, i);
+        let vc = count_per_vertex(&g, &CountOpts::default());
+        let be = count_per_edge(&g, &CountOpts::default());
+        for side in [PeelSide::U, PeelSide::V] {
+            let flat = tips(&g, &vc.bu, &vc.bv, PeelEngine::TwoPhase, side, Layout::Flat);
+            let hub = tips(&g, &vc.bu, &vc.bv, PeelEngine::TwoPhase, side, Layout::Hub);
+            prop_assert_eq(&flat, &hub)?;
+        }
+        let flat = wings(&g, &be, PeelEngine::TwoPhase, Layout::Flat);
+        let hub = wings(&g, &be, PeelEngine::TwoPhase, Layout::Hub);
+        prop_assert_eq(&flat, &hub)
+    });
+}

@@ -28,7 +28,7 @@ from collections import defaultdict
 from pathlib import Path
 
 import bench_model_common
-from bench_intersect_model import chung_lu, erdos_renyi, planted_blocks
+from wedge_model import chung_lu, erdos_renyi, planted_blocks
 
 WORKLOADS = [
     ("er", erdos_renyi(3_000, 3_000, 60_000, 103)),

@@ -24,10 +24,11 @@ import time
 from pathlib import Path
 
 import bench_model_common
-from bench_intersect_model import (chung_lu, erdos_renyi, per_edge_intersect,
-                                   planted_blocks, preprocess)
+from wedge_model import (chung_lu, erdos_renyi, per_edge_intersect,
+                         planted_blocks, preprocess)
 from peel_model import (Graph, initial_vertex_counts, peel_e_agg,
-                        peel_e_intersect, peel_v_agg, peel_v_intersect)
+                        peel_e_intersect, peel_e_two_phase, peel_v_agg,
+                        peel_v_intersect, peel_v_two_phase)
 
 # Model-scale stand-ins for the Rust PEELING_SUITE (small / cl / dense),
 # shrunk so the pure-Python rounds finish in bench time.
@@ -43,7 +44,7 @@ def edge_counts(nu, nv, edges):
     """Per-edge butterfly counts via the ranked streaming model (edge
     ids = positions in the sorted edge list, same as the Rust CSR)."""
     n, m = nu + nv, len(edges)
-    adj, up = preprocess(nu, nv, edges)
+    adj, up, _side = preprocess(nu, nv, edges)
     be = [0] * m
     per_edge_intersect(n, m, adj, up, be)
     return be
@@ -69,17 +70,20 @@ def main():
         vc = initial_vertex_counts(g, peel_u)
         be = edge_counts(nu, nv, g.edges)
         print(f"[{wl_id}] {describe}: m={g.m} peel_u={peel_u}")
-        for mode, agg_f, isect_f, counts in [
+        for mode, agg_f, isect_f, two_f, counts in [
             ("tip", lambda: peel_v_agg(g, vc, peel_u),
-             lambda: peel_v_intersect(g, vc, peel_u), vc),
+             lambda: peel_v_intersect(g, vc, peel_u),
+             lambda: peel_v_two_phase(g, vc, peel_u), vc),
             ("wing", lambda: peel_e_agg(g, be),
-             lambda: peel_e_intersect(g, be), be),
+             lambda: peel_e_intersect(g, be),
+             lambda: peel_e_two_phase(g, be), be),
         ]:
-            a, b = agg_f(), isect_f()
-            assert a == b, f"{wl_id}/{mode}: engines disagree"
+            a, b, c = agg_f(), isect_f(), two_f()
+            assert a == b == c, f"{wl_id}/{mode}: engines disagree"
             rounds = len(set(a))  # distinct peel values ~ informative proxy
-            ms = {"agg": bench(agg_f), "intersect": bench(isect_f)}
-            for label in ("agg", "intersect"):
+            ms = {"agg": bench(agg_f), "intersect": bench(isect_f),
+                  "two-phase": bench(two_f)}
+            for label in ("agg", "intersect", "two-phase"):
                 rows.append({"workload": wl_id, "mode": mode, "config": label,
                              "median_ms": round(ms[label], 3)})
                 print(f"  {mode}/{label:<10} {ms[label]:10.2f} ms")
@@ -90,6 +94,7 @@ def main():
                 "best_agg": "agg-model",
                 "best_agg_ms": round(ms["agg"], 3),
                 "intersect_ms": round(ms["intersect"], 3),
+                "two_phase_ms": round(ms["two-phase"], 3),
                 "speedup": round(speedup, 3),
                 "distinct_peel_values": rounds,
             })
@@ -98,8 +103,9 @@ def main():
         "harness": "python-model",
         "note": ("Algorithmic model measurements (scripts/bench_peel_model.py): "
                  "aggregation UPDATE paths (full-adjacency rescans + per-pair "
-                 "aggregation) vs the streaming live-view intersect peel engine, "
-                 "identical bucket model.  Regenerate natively with `parbutterfly "
+                 "aggregation) vs the streaming live-view intersect peel engine "
+                 "and the two-phase coarse/fine range-parallel engine, identical "
+                 "bucket model.  Regenerate natively with `parbutterfly "
                  "bench run --filter peel` (or `cargo bench --bench "
                  "peel_intersect_vs_agg`), which overwrites this file with "
                  "`harness: \"native\"` rows and the full per-aggregation "

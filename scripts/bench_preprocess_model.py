@@ -26,7 +26,7 @@ import time
 from pathlib import Path
 
 import bench_model_common
-from bench_intersect_model import chung_lu, erdos_renyi
+from wedge_model import chung_lu, erdos_renyi
 
 WORKLOADS = [
     ("er", "ER near-regular 3000x3000 m~60k (model)", erdos_renyi(3_000, 3_000, 60_000, 103)),

@@ -24,6 +24,13 @@ counting engine in the previous PR):
 Usage:
     python3 scripts/peel_model.py validate [trials]
     python3 scripts/peel_model.py golden
+    python3 scripts/peel_model.py corpus
+    python3 scripts/peel_model.py --two-phase <edge-list.txt>
+
+``validate`` also covers the two-phase coarse->fine models
+(`PeelEngine::TwoPhase`), ``corpus`` regenerates the six PR-8 stress
+graphs (`NEW_CORPUS`), and ``--two-phase`` prints the two-phase model's
+full decomposition of one golden-format edge list for differential use.
 """
 import random
 import sys
@@ -402,6 +409,378 @@ def peel_e_intersect(g, counts):
 
 
 # ---------------------------------------------------------------------------
+# Two-phase coarse->fine peeling (PeelEngine::TwoPhase; RECEIPT-style,
+# arXiv 2110.12511).  Phase 1 partitions items into tip/wing-number
+# ranges with threshold-staged bulk peels; phase 2 re-seeds each range
+# with range-restricted butterfly counts and fine-peels every range
+# independently.  The Rust engine parallelizes ACROSS ranges; the model
+# runs them in order — the decompositions are identical by construction.
+# ---------------------------------------------------------------------------
+
+THR_INF = 1 << 62
+
+
+def range_thresholds(counts):
+    """Coarse range boundaries, balanced by butterfly mass: walk the
+    distinct initial-count values ascending and cut whenever the
+    accumulated mass crosses the next of P ~= sqrt(n) equal targets.
+    Mirrors peel/two_phase.rs exactly (there the ascending value walk
+    comes from draining rank-style MaxBuckets over log2 keys and
+    sorting each claimed frontier; the concatenation is this sort).
+    Always ends with a sentinel "infinite" threshold; all-equal or
+    all-zero inputs degenerate to a single range."""
+    n = len(counts)
+    total = sum(counts)
+    p = max(1, int(n ** 0.5))
+    thr = []
+    if total > 0 and p > 1:
+        order = sorted(counts)
+        acc, i, j = 0, 0, 1
+        while i < n and j < p:
+            v = order[i]
+            while i < n and order[i] == v:
+                acc += v
+                i += 1
+            if acc * p >= j * total:
+                thr.append(v)
+                while j < p and acc * p >= j * total:
+                    j += 1
+    thr.append(THR_INF)
+    return thr
+
+
+def peel_v_two_phase(g, counts, peel_u):
+    """Two-phase PEEL-V.
+
+    Coarse: each sub-round bulk-removes EVERY live vertex whose current
+    count is <= the stage threshold and applies one intersect-style
+    update walk; by the threshold-core property the set removed during
+    stage j is exactly {x : tip(x) in (thr[j-1], thr[j]]}, which pins
+    stage[x] without knowing exact tips.
+
+    Seeds: pair wedge multiplicities d(x1, x2) are STATIC under PEEL-V
+    (centers never die), so each vertex's butterfly count restricted to
+    same-or-later ranges is one up-front pass: seed(x1) =
+    sum_{stage(x2) >= stage(x1)} C(d(x1, x2), 2) — the cross-range
+    support is subtracted once, up front, not maintained.
+
+    Fine: each range peels independently over a sub-view holding only
+    its own members; a range-local running max starting at 0 provably
+    equals the global one (every seed exceeds the previous stage's
+    threshold, which bounds the global k entering the range)."""
+    nbrs_peel = g.nbrs_u if peel_u else g.nbrs_v
+    nbrs_other = g.nbrs_v if peel_u else g.nbrs_u
+    n = g.nu if peel_u else g.nv
+    n_other = g.nv if peel_u else g.nu
+    thr = range_thresholds(counts)
+
+    # Phase 1: coarse staged peel over a live center view.
+    live = [[(x, e) for (x, e) in nbrs_other[y]] for y in range(n_other)]
+    llen = [len(live[y]) for y in range(n_other)]
+    pos = [0] * g.m
+    for y in range(n_other):
+        for i, (_x, e) in enumerate(live[y]):
+            pos[e] = i
+
+    def remove(y, e):
+        i = pos[e]
+        last = llen[y] - 1
+        assert live[y][i][1] == e
+        live[y][i] = live[y][last]
+        pos[live[y][i][1]] = i
+        llen[y] = last
+
+    cur = list(counts)
+    alive = [True] * n
+    stage = [0] * n
+    cnt = [0] * n
+    for j, th in enumerate(thr):
+        while True:
+            batch = [x for x in range(n) if alive[x] and cur[x] <= th]
+            if not batch:
+                break
+            for x in batch:
+                alive[x] = False
+                stage[x] = j
+            for x1 in batch:
+                for (y, e) in nbrs_peel[x1]:
+                    remove(y, e)
+            delta = {}
+            for x1 in batch:
+                touched = []
+                for (y, _e) in nbrs_peel[x1]:
+                    row = live[y]
+                    for i in range(llen[y]):
+                        x2 = row[i][0]
+                        if cnt[x2] == 0:
+                            touched.append(x2)
+                        cnt[x2] += 1
+                for x2 in touched:
+                    b = cnt[x2] * (cnt[x2] - 1) // 2
+                    if b:
+                        delta[x2] = delta.get(x2, 0) + b
+                    cnt[x2] = 0
+            # A butterfly holds exactly two peel-side vertices, so the
+            # per-x1 sum is exact even for mixed-count bulk batches —
+            # counts stay true (and non-negative) without clamping.
+            for x2, removed in delta.items():
+                cur[x2] -= removed
+
+    # Seeds: one pass over static pair multiplicities.
+    seed = [0] * n
+    for x1 in range(n):
+        s = stage[x1]
+        pair = {}
+        for (y, _e) in nbrs_peel[x1]:
+            for (x2, _e2) in nbrs_other[y]:
+                if x2 != x1 and stage[x2] >= s:
+                    pair[x2] = pair.get(x2, 0) + 1
+        seed[x1] = sum(d * (d - 1) // 2 for d in pair.values())
+
+    # Phase 2: per-range fine peel over members-only sub-views.
+    tips = [0] * n
+    for j in range(len(thr)):
+        members = [x for x in range(n) if stage[x] == j]
+        if not members:
+            continue
+        fl = [[(x, e) for (x, e) in nbrs_other[y] if stage[x] == j]
+              for y in range(n_other)]
+        flen = [len(fl[y]) for y in range(n_other)]
+        fpos = [0] * g.m
+        for y in range(n_other):
+            for i, (_x, e) in enumerate(fl[y]):
+                fpos[e] = i
+
+        def fremove(y, e):
+            i = fpos[e]
+            last = flen[y] - 1
+            assert fl[y][i][1] == e
+            fl[y][i] = fl[y][last]
+            fpos[fl[y][i][1]] = i
+            flen[y] = last
+
+        idx = {x: i for i, x in enumerate(members)}
+        buckets = Buckets([seed[x] for x in members])
+        k = 0
+        while True:
+            popped = buckets.pop_min()
+            if popped is None:
+                break
+            c, lbatch = popped
+            k = max(k, c)
+            batch = [members[i] for i in lbatch]
+            for x in batch:
+                tips[x] = k
+            for x1 in batch:
+                for (y, e) in nbrs_peel[x1]:
+                    fremove(y, e)
+            delta = {}
+            for x1 in batch:
+                touched = []
+                for (y, _e) in nbrs_peel[x1]:
+                    row = fl[y]
+                    for i in range(flen[y]):
+                        x2 = row[i][0]
+                        if cnt[x2] == 0:
+                            touched.append(x2)
+                        cnt[x2] += 1
+                for x2 in touched:
+                    b = cnt[x2] * (cnt[x2] - 1) // 2
+                    if b:
+                        delta[x2] = delta.get(x2, 0) + b
+                    cnt[x2] = 0
+            for x2, removed in delta.items():
+                buckets.update(idx[x2], max(buckets.cur[idx[x2]] - removed, k))
+    return tips
+
+
+def peel_e_two_phase(g, counts):
+    """Two-phase PEEL-E.  Edge butterfly supports are NOT static, so
+    the coarse pass runs threshold-staged bulk rounds with the exact
+    intersect-style walk (same-frontier double counting resolved by the
+    alive_for tie-break: every destroyed butterfly is enumerated by its
+    smallest frontier edge only), the seed pass recounts, per edge,
+    exactly the butterflies whose other three edges live in
+    same-or-later ranges (one stamped enumeration over the full graph),
+    and each range fine-peels a sub-view of the stage >= j edges in
+    which later-range edges are permanently alive — present in every
+    walk, never decremented, never re-bucketed."""
+    eid_of = {e: i for i, e in enumerate(g.edges)}
+    thr = range_thresholds(counts)
+
+    # Phase 1: coarse staged bulk peel.
+    live_u = [list(g.nbrs_u[u]) for u in range(g.nu)]
+    live_v = [list(g.nbrs_v[v]) for v in range(g.nv)]
+    ulen = [len(r) for r in live_u]
+    vlen = [len(r) for r in live_v]
+    pos_u = [0] * g.m
+    pos_v = [0] * g.m
+    for u in range(g.nu):
+        for i, (_v, e) in enumerate(live_u[u]):
+            pos_u[e] = i
+    for v in range(g.nv):
+        for i, (_u, e) in enumerate(live_v[v]):
+            pos_v[e] = i
+
+    def remove(e):
+        u, v = g.edges[e]
+        i = pos_u[e]
+        last = ulen[u] - 1
+        live_u[u][i] = live_u[u][last]
+        pos_u[live_u[u][i][1]] = i
+        ulen[u] = last
+        i = pos_v[e]
+        last = vlen[v] - 1
+        live_v[v][i] = live_v[v][last]
+        pos_v[live_v[v][i][1]] = i
+        vlen[v] = last
+
+    cur = list(counts)
+    round_of = [ALIVE] * g.m
+    stage = [0] * g.m
+    stamp_eid = [0] * g.nv
+    stamp_tag = [-1] * g.nv
+    rnd = 0
+    for j, th in enumerate(thr):
+        while True:
+            batch = [e for e in range(g.m) if round_of[e] == ALIVE and cur[e] <= th]
+            if not batch:
+                break
+            for e in batch:
+                round_of[e] = rnd
+                stage[e] = j
+            delta = {}
+
+            def emit(eid):
+                delta[eid] = delta.get(eid, 0) + 1
+
+            for e in batch:
+                u1, v1 = g.edges[e]
+                for i in range(ulen[u1]):
+                    v2, ea = live_u[u1][i]
+                    if alive_for(round_of, rnd, ea, e):
+                        stamp_eid[v2] = ea
+                        stamp_tag[v2] = e
+                for i in range(vlen[v1]):
+                    u2, e2 = live_v[v1][i]
+                    if not alive_for(round_of, rnd, e2, e):
+                        continue
+                    for jj in range(ulen[u2]):
+                        v2, eb = live_u[u2][jj]
+                        if stamp_tag[v2] == e and alive_for(round_of, rnd, eb, e):
+                            emit(e2)
+                            emit(stamp_eid[v2])
+                            emit(eb)
+            for e in batch:
+                remove(e)
+            for e, removed in delta.items():
+                if round_of[e] == ALIVE:
+                    cur[e] -= removed
+            rnd += 1
+
+    # Seeds: butterflies of e whose other three edges all have
+    # stage >= stage(e).
+    seed = [0] * g.m
+    for e, (u1, v1) in enumerate(g.edges):
+        s = stage[e]
+        b = 0
+        for (u2, e2) in g.nbrs_v[v1]:
+            if u2 == u1 or stage[e2] < s:
+                continue
+            for (v2, ea) in g.nbrs_u[u1]:
+                if v2 == v1 or stage[ea] < s:
+                    continue
+                eb = eid_of.get((u2, v2))
+                if eb is not None and stage[eb] >= s:
+                    b += 1
+        seed[e] = b
+
+    # Phase 2: per-range fine peel.  Fresh stamp arrays (an edge id may
+    # have stamped v2 entries during the coarse walk); one set shared
+    # across ranges is safe because every edge is walked in exactly one
+    # range.  fr_round doubles as the peeled marker: stage > j edges
+    # keep ALIVE for the whole of range j.
+    wings = [0] * g.m
+    fr_round = [ALIVE] * g.m
+    fstamp_eid = [0] * g.nv
+    fstamp_tag = [-1] * g.nv
+    for j in range(len(thr)):
+        members = [e for e in range(g.m) if stage[e] == j]
+        if not members:
+            continue
+        fu = [[(v, e) for (v, e) in g.nbrs_u[u] if stage[e] >= j]
+              for u in range(g.nu)]
+        fv = [[(u, e) for (u, e) in g.nbrs_v[v] if stage[e] >= j]
+              for v in range(g.nv)]
+        fulen = [len(r) for r in fu]
+        fvlen = [len(r) for r in fv]
+        fpos_u = [0] * g.m
+        fpos_v = [0] * g.m
+        for u in range(g.nu):
+            for i, (_v, e) in enumerate(fu[u]):
+                fpos_u[e] = i
+        for v in range(g.nv):
+            for i, (_u, e) in enumerate(fv[v]):
+                fpos_v[e] = i
+
+        def fremove(e):
+            u, v = g.edges[e]
+            i = fpos_u[e]
+            last = fulen[u] - 1
+            fu[u][i] = fu[u][last]
+            fpos_u[fu[u][i][1]] = i
+            fulen[u] = last
+            i = fpos_v[e]
+            last = fvlen[v] - 1
+            fv[v][i] = fv[v][last]
+            fpos_v[fv[v][i][1]] = i
+            fvlen[v] = last
+
+        idx = {e: i for i, e in enumerate(members)}
+        buckets = Buckets([seed[e] for e in members])
+        k, rnd = 0, 0
+        while True:
+            popped = buckets.pop_min()
+            if popped is None:
+                break
+            c, lbatch = popped
+            k = max(k, c)
+            batch = [members[i] for i in lbatch]
+            for e in batch:
+                wings[e] = k
+                fr_round[e] = rnd
+            delta = {}
+
+            def emit(eid):
+                delta[eid] = delta.get(eid, 0) + 1
+
+            for e in batch:
+                u1, v1 = g.edges[e]
+                for i in range(fulen[u1]):
+                    v2, ea = fu[u1][i]
+                    if alive_for(fr_round, rnd, ea, e):
+                        fstamp_eid[v2] = ea
+                        fstamp_tag[v2] = e
+                for i in range(fvlen[v1]):
+                    u2, e2 = fv[v1][i]
+                    if not alive_for(fr_round, rnd, e2, e):
+                        continue
+                    for jj in range(fulen[u2]):
+                        v2, eb = fu[u2][jj]
+                        if fstamp_tag[v2] == e and alive_for(fr_round, rnd, eb, e):
+                            emit(e2)
+                            emit(fstamp_eid[v2])
+                            emit(eb)
+            for e in batch:
+                fremove(e)
+            for e2, removed in delta.items():
+                if stage[e2] == j and fr_round[e2] == ALIVE:
+                    buckets.update(idx[e2], max(buckets.cur[idx[e2]] - removed, k))
+            rnd += 1
+    return wings
+
+
+# ---------------------------------------------------------------------------
 # Initial counts (the counting framework's per-vertex / per-edge output).
 # ---------------------------------------------------------------------------
 
@@ -432,6 +811,11 @@ def random_graph(rng):
     nv = rng.randrange(2, 13)
     m = rng.randrange(0, min(nu * nv, 70))
     edges = {(rng.randrange(nu), rng.randrange(nv)) for _ in range(m)}
+    if rng.random() < 0.3:
+        # Heavy tail: promote one u to a hub wired across all of V, so
+        # the two-phase range boundaries see skewed butterfly mass.
+        hub = rng.randrange(nu)
+        edges |= {(hub, v) for v in range(nv)}
     return Graph(nu, nv, edges)
 
 
@@ -444,20 +828,124 @@ def validate(trials):
             expect = oracle_tips(g, peel_u)
             agg = peel_v_agg(g, counts, peel_u)
             isect = peel_v_intersect(g, counts, peel_u)
+            two = peel_v_two_phase(g, counts, peel_u)
             assert agg == expect, f"trial {t} peel_u={peel_u}: agg {agg} != {expect}"
             assert isect == expect, f"trial {t} peel_u={peel_u}: intersect {isect} != {expect}"
+            assert two == expect, f"trial {t} peel_u={peel_u}: two-phase {two} != {expect}"
         be = initial_edge_counts(g)
         expect = oracle_wings(g)
         agg = peel_e_agg(g, be)
         isect = peel_e_intersect(g, be)
+        two = peel_e_two_phase(g, be)
         assert agg == expect, f"trial {t}: edge agg {agg} != {expect}"
         assert isect == expect, f"trial {t}: edge intersect {isect} != {expect}"
+        assert two == expect, f"trial {t}: edge two-phase {two} != {expect}"
         if (t + 1) % 50 == 0:
             print(f"  {t + 1}/{trials} trials ok")
-    print(f"validate: {trials} randomized graphs, all four peeling paths == oracle")
+    print(f"validate: {trials} randomized graphs, all six peeling paths == oracle")
 
 
-CORPUS = ["davis", "k6x7", "er20x25", "er16x16", "cl30x20", "blocks12"]
+def two_phase_oracle(path):
+    """`--two-phase` model oracle: print the full decomposition of one
+    golden-format edge list, computed through the two-phase models (the
+    differential layer can diff this against any Rust engine)."""
+    g = load_golden(Path(path))
+    tips_u = peel_v_two_phase(g, initial_vertex_counts(g, True), True)
+    tips_v = peel_v_two_phase(g, initial_vertex_counts(g, False), False)
+    wings = peel_e_two_phase(g, initial_edge_counts(g))
+    print("tips_u " + " ".join(map(str, tips_u)))
+    print("tips_v " + " ".join(map(str, tips_v)))
+    print("wings " + " ".join(map(str, wings)))
+
+
+# ---------------------------------------------------------------------------
+# Golden corpus.  The first six graphs predate this file (headers name
+# their gen:: recipes); the last six are peeling stress shapes owned by
+# `corpus` below: heavy tails skew the two-phase range boundaries, tie
+# blocks collapse them, disconnection and an empty side exercise the
+# degenerate paths.
+# ---------------------------------------------------------------------------
+
+CORPUS = [
+    "davis", "k6x7", "er20x25", "er16x16", "cl30x20", "blocks12",
+    "hub30x22", "hub14x40", "ties16x16", "ties15x15", "disc20x17", "empty9x0",
+]
+
+
+def gen_hub30x22(rng):
+    edges = {(0, v) for v in range(22)}
+    edges |= {(1, v) for v in range(15)}
+    edges |= {(2, v) for v in range(10)}
+    for u in range(3, 30):
+        for _ in range(rng.randrange(2, 5)):
+            edges.add((u, rng.randrange(22)))
+    return 30, 22, edges
+
+
+def gen_hub14x40(rng):
+    edges = {(u, 0) for u in range(14)}
+    edges |= {(u, 1) for u in range(9)}
+    for v in range(2, 40):
+        for _ in range(rng.randrange(1, 4)):
+            edges.add((rng.randrange(14), v))
+    return 14, 40, edges
+
+
+def gen_ties16x16(_rng):
+    # Four disjoint copies of K_{4,4}: every vertex and every edge ties
+    # at the same peel value — the coarse boundaries must degenerate to
+    # a single range without losing exactness.
+    edges = {(4 * b + i, 4 * b + j) for b in range(4) for i in range(4) for j in range(4)}
+    return 16, 16, edges
+
+
+def gen_ties15x15(_rng):
+    # Three disjoint K_{3,3} plus three disjoint K_{2,2}: exactly two
+    # big tie classes, so a mass-balanced cut lands INSIDE a tie run.
+    edges = {(3 * b + i, 3 * b + j) for b in range(3) for i in range(3) for j in range(3)}
+    edges |= {(9 + 2 * b + i, 9 + 2 * b + j) for b in range(3) for i in range(2) for j in range(2)}
+    return 15, 15, edges
+
+
+def gen_disc20x17(rng):
+    # Disconnected: a K_{4,4} block, a random mid-density block, a
+    # butterfly-free path, and isolated vertices on both sides.
+    edges = {(u, v) for u in range(4) for v in range(4)}
+    for _ in range(26):
+        edges.add((5 + rng.randrange(8), 5 + rng.randrange(6)))
+    edges |= {(14, 12), (15, 12), (15, 13), (16, 13), (16, 14), (17, 14), (17, 15), (18, 15)}
+    return 20, 17, edges
+
+
+def gen_empty9x0(_rng):
+    return 9, 0, set()
+
+
+NEW_CORPUS = {
+    "hub30x22": ("heavy-tailed U side (degree-skewed hubs)", gen_hub30x22),
+    "hub14x40": ("heavy-tailed V side (degree-skewed hubs)", gen_hub14x40),
+    "ties16x16": ("tie-dense: 4 disjoint K4x4, all peel values equal", gen_ties16x16),
+    "ties15x15": ("tie-dense: two tie classes (3xK3x3 + 3xK2x2)", gen_ties15x15),
+    "disc20x17": ("disconnected components + isolated vertices", gen_disc20x17),
+    "empty9x0": ("one-side-empty: no V vertices, no edges", gen_empty9x0),
+}
+
+
+def corpus():
+    for name, (desc, build) in NEW_CORPUS.items():
+        nu, nv, edges = build(random.Random(0x9E31))
+        g = Graph(nu, nv, edges)
+        total = sum(initial_vertex_counts(g, True)) // 2
+        lines = [
+            f"# golden butterfly-count dataset ({name}.txt)",
+            "# regenerate: python3 scripts/peel_model.py corpus (deterministic builders in NEW_CORPUS)",
+            f"# (peeling stress shape: {desc})",
+            f"# expected total butterflies: {total}",
+            f"# bip {g.nu} {g.nv}",
+        ] + [f"{u} {v}" for (u, v) in g.edges]
+        out = GOLDEN / f"{name}.txt"
+        out.write_text("\n".join(lines) + "\n")
+        print(f"wrote {out} (m={g.m}, butterflies={total})")
 
 
 def golden():
@@ -468,9 +956,14 @@ def golden():
         wings = oracle_wings(g)
         # Cross-check the pinned values against the incremental models
         # before writing anything.
-        assert peel_v_intersect(g, initial_vertex_counts(g, True), True) == tips_u, name
-        assert peel_v_intersect(g, initial_vertex_counts(g, False), False) == tips_v, name
-        assert peel_e_intersect(g, initial_edge_counts(g)) == wings, name
+        cu, cv = initial_vertex_counts(g, True), initial_vertex_counts(g, False)
+        ce = initial_edge_counts(g)
+        assert peel_v_intersect(g, cu, True) == tips_u, name
+        assert peel_v_intersect(g, cv, False) == tips_v, name
+        assert peel_e_intersect(g, ce) == wings, name
+        assert peel_v_two_phase(g, cu, True) == tips_u, name
+        assert peel_v_two_phase(g, cv, False) == tips_v, name
+        assert peel_e_two_phase(g, ce) == wings, name
         out = GOLDEN / f"{name}.peel"
         lines = [
             f"# golden peeling decomposition for {name}.txt",
@@ -482,8 +975,8 @@ def golden():
             "wings " + " ".join(map(str, wings)),
         ]
         out.write_text("\n".join(lines) + "\n")
-        print(f"wrote {out} (max tip_u {max(tips_u)}, max tip_v {max(tips_v)}, "
-              f"max wing {max(wings) if wings else 0})")
+        print(f"wrote {out} (max tip_u {max(tips_u, default=0)}, "
+              f"max tip_v {max(tips_v, default=0)}, max wing {max(wings, default=0)})")
 
 
 if __name__ == "__main__":
@@ -492,5 +985,11 @@ if __name__ == "__main__":
         validate(int(sys.argv[2]) if len(sys.argv) > 2 else 300)
     elif cmd == "golden":
         golden()
+    elif cmd == "corpus":
+        corpus()
+    elif cmd in ("two-phase", "--two-phase"):
+        if len(sys.argv) < 3:
+            sys.exit("usage: peel_model.py --two-phase <edge-list.txt>")
+        two_phase_oracle(sys.argv[2])
     else:
         sys.exit(f"unknown command {cmd!r}")

@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Randomized differential check for the two-phase peeling models.
+
+Python twin of `rust/tests/peel_differential.rs`, in the mold of
+`scripts/layout_model_check.py`: on randomized graphs (including
+heavy-tailed hub shapes), the two-phase coarse->fine models must
+produce bit-identical tip and wing numbers to the agg and intersect
+models on both peel sides.  The script tracks how many trials actually
+split into more than one range — and fails if none do, so the
+multi-range machinery (coarse staging, cross-range seed subtraction,
+per-range fine peels) can never silently go untested.
+
+Usage: python3 scripts/two_phase_model_check.py [trials]
+"""
+import random
+import sys
+
+import peel_model as pm
+
+
+def random_graph(rng):
+    kind = rng.randrange(4)
+    nu = rng.randint(3, 28)
+    nv = rng.randint(3, 28)
+    m = rng.randint(0, min(nu * nv, 160))
+    edges = {(rng.randrange(nu), rng.randrange(nv)) for _ in range(m)}
+    if kind == 1:
+        # Heavy tail: one full-degree hub per side.
+        edges |= {(0, v) for v in range(nv)}
+        edges |= {(u, 0) for u in range(nu)}
+    elif kind == 2:
+        # Tie-dense: disjoint identical blocks under the random noise.
+        b = rng.randint(2, 3)
+        k = min(nu, nv) // b
+        edges |= {(b * blk + i, b * blk + j)
+                  for blk in range(k) for i in range(b) for j in range(b)}
+    elif kind == 3:
+        # Sparse/disconnected: keep only edges touching low ids.
+        edges = {(u, v) for (u, v) in edges if u < nu // 2 and v < nv // 2}
+    return pm.Graph(nu, nv, edges)
+
+
+def main():
+    trials = int(sys.argv[1]) if len(sys.argv) > 1 else 200
+    rng = random.Random(0x27A5E)
+    multi_range = 0
+    for t in range(trials):
+        g = random_graph(rng)
+        ctx = f"trial {t}: nu={g.nu} nv={g.nv} m={g.m}"
+        for peel_u in (True, False):
+            counts = pm.initial_vertex_counts(g, peel_u)
+            multi_range += len(pm.range_thresholds(counts)) > 1
+            agg = pm.peel_v_agg(g, counts, peel_u)
+            isect = pm.peel_v_intersect(g, counts, peel_u)
+            two = pm.peel_v_two_phase(g, counts, peel_u)
+            assert two == isect == agg, f"{ctx} peel_u={peel_u}: tips diverge"
+        ce = pm.initial_edge_counts(g)
+        multi_range += len(pm.range_thresholds(ce)) > 1
+        agg = pm.peel_e_agg(g, ce)
+        isect = pm.peel_e_intersect(g, ce)
+        two = pm.peel_e_two_phase(g, ce)
+        assert two == isect == agg, f"{ctx}: wings diverge"
+        if (t + 1) % 50 == 0:
+            print(f"  {t + 1}/{trials} trials ok")
+    assert multi_range > 0, "no trial split into >1 range — two-phase went untested"
+    print(f"two_phase_model_check: {trials} trials OK "
+          f"({multi_range} decompositions used multiple ranges)")
+
+
+if __name__ == "__main__":
+    main()
