@@ -14,7 +14,7 @@ fn main() {
     let g = gen::chung_lu(10_000, 15_000, 250_000, 2.1, 31);
     let opts = CountOpts::default();
     let t = Instant::now();
-    let exact = count_total(&g, &opts);
+    let exact = count_total(&g, &opts).unwrap();
     let exact_ms = t.elapsed().as_secs_f64() * 1e3;
     println!(
         "graph {} x {}, m={}; exact = {exact} ({exact_ms:.0} ms)\n",
@@ -32,7 +32,7 @@ fn main() {
         let trials = 5u64;
         let t = Instant::now();
         let mean: f64 = (0..trials)
-            .map(|s| sparsify::approx_total_edge(&g, p, s, &opts))
+            .map(|s| sparsify::approx_total_edge(&g, p, s, &opts).unwrap())
             .sum::<f64>()
             / trials as f64;
         let ms = t.elapsed().as_secs_f64() * 1e3 / trials as f64;
@@ -47,7 +47,7 @@ fn main() {
         let c = (1.0 / p).round().max(1.0) as u64;
         let t = Instant::now();
         let mean: f64 = (0..trials)
-            .map(|s| sparsify::approx_total_colorful(&g, c, s, &opts))
+            .map(|s| sparsify::approx_total_colorful(&g, c, s, &opts).unwrap())
             .sum::<f64>()
             / trials as f64;
         let ms = t.elapsed().as_secs_f64() * 1e3 / trials as f64;

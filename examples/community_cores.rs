@@ -37,13 +37,13 @@ fn main() {
     };
     println!("graph: {} x {} with 3 planted communities + noise", g.nu(), g.nv());
 
-    let vc = count_per_vertex(&g, &CountOpts::default());
+    let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
     let tips = peel_vertices(
         &g,
         &vc.bu,
         &vc.bv,
         &PeelVOpts { side: PeelSide::U, ..Default::default() },
-    );
+    ).unwrap();
     println!("tip decomposition: {} rounds", tips.rounds);
 
     // Median tip number per planted block must be ordered by density,

@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     let d = dense::count_dense(&g, backend.as_ref())?;
     let dense_ms = t.elapsed().as_secs_f64() * 1e3;
     let t = Instant::now();
-    let cpu = count_total(&g, &CountOpts::default());
+    let cpu = count_total(&g, &CountOpts::default()).unwrap();
     let cpu_ms = t.elapsed().as_secs_f64() * 1e3;
     assert_eq!(d.total, cpu);
     println!("dense backend:  {} butterflies in {dense_ms:.1} ms", d.total);
@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
         dense::count_total_hybrid(&big, backend.as_ref(), 256, 256, &CountOpts::default())?;
     let hy_ms = t.elapsed().as_secs_f64() * 1e3;
     let t = Instant::now();
-    let cpu = count_total(&big, &CountOpts::default());
+    let cpu = count_total(&big, &CountOpts::default()).unwrap();
     let cpu_ms = t.elapsed().as_secs_f64() * 1e3;
     assert_eq!(hybrid, cpu);
     println!(

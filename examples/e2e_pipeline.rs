@@ -52,7 +52,7 @@ fn main() {
         opts: CountOpts { ranking, ..Default::default() },
         auto_rank: false,
     };
-    let r = count_report(&g, CountMode::Full, &cfg);
+    let r = count_report(&g, CountMode::Full, &cfg).unwrap();
     let vc = r.per_vertex.as_ref().unwrap();
     let be = r.per_edge.as_ref().unwrap();
     println!(
@@ -85,7 +85,7 @@ fn main() {
     // 5. Approximate counting.
     for p in [0.25, 0.5] {
         let t = Instant::now();
-        let est = sparsify::approx_total_edge(&g, p, 7, &cfg.opts);
+        let est = sparsify::approx_total_edge(&g, p, 7, &cfg.opts).unwrap();
         println!(
             "[5] edge sparsification p={p}: estimate {est:.0} (err {:+.2}%, {:.0} ms)",
             100.0 * (est - r.total as f64) / r.total as f64,
@@ -95,7 +95,7 @@ fn main() {
 
     // 6. Decompositions.
     let t = Instant::now();
-    let tips = peel_vertices(&g, &vc.bu, &vc.bv, &PeelVOpts::default());
+    let tips = peel_vertices(&g, &vc.bu, &vc.bv, &PeelVOpts::default()).unwrap();
     println!(
         "[6] tip decomposition ({} side): {} rounds, max tip {} ({:.0} ms)",
         if tips.peeled_u { "U" } else { "V" },
@@ -104,7 +104,7 @@ fn main() {
         t.elapsed().as_secs_f64() * 1e3
     );
     let t = Instant::now();
-    let wings = peel_edges(&g, be, &PeelEOpts::default());
+    let wings = peel_edges(&g, be, &PeelEOpts::default()).unwrap();
     println!(
         "    wing decomposition: {} rounds, max wing {} ({:.0} ms)",
         wings.rounds,

@@ -20,7 +20,7 @@ fn main() {
         opts: CountOpts { ranking: Ranking::Degree, ..Default::default() },
         auto_rank: false,
     };
-    let r = count_report(&g, CountMode::PerVertex, &cfg);
+    let r = count_report(&g, CountMode::PerVertex, &cfg).unwrap();
     println!("butterflies: {} ({} wedges processed, {:.2} ms)", r.total, r.wedges, r.millis);
 
     let vc = r.per_vertex.unwrap();
@@ -34,7 +34,7 @@ fn main() {
         &g,
         &cfg.opts,
         &PeelVOpts { side: PeelSide::U, ..Default::default() },
-    );
+    ).unwrap();
     println!("tip numbers (women): {:?}", t.tips);
     println!("peeling took {} rounds; max tip = {}", t.rounds, t.tips.iter().max().unwrap());
 }

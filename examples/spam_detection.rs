@@ -42,8 +42,8 @@ fn main() {
     );
 
     // Wing decomposition: farm edges live in deep k-wings.
-    let be = count_per_edge(&g, &CountOpts::default());
-    let wings = peel_edges(&g, &be, &PeelEOpts::default());
+    let be = count_per_edge(&g, &CountOpts::default()).unwrap();
+    let wings = peel_edges(&g, &be, &PeelEOpts::default()).unwrap();
     println!("wing decomposition: {} rounds", wings.rounds);
 
     // Classify: flag edges whose wing number clears a threshold chosen

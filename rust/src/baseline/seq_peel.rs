@@ -175,7 +175,7 @@ mod tests {
     fn sp_tips_match_brute_force() {
         for seed in [3, 9] {
             let g = gen::erdos_renyi(12, 14, 75, seed);
-            let vc = count_per_vertex(&g, &CountOpts::default());
+            let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
             let (tips, _) = sp_tip_numbers_u(&g, &vc.bu);
             assert_eq!(tips, brute::tip_numbers_u(&g), "seed={seed}");
         }
@@ -185,7 +185,7 @@ mod tests {
     fn sp_wings_match_brute_force() {
         for seed in [2, 8] {
             let g = gen::erdos_renyi(8, 9, 40, seed);
-            let be = count_per_edge(&g, &CountOpts::default());
+            let be = count_per_edge(&g, &CountOpts::default()).unwrap();
             let (wings, _) = sp_wing_numbers(&g, &be);
             assert_eq!(wings, brute::wing_numbers(&g), "seed={seed}");
         }
@@ -197,7 +197,7 @@ mod tests {
         // cursor wades through empty buckets (Table 4's discogs_style
         // pathology in miniature).
         let g = gen::planted_blocks(12, 12, 2, 6, 6, 1.0, 0, 1);
-        let vc = count_per_vertex(&g, &CountOpts::default());
+        let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
         let (tips, empties) = sp_tip_numbers_u(&g, &vc.bu);
         assert_eq!(tips, brute::tip_numbers_u(&g));
         // K_{6,6} per-vertex count = 5 * C(6,2) = 75 -> at least ~75

@@ -123,8 +123,8 @@ pub fn diff_docs(old: &Json, new: &Json, threshold: f64) -> anyhow::Result<Diff>
             diff.removed.push(key.clone());
         }
     }
-    diff.regressions.sort_by(|a, b| b.ratio.partial_cmp(&a.ratio).unwrap());
-    diff.improvements.sort_by(|a, b| a.ratio.partial_cmp(&b.ratio).unwrap());
+    diff.regressions.sort_by(|a, b| b.ratio.total_cmp(&a.ratio));
+    diff.improvements.sort_by(|a, b| a.ratio.total_cmp(&b.ratio));
     Ok(diff)
 }
 
@@ -384,6 +384,29 @@ mod tests {
             std::fs::write(&p, text).unwrap();
             assert!(check_schema(&p).is_err(), "{name} must fail schema check");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_snapshot_is_rejected_naming_file_and_position() {
+        let dir = std::env::temp_dir().join("pb_bench_truncated_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let full = snap(&row("er", "a", 1.0)).pretty();
+        let p = dir.join("truncated.json");
+        std::fs::write(&p, &full[..full.len() / 2]).unwrap();
+        let err = check_schema(&p).expect_err("truncated snapshot must be rejected");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("truncated.json"), "{msg}");
+        assert!(msg.contains("line "), "error should locate the failure: {msg}");
+        // `bench diff` against the same file carries the same context.
+        let good = dir.join("good.json");
+        std::fs::write(&good, &full).unwrap();
+        let argv: Vec<String> = [good.to_str().unwrap(), p.to_str().unwrap()]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let err = cmd_diff(&argv).expect_err("diff against a truncated file must fail");
+        assert!(format!("{err:#}").contains("truncated.json"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -44,9 +44,9 @@ impl Stat {
 
 fn run_count(g: &BipartiteGraph, stat: Stat, opts: &CountOpts) -> u64 {
     match stat {
-        Stat::Total => count_total(g, opts),
-        Stat::PerVertex => count_per_vertex(g, opts).bu.iter().sum::<u64>() / 2,
-        Stat::PerEdge => count_per_edge(g, opts).iter().sum::<u64>() / 4,
+        Stat::Total => count_total(g, opts).unwrap(),
+        Stat::PerVertex => count_per_vertex(g, opts).unwrap().bu.iter().sum::<u64>() / 2,
+        Stat::PerEdge => count_per_edge(g, opts).unwrap().iter().sum::<u64>() / 4,
     }
 }
 
@@ -142,13 +142,13 @@ pub fn counting_table_on(bench_name: &str, cache_opt: bool, suite: &[&str]) {
         println!("[{}] {}", wl.id, wl.describe);
 
         // --- total ---
-        let expect = count_total(g, &opts);
-        let m = bench(|| count_total(g, &opts));
+        let expect = count_total(g, &opts).unwrap();
+        let m = bench(|| count_total(g, &opts).unwrap());
         report(bench_name, wl.id, "total/PB-par", &m);
-        let m = bench(|| with_threads(1, || count_total(g, &opts)));
+        let m = bench(|| with_threads(1, || count_total(g, &opts).unwrap()));
         report(bench_name, wl.id, "total/PB-T1", &m);
-        assert_eq!(count_total(g, &iopts), expect, "intersect disagrees on {wl_id}");
-        let m = bench(|| count_total(g, &iopts));
+        assert_eq!(count_total(g, &iopts).unwrap(), expect, "intersect disagrees on {wl_id}");
+        let m = bench(|| count_total(g, &iopts).unwrap());
         report(bench_name, wl.id, "total/PB-intersect", &m);
         let m = bench_n(0, 1, || seq_count::sanei_mehri_total(g));
         report(bench_name, wl.id, "total/SaneiMehri-T1", &m);
@@ -174,21 +174,21 @@ pub fn counting_table_on(bench_name: &str, cache_opt: bool, suite: &[&str]) {
         assert_eq!(seq_count::sanei_mehri_total(g), expect);
 
         // --- per-vertex ---
-        let m = bench(|| count_per_vertex(g, &opts));
+        let m = bench(|| count_per_vertex(g, &opts).unwrap());
         report(bench_name, wl.id, "vertex/PB-par", &m);
-        let m = bench(|| with_threads(1, || count_per_vertex(g, &opts)));
+        let m = bench(|| with_threads(1, || count_per_vertex(g, &opts).unwrap()));
         report(bench_name, wl.id, "vertex/PB-T1", &m);
-        let m = bench(|| count_per_vertex(g, &iopts));
+        let m = bench(|| count_per_vertex(g, &iopts).unwrap());
         report(bench_name, wl.id, "vertex/PB-intersect", &m);
         let m = bench_n(0, 1, || seq_count::wang_vanilla(g));
         report(bench_name, wl.id, "vertex/Wang2014-T1", &m);
 
         // --- per-edge ---
-        let m = bench(|| count_per_edge(g, &opts));
+        let m = bench(|| count_per_edge(g, &opts).unwrap());
         report(bench_name, wl.id, "edge/PB-par", &m);
-        let m = bench(|| with_threads(1, || count_per_edge(g, &opts)));
+        let m = bench(|| with_threads(1, || count_per_edge(g, &opts).unwrap()));
         report(bench_name, wl.id, "edge/PB-T1", &m);
-        let m = bench(|| count_per_edge(g, &iopts));
+        let m = bench(|| count_per_edge(g, &iopts).unwrap());
         report(bench_name, wl.id, "edge/PB-intersect", &m);
     }
 }
@@ -251,7 +251,7 @@ pub fn rankings_figure_on(bench_name: &str, cache_opt: bool, suite: &[&str]) {
         let mut rows = Vec::new();
         for r in Ranking::ALL {
             let opts = CountOpts { ranking: r, cache_opt, ..Default::default() };
-            let m = bench(|| count_per_vertex(&wl.graph, &opts));
+            let m = bench(|| count_per_vertex(&wl.graph, &opts).unwrap());
             rows.push((r.name().to_string(), m));
         }
         report_normalized(bench_name, wl.id, &rows);
@@ -273,22 +273,22 @@ pub fn approx_figure_on(bench_name: &str, cache_opt: bool, wl_id: &str, ps: &[f6
     let wl = workloads::build(wl_id);
     let g = &wl.graph;
     let opts = CountOpts { cache_opt, ..Default::default() };
-    let exact = count_total(g, &opts) as f64;
+    let exact = count_total(g, &opts).unwrap() as f64;
     println!("exact = {exact}");
     for &p in ps {
         let mut est = 0.0;
         let m = bench(|| {
-            est = sparsify::approx_total_edge(g, p, 7, &opts);
+            est = sparsify::approx_total_edge(g, p, 7, &opts).unwrap();
             est
         });
         report(bench_name, wl.id, &format!("edge/p{p}"), &m);
         println!("    estimate {est:.0} (err {:+.1}%)", 100.0 * (est - exact) / exact);
-        let m1 = bench(|| with_threads(1, || sparsify::approx_total_edge(g, p, 7, &opts)));
+        let m1 = bench(|| with_threads(1, || sparsify::approx_total_edge(g, p, 7, &opts).unwrap()));
         report(bench_name, wl.id, &format!("edge/p{p}/t1"), &m1);
 
         let c = (1.0 / p).round() as u64;
         let m = bench(|| {
-            est = sparsify::approx_total_colorful(g, c, 7, &opts);
+            est = sparsify::approx_total_colorful(g, c, 7, &opts).unwrap();
             est
         });
         report(bench_name, wl.id, &format!("colorful/p{p}"), &m);
@@ -326,8 +326,8 @@ pub fn peel_figure_on(bench_name: &str, suite: &[&str]) {
     for &wl_id in suite {
         let wl = workloads::build(wl_id);
         let g = &wl.graph;
-        let vc = count_per_vertex(g, &CountOpts::default());
-        let be = count_per_edge(g, &CountOpts::default());
+        let vc = count_per_vertex(g, &CountOpts::default()).unwrap();
+        let be = count_per_edge(g, &CountOpts::default()).unwrap();
         println!("[{}] {}", wl.id, wl.describe);
         let mut vrows = Vec::new();
         let mut erows = Vec::new();
@@ -339,11 +339,11 @@ pub fn peel_figure_on(bench_name: &str, suite: &[&str]) {
                 side: PeelSide::Auto,
                 ..Default::default()
             };
-            let m = bench_n(0, 2, || peel_vertices(g, &vc.bu, &vc.bv, &vopts));
+            let m = bench_n(0, 2, || peel_vertices(g, &vc.bu, &vc.bv, &vopts).unwrap());
             vrows.push((format!("V/{label}"), m));
             let eopts =
                 PeelEOpts { engine, agg, buckets: BucketKind::Julienne, ..Default::default() };
-            let m = bench_n(0, 2, || peel_edges(g, &be, &eopts));
+            let m = bench_n(0, 2, || peel_edges(g, &be, &eopts).unwrap());
             erows.push((format!("E/{label}"), m));
         }
         report_normalized(bench_name, wl.id, &vrows);
@@ -367,8 +367,8 @@ pub fn peeling_table_on(bench_name: &str, suite: &[&str]) {
     for &wl_id in suite {
         let wl = workloads::build(wl_id);
         let g = &wl.graph;
-        let vc = count_per_vertex(g, &CountOpts::default());
-        let be = count_per_edge(g, &CountOpts::default());
+        let vc = count_per_vertex(g, &CountOpts::default()).unwrap();
+        let be = count_per_edge(g, &CountOpts::default()).unwrap();
         println!("[{}] {}", wl.id, wl.describe);
 
         // Baseline rows pin engine: Agg explicitly — the labels imply
@@ -377,22 +377,22 @@ pub fn peeling_table_on(bench_name: &str, suite: &[&str]) {
         let vopts = PeelVOpts { engine: PeelEngine::Agg, ..Default::default() };
         let mut rounds_v = 0usize;
         let m = bench_n(0, 2, || {
-            let r = peel_vertices(g, &vc.bu, &vc.bv, &vopts);
+            let r = peel_vertices(g, &vc.bu, &vc.bv, &vopts).unwrap();
             rounds_v = r.rounds;
             r
         });
         report(bench_name, wl.id, "tip/PB-par", &m);
-        let m = bench_n(0, 2, || with_threads(1, || peel_vertices(g, &vc.bu, &vc.bv, &vopts)));
+        let m = bench_n(0, 2, || with_threads(1, || peel_vertices(g, &vc.bu, &vc.bv, &vopts).unwrap()));
         report(bench_name, wl.id, "tip/PB-T1", &m);
         let isect = PeelVOpts { engine: PeelEngine::Intersect, ..Default::default() };
-        let m = bench_n(0, 2, || peel_vertices(g, &vc.bu, &vc.bv, &isect));
+        let m = bench_n(0, 2, || peel_vertices(g, &vc.bu, &vc.bv, &isect).unwrap());
         report(bench_name, wl.id, "tip/PB-intersect", &m);
         let fib = PeelVOpts {
             engine: PeelEngine::Agg,
             buckets: BucketKind::FibHeap,
             ..Default::default()
         };
-        let m = bench_n(0, 2, || peel_vertices(g, &vc.bu, &vc.bv, &fib));
+        let m = bench_n(0, 2, || peel_vertices(g, &vc.bu, &vc.bv, &fib).unwrap());
         report(bench_name, wl.id, "tip/PB-fibheap", &m);
         let store = WedgeStore::build(g, Ranking::Degree);
         let m = bench_n(0, 2, || {
@@ -419,15 +419,15 @@ pub fn peeling_table_on(bench_name: &str, suite: &[&str]) {
         let eopts = PeelEOpts { engine: PeelEngine::Agg, ..Default::default() };
         let mut rounds_e = 0usize;
         let m = bench_n(0, 2, || {
-            let r = peel_edges(g, &be, &eopts);
+            let r = peel_edges(g, &be, &eopts).unwrap();
             rounds_e = r.rounds;
             r
         });
         report(bench_name, wl.id, "wing/PB-par", &m);
-        let m = bench_n(0, 2, || with_threads(1, || peel_edges(g, &be, &eopts)));
+        let m = bench_n(0, 2, || with_threads(1, || peel_edges(g, &be, &eopts).unwrap()));
         report(bench_name, wl.id, "wing/PB-T1", &m);
         let isect = PeelEOpts { engine: PeelEngine::Intersect, ..Default::default() };
-        let m = bench_n(0, 2, || peel_edges(g, &be, &isect));
+        let m = bench_n(0, 2, || peel_edges(g, &be, &isect).unwrap());
         report(bench_name, wl.id, "wing/PB-intersect", &m);
         let m = bench_n(0, 1, || seq_peel::sp_wing_numbers(g, &be));
         report(bench_name, wl.id, "wing/SariyucePinar-T1", &m);
@@ -455,14 +455,14 @@ pub fn datasets_table_on(bench_name: &str, suite: &[&str]) {
     for &wl_id in suite {
         let wl = workloads::build(wl_id);
         let g = &wl.graph;
-        let total = count_total(g, &CountOpts::default());
+        let total = count_total(g, &CountOpts::default()).unwrap();
         // Peeling complexities only where the suite peels (mirrors the
         // paper's dashes for graphs whose baseline never finished).
         let (rv, re) = if PEELING_SUITE.contains(&wl_id) || wl_id == "women" {
-            let vc = count_per_vertex(g, &CountOpts::default());
-            let be = count_per_edge(g, &CountOpts::default());
-            let rv = peel_vertices(g, &vc.bu, &vc.bv, &PeelVOpts::default()).rounds;
-            let re = peel_edges(g, &be, &PeelEOpts::default()).rounds;
+            let vc = count_per_vertex(g, &CountOpts::default()).unwrap();
+            let be = count_per_edge(g, &CountOpts::default()).unwrap();
+            let rv = peel_vertices(g, &vc.bu, &vc.bv, &PeelVOpts::default()).unwrap().rounds;
+            let re = peel_edges(g, &be, &PeelEOpts::default()).unwrap().rounds;
             (rv.to_string(), re.to_string())
         } else {
             ("-".to_string(), "-".to_string())
@@ -513,10 +513,10 @@ pub fn dense_core_bench_sized(bench_name: &str, quick: bool) {
         tiles.push(("k-128x128", gen::complete_bipartite(128, 128)));
     }
     for (label, g) in tiles {
-        let expect = count_total(&g, &CountOpts::default());
+        let expect = count_total(&g, &CountOpts::default()).unwrap();
         let m = bench(|| crate::count::dense::count_total_dense(&g, backend.as_ref()).unwrap());
         report(bench_name, label, &format!("dense-{}", backend.name()), &m);
-        let m = bench(|| count_total(&g, &CountOpts::default()));
+        let m = bench(|| count_total(&g, &CountOpts::default()).unwrap());
         report(bench_name, label, "cpu-framework", &m);
         let got = crate::count::dense::count_total_dense(&g, backend.as_ref()).unwrap();
         assert_eq!(got, expect, "{label}");
@@ -526,7 +526,7 @@ pub fn dense_core_bench_sized(bench_name: &str, quick: bool) {
     }
     // Hybrid on a larger skewed graph.
     let g = gen::chung_lu(2_000, 3_000, 60_000, 2.05, 25);
-    let expect = count_total(&g, &CountOpts::default());
+    let expect = count_total(&g, &CountOpts::default()).unwrap();
     let m = bench(|| {
         crate::count::dense::count_total_hybrid(
             &g,
@@ -538,7 +538,7 @@ pub fn dense_core_bench_sized(bench_name: &str, quick: bool) {
         .unwrap()
     });
     report(bench_name, "cl-2kx3k", "hybrid-256core", &m);
-    let m = bench(|| count_total(&g, &CountOpts::default()));
+    let m = bench(|| count_total(&g, &CountOpts::default()).unwrap());
     report(bench_name, "cl-2kx3k", "cpu-framework", &m);
     let got = crate::count::dense::count_total_hybrid(
         &g,

@@ -82,7 +82,7 @@ impl Json {
         let v = p.value()?;
         p.skip_ws();
         if p.pos != p.bytes.len() {
-            anyhow::bail!("trailing characters at byte {}", p.pos);
+            anyhow::bail!("trailing characters at {}", p.locate(p.pos));
         }
         Ok(v)
     }
@@ -210,6 +210,16 @@ struct Parser<'a> {
 }
 
 impl<'a> Parser<'a> {
+    /// Human position of `pos` (1-based line / column) for parse
+    /// errors on hand-edited or truncated snapshot files — "byte 913"
+    /// alone is useless in a 200-line pretty-printed file.
+    fn locate(&self, pos: usize) -> String {
+        let upto = pos.min(self.bytes.len());
+        let line = 1 + self.bytes[..upto].iter().filter(|&&b| b == b'\n').count();
+        let col = 1 + upto - self.bytes[..upto].iter().rposition(|&b| b == b'\n').map_or(0, |i| i + 1);
+        format!("line {line} col {col} (byte {pos})")
+    }
+
     fn skip_ws(&mut self) {
         while let Some(b) = self.bytes.get(self.pos) {
             match b {
@@ -229,9 +239,9 @@ impl<'a> Parser<'a> {
             Ok(())
         } else {
             anyhow::bail!(
-                "expected {:?} at byte {} (found {:?})",
+                "expected {:?} at {} (found {:?})",
                 b as char,
-                self.pos,
+                self.locate(self.pos),
                 self.peek().map(|c| c as char)
             )
         }
@@ -242,7 +252,7 @@ impl<'a> Parser<'a> {
             self.pos += word.len();
             Ok(v)
         } else {
-            anyhow::bail!("invalid literal at byte {}", self.pos)
+            anyhow::bail!("invalid literal at {}", self.locate(self.pos))
         }
     }
 
@@ -255,7 +265,9 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.literal("false", Json::Bool(false)),
             Some(b'n') => self.literal("null", Json::Null),
             Some(b'-' | b'0'..=b'9') => self.number(),
-            other => anyhow::bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
+            other => {
+                anyhow::bail!("unexpected {:?} at {}", other.map(|c| c as char), self.locate(self.pos))
+            }
         }
     }
 
@@ -282,7 +294,7 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                     return Ok(Json::Obj(fields));
                 }
-                _ => anyhow::bail!("expected ',' or '}}' at byte {}", self.pos),
+                _ => anyhow::bail!("expected ',' or '}}' at {}", self.locate(self.pos)),
             }
         }
     }
@@ -305,7 +317,7 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                     return Ok(Json::Arr(items));
                 }
-                _ => anyhow::bail!("expected ',' or ']' at byte {}", self.pos),
+                _ => anyhow::bail!("expected ',' or ']' at {}", self.locate(self.pos)),
             }
         }
     }
@@ -315,7 +327,7 @@ impl<'a> Parser<'a> {
         let mut s = String::new();
         loop {
             match self.peek() {
-                None => anyhow::bail!("unterminated string at byte {}", self.pos),
+                None => anyhow::bail!("unterminated string at {}", self.locate(self.pos)),
                 Some(b'"') => {
                     self.pos += 1;
                     return Ok(s);
@@ -347,9 +359,9 @@ impl<'a> Parser<'a> {
                             continue; // hex4 already advanced
                         }
                         other => anyhow::bail!(
-                            "invalid escape {:?} at byte {}",
+                            "invalid escape {:?} at {}",
                             other.map(|c| c as char),
-                            self.pos
+                            self.locate(self.pos)
                         ),
                     }
                     self.pos += 1;
@@ -359,7 +371,11 @@ impl<'a> Parser<'a> {
                     // byte boundaries are valid).
                     let rest = &self.bytes[self.pos..];
                     let text = std::str::from_utf8(rest).map_err(|e| anyhow::anyhow!("{e}"))?;
-                    let c = text.chars().next().unwrap();
+                    let c = match text.chars().next() {
+                        Some(c) => c,
+                        // peek() returned a byte, so the tail is nonempty
+                        None => unreachable!("nonempty remainder has a first char"),
+                    };
                     s.push(c);
                     self.pos += c.len_utf8();
                 }
@@ -370,11 +386,11 @@ impl<'a> Parser<'a> {
     fn hex4(&mut self) -> anyhow::Result<u32> {
         let end = self.pos + 4;
         if end > self.bytes.len() {
-            anyhow::bail!("truncated \\u escape at byte {}", self.pos);
+            anyhow::bail!("truncated \\u escape at {}", self.locate(self.pos));
         }
         let hex = std::str::from_utf8(&self.bytes[self.pos..end])?;
         let v = u32::from_str_radix(hex, 16)
-            .map_err(|_| anyhow::anyhow!("bad \\u escape {hex:?} at byte {}", self.pos))?;
+            .map_err(|_| anyhow::anyhow!("bad \\u escape {hex:?} at {}", self.locate(self.pos)))?;
         self.pos = end;
         Ok(v)
     }
@@ -390,7 +406,7 @@ impl<'a> Parser<'a> {
         let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
         let n: f64 = text
             .parse()
-            .map_err(|_| anyhow::anyhow!("bad number {text:?} at byte {start}"))?;
+            .map_err(|_| anyhow::anyhow!("bad number {text:?} at {}", self.locate(start)))?;
         Ok(Json::Num(n))
     }
 }
@@ -417,6 +433,20 @@ mod tests {
         assert!(Json::parse("[1, 2").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("'single'").is_err());
+    }
+
+    #[test]
+    fn parse_errors_locate_line_and_column() {
+        // Error on line 3 of a pretty-printed document.
+        let e = Json::parse("{\n  \"rows\": [1,\n  }").unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("line 3"), "{msg}");
+        // Truncation mid-array reports where the text ran out.
+        let e = Json::parse("{\"rows\": [1, 2").unwrap_err();
+        assert!(format!("{e:#}").contains("line 1 col 15"), "{e:#}");
+        // Truncation mid-string.
+        let e = Json::parse("{\"work").unwrap_err();
+        assert!(format!("{e:#}").contains("unterminated string"), "{e:#}");
     }
 
     #[test]

@@ -33,9 +33,9 @@ fn round3(v: f64) -> Json {
 
 fn run_stat(g: &BipartiteGraph, stat: &str, opts: &CountOpts) -> u64 {
     match stat {
-        "total" => count_total(g, opts),
-        "vertex" => count_per_vertex(g, opts).bu.iter().sum::<u64>() / 2,
-        _ => count_per_edge(g, opts).iter().sum::<u64>() / 4,
+        "total" => count_total(g, opts).unwrap(),
+        "vertex" => count_per_vertex(g, opts).unwrap().bu.iter().sum::<u64>() / 2,
+        _ => count_per_edge(g, opts).unwrap().iter().sum::<u64>() / 4,
     }
 }
 
@@ -220,8 +220,8 @@ pub fn peel_intersect_vs_agg(profile: Profile) -> SnapshotMeta {
     for &wl_id in suite {
         let wl = workloads::build(wl_id);
         let g = &wl.graph;
-        let vc = count_per_vertex(g, &CountOpts::default());
-        let be = count_per_edge(g, &CountOpts::default());
+        let vc = count_per_vertex(g, &CountOpts::default()).unwrap();
+        let be = count_per_edge(g, &CountOpts::default()).unwrap();
         println!("[{}] {}", wl.id, wl.describe);
         for mode in ["tip", "wing"] {
             let mut expected: Option<Vec<u64>> = None;
@@ -241,7 +241,7 @@ pub fn peel_intersect_vs_agg(profile: Profile) -> SnapshotMeta {
                             side: PeelSide::Auto,
                             ..Default::default()
                         };
-                        let r = peel_vertices(g, &vc.bu, &vc.bv, &vopts);
+                        let r = peel_vertices(g, &vc.bu, &vc.bv, &vopts).unwrap();
                         rounds = r.rounds;
                         result = r.tips;
                     } else {
@@ -251,7 +251,7 @@ pub fn peel_intersect_vs_agg(profile: Profile) -> SnapshotMeta {
                             buckets: BucketKind::Julienne,
                             ..Default::default()
                         };
-                        let r = peel_edges(g, &be, &eopts);
+                        let r = peel_edges(g, &be, &eopts).unwrap();
                         rounds = r.rounds;
                         result = r.wings;
                     }
@@ -392,13 +392,14 @@ fn replay(
     batch: usize,
     rebuild_fraction: f64,
 ) -> u64 {
-    let mut dg = DynGraph::new(base.clone(), DynOpts { rebuild_fraction, ..Default::default() });
+    let mut dg =
+        DynGraph::new(base.clone(), DynOpts { rebuild_fraction, ..Default::default() }).unwrap();
     for chunk in updates.chunks(batch) {
-        dg.insert_edges(chunk);
+        dg.insert_edges(chunk).unwrap();
     }
     let total_at_peak = dg.total();
     for chunk in updates.chunks(batch) {
-        dg.delete_edges(chunk);
+        dg.delete_edges(chunk).unwrap();
     }
     assert_eq!(dg.graph().m(), base.m(), "stream returns to the base graph");
     total_at_peak

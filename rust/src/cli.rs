@@ -6,17 +6,24 @@
 //! parbutterfly count  --graph FILE [--mode total|vertex|edge] [--rank R] [--agg A]
 //!                     [--engine wedges|intersect] [--layout auto|flat|hub]
 //!                     [--cache-opt] [--auto-rank] [--threads T]
+//!                     [--timeout-ms MS] [--memory-budget BYTES]
 //! parbutterfly peel   --graph FILE [--mode vertex|edge] [--engine agg|intersect|two-phase]
 //!                     [--count-engine wedges|intersect] [--agg A]
 //!                     [--buckets julienne|fibheap] [--layout auto|flat|hub] [--threads T]
+//!                     [--timeout-ms MS] [--memory-budget BYTES]
 //! parbutterfly approx --graph FILE --method edge|colorful --p P [--seed S]
 //! parbutterfly dynamic --stream FILE [--graph FILE] [--batch N] [--rebuild-fraction F]
 //!                     [--engine wedges|intersect] [--rank R] [--layout auto|flat|hub]
-//!                     [--threads T] [--verify] [--per-batch]
+//!                     [--threads T] [--verify] [--per-batch] [--skip-bad-lines]
+//!                     [--timeout-ms MS] [--memory-budget BYTES]
 //! parbutterfly dense  --graph FILE [--backend auto|rust|pjrt]  # dense-core path
 //! parbutterfly backends                       # dense backend availability
 //! parbutterfly artifacts                      # list PJRT artifacts (feature pjrt)
 //! ```
+//!
+//! Exit codes: `0` success, `2` error, `4` cooperative-budget
+//! exhaustion (`--timeout-ms` / `--memory-budget` / cancellation
+//! tripped before the computation finished).
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -137,7 +144,29 @@ fn count_opts_base(args: &Args) -> anyhow::Result<CountOpts> {
         cache_opt: args.has("cache-opt"),
         max_wedges: args.get_usize("max-wedges", 1 << 26)?,
         layout,
+        budget: budget_arg(args)?,
     })
+}
+
+/// Cooperative budget from `--timeout-ms` / `--memory-budget` (bytes).
+/// The engines check it at chunk granularity; exhaustion surfaces as a
+/// structured error mapped to process exit code 4, never as a partial
+/// result.
+fn budget_arg(args: &Args) -> anyhow::Result<crate::prims::budget::Budget> {
+    let mut budget = crate::prims::budget::Budget::default();
+    if let Some(s) = args.get("timeout-ms") {
+        let ms: u64 = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --timeout-ms {s:?} (need milliseconds)"))?;
+        budget = budget.with_timeout_ms(ms);
+    }
+    if let Some(s) = args.get("memory-budget") {
+        let bytes: usize = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --memory-budget {s:?} (need bytes)"))?;
+        budget = budget.with_max_live_bytes(bytes);
+    }
+    Ok(budget)
 }
 
 fn count_opts(args: &Args) -> anyhow::Result<CountOpts> {
@@ -169,7 +198,15 @@ pub fn run() -> i32 {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e:#}");
-            2
+            // Budget exhaustion gets its own exit code so harnesses can
+            // tell "ran out of time/memory" from "wrong".
+            let budget =
+                e.downcast_ref::<crate::error::Error>().map(|c| c.is_budget()).unwrap_or(false);
+            if budget {
+                4
+            } else {
+                2
+            }
         }
     }
 }
@@ -200,6 +237,9 @@ fn run_inner(argv: &[String]) -> anyhow::Result<()> {
 const HELP: &str = "parbutterfly — parallel butterfly computations (Shi & Shun 2019)
 commands: gen, info, count, peel, approx, dynamic, dense, backends, artifacts,
           bench (run | diff | list — the native benchmark harness)
+shared:   --timeout-ms MS / --memory-budget BYTES set a cooperative budget
+          (exit code 4 when exhausted); dynamic takes --skip-bad-lines to
+          record malformed stream lines instead of aborting
 run `parbutterfly <cmd> --help-flags` or see rust/src/cli.rs for flags";
 
 fn cmd_gen(args: &Args) -> anyhow::Result<()> {
@@ -227,7 +267,7 @@ fn cmd_gen(args: &Args) -> anyhow::Result<()> {
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
     let g = load(args)?;
     let cfg = CountConfig::default();
-    let r = count_report(&g, CountMode::Total, &cfg);
+    let r = count_report(&g, CountMode::Total, &cfg)?;
     println!("|U| = {}", g.nu());
     println!("|V| = {}", g.nv());
     println!("|E| = {}", g.m());
@@ -257,7 +297,7 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
         let t_load = std::time::Instant::now();
         let g = load(args)?;
         let load_ms = t_load.elapsed().as_secs_f64() * 1e3;
-        Ok((load_ms, count_report(&g, mode, &cfg)))
+        Ok((load_ms, count_report(&g, mode, &cfg)?))
     })??;
     println!(
         "total = {} (ranking {}, engine {}, {} wedges, {:.2} ms, backend {})",
@@ -330,7 +370,7 @@ fn cmd_peel(args: &Args) -> anyhow::Result<()> {
     };
     match args.get("mode").unwrap_or("vertex") {
         "edge" => {
-            let (w, ms) = with_threads_arg(args, || wing_report(&g, &cfg))?;
+            let (w, ms) = with_threads_arg(args, || wing_report(&g, &cfg))??;
             let max = w.wings.iter().max().copied().unwrap_or(0);
             println!(
                 "wing decomposition ({} engine): {} rounds, max wing {}, {:.2} ms",
@@ -341,7 +381,7 @@ fn cmd_peel(args: &Args) -> anyhow::Result<()> {
             );
         }
         "vertex" => {
-            let (t, ms) = with_threads_arg(args, || tip_report(&g, &cfg))?;
+            let (t, ms) = with_threads_arg(args, || tip_report(&g, &cfg))??;
             let max = t.tips.iter().max().copied().unwrap_or(0);
             println!(
                 "tip decomposition ({} side, {} engine): {} rounds, max tip {}, {:.2} ms",
@@ -366,9 +406,9 @@ fn cmd_approx(args: &Args) -> anyhow::Result<()> {
     let est = match args.get("method").unwrap_or("edge") {
         "colorful" => {
             let c = (1.0 / p).round().max(1.0) as u64;
-            sparsify::approx_total_colorful(&g, c, seed, &opts)
+            sparsify::approx_total_colorful(&g, c, seed, &opts)?
         }
-        "edge" => sparsify::approx_total_edge(&g, p, seed, &opts),
+        "edge" => sparsify::approx_total_edge(&g, p, seed, &opts)?,
         other => anyhow::bail!("unknown --method {other:?} (valid: edge|colorful)"),
     };
     println!("estimated butterflies = {est:.1}");
@@ -379,7 +419,14 @@ fn cmd_dynamic(args: &Args) -> anyhow::Result<()> {
     let spath = args
         .get("stream")
         .ok_or_else(|| anyhow::anyhow!("--stream FILE required (lines: `[ts] op u v`)"))?;
-    let events = stream::parse_stream(Path::new(spath))?;
+    // Strict parsing is the default; `--skip-bad-lines` switches to the
+    // recover-and-continue mode that records line-numbered rejects in
+    // the report instead of aborting on the first malformed line.
+    let (events, rejects) = if args.has("skip-bad-lines") {
+        stream::parse_stream_lenient(Path::new(spath))?
+    } else {
+        (stream::parse_stream(Path::new(spath))?, Vec::new())
+    };
     // Batches split on timestamp/op changes; the cap bounds one batch
     // (0 = unbounded).
     let batches = stream::group_batches(&events, args.get_usize("batch", 1024)?);
@@ -401,7 +448,9 @@ fn cmd_dynamic(args: &Args) -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("bad --rebuild-fraction {f:?} (need a float >= 0)"))?;
     }
     let verify = args.has("verify");
-    let (dg, rep) = with_threads_arg(args, || replay_stream(g0, &batches, &dopts, verify))?;
+    let (dg, mut rep) =
+        with_threads_arg(args, || replay_stream(g0, &batches, &dopts, verify))??;
+    rep.parse_rejects = rejects;
     if args.has("per-batch") {
         for (i, o) in rep.outcomes.iter().enumerate() {
             println!(
@@ -417,6 +466,21 @@ fn cmd_dynamic(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
+    if !rep.parse_rejects.is_empty() {
+        println!("skipped {} malformed stream line(s):", rep.parse_rejects.len());
+        for r in &rep.parse_rejects {
+            println!("  line {}: {:?} ({})", r.line, r.content, r.reason);
+        }
+    }
+    for be in &rep.errors {
+        println!(
+            "batch {} ({}) failed: {} [{}]",
+            be.batch,
+            be.kind.name(),
+            be.error,
+            if be.recovered { "recovered on retry" } else { "skipped" }
+        );
+    }
     println!(
         "replayed {} events in {} batches: {} inserted, {} deleted, {} no-ops",
         events.len(),
@@ -428,13 +492,14 @@ fn cmd_dynamic(args: &Args) -> anyhow::Result<()> {
     let g = dg.graph();
     println!(
         "graph now {} x {}, {} edges; butterflies = {} ({} delta batches, {} recounts, \
-         {:.2} ms total)",
+         {} fallback recounts, {:.2} ms total)",
         g.nu(),
         g.nv(),
         g.m(),
         rep.total,
         rep.delta_batches,
         rep.recount_batches,
+        rep.fallback_batches,
         rep.millis
     );
     if let Some(ok) = rep.verified {
@@ -458,7 +523,7 @@ fn cmd_dense(args: &Args) -> anyhow::Result<()> {
         None => Coordinator::with_default_backend(),
     };
     anyhow::ensure!(coord.has_backend(), "no dense backend available (PARBUTTERFLY_BACKEND=none?)");
-    let r = coord.count_total_routed(&g, &CountConfig::default());
+    let r = coord.count_total_routed(&g, &CountConfig::default())?;
     println!("total = {} via {} backend ({:.2} ms)", r.total, r.backend, r.millis);
     Ok(())
 }
@@ -525,7 +590,7 @@ mod tests {
             .map(|s| s.to_string())
             .collect();
         let a = Args::parse(&argv);
-        assert_eq!(a.get_usize("nu", 0), 5);
+        assert_eq!(a.get_usize("nu", 0).unwrap(), 5);
         assert!(a.has("cache-opt"));
         assert_eq!(a.get("out"), Some("x.txt"));
         assert!(!a.has("missing"));
@@ -603,6 +668,8 @@ mod tests {
             (vec!["approx", "--graph", graph, "--seed", "x"], "--seed"),
             (vec!["gen", "--kind", "er", "--m", "10k", "--out", "/dev/null"], "--m"),
             (vec!["gen", "--kind", "grid", "--out", "/dev/null"], "--kind"),
+            (vec!["count", "--graph", graph, "--timeout-ms", "5s"], "--timeout-ms"),
+            (vec!["count", "--graph", graph, "--memory-budget", "1GB"], "--memory-budget"),
         ];
         for (argv, flag) in cases {
             let argv: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
@@ -618,6 +685,30 @@ mod tests {
                 .map(|s| s.to_string())
                 .collect();
         run_inner(&argv).unwrap();
+        // Generous budgets parse and complete normally.
+        let argv: Vec<String> = ["count", "--graph", graph, "--timeout-ms", "600000",
+             "--memory-budget", "4000000000"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        run_inner(&argv).unwrap();
+    }
+
+    #[test]
+    fn dynamic_skip_bad_lines_records_and_continues() {
+        let dir = std::env::temp_dir().join("pb_cli_skipbad_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let spath = dir.join("s.txt");
+        std::fs::write(&spath, "+ 0 0\nnot a line\n+ 1 1\n+ 0 1\n+ 1 0\n").unwrap();
+        let strict: Vec<String> = ["dynamic", "--stream", spath.to_str().unwrap()]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(run_inner(&strict).is_err(), "strict mode still rejects bad lines");
+        let mut lenient = strict.clone();
+        lenient.push("--skip-bad-lines".to_string());
+        lenient.push("--verify".to_string());
+        run_inner(&lenient).unwrap();
     }
 
     #[test]

@@ -8,11 +8,17 @@
 //! which drives a [`DynGraph`] batch by batch and summarizes the
 //! replay in a [`DynReport`] (the dynamic sibling of [`CountReport`]).
 
+// Runtime-critical modules must not abort through unchecked unwraps:
+// failures either unwind as structured panics the pool catches or are
+// returned as `error::Result`.  Test code is exempt.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 use std::time::Instant;
 
 use crate::count::{
     self, count_per_edge, count_per_vertex, CountOpts, VertexCounts,
 };
+use crate::dynamic::stream::ParseReject;
+use crate::error::{Error, Result};
 use crate::dynamic::stream::Batch;
 use crate::dynamic::{BatchKind, BatchOutcome, DynGraph, DynOpts};
 use crate::graph::BipartiteGraph;
@@ -82,33 +88,39 @@ fn resolve_ranking(g: &BipartiteGraph, cfg: &CountConfig) -> Ranking {
     }
 }
 
-/// Count butterflies under `cfg` (CPU framework path).
-pub fn count_report(g: &BipartiteGraph, mode: CountMode, cfg: &CountConfig) -> CountReport {
+/// Count butterflies under `cfg` (CPU framework path).  Runs under
+/// `cfg.opts.budget`; a worker panic, injected fault, or budget trip
+/// surfaces as a structured [`Err`](crate::Error).
+pub fn count_report(
+    g: &BipartiteGraph,
+    mode: CountMode,
+    cfg: &CountConfig,
+) -> Result<CountReport> {
     let ranking = resolve_ranking(g, cfg);
     let opts = CountOpts { ranking, ..cfg.opts.clone() };
     let (rg, preprocess) = crate::rank::preprocess_timed(g, ranking);
     let wedges = rg.wedges_processed();
     let start = Instant::now();
     let (total, per_vertex, per_edge) = match mode {
-        CountMode::Total => (count::count_total_ranked(&rg, &opts), None, None),
+        CountMode::Total => (count::count_total_ranked(&rg, &opts)?, None, None),
         CountMode::PerVertex => {
-            let vc = count_per_vertex(g, &opts);
+            let vc = count_per_vertex(g, &opts)?;
             let t = vc.bu.iter().sum::<u64>() / 2;
             (t, Some(vc), None)
         }
         CountMode::PerEdge => {
-            let be = count_per_edge(g, &opts);
+            let be = count_per_edge(g, &opts)?;
             let t = be.iter().sum::<u64>() / 4;
             (t, None, Some(be))
         }
         CountMode::Full => {
-            let vc = count_per_vertex(g, &opts);
-            let be = count_per_edge(g, &opts);
+            let vc = count_per_vertex(g, &opts)?;
+            let be = count_per_edge(g, &opts)?;
             let t = vc.bu.iter().sum::<u64>() / 2;
             (t, Some(vc), Some(be))
         }
     };
-    CountReport {
+    Ok(CountReport {
         total,
         per_vertex,
         per_edge,
@@ -118,30 +130,38 @@ pub fn count_report(g: &BipartiteGraph, mode: CountMode, cfg: &CountConfig) -> C
         preprocess,
         backend: "cpu",
         engine: opts.engine.name(),
-    }
+    })
 }
 
 /// Shorthand: total count with the default pipeline.
-pub fn count_butterflies(g: &BipartiteGraph, cfg: &CountConfig) -> CountReport {
+pub fn count_butterflies(g: &BipartiteGraph, cfg: &CountConfig) -> Result<CountReport> {
     count_report(g, CountMode::Total, cfg)
 }
 
-/// Tip decomposition under `cfg`.
-pub fn tip_report(g: &BipartiteGraph, cfg: &PeelConfig) -> (TipResult, f64) {
-    let counts = count_report(g, CountMode::PerVertex, &cfg.count);
-    let vc = counts.per_vertex.unwrap();
+/// Tip decomposition under `cfg`.  Counting runs under
+/// `cfg.count.opts.budget`, peeling under `cfg.vopts.budget`.
+pub fn tip_report(g: &BipartiteGraph, cfg: &PeelConfig) -> Result<(TipResult, f64)> {
+    let counts = count_report(g, CountMode::PerVertex, &cfg.count)?;
+    let vc = match counts.per_vertex {
+        Some(vc) => vc,
+        None => unreachable!("PerVertex report always carries counts"),
+    };
     let start = Instant::now();
-    let r = peel::peel_vertices(g, &vc.bu, &vc.bv, &cfg.vopts);
-    (r, start.elapsed().as_secs_f64() * 1e3)
+    let r = peel::peel_vertices(g, &vc.bu, &vc.bv, &cfg.vopts)?;
+    Ok((r, start.elapsed().as_secs_f64() * 1e3))
 }
 
-/// Wing decomposition under `cfg`.
-pub fn wing_report(g: &BipartiteGraph, cfg: &PeelConfig) -> (WingResult, f64) {
-    let counts = count_report(g, CountMode::PerEdge, &cfg.count);
-    let be = counts.per_edge.unwrap();
+/// Wing decomposition under `cfg`.  Budgets compose as in
+/// [`tip_report`].
+pub fn wing_report(g: &BipartiteGraph, cfg: &PeelConfig) -> Result<(WingResult, f64)> {
+    let counts = count_report(g, CountMode::PerEdge, &cfg.count)?;
+    let be = match counts.per_edge {
+        Some(be) => be,
+        None => unreachable!("PerEdge report always carries counts"),
+    };
     let start = Instant::now();
-    let r = peel::peel_edges(g, &be, &cfg.eopts);
-    (r, start.elapsed().as_secs_f64() * 1e3)
+    let r = peel::peel_edges(g, &be, &cfg.eopts)?;
+    Ok((r, start.elapsed().as_secs_f64() * 1e3))
 }
 
 /// Outcome of replaying an update stream through [`DynGraph`] — the
@@ -163,24 +183,54 @@ pub struct DynReport {
     pub total: u64,
     /// Wall-clock milliseconds across all batch applications.
     pub millis: f64,
-    /// Per-batch outcomes, in replay order.
+    /// Batches whose delta walk failed and were recovered by the
+    /// graceful-degradation recount inside [`DynGraph`].
+    pub fallback_batches: usize,
+    /// Per-batch outcomes, in replay order (failed-and-skipped batches
+    /// have no outcome — see `errors`).
     pub outcomes: Vec<BatchOutcome>,
+    /// Per-batch failures, in replay order.  `recovered` batches were
+    /// retried successfully (after a rebuild when the failure had
+    /// poisoned the graph); unrecovered ones were skipped.
+    pub errors: Vec<BatchError>,
+    /// Malformed stream lines skipped by the lenient parser
+    /// ([`crate::dynamic::stream::parse_stream_lenient`]); empty under
+    /// strict parsing.  Filled in by the replay driver.
+    pub parse_rejects: Vec<ParseReject>,
     /// `Some(ok)` when verification against a full static recount of
     /// the final graph was requested.
     pub verified: Option<bool>,
+}
+
+/// One failed batch application inside [`replay_stream`].
+#[derive(Clone, Debug)]
+pub struct BatchError {
+    /// Index into the replayed batch sequence.
+    pub batch: usize,
+    pub kind: BatchKind,
+    /// The first failure the batch hit.
+    pub error: Error,
+    /// True when the one-shot retry (with rebuild if needed) applied
+    /// the batch after all; false when the batch was skipped.
+    pub recovered: bool,
 }
 
 /// Replay grouped update batches over `g`, maintaining exact counts
 /// incrementally; with `verify`, the final counts (all three
 /// granularities) are checked against a full static recount through
 /// the same engine.
+/// Failed batches are retried once (rebuilding the graph first when
+/// the failure poisoned it); a batch whose retry also fails is
+/// recorded in [`DynReport::errors`] and **skipped** rather than
+/// aborting the replay.  Only an unrecoverable graph — a rebuild that
+/// itself fails — aborts with `Err`.
 pub fn replay_stream(
     g: BipartiteGraph,
     batches: &[Batch],
     opts: &DynOpts,
     verify: bool,
-) -> (DynGraph, DynReport) {
-    let mut dg = DynGraph::new(g, opts.clone());
+) -> Result<(DynGraph, DynReport)> {
+    let mut dg = DynGraph::new(g, opts.clone())?;
     let mut rep = DynReport {
         batches: batches.len(),
         inserted: 0,
@@ -188,15 +238,54 @@ pub fn replay_stream(
         skipped: 0,
         delta_batches: 0,
         recount_batches: 0,
+        fallback_batches: 0,
         total: dg.total(),
         millis: 0.0,
         outcomes: Vec::with_capacity(batches.len()),
+        errors: Vec::new(),
+        parse_rejects: Vec::new(),
         verified: None,
     };
-    for b in batches {
-        let out = match b.kind {
-            BatchKind::Insert => dg.insert_edges(&b.edges),
-            BatchKind::Delete => dg.delete_edges(&b.edges),
+    for (i, b) in batches.iter().enumerate() {
+        fn apply(dg: &mut DynGraph, b: &Batch) -> Result<BatchOutcome> {
+            match b.kind {
+                BatchKind::Insert => dg.insert_edges(&b.edges),
+                BatchKind::Delete => dg.delete_edges(&b.edges),
+            }
+        }
+        let out = match apply(&mut dg, b) {
+            Ok(out) => out,
+            Err(first) => {
+                // Retry once; a poisoning failure needs a rebuild
+                // first.  A rebuild that fails leaves no usable graph
+                // to continue on — that is the one aborting case.
+                if dg.poisoned().is_some() {
+                    dg.rebuild()?;
+                }
+                match apply(&mut dg, b) {
+                    Ok(out) => {
+                        rep.errors.push(BatchError {
+                            batch: i,
+                            kind: b.kind,
+                            error: first,
+                            recovered: true,
+                        });
+                        out
+                    }
+                    Err(_second) => {
+                        rep.errors.push(BatchError {
+                            batch: i,
+                            kind: b.kind,
+                            error: first,
+                            recovered: false,
+                        });
+                        if dg.poisoned().is_some() {
+                            dg.rebuild()?;
+                        }
+                        continue; // batch skipped
+                    }
+                }
+            }
         };
         match b.kind {
             BatchKind::Insert => rep.inserted += out.applied,
@@ -211,18 +300,19 @@ pub fn replay_stream(
     // [`DynGraph`]'s accounting.
     rep.delta_batches = dg.delta_batches();
     rep.recount_batches = dg.recount_batches();
+    rep.fallback_batches = dg.fallback_batches();
     rep.total = dg.total();
     if verify {
         let opts = &opts.count;
-        let vc = count_per_vertex(dg.graph(), opts);
-        let pe = count_per_edge(dg.graph(), opts);
+        let vc = count_per_vertex(dg.graph(), opts)?;
+        let pe = count_per_edge(dg.graph(), opts)?;
         let ok = dg.total() == vc.bu.iter().sum::<u64>() / 2
             && dg.per_vertex_u() == &vc.bu[..]
             && dg.per_vertex_v() == &vc.bv[..]
             && dg.per_edge() == &pe[..];
         rep.verified = Some(ok);
     }
-    (dg, rep)
+    Ok((dg, rep))
 }
 
 /// Default routing cap for [`Coordinator::count_total_routed`]: the
@@ -273,14 +363,18 @@ impl Coordinator {
 
     /// Route a total count: dense backend when the graph fits a tile,
     /// CPU framework otherwise (including on dense-path errors).
-    pub fn count_total_routed(&self, g: &BipartiteGraph, cfg: &CountConfig) -> CountReport {
+    pub fn count_total_routed(
+        &self,
+        g: &BipartiteGraph,
+        cfg: &CountConfig,
+    ) -> Result<CountReport> {
         if let Some(backend) = &self.backend {
             if g.nu().max(g.nv()) <= self.dense_limit {
                 if let Some((pu, pv)) = backend.plan(g.nu(), g.nv()) {
                     let start = Instant::now();
                     let a = g.to_dense_f32(pu, pv);
                     if let Ok(t) = backend.count_total(pu, pv, &a) {
-                        return CountReport {
+                        return Ok(CountReport {
                             total: t.round() as u64,
                             per_vertex: None,
                             per_edge: None,
@@ -290,7 +384,7 @@ impl Coordinator {
                             preprocess: PreprocessTiming::default(),
                             backend: backend.name(),
                             engine: "dense",
-                        };
+                        });
                     }
                 }
             }
@@ -311,7 +405,7 @@ mod tests {
         let expect = brute::total(&g);
         let cfg = CountConfig::default();
         for mode in [CountMode::Total, CountMode::PerVertex, CountMode::PerEdge, CountMode::Full] {
-            let r = count_report(&g, mode, &cfg);
+            let r = count_report(&g, mode, &cfg).unwrap();
             assert_eq!(r.total, expect, "{mode:?}");
         }
     }
@@ -325,7 +419,7 @@ mod tests {
             auto_rank: false,
         };
         for mode in [CountMode::Total, CountMode::PerVertex, CountMode::PerEdge, CountMode::Full] {
-            let r = count_report(&g, mode, &cfg);
+            let r = count_report(&g, mode, &cfg).unwrap();
             assert_eq!(r.total, expect, "{mode:?}");
             assert_eq!(r.engine, "intersect");
         }
@@ -335,7 +429,7 @@ mod tests {
     fn auto_rank_resolves() {
         let g = gen::chung_lu(200, 300, 3000, 2.05, 7);
         let cfg = CountConfig { auto_rank: true, ..Default::default() };
-        let r = count_butterflies(&g, &cfg);
+        let r = count_butterflies(&g, &cfg).unwrap();
         assert_eq!(r.total, brute::total(&g));
         assert_eq!(r.ranking, crate::rank::choose_ranking(&g));
     }
@@ -344,7 +438,7 @@ mod tests {
     fn cpu_only_coordinator_routes_to_cpu() {
         let g = gen::erdos_renyi(15, 15, 80, 2);
         let c = Coordinator::cpu_only();
-        let r = c.count_total_routed(&g, &CountConfig::default());
+        let r = c.count_total_routed(&g, &CountConfig::default()).unwrap();
         assert_eq!(r.backend, "cpu");
         assert_eq!(r.total, brute::total(&g));
     }
@@ -360,11 +454,11 @@ mod tests {
         let c = Coordinator::with_default_backend();
         assert!(c.has_backend());
         let g = gen::erdos_renyi(60, 70, 700, 9);
-        let r = c.count_total_routed(&g, &CountConfig::default());
+        let r = c.count_total_routed(&g, &CountConfig::default()).unwrap();
         assert_ne!(r.backend, "cpu");
         assert_eq!(r.total, brute::total(&g));
         let big = gen::erdos_renyi(c.dense_limit + 1, 10, 50, 1);
-        let r2 = c.count_total_routed(&big, &CountConfig::default());
+        let r2 = c.count_total_routed(&big, &CountConfig::default()).unwrap();
         assert_eq!(r2.backend, "cpu");
     }
 
@@ -373,9 +467,9 @@ mod tests {
         let c = Coordinator::with_backend(Box::new(crate::runtime::RustDense::with_max_dim(32)));
         assert_eq!(c.dense_limit, 32);
         let g = gen::erdos_renyi(20, 20, 120, 5);
-        assert_eq!(c.count_total_routed(&g, &CountConfig::default()).backend, "rust-dense");
+        assert_eq!(c.count_total_routed(&g, &CountConfig::default()).unwrap().backend, "rust-dense");
         let big = gen::erdos_renyi(40, 40, 300, 5);
-        assert_eq!(c.count_total_routed(&big, &CountConfig::default()).backend, "cpu");
+        assert_eq!(c.count_total_routed(&big, &CountConfig::default()).unwrap().backend, "cpu");
     }
 
     #[test]
@@ -389,7 +483,7 @@ mod tests {
             Batch { kind: BatchKind::Delete, edges: edges[..4].to_vec() },
             Batch { kind: BatchKind::Insert, edges: edges[..4].to_vec() },
         ];
-        let (dg, rep) = replay_stream(g0, &batches, &DynOpts::default(), true);
+        let (dg, rep) = replay_stream(g0, &batches, &DynOpts::default(), true).unwrap();
         assert_eq!(rep.batches, 3);
         assert_eq!(rep.inserted, edges.len() - half + 4);
         assert_eq!(rep.deleted, 4);
@@ -407,9 +501,9 @@ mod tests {
             vopts: PeelVOpts { side: peel::PeelSide::U, ..Default::default() },
             ..Default::default()
         };
-        let (t, _) = tip_report(&g, &cfg);
+        let (t, _) = tip_report(&g, &cfg).unwrap();
         assert_eq!(t.tips, brute::tip_numbers_u(&g));
-        let (w, _) = wing_report(&g, &cfg);
+        let (w, _) = wing_report(&g, &cfg).unwrap();
         assert_eq!(w.wings, brute::wing_numbers(&g));
     }
 
@@ -425,9 +519,9 @@ mod tests {
             eopts: PeelEOpts { engine: peel::PeelEngine::Intersect, ..Default::default() },
             ..Default::default()
         };
-        let (t, _) = tip_report(&g, &cfg);
+        let (t, _) = tip_report(&g, &cfg).unwrap();
         assert_eq!(t.tips, brute::tip_numbers_u(&g));
-        let (w, _) = wing_report(&g, &cfg);
+        let (w, _) = wing_report(&g, &cfg).unwrap();
         assert_eq!(w.wings, brute::wing_numbers(&g));
     }
 }

@@ -177,7 +177,7 @@ mod tests {
     fn hybrid_split_is_exact() {
         let backend = RustDense::default();
         let g = gen::chung_lu(120, 150, 2200, 2.1, 3);
-        let expect = count_total(&g, &CountOpts::default());
+        let expect = count_total(&g, &CountOpts::default()).unwrap();
         for (cu, cv) in [(20, 20), (64, 64), (120, 150)] {
             let got =
                 count_total_hybrid(&g, &backend, cu, cv, &CountOpts::default()).unwrap();

@@ -40,7 +40,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 pub use engine::{engine_for, Engine, WedgeEngine};
 
+use crate::error::{guard, Result};
 use crate::graph::{BipartiteGraph, Layout, RankedGraph};
+use crate::prims::budget::{self, Budget};
 use crate::rank::{preprocess, Ranking};
 
 /// Wedge-aggregation strategy (§3.1.2).
@@ -102,6 +104,11 @@ pub struct CountOpts {
     /// (§3.1.4).  Chunks split at source-vertex boundaries, which keeps
     /// every wedge key inside one chunk.
     pub max_wedges: usize,
+    /// Cooperative limits (deadline / memory cap / cancel token) for
+    /// this call; unlimited by default.  Checked at task granularity by
+    /// the pool — a trip surfaces as a structured `Err` from the entry
+    /// point.
+    pub budget: Budget,
 }
 
 impl Default for CountOpts {
@@ -114,6 +121,7 @@ impl Default for CountOpts {
             cache_opt: false,
             layout: Layout::default_from_env(),
             max_wedges: 1 << 26,
+            budget: Budget::default(),
         }
     }
 }
@@ -132,9 +140,17 @@ pub(crate) fn choose2(d: u64) -> u64 {
 }
 
 /// Global butterfly count (COUNT framework, total mode).
-pub fn count_total(g: &BipartiteGraph, opts: &CountOpts) -> u64 {
+///
+/// Runs under [`CountOpts::budget`]; a worker panic, injected fault, or
+/// budget trip returns a structured [`Err`](crate::Error) instead of
+/// aborting.
+pub fn count_total(g: &BipartiteGraph, opts: &CountOpts) -> Result<u64> {
+    guard(&opts.budget, || count_total_raw(g, opts))
+}
+
+pub(crate) fn count_total_raw(g: &BipartiteGraph, opts: &CountOpts) -> u64 {
     let rg = preprocess(g, opts.ranking);
-    count_total_ranked(&rg, opts)
+    count_total_ranked_raw(&rg, opts)
 }
 
 /// Total count on an already-preprocessed graph.
@@ -147,16 +163,27 @@ pub fn count_total(g: &BipartiteGraph, opts: &CountOpts) -> u64 {
 /// let g = gen::complete_bipartite(3, 4);
 /// let rg = preprocess(&g, Ranking::Degree);
 /// // K_{3,4} holds C(3,2)·C(4,2) = 18 butterflies.
-/// assert_eq!(count_total_ranked(&rg, &CountOpts::default()), 18);
+/// assert_eq!(count_total_ranked(&rg, &CountOpts::default()).unwrap(), 18);
 /// ```
-pub fn count_total_ranked(rg: &RankedGraph, opts: &CountOpts) -> u64 {
+pub fn count_total_ranked(rg: &RankedGraph, opts: &CountOpts) -> Result<u64> {
+    guard(&opts.budget, || count_total_ranked_raw(rg, opts))
+}
+
+pub(crate) fn count_total_ranked_raw(rg: &RankedGraph, opts: &CountOpts) -> u64 {
     engine_for(opts).total(rg)
 }
 
 /// Per-vertex butterfly counts (COUNT-V, Algorithm 3).
-pub fn count_per_vertex(g: &BipartiteGraph, opts: &CountOpts) -> VertexCounts {
+///
+/// Runs under [`CountOpts::budget`]; see [`count_total`] for the error
+/// contract.
+pub fn count_per_vertex(g: &BipartiteGraph, opts: &CountOpts) -> Result<VertexCounts> {
+    guard(&opts.budget, || count_per_vertex_raw(g, opts))
+}
+
+pub(crate) fn count_per_vertex_raw(g: &BipartiteGraph, opts: &CountOpts) -> VertexCounts {
     let rg = preprocess(g, opts.ranking);
-    let counts = count_per_vertex_ranked(&rg, opts);
+    let counts = count_per_vertex_ranked_raw(&rg, opts);
     // Scatter rank-space counts back to original side-local ids.
     let nu = g.nu();
     let mut bu = vec![0u64; nu];
@@ -173,20 +200,37 @@ pub fn count_per_vertex(g: &BipartiteGraph, opts: &CountOpts) -> VertexCounts {
 }
 
 /// Per-vertex counts in *rank space* on a preprocessed graph.
-pub fn count_per_vertex_ranked(rg: &RankedGraph, opts: &CountOpts) -> Vec<u64> {
+pub fn count_per_vertex_ranked(rg: &RankedGraph, opts: &CountOpts) -> Result<Vec<u64>> {
+    guard(&opts.budget, || count_per_vertex_ranked_raw(rg, opts))
+}
+
+pub(crate) fn count_per_vertex_ranked_raw(rg: &RankedGraph, opts: &CountOpts) -> Vec<u64> {
+    budget::probe_alloc(rg.n() * 8, "per-vertex counts");
     let counts: Vec<AtomicU64> = (0..rg.n()).map(|_| AtomicU64::new(0)).collect();
     engine_for(opts).per_vertex(rg, &counts);
     counts.into_iter().map(|c| c.into_inner()).collect()
 }
 
 /// Per-edge butterfly counts indexed by edge id (COUNT-E, Algorithm 4).
-pub fn count_per_edge(g: &BipartiteGraph, opts: &CountOpts) -> Vec<u64> {
+///
+/// Runs under [`CountOpts::budget`]; see [`count_total`] for the error
+/// contract.
+pub fn count_per_edge(g: &BipartiteGraph, opts: &CountOpts) -> Result<Vec<u64>> {
+    guard(&opts.budget, || count_per_edge_raw(g, opts))
+}
+
+pub(crate) fn count_per_edge_raw(g: &BipartiteGraph, opts: &CountOpts) -> Vec<u64> {
     let rg = preprocess(g, opts.ranking);
-    count_per_edge_ranked(&rg, g.m(), opts)
+    count_per_edge_ranked_raw(&rg, g.m(), opts)
 }
 
 /// Per-edge counts on a preprocessed graph (`m` = edge count).
-pub fn count_per_edge_ranked(rg: &RankedGraph, m: usize, opts: &CountOpts) -> Vec<u64> {
+pub fn count_per_edge_ranked(rg: &RankedGraph, m: usize, opts: &CountOpts) -> Result<Vec<u64>> {
+    guard(&opts.budget, || count_per_edge_ranked_raw(rg, m, opts))
+}
+
+pub(crate) fn count_per_edge_ranked_raw(rg: &RankedGraph, m: usize, opts: &CountOpts) -> Vec<u64> {
+    budget::probe_alloc(m * 8, "per-edge counts");
     let counts: Vec<AtomicU64> = (0..m).map(|_| AtomicU64::new(0)).collect();
     engine_for(opts).per_edge(rg, &counts);
     counts.into_iter().map(|c| c.into_inner()).collect()
@@ -218,8 +262,7 @@ mod tests {
                             agg,
                             bfly,
                             cache_opt,
-                            layout: Layout::default_from_env(),
-                            max_wedges: 1 << 26,
+                            ..Default::default()
                         });
                     }
                 }
@@ -246,7 +289,7 @@ mod tests {
             &[(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2), (2, 2)],
         );
         for opts in all_opt_combos() {
-            assert_eq!(count_total(&g, &opts), 3, "{opts:?}");
+            assert_eq!(count_total(&g, &opts).unwrap(), 3, "{opts:?}");
         }
     }
 
@@ -255,7 +298,7 @@ mod tests {
         let g = gen::complete_bipartite(5, 7);
         let expect = choose2(5) * choose2(7); // C(5,2)*C(7,2) = 210
         for opts in all_opt_combos() {
-            assert_eq!(count_total(&g, &opts), expect, "{opts:?}");
+            assert_eq!(count_total(&g, &opts).unwrap(), expect, "{opts:?}");
         }
     }
 
@@ -265,7 +308,7 @@ mod tests {
             let g = gen::erdos_renyi(25, 30, 220, seed);
             let expect = brute::total(&g);
             for opts in all_opt_combos() {
-                assert_eq!(count_total(&g, &opts), expect, "seed={seed} {opts:?}");
+                assert_eq!(count_total(&g, &opts).unwrap(), expect, "seed={seed} {opts:?}");
             }
         }
     }
@@ -275,7 +318,7 @@ mod tests {
         let g = gen::erdos_renyi(20, 22, 160, 9);
         let (eu, ev) = brute::per_vertex(&g);
         for opts in all_opt_combos() {
-            let vc = count_per_vertex(&g, &opts);
+            let vc = count_per_vertex(&g, &opts).unwrap();
             assert_eq!(vc.bu, eu, "{opts:?}");
             assert_eq!(vc.bv, ev, "{opts:?}");
         }
@@ -286,21 +329,21 @@ mod tests {
         let g = gen::erdos_renyi(18, 20, 140, 5);
         let expect = brute::per_edge(&g);
         for opts in all_opt_combos() {
-            assert_eq!(count_per_edge(&g, &opts), expect, "{opts:?}");
+            assert_eq!(count_per_edge(&g, &opts).unwrap(), expect, "{opts:?}");
         }
     }
 
     #[test]
     fn chunked_wedge_processing_is_exact() {
         let g = gen::chung_lu(80, 120, 1500, 2.2, 6);
-        let baseline = count_total(&g, &CountOpts::default());
+        let baseline = count_total(&g, &CountOpts::default()).unwrap();
         for agg in [WedgeAgg::Sort, WedgeAgg::Hash, WedgeAgg::Hist] {
             for max_wedges in [16, 257, 4096] {
                 let opts = CountOpts { agg, max_wedges, ..CountOpts::default() };
-                assert_eq!(count_total(&g, &opts), baseline, "agg={agg:?} cap={max_wedges}");
-                let vc = count_per_vertex(&g, &opts);
+                assert_eq!(count_total(&g, &opts).unwrap(), baseline, "agg={agg:?} cap={max_wedges}");
+                let vc = count_per_vertex(&g, &opts).unwrap();
                 let full =
-                    count_per_vertex(&g, &CountOpts { agg, ..CountOpts::default() });
+                    count_per_vertex(&g, &CountOpts { agg, ..CountOpts::default() }).unwrap();
                 assert_eq!(vc, full);
             }
         }
@@ -309,12 +352,12 @@ mod tests {
     #[test]
     fn davis_counts_are_consistent() {
         let g = gen::davis_southern_women();
-        let total = count_total(&g, &CountOpts::default());
+        let total = count_total(&g, &CountOpts::default()).unwrap();
         assert_eq!(total, brute::total(&g));
-        let vc = count_per_vertex(&g, &CountOpts::default());
+        let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
         assert_eq!(vc.bu.iter().sum::<u64>(), 2 * total);
         assert_eq!(vc.bv.iter().sum::<u64>(), 2 * total);
-        let pe = count_per_edge(&g, &CountOpts::default());
+        let pe = count_per_edge(&g, &CountOpts::default()).unwrap();
         assert_eq!(pe.iter().sum::<u64>(), 4 * total);
     }
 }

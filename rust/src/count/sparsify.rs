@@ -15,7 +15,8 @@
 use crate::graph::BipartiteGraph;
 use crate::prims::rng::hash64;
 
-use super::{count_total, CountOpts};
+use super::{count_total_raw, CountOpts};
+use crate::error::{guard, Result};
 
 /// Keep each edge with probability `p` (deterministic in `seed`).
 pub fn edge_sparsify(g: &BipartiteGraph, p: f64, seed: u64) -> BipartiteGraph {
@@ -45,30 +46,43 @@ pub fn colorful_sparsify(g: &BipartiteGraph, ncolors: u64, seed: u64) -> Biparti
 }
 
 /// Unbiased total-count estimate via edge sparsification.
-pub fn approx_total_edge(g: &BipartiteGraph, p: f64, seed: u64, opts: &CountOpts) -> f64 {
-    let sparse = edge_sparsify(g, p, seed);
-    count_total(&sparse, opts) as f64 / p.powi(4)
+///
+/// Runs under [`CountOpts::budget`] (sparsification included); see
+/// [`count_total`](super::count_total) for the error contract.
+pub fn approx_total_edge(g: &BipartiteGraph, p: f64, seed: u64, opts: &CountOpts) -> Result<f64> {
+    guard(&opts.budget, || {
+        let sparse = edge_sparsify(g, p, seed);
+        count_total_raw(&sparse, opts) as f64 / p.powi(4)
+    })
 }
 
 /// Unbiased total-count estimate via colorful sparsification with
 /// `ncolors` colors (`p = 1 / ncolors`).
-pub fn approx_total_colorful(g: &BipartiteGraph, ncolors: u64, seed: u64, opts: &CountOpts) -> f64 {
-    let sparse = colorful_sparsify(g, ncolors, seed);
-    let p = 1.0 / ncolors as f64;
-    count_total(&sparse, opts) as f64 / p.powi(3)
+pub fn approx_total_colorful(
+    g: &BipartiteGraph,
+    ncolors: u64,
+    seed: u64,
+    opts: &CountOpts,
+) -> Result<f64> {
+    guard(&opts.budget, || {
+        let sparse = colorful_sparsify(g, ncolors, seed);
+        let p = 1.0 / ncolors as f64;
+        count_total_raw(&sparse, opts) as f64 / p.powi(3)
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::count::count_total;
     use crate::graph::gen;
 
     #[test]
     fn p_one_is_exact() {
         let g = gen::erdos_renyi(40, 50, 400, 3);
-        let exact = count_total(&g, &CountOpts::default()) as f64;
-        assert_eq!(approx_total_edge(&g, 1.0, 7, &CountOpts::default()), exact);
-        assert_eq!(approx_total_colorful(&g, 1, 7, &CountOpts::default()), exact);
+        let exact = count_total(&g, &CountOpts::default()).unwrap() as f64;
+        assert_eq!(approx_total_edge(&g, 1.0, 7, &CountOpts::default()).unwrap(), exact);
+        assert_eq!(approx_total_colorful(&g, 1, 7, &CountOpts::default()).unwrap(), exact);
     }
 
     #[test]
@@ -94,17 +108,17 @@ mod tests {
         // Averaging over seeds shrinks variance; unbiasedness shows as
         // the mean landing near the exact count.
         let g = gen::chung_lu(150, 200, 4000, 2.2, 9);
-        let exact = count_total(&g, &CountOpts::default()) as f64;
+        let exact = count_total(&g, &CountOpts::default()).unwrap() as f64;
         assert!(exact > 100.0, "workload too sparse: {exact}");
         let trials = 40;
         let mean_edge: f64 = (0..trials)
-            .map(|s| approx_total_edge(&g, 0.6, s, &CountOpts::default()))
+            .map(|s| approx_total_edge(&g, 0.6, s, &CountOpts::default()).unwrap())
             .sum::<f64>()
             / trials as f64;
         let rel = (mean_edge - exact).abs() / exact;
         assert!(rel < 0.35, "edge estimate rel err {rel}");
         let mean_col: f64 = (0..trials)
-            .map(|s| approx_total_colorful(&g, 2, s, &CountOpts::default()))
+            .map(|s| approx_total_colorful(&g, 2, s, &CountOpts::default()).unwrap())
             .sum::<f64>()
             / trials as f64;
         let rel = (mean_col - exact).abs() / exact;

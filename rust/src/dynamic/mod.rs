@@ -60,17 +60,40 @@
 //! atomic adds, so counts are identical at every thread count (the
 //! `dynamic_oracle` suite pins 1/4/8 threads).
 //!
+//! ## Fault tolerance and graceful degradation
+//!
+//! Every update runs under the [`Budget`] carried by
+//! `DynOpts::count.budget` and returns `Result`: a worker panic, an
+//! injected fault, or a budget trip during the **delta walk** does not
+//! abort — the batch falls back to a full static recount of the
+//! already-committed post-batch graph, run with the budget *suspended*
+//! (exactness over latency once degradation has begun), and the
+//! outcome records `fallback = true`.  Only when that recovery recount
+//! itself fails does the instance become **poisoned**: counts and
+//! graph may disagree, every further update returns
+//! [`ErrorKind::Poisoned`](crate::ErrorKind::Poisoned), and
+//! [`DynGraph::rebuild`] (a guarded recount) is the way back.  A
+//! failure *before* anything was committed (batch staging, CSR
+//! construction on the recount path) leaves the pre-batch state fully
+//! intact and the instance usable.
+//!
 //! [`stream`] parses the timestamped edge streams the CLI `dynamic`
 //! subcommand replays.
 
+// Runtime-critical modules must not abort through unchecked unwraps:
+// failures either unwind as structured panics the pool catches or are
+// returned as `error::Result`.  Test code is exempt.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 pub mod stream;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use crate::count::intersect::EdgeStamp;
-use crate::count::{atomic_add, count_per_edge_ranked, count_per_vertex_ranked, CountOpts};
+use crate::count::{atomic_add, count_per_edge_ranked_raw, count_per_vertex_ranked_raw, CountOpts};
+use crate::error::{catch, guard, Error, Result};
 use crate::graph::ranked::walk_grain;
+use crate::prims::budget::{self, Budget};
 use crate::graph::BipartiteGraph;
 use crate::prims::pool::{parallel_for, parallel_for_chunks, parallel_for_dynamic_with, SyncPtr};
 use crate::prims::scan::{dedup_sorted, pack_indices};
@@ -81,7 +104,8 @@ use crate::rank::preprocess;
 #[derive(Clone, Debug)]
 pub struct DynOpts {
     /// Ranking + engine used by full recounts (initial count and
-    /// rebuild-threshold fallbacks).  The memory
+    /// rebuild-threshold fallbacks).  `count.budget` also governs the
+    /// delta walks: it is the cooperative budget for every update.  The memory
     /// [`Layout`](crate::graph::Layout) the intersect engine runs
     /// recounts under is inherited from `count.layout`; the delta
     /// walks themselves are layout-independent (they stream the
@@ -156,6 +180,10 @@ pub struct BatchOutcome {
     /// Global count after the batch.
     pub total: u64,
     pub path: UpdatePath,
+    /// True when the delta walk failed (panic, injected fault, or
+    /// budget trip) and the batch was recovered by the degradation
+    /// recount; `path` is then [`UpdatePath::Recount`].
+    pub fallback: bool,
     pub millis: f64,
 }
 
@@ -177,11 +205,17 @@ pub struct DynGraph {
     pending: usize,
     delta_batches: usize,
     recount_batches: usize,
+    fallback_batches: usize,
+    /// Set when a failure left counts and graph possibly inconsistent;
+    /// every update refuses until [`rebuild`](DynGraph::rebuild).
+    poisoned: Option<String>,
 }
 
 impl DynGraph {
-    /// Wrap an existing graph; runs one full static count.
-    pub fn new(g: BipartiteGraph, opts: DynOpts) -> Self {
+    /// Wrap an existing graph; runs one full static count (under
+    /// `opts.count.budget`).
+    pub fn new(g: BipartiteGraph, opts: DynOpts) -> Result<Self> {
+        let budget = opts.count.budget.clone();
         let mut dg = Self {
             g,
             total: 0,
@@ -192,13 +226,20 @@ impl DynGraph {
             pending: 0,
             delta_batches: 0,
             recount_batches: 0,
+            fallback_batches: 0,
+            poisoned: None,
         };
-        dg.recount();
-        dg
+        guard(&budget, || dg.recount())?;
+        Ok(dg)
     }
 
     /// Build from an edge list (see [`BipartiteGraph::from_edges`]).
-    pub fn from_edges(nu: usize, nv: usize, edges: &[(u32, u32)], opts: DynOpts) -> Self {
+    pub fn from_edges(
+        nu: usize,
+        nv: usize,
+        edges: &[(u32, u32)],
+        opts: DynOpts,
+    ) -> Result<Self> {
         Self::new(BipartiteGraph::from_edges(nu, nv, edges), opts)
     }
 
@@ -242,6 +283,74 @@ impl DynGraph {
         self.recount_batches
     }
 
+    /// Batches whose delta walk failed and were recovered by the
+    /// graceful-degradation recount.
+    pub fn fallback_batches(&self) -> usize {
+        self.fallback_batches
+    }
+
+    /// Why the instance is poisoned, if it is.  A poisoned instance
+    /// refuses updates until [`rebuild`](DynGraph::rebuild) succeeds.
+    pub fn poisoned(&self) -> Option<&str> {
+        self.poisoned.as_deref()
+    }
+
+    /// Clear a poisoned state: one guarded full recount of the current
+    /// graph.  On success the counts once more match the graph and
+    /// updates are accepted again; on failure the instance stays
+    /// poisoned and the error is returned.
+    pub fn rebuild(&mut self) -> Result<()> {
+        let budget = self.opts.count.budget.clone();
+        match guard(&budget, || self.recount()) {
+            Ok(()) => {
+                self.poisoned = None;
+                Ok(())
+            }
+            Err(e) => {
+                self.poisoned = Some(format!("rebuild recount failed: {e}"));
+                Err(e)
+            }
+        }
+    }
+
+    fn check_usable(&self) -> Result<()> {
+        match &self.poisoned {
+            Some(why) => Err(Error::poisoned(why.clone())),
+            None => Ok(()),
+        }
+    }
+
+    /// Guarded full recount after a committed structural change; a
+    /// failure poisons the instance (graph and counts may disagree).
+    fn recount_checked(&mut self, budget: &Budget) -> Result<()> {
+        let r = guard(budget, || self.recount());
+        if let Err(e) = &r {
+            self.poisoned = Some(format!("recount failed after a committed batch: {e}"));
+        }
+        r
+    }
+
+    /// Graceful degradation: the delta walk failed mid-batch, so
+    /// recount the already-committed post-batch graph with any active
+    /// budget suspended (the recovery must not be killed by the budget
+    /// that killed the fast path).  Returns the batch's signed delta
+    /// against `before`; a failure here poisons the instance.
+    fn fallback_recount(&mut self, before: u64, cause: &Error) -> Result<i64> {
+        let _quiet = budget::suspend();
+        match catch(|| self.recount()) {
+            Ok(()) => {
+                self.fallback_batches += 1;
+                Ok(self.total as i64 - before as i64)
+            }
+            Err(e) => {
+                self.poisoned = Some(format!(
+                    "delta walk failed ({cause}) and the fallback recount also failed: {e}"
+                ));
+                Err(e)
+            }
+        }
+    }
+
     /// Insert a batch of edges.  The batch is deduplicated and edges
     /// already present are skipped as no-ops; ids beyond the current
     /// `|U|`/`|V|` grow the vertex universe.
@@ -250,58 +359,68 @@ impl DynGraph {
     /// use parbutterfly::dynamic::{DynGraph, DynOpts};
     ///
     /// // Figure 1 of the paper, grown one batch at a time.
-    /// let mut dg = DynGraph::from_edges(3, 3, &[(0, 0), (0, 1), (1, 0)], DynOpts::default());
+    /// let mut dg = DynGraph::from_edges(3, 3, &[(0, 0), (0, 1), (1, 0)], DynOpts::default())
+    ///     .unwrap();
     /// assert_eq!(dg.total(), 0);
-    /// let out = dg.insert_edges(&[(1, 1), (0, 2), (1, 2), (2, 2), (1, 1)]);
+    /// let out = dg.insert_edges(&[(1, 1), (0, 2), (1, 2), (2, 2), (1, 1)]).unwrap();
     /// assert_eq!(out.applied, 4); // the repeated (1, 1) is a no-op
     /// assert_eq!(out.delta, 3);
     /// assert_eq!(dg.total(), 3);
-    /// let out = dg.delete_edges(&[(0, 0)]);
+    /// let out = dg.delete_edges(&[(0, 0)]).unwrap();
     /// assert_eq!(out.delta, -2);
     /// assert_eq!(dg.total(), 1);
     /// ```
-    pub fn insert_edges(&mut self, edges: &[(u32, u32)]) -> BatchOutcome {
+    pub fn insert_edges(&mut self, edges: &[(u32, u32)]) -> Result<BatchOutcome> {
+        self.check_usable()?;
         let start = Instant::now();
+        let budget = self.opts.count.budget.clone();
         let (nu0, nv0) = (self.g.nu(), self.g.nv());
-        // Dedup + CSR-sort the batch, keep genuinely new edges only.
-        let fresh: Vec<(u32, u32)> = sorted_unique(edges)
-            .into_iter()
-            .filter(|&(u, v)| {
-                (u as usize) >= nu0
-                    || (v as usize) >= nv0
-                    || self.g.edge_id(u as usize, v).is_none()
-            })
-            .collect();
-        let skipped = edges.len() - fresh.len();
-        if fresh.is_empty() {
-            return self.noop(BatchKind::Insert, skipped, start);
-        }
 
-        // Grow the vertex universe if the batch names new ids.
-        let nu = nu0.max(fresh.iter().map(|&(u, _)| u as usize + 1).max().unwrap());
-        let nv = nv0.max(fresh.iter().map(|&(_, v)| v as usize + 1).max().unwrap());
+        // Staging: dedup + CSR-sort the batch, keep genuinely new
+        // edges, grow the universe, and rebuild the CSR over old +
+        // fresh edges (parallel sort-based build).  A failure anywhere
+        // in here leaves the pre-batch graph and counts fully intact,
+        // so the instance stays usable.
+        let staged = guard(&budget, || {
+            let fresh: Vec<(u32, u32)> = sorted_unique(edges)
+                .into_iter()
+                .filter(|&(u, v)| {
+                    (u as usize) >= nu0
+                        || (v as usize) >= nv0
+                        || self.g.edge_id(u as usize, v).is_none()
+                })
+                .collect();
+            if fresh.is_empty() {
+                return None;
+            }
+            let nu = nu0.max(fresh.iter().map(|&(u, _)| u as usize + 1).max().unwrap_or(0));
+            let nv = nv0.max(fresh.iter().map(|&(_, v)| v as usize + 1).max().unwrap_or(0));
+            let m0 = self.g.m();
+            let mut all = self.edges_by_id();
+            all.resize(m0 + fresh.len(), (0, 0));
+            all[m0..].copy_from_slice(&fresh);
+            let g_new = BipartiteGraph::from_edges(nu, nv, &all);
+            Some((fresh, g_new, nu, nv))
+        })?;
+        let Some((fresh, g_new, nu, nv)) = staged else {
+            return Ok(self.noop(BatchKind::Insert, edges.len(), start));
+        };
+
+        let applied = fresh.len();
+        let skipped = edges.len() - applied;
         self.bu.resize(nu, 0);
         self.bv.resize(nv, 0);
-
-        // Rebuild the CSR over old + fresh edges (parallel sort-based
-        // build).  The path decision only needs the batch and edge
-        // counts, so it is made first: the recount path skips the
-        // per-edge remap and batch-id lookups whose results it would
-        // overwrite wholesale.
         let m0 = self.g.m();
-        let applied = fresh.len();
         let path = self.choose_path(applied, m0 + applied);
-        let mut all = self.edges_by_id();
-        all.resize(m0 + applied, (0, 0));
-        all[m0..].copy_from_slice(&fresh);
-        let g_new = BipartiteGraph::from_edges(nu, nv, &all);
+        let before = self.total;
+        let mut fallback = false;
+
         let delta = match path {
             UpdatePath::Recount => {
                 self.g = g_new;
-                let before = self.total as i64;
-                self.recount();
+                self.recount_checked(&budget)?;
                 self.recount_batches += 1;
-                self.total as i64 - before
+                self.total as i64 - before as i64
             }
             UpdatePath::Delta => {
                 // Carry per-edge counts into the new id space (fresh
@@ -309,113 +428,182 @@ impl DynGraph {
                 // (u, v)-sorted batch order — the max-id convention
                 // the delta walk depends on.
                 let old_pe = std::mem::take(&mut self.per_edge);
-                self.per_edge = remap_per_edge(&self.g, &old_pe, &g_new);
-                let batch_eids: Vec<u32> = fresh
-                    .iter()
-                    .map(|&(u, v)| {
-                        g_new.edge_id(u as usize, v).expect("batch edge present after rebuild")
-                    })
-                    .collect();
+                let prep = guard(&budget, || {
+                    let pe = remap_per_edge(&self.g, &old_pe, &g_new);
+                    let batch_eids: Vec<u32> = fresh
+                        .iter()
+                        .map(|&(u, v)| match g_new.edge_id(u as usize, v) {
+                            Some(e) => e,
+                            None => unreachable!("batch edge absent after rebuild"),
+                        })
+                        .collect();
+                    (pe, batch_eids)
+                });
+                // Structural commit happens regardless: the fallback
+                // recount needs the post-batch graph in place.
                 self.g = g_new;
-                let gained = self.apply_delta(&batch_eids, true);
-                self.total += gained;
-                self.pending += applied;
-                self.delta_batches += 1;
-                gained as i64
+                let walked = prep.and_then(|(pe, batch_eids)| {
+                    self.per_edge = pe;
+                    guard(&budget, || self.apply_delta(&batch_eids, true))
+                });
+                match walked {
+                    Ok(gained) => {
+                        self.total += gained;
+                        self.pending += applied;
+                        self.delta_batches += 1;
+                        gained as i64
+                    }
+                    Err(e) => {
+                        fallback = true;
+                        self.fallback_recount(before, &e)?
+                    }
+                }
             }
         };
         self.check_invariants();
-        BatchOutcome {
+        Ok(BatchOutcome {
             kind: BatchKind::Insert,
             applied,
             skipped,
             delta,
             total: self.total,
-            path,
+            path: if fallback { UpdatePath::Recount } else { path },
+            fallback,
             millis: ms(start),
-        }
+        })
     }
 
     /// Delete a batch of edges.  The batch is deduplicated; edges not
     /// present are skipped as no-ops.  The vertex universe never
     /// shrinks.
-    pub fn delete_edges(&mut self, edges: &[(u32, u32)]) -> BatchOutcome {
+    pub fn delete_edges(&mut self, edges: &[(u32, u32)]) -> Result<BatchOutcome> {
+        self.check_usable()?;
         let start = Instant::now();
+        let budget = self.opts.count.budget.clone();
         let (nu0, nv0) = (self.g.nu(), self.g.nv());
-        let mut gone = Vec::new();
-        let mut gone_eids = Vec::new();
-        for (u, v) in sorted_unique(edges) {
-            if (u as usize) < nu0 && (v as usize) < nv0 {
-                if let Some(e) = self.g.edge_id(u as usize, v) {
-                    gone.push((u, v));
-                    gone_eids.push(e);
+
+        // Staging: dedup the batch and keep edges actually present.  A
+        // failure leaves the pre-batch state intact.
+        let (gone, gone_eids) = guard(&budget, || {
+            let mut gone = Vec::new();
+            let mut gone_eids = Vec::new();
+            for (u, v) in sorted_unique(edges) {
+                if (u as usize) < nu0 && (v as usize) < nv0 {
+                    if let Some(e) = self.g.edge_id(u as usize, v) {
+                        gone.push((u, v));
+                        gone_eids.push(e);
+                    }
                 }
             }
-        }
+            (gone, gone_eids)
+        })?;
         let skipped = edges.len() - gone.len();
         if gone.is_empty() {
-            return self.noop(BatchKind::Delete, skipped, start);
+            return Ok(self.noop(BatchKind::Delete, skipped, start));
         }
 
         let applied = gone.len();
         let path = self.choose_path(applied, self.g.m() - applied);
+        let before = self.total;
+        let mut fallback = false;
+
         // The destroyed butterflies are walked in the *pre-deletion*
         // graph, subtracting per-edge credits in the old id space;
         // afterwards every deleted edge's count is exactly zero and
         // the remap below drops those slots.  The recount path skips
-        // both the walk and the remap it would overwrite.
+        // both the walk and the remap it would overwrite.  A failed
+        // walk may have applied partial credits — recoverable, but
+        // only once the post-deletion graph is committed below.
         let mut delta = 0i64;
+        let mut walk_failed: Option<Error> = None;
         if path == UpdatePath::Delta {
-            let lost = self.apply_delta(&gone_eids, false);
-            self.total -= lost;
-            delta = -(lost as i64);
+            match guard(&budget, || self.apply_delta(&gone_eids, false)) {
+                Ok(lost) => {
+                    self.total -= lost;
+                    delta = -(lost as i64);
+                }
+                Err(e) => walk_failed = Some(e),
+            }
         }
 
-        let mut is_gone = vec![false; self.g.m()];
-        for &e in &gone_eids {
-            is_gone[e as usize] = true;
-        }
-        let all = self.edges_by_id();
-        let keep = pack_indices(all.len(), |i| !is_gone[i]);
-        let remaining: Vec<(u32, u32)> =
-            crate::prims::pool::parallel_map(keep.len(), |j| all[keep[j]]);
-        let g_new = BipartiteGraph::from_edges(nu0, nv0, &remaining);
+        // Build the post-deletion CSR.  If this fails *after* delta
+        // credits were (possibly partially) applied, the counts no
+        // longer describe any graph we hold — poison.
+        let built = guard(&budget, || {
+            let mut is_gone = vec![false; self.g.m()];
+            for &e in &gone_eids {
+                is_gone[e as usize] = true;
+            }
+            let all = self.edges_by_id();
+            let keep = pack_indices(all.len(), |i| !is_gone[i]);
+            let remaining: Vec<(u32, u32)> =
+                crate::prims::pool::parallel_map(keep.len(), |j| all[keep[j]]);
+            BipartiteGraph::from_edges(nu0, nv0, &remaining)
+        });
+        let g_new = match built {
+            Ok(g) => g,
+            Err(e) => {
+                if path == UpdatePath::Delta {
+                    self.poisoned = Some(format!(
+                        "post-deletion CSR rebuild failed after delta credits \
+                         were applied: {e}"
+                    ));
+                }
+                return Err(e);
+            }
+        };
 
         match path {
             UpdatePath::Recount => {
                 self.g = g_new;
-                let before = self.total as i64;
-                self.recount();
+                self.recount_checked(&budget)?;
                 self.recount_batches += 1;
-                delta = self.total as i64 - before;
+                delta = self.total as i64 - before as i64;
             }
-            UpdatePath::Delta => {
-                let old_pe = std::mem::take(&mut self.per_edge);
-                if cfg!(debug_assertions) {
-                    for &e in &gone_eids {
-                        debug_assert_eq!(
-                            old_pe[e as usize],
-                            0,
-                            "residual count on deleted edge {e}"
-                        );
+            UpdatePath::Delta => match walk_failed {
+                None => {
+                    let old_pe = std::mem::take(&mut self.per_edge);
+                    if cfg!(debug_assertions) {
+                        for &e in &gone_eids {
+                            debug_assert_eq!(
+                                old_pe[e as usize],
+                                0,
+                                "residual count on deleted edge {e}"
+                            );
+                        }
+                    }
+                    let remapped = guard(&budget, || remap_per_edge(&self.g, &old_pe, &g_new));
+                    self.g = g_new;
+                    match remapped {
+                        Ok(pe) => {
+                            self.per_edge = pe;
+                            self.pending += applied;
+                            self.delta_batches += 1;
+                        }
+                        Err(e) => {
+                            fallback = true;
+                            delta = self.fallback_recount(before, &e)?;
+                        }
                     }
                 }
-                self.per_edge = remap_per_edge(&self.g, &old_pe, &g_new);
-                self.g = g_new;
-                self.pending += applied;
-                self.delta_batches += 1;
-            }
+                Some(e) => {
+                    self.g = g_new;
+                    fallback = true;
+                    delta = self.fallback_recount(before, &e)?;
+                }
+            },
         }
         self.check_invariants();
-        BatchOutcome {
+        Ok(BatchOutcome {
             kind: BatchKind::Delete,
             applied,
             skipped,
             delta,
             total: self.total,
-            path,
+            path: if fallback { UpdatePath::Recount } else { path },
+            fallback,
             millis: ms(start),
-        }
+        })
     }
 
     fn noop(&self, kind: BatchKind, skipped: usize, start: Instant) -> BatchOutcome {
@@ -426,6 +614,7 @@ impl DynGraph {
             delta: 0,
             total: self.total,
             path: UpdatePath::Delta,
+            fallback: false,
             millis: ms(start),
         }
     }
@@ -446,7 +635,7 @@ impl DynGraph {
     fn recount(&mut self) {
         let opts = &self.opts.count;
         let rg = preprocess(&self.g, opts.ranking);
-        let pv = count_per_vertex_ranked(&rg, opts);
+        let pv = count_per_vertex_ranked_raw(&rg, opts);
         let nu = self.g.nu();
         self.bu = vec![0; nu];
         self.bv = vec![0; self.g.nv()];
@@ -458,7 +647,7 @@ impl DynGraph {
                 self.bv[gid - nu] = c;
             }
         }
-        self.per_edge = count_per_edge_ranked(&rg, self.g.m(), opts);
+        self.per_edge = count_per_edge_ranked_raw(&rg, self.g.m(), opts);
         self.total = self.bu.iter().sum::<u64>() / 2;
         self.pending = 0;
     }
@@ -470,6 +659,7 @@ impl DynGraph {
     fn apply_delta(&mut self, batch_eids: &[u32], gain: bool) -> u64 {
         let g = &self.g;
         let (nu, nv, m) = (g.nu(), g.nv(), g.m());
+        budget::probe_alloc((nu + nv + m) * 8, "dynamic delta accumulators");
         let mut is_batch = vec![false; m];
         for &e in batch_eids {
             is_batch[e as usize] = true;
@@ -740,15 +930,15 @@ mod tests {
     fn fig1_grown_and_shrunk_edge_by_edge() {
         let fig1 = [(0u32, 0u32), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2), (2, 2)];
         for opts in [delta_only(), recount_only()] {
-            let mut dg = DynGraph::from_edges(3, 3, &[], opts);
+            let mut dg = DynGraph::from_edges(3, 3, &[], opts).unwrap();
             for (i, &e) in fig1.iter().enumerate() {
-                let out = dg.insert_edges(&[e]);
+                let out = dg.insert_edges(&[e]).unwrap();
                 assert_eq!(out.applied, 1);
                 assert_matches_static(&dg, &format!("insert {i}"));
             }
             assert_eq!(dg.total(), 3);
             for (i, &e) in fig1.iter().enumerate() {
-                dg.delete_edges(&[e]);
+                dg.delete_edges(&[e]).unwrap();
                 assert_matches_static(&dg, &format!("delete {i}"));
             }
             assert_eq!(dg.total(), 0);
@@ -762,10 +952,10 @@ mod tests {
         let edges = g.edges();
         let (a, b) = (edges.len() / 3, 2 * edges.len() / 3);
         for opts in [delta_only(), DynOpts::default()] {
-            let mut dg = DynGraph::from_edges(g.nu(), g.nv(), &edges[..a], opts);
-            dg.insert_edges(&edges[a..b]);
+            let mut dg = DynGraph::from_edges(g.nu(), g.nv(), &edges[..a], opts).unwrap();
+            dg.insert_edges(&edges[a..b]).unwrap();
             assert_matches_static(&dg, "mid");
-            dg.insert_edges(&edges[b..]);
+            dg.insert_edges(&edges[b..]).unwrap();
             assert_matches_static(&dg, "full");
             assert_eq!(dg.total(), brute::total(&g));
         }
@@ -775,15 +965,15 @@ mod tests {
     fn duplicate_and_noop_batches() {
         let g = gen::erdos_renyi(10, 10, 40, 3);
         let edges = g.edges();
-        let mut dg = DynGraph::from_edges(10, 10, &edges, delta_only());
+        let mut dg = DynGraph::from_edges(10, 10, &edges, delta_only()).unwrap();
         let before = dg.total();
         // Re-inserting present edges and deleting absent ones are no-ops.
-        let out = dg.insert_edges(&edges[..10]);
+        let out = dg.insert_edges(&edges[..10]).unwrap();
         assert_eq!((out.applied, out.delta), (0, 0));
         assert_eq!(out.skipped, 10);
         let absent: Vec<(u32, u32)> =
             (0..5).map(|i| (i, 9)).filter(|&(u, v)| g.edge_id(u as usize, v).is_none()).collect();
-        let out = dg.delete_edges(&absent);
+        let out = dg.delete_edges(&absent).unwrap();
         assert_eq!((out.applied, out.delta), (0, 0));
         assert_eq!(dg.total(), before);
         assert_matches_static(&dg, "noop");
@@ -791,8 +981,8 @@ mod tests {
 
     #[test]
     fn vertex_universe_grows_on_insert() {
-        let mut dg = DynGraph::from_edges(2, 2, &[(0, 0), (1, 1)], delta_only());
-        let out = dg.insert_edges(&[(3, 4), (0, 1), (1, 0)]);
+        let mut dg = DynGraph::from_edges(2, 2, &[(0, 0), (1, 1)], delta_only()).unwrap();
+        let out = dg.insert_edges(&[(3, 4), (0, 1), (1, 0)]).unwrap();
         assert_eq!(out.applied, 3);
         assert_eq!(dg.graph().nu(), 4);
         assert_eq!(dg.graph().nv(), 5);
@@ -810,7 +1000,7 @@ mod tests {
         let (nu, nv) = (14usize, 12usize);
         let mut rng = Pcg32::new(2026);
         for opts in [delta_only(), DynOpts::default()] {
-            let mut dg = DynGraph::from_edges(nu, nv, &[], opts);
+            let mut dg = DynGraph::from_edges(nu, nv, &[], opts).unwrap();
             let mut removed: Vec<(u32, u32)> = Vec::new();
             for step in 0..40 {
                 let sz = 1 + (rng.next_below(9) as usize);
@@ -825,7 +1015,7 @@ mod tests {
                     }
                     let dup = batch[0];
                     batch.push(dup); // in-batch duplicate
-                    dg.insert_edges(&batch);
+                    dg.insert_edges(&batch).unwrap();
                 } else {
                     let edges = dg.graph().edges();
                     let mut batch: Vec<(u32, u32)> = (0..sz.min(edges.len()))
@@ -833,7 +1023,7 @@ mod tests {
                         .collect();
                     removed.extend(batch.iter().copied());
                     batch.push((nu as u32 - 1, nv as u32 - 1)); // maybe absent
-                    dg.delete_edges(&batch);
+                    dg.delete_edges(&batch).unwrap();
                 }
                 assert_matches_static(&dg, &format!("step {step}"));
             }
@@ -846,11 +1036,11 @@ mod tests {
         let g = gen::chung_lu(40, 50, 400, 2.1, 9);
         let edges = g.edges();
         let half = edges.len() / 2;
-        let mut a = DynGraph::from_edges(g.nu(), g.nv(), &edges[..half], delta_only());
-        let mut b = DynGraph::from_edges(g.nu(), g.nv(), &edges[..half], recount_only());
+        let mut a = DynGraph::from_edges(g.nu(), g.nv(), &edges[..half], delta_only()).unwrap();
+        let mut b = DynGraph::from_edges(g.nu(), g.nv(), &edges[..half], recount_only()).unwrap();
         for chunk in edges[half..].chunks(37) {
-            let oa = a.insert_edges(chunk);
-            let ob = b.insert_edges(chunk);
+            let oa = a.insert_edges(chunk).unwrap();
+            let ob = b.insert_edges(chunk).unwrap();
             assert_eq!(oa.path, UpdatePath::Delta);
             assert_eq!(ob.path, UpdatePath::Recount);
             assert_eq!(oa.total, ob.total);
@@ -867,16 +1057,16 @@ mod tests {
         let edges = g.edges();
         let base = edges.len() - 5;
         let opts = DynOpts { rebuild_fraction: 0.25, ..Default::default() };
-        let mut dg = DynGraph::from_edges(30, 30, &edges[..base], opts.clone());
+        let mut dg = DynGraph::from_edges(30, 30, &edges[..base], opts.clone()).unwrap();
         // Small batch stays on the delta path…
-        let out = dg.insert_edges(&edges[base..]);
+        let out = dg.insert_edges(&edges[base..]).unwrap();
         assert_eq!(out.path, UpdatePath::Delta);
         assert_eq!(dg.pending_updates(), 5);
         // …until the pending log crosses the fraction: recount + reset.
         // 150 fresh edges against ~250 old ones clears 0.25·m.
         let big: Vec<(u32, u32)> = (0..150u32).map(|i| (i % 30, 30 + i / 30)).collect();
-        let mut dg2 = DynGraph::from_edges(30, 31, &edges[..base], opts);
-        let out = dg2.insert_edges(&big);
+        let mut dg2 = DynGraph::from_edges(30, 31, &edges[..base], opts).unwrap();
+        let out = dg2.insert_edges(&big).unwrap();
         assert_eq!(out.path, UpdatePath::Recount);
         assert_eq!(dg2.pending_updates(), 0);
         assert_matches_static(&dg2, "post-recount");
@@ -892,8 +1082,8 @@ mod tests {
             rebuild_fraction: 0.0,
         };
         let half = edges.len() / 2;
-        let mut dg = DynGraph::from_edges(20, 20, &edges[..half], opts);
-        dg.insert_edges(&edges[half..]);
+        let mut dg = DynGraph::from_edges(20, 20, &edges[..half], opts).unwrap();
+        dg.insert_edges(&edges[half..]).unwrap();
         assert_eq!(dg.total(), brute::total(&g));
         assert_eq!(dg.recount_batches(), 1);
     }
@@ -905,12 +1095,12 @@ mod tests {
         let g = gen::erdos_renyi(16, 18, 120, 13);
         let edges = g.edges();
         let half = edges.len() / 2;
-        let mut dg = DynGraph::from_edges(16, 18, &edges[..half], delta_only());
-        dg.insert_edges(&edges[half..]);
+        let mut dg = DynGraph::from_edges(16, 18, &edges[..half], delta_only()).unwrap();
+        dg.insert_edges(&edges[half..]).unwrap();
         let opts = CountOpts::default();
-        let vc = count_per_vertex(dg.graph(), &opts);
+        let vc = count_per_vertex(dg.graph(), &opts).unwrap();
         assert_eq!(dg.per_vertex_u(), &vc.bu[..]);
         assert_eq!(dg.per_vertex_v(), &vc.bv[..]);
-        assert_eq!(dg.per_edge(), &count_per_edge(dg.graph(), &opts)[..]);
+        assert_eq!(dg.per_edge(), &count_per_edge(dg.graph(), &opts).unwrap()[..]);
     }
 }

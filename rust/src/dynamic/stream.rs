@@ -12,8 +12,12 @@
 //! side-local vertex ids, and `ts` is an optional non-negative integer
 //! timestamp — four-field lines carry one, three-field lines default
 //! to timestamp 0 (so untimestamped streams batch purely by operation
-//! and cap).  Malformed lines fail with a line-numbered error, the
-//! same contract as the [`graph::io`](crate::graph::io) loaders.
+//! and cap).  Under the default **strict** parse ([`parse_stream`])
+//! malformed lines fail with a line-numbered error, the same contract
+//! as the [`graph::io`](crate::graph::io) loaders; the **lenient**
+//! parse ([`parse_stream_lenient`], CLI `--skip-bad-lines`) records
+//! each malformed line as a [`ParseReject`] and keeps going, so one
+//! corrupt line does not discard an otherwise-replayable stream.
 //!
 //! [`group_batches`] groups consecutive events into maximal batches: a
 //! batch extends while the operation and the timestamp stay the same
@@ -45,54 +49,104 @@ pub struct Batch {
     pub edges: Vec<(u32, u32)>,
 }
 
+/// One malformed line skipped by [`parse_stream_lenient`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParseReject {
+    /// 1-indexed line number in the stream file.
+    pub line: usize,
+    /// The offending line, verbatim (trimmed).
+    pub content: String,
+    /// Why it was rejected (the strict parser's error message).
+    pub reason: String,
+}
+
 fn parse_id(tok: &str, what: &str, lineno: usize) -> anyhow::Result<u32> {
     tok.parse::<u32>().map_err(|_| {
         anyhow::anyhow!("line {}: bad {what} id {tok:?} (expected an integer)", lineno + 1)
     })
 }
 
-/// Parse a stream file (see the module docs for the format).
-pub fn parse_stream(path: &Path) -> anyhow::Result<Vec<StreamEvent>> {
+/// Parse one non-comment, non-blank line (`lineno` is 0-indexed).
+fn parse_line(t: &str, lineno: usize) -> anyhow::Result<StreamEvent> {
+    let toks: Vec<&str> = t.split_whitespace().collect();
+    let (ts, rest) = match toks.len() {
+        3 => (0u64, &toks[..]),
+        4 => {
+            let ts = toks[0].parse::<u64>().map_err(|_| {
+                anyhow::anyhow!(
+                    "line {}: bad timestamp {:?} (expected a non-negative integer)",
+                    lineno + 1,
+                    toks[0]
+                )
+            })?;
+            (ts, &toks[1..])
+        }
+        _ => anyhow::bail!(
+            "line {}: expected `[ts] op u v`, got {} fields",
+            lineno + 1,
+            toks.len()
+        ),
+    };
+    let kind = match rest[0] {
+        "+" => BatchKind::Insert,
+        "-" => BatchKind::Delete,
+        other => {
+            anyhow::bail!("line {}: bad op {other:?} (expected `+` or `-`)", lineno + 1)
+        }
+    };
+    let u = parse_id(rest[1], "u", lineno)?;
+    let v = parse_id(rest[2], "v", lineno)?;
+    Ok(StreamEvent { ts, kind, u, v })
+}
+
+fn scan_stream(
+    path: &Path,
+    mut on_bad: impl FnMut(usize, &str, anyhow::Error) -> anyhow::Result<()>,
+) -> anyhow::Result<Vec<StreamEvent>> {
     let f = std::fs::File::open(path)
         .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
     let mut events = Vec::new();
     for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        // I/O errors are never skippable: the rest of the stream is
+        // unreadable, not merely malformed.
         let line = line.map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
             continue;
         }
-        let toks: Vec<&str> = t.split_whitespace().collect();
-        let (ts, rest) = match toks.len() {
-            3 => (0u64, &toks[..]),
-            4 => {
-                let ts = toks[0].parse::<u64>().map_err(|_| {
-                    anyhow::anyhow!(
-                        "line {}: bad timestamp {:?} (expected a non-negative integer)",
-                        lineno + 1,
-                        toks[0]
-                    )
-                })?;
-                (ts, &toks[1..])
-            }
-            _ => anyhow::bail!(
-                "line {}: expected `[ts] op u v`, got {} fields",
-                lineno + 1,
-                toks.len()
-            ),
-        };
-        let kind = match rest[0] {
-            "+" => BatchKind::Insert,
-            "-" => BatchKind::Delete,
-            other => {
-                anyhow::bail!("line {}: bad op {other:?} (expected `+` or `-`)", lineno + 1)
-            }
-        };
-        let u = parse_id(rest[1], "u", lineno)?;
-        let v = parse_id(rest[2], "v", lineno)?;
-        events.push(StreamEvent { ts, kind, u, v });
+        match parse_line(t, lineno) {
+            Ok(e) => events.push(e),
+            Err(e) => on_bad(lineno, t, e)?,
+        }
     }
     Ok(events)
+}
+
+/// Parse a stream file (see the module docs for the format).  Strict:
+/// the first malformed line fails the whole parse with a line-numbered
+/// error.
+pub fn parse_stream(path: &Path) -> anyhow::Result<Vec<StreamEvent>> {
+    scan_stream(path, |_lineno, _content, e| Err(e))
+}
+
+/// Lenient parse (CLI `--skip-bad-lines`): malformed lines are
+/// recorded as [`ParseReject`]s — line number, content, and the strict
+/// parser's reason — and skipped; I/O errors still fail.  The replay
+/// driver surfaces the rejects through
+/// [`DynReport::parse_rejects`](crate::coordinator::DynReport::parse_rejects).
+pub fn parse_stream_lenient(
+    path: &Path,
+) -> anyhow::Result<(Vec<StreamEvent>, Vec<ParseReject>)> {
+    let mut rejects = Vec::new();
+    let events = scan_stream(path, |lineno, content, e| {
+        rejects.push(ParseReject {
+            line: lineno + 1,
+            content: content.to_string(),
+            reason: e.to_string(),
+        });
+        Ok(())
+    })?;
+    Ok((events, rejects))
 }
 
 /// Write a stream file (timestamps included; round-trips
@@ -123,9 +177,10 @@ pub fn group_batches(events: &[StreamEvent], cap: usize) -> Vec<Batch> {
             }
         };
         if split {
-            out.push(Batch { kind: e.kind, edges: Vec::new() });
+            out.push(Batch { kind: e.kind, edges: vec![(e.u, e.v)] });
+        } else if let Some(b) = out.last_mut() {
+            b.edges.push((e.u, e.v));
         }
-        out.last_mut().unwrap().edges.push((e.u, e.v));
         last_ts = e.ts;
     }
     out
@@ -174,6 +229,28 @@ mod tests {
         assert!(events.iter().all(|e| e.ts == 0));
         let batches = group_batches(&events, 0);
         assert_eq!(batches.len(), 2, "op flip splits; ts stays 0");
+    }
+
+    #[test]
+    fn lenient_parse_skips_and_records_bad_lines() {
+        let path = tmp("lenient.txt");
+        std::fs::write(&path, "+ 0 1\nnope\n+ 1 2\n7 ? 3 4\n- 0 1\n").unwrap();
+        let (events, rejects) = parse_stream_lenient(&path).unwrap();
+        assert_eq!(events.len(), 3, "good lines survive");
+        assert_eq!(events[2].kind, BatchKind::Delete);
+        assert_eq!(rejects.len(), 2);
+        assert_eq!((rejects[0].line, rejects[1].line), (2, 4));
+        assert_eq!(rejects[0].content, "nope");
+        assert!(rejects[0].reason.contains("line 2"), "{}", rejects[0].reason);
+        assert!(rejects[1].reason.contains("bad op"), "{}", rejects[1].reason);
+        // Strict mode still rejects the same file outright.
+        assert!(parse_stream(&path).is_err());
+        // A clean file parses identically under both modes.
+        let clean = tmp("clean.txt");
+        std::fs::write(&clean, "+ 0 1\n- 0 1\n").unwrap();
+        let (ev2, rj2) = parse_stream_lenient(&clean).unwrap();
+        assert_eq!(ev2, parse_stream(&clean).unwrap());
+        assert!(rj2.is_empty());
     }
 
     #[test]

@@ -1,0 +1,279 @@
+//! Crate-wide structured errors for the fault-tolerant runtime.
+//!
+//! The parallel engines themselves stay infallible: a failing task
+//! *unwinds*, the pool combinators catch it, drain the remaining work,
+//! and re-raise a structured payload.  Every **public entry point**
+//! (`count_*`, `peel_*`, [`DynGraph`](crate::dynamic::DynGraph)
+//! updates, the coordinator facade, the CLI) converts that payload
+//! into an [`Error`] through [`guard`], so a panic inside any worker
+//! closure — a bug, an injected fault ([`crate::prims::fault`]), or a
+//! cooperative-budget trip ([`crate::prims::budget`]) — surfaces as a
+//! clean `Err` instead of aborting the process.
+//!
+//! Unwind-safety contract: results computed under a [`guard`] are
+//! **discarded on error** — per-worker scratch is dropped (never
+//! re-pooled, see `PoolGuard`), partially-written output arrays are
+//! thrown away with the closure's captures, and retrying the entry
+//! point re-runs from clean inputs.  That discard-on-error semantics
+//! is what justifies the `AssertUnwindSafe` below.
+
+use std::any::Any;
+use std::cell::Cell;
+use std::fmt;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Once;
+
+use crate::prims::budget::Budget;
+
+/// `Result` specialized to the crate's [`Error`].
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A worker task failure caught by the pool: which worker, which task
+/// range it was processing, and the panic payload's message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PoolError {
+    /// Index of the failing worker (0 on the inline 1-thread path).
+    pub worker: usize,
+    /// The task range the worker was processing when it unwound.
+    pub range: Range<usize>,
+    /// The panic payload, stringified.
+    pub message: String,
+}
+
+impl fmt::Display for PoolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "worker {} panicked on tasks {}..{}: {}",
+            self.worker, self.range.start, self.range.end, self.message
+        )
+    }
+}
+
+/// What went wrong, structurally.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// A worker task panicked inside a parallel combinator.
+    Pool(PoolError),
+    /// A panic outside the pool machinery (entry-point serial code).
+    Panic(String),
+    /// The [`Budget`] deadline passed.
+    DeadlineExceeded {
+        /// The configured timeout, in milliseconds.
+        limit_ms: u64,
+    },
+    /// A probed allocation would push live scratch past the budget.
+    MemoryBudgetExceeded {
+        /// Bytes the failing probe asked for.
+        requested: usize,
+        /// Bytes charged so far (an upper bound on live scratch).
+        charged: usize,
+        /// The configured cap.
+        limit: usize,
+        /// What the allocation was for.
+        what: &'static str,
+    },
+    /// The [`Budget`] cancel token was set.
+    Cancelled,
+    /// An injected allocation-probe failure
+    /// ([`crate::prims::fault::FaultPlan`]).
+    AllocFailed {
+        /// Bytes the failing probe asked for.
+        bytes: usize,
+        /// What the allocation was for.
+        what: &'static str,
+    },
+    /// The structure's counts may not match its graph after an earlier
+    /// failure; rebuild before further updates
+    /// ([`DynGraph::rebuild`](crate::dynamic::DynGraph::rebuild)).
+    Poisoned(String),
+}
+
+/// Structured crate error; see [`ErrorKind`] for the cases.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Error {
+    kind: ErrorKind,
+}
+
+impl Error {
+    pub fn kind(&self) -> &ErrorKind {
+        &self.kind
+    }
+
+    pub(crate) fn new(kind: ErrorKind) -> Self {
+        Error { kind }
+    }
+
+    pub(crate) fn poisoned(msg: impl Into<String>) -> Self {
+        Error { kind: ErrorKind::Poisoned(msg.into()) }
+    }
+
+    /// True for cooperative-budget exhaustion (deadline, memory cap,
+    /// cancellation) — the CLI maps these to their own exit code.
+    pub fn is_budget(&self) -> bool {
+        matches!(
+            self.kind,
+            ErrorKind::DeadlineExceeded { .. }
+                | ErrorKind::MemoryBudgetExceeded { .. }
+                | ErrorKind::Cancelled
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.kind {
+            ErrorKind::Pool(p) => write!(f, "parallel task failed: {p}"),
+            ErrorKind::Panic(m) => write!(f, "panicked: {m}"),
+            ErrorKind::DeadlineExceeded { limit_ms } => {
+                write!(f, "budget exhausted: deadline of {limit_ms} ms passed")
+            }
+            ErrorKind::MemoryBudgetExceeded { requested, charged, limit, what } => write!(
+                f,
+                "budget exhausted: allocating {requested} bytes for {what} \
+                 would push charged scratch ({charged} bytes) past the \
+                 {limit}-byte cap"
+            ),
+            ErrorKind::Cancelled => write!(f, "budget exhausted: cancelled"),
+            ErrorKind::AllocFailed { bytes, what } => {
+                write!(f, "allocation of {bytes} bytes for {what} failed (injected)")
+            }
+            ErrorKind::Poisoned(m) => write!(f, "poisoned: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Panic payload used to carry an [`ErrorKind`] through unwinding:
+/// budget trips and pool re-raises travel as this instead of a string,
+/// so nested catch layers keep the innermost structured cause.
+pub(crate) struct Raised(pub(crate) ErrorKind);
+
+thread_local! {
+    /// Set immediately before a [`raise`] so the panic hook stays
+    /// quiet: a structured raise is control flow, not a crash report.
+    static SILENT: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Install (once) a panic hook that swallows exactly the panics
+/// [`raise`] marked as silent and delegates everything else.
+fn install_quiet_hook() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if !SILENT.with(|s| s.replace(false)) {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Unwind with a structured [`ErrorKind`] payload (no hook noise).
+pub(crate) fn raise(kind: ErrorKind) -> ! {
+    install_quiet_hook();
+    SILENT.with(|s| s.set(true));
+    std::panic::panic_any(Raised(kind));
+}
+
+/// Stringify a panic payload (`String` / `&str` / opaque).
+pub(crate) fn payload_message(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = p.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Classify a caught panic payload into an [`ErrorKind`]: structured
+/// [`Raised`] payloads pass through (keeping the innermost cause from
+/// nested combinators), anything else becomes [`ErrorKind::Panic`].
+pub(crate) fn classify_payload(p: Box<dyn Any + Send>) -> ErrorKind {
+    match p.downcast::<Raised>() {
+        Ok(r) => r.0,
+        Err(p) => ErrorKind::Panic(payload_message(p.as_ref())),
+    }
+}
+
+/// Catch any unwind out of `f` and convert it to an [`Error`].
+///
+/// Used at interior fallback points (the dynamic delta walk) where a
+/// failure is recovered from in place rather than surfaced.
+pub(crate) fn catch<T>(f: impl FnOnce() -> T) -> Result<T> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(v) => Ok(v),
+        Err(p) => Err(Error::new(classify_payload(p))),
+    }
+}
+
+/// Entry-point boundary: install `budget` as the active cooperative
+/// budget for the duration of `f` (workers inherit it), catch any
+/// unwind, and convert it to a structured [`Error`].
+pub(crate) fn guard<T>(budget: &Budget, f: impl FnOnce() -> T) -> Result<T> {
+    let _scope = crate::prims::budget::enter(budget);
+    catch(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_converts_plain_panics() {
+        let r: Result<()> = guard(&Budget::default(), || panic!("boom {}", 7));
+        let e = r.unwrap_err();
+        assert_eq!(e.kind(), &ErrorKind::Panic("boom 7".into()));
+        assert!(!e.is_budget());
+        assert!(format!("{e}").contains("boom 7"));
+    }
+
+    #[test]
+    fn guard_passes_raised_kinds_through() {
+        let r: Result<()> =
+            guard(&Budget::default(), || raise(ErrorKind::DeadlineExceeded { limit_ms: 5 }));
+        let e = r.unwrap_err();
+        assert!(e.is_budget());
+        assert_eq!(e.kind(), &ErrorKind::DeadlineExceeded { limit_ms: 5 });
+    }
+
+    #[test]
+    fn nested_catch_keeps_innermost_cause() {
+        let inner = PoolError { worker: 3, range: 10..20, message: "x".into() };
+        let r: Result<()> = catch(|| {
+            let _: Result<()> = Ok(()); // outer serial work
+            raise(ErrorKind::Pool(inner.clone()));
+        });
+        assert_eq!(r.unwrap_err().kind(), &ErrorKind::Pool(inner));
+    }
+
+    #[test]
+    fn errors_format_without_panicking() {
+        for kind in [
+            ErrorKind::Pool(PoolError { worker: 1, range: 0..4, message: "m".into() }),
+            ErrorKind::Panic("p".into()),
+            ErrorKind::DeadlineExceeded { limit_ms: 10 },
+            ErrorKind::MemoryBudgetExceeded { requested: 8, charged: 64, limit: 32, what: "w" },
+            ErrorKind::Cancelled,
+            ErrorKind::AllocFailed { bytes: 4, what: "a" },
+            ErrorKind::Poisoned("q".into()),
+        ] {
+            let e = Error::new(kind);
+            assert!(!format!("{e}").is_empty());
+            assert!(!format!("{e:?}").is_empty());
+        }
+    }
+
+    #[test]
+    fn anyhow_interop_via_question_mark() {
+        fn inner() -> anyhow::Result<()> {
+            Err(Error::new(ErrorKind::Cancelled))?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("cancelled"));
+    }
+}

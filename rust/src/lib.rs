@@ -34,9 +34,16 @@
 //! use parbutterfly::coordinator::{count_butterflies, CountConfig};
 //!
 //! let g = gen::chung_lu(5_000, 8_000, 120_000, 2.1, 42);
-//! let res = count_butterflies(&g, &CountConfig::default());
+//! let res = count_butterflies(&g, &CountConfig::default()).unwrap();
 //! println!("{} butterflies", res.total);
 //! ```
+//!
+//! Every public entry point returns [`error::Result`]: worker panics
+//! are caught at the pool boundary and surfaced as structured
+//! [`Error`]s, and cooperative [`Budget`]s (deadline / live-memory cap
+//! / cancel token, carried in the option structs) stop long runs at
+//! chunk granularity instead of mid-write.  See ARCHITECTURE.md
+//! §"Fault tolerance & budgets".
 //!
 //! See `examples/` for end-to-end drivers and `rust/benches/` for the
 //! harness regenerating every table and figure of the paper.
@@ -48,6 +55,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod count;
 pub mod dynamic;
+pub mod error;
 pub mod graph;
 pub mod peel;
 pub mod prims;
@@ -56,3 +64,5 @@ pub mod runtime;
 pub mod testutil;
 
 pub use coordinator::{CountConfig, PeelConfig};
+pub use error::{Error, ErrorKind, PoolError, Result};
+pub use prims::budget::Budget;

@@ -34,8 +34,10 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::count::WedgeAgg;
+use crate::error::{guard, Result};
 use crate::graph::ranked::walk_grain;
 use crate::graph::{BipartiteGraph, Layout};
+use crate::prims::budget::{self, Budget};
 use crate::prims::histogram::histogram;
 use crate::prims::pool::{
     num_threads, parallel_for_dynamic, parallel_for_dynamic_pooled, ScratchPool,
@@ -65,7 +67,7 @@ pub struct WingResult {
 /// use parbutterfly::peel::{wing_decomposition, PeelEOpts};
 ///
 /// let g = gen::complete_bipartite(2, 2); // one butterfly
-/// let w = wing_decomposition(&g, &CountOpts::default(), &PeelEOpts::default());
+/// let w = wing_decomposition(&g, &CountOpts::default(), &PeelEOpts::default()).unwrap();
 /// assert_eq!(w.wings, vec![1, 1, 1, 1]);
 /// ```
 #[derive(Clone, Debug)]
@@ -80,6 +82,9 @@ pub struct PeelEOpts {
     /// [`PeelEngine::Intersect`] and [`PeelEngine::TwoPhase`] consult
     /// it.  Wing numbers are identical across layouts.
     pub layout: Layout,
+    /// Cooperative limits for this decomposition (see
+    /// [`CountOpts::budget`](crate::count::CountOpts::budget)).
+    pub budget: Budget,
 }
 
 impl Default for PeelEOpts {
@@ -89,6 +94,7 @@ impl Default for PeelEOpts {
             agg: WedgeAgg::Hash,
             buckets: BucketKind::Julienne,
             layout: Layout::default_from_env(),
+            budget: Budget::default(),
         }
     }
 }
@@ -98,7 +104,15 @@ impl Default for PeelEOpts {
 pub(super) const ALIVE: u32 = u32::MAX;
 
 /// Wing decomposition given per-edge butterfly counts.
-pub fn peel_edges(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> WingResult {
+///
+/// Runs under [`PeelEOpts::budget`]; a worker panic, injected fault,
+/// or budget trip returns a structured [`Err`](crate::Error) instead
+/// of aborting.
+pub fn peel_edges(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> Result<WingResult> {
+    guard(&opts.budget, || peel_edges_raw(g, be, opts))
+}
+
+pub(crate) fn peel_edges_raw(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> WingResult {
     // Cache-aware layout: only the stamp-walking engines' dense scratch
     // benefits (Agg ignores `layout` exactly as Intersect ignores
     // `agg`).
@@ -156,7 +170,7 @@ fn peel_edges_relabeled(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> Win
         be2[emap[e] as usize] = c;
     }
     let opts2 = PeelEOpts { layout: Layout::Flat, ..opts.clone() };
-    let r2 = peel_edges(&g2, &be2, &opts2);
+    let r2 = peel_edges_raw(&g2, &be2, &opts2);
     let wings = emap.iter().map(|&e2| r2.wings[e2 as usize]).collect();
     WingResult { wings, rounds: r2.rounds }
 }
@@ -179,6 +193,7 @@ fn degree_desc_perm(n: usize, deg: impl Fn(usize) -> usize) -> Vec<u32> {
 fn peel_edges_agg(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> WingResult {
     let m = g.m();
     assert_eq!(be.len(), m);
+    budget::probe_alloc(m * (4 + 8) + m * 8, "peel-e buckets/wings/delta");
     let mut buckets = make_buckets(opts.buckets, be);
     let mut round_of = vec![ALIVE; m];
     let mut wings = vec![0u64; m];
@@ -230,6 +245,7 @@ pub(super) struct EScratch {
 fn peel_edges_intersect(g: &BipartiteGraph, be: &[u64], opts: &PeelEOpts) -> WingResult {
     let m = g.m();
     assert_eq!(be.len(), m);
+    budget::probe_alloc(m * (4 + 8) + m * 8, "peel-e buckets/wings/delta");
     let mut buckets = make_buckets(opts.buckets, be);
     let mut round_of = vec![ALIVE; m];
     let mut wings = vec![0u64; m];
@@ -319,11 +335,14 @@ pub(super) fn update_e_stamped(
         batch.len(),
         walk_grain(batch.len(), fp),
         pool,
-        || EScratch {
-            stamp_eid: vec![0u32; g.nv()],
-            stamp_tag: vec![ALIVE; g.nv()],
-            stamped: Bitset::new(g.nv()),
-            delta: DenseDelta::new(m),
+        || {
+            budget::probe_alloc(g.nv() * 8 + g.nv() / 8 + m * 8, "peel-e worker scratch");
+            EScratch {
+                stamp_eid: vec![0u32; g.nv()],
+                stamp_tag: vec![ALIVE; g.nv()],
+                stamped: Bitset::new(g.nv()),
+                delta: DenseDelta::new(m),
+            }
         },
         |s, range| {
             for bi in range {
@@ -522,8 +541,8 @@ mod tests {
     use crate::testutil::brute;
 
     fn wings_via(g: &BipartiteGraph, opts: &PeelEOpts) -> WingResult {
-        let be = count_per_edge(g, &CountOpts::default());
-        peel_edges(g, &be, opts)
+        let be = count_per_edge(g, &CountOpts::default()).unwrap();
+        peel_edges(g, &be, opts).unwrap()
     }
 
     #[test]
@@ -567,8 +586,9 @@ mod tests {
     #[test]
     fn intersect_engine_under_real_fork_join() {
         let g = gen::chung_lu(30, 40, 350, 2.1, 19);
-        let be = count_per_edge(&g, &CountOpts::default());
-        let base = peel_edges(&g, &be, &PeelEOpts { engine: PeelEngine::Agg, ..Default::default() });
+        let be = count_per_edge(&g, &CountOpts::default()).unwrap();
+        let base = peel_edges(&g, &be, &PeelEOpts { engine: PeelEngine::Agg, ..Default::default() })
+            .unwrap();
         for t in [1usize, 3, 8] {
             let r = crate::prims::pool::with_threads(t, || {
                 peel_edges(
@@ -576,6 +596,7 @@ mod tests {
                     &be,
                     &PeelEOpts { engine: PeelEngine::Intersect, ..Default::default() },
                 )
+                .unwrap()
             });
             assert_eq!(r.wings, base.wings, "threads={t}");
             assert_eq!(r.rounds, base.rounds, "threads={t}");

@@ -54,6 +54,7 @@ pub use vertex::{peel_vertices, PeelSide, PeelVOpts, TipResult};
 pub use wstore::{wpeel_edges, wpeel_vertices, WedgeStore};
 
 use crate::count::{count_per_edge, count_per_vertex, CountOpts};
+use crate::error::Result;
 use crate::graph::BipartiteGraph;
 
 /// Which update engine a peeling run uses (carried by
@@ -115,15 +116,26 @@ impl Default for PeelEngine {
     }
 }
 
-/// Count + vertex-peel in one call.
-pub fn tip_decomposition(g: &BipartiteGraph, copts: &CountOpts, popts: &PeelVOpts) -> TipResult {
-    let vc = count_per_vertex(g, copts);
+/// Count + vertex-peel in one call.  The counting step runs under
+/// `copts.budget` and the peel under `popts.budget`; the first failure
+/// surfaces as a structured `Err`.
+pub fn tip_decomposition(
+    g: &BipartiteGraph,
+    copts: &CountOpts,
+    popts: &PeelVOpts,
+) -> Result<TipResult> {
+    let vc = count_per_vertex(g, copts)?;
     peel_vertices(g, &vc.bu, &vc.bv, popts)
 }
 
-/// Count + edge-peel in one call.
-pub fn wing_decomposition(g: &BipartiteGraph, copts: &CountOpts, popts: &PeelEOpts) -> WingResult {
-    let be = count_per_edge(g, copts);
+/// Count + edge-peel in one call.  Budgets compose as in
+/// [`tip_decomposition`].
+pub fn wing_decomposition(
+    g: &BipartiteGraph,
+    copts: &CountOpts,
+    popts: &PeelEOpts,
+) -> Result<WingResult> {
+    let be = count_per_edge(g, copts)?;
     peel_edges(g, &be, popts)
 }
 
@@ -158,13 +170,15 @@ mod tests {
                 &g,
                 &CountOpts::default(),
                 &PeelVOpts { engine, side: PeelSide::U, ..Default::default() },
-            );
+            )
+            .unwrap();
             assert_eq!(t.tips, brute::tip_numbers_u(&g), "{engine:?}");
             let w = wing_decomposition(
                 &g,
                 &CountOpts::default(),
                 &PeelEOpts { engine, ..Default::default() },
-            );
+            )
+            .unwrap();
             assert_eq!(w.wings, brute::wing_numbers(&g), "{engine:?}");
         }
     }
@@ -178,7 +192,8 @@ mod tests {
             &g,
             &CountOpts::default(),
             &PeelVOpts { side: PeelSide::U, ..Default::default() },
-        );
+        )
+        .unwrap();
         assert_eq!(t.tips, brute::tip_numbers_u(&g));
         // The most social women (Theresa/Evelyn cluster) survive the
         // longest: their tip numbers are maximal.

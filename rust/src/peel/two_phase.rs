@@ -608,14 +608,15 @@ mod tests {
     fn two_phase_tips_match_agg() {
         for seed in [3, 17, 29] {
             let g = gen::chung_lu(30, 36, 320, 2.0, seed);
-            let vc = count_per_vertex(&g, &CountOpts::default());
+            let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
             for side in [PeelSide::U, PeelSide::V] {
                 let base = super::super::vertex::peel_vertices(
                     &g,
                     &vc.bu,
                     &vc.bv,
                     &PeelVOpts { engine: PeelEngine::Agg, side, ..Default::default() },
-                );
+                )
+                .unwrap();
                 let two = super::super::vertex::peel_vertices(
                     &g,
                     &vc.bu,
@@ -626,7 +627,8 @@ mod tests {
                         layout: Layout::Flat,
                         ..Default::default()
                     },
-                );
+                )
+                .unwrap();
                 assert_eq!(two.tips, base.tips, "seed={seed} side={side:?}");
                 assert_eq!(two.peeled_u, base.peeled_u);
             }
@@ -637,12 +639,13 @@ mod tests {
     fn two_phase_wings_match_agg() {
         for seed in [5, 23] {
             let g = gen::chung_lu(26, 30, 260, 2.1, seed);
-            let be = count_per_edge(&g, &CountOpts::default());
+            let be = count_per_edge(&g, &CountOpts::default()).unwrap();
             let base = super::super::edge::peel_edges(
                 &g,
                 &be,
                 &PeelEOpts { engine: PeelEngine::Agg, ..Default::default() },
-            );
+            )
+            .unwrap();
             let two = super::super::edge::peel_edges(
                 &g,
                 &be,
@@ -651,7 +654,8 @@ mod tests {
                     layout: Layout::Flat,
                     ..Default::default()
                 },
-            );
+            )
+            .unwrap();
             assert_eq!(two.wings, base.wings, "seed={seed}");
         }
     }
@@ -659,8 +663,8 @@ mod tests {
     #[test]
     fn two_phase_composes_with_hub_layout() {
         let g = gen::chung_lu(28, 34, 300, 2.0, 77);
-        let vc = count_per_vertex(&g, &CountOpts::default());
-        let be = count_per_edge(&g, &CountOpts::default());
+        let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
+        let be = count_per_edge(&g, &CountOpts::default()).unwrap();
         let flat = super::super::vertex::peel_vertices(
             &g,
             &vc.bu,
@@ -671,7 +675,8 @@ mod tests {
                 layout: Layout::Flat,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let hub = super::super::vertex::peel_vertices(
             &g,
             &vc.bu,
@@ -682,18 +687,21 @@ mod tests {
                 layout: Layout::Hub,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         assert_eq!(hub.tips, flat.tips);
         let wf = super::super::edge::peel_edges(
             &g,
             &be,
             &PeelEOpts { engine: PeelEngine::TwoPhase, layout: Layout::Flat, ..Default::default() },
-        );
+        )
+        .unwrap();
         let wh = super::super::edge::peel_edges(
             &g,
             &be,
             &PeelEOpts { engine: PeelEngine::TwoPhase, layout: Layout::Hub, ..Default::default() },
-        );
+        )
+        .unwrap();
         assert_eq!(wh.wings, wf.wings);
     }
 }

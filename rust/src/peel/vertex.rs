@@ -33,10 +33,12 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::count::intersect::TouchedCounter;
+use crate::error::{guard, Result};
 use crate::count::wedges::key_endpoints;
 use crate::count::{choose2, WedgeAgg};
 use crate::graph::ranked::walk_grain;
 use crate::graph::{BipartiteGraph, Layout};
+use crate::prims::budget::{self, Budget};
 use crate::prims::hashtable::CountTable;
 use crate::prims::histogram::histogram;
 use crate::prims::pool::{
@@ -79,7 +81,7 @@ pub struct TipResult {
 ///
 /// let g = gen::complete_bipartite(3, 4);
 /// let opts = PeelVOpts { side: PeelSide::U, ..Default::default() };
-/// let t = tip_decomposition(&g, &CountOpts::default(), &opts);
+/// let t = tip_decomposition(&g, &CountOpts::default(), &opts).unwrap();
 /// // Every U vertex of K_{3,4} sits in C(2,1)·C(4,2) = 12 butterflies
 /// // and they all peel together.
 /// assert_eq!(t.tips, vec![12, 12, 12]);
@@ -97,6 +99,9 @@ pub struct PeelVOpts {
     /// and [`PeelEngine::TwoPhase`] consult it; tip numbers are
     /// identical across layouts.
     pub layout: Layout,
+    /// Cooperative limits for this decomposition (see
+    /// [`CountOpts::budget`](crate::count::CountOpts::budget)).
+    pub budget: Budget,
 }
 
 impl Default for PeelVOpts {
@@ -110,6 +115,7 @@ impl Default for PeelVOpts {
             buckets: BucketKind::Julienne,
             side: PeelSide::Auto,
             layout: Layout::default_from_env(),
+            budget: Budget::default(),
         }
     }
 }
@@ -177,7 +183,25 @@ impl<'a> SideView<'a> {
 
 /// Tip decomposition given per-vertex butterfly counts for both sides
 /// (from the counting framework — step 1 of Figure 4).
-pub fn peel_vertices(g: &BipartiteGraph, bu: &[u64], bv: &[u64], opts: &PeelVOpts) -> TipResult {
+///
+/// Runs under [`PeelVOpts::budget`]; a worker panic, injected fault,
+/// or budget trip returns a structured [`Err`](crate::Error) instead
+/// of aborting.
+pub fn peel_vertices(
+    g: &BipartiteGraph,
+    bu: &[u64],
+    bv: &[u64],
+    opts: &PeelVOpts,
+) -> Result<TipResult> {
+    guard(&opts.budget, || peel_vertices_raw(g, bu, bv, opts))
+}
+
+pub(crate) fn peel_vertices_raw(
+    g: &BipartiteGraph,
+    bu: &[u64],
+    bv: &[u64],
+    opts: &PeelVOpts,
+) -> TipResult {
     let peel_u = match opts.side {
         PeelSide::U => true,
         PeelSide::V => false,
@@ -263,7 +287,7 @@ fn peel_vertices_relabeled(
         side: if peel_u { PeelSide::U } else { PeelSide::V },
         ..opts.clone()
     };
-    let r2 = peel_vertices(&g2, &bu2, &bv2, &opts2);
+    let r2 = peel_vertices_raw(&g2, &bu2, &bv2, &opts2);
     let perm = if peel_u { &perm_u } else { &perm_v };
     let tips = perm.iter().map(|&p| r2.tips[p as usize]).collect();
     TipResult { peeled_u: peel_u, tips, rounds: r2.rounds }
@@ -272,6 +296,7 @@ fn peel_vertices_relabeled(
 /// The aggregation engine: UPDATE-V through `opts.agg`.
 fn peel_vertices_agg(view: &SideView<'_>, counts: &[u64], opts: &PeelVOpts) -> TipResult {
     let n = view.n_peel();
+    budget::probe_alloc(n * (8 + 1) + 2 * n * 8, "peel-v buckets/tips/delta scratch");
     let mut buckets = make_buckets(opts.buckets, counts);
     let mut peeled = vec![false; n];
     let mut tips = vec![0u64; n];
@@ -316,6 +341,7 @@ pub(super) struct VScratch {
 /// dead vertices are simply no longer in the view.
 fn peel_vertices_intersect(view: &SideView<'_>, counts: &[u64], opts: &PeelVOpts) -> TipResult {
     let n = view.n_peel();
+    budget::probe_alloc(n * 8 + 2 * n * 8, "peel-v live view/tips/delta");
     let mut live = view.live_centers();
     let mut buckets = make_buckets(opts.buckets, counts);
     let mut tips = vec![0u64; n];
@@ -352,7 +378,10 @@ fn peel_vertices_intersect(view: &SideView<'_>, counts: &[u64], opts: &PeelVOpts
                 batch.len(),
                 walk_grain(batch.len(), fp),
                 &pool,
-                || VScratch { ctr: TouchedCounter::new(n), delta: DenseDelta::new(n) },
+                || {
+                    budget::probe_alloc(2 * n * 8, "peel-v worker scratch");
+                    VScratch { ctr: TouchedCounter::new(n), delta: DenseDelta::new(n) }
+                },
                 |s, range| {
                     for bi in range {
                         let x1 = batch[bi];
@@ -567,8 +596,8 @@ mod tests {
     use crate::testutil::brute;
 
     fn tips_via(g: &BipartiteGraph, opts: &PeelVOpts) -> TipResult {
-        let vc = count_per_vertex(g, &CountOpts::default());
-        peel_vertices(g, &vc.bu, &vc.bv, opts)
+        let vc = count_per_vertex(g, &CountOpts::default()).unwrap();
+        peel_vertices(g, &vc.bu, &vc.bv, opts).unwrap()
     }
 
     #[test]
@@ -628,13 +657,14 @@ mod tests {
         // The pooled-scratch + parallel-merge machinery must produce
         // identical tips at every thread count.
         let g = gen::chung_lu(40, 50, 500, 2.1, 13);
-        let vc = count_per_vertex(&g, &CountOpts::default());
+        let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
         let base = peel_vertices(
             &g,
             &vc.bu,
             &vc.bv,
             &PeelVOpts { engine: PeelEngine::Agg, side: PeelSide::U, ..Default::default() },
-        );
+        )
+        .unwrap();
         for t in [1usize, 3, 8] {
             let r = crate::prims::pool::with_threads(t, || {
                 peel_vertices(
@@ -647,6 +677,7 @@ mod tests {
                         ..Default::default()
                     },
                 )
+                .unwrap()
             });
             assert_eq!(r.tips, base.tips, "threads={t}");
             assert_eq!(r.rounds, base.rounds, "threads={t}");

@@ -307,7 +307,7 @@ mod tests {
         for seed in [1, 4, 8] {
             let g = gen::erdos_renyi(12, 13, 70, seed);
             let expect = brute::tip_numbers_u(&g);
-            let vc = count_per_vertex(&g, &CountOpts::default());
+            let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
             for ranking in [Ranking::Side, Ranking::Degree] {
                 let store = WedgeStore::build(&g, ranking);
                 for bk in BucketKind::ALL {
@@ -321,7 +321,7 @@ mod tests {
     #[test]
     fn wpeel_v_v_side() {
         let g = gen::erdos_renyi(10, 11, 60, 6);
-        let vc = count_per_vertex(&g, &CountOpts::default());
+        let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
         // Mirror graph for the brute-force expectation.
         let edges_t: Vec<(u32, u32)> = g.edges().into_iter().map(|(u, v)| (v, u)).collect();
         let gt = BipartiteGraph::from_edges(g.nv(), g.nu(), &edges_t);
@@ -337,7 +337,7 @@ mod tests {
         for seed in [2, 5] {
             let g = gen::erdos_renyi(8, 9, 40, seed);
             let expect = brute::wing_numbers(&g);
-            let be = count_per_edge(&g, &CountOpts::default());
+            let be = count_per_edge(&g, &CountOpts::default()).unwrap();
             for ranking in [Ranking::Side, Ranking::Degree] {
                 let store = WedgeStore::build(&g, ranking);
                 for bk in BucketKind::ALL {
@@ -351,8 +351,8 @@ mod tests {
     #[test]
     fn wpeel_agrees_with_peel() {
         let g = gen::planted_blocks(10, 10, 2, 5, 5, 0.9, 10, 7);
-        let vc = count_per_vertex(&g, &CountOpts::default());
-        let be = count_per_edge(&g, &CountOpts::default());
+        let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
+        let be = count_per_edge(&g, &CountOpts::default()).unwrap();
         let store = WedgeStore::build(&g, Ranking::Degree);
         let wv = wpeel_vertices(&g, &store, &vc.bu, &vc.bv, PeelSide::U, BucketKind::FibHeap);
         let pv = super::super::vertex::peel_vertices(
@@ -363,10 +363,11 @@ mod tests {
                 side: PeelSide::U,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         assert_eq!(wv.tips, pv.tips);
         let we = wpeel_edges(&g, &store, &be, BucketKind::FibHeap);
-        let pe = super::super::edge::peel_edges(&g, &be, &Default::default());
+        let pe = super::super::edge::peel_edges(&g, &be, &Default::default()).unwrap();
         assert_eq!(we.wings, pe.wings);
     }
 }

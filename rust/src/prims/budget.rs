@@ -1,0 +1,263 @@
+//! Cooperative execution budgets: deadline, memory cap, cancel token.
+//!
+//! A [`Budget`] rides in the option structs
+//! ([`CountOpts`](crate::count::CountOpts),
+//! [`PeelVOpts`](crate::peel::PeelVOpts),
+//! [`PeelEOpts`](crate::peel::PeelEOpts),
+//! [`DynOpts`](crate::dynamic::DynOpts)); the entry-point guard
+//! ([`crate::error`]) installs it as the thread-local *active* budget
+//! for the duration of the call, and the pool combinators re-install
+//! it inside every spawned worker.  The hot loops never thread a
+//! handle around: [`check`] reads the thread-local and is a no-op when
+//! no budget is active.
+//!
+//! Checks are **amortized**: the pool calls [`check`] once per claimed
+//! task (a `MIN_GRAIN`-sized range, ≥1024 items), and round-based
+//! algorithms (peeling, the dynamic walks) add one call per round — so
+//! the cost is one thread-local read and, at most, one `Instant::now`
+//! per thousand items.  A tripped budget unwinds with a structured
+//! payload ([`crate::error::raise`]) that the entry-point guard
+//! converts to [`ErrorKind::DeadlineExceeded`] /
+//! [`MemoryBudgetExceeded`](ErrorKind::MemoryBudgetExceeded) /
+//! [`Cancelled`](ErrorKind::Cancelled).
+//!
+//! Memory accounting is **charge-only**: [`probe_alloc`] sums the
+//! bytes of every major scratch allocation and never decrements, so
+//! the charged total is an upper bound on live scratch — a run that
+//! stays under the cap is guaranteed never to have held more live
+//! probe-tracked bytes than the cap.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::{raise, ErrorKind};
+use crate::prims::fault;
+
+/// Cooperative limits for one entry-point call.  `Default` is
+/// unlimited; construct with the builders or struct syntax.
+///
+/// ```
+/// use parbutterfly::prims::budget::Budget;
+///
+/// let b = Budget::default().with_timeout_ms(250).with_max_live_bytes(1 << 30);
+/// assert!(!b.is_unlimited());
+/// assert!(Budget::default().is_unlimited());
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct Budget {
+    /// Wall-clock limit for the call, measured from entry.
+    pub timeout: Option<Duration>,
+    /// Cap on probe-tracked scratch bytes (charge-only upper bound).
+    pub max_live_bytes: Option<usize>,
+    /// External cancel token: set it from another thread and the call
+    /// returns [`ErrorKind::Cancelled`] at the next check.
+    pub cancel: Option<Arc<AtomicBool>>,
+}
+
+impl Budget {
+    pub fn with_timeout_ms(mut self, ms: u64) -> Self {
+        self.timeout = Some(Duration::from_millis(ms));
+        self
+    }
+
+    pub fn with_max_live_bytes(mut self, bytes: usize) -> Self {
+        self.max_live_bytes = Some(bytes);
+        self
+    }
+
+    pub fn with_cancel(mut self, token: Arc<AtomicBool>) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+
+    /// No limits at all — [`check`] short-circuits to a no-op.
+    pub fn is_unlimited(&self) -> bool {
+        self.timeout.is_none() && self.max_live_bytes.is_none() && self.cancel.is_none()
+    }
+}
+
+/// A budget armed at entry time: deadline resolved, charge counter
+/// live.  Shared (`Arc`) between the entry thread and pool workers.
+pub(crate) struct ActiveBudget {
+    deadline: Option<Instant>,
+    limit_ms: u64,
+    max_live_bytes: Option<usize>,
+    charged: AtomicUsize,
+    cancel: Option<Arc<AtomicBool>>,
+}
+
+impl ActiveBudget {
+    fn arm(b: &Budget) -> Self {
+        ActiveBudget {
+            deadline: b.timeout.map(|t| Instant::now() + t),
+            limit_ms: b.timeout.map(|t| t.as_millis() as u64).unwrap_or(0),
+            max_live_bytes: b.max_live_bytes,
+            charged: AtomicUsize::new(0),
+            cancel: b.cancel.clone(),
+        }
+    }
+
+    fn check(&self) {
+        if let Some(c) = &self.cancel {
+            if c.load(Ordering::Relaxed) {
+                raise(ErrorKind::Cancelled);
+            }
+        }
+        if let Some(d) = self.deadline {
+            if Instant::now() > d {
+                raise(ErrorKind::DeadlineExceeded { limit_ms: self.limit_ms });
+            }
+        }
+    }
+
+    fn charge(&self, bytes: usize, what: &'static str) {
+        if let Some(limit) = self.max_live_bytes {
+            let before = self.charged.fetch_add(bytes, Ordering::Relaxed);
+            if before.saturating_add(bytes) > limit {
+                raise(ErrorKind::MemoryBudgetExceeded {
+                    requested: bytes,
+                    charged: before,
+                    limit,
+                    what,
+                });
+            }
+        }
+    }
+}
+
+thread_local! {
+    /// The budget governing work on this thread, if any.
+    static ACTIVE: RefCell<Option<Arc<ActiveBudget>>> = const { RefCell::new(None) };
+}
+
+/// RAII scope restoring the previously-active budget on drop (also on
+/// unwind, so a caught budget trip leaves the thread clean for retry).
+pub(crate) struct Scope {
+    prev: Option<Arc<ActiveBudget>>,
+}
+
+impl Drop for Scope {
+    fn drop(&mut self) {
+        ACTIVE.with(|a| *a.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Arm `b` as this thread's active budget until the scope drops.  An
+/// unlimited budget still replaces the previous one: each entry point
+/// is governed by exactly the budget its own options carry.
+pub(crate) fn enter(b: &Budget) -> Scope {
+    let armed = if b.is_unlimited() { None } else { Some(Arc::new(ActiveBudget::arm(b))) };
+    Scope { prev: ACTIVE.with(|a| a.replace(armed)) }
+}
+
+/// Suspend any active budget until the scope drops — used by the
+/// dynamic fallback path, where the *recovery* recount must not be
+/// killed by the budget that killed the fast path (exactness over
+/// latency once degradation has begun).
+pub(crate) fn suspend() -> Scope {
+    Scope { prev: ACTIVE.with(|a| a.replace(None)) }
+}
+
+/// Snapshot the active budget for handing to a spawned worker.
+pub(crate) fn current() -> Option<Arc<ActiveBudget>> {
+    ACTIVE.with(|a| a.borrow().clone())
+}
+
+/// Install a snapshot on a fresh worker thread (no restore needed —
+/// the thread is scoped to one combinator call).
+pub(crate) fn adopt(ab: Option<Arc<ActiveBudget>>) {
+    ACTIVE.with(|a| *a.borrow_mut() = ab);
+}
+
+/// Cooperative check point: unwinds with a structured payload when the
+/// active budget's cancel token is set or its deadline has passed.
+/// No-op (one thread-local read) when no budget is active.
+#[inline]
+pub fn check() {
+    ACTIVE.with(|a| {
+        if let Some(ab) = a.borrow().as_ref() {
+            ab.check();
+        }
+    });
+}
+
+/// Allocation probe: report an imminent major scratch allocation.
+/// Feeds the fault-injection plan (which may fail the probe) and the
+/// active budget's memory accounting (which may trip the cap).
+#[inline]
+pub fn probe_alloc(bytes: usize, what: &'static str) {
+    fault::on_alloc(bytes, what);
+    ACTIVE.with(|a| {
+        if let Some(ab) = a.borrow().as_ref() {
+            ab.charge(bytes, what);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::{catch, ErrorKind};
+
+    #[test]
+    fn unlimited_budget_checks_are_noops() {
+        let _s = enter(&Budget::default());
+        check();
+        probe_alloc(usize::MAX, "nothing");
+    }
+
+    #[test]
+    fn cancel_token_trips_check() {
+        let token = Arc::new(AtomicBool::new(false));
+        let b = Budget::default().with_cancel(token.clone());
+        let _s = enter(&b);
+        check(); // not cancelled yet
+        token.store(true, Ordering::Relaxed);
+        let e = catch(check).unwrap_err();
+        assert_eq!(e.kind(), &ErrorKind::Cancelled);
+    }
+
+    #[test]
+    fn expired_deadline_trips_check() {
+        let b = Budget { timeout: Some(Duration::from_millis(0)), ..Default::default() };
+        let _s = enter(&b);
+        std::thread::sleep(Duration::from_millis(2));
+        let e = catch(check).unwrap_err();
+        assert_eq!(e.kind(), &ErrorKind::DeadlineExceeded { limit_ms: 0 });
+    }
+
+    #[test]
+    fn memory_cap_trips_on_cumulative_charge() {
+        let b = Budget::default().with_max_live_bytes(100);
+        let _s = enter(&b);
+        probe_alloc(60, "first");
+        let e = catch(|| probe_alloc(60, "second")).unwrap_err();
+        match e.kind() {
+            ErrorKind::MemoryBudgetExceeded { requested, charged, limit, what } => {
+                assert_eq!((*requested, *charged, *limit, *what), (60, 60, 100, "second"));
+            }
+            k => panic!("unexpected kind {k:?}"),
+        }
+    }
+
+    #[test]
+    fn scopes_nest_and_restore() {
+        let outer = Budget::default().with_max_live_bytes(10);
+        let s1 = enter(&outer);
+        {
+            let _s2 = enter(&Budget::default()); // inner unlimited replaces
+            probe_alloc(1 << 40, "inner"); // no trip
+        }
+        // outer budget restored
+        let e = catch(|| probe_alloc(11, "outer")).unwrap_err();
+        assert!(matches!(e.kind(), ErrorKind::MemoryBudgetExceeded { .. }));
+        {
+            let _s3 = suspend();
+            probe_alloc(1 << 40, "suspended"); // no trip
+        }
+        drop(s1);
+        probe_alloc(1 << 40, "after"); // no active budget
+    }
+}

@@ -1,0 +1,284 @@
+//! Deterministic fault injection for the parallel runtime.
+//!
+//! A [`FaultPlan`] names up to three single-shot faults, addressed by
+//! global event ordinals so a plan means the same thing at every
+//! thread count:
+//!
+//! * `panic@task=K` — the K-th task claimed by any pool combinator
+//!   (0-based, counted across the whole process run) panics with a
+//!   plain string payload, exercising the worker `catch_unwind` path
+//!   exactly like a real bug would;
+//! * `delay@task=J:MS` — the J-th claimed task sleeps `MS`
+//!   milliseconds first (stragglers must not change results or hang
+//!   the drain logic);
+//! * `fail@alloc=N` — the N-th allocation probe
+//!   ([`budget::probe_alloc`](crate::prims::budget::probe_alloc))
+//!   unwinds with [`ErrorKind::AllocFailed`], simulating an
+//!   out-of-memory scratch allocation.
+//!
+//! Enable a plan process-wide with `PARBUTTERFLY_FAULT=<spec>` (a
+//! comma-separated list of the directives above; a malformed spec
+//! panics rather than silently running fault-free), or scoped in tests
+//! with [`with_plan`], which serializes plan-holding tests behind a
+//! global lock and restores the previous plan afterwards.
+//!
+//! When no plan is installed the hooks are a single relaxed atomic
+//! load — cheap enough to sit on every task claim of every hot loop.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, Once};
+use std::time::Duration;
+
+use crate::error::{raise, ErrorKind};
+
+/// Sentinel for "directive not set" in the atomic plan slots.
+const OFF: u64 = u64::MAX;
+
+/// Fast path: false means every hook returns immediately.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// The installed plan, flattened into atomics so hooks stay lock-free.
+static PANIC_AT: AtomicU64 = AtomicU64::new(OFF);
+static DELAY_AT: AtomicU64 = AtomicU64::new(OFF);
+static DELAY_MS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_AT: AtomicU64 = AtomicU64::new(OFF);
+
+/// Global event ordinals (reset when a plan is installed).
+static TASKS: AtomicU64 = AtomicU64::new(0);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Serializes [`with_plan`] callers (the plan is process-global).
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// A deterministic single-shot fault plan; see the module docs for the
+/// directive semantics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Panic the k-th claimed task.
+    pub panic_task: Option<u64>,
+    /// Delay the j-th claimed task by the given milliseconds.
+    pub delay_task: Option<(u64, u64)>,
+    /// Fail the n-th allocation probe.
+    pub fail_alloc: Option<u64>,
+}
+
+impl FaultPlan {
+    /// Plan that panics the `k`-th claimed task.
+    pub fn panic_at_task(k: u64) -> Self {
+        FaultPlan { panic_task: Some(k), ..Default::default() }
+    }
+
+    /// Plan that delays the `j`-th claimed task by `ms` milliseconds.
+    pub fn delay_at_task(j: u64, ms: u64) -> Self {
+        FaultPlan { delay_task: Some((j, ms)), ..Default::default() }
+    }
+
+    /// Plan that fails the `n`-th allocation probe.
+    pub fn fail_at_alloc(n: u64) -> Self {
+        FaultPlan { fail_alloc: Some(n), ..Default::default() }
+    }
+
+    /// Derive a panic-task plan from a seed: a cheap splitmix step maps
+    /// the seed onto `0..max_task`, so test sweeps cover the task space
+    /// without hand-picking ordinals.
+    pub fn seeded_panic(seed: u64, max_task: u64) -> Self {
+        let mut z = seed.wrapping_add(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^= z >> 31;
+        Self::panic_at_task(z % max_task.max(1))
+    }
+
+    /// Parse a `PARBUTTERFLY_FAULT` spec: comma-separated
+    /// `panic@task=K` / `delay@task=J:MS` / `fail@alloc=N` directives.
+    /// Strict: an unknown directive or malformed number is an error
+    /// naming the offending part.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if let Some(k) = part.strip_prefix("panic@task=") {
+                plan.panic_task =
+                    Some(k.parse().map_err(|_| format!("bad task ordinal in {part:?}"))?);
+            } else if let Some(rest) = part.strip_prefix("delay@task=") {
+                let (j, ms) = rest
+                    .split_once(':')
+                    .ok_or_else(|| format!("{part:?} needs the form delay@task=J:MS"))?;
+                plan.delay_task = Some((
+                    j.parse().map_err(|_| format!("bad task ordinal in {part:?}"))?,
+                    ms.parse().map_err(|_| format!("bad delay millis in {part:?}"))?,
+                ));
+            } else if let Some(n) = part.strip_prefix("fail@alloc=") {
+                plan.fail_alloc =
+                    Some(n.parse().map_err(|_| format!("bad alloc ordinal in {part:?}"))?);
+            } else {
+                return Err(format!(
+                    "{part:?} is not a fault directive \
+                     (panic@task=K | delay@task=J:MS | fail@alloc=N)"
+                ));
+            }
+        }
+        Ok(plan)
+    }
+
+    fn is_empty(&self) -> bool {
+        self.panic_task.is_none() && self.delay_task.is_none() && self.fail_alloc.is_none()
+    }
+}
+
+/// Snapshot of the installed atomics, for save/restore in [`with_plan`].
+fn snapshot() -> (bool, u64, u64, u64, u64) {
+    (
+        ENABLED.load(Ordering::SeqCst),
+        PANIC_AT.load(Ordering::SeqCst),
+        DELAY_AT.load(Ordering::SeqCst),
+        DELAY_MS.load(Ordering::SeqCst),
+        ALLOC_AT.load(Ordering::SeqCst),
+    )
+}
+
+/// Flatten `plan` into the atomic slots and reset the event ordinals.
+fn install(plan: &FaultPlan) {
+    PANIC_AT.store(plan.panic_task.unwrap_or(OFF), Ordering::SeqCst);
+    let (j, ms) = plan.delay_task.unwrap_or((OFF, 0));
+    DELAY_AT.store(j, Ordering::SeqCst);
+    DELAY_MS.store(ms, Ordering::SeqCst);
+    ALLOC_AT.store(plan.fail_alloc.unwrap_or(OFF), Ordering::SeqCst);
+    TASKS.store(0, Ordering::SeqCst);
+    ALLOCS.store(0, Ordering::SeqCst);
+    ENABLED.store(!plan.is_empty(), Ordering::SeqCst);
+}
+
+/// Parse `PARBUTTERFLY_FAULT` (once) and install it.  A set-but-
+/// malformed spec panics: a typo'd CI plan must not silently run the
+/// fault leg fault-free.
+fn env_init() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        if let Ok(spec) = std::env::var("PARBUTTERFLY_FAULT") {
+            match FaultPlan::parse(&spec) {
+                Ok(plan) => install(&plan),
+                Err(e) => panic!("PARBUTTERFLY_FAULT={spec:?}: {e}"),
+            }
+        }
+    });
+}
+
+/// True when a fault plan (env or [`with_plan`]) is currently armed.
+pub fn active() -> bool {
+    env_init();
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Run `f` with `plan` installed, restoring the previous plan (usually
+/// none) afterwards — even if `f` panics.  Plan-holding callers are
+/// serialized behind a global lock, so concurrent tests cannot see
+/// each other's faults.
+pub fn with_plan<R>(plan: &FaultPlan, f: impl FnOnce() -> R) -> R {
+    env_init();
+    let _lock: MutexGuard<'_, ()> = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let prev = snapshot();
+    install(plan);
+    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+    ENABLED.store(prev.0, Ordering::SeqCst);
+    PANIC_AT.store(prev.1, Ordering::SeqCst);
+    DELAY_AT.store(prev.2, Ordering::SeqCst);
+    DELAY_MS.store(prev.3, Ordering::SeqCst);
+    ALLOC_AT.store(prev.4, Ordering::SeqCst);
+    match out {
+        Ok(r) => r,
+        Err(p) => std::panic::resume_unwind(p),
+    }
+}
+
+/// Task-claim hook, called by the pool once per claimed task range.
+/// May sleep (delay directive) or panic (panic directive).
+#[inline]
+pub(crate) fn on_task() {
+    env_init();
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let t = TASKS.fetch_add(1, Ordering::Relaxed);
+    if t == DELAY_AT.load(Ordering::Relaxed) {
+        std::thread::sleep(Duration::from_millis(DELAY_MS.load(Ordering::Relaxed)));
+    }
+    if t == PANIC_AT.load(Ordering::Relaxed) {
+        panic!("injected fault: panic at task {t}");
+    }
+}
+
+/// Allocation-probe hook, called by
+/// [`budget::probe_alloc`](crate::prims::budget::probe_alloc).
+#[inline]
+pub(crate) fn on_alloc(bytes: usize, what: &'static str) {
+    env_init();
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let a = ALLOCS.fetch_add(1, Ordering::Relaxed);
+    if a == ALLOC_AT.load(Ordering::Relaxed) {
+        raise(ErrorKind::AllocFailed { bytes, what });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::catch;
+
+    #[test]
+    fn specs_parse_strictly() {
+        let p = FaultPlan::parse("panic@task=3, delay@task=5:20,fail@alloc=2").unwrap();
+        assert_eq!(p.panic_task, Some(3));
+        assert_eq!(p.delay_task, Some((5, 20)));
+        assert_eq!(p.fail_alloc, Some(2));
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        for bad in ["panic@task=x", "delay@task=5", "nonsense", "fail@alloc="] {
+            let e = FaultPlan::parse(bad).unwrap_err();
+            assert!(e.contains(bad.split('=').next().unwrap_or(bad)), "{bad} -> {e}");
+        }
+    }
+
+    #[test]
+    fn panic_directive_fires_exactly_once() {
+        with_plan(&FaultPlan::panic_at_task(1), || {
+            on_task(); // task 0: clean
+            let e = catch(on_task).unwrap_err(); // task 1: injected
+            assert!(format!("{e}").contains("injected fault"));
+            on_task(); // task 2: clean again (single shot)
+        });
+        on_task(); // plan restored to none
+    }
+
+    #[test]
+    fn alloc_directive_raises_structured_kind() {
+        with_plan(&FaultPlan::fail_at_alloc(0), || {
+            let e = catch(|| on_alloc(128, "scratch")).unwrap_err();
+            assert_eq!(e.kind(), &ErrorKind::AllocFailed { bytes: 128, what: "scratch" });
+            on_alloc(64, "later"); // single shot
+        });
+    }
+
+    #[test]
+    fn with_plan_restores_after_inner_panic() {
+        let r = catch(|| {
+            with_plan(&FaultPlan::panic_at_task(0), || {
+                on_task();
+            })
+        });
+        assert!(r.is_err());
+        assert!(!active(), "plan must be uninstalled after the unwind");
+    }
+
+    #[test]
+    fn seeded_plans_land_in_range() {
+        for seed in 0..50 {
+            let p = FaultPlan::seeded_panic(seed, 7);
+            assert!(p.panic_task.unwrap() < 7);
+        }
+    }
+}

@@ -74,12 +74,18 @@ impl<V> FibHeap<V> {
 
     /// Value of a live node.
     pub fn value(&self, h: Handle) -> &V {
-        self.nodes[h as usize].val.as_ref().unwrap()
+        match self.nodes[h as usize].val.as_ref() {
+            Some(v) => v,
+            None => unreachable!("live handle always holds a value"),
+        }
     }
 
     /// Mutable value of a live node.
     pub fn value_mut(&mut self, h: Handle) -> &mut V {
-        self.nodes[h as usize].val.as_mut().unwrap()
+        match self.nodes[h as usize].val.as_mut() {
+            Some(v) => v,
+            None => unreachable!("live handle always holds a value"),
+        }
     }
 
     fn alloc(&mut self, key: u64, val: V) -> u32 {
@@ -186,7 +192,10 @@ impl<V> FibHeap<V> {
         }
         let z = self.min;
         let key = self.nodes[z as usize].key;
-        let val = self.nodes[z as usize].val.take().unwrap();
+        let val = match self.nodes[z as usize].val.take() {
+            Some(v) => v,
+            None => unreachable!("the minimum root always holds a value"),
+        };
         // Detach z from the root ring *first* (ring edits while z is
         // still linked would corrupt neighbours).
         let mut anchor = self.ring_remove(z);
@@ -246,8 +255,9 @@ impl<V> FibHeap<V> {
             for d in 0..groups.len() {
                 while groups[d].len() > 1 {
                     any = true;
-                    let a = groups[d].pop().unwrap();
-                    let b = groups[d].pop().unwrap();
+                    let (Some(a), Some(b)) = (groups[d].pop(), groups[d].pop()) else {
+                        unreachable!("len > 1 guarantees two roots to link")
+                    };
                     let merged = self.link(a, b);
                     if d + 2 >= groups.len() {
                         groups.resize(d + 3, Vec::new());

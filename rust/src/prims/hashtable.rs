@@ -132,9 +132,11 @@ impl CountTable {
                     local.push((k, self.vals[i].load(Ordering::Relaxed)));
                 }
             }
-            out.lock().unwrap().extend(local);
+            // Collector mutex: a poisoning panic is already being
+            // propagated by the pool, so recover the guard either way.
+            out.lock().unwrap_or_else(|p| p.into_inner()).extend(local);
         });
-        out.into_inner().unwrap()
+        out.into_inner().unwrap_or_else(|p| p.into_inner())
     }
 
     /// Number of occupied slots (iteration-phase exact).

@@ -84,9 +84,11 @@ pub fn histogram(keys: &[u64]) -> Vec<(u64, u64)> {
             *m.entry(k).or_insert(0) += 1;
         }
         let local: Vec<(u64, u64)> = m.into_iter().collect();
-        out.lock().unwrap().extend(local);
+        // As in `CountTable::drain`: recover the collector guard even
+        // if another worker's panic poisoned it mid-drain.
+        out.lock().unwrap_or_else(|p| p.into_inner()).extend(local);
     });
-    out.into_inner().unwrap()
+    out.into_inner().unwrap_or_else(|p| p.into_inner())
 }
 
 #[cfg(test)]

@@ -28,9 +28,19 @@
 //!   round loops and the co-degeneracy rankings.
 //! * [`fibheap`] — the batch-parallel Fibonacci heap of §5 backing
 //!   [`bucket::FibBuckets`].
+//! * [`budget`] — cooperative deadlines / memory caps / cancel tokens
+//!   checked at task granularity by [`pool`].
+//! * [`fault`] — deterministic fault injection for the runtime's
+//!   panic-isolation tests (`PARBUTTERFLY_FAULT`).
 
+// Runtime-critical modules must not abort through unchecked unwraps:
+// failures either unwind as structured panics the pool catches or are
+// returned as `error::Result`.  Test code is exempt.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 pub mod atomics;
 pub mod bucket;
+pub mod budget;
+pub mod fault;
 pub mod fibheap;
 pub mod hashtable;
 pub mod histogram;

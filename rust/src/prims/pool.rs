@@ -13,10 +13,40 @@
 //! * dynamic self-scheduling ([`parallel_for_dynamic`]) — workers claim
 //!   fixed-size grains from an atomic counter, the "wedge-aware" layout
 //!   (balances skewed per-item work).
+//!
+//! ## Panic isolation and cooperative checks
+//!
+//! Every combinator runs its workers under `catch_unwind`: a panicking
+//! task records a structured failure ([`PoolError`] — worker index,
+//! task range, payload message) into a shared slot, the surviving
+//! workers **drain** (they stop claiming new tasks at the next check
+//! point), the scope joins normally (no hang, no abort), and the
+//! failure is re-raised on the calling thread for the entry-point
+//! guard ([`crate::error`]) to convert into an `Err`.  Nested
+//! combinators keep the innermost failure.  The same per-task check
+//! point runs the fault-injection hooks ([`crate::prims::fault`]) and
+//! the cooperative budget ([`crate::prims::budget`]); workers inherit
+//! the caller's active budget.
+//!
+//! Unwind safety: per-worker scratch is built *inside* the catch, so
+//! unwinding drops it (a [`ScratchPool`] guard discards — never
+//! re-pools — a scratch dropped mid-panic), and outputs written by a
+//! failed run are discarded wholesale by the caller.  Static chunks
+//! are processed as `MIN_GRAIN`-sized sub-ranges (the documented
+//! contract — workers hand their state "to each range" they process)
+//! so drain/budget checks stay amortized yet responsive even at one
+//! thread.
+//!
+//! [`PoolError`]: crate::error::PoolError
 
+use std::any::Any;
 use std::cell::Cell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
+
+use crate::error::{payload_message, raise, ErrorKind, PoolError, Raised};
+use crate::prims::{budget, fault};
 
 thread_local! {
     static OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
@@ -41,18 +71,112 @@ pub fn num_threads() -> usize {
 }
 
 /// Run `f` with the thread count pinned to `t` (scoped, re-entrant).
+/// The previous count is restored even if `f` unwinds, so a caught
+/// entry-point error cannot leak a pinned thread count into later
+/// calls on the same thread.
 ///
 /// Benches use this for the thread-sweep figures (Figs. 8/9/17/18).
 pub fn with_threads<R>(t: usize, f: impl FnOnce() -> R) -> R {
     assert!(t > 0, "thread count must be positive");
-    let prev = OVERRIDE.with(|o| o.replace(Some(t)));
-    let out = f();
-    OVERRIDE.with(|o| o.set(prev));
-    out
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0.take();
+            OVERRIDE.with(|o| o.set(prev));
+        }
+    }
+    let _restore = Restore(OVERRIDE.with(|o| o.replace(Some(t))));
+    f()
 }
 
-/// Minimum items per spawned chunk; below this we run inline.
+/// Minimum items per spawned chunk; below this we run inline.  Also
+/// the sub-range size static chunks are processed in (the drain /
+/// fault / budget check amortization quantum).
 const MIN_GRAIN: usize = 1024;
+
+/// Shared first-failure slot: the first panicking worker records a
+/// structured cause, every worker drains once the flag is up, and the
+/// calling thread re-raises after the join.
+struct Failure {
+    poisoned: AtomicBool,
+    slot: Mutex<Option<ErrorKind>>,
+}
+
+impl Failure {
+    fn new() -> Self {
+        Failure { poisoned: AtomicBool::new(false), slot: Mutex::new(None) }
+    }
+
+    #[inline]
+    fn poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Relaxed)
+    }
+
+    fn record(&self, worker: usize, span: (usize, usize), payload: Box<dyn Any + Send>) {
+        let kind = match payload.downcast::<Raised>() {
+            // A nested combinator (or a budget / fault-injection trip)
+            // already attached structure: keep the innermost cause.
+            Ok(r) => r.0,
+            Err(p) => ErrorKind::Pool(PoolError {
+                worker,
+                range: span.0..span.1,
+                message: payload_message(p.as_ref()),
+            }),
+        };
+        let mut slot = self.slot.lock().unwrap_or_else(|p| p.into_inner());
+        if slot.is_none() {
+            *slot = Some(kind);
+        }
+        drop(slot);
+        self.poisoned.store(true, Ordering::Release);
+    }
+
+    /// After the join: re-raise the first recorded failure (if any)
+    /// for the entry-point guard to convert into an `Err`.
+    fn rethrow(&self) {
+        let kind = self.slot.lock().unwrap_or_else(|p| p.into_inner()).take();
+        if let Some(kind) = kind {
+            raise(kind);
+        }
+    }
+}
+
+/// Run `body` under the worker-level catch, recording any unwind into
+/// `fail` against the task span current at panic time.
+fn run_worker(fail: &Failure, worker: usize, span: &Cell<(usize, usize)>, body: impl FnOnce()) {
+    if let Err(p) = catch_unwind(AssertUnwindSafe(body)) {
+        fail.record(worker, span.get(), p);
+    }
+}
+
+/// Degenerate sequential path shared by the chunked combinators: one
+/// lazily-built state, `step`-sized sub-ranges with the same check
+/// points (drain is moot, fault/budget are not) and the same
+/// structured-failure surface as the spawned path.
+fn inline_run<S, I, F>(n: usize, step: usize, init: I, f: F)
+where
+    I: Fn() -> S,
+    F: Fn(&mut S, std::ops::Range<usize>),
+{
+    if n == 0 {
+        return;
+    }
+    let fail = Failure::new();
+    let span = Cell::new((0, n));
+    run_worker(&fail, 0, &span, || {
+        let mut state: Option<S> = None;
+        let mut pos = 0;
+        while pos < n {
+            let end = (pos + step).min(n);
+            span.set((pos, end));
+            fault::on_task();
+            budget::check();
+            f(state.get_or_insert_with(&init), pos..end);
+            pos = end;
+        }
+    });
+    fail.rethrow();
+}
 
 /// Parallel loop over `0..n`, static chunking, one chunk per worker.
 pub fn parallel_for_chunks<F>(n: usize, f: F)
@@ -86,13 +210,13 @@ where
 {
     let t = num_threads();
     if t <= 1 || n < MIN_GRAIN.min(2 * t) {
-        if n > 0 {
-            f(&mut init(), 0..n);
-        }
+        inline_run(n, MIN_GRAIN, init, f);
         return;
     }
     let nchunks = t.min(n);
     let chunk = n.div_ceil(nchunks);
+    let fail = Failure::new();
+    let active = budget::current();
     // Propagate the thread-count override into the spawned workers so
     // nested parallel_for calls see a consistent budget (they run inline:
     // we already used the budget at this level).
@@ -103,13 +227,31 @@ where
             if lo >= hi {
                 break;
             }
-            let (f, init) = (&f, &init);
+            let (f, init, fail) = (&f, &init, &fail);
+            let ab = active.clone();
             s.spawn(move || {
                 OVERRIDE.with(|o| o.set(Some(1)));
-                f(&mut init(), lo..hi)
+                budget::adopt(ab);
+                let span = Cell::new((lo, hi));
+                run_worker(fail, c, &span, || {
+                    let mut state: Option<S> = None;
+                    let mut pos = lo;
+                    while pos < hi {
+                        if fail.poisoned() {
+                            return;
+                        }
+                        let end = (pos + MIN_GRAIN).min(hi);
+                        span.set((pos, end));
+                        fault::on_task();
+                        budget::check();
+                        f(state.get_or_insert_with(init), pos..end);
+                        pos = end;
+                    }
+                });
             });
         }
     });
+    fail.rethrow();
 }
 
 /// Fork-per-block loop for **coarse-grained** block work: each index is
@@ -122,20 +264,35 @@ where
 /// under that threshold and silently serialized every block-level pass
 /// (scan, histogram, merge-sort rounds).  This combinator forks
 /// whenever more than one worker *and* more than one block exist,
-/// assigning each worker a contiguous range of blocks.
+/// assigning each worker a contiguous range of blocks.  Check points
+/// (drain / fault / budget) run once per block — blocks are coarse by
+/// contract, so a block is never subdivided.
 pub fn parallel_for_blocks<F>(nblocks: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
     let t = num_threads();
     if t <= 1 || nblocks <= 1 {
-        for b in 0..nblocks {
-            f(b);
+        if nblocks == 0 {
+            return;
         }
+        let fail = Failure::new();
+        let span = Cell::new((0, nblocks));
+        run_worker(&fail, 0, &span, || {
+            for b in 0..nblocks {
+                span.set((b, b + 1));
+                fault::on_task();
+                budget::check();
+                f(b);
+            }
+        });
+        fail.rethrow();
         return;
     }
     let w = t.min(nblocks);
     let per = nblocks.div_ceil(w);
+    let fail = Failure::new();
+    let active = budget::current();
     std::thread::scope(|s| {
         for c in 0..w {
             let lo = c * per;
@@ -143,15 +300,27 @@ where
             if lo >= hi {
                 break;
             }
-            let f = &f;
+            let (f, fail) = (&f, &fail);
+            let ab = active.clone();
             s.spawn(move || {
                 OVERRIDE.with(|o| o.set(Some(1)));
-                for b in lo..hi {
-                    f(b);
-                }
+                budget::adopt(ab);
+                let span = Cell::new((lo, hi));
+                run_worker(fail, c, &span, || {
+                    for b in lo..hi {
+                        if fail.poisoned() {
+                            return;
+                        }
+                        span.set((b, b + 1));
+                        fault::on_task();
+                        budget::check();
+                        f(b);
+                    }
+                });
             });
         }
     });
+    fail.rethrow();
 }
 
 /// Self-scheduling parallel loop: workers claim `grain`-sized ranges
@@ -178,28 +347,41 @@ where
     let grain = grain.max(1);
     let t = num_threads();
     if t <= 1 || n <= grain {
-        if n > 0 {
-            f(&mut init(), 0..n);
-        }
+        inline_run(n, grain, init, f);
         return;
     }
     let next = AtomicUsize::new(0);
+    let fail = Failure::new();
+    let active = budget::current();
     std::thread::scope(|s| {
-        for _ in 0..t.min(n.div_ceil(grain)) {
-            let (f, init, next) = (&f, &init, &next);
+        for w in 0..t.min(n.div_ceil(grain)) {
+            let (f, init, next, fail) = (&f, &init, &next, &fail);
+            let ab = active.clone();
             s.spawn(move || {
                 OVERRIDE.with(|o| o.set(Some(1)));
-                let mut state = init();
-                loop {
-                    let lo = next.fetch_add(grain, Ordering::Relaxed);
-                    if lo >= n {
-                        break;
+                budget::adopt(ab);
+                let span = Cell::new((0, 0));
+                run_worker(fail, w, &span, || {
+                    let mut state: Option<S> = None;
+                    loop {
+                        if fail.poisoned() {
+                            return;
+                        }
+                        let lo = next.fetch_add(grain, Ordering::Relaxed);
+                        if lo >= n {
+                            break;
+                        }
+                        let hi = (lo + grain).min(n);
+                        span.set((lo, hi));
+                        fault::on_task();
+                        budget::check();
+                        f(state.get_or_insert_with(init), lo..hi);
                     }
-                    f(&mut state, lo..(lo + grain).min(n));
-                }
+                });
             });
         }
     });
+    fail.rethrow();
 }
 
 /// A reusable bag of per-worker scratch states.
@@ -228,17 +410,17 @@ impl<S> ScratchPool<S> {
     }
 
     fn take(&self, make: impl FnOnce() -> S) -> S {
-        let reused = self.pool.lock().unwrap().pop();
+        let reused = self.pool.lock().unwrap_or_else(|p| p.into_inner()).pop();
         reused.unwrap_or_else(make)
     }
 
     fn put(&self, s: S) {
-        self.pool.lock().unwrap().push(s);
+        self.pool.lock().unwrap_or_else(|p| p.into_inner()).push(s);
     }
 
     /// Exclusive access to the pooled states (between parallel calls).
     pub fn items_mut(&mut self) -> &mut Vec<S> {
-        self.pool.get_mut().unwrap()
+        self.pool.get_mut().unwrap_or_else(|p| p.into_inner())
     }
 }
 
@@ -251,7 +433,13 @@ struct PoolGuard<'a, S> {
 impl<S> Drop for PoolGuard<'_, S> {
     fn drop(&mut self) {
         if let Some(s) = self.s.take() {
-            self.pool.put(s);
+            // A drop during unwinding means the worker died mid-range:
+            // the scratch may be mid-mutation (stamps set, touched
+            // lists unreset), so discard it — a dirty scratch re-pooled
+            // here would corrupt the next round's counts.
+            if !std::thread::panicking() {
+                self.pool.put(s);
+            }
         }
     }
 }
@@ -277,7 +465,10 @@ pub fn parallel_for_dynamic_pooled<S, I, F>(
         n,
         grain,
         || PoolGuard { s: Some(pool.take(&init)), pool },
-        |g, r| f(g.s.as_mut().expect("scratch taken"), r),
+        |g, r| match g.s.as_mut() {
+            Some(s) => f(s, r),
+            None => unreachable!("pooled scratch taken"),
+        },
     );
 }
 
@@ -301,6 +492,9 @@ where
 }
 
 /// Parallel reduce: `reduce(map(0), map(1), ...)` with identity `id`.
+/// Partials merge in chunk order (not completion order), so the result
+/// is identical at every thread count even for merely-associative
+/// reductions.
 pub fn parallel_reduce<T, M, R>(n: usize, id: T, map: M, reduce: R) -> T
 where
     T: Send + Clone,
@@ -309,15 +503,32 @@ where
 {
     let t = num_threads();
     if t <= 1 || n < MIN_GRAIN.min(2 * t) {
-        let mut acc = id;
-        for i in 0..n {
-            acc = reduce(acc, map(i));
-        }
-        return acc;
+        let fail = Failure::new();
+        let span = Cell::new((0, n));
+        let mut out = None;
+        run_worker(&fail, 0, &span, || {
+            let mut acc = id.clone();
+            let mut pos = 0;
+            while pos < n {
+                let end = (pos + MIN_GRAIN).min(n);
+                span.set((pos, end));
+                fault::on_task();
+                budget::check();
+                for i in pos..end {
+                    acc = reduce(acc, map(i));
+                }
+                pos = end;
+            }
+            out = Some(acc);
+        });
+        fail.rethrow();
+        return out.unwrap_or(id);
     }
     let nchunks = t.min(n);
     let chunk = n.div_ceil(nchunks);
-    let partials = std::sync::Mutex::new(Vec::with_capacity(nchunks));
+    let fail = Failure::new();
+    let active = budget::current();
+    let partials: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(nchunks));
     std::thread::scope(|s| {
         for c in 0..nchunks {
             let lo = c * chunk;
@@ -325,19 +536,38 @@ where
             if lo >= hi {
                 break;
             }
-            let (map, reduce, partials, id) = (&map, &reduce, &partials, id.clone());
+            let (map, reduce, partials, fail, id) = (&map, &reduce, &partials, &fail, id.clone());
+            let ab = active.clone();
             s.spawn(move || {
                 OVERRIDE.with(|o| o.set(Some(1)));
-                let mut acc = id;
-                for i in lo..hi {
-                    acc = reduce(acc, map(i));
-                }
-                partials.lock().unwrap().push(acc);
+                budget::adopt(ab);
+                let span = Cell::new((lo, hi));
+                run_worker(fail, c, &span, || {
+                    let mut acc = id;
+                    let mut pos = lo;
+                    while pos < hi {
+                        if fail.poisoned() {
+                            return;
+                        }
+                        let end = (pos + MIN_GRAIN).min(hi);
+                        span.set((pos, end));
+                        fault::on_task();
+                        budget::check();
+                        for i in pos..end {
+                            acc = reduce(acc, map(i));
+                        }
+                        pos = end;
+                    }
+                    partials.lock().unwrap_or_else(|p| p.into_inner()).push((c, acc));
+                });
             });
         }
     });
+    fail.rethrow();
+    let mut parts = partials.into_inner().unwrap_or_else(|p| p.into_inner());
+    parts.sort_by_key(|&(c, _)| c);
     let mut acc = id;
-    for p in partials.into_inner().unwrap() {
+    for (_, p) in parts {
         acc = reduce(acc, p);
     }
     acc
@@ -361,6 +591,7 @@ impl<T> SyncPtr<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::catch;
     use std::sync::atomic::AtomicU64;
 
     #[test]
@@ -439,6 +670,16 @@ mod tests {
     }
 
     #[test]
+    fn with_threads_restores_across_unwinds() {
+        let outer = num_threads();
+        let r = catch(|| {
+            with_threads(3, || -> () { panic!("die inside the scope") });
+        });
+        assert!(r.is_err());
+        assert_eq!(num_threads(), outer, "override leaked past a panic");
+    }
+
+    #[test]
     fn pooled_scratch_visits_every_index_and_recycles() {
         for t in [1usize, 3, 8] {
             with_threads(t, || {
@@ -477,5 +718,115 @@ mod tests {
         parallel_for_dynamic(0, 16, |_| panic!("must not be called"));
         let v = parallel_map(1, |i| i);
         assert_eq!(v, vec![0]);
+    }
+
+    #[test]
+    fn worker_panics_surface_as_structured_pool_errors() {
+        for t in [1usize, 4, 8] {
+            with_threads(t, || {
+                let e = catch(|| {
+                    parallel_for(5_000, |i| {
+                        if i == 1700 {
+                            panic!("task bug at {i}")
+                        }
+                    })
+                })
+                .unwrap_err();
+                match e.kind() {
+                    ErrorKind::Pool(p) => {
+                        assert!(p.message.contains("task bug at 1700"), "t={t}: {p}");
+                        assert!(p.range.start <= 1700 && 1700 < p.range.end + MIN_GRAIN);
+                    }
+                    k => panic!("t={t}: unexpected kind {k:?}"),
+                }
+                // The combinator is reusable after a caught failure.
+                let hits = AtomicU64::new(0);
+                parallel_for(100, |_| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+                assert_eq!(hits.load(Ordering::Relaxed), 100);
+            });
+        }
+    }
+
+    #[test]
+    fn dynamic_and_blocks_panics_are_caught_and_drained() {
+        for t in [1usize, 4, 8] {
+            with_threads(t, || {
+                let e = catch(|| {
+                    parallel_for_dynamic(2_000, 32, |r| {
+                        if r.contains(&999) {
+                            panic!("dyn bug")
+                        }
+                    })
+                })
+                .unwrap_err();
+                assert!(matches!(e.kind(), ErrorKind::Pool(_)), "t={t}: {e}");
+                let e = catch(|| {
+                    parallel_for_blocks(2 * t + 1, |b| {
+                        if b == t {
+                            panic!("block bug")
+                        }
+                    })
+                })
+                .unwrap_err();
+                assert!(matches!(e.kind(), ErrorKind::Pool(_)), "t={t}: {e}");
+                let e = catch(|| {
+                    parallel_reduce(5_000, 0u64, |i| if i == 700 { panic!("red bug") } else { 1 }, |a, b| a + b)
+                })
+                .unwrap_err();
+                assert!(matches!(e.kind(), ErrorKind::Pool(_)), "t={t}: {e}");
+            });
+        }
+    }
+
+    #[test]
+    fn nested_combinators_keep_the_innermost_failure() {
+        for t in [1usize, 4] {
+            with_threads(t, || {
+                let e = catch(|| {
+                    parallel_for_blocks(t.max(2), |b| {
+                        parallel_for(2_000, |i| {
+                            if b == 0 && i == 3 {
+                                panic!("inner bug")
+                            }
+                        });
+                    })
+                })
+                .unwrap_err();
+                match e.kind() {
+                    ErrorKind::Pool(p) => assert!(p.message.contains("inner bug"), "t={t}: {p}"),
+                    k => panic!("t={t}: unexpected kind {k:?}"),
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn panicked_scratch_is_discarded_not_repooled() {
+        with_threads(1, || {
+            let mut pool: ScratchPool<Vec<u64>> = ScratchPool::new();
+            parallel_for_dynamic_pooled(100, 16, &pool, || vec![0u64; 4], |_, _| {});
+            assert_eq!(pool.items_mut().len(), 1);
+            let r = catch(|| {
+                parallel_for_dynamic_pooled(
+                    100,
+                    16,
+                    &pool,
+                    || vec![0u64; 4],
+                    |s, r| {
+                        s[1] = 77; // dirty the scratch, then die
+                        if r.start >= 32 {
+                            panic!("mid-round death")
+                        }
+                    },
+                );
+            });
+            assert!(r.is_err());
+            assert!(
+                pool.items_mut().is_empty(),
+                "a scratch dropped mid-panic must not be re-pooled"
+            );
+        });
     }
 }

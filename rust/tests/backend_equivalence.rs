@@ -22,11 +22,11 @@ fn assert_equivalent(g: &BipartiteGraph, label: &str) {
 
     // vs the CPU framework.
     let opts = CountOpts::default();
-    assert_eq!(got.total, count_total(g, &opts), "{label}: total vs cpu");
-    let vc = count_per_vertex(g, &opts);
+    assert_eq!(got.total, count_total(g, &opts).unwrap(), "{label}: total vs cpu");
+    let vc = count_per_vertex(g, &opts).unwrap();
     assert_eq!(got.bu, vc.bu, "{label}: bu vs cpu");
     assert_eq!(got.bv, vc.bv, "{label}: bv vs cpu");
-    assert_eq!(got.be, count_per_edge(g, &opts), "{label}: be vs cpu");
+    assert_eq!(got.be, count_per_edge(g, &opts).unwrap(), "{label}: be vs cpu");
 
     // Total-only entry point agrees with the full model.
     assert_eq!(

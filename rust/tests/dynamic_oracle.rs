@@ -50,14 +50,14 @@ fn golden_corpus_prefix_replay_at_every_thread_count() {
         let g = load(file);
         let edges = g.edges();
         let static_opts = CountOpts::default();
-        let expect_vc = count_per_vertex(&g, &static_opts);
-        let expect_pe = count_per_edge(&g, &static_opts);
+        let expect_vc = count_per_vertex(&g, &static_opts).unwrap();
+        let expect_pe = count_per_edge(&g, &static_opts).unwrap();
         for t in THREADS {
             with_threads(t, || {
                 let opts = DynOpts { rebuild_fraction: f64::INFINITY, ..Default::default() };
-                let mut dg = DynGraph::from_edges(g.nu(), g.nv(), &[], opts);
+                let mut dg = DynGraph::from_edges(g.nu(), g.nv(), &[], opts).unwrap();
                 for chunk in edges.chunks(edges.len().div_ceil(4).max(1)) {
-                    let out = dg.insert_edges(chunk);
+                    let out = dg.insert_edges(chunk).unwrap();
                     assert_eq!(out.path, UpdatePath::Delta, "{file} t={t}");
                     assert_matches_recount(&dg, &format!("{file} t={t} prefix"));
                 }
@@ -81,9 +81,9 @@ fn golden_corpus_deletion_replay() {
         for t in [1usize, 4] {
             with_threads(t, || {
                 let opts = DynOpts { rebuild_fraction: f64::INFINITY, ..Default::default() };
-                let mut dg = DynGraph::new(g.clone(), opts);
+                let mut dg = DynGraph::new(g.clone(), opts).unwrap();
                 for chunk in edges.chunks(edges.len().div_ceil(5).max(1)) {
-                    dg.delete_edges(chunk);
+                    dg.delete_edges(chunk).unwrap();
                     assert_matches_recount(&dg, &format!("{file} t={t} suffix"));
                 }
                 assert_eq!(dg.graph().m(), 0, "{file} t={t}");
@@ -96,7 +96,7 @@ fn golden_corpus_deletion_replay() {
 /// One randomized interleaved stream; returns the final graph size.
 fn run_stream(seed: u64, nu: usize, nv: usize, opts: DynOpts, check_every: bool) -> usize {
     let mut rng = Pcg32::new(seed);
-    let mut dg = DynGraph::from_edges(nu, nv, &[], opts);
+    let mut dg = DynGraph::from_edges(nu, nv, &[], opts).unwrap();
     let mut removed: Vec<(u32, u32)> = Vec::new();
     for step in 0..30 {
         let sz = 1 + rng.next_below(10) as usize;
@@ -114,7 +114,7 @@ fn run_stream(seed: u64, nu: usize, nv: usize, opts: DynOpts, check_every: bool)
             if dg.graph().m() > 0 {
                 batch.push(dg.graph().edges()[0]);
             }
-            dg.insert_edges(&batch);
+            dg.insert_edges(&batch).unwrap();
         } else {
             let edges = dg.graph().edges();
             let mut batch: Vec<(u32, u32)> = (0..sz.min(edges.len()))
@@ -122,7 +122,7 @@ fn run_stream(seed: u64, nu: usize, nv: usize, opts: DynOpts, check_every: bool)
                 .collect();
             removed.extend(batch.iter().copied());
             batch.push((0, 0)); // possibly absent
-            dg.delete_edges(&batch);
+            dg.delete_edges(&batch).unwrap();
         }
         if check_every {
             assert_matches_recount(&dg, &format!("seed {seed} step {step}"));
@@ -159,16 +159,16 @@ fn streams_are_thread_count_invariant() {
         with_threads(t, || {
             let opts = DynOpts { rebuild_fraction: f64::INFINITY, ..Default::default() };
             let mut rng = Pcg32::new(77);
-            let mut dg = DynGraph::from_edges(20, 18, &[], opts);
+            let mut dg = DynGraph::from_edges(20, 18, &[], opts).unwrap();
             for _ in 0..25 {
                 let sz = 1 + rng.next_below(12) as usize;
                 let batch: Vec<(u32, u32)> = (0..sz)
                     .map(|_| (rng.next_below(20) as u32, rng.next_below(18) as u32))
                     .collect();
                 if rng.next_below(100) < 60 || dg.graph().m() == 0 {
-                    dg.insert_edges(&batch);
+                    dg.insert_edges(&batch).unwrap();
                 } else {
-                    dg.delete_edges(&batch);
+                    dg.delete_edges(&batch).unwrap();
                 }
             }
             (
@@ -212,7 +212,7 @@ fn replay_stream_facade_on_golden_data() {
     ];
     for t in THREADS {
         let (dg, rep) =
-            with_threads(t, || replay_stream(g0.clone(), &batches, &DynOpts::default(), true));
+            with_threads(t, || replay_stream(g0.clone(), &batches, &DynOpts::default(), true).unwrap());
         assert_eq!(rep.verified, Some(true), "t={t}");
         assert_eq!(rep.total, 341, "t={t}: Davis pinned total");
         assert_eq!(dg.graph().edges(), edges, "t={t}: graph restored");

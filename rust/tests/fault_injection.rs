@@ -1,0 +1,422 @@
+//! Fault-injection sweep: every engine must either return a clean,
+//! structured `Err` or a bit-identical result when a single worker
+//! fault is injected — never abort the process, never corrupt state,
+//! never hang.
+//!
+//! Design notes:
+//!
+//! - **All** engine work (baselines included) runs inside
+//!   [`fault::with_plan`] scopes.  Installing the empty plan disables
+//!   any `PARBUTTERFLY_FAULT` environment plan for the scope, so the
+//!   suite is deterministic both locally and under the CI fault
+//!   matrix, which runs it with env plans armed.
+//! - Injected faults are **single-shot**: the task/alloc ordinal keeps
+//!   incrementing within a `with_plan` scope, so across a handful of
+//!   attempts at most one call can fail.  [`settle`] encodes the
+//!   contract: every failure is a structured error, and the first
+//!   success is bit-identical to the fault-free baseline.
+//! - A [`Watchdog`] backs every test: a hang past 30s prints a
+//!   diagnostic and exits the test process with a failure code instead
+//!   of stalling CI.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use parbutterfly::coordinator::replay_stream;
+use parbutterfly::count::{count_per_edge, count_per_vertex, count_total, CountOpts, Engine};
+use parbutterfly::dynamic::stream::Batch;
+use parbutterfly::dynamic::{BatchKind, DynGraph, DynOpts};
+use parbutterfly::graph::{gen, BipartiteGraph};
+use parbutterfly::peel::{peel_edges, peel_vertices, PeelEOpts, PeelEngine, PeelVOpts};
+use parbutterfly::prims::fault::{self, FaultPlan};
+use parbutterfly::prims::pool::with_threads;
+use parbutterfly::testutil::brute;
+use parbutterfly::{Budget, ErrorKind};
+
+const THREADS: [usize; 3] = [1, 4, 8];
+
+/// Aborts the test binary if the guarded scope runs longer than the
+/// deadline — a hung pool must fail fast, not stall the suite.
+struct Watchdog {
+    done: mpsc::Sender<()>,
+}
+
+impl Watchdog {
+    fn arm(name: &'static str) -> Watchdog {
+        let (done, rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            if let Err(mpsc::RecvTimeoutError::Timeout) = rx.recv_timeout(Duration::from_secs(30))
+            {
+                eprintln!("watchdog: {name} exceeded 30s under fault injection; aborting");
+                std::process::exit(101);
+            }
+        });
+        Watchdog { done }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        let _ = self.done.send(());
+    }
+}
+
+/// Injected worker faults must surface as one of these kinds; anything
+/// else (or a process abort) is a containment bug.
+fn assert_injected_kind(label: &str, e: &parbutterfly::Error) {
+    assert!(
+        matches!(
+            e.kind(),
+            ErrorKind::Pool(_) | ErrorKind::Panic(_) | ErrorKind::AllocFailed { .. }
+        ),
+        "{label}: unexpected error kind for an injected fault: {e}"
+    );
+}
+
+/// Run `op` until it succeeds (≤ 3 attempts).  A single-shot plan can
+/// fail at most one of them; every failure must be structured and the
+/// first success must be bit-identical to `expect`.
+fn settle<T: PartialEq + std::fmt::Debug>(
+    label: &str,
+    expect: &T,
+    mut op: impl FnMut() -> parbutterfly::Result<T>,
+) {
+    for attempt in 0..3 {
+        match op() {
+            Ok(v) => {
+                assert_eq!(&v, expect, "{label}: attempt {attempt} diverged from baseline");
+                return;
+            }
+            Err(e) => assert_injected_kind(label, &e),
+        }
+    }
+    panic!("{label}: a single-shot fault plan failed 3 consecutive attempts");
+}
+
+#[test]
+fn counting_engines_contain_injected_panics() {
+    let _wd = Watchdog::arm("counting_engines_contain_injected_panics");
+    let base_opts = CountOpts::default();
+    // Graph construction is infallible parallel code, so it (like the
+    // baselines) runs under the empty plan, never under an armed one.
+    let (g, bt, bvc, bpe) = fault::with_plan(&FaultPlan::default(), || {
+        let g = gen::chung_lu(48, 60, 600, 2.0, 7);
+        let bt = count_total(&g, &base_opts).unwrap();
+        let bvc = count_per_vertex(&g, &base_opts).unwrap();
+        let bpe = count_per_edge(&g, &base_opts).unwrap();
+        (g, bt, bvc, bpe)
+    });
+    for engine in [Engine::Wedges, Engine::Intersect] {
+        let opts = CountOpts { engine, ..CountOpts::default() };
+        for t in THREADS {
+            for seed in 0..3u64 {
+                let plan = FaultPlan::seeded_panic(seed, 8);
+                fault::with_plan(&plan, || {
+                    with_threads(t, || {
+                        let label = format!("count {engine:?} t={t} seed={seed}");
+                        settle(&format!("{label} total"), &bt, || count_total(&g, &opts));
+                        settle(&format!("{label} per-vertex"), &(bvc.bu.clone(), bvc.bv.clone()), || {
+                            count_per_vertex(&g, &opts).map(|c| (c.bu, c.bv))
+                        });
+                        settle(&format!("{label} per-edge"), &bpe, || count_per_edge(&g, &opts));
+                    })
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn peel_engines_contain_injected_panics() {
+    let _wd = Watchdog::arm("peel_engines_contain_injected_panics");
+    let copts = CountOpts::default();
+    let (g, vc, be) = fault::with_plan(&FaultPlan::default(), || {
+        let g = gen::erdos_renyi(30, 30, 220, 9);
+        let vc = count_per_vertex(&g, &copts).unwrap();
+        let be = count_per_edge(&g, &copts).unwrap();
+        (g, vc, be)
+    });
+    for engine in PeelEngine::ALL {
+        let vopts = PeelVOpts { engine, ..PeelVOpts::default() };
+        let eopts = PeelEOpts { engine, ..PeelEOpts::default() };
+        // Rounds are engine-specific (two-phase counts coarse+fine
+        // passes), so the bit-identity baseline is per engine.
+        let (btips, bwings) = fault::with_plan(&FaultPlan::default(), || {
+            let tips = peel_vertices(&g, &vc.bu, &vc.bv, &vopts).unwrap();
+            let wings = peel_edges(&g, &be, &eopts).unwrap();
+            ((tips.tips, tips.rounds), (wings.wings, wings.rounds))
+        });
+        for t in THREADS {
+            for seed in [1u64, 5] {
+                let plan = FaultPlan::seeded_panic(seed, 8);
+                fault::with_plan(&plan, || {
+                    with_threads(t, || {
+                        let label = format!("peel {engine:?} t={t} seed={seed}");
+                        settle(&format!("{label} tips"), &btips, || {
+                            peel_vertices(&g, &vc.bu, &vc.bv, &vopts).map(|r| (r.tips, r.rounds))
+                        });
+                        settle(&format!("{label} wings"), &bwings, || {
+                            peel_edges(&g, &be, &eopts).map(|r| (r.wings, r.rounds))
+                        });
+                    })
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn delay_faults_never_change_results() {
+    let _wd = Watchdog::arm("delay_faults_never_change_results");
+    let opts = CountOpts::default();
+    let (g, bt, bpe) = fault::with_plan(&FaultPlan::default(), || {
+        let g = gen::chung_lu(40, 50, 450, 2.0, 13);
+        let bt = count_total(&g, &opts).unwrap();
+        let bpe = count_per_edge(&g, &opts).unwrap();
+        (g, bt, bpe)
+    });
+    for t in THREADS {
+        for j in [0u64, 3] {
+            let plan = FaultPlan::delay_at_task(j, 25);
+            fault::with_plan(&plan, || {
+                with_threads(t, || {
+                    let label = format!("delay t={t} j={j}");
+                    // A delay is not a failure: the call must succeed
+                    // and stay bit-identical.
+                    assert_eq!(count_total(&g, &opts).unwrap(), bt, "{label} total");
+                    assert_eq!(count_per_edge(&g, &opts).unwrap(), bpe, "{label} per-edge");
+                })
+            });
+        }
+    }
+}
+
+/// Apply one batch, tolerating at most the single injected failure:
+/// on `Err` the pre-batch state must be intact (rebuild first if the
+/// failure poisoned the graph), and the retry must succeed.
+fn apply_batch(
+    dg: &mut DynGraph,
+    kind: BatchKind,
+    edges: &[(u32, u32)],
+    label: &str,
+) {
+    let res = match kind {
+        BatchKind::Insert => dg.insert_edges(edges),
+        BatchKind::Delete => dg.delete_edges(edges),
+    };
+    if let Err(e) = res {
+        assert_injected_kind(label, &e);
+        if dg.poisoned().is_some() {
+            dg.rebuild().unwrap_or_else(|e| panic!("{label}: rebuild after poison failed: {e}"));
+        }
+        match kind {
+            BatchKind::Insert => dg.insert_edges(edges).map(|_| ()),
+            BatchKind::Delete => dg.delete_edges(edges).map(|_| ()),
+        }
+        .unwrap_or_else(|e| panic!("{label}: retry after single-shot fault failed: {e}"));
+    }
+}
+
+#[test]
+fn dynamic_updates_stay_exact_under_injected_panics() {
+    let _wd = Watchdog::arm("dynamic_updates_stay_exact_under_injected_panics");
+    // Precompute fault-free oracle totals at every batch boundary:
+    // the armed scopes below must contain only guarded `Result` calls
+    // (the brute oracle's parallel CSR builds are infallible and would
+    // turn an injected panic into a test abort).
+    let (edges, after_insert, after_delete) = fault::with_plan(&FaultPlan::default(), || {
+        let edges = gen::erdos_renyi(25, 25, 160, 11).edges();
+        let mut live: Vec<(u32, u32)> = Vec::new();
+        let mut after_insert = Vec::new();
+        for chunk in edges.chunks(40) {
+            live.extend_from_slice(chunk);
+            after_insert.push(brute::total(&BipartiteGraph::from_edges(25, 25, &live)));
+        }
+        let mut after_delete = Vec::new();
+        for chunk in edges.chunks(60) {
+            live.retain(|e| !chunk.contains(e));
+            after_delete.push(brute::total(&BipartiteGraph::from_edges(25, 25, &live)));
+        }
+        (edges, after_insert, after_delete)
+    });
+    for t in THREADS {
+        for seed in [0u64, 4, 9] {
+            let mut dg = fault::with_plan(&FaultPlan::default(), || {
+                DynGraph::from_edges(25, 25, &[], DynOpts::default()).unwrap()
+            });
+            let plan = FaultPlan::seeded_panic(seed, 8);
+            fault::with_plan(&plan, || {
+                with_threads(t, || {
+                    let label = format!("dyn t={t} seed={seed}");
+                    for (i, chunk) in edges.chunks(40).enumerate() {
+                        apply_batch(&mut dg, BatchKind::Insert, chunk, &label);
+                        assert_eq!(
+                            dg.total(),
+                            after_insert[i],
+                            "{label}: totals drifted after insert batch {i}"
+                        );
+                    }
+                    for (i, chunk) in edges.chunks(60).enumerate() {
+                        apply_batch(&mut dg, BatchKind::Delete, chunk, &label);
+                        assert_eq!(
+                            dg.total(),
+                            after_delete[i],
+                            "{label}: totals drifted after delete batch {i}"
+                        );
+                    }
+                })
+            });
+        }
+    }
+}
+
+#[test]
+fn injected_alloc_failure_degrades_to_recount_or_clean_err() {
+    let _wd = Watchdog::arm("injected_alloc_failure_degrades_to_recount_or_clean_err");
+    // Force the incremental path (an unreachable rebuild threshold):
+    // the alloc fault targets the delta walk's accumulator probe, and
+    // the batch must either fall back to the degradation recount
+    // (fallback flag set) or fail cleanly and succeed on retry.
+    let opts = DynOpts { rebuild_fraction: f64::INFINITY, ..DynOpts::default() };
+    let (edges, expect, mut dg) = fault::with_plan(&FaultPlan::default(), || {
+        let edges = gen::erdos_renyi(20, 20, 120, 3).edges();
+        let expect = brute::total(&BipartiteGraph::from_edges(20, 20, &edges));
+        let dg = DynGraph::from_edges(20, 20, &edges[..80], opts).unwrap();
+        (edges, expect, dg)
+    });
+    let tail = &edges[80..];
+    fault::with_plan(&FaultPlan::fail_at_alloc(0), || {
+        match dg.insert_edges(tail) {
+            Ok(out) => assert!(
+                out.fallback || !fault::active(),
+                "alloc fault fired but the batch reports neither fallback nor failure"
+            ),
+            Err(e) => {
+                assert_injected_kind("alloc-fault insert", &e);
+                if dg.poisoned().is_some() {
+                    dg.rebuild().unwrap();
+                }
+                dg.insert_edges(tail).unwrap();
+            }
+        }
+    });
+    assert_eq!(dg.total(), expect, "counts must stay exact across the degradation path");
+}
+
+#[test]
+fn replay_stream_records_failures_and_stays_verified() {
+    let _wd = Watchdog::arm("replay_stream_records_failures_and_stays_verified");
+    let (batches, expect, g0) = fault::with_plan(&FaultPlan::default(), || {
+        let edges = gen::erdos_renyi(22, 22, 140, 17).edges();
+        let batches: Vec<Batch> = edges
+            .chunks(35)
+            .map(|c| Batch { kind: BatchKind::Insert, edges: c.to_vec() })
+            .chain(std::iter::once(Batch {
+                kind: BatchKind::Delete,
+                edges: edges[..30].to_vec(),
+            }))
+            .collect();
+        let mut live: Vec<(u32, u32)> = edges.clone();
+        live.retain(|e| !edges[..30].contains(e));
+        let expect = brute::total(&BipartiteGraph::from_edges(22, 22, &live));
+        let g0 = BipartiteGraph::from_edges(22, 22, &[]);
+        (batches, expect, g0)
+    });
+    for t in THREADS {
+        for seed in [2u64, 7] {
+            let plan = FaultPlan::seeded_panic(seed, 8);
+            fault::with_plan(&plan, || {
+                with_threads(t, || {
+                    let label = format!("replay t={t} seed={seed}");
+                    match replay_stream(g0.clone(), &batches, &DynOpts::default(), true) {
+                        Ok((dg, rep)) => {
+                            assert_eq!(dg.total(), expect, "{label}: final total wrong");
+                            assert_eq!(rep.total, expect, "{label}: report total wrong");
+                            assert_eq!(rep.verified, Some(true), "{label}: verification failed");
+                            // The single-shot fault allows at most one
+                            // recorded batch failure, and replay must
+                            // have recovered it (never silently
+                            // dropped a batch: totals already match).
+                            assert!(rep.errors.len() <= 1, "{label}: too many batch errors");
+                            for be in &rep.errors {
+                                assert!(be.recovered, "{label}: batch {} not recovered", be.batch);
+                            }
+                        }
+                        // The fault can also land outside any batch
+                        // (initial count or final verification); that
+                        // must surface as a clean structured error.
+                        Err(e) => assert_injected_kind(&label, &e),
+                    }
+                })
+            });
+        }
+    }
+}
+
+#[test]
+fn budget_cancel_and_memory_cap_err_cleanly() {
+    let _wd = Watchdog::arm("budget_cancel_and_memory_cap_err_cleanly");
+    fault::with_plan(&FaultPlan::default(), || {
+        let g = gen::chung_lu(40, 50, 500, 2.0, 21);
+        // Pre-tripped cancel token: the first cooperative check unwinds
+        // and the entry point reports a budget error.
+        let token = Arc::new(AtomicBool::new(true));
+        let opts = CountOpts {
+            budget: Budget::default().with_cancel(token.clone()),
+            ..CountOpts::default()
+        };
+        let e = count_total(&g, &opts).unwrap_err();
+        assert!(e.is_budget(), "cancel must surface as a budget error, got {e}");
+        assert!(matches!(e.kind(), ErrorKind::Cancelled));
+        // Clearing the token makes the same options succeed, matching
+        // the unbudgeted run bit-for-bit.
+        token.store(false, Ordering::SeqCst);
+        let clean = count_total(&g, &CountOpts::default()).unwrap();
+        assert_eq!(count_total(&g, &opts).unwrap(), clean);
+        // A tiny live-memory cap trips the peel scratch probe.
+        let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
+        let vopts = PeelVOpts {
+            budget: Budget::default().with_max_live_bytes(16),
+            ..PeelVOpts::default()
+        };
+        let e = peel_vertices(&g, &vc.bu, &vc.bv, &vopts).unwrap_err();
+        assert!(e.is_budget(), "memory cap must surface as a budget error, got {e}");
+        assert!(matches!(e.kind(), ErrorKind::MemoryBudgetExceeded { .. }));
+    });
+}
+
+#[test]
+fn ambient_env_plan_is_contained_by_entry_points() {
+    let _wd = Watchdog::arm("ambient_env_plan_is_contained_by_entry_points");
+    let (g, expect) = fault::with_plan(&FaultPlan::default(), || {
+        let g = gen::chung_lu(40, 50, 500, 2.0, 5);
+        let expect = count_total(&g, &CountOpts::default()).unwrap();
+        (g, expect)
+    });
+    // Deliberately NO `with_plan` here: whatever plan the CI fault
+    // matrix armed through `PARBUTTERFLY_FAULT` governs these calls
+    // (locally, with the variable unset, they just run fault-free).
+    // The containment contract is the whole assertion: a structured
+    // `Err` or the exact count — never an abort, never a wrong value.
+    for attempt in 0..4 {
+        match count_total(&g, &CountOpts::default()) {
+            Ok(v) => assert_eq!(v, expect, "ambient attempt {attempt} returned a wrong count"),
+            Err(e) => assert_injected_kind("ambient count", &e),
+        }
+    }
+}
+
+#[test]
+fn ci_fault_plan_specs_parse() {
+    for spec in [
+        "panic@task=3",
+        "delay@task=5:20",
+        "fail@alloc=2",
+        "panic@task=2,delay@task=9:10",
+    ] {
+        FaultPlan::parse(spec).unwrap_or_else(|e| panic!("spec {spec:?} rejected: {e}"));
+    }
+    assert!(FaultPlan::parse("panic@task=").is_err());
+    assert!(FaultPlan::parse("smash@stack=1").is_err());
+}

@@ -48,7 +48,7 @@ fn golden_totals_across_all_agg_and_ranking_combos() {
                 for cache_opt in [false, true] {
                     let opts = CountOpts { ranking, agg, cache_opt, ..Default::default() };
                     assert_eq!(
-                        count_total(&g, &opts),
+                        count_total(&g, &opts).unwrap(),
                         expect,
                         "{file}: ranking={ranking:?} agg={agg:?} cache_opt={cache_opt}"
                     );
@@ -76,19 +76,19 @@ fn golden_counts_on_the_intersect_engine() {
                     ..Default::default()
                 };
                 assert_eq!(
-                    count_total(&g, &opts),
+                    count_total(&g, &opts).unwrap(),
                     expect,
                     "{file}: intersect ranking={ranking:?} cache_opt={cache_opt}"
                 );
             }
             let iopts = CountOpts { ranking, engine: Engine::Intersect, ..Default::default() };
             let wopts = CountOpts { ranking, ..Default::default() };
-            let (ivc, wvc) = (count_per_vertex(&g, &iopts), count_per_vertex(&g, &wopts));
+            let (ivc, wvc) = (count_per_vertex(&g, &iopts).unwrap(), count_per_vertex(&g, &wopts).unwrap());
             assert_eq!(ivc.bu, wvc.bu, "{file}: per-vertex U, ranking={ranking:?}");
             assert_eq!(ivc.bv, wvc.bv, "{file}: per-vertex V, ranking={ranking:?}");
             assert_eq!(
-                count_per_edge(&g, &iopts),
-                count_per_edge(&g, &wopts),
+                count_per_edge(&g, &iopts).unwrap(),
+                count_per_edge(&g, &wopts).unwrap(),
                 "{file}: per-edge, ranking={ranking:?}"
             );
         }
@@ -234,7 +234,7 @@ fn sparsify_estimates_within_exact_variance_bounds_on_golden_corpus() {
 
         let sd = edge_variance(&bflies, P).sqrt();
         let ests: Vec<f64> =
-            (0..SEEDS).map(|s| sparsify::approx_total_edge(&g, P, s, &opts)).collect();
+            (0..SEEDS).map(|s| sparsify::approx_total_edge(&g, P, s, &opts).unwrap()).collect();
         for (s, est) in ests.iter().enumerate() {
             assert!(
                 (est - exact).abs() <= 4.5 * sd,
@@ -249,7 +249,7 @@ fn sparsify_estimates_within_exact_variance_bounds_on_golden_corpus() {
 
         let sd = colorful_variance(&bflies, 1.0 / NCOLORS as f64).sqrt();
         let ests: Vec<f64> =
-            (0..SEEDS).map(|s| sparsify::approx_total_colorful(&g, NCOLORS, s, &opts)).collect();
+            (0..SEEDS).map(|s| sparsify::approx_total_colorful(&g, NCOLORS, s, &opts).unwrap()).collect();
         for (s, est) in ests.iter().enumerate() {
             assert!(
                 (est - exact).abs() <= 8.0 * sd,

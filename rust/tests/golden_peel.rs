@@ -85,8 +85,8 @@ fn golden_decompositions_across_every_engine_and_bucket_combo() {
     for name in CORPUS {
         let g = load_graph(name);
         let (tu, tv, w) = load_peel(name);
-        let vc = count_per_vertex(&g, &CountOpts::default());
-        let be = count_per_edge(&g, &CountOpts::default());
+        let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
+        let be = count_per_edge(&g, &CountOpts::default()).unwrap();
         for threads in [1usize, 4, 8] {
             with_threads(threads, || {
                 for engine in PeelEngine::ALL {
@@ -98,17 +98,17 @@ fn golden_decompositions_across_every_engine_and_bucket_combo() {
                             side,
                             ..Default::default()
                         };
-                        let ru = peel_vertices(&g, &vc.bu, &vc.bv, &opts(PeelSide::U));
+                        let ru = peel_vertices(&g, &vc.bu, &vc.bv, &opts(PeelSide::U)).unwrap();
                         assert!(ru.peeled_u);
                         assert_eq!(ru.tips, tu, "{tag}: tips_u");
-                        let rv = peel_vertices(&g, &vc.bu, &vc.bv, &opts(PeelSide::V));
+                        let rv = peel_vertices(&g, &vc.bu, &vc.bv, &opts(PeelSide::V)).unwrap();
                         assert!(!rv.peeled_u);
                         assert_eq!(rv.tips, tv, "{tag}: tips_v");
                         let re = peel_edges(
                             &g,
                             &be,
                             &PeelEOpts { engine, buckets, ..Default::default() },
-                        );
+                        ).unwrap();
                         assert_eq!(re.wings, w, "{tag}: wings");
                     }
                 }

@@ -29,12 +29,12 @@ fn counts_identical_across_layouts_rankings_and_threads() {
             with_threads(threads, || {
                 let f = opts(ranking, Layout::Flat);
                 let h = opts(ranking, Layout::Hub);
-                prop_assert_eq(count_total(&bg, &f), count_total(&bg, &h))?;
-                let vf = count_per_vertex(&bg, &f);
-                let vh = count_per_vertex(&bg, &h);
+                prop_assert_eq(count_total(&bg, &f).unwrap(), count_total(&bg, &h).unwrap())?;
+                let vf = count_per_vertex(&bg, &f).unwrap();
+                let vh = count_per_vertex(&bg, &h).unwrap();
                 prop_assert_eq(vf.bu, vh.bu)?;
                 prop_assert_eq(vf.bv, vh.bv)?;
-                prop_assert_eq(count_per_edge(&bg, &f), count_per_edge(&bg, &h))
+                prop_assert_eq(count_per_edge(&bg, &f).unwrap(), count_per_edge(&bg, &h).unwrap())
             })?;
         }
         Ok(())
@@ -45,8 +45,8 @@ fn counts_identical_across_layouts_rankings_and_threads() {
 fn peel_decompositions_identical_across_layouts_and_threads() {
     check("hub == flat for tip and wing decompositions", 5, |g| {
         let bg = g.bipartite(14, 90);
-        let vc = count_per_vertex(&bg, &CountOpts::default());
-        let be = count_per_edge(&bg, &CountOpts::default());
+        let vc = count_per_vertex(&bg, &CountOpts::default()).unwrap();
+        let be = count_per_edge(&bg, &CountOpts::default()).unwrap();
         let buckets = *g.pick(&BucketKind::ALL);
         for threads in [1usize, 4, 8] {
             with_threads(threads, || {
@@ -57,8 +57,8 @@ fn peel_decompositions_identical_across_layouts_and_threads() {
                     layout,
                     ..Default::default()
                 };
-                let rf = peel_vertices(&bg, &vc.bu, &vc.bv, &vo(Layout::Flat));
-                let rh = peel_vertices(&bg, &vc.bu, &vc.bv, &vo(Layout::Hub));
+                let rf = peel_vertices(&bg, &vc.bu, &vc.bv, &vo(Layout::Flat)).unwrap();
+                let rh = peel_vertices(&bg, &vc.bu, &vc.bv, &vo(Layout::Hub)).unwrap();
                 prop_assert_eq(rf.tips, rh.tips)?;
                 prop_assert_eq(rf.rounds, rh.rounds)?;
                 let eo = |layout| PeelEOpts {
@@ -67,8 +67,8 @@ fn peel_decompositions_identical_across_layouts_and_threads() {
                     layout,
                     ..Default::default()
                 };
-                let ef = peel_edges(&bg, &be, &eo(Layout::Flat));
-                let eh = peel_edges(&bg, &be, &eo(Layout::Hub));
+                let ef = peel_edges(&bg, &be, &eo(Layout::Flat)).unwrap();
+                let eh = peel_edges(&bg, &be, &eo(Layout::Hub)).unwrap();
                 prop_assert_eq(ef.wings, eh.wings)?;
                 prop_assert_eq(ef.rounds, eh.rounds)
             })?;
@@ -85,11 +85,11 @@ fn auto_layout_matches_both_forced_layouts_on_a_skewed_graph() {
     for ranking in Ranking::ALL {
         let a = opts(ranking, Layout::Auto);
         let f = opts(ranking, Layout::Flat);
-        assert_eq!(count_total(&bg, &a), count_total(&bg, &f), "{ranking:?} total");
-        let va = count_per_vertex(&bg, &a);
-        let vf = count_per_vertex(&bg, &f);
+        assert_eq!(count_total(&bg, &a).unwrap(), count_total(&bg, &f).unwrap(), "{ranking:?} total");
+        let va = count_per_vertex(&bg, &a).unwrap();
+        let vf = count_per_vertex(&bg, &f).unwrap();
         assert_eq!(va.bu, vf.bu, "{ranking:?} bu");
         assert_eq!(va.bv, vf.bv, "{ranking:?} bv");
-        assert_eq!(count_per_edge(&bg, &a), count_per_edge(&bg, &f), "{ranking:?} per-edge");
+        assert_eq!(count_per_edge(&bg, &a).unwrap(), count_per_edge(&bg, &f).unwrap(), "{ranking:?} per-edge");
     }
 }

@@ -32,13 +32,13 @@ fn tips(
     layout: Layout,
 ) -> Vec<u64> {
     let opts = PeelVOpts { engine, side, layout, ..Default::default() };
-    peel_vertices(g, bu, bv, &opts).tips
+    peel_vertices(g, bu, bv, &opts).unwrap().tips
 }
 
 /// Wing numbers under one engine/layout, from shared counts.
 fn wings(g: &BipartiteGraph, be: &[u64], engine: PeelEngine, layout: Layout) -> Vec<u64> {
     let opts = PeelEOpts { engine, layout, ..Default::default() };
-    peel_edges(g, be, &opts).wings
+    peel_edges(g, be, &opts).unwrap().wings
 }
 
 /// The graph family for the differential sweep: mostly the shared
@@ -63,8 +63,8 @@ fn engines_agree_on_random_graphs() {
     check("peel_differential::engines_agree", 200, |gen| {
         i += 1;
         let g = draw(gen, i);
-        let vc = count_per_vertex(&g, &CountOpts::default());
-        let be = count_per_edge(&g, &CountOpts::default());
+        let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
+        let be = count_per_edge(&g, &CountOpts::default()).unwrap();
         for side in [PeelSide::U, PeelSide::V] {
             let a = tips(&g, &vc.bu, &vc.bv, PeelEngine::Agg, side, Layout::Flat);
             let b = tips(&g, &vc.bu, &vc.bv, PeelEngine::Intersect, side, Layout::Flat);
@@ -89,8 +89,8 @@ fn two_phase_is_thread_invariant() {
     check("peel_differential::thread_invariance", 48, |gen| {
         i += 1;
         let g = draw(gen, i);
-        let vc = count_per_vertex(&g, &CountOpts::default());
-        let be = count_per_edge(&g, &CountOpts::default());
+        let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
+        let be = count_per_edge(&g, &CountOpts::default()).unwrap();
         let reference = with_threads(1, || {
             (
                 tips(&g, &vc.bu, &vc.bv, PeelEngine::TwoPhase, PeelSide::U, Layout::Flat),
@@ -122,8 +122,8 @@ fn two_phase_is_layout_invariant() {
     check("peel_differential::layout_invariance", 48, |gen| {
         i += 1;
         let g = draw(gen, i);
-        let vc = count_per_vertex(&g, &CountOpts::default());
-        let be = count_per_edge(&g, &CountOpts::default());
+        let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
+        let be = count_per_edge(&g, &CountOpts::default()).unwrap();
         for side in [PeelSide::U, PeelSide::V] {
             let flat = tips(&g, &vc.bu, &vc.bv, PeelEngine::TwoPhase, side, Layout::Flat);
             let hub = tips(&g, &vc.bu, &vc.bv, PeelEngine::TwoPhase, side, Layout::Hub);

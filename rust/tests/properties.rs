@@ -20,9 +20,9 @@ use parbutterfly::testutil::prop::{check, prop_assert, prop_assert_eq};
 fn prop_total_invariant_sums() {
     check("sum identities bu=2T bv=2T be=4T", 40, |g| {
         let bg = g.bipartite(18, 120);
-        let t = count_total(&bg, &CountOpts::default());
-        let vc = count_per_vertex(&bg, &CountOpts::default());
-        let be = count_per_edge(&bg, &CountOpts::default());
+        let t = count_total(&bg, &CountOpts::default()).unwrap();
+        let vc = count_per_vertex(&bg, &CountOpts::default()).unwrap();
+        let be = count_per_edge(&bg, &CountOpts::default()).unwrap();
         prop_assert_eq(vc.bu.iter().sum::<u64>(), 2 * t)?;
         prop_assert_eq(vc.bv.iter().sum::<u64>(), 2 * t)?;
         prop_assert_eq(be.iter().sum::<u64>(), 4 * t)
@@ -42,10 +42,10 @@ fn prop_all_configs_agree_with_brute_force() {
             for cache_opt in [false, true] {
                 let bfly = if g.bool(0.5) { BflyAgg::Atomic } else { BflyAgg::Reagg };
                 let opts = CountOpts { ranking, agg, bfly, cache_opt, ..Default::default() };
-                prop_assert_eq(count_total(&bg, &opts), expect_t)?;
-                let vc = count_per_vertex(&bg, &opts);
+                prop_assert_eq(count_total(&bg, &opts).unwrap(), expect_t)?;
+                let vc = count_per_vertex(&bg, &opts).unwrap();
                 prop_assert(vc.bu == ebu && vc.bv == ebv, format!("{opts:?} per-vertex"))?;
-                prop_assert(count_per_edge(&bg, &opts) == ebe, format!("{opts:?} per-edge"))?;
+                prop_assert(count_per_edge(&bg, &opts).unwrap() == ebe, format!("{opts:?} per-edge"))?;
             }
         }
         Ok(())
@@ -68,21 +68,21 @@ fn prop_intersect_engine_matches_every_strategy_and_brute_force() {
                 let ranking = *g.pick(&Ranking::ALL);
                 let iopts =
                     CountOpts { ranking, engine: Engine::Intersect, ..Default::default() };
-                prop_assert_eq(count_total(&bg, &iopts), expect_t)?;
-                let ivc = count_per_vertex(&bg, &iopts);
+                prop_assert_eq(count_total(&bg, &iopts).unwrap(), expect_t)?;
+                let ivc = count_per_vertex(&bg, &iopts).unwrap();
                 prop_assert(ivc.bu == ebu && ivc.bv == ebv, "intersect per-vertex vs brute")?;
-                let ibe = count_per_edge(&bg, &iopts);
+                let ibe = count_per_edge(&bg, &iopts).unwrap();
                 prop_assert(ibe == ebe, "intersect per-edge vs brute")?;
                 for agg in WedgeAgg::ALL {
                     let wopts = CountOpts { ranking, agg, ..Default::default() };
-                    prop_assert_eq(count_total(&bg, &wopts), expect_t)?;
-                    let wvc = count_per_vertex(&bg, &wopts);
+                    prop_assert_eq(count_total(&bg, &wopts).unwrap(), expect_t)?;
+                    let wvc = count_per_vertex(&bg, &wopts).unwrap();
                     prop_assert(
                         wvc.bu == ivc.bu && wvc.bv == ivc.bv,
                         format!("{agg:?} per-vertex vs intersect"),
                     )?;
                     prop_assert(
-                        count_per_edge(&bg, &wopts) == ibe,
+                        count_per_edge(&bg, &wopts).unwrap() == ibe,
                         format!("{agg:?} per-edge vs intersect"),
                     )?;
                 }
@@ -96,11 +96,11 @@ fn prop_intersect_engine_matches_every_strategy_and_brute_force() {
 fn prop_chunked_processing_invariant() {
     check("wedge-memory budget never changes results", 20, |g| {
         let bg = g.bipartite(16, 150);
-        let base = count_total(&bg, &CountOpts::default());
+        let base = count_total(&bg, &CountOpts::default()).unwrap();
         let cap = g.usize_in(1, 64);
         for agg in [WedgeAgg::Sort, WedgeAgg::Hash, WedgeAgg::Hist] {
             let opts = CountOpts { agg, max_wedges: cap, ..Default::default() };
-            prop_assert_eq(count_total(&bg, &opts), base)?;
+            prop_assert_eq(count_total(&bg, &opts).unwrap(), base)?;
         }
         Ok(())
     });
@@ -112,8 +112,8 @@ fn prop_mirror_swaps_sides() {
         let bg = g.bipartite(15, 100);
         let edges_t: Vec<(u32, u32)> = bg.edges().into_iter().map(|(u, v)| (v, u)).collect();
         let gt = BipartiteGraph::from_edges(bg.nv(), bg.nu(), &edges_t);
-        let a = count_per_vertex(&bg, &CountOpts::default());
-        let b = count_per_vertex(&gt, &CountOpts::default());
+        let a = count_per_vertex(&bg, &CountOpts::default()).unwrap();
+        let b = count_per_vertex(&gt, &CountOpts::default()).unwrap();
         prop_assert_eq(a.bu, b.bv)?;
         prop_assert_eq(a.bv, b.bu)
     });
@@ -130,8 +130,8 @@ fn prop_disjoint_union_adds() {
         }
         let un = BipartiteGraph::from_edges(a.nu() + b.nu(), a.nv() + b.nv(), &edges);
         prop_assert_eq(
-            count_total(&un, &CountOpts::default()),
-            count_total(&a, &CountOpts::default()) + count_total(&b, &CountOpts::default()),
+            count_total(&un, &CountOpts::default()).unwrap(),
+            count_total(&a, &CountOpts::default()).unwrap() + count_total(&b, &CountOpts::default()).unwrap(),
         )
     });
 }
@@ -141,7 +141,7 @@ fn prop_tip_numbers_bounded_and_correct() {
     check("tips match brute force; tip(u) <= b_u(u)", 15, |g| {
         let bg = g.bipartite(10, 60);
         let expect = brute::tip_numbers_u(&bg);
-        let vc = count_per_vertex(&bg, &CountOpts::default());
+        let vc = count_per_vertex(&bg, &CountOpts::default()).unwrap();
         let engine = *g.pick(&PeelEngine::ALL);
         let agg = *g.pick(&WedgeAgg::ALL);
         let buckets = *g.pick(&BucketKind::ALL);
@@ -151,7 +151,7 @@ fn prop_tip_numbers_bounded_and_correct() {
             &vc.bu,
             &vc.bv,
             &PeelVOpts { engine, agg, buckets, side: PeelSide::U, layout },
-        );
+        ).unwrap();
         prop_assert(r.tips == expect, format!("{engine:?}/{agg:?}/{buckets:?}/{layout:?}"))?;
         for u in 0..bg.nu() {
             prop_assert(r.tips[u] <= vc.bu[u], format!("tip > count at {u}"))?;
@@ -165,12 +165,12 @@ fn prop_wing_numbers_correct_all_backends() {
     check("wings match brute force", 10, |g| {
         let bg = g.bipartite(8, 40);
         let expect = brute::wing_numbers(&bg);
-        let be = count_per_edge(&bg, &CountOpts::default());
+        let be = count_per_edge(&bg, &CountOpts::default()).unwrap();
         let engine = *g.pick(&PeelEngine::ALL);
         let agg = *g.pick(&WedgeAgg::ALL);
         let buckets = *g.pick(&BucketKind::ALL);
         let layout = *g.pick(&[Layout::Flat, Layout::Hub]);
-        let r = peel_edges(&bg, &be, &PeelEOpts { engine, agg, buckets, layout });
+        let r = peel_edges(&bg, &be, &PeelEOpts { engine, agg, buckets, layout }).unwrap();
         prop_assert(r.wings == expect, format!("{engine:?}/{agg:?}/{buckets:?}/{layout:?}"))?;
         // wing(e) <= b_e(e).
         for e in 0..bg.m() {
@@ -189,8 +189,8 @@ fn prop_peel_engines_agree_at_1_and_4_threads() {
         parbutterfly::prims::pool::with_threads(threads, || {
             check(&format!("intersect peel == agg peel == brute (t={threads})"), 8, |g| {
                 let bg = g.bipartite(10, 55);
-                let vc = count_per_vertex(&bg, &CountOpts::default());
-                let be = count_per_edge(&bg, &CountOpts::default());
+                let vc = count_per_vertex(&bg, &CountOpts::default()).unwrap();
+                let be = count_per_edge(&bg, &CountOpts::default()).unwrap();
                 let expect_tips = brute::tip_numbers_u(&bg);
                 let expect_wings = brute::wing_numbers(&bg);
                 let buckets = *g.pick(&BucketKind::ALL);
@@ -200,10 +200,10 @@ fn prop_peel_engines_agree_at_1_and_4_threads() {
                         &vc.bu,
                         &vc.bv,
                         &PeelVOpts { engine, buckets, side: PeelSide::U, ..Default::default() },
-                    );
+                    ).unwrap();
                     prop_assert(r.tips == expect_tips, format!("{engine:?} tips"))?;
                     let w =
-                        peel_edges(&bg, &be, &PeelEOpts { engine, buckets, ..Default::default() });
+                        peel_edges(&bg, &be, &PeelEOpts { engine, buckets, ..Default::default() }).unwrap();
                     prop_assert(w.wings == expect_wings, format!("{engine:?} wings"))?;
                 }
                 Ok(())
@@ -251,13 +251,13 @@ fn prop_peel_order_monotonicity_via_k_sets() {
     check("every tip/wing level set is internally >= k", 8, |g| {
         let bg = g.bipartite(9, 45);
         let engine = *g.pick(&PeelEngine::ALL);
-        let vc = count_per_vertex(&bg, &CountOpts::default());
+        let vc = count_per_vertex(&bg, &CountOpts::default()).unwrap();
         let r = peel_vertices(
             &bg,
             &vc.bu,
             &vc.bv,
             &PeelVOpts { engine, side: PeelSide::U, ..Default::default() },
-        );
+        ).unwrap();
         let mut ks = r.tips.clone();
         ks.sort_unstable();
         ks.dedup();
@@ -271,8 +271,8 @@ fn prop_peel_order_monotonicity_via_k_sets() {
                 format!("{engine:?}: k-tip set invalid at k={k}"),
             )?;
         }
-        let be = count_per_edge(&bg, &CountOpts::default());
-        let w = peel_edges(&bg, &be, &PeelEOpts { engine, ..Default::default() });
+        let be = count_per_edge(&bg, &CountOpts::default()).unwrap();
+        let w = peel_edges(&bg, &be, &PeelEOpts { engine, ..Default::default() }).unwrap();
         let mut ks = w.wings.clone();
         ks.sort_unstable();
         ks.dedup();
@@ -315,10 +315,10 @@ fn prop_decompositions_invariant_under_relabeling() {
         let engine = *g.pick(&PeelEngine::ALL);
         let buckets = *g.pick(&BucketKind::ALL);
         let vopts = PeelVOpts { engine, buckets, side: PeelSide::U, ..Default::default() };
-        let vc1 = count_per_vertex(&bg, &CountOpts::default());
-        let vc2 = count_per_vertex(&bg2, &CountOpts::default());
-        let t1 = peel_vertices(&bg, &vc1.bu, &vc1.bv, &vopts);
-        let t2 = peel_vertices(&bg2, &vc2.bu, &vc2.bv, &vopts);
+        let vc1 = count_per_vertex(&bg, &CountOpts::default()).unwrap();
+        let vc2 = count_per_vertex(&bg2, &CountOpts::default()).unwrap();
+        let t1 = peel_vertices(&bg, &vc1.bu, &vc1.bv, &vopts).unwrap();
+        let t2 = peel_vertices(&bg2, &vc2.bu, &vc2.bv, &vopts).unwrap();
         for u in 0..bg.nu() {
             prop_assert(
                 t2.tips[pu[u] as usize] == t1.tips[u],
@@ -326,8 +326,8 @@ fn prop_decompositions_invariant_under_relabeling() {
             )?;
         }
         let eopts = PeelEOpts { engine, buckets, ..Default::default() };
-        let w1 = peel_edges(&bg, &count_per_edge(&bg, &CountOpts::default()), &eopts);
-        let w2 = peel_edges(&bg2, &count_per_edge(&bg2, &CountOpts::default()), &eopts);
+        let w1 = peel_edges(&bg, &count_per_edge(&bg, &CountOpts::default()).unwrap(), &eopts).unwrap();
+        let w2 = peel_edges(&bg2, &count_per_edge(&bg2, &CountOpts::default()).unwrap(), &eopts).unwrap();
         for eid in 0..bg.m() {
             let (u, v) = bg.edge(eid as u32);
             let eid2 = bg2
@@ -350,23 +350,23 @@ fn prop_wstore_variants_agree() {
         parbutterfly::prims::pool::with_threads(threads, || {
             check(&format!("WPEEL == PEEL for both decompositions (t={threads})"), 6, |g| {
                 let bg = g.bipartite(9, 45);
-                let vc = count_per_vertex(&bg, &CountOpts::default());
-                let be = count_per_edge(&bg, &CountOpts::default());
+                let vc = count_per_vertex(&bg, &CountOpts::default()).unwrap();
+                let be = count_per_edge(&bg, &CountOpts::default()).unwrap();
                 let ranking = *g.pick(&[Ranking::Side, Ranking::Degree, Ranking::ApproxDegree]);
                 let store = WedgeStore::build(&bg, ranking);
                 let wt =
-                    wpeel_vertices(&bg, &store, &vc.bu, &vc.bv, PeelSide::U, BucketKind::Julienne);
-                let ww = wpeel_edges(&bg, &store, &be, BucketKind::FibHeap);
+                    wpeel_vertices(&bg, &store, &vc.bu, &vc.bv, PeelSide::U, BucketKind::Julienne).unwrap();
+                let ww = wpeel_edges(&bg, &store, &be, BucketKind::FibHeap).unwrap();
                 for engine in PeelEngine::ALL {
                     let pt = peel_vertices(
                         &bg,
                         &vc.bu,
                         &vc.bv,
                         &PeelVOpts { engine, side: PeelSide::U, ..Default::default() },
-                    );
+                    ).unwrap();
                     prop_assert(wt.tips == pt.tips, format!("{engine:?} tips"))?;
                     let pw =
-                        peel_edges(&bg, &be, &PeelEOpts { engine, ..Default::default() });
+                        peel_edges(&bg, &be, &PeelEOpts { engine, ..Default::default() }).unwrap();
                     prop_assert(ww.wings == pw.wings, format!("{engine:?} wings"))?;
                 }
                 Ok(())
@@ -379,13 +379,13 @@ fn prop_wstore_variants_agree() {
 fn prop_sequential_baselines_agree() {
     check("baselines equal the framework", 15, |g| {
         let bg = g.bipartite(14, 90);
-        let t = count_total(&bg, &CountOpts::default());
+        let t = count_total(&bg, &CountOpts::default()).unwrap();
         use parbutterfly::baseline::{seq_count, seq_peel};
         prop_assert_eq(seq_count::sanei_mehri_total(&bg), t)?;
         prop_assert_eq(seq_count::wang_vanilla(&bg).1, t)?;
         prop_assert_eq(seq_count::chiba_nishizeki_total(&bg), t)?;
         prop_assert_eq(seq_count::pgd_like_total(&bg), t)?;
-        let vc = count_per_vertex(&bg, &CountOpts::default());
+        let vc = count_per_vertex(&bg, &CountOpts::default()).unwrap();
         let (tips, _) = seq_peel::sp_tip_numbers_u(&bg, &vc.bu);
         prop_assert_eq(tips, brute::tip_numbers_u(&bg))
     });
@@ -395,22 +395,22 @@ fn prop_sequential_baselines_agree() {
 fn prop_sparsification_identity_and_bounds() {
     check("p=1 sparsification is exact; estimates nonnegative", 15, |g| {
         let bg = g.bipartite(15, 100);
-        let t = count_total(&bg, &CountOpts::default()) as f64;
+        let t = count_total(&bg, &CountOpts::default()).unwrap() as f64;
         prop_assert_eq(
-            sparsify::approx_total_edge(&bg, 1.0, g.seed(), &CountOpts::default()),
+            sparsify::approx_total_edge(&bg, 1.0, g.seed(), &CountOpts::default()).unwrap(),
             t,
         )?;
         prop_assert_eq(
-            sparsify::approx_total_colorful(&bg, 1, g.seed(), &CountOpts::default()),
+            sparsify::approx_total_colorful(&bg, 1, g.seed(), &CountOpts::default()).unwrap(),
             t,
         )?;
         let p = 0.3 + g.f64_unit() * 0.6;
-        let est = sparsify::approx_total_edge(&bg, p, g.seed(), &CountOpts::default());
+        let est = sparsify::approx_total_edge(&bg, p, g.seed(), &CountOpts::default()).unwrap();
         prop_assert(est >= 0.0, "negative estimate")?;
         // Sub-sampled graph is a subgraph: its raw count <= exact.
         let sparse = sparsify::edge_sparsify(&bg, p, g.seed());
         prop_assert(
-            count_total(&sparse, &CountOpts::default()) as f64 <= t,
+            count_total(&sparse, &CountOpts::default()).unwrap() as f64 <= t,
             "subgraph exceeds graph",
         )
     });
@@ -420,10 +420,10 @@ fn prop_sparsification_identity_and_bounds() {
 fn prop_thread_count_invariance() {
     check("results identical at any thread count", 10, |g| {
         let bg = g.bipartite(16, 120);
-        let base = count_per_vertex(&bg, &CountOpts::default());
+        let base = count_per_vertex(&bg, &CountOpts::default()).unwrap();
         for t in [2usize, 3, 8] {
             let vc = parbutterfly::prims::pool::with_threads(t, || {
-                count_per_vertex(&bg, &CountOpts::default())
+                count_per_vertex(&bg, &CountOpts::default()).unwrap()
             });
             prop_assert(vc == base, format!("threads={t}"))?;
         }

@@ -33,11 +33,11 @@ fn coordinator_degrades_gracefully_without_engine() {
     // answer exact counts (dense via the reference kernel, or CPU).
     let c = Coordinator::with_default_backend();
     let g = gen::erdos_renyi(50, 60, 600, 9);
-    let r = c.count_total_routed(&g, &CountConfig::default());
+    let r = c.count_total_routed(&g, &CountConfig::default()).unwrap();
     assert_eq!(r.total, brute::total(&g));
     // And an explicitly backend-less coordinator routes to the CPU.
     let cpu = Coordinator::cpu_only();
-    let r2 = cpu.count_total_routed(&g, &CountConfig::default());
+    let r2 = cpu.count_total_routed(&g, &CountConfig::default()).unwrap();
     assert_eq!(r2.backend, "cpu");
     assert_eq!(r2.total, r.total);
 }
@@ -102,7 +102,7 @@ mod pjrt_artifacts {
         let Some(engine) = engine() else { return };
         for seed in [1, 2] {
             let g = gen::erdos_renyi(100, 120, 1500, seed);
-            let expect = count_total(&g, &CountOpts::default());
+            let expect = count_total(&g, &CountOpts::default()).unwrap();
             let got = dense::count_total_dense(&g, &engine).unwrap();
             assert_eq!(got, expect, "seed={seed}");
         }
@@ -113,11 +113,11 @@ mod pjrt_artifacts {
         let Some(engine) = engine() else { return };
         let g = gen::chung_lu(90, 110, 1200, 2.2, 7);
         let got = dense::count_dense(&g, &engine).unwrap();
-        assert_eq!(got.total, count_total(&g, &CountOpts::default()));
-        let vc = count_per_vertex(&g, &CountOpts::default());
+        assert_eq!(got.total, count_total(&g, &CountOpts::default()).unwrap());
+        let vc = count_per_vertex(&g, &CountOpts::default()).unwrap();
         assert_eq!(got.bu, vc.bu);
         assert_eq!(got.bv, vc.bv);
-        assert_eq!(got.be, count_per_edge(&g, &CountOpts::default()));
+        assert_eq!(got.be, count_per_edge(&g, &CountOpts::default()).unwrap());
     }
 
     #[test]
@@ -148,7 +148,7 @@ mod pjrt_artifacts {
         let Some(engine) = engine() else { return };
         // Skewed graph: dense core on top-degree vertices.
         let g = gen::chung_lu(300, 400, 6000, 2.1, 3);
-        let expect = count_total(&g, &CountOpts::default());
+        let expect = count_total(&g, &CountOpts::default()).unwrap();
         for (cu, cv) in [(50, 50), (128, 128), (300, 400)] {
             let got =
                 dense::count_total_hybrid(&g, &engine, cu, cv, &CountOpts::default()).unwrap();
@@ -166,12 +166,12 @@ mod pjrt_artifacts {
         let c = Coordinator::with_backend(Box::new(engine));
         assert!(c.has_backend());
         let g = gen::erdos_renyi(100, 100, 1000, 9);
-        let r = c.count_total_routed(&g, &CountConfig::default());
+        let r = c.count_total_routed(&g, &CountConfig::default()).unwrap();
         assert_eq!(r.backend, "pjrt");
         assert_eq!(r.total, brute::total(&g));
         // Oversized graphs fall back to the CPU framework.
         let big = gen::erdos_renyi(dense_limit + 1, dense_limit + 1, 3000, 9);
-        let r2 = c.count_total_routed(&big, &CountConfig::default());
+        let r2 = c.count_total_routed(&big, &CountConfig::default()).unwrap();
         assert_eq!(r2.backend, "cpu");
     }
 }

@@ -14,17 +14,32 @@ use std::fmt;
 pub struct Error {
     msg: String,
     source: Option<Box<Error>>,
+    /// The original typed error this `Error` was converted from (via
+    /// `?` / `From`), kept so callers can [`downcast_ref`](Self::downcast_ref)
+    /// back to it — e.g. the CLI mapping budget exhaustion to its own
+    /// exit code.  `None` for message-only errors.
+    payload: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
     /// Build an error from a displayable message.
     pub fn msg<M: fmt::Display>(m: M) -> Self {
-        Error { msg: m.to_string(), source: None }
+        Error { msg: m.to_string(), source: None, payload: None }
     }
 
     /// Wrap `self` with an outer context message.
     pub fn context<C: fmt::Display>(self, ctx: C) -> Self {
-        Error { msg: ctx.to_string(), source: Some(Box::new(self)) }
+        Error { msg: ctx.to_string(), source: Some(Box::new(self)), payload: None }
+    }
+
+    /// View the original typed error this chain was built from, if any
+    /// link holds a `T`.  Searches outermost-first, so context wrapping
+    /// never hides the payload.  Mirrors the real crate's API.
+    pub fn downcast_ref<T: std::any::Any>(&self) -> Option<&T> {
+        if let Some(t) = self.payload.as_deref().and_then(|p| p.downcast_ref::<T>()) {
+            return Some(t);
+        }
+        self.source.as_deref()?.downcast_ref::<T>()
     }
 
     /// Iterate the chain of messages, outermost first.
@@ -87,9 +102,11 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
         }
         let mut err: Option<Error> = None;
         for msg in msgs.into_iter().rev() {
-            err = Some(Error { msg, source: err.map(Box::new) });
+            err = Some(Error { msg, source: err.map(Box::new), payload: None });
         }
-        err.unwrap()
+        let mut err = err.unwrap();
+        err.payload = Some(Box::new(e));
+        err
     }
 }
 
@@ -177,6 +194,18 @@ mod tests {
         assert_eq!(plain, "reading config");
         assert!(full.starts_with("reading config: "), "{full}");
         assert!(full.len() > plain.len());
+    }
+
+    #[test]
+    fn downcast_ref_recovers_the_original_error() {
+        fn inner() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"))?;
+            Ok(())
+        }
+        let e = inner().unwrap_err().context("outer");
+        let io = e.downcast_ref::<std::io::Error>().expect("typed payload survives context");
+        assert_eq!(io.to_string(), "boom");
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
     }
 
     #[test]
