@@ -1,19 +1,27 @@
 //! Link-spam detection via butterfly density (the Gibson et al.
-//! motivation from the paper's introduction).
+//! motivation from the paper's introduction) — run as a **protocol
+//! client** against an in-process serve-mode daemon.
 //!
 //! Web link farms are host x target bipartite blocks that are far too
 //! (2,2)-biclique-dense to be organic.  We plant a farm inside a
-//! power-law background graph and recover it with wing decomposition:
-//! farm edges survive to much deeper peeling levels than organic ones.
+//! power-law background graph, stand up the resident query daemon on
+//! an ephemeral TCP port, and recover the farm purely through the wire
+//! protocol: one `wing` query per link, classified against a threshold
+//! from the wing distribution.  A final `update`/`rebuild` exchange
+//! shows the daemon absorbing farm takedowns without restarting.
 //!
 //! ```bash
 //! cargo run --release --example spam_detection
 //! ```
 
-use parbutterfly::count::{count_per_edge, CountOpts};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use parbutterfly::bench_support::json::Json;
 use parbutterfly::graph::{gen, BipartiteGraph};
-use parbutterfly::peel::{peel_edges, PeelEOpts};
 use parbutterfly::prims::rng::Pcg32;
+use parbutterfly::serve::{spawn_listener, ServeOpts, Session};
 
 fn main() {
     // Background: organic power-law web graph, 4000 hosts x 6000 pages.
@@ -41,22 +49,56 @@ fn main() {
         farm_edges.len()
     );
 
-    // Wing decomposition: farm edges live in deep k-wings.
-    let be = count_per_edge(&g, &CountOpts::default()).unwrap();
-    let wings = peel_edges(&g, &be, &PeelEOpts::default()).unwrap();
-    println!("wing decomposition: {} rounds", wings.rounds);
+    // Stand the daemon up on an ephemeral port; everything below goes
+    // through the wire, exactly as an external client would.
+    let session = Arc::new(Session::open(g.clone(), ServeOpts::default()).unwrap());
+    let (addr, _accept) = spawn_listener(Arc::clone(&session), "127.0.0.1:0").unwrap();
+    println!("daemon listening on {addr}");
+    let sock = TcpStream::connect(addr).unwrap();
+    let mut replies = BufReader::new(sock.try_clone().unwrap()).lines();
+
+    let shape = {
+        let mut one = sock.try_clone().unwrap();
+        writeln!(one, r#"{{"op": "epoch"}}"#).unwrap();
+        parse(&replies.next().unwrap().unwrap())
+    };
+    println!(
+        "epoch {}: serving {} x {} with {} links",
+        field(&shape, "epoch"),
+        field(&shape, "nu"),
+        field(&shape, "nv"),
+        field(&shape, "m")
+    );
+
+    // One `wing` query per link, pipelined: a writer thread streams the
+    // requests while we read the one-reply-per-line stream back.
+    let all_edges = g.edges();
+    let ask = all_edges.clone();
+    let writer = std::thread::spawn(move || {
+        let mut w = BufWriter::new(sock);
+        for (u, v) in ask {
+            writeln!(w, r#"{{"op": "wing", "u": {u}, "v": {v}}}"#).unwrap();
+        }
+        w.flush().unwrap();
+        w.into_inner().unwrap() // hand the raw socket back for the epilogue
+    });
+    let mut wings = Vec::with_capacity(all_edges.len());
+    for _ in 0..all_edges.len() {
+        let obj = parse(&replies.next().unwrap().unwrap());
+        wings.push(field(&obj, "wing"));
+    }
+    let mut sock = writer.join().unwrap();
 
     // Classify: flag edges whose wing number clears a threshold chosen
-    // from the wing distribution (99.5th percentile of organic mass).
-    let mut sorted: Vec<u64> = wings.wings.clone();
+    // from the wing distribution (97th percentile of total mass).
+    let mut sorted: Vec<u64> = wings.clone();
     sorted.sort_unstable();
     let threshold = sorted[(sorted.len() as f64 * 0.97) as usize].max(1);
-    let all_edges = g.edges();
     let mut tp = 0usize;
     let mut fp = 0usize;
     let mut fnn = 0usize;
     for (eid, &(u, v)) in all_edges.iter().enumerate() {
-        let flagged = wings.wings[eid] > threshold;
+        let flagged = wings[eid] > threshold;
         let spam = farm_edges.contains(&(u, v));
         match (flagged, spam) {
             (true, true) => tp += 1,
@@ -73,4 +115,43 @@ fn main() {
         "farm must be separable by wing number (p={precision:.3}, r={recall:.3})"
     );
     println!("link farm recovered: OK");
+
+    // Takedown drill: delete the flagged farm links through the
+    // protocol and watch the butterfly count collapse in one epoch.
+    let before = {
+        writeln!(sock, r#"{{"op": "total"}}"#).unwrap();
+        field(&parse(&replies.next().unwrap().unwrap()), "total")
+    };
+    let pairs: Vec<String> =
+        farm_edges.iter().map(|(u, v)| format!("[{u}, {v}]")).collect();
+    writeln!(sock, r#"{{"op": "update", "delete": [{}]}}"#, pairs.join(", ")).unwrap();
+    let takedown = parse(&replies.next().unwrap().unwrap());
+    writeln!(sock, r#"{{"op": "total"}}"#).unwrap();
+    let after = field(&parse(&replies.next().unwrap().unwrap()), "total");
+    println!(
+        "takedown: removed {} links at epoch {}; butterflies {} -> {}",
+        field(&takedown, "applied"),
+        field(&takedown, "epoch"),
+        before,
+        after
+    );
+    assert!(after < before, "removing the farm must destroy butterflies");
+
+    writeln!(sock, r#"{{"op": "shutdown"}}"#).unwrap();
+    let bye = parse(&replies.next().unwrap().unwrap());
+    assert!(matches!(bye.get("shutdown"), Some(Json::Bool(true))));
+    println!("daemon shut down cleanly");
+}
+
+fn parse(line: &str) -> Json {
+    let obj = Json::parse(line).unwrap_or_else(|e| panic!("unparseable reply {line:?}: {e}"));
+    assert!(
+        matches!(obj.get("ok"), Some(Json::Bool(true))),
+        "daemon refused a request: {line}"
+    );
+    obj
+}
+
+fn field(obj: &Json, key: &str) -> u64 {
+    obj.get(key).and_then(Json::as_f64).unwrap_or_else(|| panic!("missing field {key}")) as u64
 }

@@ -1,0 +1,10 @@
+//! Serve-mode daemon query latency + update-epoch round trip; rewrites BENCH_serve.json at the workspace root.
+//!
+//! Thin wrapper: the workload body lives in `bench_support` and is
+//! dispatched through the shared target registry, so `cargo bench
+//! --bench serve_latency` and `parbutterfly bench run` execute
+//! identical code (same suites, same recorder, same snapshot writer).
+
+fn main() {
+    parbutterfly::bench_support::registry::run_from_bench_binary("serve_latency");
+}

@@ -415,7 +415,7 @@ mod tests {
         let root = crate::bench_support::registry::workspace_root();
         for name in
             ["BENCH_intersect.json", "BENCH_layout.json", "BENCH_peel.json",
-             "BENCH_preprocess.json", "BENCH_dynamic.json"]
+             "BENCH_preprocess.json", "BENCH_dynamic.json", "BENCH_serve.json"]
         {
             let path = root.join(name);
             check_schema(&path).unwrap_or_else(|e| panic!("{name}: {e:#}"));

@@ -479,9 +479,13 @@ mod tests {
 
     #[test]
     fn existing_snapshot_files_parse() {
-        for f in
-            ["BENCH_intersect.json", "BENCH_peel.json", "BENCH_preprocess.json", "BENCH_dynamic.json"]
-        {
+        for f in [
+            "BENCH_intersect.json",
+            "BENCH_peel.json",
+            "BENCH_preprocess.json",
+            "BENCH_dynamic.json",
+            "BENCH_serve.json",
+        ] {
             let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(f);
             let text = std::fs::read_to_string(&path).unwrap();
             let doc = Json::parse(&text).unwrap_or_else(|e| panic!("{f}: {e}"));

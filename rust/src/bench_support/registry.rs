@@ -203,9 +203,13 @@ fn run_dynamic(p: Profile) -> Option<SnapshotMeta> {
     Some(snapshots::fig_dynamic(p))
 }
 
+fn run_serve(p: Profile) -> Option<SnapshotMeta> {
+    Some(snapshots::serve_latency(p))
+}
+
 /// Every benchmark target, in rough paper order.
 pub fn targets() -> &'static [Target] {
-    static TARGETS: [Target; 17] = [
+    static TARGETS: [Target; 18] = [
         Target {
             id: "fig5",
             bin: "fig5_agg_vertex",
@@ -324,6 +328,13 @@ pub fn targets() -> &'static [Target] {
             describe: "batch-dynamic maintenance vs recount-per-batch",
             snapshot: Some("BENCH_dynamic.json"),
             run: run_dynamic,
+        },
+        Target {
+            id: "serve",
+            bin: "serve_latency",
+            describe: "serve-mode daemon query latency + update-epoch round trip",
+            snapshot: Some("BENCH_serve.json"),
+            run: run_serve,
         },
     ];
     &TARGETS

@@ -1,5 +1,5 @@
-//! The five snapshot benches — the workloads whose results are
-//! recorded in-repo as `BENCH_*.json` files at the workspace root.
+//! The snapshot benches — the workloads whose results are recorded
+//! in-repo as `BENCH_*.json` files at the workspace root.
 //!
 //! Each function here is the *single* definition of its workload:
 //! the `harness = false` bench binary (`cargo bench --bench <name>`)
@@ -20,11 +20,12 @@ use super::json::Json;
 use super::registry::{Profile, SnapshotMeta};
 use super::workloads::{self, PEELING_SUITE};
 use crate::count::{count_per_edge, count_per_vertex, count_total, CountOpts, Engine};
-use crate::dynamic::{DynGraph, DynOpts};
+use crate::dynamic::{BatchKind, DynGraph, DynOpts};
 use crate::graph::{io, BipartiteGraph, Layout, RankedGraph};
 use crate::peel::{peel_edges, peel_vertices, BucketKind, PeelEOpts, PeelSide, PeelVOpts};
 use crate::prims::pool::{num_threads, with_threads};
 use crate::rank::{choose_ranking, rank_vertices, Ranking};
+use crate::serve::{handle_request, ServeOpts, Session};
 
 /// Round to 3 decimals (dimensionless ratios; [`Json::ms`] covers ms).
 fn round3(v: f64) -> Json {
@@ -485,6 +486,94 @@ pub fn fig_dynamic(profile: Profile) -> SnapshotMeta {
                dynamic` or `cargo bench --bench fig_dynamic`"
             .into(),
         top: vec![],
+        summary: Some(Json::Arr(summary)),
+    }
+}
+
+/// Serve-mode latency: protocol read queries answered from the epoch
+/// snapshot, plus the synchronous update round trip (admit → apply →
+/// publish) (`BENCH_serve.json`).
+pub fn serve_latency(profile: Profile) -> SnapshotMeta {
+    let suite: &[&str] = match profile {
+        Profile::Full => &["small", "er", "cl"],
+        Profile::Smoke => &["small"],
+    };
+    // Snapshot loads are sub-microsecond; batch the reads so each timed
+    // sample registers above timer noise.
+    const READS_PER_SAMPLE: usize = 100;
+    banner(
+        "serve",
+        "resident-daemon query latency and update-epoch round trip; snapshot: BENCH_serve.json",
+    );
+    let mut summary = Vec::new();
+    for &wl_id in suite {
+        let wl = workloads::build(wl_id);
+        let (u0, v0) = wl.graph.edges()[0];
+        let session = Session::open(
+            wl.graph.clone(),
+            // Counting-focused deployment: snapshots carry the count
+            // arrays but skip per-epoch decompositions.
+            ServeOpts { decompositions: false, ..ServeOpts::default() },
+        )
+        .expect("open serve session");
+        println!("[{}] {}", wl.id, wl.describe);
+        let mut read_total_ms = f64::NAN;
+        for (label, req) in [
+            ("read/total", r#"{"op": "total"}"#.to_string()),
+            ("read/vertex", format!(r#"{{"op": "vertex", "side": "u", "id": {u0}}}"#)),
+            ("read/topk", r#"{"op": "topk", "side": "v", "k": 10}"#.to_string()),
+            ("read/digest", r#"{"op": "digest"}"#.to_string()),
+        ] {
+            let m = bench(|| {
+                let mut bytes = 0usize;
+                for _ in 0..READS_PER_SAMPLE {
+                    bytes += handle_request(&session, &req).text.len();
+                }
+                bytes
+            });
+            report_keyed(
+                "serve",
+                wl.id,
+                label,
+                &m,
+                &[
+                    ("query", Json::str(label)),
+                    ("per_sample", Json::Num(READS_PER_SAMPLE as f64)),
+                ],
+            );
+            if label == "read/total" {
+                read_total_ms = m.median_ms;
+            }
+        }
+        // Update round trip: delete + re-insert one edge — two admitted
+        // batches, two published epochs, and the graph ends each sample
+        // exactly where it started.
+        let m = bench(|| {
+            let d = session.update(BatchKind::Delete, vec![(u0, v0)]);
+            let i = session.update(BatchKind::Insert, vec![(u0, v0)]);
+            assert!(d.error.is_none() && i.error.is_none(), "bench update failed");
+            i.epoch
+        });
+        report_keyed("serve", wl.id, "update/roundtrip", &m, &[(
+            "query",
+            Json::str("update/roundtrip"),
+        )]);
+        summary.push(Json::Obj(vec![
+            ("workload".into(), Json::str(wl.id)),
+            ("read_total_ms".into(), Json::ms(read_total_ms)),
+            ("update_roundtrip_ms".into(), Json::ms(m.median_ms)),
+            ("epochs_published".into(), Json::Num(session.snapshot().epoch as f64)),
+        ]));
+        session.shutdown();
+    }
+    SnapshotMeta {
+        note: "serve-mode daemon latency: read queries (batched 100 per timed sample, so \
+               row medians are per-100-queries) answered from the published epoch snapshot, \
+               and the synchronous delete+reinsert update round trip through the writer \
+               thread (two epochs per sample); regenerate with `parbutterfly bench run \
+               --filter serve` or `cargo bench --bench serve_latency`"
+            .into(),
+        top: vec![("threads".into(), Json::Num(num_threads() as f64))],
         summary: Some(Json::Arr(summary)),
     }
 }

@@ -16,6 +16,11 @@
 //!                     [--engine wedges|intersect] [--rank R] [--layout auto|flat|hub]
 //!                     [--threads T] [--verify] [--per-batch] [--skip-bad-lines]
 //!                     [--timeout-ms MS] [--memory-budget BYTES]
+//! parbutterfly serve  [--graph FILE] [--listen HOST:PORT] [--admit-max-edges N]
+//!                     [--admit-max-ms MS] [--no-decompositions] [--no-retry]
+//!                     [--rebuild-fraction F] [--engine wedges|intersect] [--rank R]
+//!                     [--layout auto|flat|hub] [--threads T]
+//!                     [--timeout-ms MS] [--memory-budget BYTES]
 //! parbutterfly dense  --graph FILE [--backend auto|rust|pjrt]  # dense-core path
 //! parbutterfly backends                       # dense backend availability
 //! parbutterfly artifacts                      # list PJRT artifacts (feature pjrt)
@@ -221,6 +226,7 @@ fn run_inner(argv: &[String]) -> anyhow::Result<()> {
         "peel" => cmd_peel(&args),
         "approx" => cmd_approx(&args),
         "dynamic" => cmd_dynamic(&args),
+        "serve" => cmd_serve(&args),
         "dense" => cmd_dense(&args),
         "backends" => cmd_backends(),
         "artifacts" => cmd_artifacts(),
@@ -235,8 +241,10 @@ fn run_inner(argv: &[String]) -> anyhow::Result<()> {
 }
 
 const HELP: &str = "parbutterfly — parallel butterfly computations (Shi & Shun 2019)
-commands: gen, info, count, peel, approx, dynamic, dense, backends, artifacts,
-          bench (run | diff | list — the native benchmark harness)
+commands: gen, info, count, peel, approx, dynamic, serve, dense, backends,
+          artifacts, bench (run | diff | list — the native benchmark harness)
+serve:    resident query daemon over the line/JSON protocol on stdin/stdout
+          (plus --listen HOST:PORT for TCP); see README §Serve protocol
 shared:   --timeout-ms MS / --memory-budget BYTES set a cooperative budget
           (exit code 4 when exhausted); dynamic takes --skip-bad-lines to
           record malformed stream lines instead of aborting
@@ -506,6 +514,62 @@ fn cmd_dynamic(args: &Args) -> anyhow::Result<()> {
         anyhow::ensure!(ok, "incremental counts diverge from the static recount");
         println!("verify: incremental counts match the full static recount");
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    // Start from --graph when given, otherwise from an empty graph that
+    // grows as `update` requests name vertices (mirrors `dynamic`).
+    let g0 = match args.get("graph") {
+        Some(p) => io::load_edge_list(Path::new(p))?,
+        None => BipartiteGraph::from_edges(0, 0, &[]),
+    };
+    let mut dopts = DynOpts { count: count_opts(args)?, ..Default::default() };
+    if let Some(f) = args.get("rebuild-fraction") {
+        dopts.rebuild_fraction = f
+            .parse::<f64>()
+            .ok()
+            .filter(|x| *x >= 0.0)
+            .ok_or_else(|| anyhow::anyhow!("bad --rebuild-fraction {f:?} (need a float >= 0)"))?;
+    }
+    // The writer runs on its own thread, which does not inherit the
+    // thread-local pool override — pass --threads through ServeOpts so
+    // the writer's recounts run at the requested width.
+    let threads = match args.get("threads") {
+        None => None,
+        Some(s) => match s.parse::<usize>() {
+            Ok(t) if t > 0 => Some(t),
+            _ => anyhow::bail!("bad --threads {s:?} (need a positive integer)"),
+        },
+    };
+    let opts = crate::serve::ServeOpts {
+        dyn_opts: dopts,
+        decompositions: !args.has("no-decompositions"),
+        admit_max_edges: args.get_usize("admit-max-edges", 4096)?,
+        admit_max_ms: args.get_u64("admit-max-ms", 0)?,
+        retry: !args.has("no-retry"),
+        threads,
+    };
+    let mut service = crate::coordinator::Service::cpu_only();
+    let session = service.open_session("default", g0, opts)?;
+    // The banner goes to stderr: stdout carries exactly one JSON reply
+    // per request line and nothing else, so transcripts stay diffable.
+    let snap = session.snapshot();
+    eprintln!(
+        "serving {} x {} ({} edges, {} butterflies) at epoch {}",
+        snap.graph.nu(),
+        snap.graph.nv(),
+        snap.graph.m(),
+        snap.global,
+        snap.epoch
+    );
+    if let Some(addr) = args.get("listen") {
+        let (local, _accept) = crate::serve::spawn_listener(std::sync::Arc::clone(&session), addr)?;
+        eprintln!("listening on {local}");
+    }
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    crate::serve::serve_lines(&session, stdin.lock(), stdout.lock())?;
     Ok(())
 }
 

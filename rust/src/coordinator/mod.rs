@@ -18,9 +18,13 @@ use crate::count::{
     self, count_per_edge, count_per_vertex, CountOpts, VertexCounts,
 };
 use crate::dynamic::stream::ParseReject;
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::dynamic::stream::Batch;
-use crate::dynamic::{BatchKind, BatchOutcome, DynGraph, DynOpts};
+use crate::dynamic::{
+    apply_batch_with_retry, BatchKind, BatchOutcome, DynGraph, DynOpts, RetryOutcome,
+};
+
+pub use crate::dynamic::BatchError;
 use crate::graph::BipartiteGraph;
 use crate::peel::{self, PeelEOpts, PeelVOpts, TipResult, WingResult};
 use crate::rank::{choose_ranking, PreprocessTiming, Ranking};
@@ -202,19 +206,6 @@ pub struct DynReport {
     pub verified: Option<bool>,
 }
 
-/// One failed batch application inside [`replay_stream`].
-#[derive(Clone, Debug)]
-pub struct BatchError {
-    /// Index into the replayed batch sequence.
-    pub batch: usize,
-    pub kind: BatchKind,
-    /// The first failure the batch hit.
-    pub error: Error,
-    /// True when the one-shot retry (with rebuild if needed) applied
-    /// the batch after all; false when the batch was skipped.
-    pub recovered: bool,
-}
-
 /// Replay grouped update batches over `g`, maintaining exact counts
 /// incrementally; with `verify`, the final counts (all three
 /// granularities) are checked against a full static recount through
@@ -247,44 +238,28 @@ pub fn replay_stream(
         verified: None,
     };
     for (i, b) in batches.iter().enumerate() {
-        fn apply(dg: &mut DynGraph, b: &Batch) -> Result<BatchOutcome> {
-            match b.kind {
-                BatchKind::Insert => dg.insert_edges(&b.edges),
-                BatchKind::Delete => dg.delete_edges(&b.edges),
+        // The retry-and-rebuild policy (and its one aborting case: a
+        // rebuild that itself fails) lives in
+        // [`apply_batch_with_retry`], shared with the serve writer.
+        let out = match apply_batch_with_retry(&mut dg, b.kind, &b.edges)? {
+            RetryOutcome::Clean(out) => out,
+            RetryOutcome::Recovered { outcome, error } => {
+                rep.errors.push(BatchError {
+                    batch: i,
+                    kind: b.kind,
+                    error,
+                    recovered: true,
+                });
+                outcome
             }
-        }
-        let out = match apply(&mut dg, b) {
-            Ok(out) => out,
-            Err(first) => {
-                // Retry once; a poisoning failure needs a rebuild
-                // first.  A rebuild that fails leaves no usable graph
-                // to continue on — that is the one aborting case.
-                if dg.poisoned().is_some() {
-                    dg.rebuild()?;
-                }
-                match apply(&mut dg, b) {
-                    Ok(out) => {
-                        rep.errors.push(BatchError {
-                            batch: i,
-                            kind: b.kind,
-                            error: first,
-                            recovered: true,
-                        });
-                        out
-                    }
-                    Err(_second) => {
-                        rep.errors.push(BatchError {
-                            batch: i,
-                            kind: b.kind,
-                            error: first,
-                            recovered: false,
-                        });
-                        if dg.poisoned().is_some() {
-                            dg.rebuild()?;
-                        }
-                        continue; // batch skipped
-                    }
-                }
+            RetryOutcome::Skipped { error } => {
+                rep.errors.push(BatchError {
+                    batch: i,
+                    kind: b.kind,
+                    error,
+                    recovered: false,
+                });
+                continue; // batch skipped
             }
         };
         match b.kind {
@@ -393,6 +368,106 @@ impl Coordinator {
     }
 }
 
+/// The session-owning facade over the coordinator: static reports
+/// delegate to the free functions above (and to the [`Coordinator`]'s
+/// dense routing), while long-lived serve-mode state — named
+/// [`serve::Session`](crate::serve::Session)s holding graphs resident
+/// under a writer thread — is owned here.  This is the struct ROADMAP
+/// item 1 asks for: the place sharding and cross-request caching can
+/// later attach without another refactor.
+pub struct Service {
+    coordinator: Coordinator,
+    sessions: Vec<(String, std::sync::Arc<crate::serve::Session>)>,
+}
+
+impl Service {
+    pub fn new(coordinator: Coordinator) -> Self {
+        Self { coordinator, sessions: Vec::new() }
+    }
+
+    /// Service without a dense path (see [`Coordinator::cpu_only`]).
+    pub fn cpu_only() -> Self {
+        Self::new(Coordinator::cpu_only())
+    }
+
+    /// Service over the process-default dense backend (see
+    /// [`Coordinator::with_default_backend`]).
+    pub fn with_default_backend() -> Self {
+        Self::new(Coordinator::with_default_backend())
+    }
+
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coordinator
+    }
+
+    /// Static count with dense routing for totals
+    /// ([`Coordinator::count_total_routed`]); other modes go through
+    /// the CPU framework.
+    pub fn count(&self, g: &BipartiteGraph, mode: CountMode, cfg: &CountConfig) -> Result<CountReport> {
+        match mode {
+            CountMode::Total => self.coordinator.count_total_routed(g, cfg),
+            _ => count_report(g, mode, cfg),
+        }
+    }
+
+    /// Static tip decomposition (see [`tip_report`]).
+    pub fn tips(&self, g: &BipartiteGraph, cfg: &PeelConfig) -> Result<(TipResult, f64)> {
+        tip_report(g, cfg)
+    }
+
+    /// Static wing decomposition (see [`wing_report`]).
+    pub fn wings(&self, g: &BipartiteGraph, cfg: &PeelConfig) -> Result<(WingResult, f64)> {
+        wing_report(g, cfg)
+    }
+
+    /// Replay an update stream (see [`replay_stream`]).
+    pub fn replay(
+        &self,
+        g: BipartiteGraph,
+        batches: &[Batch],
+        opts: &DynOpts,
+        verify: bool,
+    ) -> Result<(DynGraph, DynReport)> {
+        replay_stream(g, batches, opts, verify)
+    }
+
+    /// Open (or replace) a named resident session over `g`.  The
+    /// returned handle is shared: queries can keep using it after the
+    /// service itself is gone.
+    pub fn open_session(
+        &mut self,
+        name: &str,
+        g: BipartiteGraph,
+        opts: crate::serve::ServeOpts,
+    ) -> Result<std::sync::Arc<crate::serve::Session>> {
+        let session = std::sync::Arc::new(crate::serve::Session::open(g, opts)?);
+        self.sessions.retain(|(n, _)| n != name);
+        self.sessions.push((name.to_string(), std::sync::Arc::clone(&session)));
+        Ok(session)
+    }
+
+    /// Look up a resident session by name.
+    pub fn session(&self, name: &str) -> Option<std::sync::Arc<crate::serve::Session>> {
+        self.sessions
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| std::sync::Arc::clone(s))
+    }
+
+    /// Drop a named session (shutting its writer down unless other
+    /// handles keep it alive); returns whether it existed.
+    pub fn close_session(&mut self, name: &str) -> bool {
+        let before = self.sessions.len();
+        self.sessions.retain(|(n, _)| n != name);
+        self.sessions.len() != before
+    }
+
+    /// Names of the open sessions, in opening order.
+    pub fn session_names(&self) -> Vec<String> {
+        self.sessions.iter().map(|(n, _)| n.clone()).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -492,6 +567,21 @@ mod tests {
         assert_eq!(dg.total(), rep.total);
         assert_eq!(rep.outcomes.len(), 3);
         assert_eq!(rep.delta_batches + rep.recount_batches, 3);
+    }
+
+    #[test]
+    fn service_owns_sessions_and_delegates_reports() {
+        let g = gen::erdos_renyi(15, 15, 80, 2);
+        let mut svc = Service::cpu_only();
+        let r = svc.count(&g, CountMode::Total, &CountConfig::default()).unwrap();
+        assert_eq!(r.total, brute::total(&g));
+        let s = svc.open_session("main", g.clone(), crate::serve::ServeOpts::default()).unwrap();
+        assert_eq!(svc.session_names(), vec!["main".to_string()]);
+        assert_eq!(s.snapshot().global, brute::total(&g));
+        assert!(svc.session("main").is_some());
+        assert!(svc.close_session("main"));
+        assert!(!svc.close_session("main"));
+        assert!(svc.session("main").is_none());
     }
 
     #[test]

@@ -187,6 +187,75 @@ pub struct BatchOutcome {
     pub millis: f64,
 }
 
+/// One failed batch application, recorded by both replay
+/// ([`DynReport::errors`](crate::coordinator::DynReport::errors)) and
+/// the serve-mode writer ([`crate::serve`]) — the shared per-batch
+/// error accounting of the two drivers.
+#[derive(Clone, Debug)]
+pub struct BatchError {
+    /// Index into the driver's batch sequence (replay order for
+    /// [`replay_stream`](crate::coordinator::replay_stream), admission
+    /// order for the serve writer).
+    pub batch: usize,
+    pub kind: BatchKind,
+    /// The first failure the batch hit.
+    pub error: Error,
+    /// True when the one-shot retry (with rebuild if needed) applied
+    /// the batch after all; false when the batch was skipped.
+    pub recovered: bool,
+}
+
+/// How [`apply_batch_with_retry`] resolved a batch.
+#[derive(Clone, Debug)]
+pub enum RetryOutcome {
+    /// Applied cleanly on the first attempt.
+    Clean(BatchOutcome),
+    /// The first attempt failed but the one-shot retry (after a
+    /// rebuild when the failure had poisoned the graph) applied it.
+    Recovered { outcome: BatchOutcome, error: Error },
+    /// Both attempts failed; the batch was dropped and the graph was
+    /// rebuilt back to a usable state for the next batch.
+    Skipped { error: Error },
+}
+
+/// Apply one batch with the shared retry-and-rebuild policy: a failed
+/// batch is retried once (rebuilding first when the failure poisoned
+/// the graph); a batch whose retry also fails is dropped after a final
+/// rebuild.  The only `Err` case is a rebuild that itself fails —
+/// there is no usable graph left to continue on.  Both
+/// [`replay_stream`](crate::coordinator::replay_stream) and the serve
+/// writer thread resolve batches through this function, so their
+/// per-batch error accounting cannot drift apart.
+pub fn apply_batch_with_retry(
+    dg: &mut DynGraph,
+    kind: BatchKind,
+    edges: &[(u32, u32)],
+) -> Result<RetryOutcome> {
+    fn apply(dg: &mut DynGraph, kind: BatchKind, edges: &[(u32, u32)]) -> Result<BatchOutcome> {
+        match kind {
+            BatchKind::Insert => dg.insert_edges(edges),
+            BatchKind::Delete => dg.delete_edges(edges),
+        }
+    }
+    match apply(dg, kind, edges) {
+        Ok(out) => Ok(RetryOutcome::Clean(out)),
+        Err(first) => {
+            if dg.poisoned().is_some() {
+                dg.rebuild()?;
+            }
+            match apply(dg, kind, edges) {
+                Ok(out) => Ok(RetryOutcome::Recovered { outcome: out, error: first }),
+                Err(_second) => {
+                    if dg.poisoned().is_some() {
+                        dg.rebuild()?;
+                    }
+                    Ok(RetryOutcome::Skipped { error: first })
+                }
+            }
+        }
+    }
+}
+
 /// A bipartite graph under batch edge updates, with exact butterfly
 /// counts (global, per-vertex, per-edge) maintained incrementally.
 ///

@@ -99,6 +99,16 @@ fn parse_line(t: &str, lineno: usize) -> anyhow::Result<StreamEvent> {
     Ok(StreamEvent { ts, kind, u, v })
 }
 
+/// Parse one stream-format event line (`[ts] op u v`) outside a file
+/// scan — the serve protocol accepts update lines in this format, and
+/// routing them through the same strict parser keeps the two surfaces'
+/// error messages identical.  `lineno` is 0-indexed, as in
+/// [`parse_stream`]'s internal scan; comments and blank lines are the
+/// caller's concern.
+pub fn parse_event(t: &str, lineno: usize) -> anyhow::Result<StreamEvent> {
+    parse_line(t, lineno)
+}
+
 fn scan_stream(
     path: &Path,
     mut on_bad: impl FnMut(usize, &str, anyhow::Error) -> anyhow::Result<()>,

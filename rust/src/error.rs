@@ -88,6 +88,16 @@ pub enum ErrorKind {
     /// failure; rebuild before further updates
     /// ([`DynGraph::rebuild`](crate::dynamic::DynGraph::rebuild)).
     Poisoned(String),
+    /// A serve-mode session is running degraded: the writer hit an
+    /// unrecoverable batch failure, reads are answered from the stale
+    /// snapshot at `epoch`, and updates are refused until an explicit
+    /// `rebuild` succeeds ([`crate::serve`]).
+    Degraded {
+        /// Epoch of the stale snapshot still being served.
+        epoch: u64,
+        /// The failure that forced degradation, stringified.
+        reason: String,
+    },
 }
 
 /// Structured crate error; see [`ErrorKind`] for the cases.
@@ -140,6 +150,11 @@ impl fmt::Display for Error {
                 write!(f, "allocation of {bytes} bytes for {what} failed (injected)")
             }
             ErrorKind::Poisoned(m) => write!(f, "poisoned: {m}"),
+            ErrorKind::Degraded { epoch, reason } => write!(
+                f,
+                "degraded: updates refused, reads serve stale epoch {epoch} \
+                 until rebuild ({reason})"
+            ),
         }
     }
 }
@@ -260,6 +275,7 @@ mod tests {
             ErrorKind::Cancelled,
             ErrorKind::AllocFailed { bytes: 4, what: "a" },
             ErrorKind::Poisoned("q".into()),
+            ErrorKind::Degraded { epoch: 3, reason: "r".into() },
         ] {
             let e = Error::new(kind);
             assert!(!format!("{e}").is_empty());

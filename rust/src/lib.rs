@@ -61,6 +61,7 @@ pub mod peel;
 pub mod prims;
 pub mod rank;
 pub mod runtime;
+pub mod serve;
 pub mod testutil;
 
 pub use coordinator::{CountConfig, PeelConfig};

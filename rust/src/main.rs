@@ -1,4 +1,5 @@
-//! `parbutterfly` CLI — see `cli.rs` for commands.
+//! `parbutterfly` CLI — see `cli.rs` for commands.  One-shot commands
+//! exit when done; `serve` stays resident until `shutdown` or EOF.
 fn main() {
     std::process::exit(parbutterfly::cli::run());
 }

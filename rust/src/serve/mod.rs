@@ -1,0 +1,99 @@
+//! Butterfly-as-a-service: a resident query daemon over [`DynGraph`].
+//!
+//! The rest of the crate is one-shot — load, count, exit.  This
+//! module keeps graphs resident and serves concurrent read queries
+//! (global / per-vertex / per-edge counts, tip and wing numbers,
+//! top-k densest vertices) while a single writer thread applies
+//! update batches through the paper's batch-dynamic delta-maintenance
+//! path (ParButterfly, arXiv 1907.08607; delta rule after Wang et
+//! al.).  See ARCHITECTURE.md §"Serve mode" for the epoch lifecycle
+//! diagram.
+//!
+//! Layering:
+//!
+//! * [`snapshot`] — immutable [`ServedSnapshot`]s and the
+//!   [`SnapshotCell`] epoch swap that gives readers snapshot isolation
+//!   without ever blocking the writer.
+//! * [`session`] — the [`Session`]: writer thread, admission batching
+//!   ([`ServeOpts`]), the shared per-batch retry/error accounting, and
+//!   graceful degradation (a poisoned writer serves stale snapshots
+//!   with a warning flag instead of killing the daemon).
+//! * [`protocol`] — the line/JSON request surface, shared verbatim by
+//!   the stdin/stdout transport and the TCP listener below.
+//!
+//! ```no_run
+//! use parbutterfly::graph::gen;
+//! use parbutterfly::serve::{Session, ServeOpts};
+//!
+//! let g = gen::chung_lu(5_000, 8_000, 120_000, 2.1, 42);
+//! let session = Session::open(g, ServeOpts::default()).unwrap();
+//! let snap = session.snapshot();
+//! println!("epoch {}: {} butterflies", snap.epoch, snap.global);
+//! ```
+//!
+//! [`DynGraph`]: crate::dynamic::DynGraph
+
+// Runtime-critical modules must not abort through unchecked unwraps:
+// failures either unwind as structured panics the pool catches or are
+// returned as `error::Result`.  Test code is exempt.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+pub mod protocol;
+pub mod session;
+pub mod snapshot;
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::Arc;
+use std::thread;
+
+pub use protocol::{handle_line, handle_request, Reply};
+pub use session::{RebuildReply, ServeOpts, ServeStats, Session, UpdateReply};
+pub use snapshot::{ServedSnapshot, SnapshotCell};
+
+/// Drive the protocol over a pair of line streams: one response line
+/// per request line, flushed immediately (clients pipeline over pipes
+/// and sockets).  Returns after a `shutdown` request or at EOF.
+pub fn serve_lines(
+    session: &Session,
+    input: impl BufRead,
+    mut output: impl Write,
+) -> io::Result<()> {
+    for line in input.lines() {
+        let line = line?;
+        if let Some(reply) = protocol::handle_line(session, &line) {
+            writeln!(output, "{}", reply.text)?;
+            output.flush()?;
+            if reply.shutdown {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Bind a TCP listener (e.g. `"127.0.0.1:0"` for an ephemeral port)
+/// and accept connections on a background thread, each served by
+/// [`serve_lines`] on its own thread.  Returns the bound address —
+/// the part a test or example needs to connect a client.  The accept
+/// loop runs until the process exits; a `shutdown` request stops the
+/// session's writer but only closes the requesting connection.
+pub fn spawn_listener(
+    session: Arc<Session>,
+    addr: &str,
+) -> io::Result<(SocketAddr, thread::JoinHandle<()>)> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let accept = thread::Builder::new().name("pb-serve-accept".into()).spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(conn) = conn else { continue };
+            let session = Arc::clone(&session);
+            let spawned = thread::Builder::new().name("pb-serve-conn".into()).spawn(move || {
+                let Ok(read_half) = conn.try_clone() else { return };
+                let _ = serve_lines(&session, BufReader::new(read_half), conn);
+            });
+            drop(spawned); // a connection we failed to spawn for just closes
+        }
+    })?;
+    Ok((local, accept))
+}

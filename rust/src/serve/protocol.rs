@@ -1,0 +1,371 @@
+//! The serve-mode wire protocol: one JSON object per line in, one
+//! JSON object per line out (over stdin/stdout or a TCP connection —
+//! the transport is [`super::serve_lines`]' concern).
+//!
+//! Every read query is answered from **one** snapshot load, so all
+//! fields of a response describe the same epoch; responses carry no
+//! timing or host fields, which is what lets the protocol tests pin
+//! byte-exact transcripts.  Successful responses open with
+//! `{"ok": true, "epoch": E, "degraded": B, ...}`; failures are
+//! `{"ok": false, "error": "..."}` with stable error strings.
+//!
+//! Requests (`op` selects the query):
+//!
+//! ```text
+//! {"op": "total"}                         global butterfly count
+//! {"op": "vertex", "side": "u", "id": 3}  per-vertex count
+//! {"op": "edge", "u": 0, "v": 1}          per-edge count
+//! {"op": "tip", "side": "u", "id": 3}     tip number
+//! {"op": "wing", "u": 0, "v": 1}          wing number
+//! {"op": "topk", "side": "u", "k": 3}     densest vertices by count
+//! {"op": "epoch"}                         epoch + graph shape
+//! {"op": "digest"}                        count-array checksums
+//! {"op": "stats"}                         writer accounting
+//! {"op": "update", "insert": [[0, 1]]}    batch insert (or "delete")
+//! {"op": "update", "lines": ["+ 0 1"]}    stream-format updates
+//! {"op": "rebuild"}                       guarded full recount
+//! {"op": "shutdown"}                      stop writer, end transport
+//! ```
+
+use std::sync::Arc;
+
+use crate::bench_support::json::Json;
+use crate::dynamic::stream::{self, group_batches};
+use crate::serve::session::Session;
+use crate::serve::snapshot::ServedSnapshot;
+
+/// One protocol response: the serialized line plus whether the
+/// transport loop should stop after sending it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Reply {
+    pub text: String,
+    pub shutdown: bool,
+}
+
+impl Reply {
+    fn err(msg: impl Into<String>) -> Reply {
+        let obj = Json::Obj(vec![
+            ("ok".into(), Json::Bool(false)),
+            ("error".into(), Json::str(msg)),
+        ]);
+        Reply { text: obj.compact(), shutdown: false }
+    }
+
+    fn ok(epoch: u64, degraded: bool, fields: Vec<(String, Json)>) -> Reply {
+        let mut obj = vec![
+            ("ok".to_string(), Json::Bool(true)),
+            ("epoch".to_string(), num(epoch)),
+            ("degraded".to_string(), Json::Bool(degraded)),
+        ];
+        obj.extend(fields);
+        Reply { text: Json::Obj(obj).compact(), shutdown: false }
+    }
+}
+
+fn num(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn field(key: &str, value: Json) -> (String, Json) {
+    (key.to_string(), value)
+}
+
+/// Extract a required non-negative integer field.
+fn get_index(req: &Json, key: &str) -> Result<usize, String> {
+    match req.get(key).and_then(Json::as_f64) {
+        Some(n) if n >= 0.0 && n.fract() == 0.0 && n < 9.0e15 => Ok(n as usize),
+        _ => Err(format!("bad request: missing or invalid integer field {key:?}")),
+    }
+}
+
+/// Extract the required `side` field; `true` means U.
+fn get_side(req: &Json) -> Result<bool, String> {
+    match req.get("side").and_then(Json::as_str) {
+        Some("u") => Ok(true),
+        Some("v") => Ok(false),
+        _ => Err("bad request: field \"side\" must be \"u\" or \"v\"".to_string()),
+    }
+}
+
+/// Resolve an `(u, v)` request pair to an edge id of the snapshot's
+/// graph.
+fn get_edge(req: &Json, snap: &ServedSnapshot) -> Result<(usize, usize, u32), String> {
+    let u = get_index(req, "u")?;
+    let v = get_index(req, "v")?;
+    let eid = if u < snap.graph.nu() && v < snap.graph.nv() {
+        snap.graph.edge_id(u, v as u32)
+    } else {
+        None
+    };
+    match eid {
+        Some(e) => Ok((u, v, e)),
+        None => Err(format!("edge ({u}, {v}) is not present")),
+    }
+}
+
+/// Parse an `"insert"`/`"delete"` field: an array of `[u, v]` pairs.
+fn parse_edges(val: &Json, what: &str) -> Result<Vec<(u32, u32)>, String> {
+    let bad = || format!("bad request: {what:?} must be an array of [u, v] pairs");
+    let items = val.as_arr().ok_or_else(bad)?;
+    let mut edges = Vec::with_capacity(items.len());
+    for item in items {
+        let pair = item.as_arr().ok_or_else(bad)?;
+        if pair.len() != 2 {
+            return Err(bad());
+        }
+        let mut ids = [0u32; 2];
+        for (slot, p) in ids.iter_mut().zip(pair) {
+            match p.as_f64() {
+                Some(n) if n >= 0.0 && n.fract() == 0.0 && n <= u32::MAX as f64 => {
+                    *slot = n as u32;
+                }
+                _ => return Err(bad()),
+            }
+        }
+        edges.push((ids[0], ids[1]));
+    }
+    Ok(edges)
+}
+
+/// Handle one raw input line.  `None` for blank lines and `#`
+/// comments (the transport sends no response for those).
+pub fn handle_line(session: &Session, line: &str) -> Option<Reply> {
+    let t = line.trim();
+    if t.is_empty() || t.starts_with('#') {
+        return None;
+    }
+    Some(handle_request(session, t))
+}
+
+/// Handle one request document.  Infallible at the transport level:
+/// every parse or semantic failure becomes an `{"ok": false}` reply.
+pub fn handle_request(session: &Session, text: &str) -> Reply {
+    let req = match Json::parse(text) {
+        Ok(r) => r,
+        Err(e) => return Reply::err(format!("bad request: {e}")),
+    };
+    if req.as_obj().is_none() {
+        return Reply::err("bad request: expected a JSON object");
+    }
+    let op = match req.get("op").and_then(Json::as_str) {
+        Some(op) => op,
+        None => return Reply::err("bad request: missing string field \"op\""),
+    };
+    match op {
+        // Reads: everything below answers from this one snapshot.
+        "total" | "vertex" | "edge" | "tip" | "wing" | "topk" | "epoch" | "digest" | "stats" => {
+            let snap = session.snapshot();
+            match read_query(session, op, &req, &snap) {
+                Ok(fields) => Reply::ok(snap.epoch, snap.degraded, fields),
+                Err(msg) => Reply::err(msg),
+            }
+        }
+        "update" => handle_update(session, &req),
+        "rebuild" => {
+            let r = session.rebuild();
+            match r.error {
+                None => Reply::ok(r.epoch, false, vec![field("rebuilt", Json::Bool(true))]),
+                Some(e) => Reply::err(format!("rebuild failed: {e}")),
+            }
+        }
+        "shutdown" => {
+            session.shutdown();
+            let obj = Json::Obj(vec![
+                ("ok".into(), Json::Bool(true)),
+                ("shutdown".into(), Json::Bool(true)),
+            ]);
+            Reply { text: obj.compact(), shutdown: true }
+        }
+        other => Reply::err(format!("bad request: unknown op {other:?}")),
+    }
+}
+
+fn read_query(
+    session: &Session,
+    op: &str,
+    req: &Json,
+    snap: &Arc<ServedSnapshot>,
+) -> Result<Vec<(String, Json)>, String> {
+    match op {
+        "total" => Ok(vec![field("total", num(snap.global))]),
+        "vertex" => {
+            let is_u = get_side(req)?;
+            let id = get_index(req, "id")?;
+            let (side, arr) = if is_u { ("u", &snap.per_u) } else { ("v", &snap.per_v) };
+            let count = *arr
+                .get(id)
+                .ok_or_else(|| format!("vertex id {id} out of range for side {side} (size {})", arr.len()))?;
+            Ok(vec![
+                field("side", Json::str(side)),
+                field("id", num(id as u64)),
+                field("count", num(count)),
+            ])
+        }
+        "edge" => {
+            let (u, v, eid) = get_edge(req, snap)?;
+            Ok(vec![
+                field("u", num(u as u64)),
+                field("v", num(v as u64)),
+                field("count", num(snap.per_edge[eid as usize])),
+            ])
+        }
+        "tip" => {
+            let is_u = get_side(req)?;
+            let id = get_index(req, "id")?;
+            let (side, tips) = if is_u {
+                ("u", snap.tips_u.as_ref())
+            } else {
+                ("v", snap.tips_v.as_ref())
+            };
+            let tips = tips.ok_or_else(|| "decompositions are disabled for this session".to_string())?;
+            let tip = *tips
+                .get(id)
+                .ok_or_else(|| format!("vertex id {id} out of range for side {side} (size {})", tips.len()))?;
+            Ok(vec![
+                field("side", Json::str(side)),
+                field("id", num(id as u64)),
+                field("tip", num(tip)),
+            ])
+        }
+        "wing" => {
+            let wings = snap
+                .wings
+                .as_ref()
+                .ok_or_else(|| "decompositions are disabled for this session".to_string())?;
+            let (u, v, eid) = get_edge(req, snap)?;
+            Ok(vec![
+                field("u", num(u as u64)),
+                field("v", num(v as u64)),
+                field("wing", num(wings[eid as usize])),
+            ])
+        }
+        "topk" => {
+            let is_u = get_side(req)?;
+            let k = get_index(req, "k")?;
+            let (side, arr) = if is_u { ("u", &snap.per_u) } else { ("v", &snap.per_v) };
+            // Count-descending, id-ascending tie-break: deterministic
+            // regardless of thread count or arrival order.
+            let mut ids: Vec<usize> = (0..arr.len()).collect();
+            ids.sort_by_key(|&i| (std::cmp::Reverse(arr[i]), i));
+            ids.truncate(k);
+            let top: Vec<Json> = ids
+                .into_iter()
+                .map(|i| {
+                    Json::Obj(vec![
+                        ("id".to_string(), num(i as u64)),
+                        ("count".to_string(), num(arr[i])),
+                    ])
+                })
+                .collect();
+            Ok(vec![
+                field("side", Json::str(side)),
+                field("k", num(k as u64)),
+                field("top", Json::Arr(top)),
+            ])
+        }
+        "epoch" => Ok(vec![
+            field("nu", num(snap.graph.nu() as u64)),
+            field("nv", num(snap.graph.nv() as u64)),
+            field("m", num(snap.graph.m() as u64)),
+        ]),
+        "digest" => {
+            // Consistency checksums of one snapshot: torn reads (were
+            // they possible) would violate sum_u == sum_v == 2*global
+            // and sum_edge == 4*global.
+            let sum_u: u64 = snap.per_u.iter().sum();
+            let sum_v: u64 = snap.per_v.iter().sum();
+            let sum_e: u64 = snap.per_edge.iter().sum();
+            Ok(vec![
+                field("global", num(snap.global)),
+                field("sum_u", num(sum_u)),
+                field("sum_v", num(sum_v)),
+                field("sum_edge", num(sum_e)),
+                field("m", num(snap.graph.m() as u64)),
+            ])
+        }
+        "stats" => {
+            let st = session.stats();
+            let recovered = st.errors.iter().filter(|e| e.recovered).count();
+            Ok(vec![
+                field("batches", num(st.batches as u64)),
+                field("inserted", num(st.inserted as u64)),
+                field("deleted", num(st.deleted as u64)),
+                field("skipped", num(st.skipped as u64)),
+                field("rejected", num(st.rejected as u64)),
+                field("errors", num(st.errors.len() as u64)),
+                field("recovered", num(recovered as u64)),
+            ])
+        }
+        _ => unreachable!("read_query called for a non-read op"),
+    }
+}
+
+fn handle_update(session: &Session, req: &Json) -> Reply {
+    use crate::dynamic::BatchKind;
+    // Exactly one of "insert" / "delete" / "lines".
+    let forms = [req.get("insert"), req.get("delete"), req.get("lines")];
+    let present = forms.iter().flatten().count();
+    if present != 1 {
+        return Reply::err(
+            "bad request: update needs exactly one of \"insert\", \"delete\", or \"lines\"",
+        );
+    }
+    let groups = if let Some(val) = req.get("lines") {
+        let items = match val.as_arr() {
+            Some(items) => items,
+            None => return Reply::err("bad request: \"lines\" must be an array of strings"),
+        };
+        let mut events = Vec::with_capacity(items.len());
+        for (i, item) in items.iter().enumerate() {
+            let line = match item.as_str() {
+                Some(s) => s,
+                None => return Reply::err("bad request: \"lines\" must be an array of strings"),
+            };
+            // The stream parser's strict errors, verbatim — same
+            // messages as the `dynamic` subcommand's loader.
+            match stream::parse_event(line, i) {
+                Ok(e) => events.push(e),
+                Err(e) => return Reply::err(format!("bad request: {e}")),
+            }
+        }
+        if events.is_empty() {
+            return Reply::err("bad request: empty update");
+        }
+        group_batches(&events, 0)
+    } else {
+        let (kind, key) = match req.get("insert") {
+            Some(_) => (BatchKind::Insert, "insert"),
+            None => (BatchKind::Delete, "delete"),
+        };
+        let val = match req.get(key) {
+            Some(v) => v,
+            None => return Reply::err("bad request: update needs \"insert\" or \"delete\""),
+        };
+        let edges = match parse_edges(val, key) {
+            Ok(e) => e,
+            Err(msg) => return Reply::err(msg),
+        };
+        vec![stream::Batch { kind, edges }]
+    };
+    let (mut applied, mut skipped) = (0usize, 0usize);
+    let mut recovered = false;
+    let mut last: Option<crate::serve::session::UpdateReply> = None;
+    for b in groups {
+        let r = session.update(b.kind, b.edges);
+        if let Some(e) = r.error {
+            return Reply::err(e);
+        }
+        applied += r.applied;
+        skipped += r.skipped;
+        recovered |= r.recovered;
+        last = Some(r);
+    }
+    match last {
+        Some(r) => Reply::ok(r.epoch, r.degraded, vec![
+            field("applied", num(applied as u64)),
+            field("skipped", num(skipped as u64)),
+            field("recovered", Json::Bool(recovered)),
+        ]),
+        None => Reply::err("bad request: empty update"),
+    }
+}

@@ -1,0 +1,504 @@
+//! A resident serve-mode session: one writer thread owning a
+//! [`DynGraph`], many readers holding [`Arc`] snapshots.
+//!
+//! ## Reader/writer coordination invariants
+//!
+//! 1. The writer is the **only** thread that ever touches the
+//!    `DynGraph`; it applies admitted batches through the shared
+//!    retry-and-rebuild policy
+//!    ([`apply_batch_with_retry`](crate::dynamic::apply_batch_with_retry))
+//!    and publishes each result as a fresh immutable
+//!    [`ServedSnapshot`].
+//! 2. Readers only ever [`SnapshotCell::load`] — an `Arc` clone under
+//!    a read lock held for nanoseconds — so no query can block the
+//!    writer and no writer step can tear a query.
+//! 3. A failure the retry policy cannot absorb **degrades** the
+//!    session instead of killing it: the last good snapshot keeps
+//!    being served with its `degraded` flag set, update requests are
+//!    refused with [`ErrorKind::Degraded`], and an explicit `rebuild`
+//!    (a guarded full recount) is the way back to a live epoch.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::dynamic::{
+    apply_batch_with_retry, BatchError, BatchKind, BatchOutcome, DynGraph, DynOpts, RetryOutcome,
+};
+use crate::error::{Error, ErrorKind, Result};
+use crate::graph::BipartiteGraph;
+use crate::prims::pool::with_threads;
+
+use super::snapshot::{ServedSnapshot, SnapshotCell};
+
+/// Configuration of a serve-mode session.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Engine/budget configuration of the underlying [`DynGraph`];
+    /// `dyn_opts.count.budget` is the cooperative budget of every
+    /// batch application and rebuild.
+    pub dyn_opts: DynOpts,
+    /// Maintain tip/wing decompositions in every snapshot (tip/wing
+    /// and decomposition top-k queries need them; counting-only
+    /// deployments turn this off to cheapen the publish step).
+    pub decompositions: bool,
+    /// Admission batching: coalesce queued same-kind update requests
+    /// into one batch until this many edges are pending...
+    pub admit_max_edges: usize,
+    /// ...or this much time has passed since the first request of the
+    /// group (milliseconds).  `0` coalesces only what is already
+    /// queued (pure size batching, no added latency) — the default,
+    /// and what the deterministic protocol tests rely on.
+    pub admit_max_ms: u64,
+    /// Apply batches through the shared one-shot retry policy (the
+    /// replay driver's behavior).  `false` degrades on the first
+    /// failure — the deterministic choice for fault drills.
+    pub retry: bool,
+    /// Pin the writer's parallelism ([`with_threads`]); `None`
+    /// inherits the process default.  The writer runs on its own
+    /// thread, so a caller's thread-local override does not reach it —
+    /// this is the explicit channel.
+    pub threads: Option<usize>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        Self {
+            dyn_opts: DynOpts::default(),
+            decompositions: true,
+            admit_max_edges: 4096,
+            admit_max_ms: 0,
+            retry: true,
+            threads: None,
+        }
+    }
+}
+
+/// Aggregate accounting of a session's writer, readable at any time.
+/// Per-batch failures reuse the replay driver's [`BatchError`] — one
+/// error type across both drivers (`DynReport.errors` and serve).
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Admitted batches applied (coalesced groups, not requests).
+    pub batches: usize,
+    /// Edges actually inserted / deleted across all batches.
+    pub inserted: usize,
+    pub deleted: usize,
+    /// No-op edges (duplicates, present inserts, absent deletes).
+    pub skipped: usize,
+    /// Update requests refused while degraded.
+    pub rejected: usize,
+    /// True while the session serves a stale snapshot.
+    pub degraded: bool,
+    /// Per-batch failures, in admission order (`batch` is the
+    /// admitted-group sequence number).
+    pub errors: Vec<BatchError>,
+}
+
+/// Synchronous answer to an update request: the state of the session
+/// after the admitted group containing the request was resolved.
+/// `applied`/`skipped` describe the whole group (admission batching
+/// folds concurrent same-kind requests into one batch).
+#[derive(Clone, Debug)]
+pub struct UpdateReply {
+    /// Epoch of the snapshot the caller's edges are visible in (or the
+    /// stale epoch still being served when the request was refused).
+    pub epoch: u64,
+    pub applied: usize,
+    pub skipped: usize,
+    /// The group failed once and the one-shot retry applied it.
+    pub recovered: bool,
+    /// The session is (now) degraded.
+    pub degraded: bool,
+    /// Set when the request was refused or dropped; `applied` and
+    /// `skipped` are then 0.
+    pub error: Option<String>,
+}
+
+/// Synchronous answer to a rebuild request.
+#[derive(Clone, Debug)]
+pub struct RebuildReply {
+    /// Epoch after the rebuild (unchanged when it failed).
+    pub epoch: u64,
+    /// Set when the rebuild failed; the session stays degraded.
+    pub error: Option<String>,
+}
+
+enum Cmd {
+    Update { kind: BatchKind, edges: Vec<(u32, u32)>, done: mpsc::Sender<UpdateReply> },
+    Rebuild { done: mpsc::Sender<RebuildReply> },
+    Shutdown,
+}
+
+/// Recover a possibly poisoned mutex: the guarded values are plain
+/// accounting structs a panicking writer cannot leave torn in any way
+/// that matters more than losing the session entirely would.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// A resident graph with a single writer thread and any number of
+/// snapshot readers.  Dropping the session shuts the writer down and
+/// joins it; reads keep working off the final snapshot for as long as
+/// the [`SnapshotCell`] is shared.
+pub struct Session {
+    cell: Arc<SnapshotCell>,
+    tx: Mutex<Option<mpsc::Sender<Cmd>>>,
+    stats: Arc<Mutex<ServeStats>>,
+    writer: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl Session {
+    /// Open a session over `g`: one guarded initial count (epoch 0),
+    /// then a dedicated writer thread.
+    pub fn open(g: BipartiteGraph, opts: ServeOpts) -> Result<Session> {
+        let dg = DynGraph::new(g, opts.dyn_opts.clone())?;
+        let snap = ServedSnapshot::build(&dg, 0, opts.decompositions)?;
+        let cell = Arc::new(SnapshotCell::new(snap));
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let (tx, rx) = mpsc::channel();
+        let threads = opts.threads;
+        let w = Writer {
+            dg,
+            cell: Arc::clone(&cell),
+            stats: Arc::clone(&stats),
+            opts,
+            epoch: 0,
+            degraded: None,
+            seq: 0,
+        };
+        let writer = thread::Builder::new()
+            .name("pb-serve-writer".into())
+            .spawn(move || match threads {
+                Some(t) => with_threads(t, || w.run(rx)),
+                None => w.run(rx),
+            })
+            .map_err(|e| Error::new(ErrorKind::Panic(format!("spawn writer thread: {e}"))))?;
+        Ok(Session {
+            cell,
+            tx: Mutex::new(Some(tx)),
+            stats,
+            writer: Mutex::new(Some(writer)),
+        })
+    }
+
+    /// The currently published snapshot (wait-free for the writer).
+    pub fn snapshot(&self) -> Arc<ServedSnapshot> {
+        self.cell.load()
+    }
+
+    /// Writer accounting so far.
+    pub fn stats(&self) -> ServeStats {
+        lock(&self.stats).clone()
+    }
+
+    /// Submit an update and wait for the admitted group containing it
+    /// to resolve.  Never panics: a dead writer (shut down, or lost to
+    /// a bug) yields a degraded reply while reads keep serving.
+    pub fn update(&self, kind: BatchKind, edges: Vec<(u32, u32)>) -> UpdateReply {
+        let (done, back) = mpsc::channel();
+        if self.send(Cmd::Update { kind, edges, done }) {
+            if let Ok(reply) = back.recv() {
+                return reply;
+            }
+        }
+        let snap = self.cell.load();
+        UpdateReply {
+            epoch: snap.epoch,
+            applied: 0,
+            skipped: 0,
+            recovered: false,
+            degraded: true,
+            error: Some("writer is gone; reads still serve the last snapshot".into()),
+        }
+    }
+
+    /// Request a guarded full recount (the way out of degradation).
+    pub fn rebuild(&self) -> RebuildReply {
+        let (done, back) = mpsc::channel();
+        if self.send(Cmd::Rebuild { done }) {
+            if let Ok(reply) = back.recv() {
+                return reply;
+            }
+        }
+        let snap = self.cell.load();
+        RebuildReply {
+            epoch: snap.epoch,
+            error: Some("writer is gone; reads still serve the last snapshot".into()),
+        }
+    }
+
+    /// Stop the writer and join it.  Reads keep answering from the
+    /// final snapshot; later updates get the degraded writer-gone
+    /// reply.  Idempotent.
+    pub fn shutdown(&self) {
+        let tx = lock(&self.tx).take();
+        if let Some(tx) = tx {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        let handle = lock(&self.writer).take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    fn send(&self, cmd: Cmd) -> bool {
+        match lock(&self.tx).as_ref() {
+            Some(tx) => tx.send(cmd).is_ok(),
+            None => false,
+        }
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Writer-thread state.  `epoch`/`degraded` mirror what the published
+/// snapshot says; the writer is the only mutator of either.
+struct Writer {
+    dg: DynGraph,
+    cell: Arc<SnapshotCell>,
+    stats: Arc<Mutex<ServeStats>>,
+    opts: ServeOpts,
+    epoch: u64,
+    degraded: Option<String>,
+    seq: usize,
+}
+
+impl Writer {
+    fn run(mut self, rx: mpsc::Receiver<Cmd>) {
+        let mut carry: Option<Cmd> = None;
+        loop {
+            let cmd = match carry.take() {
+                Some(c) => c,
+                None => match rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => return, // session dropped
+                },
+            };
+            match cmd {
+                Cmd::Shutdown => return,
+                Cmd::Rebuild { done } => {
+                    let reply = self.rebuild();
+                    let _ = done.send(reply);
+                }
+                Cmd::Update { kind, edges, done } => {
+                    let (batch, waiters, next) = self.admit(kind, edges, done, &rx);
+                    carry = next;
+                    self.apply_group(kind, batch, waiters);
+                }
+            }
+        }
+    }
+
+    /// Admission batching: starting from one request, coalesce queued
+    /// same-kind requests until [`ServeOpts::admit_max_edges`] edges
+    /// are pending or [`ServeOpts::admit_max_ms`] has passed.  A
+    /// different-kind (or non-update) command ends the group and is
+    /// carried back to the main loop.
+    fn admit(
+        &self,
+        kind: BatchKind,
+        edges: Vec<(u32, u32)>,
+        done: mpsc::Sender<UpdateReply>,
+        rx: &mpsc::Receiver<Cmd>,
+    ) -> (Vec<(u32, u32)>, Vec<mpsc::Sender<UpdateReply>>, Option<Cmd>) {
+        let mut batch = edges;
+        let mut waiters = vec![done];
+        let mut carry = None;
+        let cap = self.opts.admit_max_edges.max(1);
+        let deadline = Instant::now() + Duration::from_millis(self.opts.admit_max_ms);
+        while batch.len() < cap {
+            let next = if self.opts.admit_max_ms == 0 {
+                match rx.try_recv() {
+                    Ok(c) => c,
+                    Err(_) => break,
+                }
+            } else {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline.saturating_duration_since(now)) {
+                    Ok(c) => c,
+                    Err(_) => break,
+                }
+            };
+            match next {
+                Cmd::Update { kind: k2, edges: e2, done: d2 } if k2 == kind => {
+                    batch.extend(e2);
+                    waiters.push(d2);
+                }
+                other => {
+                    carry = Some(other);
+                    break;
+                }
+            }
+        }
+        (batch, waiters, carry)
+    }
+
+    fn apply_group(
+        &mut self,
+        kind: BatchKind,
+        batch: Vec<(u32, u32)>,
+        waiters: Vec<mpsc::Sender<UpdateReply>>,
+    ) {
+        if let Some(reason) = self.degraded.clone() {
+            let err = Error::new(ErrorKind::Degraded { epoch: self.epoch, reason });
+            lock(&self.stats).rejected += waiters.len();
+            self.reply_all(waiters, UpdateReply {
+                epoch: self.epoch,
+                applied: 0,
+                skipped: 0,
+                recovered: false,
+                degraded: true,
+                error: Some(err.to_string()),
+            });
+            return;
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        let resolved: Result<RetryOutcome> = if self.opts.retry {
+            apply_batch_with_retry(&mut self.dg, kind, &batch)
+        } else {
+            // No retry: the first failure is terminal for this batch
+            // and degrades the session — the deterministic fault path.
+            match kind {
+                BatchKind::Insert => self.dg.insert_edges(&batch),
+                BatchKind::Delete => self.dg.delete_edges(&batch),
+            }
+            .map(RetryOutcome::Clean)
+        };
+        match resolved {
+            Ok(RetryOutcome::Clean(out)) => self.publish_applied(kind, seq, out, None, waiters),
+            Ok(RetryOutcome::Recovered { outcome, error }) => {
+                self.publish_applied(kind, seq, outcome, Some(error), waiters)
+            }
+            Ok(RetryOutcome::Skipped { error }) => {
+                // Batch dropped, but the retry policy rebuilt the
+                // graph back to a usable state: not a degradation.
+                lock(&self.stats).errors.push(BatchError {
+                    batch: seq,
+                    kind,
+                    error: error.clone(),
+                    recovered: false,
+                });
+                self.reply_all(waiters, UpdateReply {
+                    epoch: self.epoch,
+                    applied: 0,
+                    skipped: 0,
+                    recovered: false,
+                    degraded: false,
+                    error: Some(error.to_string()),
+                });
+            }
+            Err(e) => self.enter_degraded(kind, seq, e, waiters),
+        }
+    }
+
+    /// The batch is committed in `dg`; publish it as the next epoch.
+    /// A snapshot build that fails (peel fault, budget trip) leaves
+    /// the published state at the previous epoch and degrades.
+    fn publish_applied(
+        &mut self,
+        kind: BatchKind,
+        seq: usize,
+        out: BatchOutcome,
+        recovered_from: Option<Error>,
+        waiters: Vec<mpsc::Sender<UpdateReply>>,
+    ) {
+        match ServedSnapshot::build(&self.dg, self.epoch + 1, self.opts.decompositions) {
+            Ok(snap) => {
+                self.epoch += 1;
+                self.cell.store(snap);
+                let recovered = recovered_from.is_some();
+                {
+                    let mut st = lock(&self.stats);
+                    st.batches += 1;
+                    match kind {
+                        BatchKind::Insert => st.inserted += out.applied,
+                        BatchKind::Delete => st.deleted += out.applied,
+                    }
+                    st.skipped += out.skipped;
+                    if let Some(error) = recovered_from {
+                        st.errors.push(BatchError { batch: seq, kind, error, recovered: true });
+                    }
+                }
+                self.reply_all(waiters, UpdateReply {
+                    epoch: self.epoch,
+                    applied: out.applied,
+                    skipped: out.skipped,
+                    recovered,
+                    degraded: false,
+                    error: None,
+                });
+            }
+            Err(e) => self.enter_degraded(kind, seq, e, waiters),
+        }
+    }
+
+    /// Stale-snapshot-with-warning instead of daemon death: republish
+    /// the last good counts with the degraded flag, refuse updates
+    /// from here on, wait for an explicit rebuild.
+    fn enter_degraded(
+        &mut self,
+        kind: BatchKind,
+        seq: usize,
+        e: Error,
+        waiters: Vec<mpsc::Sender<UpdateReply>>,
+    ) {
+        let reason = e.to_string();
+        self.degraded = Some(reason.clone());
+        let prev = self.cell.load();
+        self.cell.store(ServedSnapshot::degraded_from(&prev, reason.clone()));
+        {
+            let mut st = lock(&self.stats);
+            st.degraded = true;
+            st.errors.push(BatchError { batch: seq, kind, error: e, recovered: false });
+        }
+        let err = Error::new(ErrorKind::Degraded { epoch: self.epoch, reason });
+        self.reply_all(waiters, UpdateReply {
+            epoch: self.epoch,
+            applied: 0,
+            skipped: 0,
+            recovered: false,
+            degraded: true,
+            error: Some(err.to_string()),
+        });
+    }
+
+    fn rebuild(&mut self) -> RebuildReply {
+        let rebuilt = self
+            .dg
+            .rebuild()
+            .and_then(|()| ServedSnapshot::build(&self.dg, self.epoch + 1, self.opts.decompositions));
+        match rebuilt {
+            Ok(snap) => {
+                self.epoch += 1;
+                self.degraded = None;
+                self.cell.store(snap);
+                lock(&self.stats).degraded = false;
+                RebuildReply { epoch: self.epoch, error: None }
+            }
+            Err(e) => {
+                let reason = e.to_string();
+                self.degraded = Some(reason.clone());
+                let prev = self.cell.load();
+                self.cell.store(ServedSnapshot::degraded_from(&prev, reason.clone()));
+                lock(&self.stats).degraded = true;
+                RebuildReply { epoch: self.epoch, error: Some(reason) }
+            }
+        }
+    }
+
+    fn reply_all(&self, waiters: Vec<mpsc::Sender<UpdateReply>>, reply: UpdateReply) {
+        for w in waiters {
+            let _ = w.send(reply.clone());
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Immutable served snapshots and the epoch cell publishing them.
+//!
+//! Every read query in serve mode is answered from exactly one
+//! [`ServedSnapshot`]: the writer thread builds a fresh snapshot after
+//! each admitted batch and publishes it atomically through a
+//! [`SnapshotCell`], so a reader that grabbed epoch `e` sees the
+//! global count, both per-vertex arrays, the per-edge array, and the
+//! optional tip/wing decompositions of the **same** post-batch state —
+//! torn reads across granularities are impossible by construction,
+//! not by locking discipline in the query handlers.
+
+use std::sync::{Arc, RwLock};
+
+use crate::dynamic::DynGraph;
+use crate::error::Result;
+use crate::graph::BipartiteGraph;
+use crate::peel::{self, PeelEOpts, PeelSide, PeelVOpts};
+
+/// One internally consistent set of served state.  Immutable once
+/// published; readers hold it by `Arc` and the writer never touches a
+/// published snapshot again.
+#[derive(Clone, Debug)]
+pub struct ServedSnapshot {
+    /// Publication counter: 0 is the initial count, each admitted
+    /// batch (and each successful rebuild) increments it.
+    pub epoch: u64,
+    /// True when the writer hit an unrecoverable failure and this
+    /// snapshot is being served **stale**: its counts describe the
+    /// last good epoch, updates are refused until a `rebuild`.
+    pub degraded: bool,
+    /// The failure that forced degradation, stringified.
+    pub degraded_reason: Option<String>,
+    /// The graph the counts describe (owned copy: edge-id lookups and
+    /// static recounts of this epoch need the exact structure).
+    pub graph: BipartiteGraph,
+    /// Global butterfly count.
+    pub global: u64,
+    /// Per-vertex butterfly counts, U side.
+    pub per_u: Vec<u64>,
+    /// Per-vertex butterfly counts, V side.
+    pub per_v: Vec<u64>,
+    /// Per-edge butterfly counts, indexed by this graph's edge ids.
+    pub per_edge: Vec<u64>,
+    /// Tip numbers of the U side (`None` when decompositions are off).
+    pub tips_u: Option<Vec<u64>>,
+    /// Tip numbers of the V side.
+    pub tips_v: Option<Vec<u64>>,
+    /// Wing numbers, indexed by this graph's edge ids.
+    pub wings: Option<Vec<u64>>,
+}
+
+impl ServedSnapshot {
+    /// Materialize the current state of `dg` as epoch `epoch`.  With
+    /// `decompositions`, tip numbers of both sides and wing numbers
+    /// are peeled from the maintained counts (under the update budget
+    /// carried by `dg`'s options); a failure in the peel surfaces as
+    /// `Err` and the caller decides whether to degrade.
+    pub fn build(dg: &DynGraph, epoch: u64, decompositions: bool) -> Result<Self> {
+        let g = dg.graph().clone();
+        let (tips_u, tips_v, wings) = if decompositions {
+            let vopts = PeelVOpts { side: PeelSide::U, ..Default::default() };
+            let tu = peel::peel_vertices(&g, dg.per_vertex_u(), dg.per_vertex_v(), &vopts)?;
+            let vopts = PeelVOpts { side: PeelSide::V, ..Default::default() };
+            let tv = peel::peel_vertices(&g, dg.per_vertex_u(), dg.per_vertex_v(), &vopts)?;
+            let w = peel::peel_edges(&g, dg.per_edge(), &PeelEOpts::default())?;
+            (Some(tu.tips), Some(tv.tips), Some(w.wings))
+        } else {
+            (None, None, None)
+        };
+        Ok(ServedSnapshot {
+            epoch,
+            degraded: false,
+            degraded_reason: None,
+            graph: g,
+            global: dg.total(),
+            per_u: dg.per_vertex_u().to_vec(),
+            per_v: dg.per_vertex_v().to_vec(),
+            per_edge: dg.per_edge().to_vec(),
+            tips_u,
+            tips_v,
+            wings,
+        })
+    }
+
+    /// The degraded twin of `prev`: same epoch, same counts (they are
+    /// the last good state and stay servable), flag set.  Published
+    /// when the writer cannot bring the counts forward — readers keep
+    /// getting consistent answers, just stale and marked as such.
+    pub(crate) fn degraded_from(prev: &ServedSnapshot, reason: String) -> Self {
+        ServedSnapshot {
+            degraded: true,
+            degraded_reason: Some(reason),
+            ..prev.clone()
+        }
+    }
+}
+
+/// The publication point: a single `RwLock<Arc<_>>` the writer stores
+/// into and readers clone out of.  Readers hold the lock only for the
+/// `Arc` clone (never across query evaluation), so the writer is never
+/// blocked behind a slow query and a query never observes a half-
+/// published snapshot.
+pub struct SnapshotCell {
+    cur: RwLock<Arc<ServedSnapshot>>,
+}
+
+impl SnapshotCell {
+    pub fn new(snap: ServedSnapshot) -> Self {
+        SnapshotCell { cur: RwLock::new(Arc::new(snap)) }
+    }
+
+    /// The currently published snapshot.  Lock poisoning cannot leave
+    /// a torn value behind (the guarded section is a pointer clone /
+    /// swap), so a poisoned lock is recovered, not propagated.
+    pub fn load(&self) -> Arc<ServedSnapshot> {
+        let guard = self.cur.read().unwrap_or_else(|p| p.into_inner());
+        Arc::clone(&guard)
+    }
+
+    /// Publish a new snapshot (writer thread only).
+    pub fn store(&self, snap: ServedSnapshot) {
+        let mut guard = self.cur.write().unwrap_or_else(|p| p.into_inner());
+        *guard = Arc::new(snap);
+    }
+}

@@ -407,6 +407,118 @@ fn ambient_env_plan_is_contained_by_entry_points() {
     }
 }
 
+/// A serve session tuned so an injected fault degrades deterministically:
+/// no one-shot retry, and every batch recounts (so the single guarded
+/// fault lands inside the batch application, not a delta walk that the
+/// dynamic layer's internal fallback would absorb).
+fn drill_serve_opts() -> parbutterfly::serve::ServeOpts {
+    parbutterfly::serve::ServeOpts {
+        retry: false,
+        decompositions: false,
+        dyn_opts: DynOpts { rebuild_fraction: 0.0, ..DynOpts::default() },
+        ..parbutterfly::serve::ServeOpts::default()
+    }
+}
+
+#[test]
+fn serve_writer_fault_degrades_to_stale_snapshot_and_rebuild_recovers() {
+    use parbutterfly::serve::Session;
+    let _wd = Watchdog::arm("serve_writer_fault_degrades_to_stale_snapshot_and_rebuild_recovers");
+    let (edges, base_total, full_total) = fault::with_plan(&FaultPlan::default(), || {
+        let edges = gen::erdos_renyi(20, 20, 120, 3).edges();
+        let base = brute::total(&BipartiteGraph::from_edges(20, 20, &edges[..90]));
+        let full = brute::total(&BipartiteGraph::from_edges(20, 20, &edges));
+        (edges, base, full)
+    });
+    let session = fault::with_plan(&FaultPlan::default(), || {
+        let s = Session::open(BipartiteGraph::from_edges(20, 20, &edges[..90]), drill_serve_opts())
+            .unwrap();
+        assert_eq!(s.snapshot().global, base_total);
+        s
+    });
+    let tail: Vec<(u32, u32)> = edges[90..].to_vec();
+    fault::with_plan(&FaultPlan::panic_at_task(0), || {
+        // The injected panic fires inside the writer thread's batch
+        // application; the daemon must degrade, never die or lie.
+        let r = session.update(BatchKind::Insert, tail.clone());
+        assert!(r.degraded, "injected writer fault must degrade the session");
+        let msg = r.error.expect("degraded update must carry an error");
+        assert!(
+            msg.starts_with("degraded: updates refused"),
+            "unexpected degradation message: {msg}"
+        );
+        // Reads answer from the stale snapshot — same epoch, same
+        // counts, warning flag set.  Never a torn or half-applied view.
+        let snap = session.snapshot();
+        assert!(snap.degraded, "published snapshot must carry the degradation flag");
+        assert_eq!(snap.epoch, 0, "degradation must keep the stale epoch");
+        assert_eq!(snap.global, base_total, "stale snapshot must keep the last good counts");
+        // Further updates are refused and counted while degraded.
+        let r2 = session.update(BatchKind::Insert, tail.clone());
+        assert!(r2.degraded && r2.error.is_some(), "degraded session must refuse updates");
+        assert_eq!(r2.applied, 0);
+        let st = session.stats();
+        assert!(st.degraded);
+        assert_eq!(st.rejected, 1);
+        assert_eq!(st.errors.len(), 1, "exactly the faulted batch is recorded");
+        assert!(!st.errors[0].recovered);
+        assert_injected_kind("serve writer fault", &st.errors[0].error);
+    });
+    fault::with_plan(&FaultPlan::default(), || {
+        // Recovery path: an explicit rebuild recounts and clears the
+        // flag; re-submitting the batch converges on the oracle.
+        let r = session.rebuild();
+        assert_eq!(r.error, None, "fault-free rebuild must succeed");
+        assert_eq!(r.epoch, 1, "rebuild publishes a fresh epoch");
+        let snap = session.snapshot();
+        assert!(!snap.degraded, "rebuild must clear the degradation flag");
+        let r = session.update(BatchKind::Insert, tail.clone());
+        assert_eq!(r.error, None, "recovered session must accept updates again");
+        assert!(!r.degraded);
+        assert_eq!(session.snapshot().global, full_total, "counts exact after recovery");
+        // The protocol surface reports the recovery too.
+        let reply = parbutterfly::serve::handle_request(&session, r#"{"op": "total"}"#);
+        assert!(reply.text.contains(r#""degraded": false"#), "got {}", reply.text);
+        assert!(reply.text.contains(&format!(r#""total": {full_total}"#)), "got {}", reply.text);
+        session.shutdown();
+    });
+}
+
+#[test]
+fn serve_retry_policy_absorbs_single_shot_writer_faults() {
+    use parbutterfly::serve::{ServeOpts, Session};
+    let _wd = Watchdog::arm("serve_retry_policy_absorbs_single_shot_writer_faults");
+    let (edges, full_total) = fault::with_plan(&FaultPlan::default(), || {
+        let edges = gen::erdos_renyi(20, 20, 120, 3).edges();
+        let full = brute::total(&BipartiteGraph::from_edges(20, 20, &edges));
+        (edges, full)
+    });
+    // Same recount-every-batch setup, but with the shared one-shot
+    // retry policy on: the replay driver's behavior, inside the daemon.
+    let opts = ServeOpts { retry: true, ..drill_serve_opts() };
+    let session = fault::with_plan(&FaultPlan::default(), || {
+        Session::open(BipartiteGraph::from_edges(20, 20, &edges[..90]), opts).unwrap()
+    });
+    let tail: Vec<(u32, u32)> = edges[90..].to_vec();
+    fault::with_plan(&FaultPlan::panic_at_task(0), || {
+        let r = session.update(BatchKind::Insert, tail.clone());
+        assert_eq!(r.error, None, "retry policy must absorb the single-shot fault");
+        assert!(!r.degraded, "absorbed fault must not degrade the session");
+        assert!(r.recovered, "the reply must disclose the recovery");
+        let snap = session.snapshot();
+        assert!(!snap.degraded);
+        assert_eq!(snap.epoch, 1);
+        assert_eq!(snap.global, full_total, "recovered batch must land exactly");
+        // The shared BatchError accounting records it, flagged recovered —
+        // the same shape replay_stream reports.
+        let st = session.stats();
+        assert_eq!(st.errors.len(), 1);
+        assert!(st.errors[0].recovered);
+        assert_injected_kind("serve retry fault", &st.errors[0].error);
+        session.shutdown();
+    });
+}
+
 #[test]
 fn ci_fault_plan_specs_parse() {
     for spec in [

@@ -1,0 +1,277 @@
+//! Concurrency stress for serve mode: N reader threads hammer the
+//! query surface while the single writer applies seeded insert/delete
+//! batches, and **every** response must be bit-identical to a static
+//! recount of the epoch it reports — not "eventually right", exactly
+//! right, always.
+//!
+//! The expected state of every epoch is precomputed with the brute
+//! oracle (`testutil::brute`): epoch 0 is the seed graph, epoch `i` is
+//! the graph after the first `i` admitted batches, and the sync client
+//! protocol (one `update` in flight at a time) makes that mapping
+//! exact.  A reader that observes epoch `e` therefore knows the entire
+//! count state it must see; any torn read, lost update, or mid-swap
+//! artifact shows up as an inequality.
+//!
+//! Harness style follows `fault_injection.rs`: a 30s [`Watchdog`]
+//! turns hangs into failures, and all work runs under the empty fault
+//! plan so the suite stays deterministic when the CI fault matrix arms
+//! `PARBUTTERFLY_FAULT` for the whole test binary.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use parbutterfly::bench_support::json::Json;
+use parbutterfly::dynamic::BatchKind;
+use parbutterfly::graph::{gen, BipartiteGraph};
+use parbutterfly::prims::fault::{self, FaultPlan};
+use parbutterfly::serve::{handle_request, ServeOpts, Session};
+use parbutterfly::testutil::brute;
+
+const READERS: [usize; 3] = [1, 4, 8];
+const NU: usize = 25;
+const NV: usize = 25;
+
+struct Watchdog {
+    done: mpsc::Sender<()>,
+}
+
+impl Watchdog {
+    fn arm(name: &'static str) -> Watchdog {
+        let (done, rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            if let Err(mpsc::RecvTimeoutError::Timeout) = rx.recv_timeout(Duration::from_secs(30))
+            {
+                eprintln!("watchdog: {name} exceeded 30s; aborting");
+                std::process::exit(101);
+            }
+        });
+        Watchdog { done }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        let _ = self.done.send(());
+    }
+}
+
+/// Everything a response is allowed to claim about one epoch.
+struct EpochState {
+    total: u64,
+    per_u: Vec<u64>,
+    per_v: Vec<u64>,
+    m: usize,
+}
+
+/// The scripted batch sequence and the brute-forced state after each
+/// prefix: `states[i]` is what epoch `i` must serve.
+fn script() -> (Vec<(BatchKind, Vec<(u32, u32)>)>, Vec<EpochState>) {
+    let edges = gen::erdos_renyi(NU, NV, 160, 11).edges();
+    let mut batches: Vec<(BatchKind, Vec<(u32, u32)>)> = edges
+        .chunks(40)
+        .map(|c| (BatchKind::Insert, c.to_vec()))
+        .collect();
+    batches.extend(edges.chunks(60).map(|c| (BatchKind::Delete, c.to_vec())));
+    let mut live: Vec<(u32, u32)> = Vec::new();
+    let mut states = vec![state_of(&live)];
+    for (kind, chunk) in &batches {
+        match kind {
+            BatchKind::Insert => live.extend_from_slice(chunk),
+            BatchKind::Delete => live.retain(|e| !chunk.contains(e)),
+        }
+        states.push(state_of(&live));
+    }
+    (batches, states)
+}
+
+fn state_of(live: &[(u32, u32)]) -> EpochState {
+    let g = BipartiteGraph::from_edges(NU, NV, live);
+    let (per_u, per_v) = brute::per_vertex(&g);
+    EpochState { total: brute::total(&g), per_u, per_v, m: g.m() }
+}
+
+/// Issue one request and decode the `{"ok": true}` response, returning
+/// the reported epoch plus the parsed object.
+fn query(session: &Session, req: &str) -> (usize, Json) {
+    let reply = handle_request(session, req);
+    let obj = Json::parse(&reply.text)
+        .unwrap_or_else(|e| panic!("unparseable reply {:?}: {e}", reply.text));
+    assert!(
+        matches!(obj.get("ok"), Some(Json::Bool(true))),
+        "request {req} failed: {}",
+        reply.text
+    );
+    assert!(
+        matches!(obj.get("degraded"), Some(Json::Bool(false))),
+        "no fault was injected, yet {req} reported degradation: {}",
+        reply.text
+    );
+    let epoch = obj.get("epoch").and_then(Json::as_f64).expect("epoch field") as usize;
+    (epoch, obj)
+}
+
+fn get_u64(obj: &Json, key: &str) -> u64 {
+    obj.get(key).and_then(Json::as_f64).unwrap_or_else(|| panic!("missing field {key}")) as u64
+}
+
+/// One reader iteration: a query chosen by `turn`, checked bit-for-bit
+/// against the precomputed state of whatever epoch it reports.
+fn check_one(session: &Session, states: &[EpochState], turn: usize) {
+    match turn % 4 {
+        0 => {
+            let (e, obj) = query(session, r#"{"op": "total"}"#);
+            assert_eq!(get_u64(&obj, "total"), states[e].total, "total wrong at epoch {e}");
+        }
+        1 => {
+            let id = (turn / 4) % NU;
+            let req = format!(r#"{{"op": "vertex", "side": "u", "id": {id}}}"#);
+            let (e, obj) = query(session, &req);
+            assert_eq!(
+                get_u64(&obj, "count"),
+                states[e].per_u[id],
+                "per-vertex count of u{id} wrong at epoch {e}"
+            );
+        }
+        2 => {
+            let id = (turn / 4) % NV;
+            let req = format!(r#"{{"op": "vertex", "side": "v", "id": {id}}}"#);
+            let (e, obj) = query(session, &req);
+            assert_eq!(
+                get_u64(&obj, "count"),
+                states[e].per_v[id],
+                "per-vertex count of v{id} wrong at epoch {e}"
+            );
+        }
+        _ => {
+            // The digest cross-checks a whole snapshot at once: the
+            // sums must match the epoch's recount AND the structural
+            // invariants (2x / 4x the global count) — a torn snapshot
+            // cannot satisfy both.
+            let (e, obj) = query(session, r#"{"op": "digest"}"#);
+            let global = get_u64(&obj, "global");
+            let sum_u = get_u64(&obj, "sum_u");
+            let sum_v = get_u64(&obj, "sum_v");
+            let sum_e = get_u64(&obj, "sum_edge");
+            assert_eq!(global, states[e].total, "digest global wrong at epoch {e}");
+            assert_eq!(sum_u, states[e].per_u.iter().sum::<u64>(), "sum_u wrong at epoch {e}");
+            assert_eq!(sum_v, states[e].per_v.iter().sum::<u64>(), "sum_v wrong at epoch {e}");
+            assert_eq!(sum_u, 2 * global, "sum_u must be 2x the global count (epoch {e})");
+            assert_eq!(sum_v, 2 * global, "sum_v must be 2x the global count (epoch {e})");
+            assert_eq!(sum_e, 4 * global, "sum_edge must be 4x the global count (epoch {e})");
+            assert_eq!(get_u64(&obj, "m") as usize, states[e].m, "edge count wrong at epoch {e}");
+        }
+    }
+}
+
+#[test]
+fn readers_see_bit_identical_epochs_under_update_load() {
+    let _wd = Watchdog::arm("readers_see_bit_identical_epochs_under_update_load");
+    let (batches, states) = fault::with_plan(&FaultPlan::default(), script);
+    let states = Arc::new(states);
+    for readers in READERS {
+        fault::with_plan(&FaultPlan::default(), || {
+            let session = Arc::new(
+                Session::open(
+                    BipartiteGraph::from_edges(NU, NV, &[]),
+                    // Decompositions off: the stress lives in the count
+                    // surface, and a faster publish loop means readers
+                    // observe more distinct epochs per run.
+                    ServeOpts { decompositions: false, ..ServeOpts::default() },
+                )
+                .unwrap(),
+            );
+            let stop = Arc::new(AtomicBool::new(false));
+            let served = Arc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = (0..readers)
+                .map(|r| {
+                    let (session, states) = (Arc::clone(&session), Arc::clone(&states));
+                    let (stop, served) = (Arc::clone(&stop), Arc::clone(&served));
+                    std::thread::spawn(move || {
+                        let mut turn = r; // de-phase the readers
+                        while !stop.load(Ordering::Relaxed) {
+                            check_one(&session, &states, turn);
+                            served.fetch_add(1, Ordering::Relaxed);
+                            turn += 1;
+                        }
+                    })
+                })
+                .collect();
+            // The writer client: one synchronous update per batch, so
+            // the reply for batch i must publish exactly epoch i + 1.
+            for (i, (kind, edges)) in batches.iter().enumerate() {
+                let r = session.update(*kind, edges.clone());
+                assert_eq!(r.error, None, "batch {i} failed");
+                assert!(!r.degraded, "batch {i} degraded without a fault");
+                assert_eq!(r.epoch as usize, i + 1, "batch {i} published the wrong epoch");
+            }
+            stop.store(true, Ordering::Relaxed);
+            for h in handles {
+                h.join().expect("reader thread panicked");
+            }
+            assert!(
+                served.load(Ordering::Relaxed) >= readers,
+                "readers made no progress under {readers} threads"
+            );
+            // Final state: the last epoch serves the fully-applied
+            // script, bit-identical to its recount.
+            let last = states.len() - 1;
+            let (e, obj) = query(&session, r#"{"op": "total"}"#);
+            assert_eq!(e, last, "writer finished but the served epoch lags");
+            assert_eq!(get_u64(&obj, "total"), states[last].total);
+            let (_, st) = query(&session, r#"{"op": "stats"}"#);
+            assert_eq!(get_u64(&st, "batches") as usize, batches.len());
+            assert_eq!(get_u64(&st, "errors"), 0, "no faults were injected");
+            session.shutdown();
+        });
+    }
+}
+
+#[test]
+fn tcp_clients_get_the_same_bit_identical_answers() {
+    use std::io::{BufRead, BufReader, Write};
+    let _wd = Watchdog::arm("tcp_clients_get_the_same_bit_identical_answers");
+    let (batches, states) = fault::with_plan(&FaultPlan::default(), script);
+    fault::with_plan(&FaultPlan::default(), || {
+        let session = Arc::new(
+            Session::open(
+                BipartiteGraph::from_edges(NU, NV, &[]),
+                ServeOpts { decompositions: false, ..ServeOpts::default() },
+            )
+            .unwrap(),
+        );
+        let (addr, _accept) =
+            parbutterfly::serve::spawn_listener(Arc::clone(&session), "127.0.0.1:0").unwrap();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let mut lines = BufReader::new(conn.try_clone().unwrap()).lines();
+        let mut ask = |req: &str| -> Json {
+            writeln!(conn, "{req}").unwrap();
+            conn.flush().unwrap();
+            let line = lines.next().expect("connection closed early").unwrap();
+            Json::parse(&line).unwrap_or_else(|e| panic!("unparseable reply {line:?}: {e}"))
+        };
+        // Interleave protocol-level updates with queries over the same
+        // socket; each reply must match the brute state of its epoch.
+        for (i, (kind, edges)) in batches.iter().enumerate() {
+            let pairs: Vec<String> =
+                edges.iter().map(|(u, v)| format!("[{u}, {v}]")).collect();
+            let op = match kind {
+                BatchKind::Insert => "insert",
+                BatchKind::Delete => "delete",
+            };
+            let req = format!(r#"{{"op": "update", "{op}": [{}]}}"#, pairs.join(", "));
+            let r = ask(&req);
+            assert!(matches!(r.get("ok"), Some(Json::Bool(true))), "batch {i} failed: {r:?}");
+            let e = r.get("epoch").and_then(Json::as_f64).unwrap() as usize;
+            assert_eq!(e, i + 1, "batch {i} published the wrong epoch");
+            let t = ask(r#"{"op": "total"}"#);
+            assert_eq!(
+                t.get("total").and_then(Json::as_f64).unwrap() as u64,
+                states[e].total,
+                "total after batch {i} diverges from the epoch-{e} recount"
+            );
+        }
+        let bye = ask(r#"{"op": "shutdown"}"#);
+        assert!(matches!(bye.get("shutdown"), Some(Json::Bool(true))));
+    });
+}

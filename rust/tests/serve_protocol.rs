@@ -1,0 +1,304 @@
+//! Pinned request→response transcripts for the serve-mode protocol.
+//!
+//! Every query type gets a byte-exact golden line on the Davis
+//! southern-women graph (341 butterflies — the same fixture the golden
+//! count/peel suites pin), and every malformed-input class gets an
+//! exact error-string equality check.  Responses carry no timing or
+//! host fields by design, which is what makes this possible: if a
+//! refactor changes a single byte of the wire format, this file is
+//! where it shows up.
+
+use parbutterfly::graph::gen;
+use parbutterfly::serve::{handle_line, handle_request, ServeOpts, Session};
+
+fn davis_session() -> Session {
+    Session::open(gen::davis_southern_women(), ServeOpts::default()).unwrap()
+}
+
+/// Assert one request line produces exactly `want` on the wire.
+fn expect(session: &Session, req: &str, want: &str) {
+    let reply = handle_request(session, req);
+    assert_eq!(reply.text, want, "for request {req}");
+    assert!(!reply.shutdown, "only `shutdown` sets the shutdown flag: {req}");
+}
+
+#[test]
+fn read_queries_pin_exact_davis_responses() {
+    let s = davis_session();
+    expect(&s, r#"{"op": "total"}"#, r#"{"ok": true, "epoch": 0, "degraded": false, "total": 341}"#);
+    expect(
+        &s,
+        r#"{"op": "epoch"}"#,
+        r#"{"ok": true, "epoch": 0, "degraded": false, "nu": 18, "nv": 14, "m": 89}"#,
+    );
+    expect(
+        &s,
+        r#"{"op": "vertex", "side": "u", "id": 0}"#,
+        r#"{"ok": true, "epoch": 0, "degraded": false, "side": "u", "id": 0, "count": 75}"#,
+    );
+    expect(
+        &s,
+        r#"{"op": "vertex", "side": "v", "id": 7}"#,
+        r#"{"ok": true, "epoch": 0, "degraded": false, "side": "v", "id": 7, "count": 143}"#,
+    );
+    expect(
+        &s,
+        r#"{"op": "edge", "u": 0, "v": 0}"#,
+        r#"{"ok": true, "epoch": 0, "degraded": false, "u": 0, "v": 0, "count": 10}"#,
+    );
+    // Tip/wing numbers match rust/tests/golden/davis.peel rows.
+    expect(
+        &s,
+        r#"{"op": "tip", "side": "u", "id": 0}"#,
+        r#"{"ok": true, "epoch": 0, "degraded": false, "side": "u", "id": 0, "tip": 45}"#,
+    );
+    expect(
+        &s,
+        r#"{"op": "tip", "side": "v", "id": 2}"#,
+        r#"{"ok": true, "epoch": 0, "degraded": false, "side": "v", "id": 2, "tip": 42}"#,
+    );
+    expect(
+        &s,
+        r#"{"op": "wing", "u": 0, "v": 0}"#,
+        r#"{"ok": true, "epoch": 0, "degraded": false, "u": 0, "v": 0, "wing": 10}"#,
+    );
+    expect(
+        &s,
+        r#"{"op": "topk", "side": "u", "k": 3}"#,
+        concat!(
+            r#"{"ok": true, "epoch": 0, "degraded": false, "side": "u", "k": 3, "#,
+            r#""top": [{"id": 2, "count": 91}, {"id": 0, "count": 75}, {"id": 3, "count": 71}]}"#,
+        ),
+    );
+    expect(
+        &s,
+        r#"{"op": "topk", "side": "v", "k": 2}"#,
+        concat!(
+            r#"{"ok": true, "epoch": 0, "degraded": false, "side": "v", "k": 2, "#,
+            r#""top": [{"id": 7, "count": 143}, {"id": 6, "count": 86}]}"#,
+        ),
+    );
+    // sum_u == sum_v == 2*total and sum_edge == 4*total: each butterfly
+    // has two vertices per side and four edges.
+    expect(
+        &s,
+        r#"{"op": "digest"}"#,
+        concat!(
+            r#"{"ok": true, "epoch": 0, "degraded": false, "global": 341, "#,
+            r#""sum_u": 682, "sum_v": 682, "sum_edge": 1364, "m": 89}"#,
+        ),
+    );
+    expect(
+        &s,
+        r#"{"op": "stats"}"#,
+        concat!(
+            r#"{"ok": true, "epoch": 0, "degraded": false, "batches": 0, "inserted": 0, "#,
+            r#""deleted": 0, "skipped": 0, "rejected": 0, "errors": 0, "recovered": 0}"#,
+        ),
+    );
+}
+
+#[test]
+fn updates_advance_epochs_and_counts_track_exactly() {
+    let s = davis_session();
+    // Deleting edge (0, 0) removes exactly its 10 butterflies.
+    expect(
+        &s,
+        r#"{"op": "update", "delete": [[0, 0]]}"#,
+        r#"{"ok": true, "epoch": 1, "degraded": false, "applied": 1, "skipped": 0, "recovered": false}"#,
+    );
+    expect(&s, r#"{"op": "total"}"#, r#"{"ok": true, "epoch": 1, "degraded": false, "total": 331}"#);
+    // Re-inserting restores the original count at a later epoch.
+    expect(
+        &s,
+        r#"{"op": "update", "insert": [[0, 0]]}"#,
+        r#"{"ok": true, "epoch": 2, "degraded": false, "applied": 1, "skipped": 0, "recovered": false}"#,
+    );
+    expect(&s, r#"{"op": "total"}"#, r#"{"ok": true, "epoch": 2, "degraded": false, "total": 341}"#);
+    // Duplicate insert is a no-op batch but still publishes an epoch.
+    expect(
+        &s,
+        r#"{"op": "update", "insert": [[0, 0]]}"#,
+        r#"{"ok": true, "epoch": 3, "degraded": false, "applied": 0, "skipped": 1, "recovered": false}"#,
+    );
+    // Stream-format lines: the kind flip splits into two batches (two
+    // epochs); the reply describes the whole request.
+    expect(
+        &s,
+        r#"{"op": "update", "lines": ["+ 17 13", "- 17 13"]}"#,
+        r#"{"ok": true, "epoch": 5, "degraded": false, "applied": 2, "skipped": 0, "recovered": false}"#,
+    );
+    expect(&s, r#"{"op": "total"}"#, r#"{"ok": true, "epoch": 5, "degraded": false, "total": 341}"#);
+    expect(
+        &s,
+        r#"{"op": "stats"}"#,
+        concat!(
+            r#"{"ok": true, "epoch": 5, "degraded": false, "batches": 5, "inserted": 2, "#,
+            r#""deleted": 2, "skipped": 1, "rejected": 0, "errors": 0, "recovered": 0}"#,
+        ),
+    );
+    // Rebuild is always legal and publishes a fresh epoch.
+    expect(&s, r#"{"op": "rebuild"}"#, r#"{"ok": true, "epoch": 6, "degraded": false, "rebuilt": true}"#);
+    expect(&s, r#"{"op": "total"}"#, r#"{"ok": true, "epoch": 6, "degraded": false, "total": 341}"#);
+}
+
+#[test]
+fn malformed_inputs_fail_with_exact_error_strings() {
+    let s = davis_session();
+    let cases: &[(&str, &str)] = &[
+        (
+            "not json",
+            r#"{"ok": false, "error": "bad request: invalid literal at line 1 col 1 (byte 0)"}"#,
+        ),
+        ("[1, 2]", r#"{"ok": false, "error": "bad request: expected a JSON object"}"#),
+        ("{}", r#"{"ok": false, "error": "bad request: missing string field \"op\""}"#),
+        (
+            r#"{"op": 3}"#,
+            r#"{"ok": false, "error": "bad request: missing string field \"op\""}"#,
+        ),
+        (
+            r#"{"op": "frobnicate"}"#,
+            r#"{"ok": false, "error": "bad request: unknown op \"frobnicate\""}"#,
+        ),
+        (
+            r#"{"op": "vertex", "side": "w", "id": 0}"#,
+            r#"{"ok": false, "error": "bad request: field \"side\" must be \"u\" or \"v\""}"#,
+        ),
+        (
+            r#"{"op": "vertex", "side": "u"}"#,
+            r#"{"ok": false, "error": "bad request: missing or invalid integer field \"id\""}"#,
+        ),
+        (
+            r#"{"op": "vertex", "side": "u", "id": -1}"#,
+            r#"{"ok": false, "error": "bad request: missing or invalid integer field \"id\""}"#,
+        ),
+        (
+            r#"{"op": "vertex", "side": "u", "id": 1.5}"#,
+            r#"{"ok": false, "error": "bad request: missing or invalid integer field \"id\""}"#,
+        ),
+        (
+            r#"{"op": "vertex", "side": "u", "id": 99}"#,
+            r#"{"ok": false, "error": "vertex id 99 out of range for side u (size 18)"}"#,
+        ),
+        (
+            r#"{"op": "tip", "side": "v", "id": 14}"#,
+            r#"{"ok": false, "error": "vertex id 14 out of range for side v (size 14)"}"#,
+        ),
+        (
+            r#"{"op": "edge", "u": 17, "v": 13}"#,
+            r#"{"ok": false, "error": "edge (17, 13) is not present"}"#,
+        ),
+        (
+            r#"{"op": "edge", "u": 99, "v": 0}"#,
+            r#"{"ok": false, "error": "edge (99, 0) is not present"}"#,
+        ),
+        (
+            r#"{"op": "topk", "side": "u"}"#,
+            r#"{"ok": false, "error": "bad request: missing or invalid integer field \"k\""}"#,
+        ),
+        (
+            r#"{"op": "update"}"#,
+            r#"{"ok": false, "error": "bad request: update needs exactly one of \"insert\", \"delete\", or \"lines\""}"#,
+        ),
+        (
+            r#"{"op": "update", "insert": [[0, 1]], "delete": [[0, 1]]}"#,
+            r#"{"ok": false, "error": "bad request: update needs exactly one of \"insert\", \"delete\", or \"lines\""}"#,
+        ),
+        (
+            r#"{"op": "update", "insert": [[0]]}"#,
+            r#"{"ok": false, "error": "bad request: \"insert\" must be an array of [u, v] pairs"}"#,
+        ),
+        (
+            r#"{"op": "update", "delete": 5}"#,
+            r#"{"ok": false, "error": "bad request: \"delete\" must be an array of [u, v] pairs"}"#,
+        ),
+        (
+            r#"{"op": "update", "lines": [5]}"#,
+            r#"{"ok": false, "error": "bad request: \"lines\" must be an array of strings"}"#,
+        ),
+        (
+            r#"{"op": "update", "lines": []}"#,
+            r#"{"ok": false, "error": "bad request: empty update"}"#,
+        ),
+        // The stream parser's strict errors, verbatim behind the "bad
+        // request: " prefix — identical to the `dynamic` loader's.
+        (
+            r#"{"op": "update", "lines": ["bogus"]}"#,
+            r#"{"ok": false, "error": "bad request: line 1: expected `[ts] op u v`, got 1 fields"}"#,
+        ),
+        (
+            r#"{"op": "update", "lines": ["* 0 1"]}"#,
+            r#"{"ok": false, "error": "bad request: line 1: bad op \"*\" (expected `+` or `-`)"}"#,
+        ),
+        (
+            r#"{"op": "update", "lines": ["+ x 1"]}"#,
+            r#"{"ok": false, "error": "bad request: line 1: bad u id \"x\" (expected an integer)"}"#,
+        ),
+    ];
+    for (req, want) in cases {
+        expect(&s, req, want);
+    }
+    // None of the failures touched the graph: epoch still 0, count intact.
+    expect(&s, r#"{"op": "total"}"#, r#"{"ok": true, "epoch": 0, "degraded": false, "total": 341}"#);
+}
+
+#[test]
+fn decomposition_queries_report_when_disabled() {
+    let opts = ServeOpts { decompositions: false, ..ServeOpts::default() };
+    let s = Session::open(gen::davis_southern_women(), opts).unwrap();
+    expect(
+        &s,
+        r#"{"op": "tip", "side": "u", "id": 0}"#,
+        r#"{"ok": false, "error": "decompositions are disabled for this session"}"#,
+    );
+    expect(
+        &s,
+        r#"{"op": "wing", "u": 0, "v": 0}"#,
+        r#"{"ok": false, "error": "decompositions are disabled for this session"}"#,
+    );
+    // Counts are still served.
+    expect(&s, r#"{"op": "total"}"#, r#"{"ok": true, "epoch": 0, "degraded": false, "total": 341}"#);
+}
+
+#[test]
+fn blank_lines_and_comments_get_no_reply_and_shutdown_ends_the_transport() {
+    let s = davis_session();
+    assert_eq!(handle_line(&s, ""), None);
+    assert_eq!(handle_line(&s, "   "), None);
+    assert_eq!(handle_line(&s, "# a comment"), None);
+    let reply = handle_line(&s, r#"{"op": "shutdown"}"#).unwrap();
+    assert_eq!(reply.text, r#"{"ok": true, "shutdown": true}"#);
+    assert!(reply.shutdown);
+    // After shutdown the writer is gone; reads still answer from the
+    // last snapshot, updates report the degraded fallback.
+    expect(&s, r#"{"op": "total"}"#, r#"{"ok": true, "epoch": 0, "degraded": false, "total": 341}"#);
+    let r = handle_request(&s, r#"{"op": "update", "insert": [[17, 13]]}"#);
+    assert_eq!(
+        r.text,
+        r#"{"ok": false, "error": "writer is gone; reads still serve the last snapshot"}"#
+    );
+}
+
+#[test]
+fn serve_lines_runs_a_scripted_stdio_session() {
+    let s = davis_session();
+    let script = concat!(
+        "# scripted session\n",
+        "{\"op\": \"total\"}\n",
+        "\n",
+        "{\"op\": \"update\", \"delete\": [[0, 0]]}\n",
+        "{\"op\": \"total\"}\n",
+        "{\"op\": \"shutdown\"}\n",
+        "{\"op\": \"total\"}\n", // after shutdown: transport already closed
+    );
+    let mut out = Vec::new();
+    parbutterfly::serve::serve_lines(&s, script.as_bytes(), &mut out).unwrap();
+    let got = String::from_utf8(out).unwrap();
+    let want = concat!(
+        r#"{"ok": true, "epoch": 0, "degraded": false, "total": 341}"#, "\n",
+        r#"{"ok": true, "epoch": 1, "degraded": false, "applied": 1, "skipped": 0, "recovered": false}"#, "\n",
+        r#"{"ok": true, "epoch": 1, "degraded": false, "total": 331}"#, "\n",
+        r#"{"ok": true, "shutdown": true}"#, "\n",
+    );
+    assert_eq!(got, want);
+}

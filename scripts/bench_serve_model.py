@@ -1,0 +1,184 @@
+#!/usr/bin/env python3
+"""Model harness seeding BENCH_serve.json.
+
+Mirrors `cargo bench --bench serve_latency` at the algorithmic level.
+Serve-mode reads are answered from a published epoch snapshot — the
+pre-counted global / per-vertex / per-edge arrays — so the model
+precomputes those arrays once per workload (the wedge walk with a
+dense counter) and then times what the daemon's query handlers do:
+
+* `read/total`   — serialize the global count (batched 100/sample);
+* `read/vertex`  — one per-vertex array index + serialize;
+* `read/topk`    — top-10 selection over the V-side count array;
+* `read/digest`  — checksum sums over all three count arrays;
+* `update/roundtrip` — delete + re-insert one edge: two batch-edge
+  delta walks (the `DynGraph` incremental rule) plus two snapshot
+  publishes (graph + count-array copies), i.e. two epochs.
+
+This exists because the authoring container has no Rust toolchain
+(same situation as scripts/bench_dynamic_model.py and friends); the
+JSON it writes is labeled `"harness": "python-model"` and is
+overwritten by `cargo bench --bench serve_latency`.
+
+Usage: python3 scripts/bench_serve_model.py
+"""
+import heapq
+import json
+from pathlib import Path
+
+import bench_model_common
+from wedge_model import chung_lu, erdos_renyi
+
+# Same suite as bench_support::snapshots::serve_latency (Full profile);
+# graph generators mirror bench_support::workloads::build.
+WORKLOADS = [
+    ("small", erdos_renyi(500, 700, 8_000, 101)),
+    ("er", erdos_renyi(3_000, 3_000, 60_000, 103)),
+    ("cl", chung_lu(5_000, 8_000, 120_000, 2.1, 105)),
+]
+READS_PER_SAMPLE = 100  # matches READS_PER_SAMPLE in the native bench
+
+
+def count_all(nu, nv, edges):
+    """Global / per-vertex / per-edge butterfly counts in one wedge
+    walk: for each U source, a dense counter over the second hop
+    (u2 > u1 avoids double counting), then endpoint/center/edge
+    credits from the pair multiplicities."""
+    adj_u = [[] for _ in range(nu)]  # (v, eid)
+    adj_v = [[] for _ in range(nv)]  # (u, eid)
+    for eid, (u, v) in enumerate(edges):
+        adj_u[u].append((v, eid))
+        adj_v[v].append((u, eid))
+    per_u, per_v = [0] * nu, [0] * nv
+    per_edge = [0] * len(edges)
+    total = 0
+    cnt = {}
+    for u1 in range(nu):
+        cnt.clear()
+        wbuf = []
+        for (v, e1) in adj_u[u1]:
+            for (u2, e2) in adj_v[v]:
+                if u2 > u1:
+                    cnt[u2] = cnt.get(u2, 0) + 1
+                    wbuf.append((u2, v, e1, e2))
+        for u2, c in cnt.items():
+            b = c * (c - 1) // 2
+            total += b
+            per_u[u1] += b
+            per_u[u2] += b
+        for (u2, v, e1, e2) in wbuf:
+            c = cnt[u2]
+            if c > 1:
+                per_v[v] += c - 1
+                per_edge[e1] += c - 1
+                per_edge[e2] += c - 1
+    return adj_u, adj_v, per_u, per_v, per_edge, total
+
+
+def main():
+    rows, summary = [], []
+    for wl_id, (nu, nv, edges) in WORKLOADS:
+        print(f"[{wl_id}] {nu} x {nv}, {len(edges)} edges: precounting ...")
+        adj_u, adj_v, per_u, per_v, per_edge, total = count_all(nu, nv, edges)
+        print(f"[{wl_id}] {total} butterflies; timing query handlers")
+        u0, v0 = edges[0]
+        epoch = 0
+        m = len(edges)
+
+        # --- read queries: format a protocol reply from the snapshot.
+        def read_total():
+            for _ in range(READS_PER_SAMPLE):
+                s = f'{{"ok": true, "epoch": {epoch}, "degraded": false, "total": {total}}}'
+            return s
+
+        def read_vertex():
+            for _ in range(READS_PER_SAMPLE):
+                c = per_u[u0]
+                s = (f'{{"ok": true, "epoch": {epoch}, "degraded": false, '
+                     f'"side": "u", "id": {u0}, "count": {c}}}')
+            return s
+
+        def read_topk():
+            for _ in range(READS_PER_SAMPLE):
+                top = heapq.nlargest(10, enumerate(per_v), key=lambda p: (p[1], -p[0]))
+                s = (f'{{"ok": true, "epoch": {epoch}, "degraded": false, "top": '
+                     + json.dumps([[i, c] for i, c in top]) + "}")
+            return s
+
+        def read_digest():
+            for _ in range(READS_PER_SAMPLE):
+                s = (f'{{"ok": true, "epoch": {epoch}, "degraded": false, '
+                     f'"total": {total}, "sum_u": {sum(per_u)}, "sum_v": {sum(per_v)}, '
+                     f'"sum_edges": {sum(per_edge)}, "m": {m}}}')
+            return s
+
+        read_total_ms = None
+        for label, f in [("read/total", read_total), ("read/vertex", read_vertex),
+                         ("read/topk", read_topk), ("read/digest", read_digest)]:
+            ms = bench_model_common.bench(f)
+            if label == "read/total":
+                read_total_ms = ms
+            rows.append({
+                "workload": wl_id, "query": label,
+                "per_sample": READS_PER_SAMPLE, "median_ms": round(ms, 3),
+            })
+            print(f"  {label}: {ms:.3f} ms / {READS_PER_SAMPLE} queries")
+
+        # --- update round trip: delete + re-insert (u0, v0), one
+        # delta walk + one snapshot publish per batch (two epochs).
+        set_u0 = {v for (v, _) in adj_u[u0]}
+
+        def delta_edge():
+            acc = 0
+            for (u2, _) in adj_v[v0]:
+                if u2 == u0:
+                    continue
+                w = sum(1 for (v2, _) in adj_u[u2] if v2 != v0 and v2 in set_u0)
+                acc += w
+            return acc
+
+        def publish():
+            nonlocal epoch
+            epoch += 1
+            return (list(edges), list(per_u), list(per_v), list(per_edge))
+
+        def roundtrip():
+            delta_edge()   # delete batch
+            publish()
+            delta_edge()   # insert batch
+            publish()
+            return epoch
+
+        ms = bench_model_common.bench(roundtrip)
+        rows.append({"workload": wl_id, "query": "update/roundtrip",
+                     "median_ms": round(ms, 3)})
+        print(f"  update/roundtrip: {ms:.3f} ms (2 epochs/sample)")
+        summary.append({
+            "workload": wl_id,
+            "read_total_ms": round(read_total_ms, 3),
+            "update_roundtrip_ms": round(ms, 3),
+            "epochs_published": epoch,
+        })
+
+    out = {
+        "bench": "serve_latency",
+        "harness": "python-model",
+        "note": ("Algorithmic model measurements (scripts/bench_serve_model.py): "
+                 "read rows are per-100-queries medians answered from precounted "
+                 "snapshot arrays; update/roundtrip is two delta walks plus two "
+                 "snapshot publishes (two epochs).  Regenerate natively with "
+                 "`parbutterfly bench run --filter serve` (or `cargo bench --bench "
+                 "serve_latency`), which overwrites this file with `harness: "
+                 "\"native\"` rows; compare snapshots with `parbutterfly bench diff`."),
+        "env": bench_model_common.environment(threads=1),
+        "threads": 1,
+        "rows": rows,
+        "summary": summary,
+    }
+    path = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""End-to-end serve-mode smoke: scripted stdio session, byte-exact diff.
+
+Drives the *release binary* (not the library) through a full daemon
+lifecycle on the Davis southern-women fixture: generate the edge list
+with `parbutterfly gen`, start `parbutterfly serve --graph`, feed a
+scripted request stream on stdin, and diff captured stdout against the
+golden transcript below byte for byte.  The replies are the same
+pinned lines rust/tests/serve_protocol.rs asserts through the library
+API — this script proves the CLI wiring (arg parsing, stdin loop,
+stdout purity: the banner goes to stderr) preserves them on the wire.
+
+Usage: python3 scripts/serve_smoke.py   (after `cargo build --release`)
+Override the binary location with PARBUTTERFLY_BIN.
+"""
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# One request per line; blank lines and `#` comments must produce no
+# reply at all (that is part of what byte-exactness checks).
+SCRIPT = """\
+# serve smoke: scripted session over the Davis fixture
+{"op": "total"}
+{"op": "epoch"}
+
+{"op": "vertex", "side": "u", "id": 0}
+{"op": "edge", "u": 0, "v": 0}
+{"op": "tip", "side": "v", "id": 2}
+{"op": "wing", "u": 0, "v": 0}
+{"op": "topk", "side": "u", "k": 3}
+{"op": "digest"}
+{"op": "update", "delete": [[0, 0]]}
+{"op": "total"}
+{"op": "update", "lines": ["+ 0 0"]}
+{"op": "total"}
+{"op": "rebuild"}
+{"op": "this is not json"}
+{"op": "shutdown"}
+"""
+
+GOLDEN = """\
+{"ok": true, "epoch": 0, "degraded": false, "total": 341}
+{"ok": true, "epoch": 0, "degraded": false, "nu": 18, "nv": 14, "m": 89}
+{"ok": true, "epoch": 0, "degraded": false, "side": "u", "id": 0, "count": 75}
+{"ok": true, "epoch": 0, "degraded": false, "u": 0, "v": 0, "count": 10}
+{"ok": true, "epoch": 0, "degraded": false, "side": "v", "id": 2, "tip": 42}
+{"ok": true, "epoch": 0, "degraded": false, "u": 0, "v": 0, "wing": 10}
+{"ok": true, "epoch": 0, "degraded": false, "side": "u", "k": 3, "top": [{"id": 2, "count": 91}, {"id": 0, "count": 75}, {"id": 3, "count": 71}]}
+{"ok": true, "epoch": 0, "degraded": false, "global": 341, "sum_u": 682, "sum_v": 682, "sum_edge": 1364, "m": 89}
+{"ok": true, "epoch": 1, "degraded": false, "applied": 1, "skipped": 0, "recovered": false}
+{"ok": true, "epoch": 1, "degraded": false, "total": 331}
+{"ok": true, "epoch": 2, "degraded": false, "applied": 1, "skipped": 0, "recovered": false}
+{"ok": true, "epoch": 2, "degraded": false, "total": 341}
+{"ok": true, "epoch": 3, "degraded": false, "rebuilt": true}
+{"ok": false, "error": "bad request: unknown op \\"this is not json\\""}
+{"ok": true, "shutdown": true}
+"""
+
+
+def main():
+    bin_path = os.environ.get("PARBUTTERFLY_BIN", str(ROOT / "target/release/parbutterfly"))
+    if not Path(bin_path).exists():
+        sys.exit(f"serve_smoke: no binary at {bin_path} (run `cargo build --release` "
+                 "or set PARBUTTERFLY_BIN)")
+    with tempfile.TemporaryDirectory() as tmp:
+        graph = Path(tmp) / "davis.txt"
+        subprocess.run(
+            [bin_path, "gen", "--kind", "davis", "--out", str(graph)],
+            check=True, capture_output=True, text=True,
+        )
+        proc = subprocess.run(
+            [bin_path, "serve", "--graph", str(graph)],
+            input=SCRIPT, capture_output=True, text=True, timeout=120,
+        )
+    if proc.returncode != 0:
+        sys.exit(f"serve_smoke: daemon exited {proc.returncode}\nstderr:\n{proc.stderr}")
+    if proc.stdout != GOLDEN:
+        import difflib
+        diff = "".join(difflib.unified_diff(
+            GOLDEN.splitlines(keepends=True), proc.stdout.splitlines(keepends=True),
+            fromfile="golden", tofile="daemon stdout",
+        ))
+        sys.exit(f"serve_smoke: transcript mismatch\n{diff}")
+    if "serving 18 x 14" not in proc.stderr:
+        sys.exit(f"serve_smoke: banner missing from stderr:\n{proc.stderr}")
+    print(f"serve_smoke: OK — {len(GOLDEN.splitlines())} golden reply lines, "
+          "byte-exact, banner on stderr only")
+
+
+if __name__ == "__main__":
+    main()
